@@ -1,0 +1,128 @@
+//! End-to-end driver: conjugate gradient on a 2D Poisson system through
+//! **all three layers** of the stack (EXPERIMENTS.md §E2E).
+//!
+//! - L3 (this binary, Rust): builds the matrix, selects a kernel, runs
+//!   the native CG; loads the AOT artifact and runs the XLA CG.
+//! - L2 (JAX, build time): `python/compile/model.py::cg_graph` — the CG
+//!   loop lowered to one executable.
+//! - L1 (Pallas, build time): the mask-expand block SpMV inside every
+//!   CG iteration of that executable.
+//!
+//! The two paths must agree on the solution; the run log (residual
+//! curve, timings, SpMV GFlop/s) is what EXPERIMENTS.md §E2E records.
+//!
+//! Run: `make artifacts && cargo run --release --example cg_solver`
+
+use spc5::coordinator::{cg_solve, EngineConfig, SpmvEngine};
+use spc5::kernels::KernelKind;
+use spc5::matrix::suite;
+use spc5::runtime::XlaEngine;
+use spc5::util::{Rng, Timer};
+
+fn main() -> anyhow::Result<()> {
+    let n = 64usize; // must match python/compile/aot.py POISSON_N
+    let iters = 200usize; // must match CG_ITERS
+    let csr = suite::poisson2d(n);
+    let dim = csr.rows;
+    println!(
+        "== E2E: CG on 2D Poisson {n}x{n} (dim {dim}, nnz {}) ==",
+        csr.nnz()
+    );
+
+    let mut rng = Rng::new(0xE2E);
+    let b: Vec<f64> = (0..dim).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+
+    // ---- native path: Rust coordinator + AVX-512 kernels -------------
+    println!("\n-- native path (L3 only: rust kernels) --");
+    let mut x_native = vec![0.0; dim];
+    let mut native_time = 0.0;
+    for kernel in [
+        KernelKind::Beta(1, 8),
+        KernelKind::Beta(2, 4),
+        KernelKind::Beta(4, 4),
+    ] {
+        let cfg = EngineConfig { kernel: Some(kernel), ..Default::default() };
+        let engine = SpmvEngine::new(csr.clone(), &cfg, None)?;
+        let mut x = vec![0.0; dim];
+        let t = Timer::start();
+        let report = cg_solve(&engine, &b, &mut x, iters, 1e-20);
+        let secs = t.elapsed_s();
+        let gflops =
+            2.0 * csr.nnz() as f64 * report.spmv_count as f64 / secs / 1e9;
+        println!(
+            "  {kernel:<8} iters={:>3} residual²={:.3e} time={:.4}s \
+             spmv={:.2} GFlop/s",
+            report.iterations, report.residual_norm2, secs, gflops
+        );
+        x_native = x;
+        native_time = secs;
+    }
+
+    // ---- XLA path: AOT artifact (L2 graph + L1 Pallas kernel) --------
+    println!("\n-- xla path (L1+L2 compiled, L3 executes) --");
+    let mut engine = match XlaEngine::new("artifacts") {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!(
+                "cannot load artifacts ({e}); run `make artifacts` first"
+            );
+            return Err(e);
+        }
+    };
+    println!("  PJRT platform: {}", engine.platform());
+    engine.validate_matrix("cg", &csr)?;
+    let compile_t = Timer::start();
+    let exe = engine.executor("cg")?;
+    println!("  artifact compile: {:.3}s (cached afterwards)", compile_t.elapsed_s());
+
+    let x0 = vec![0.0f64; dim];
+    let t = Timer::start();
+    let out = exe.run_f64(&[&csr.values, &b, &x0])?;
+    let xla_time = t.elapsed_s();
+    let x_xla = &out[0];
+    let rs_xla = out[1][0];
+    println!(
+        "  cg artifact: iters={iters} residual²={rs_xla:.3e} time={xla_time:.4}s"
+    );
+
+    // ---- cross-validation --------------------------------------------
+    println!("\n-- cross-validation --");
+    let max_dx = x_native
+        .iter()
+        .zip(x_xla)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f64, f64::max);
+    let mut ax = vec![0.0; dim];
+    csr.spmv_ref(x_xla, &mut ax);
+    let res_xla: f64 = ax
+        .iter()
+        .zip(&b)
+        .map(|(a, b)| (a - b) * (a - b))
+        .sum::<f64>()
+        .sqrt();
+    println!("  max|x_native − x_xla| = {max_dx:.3e}");
+    println!("  ‖A·x_xla − b‖        = {res_xla:.3e}");
+    println!(
+        "  native/xla wall ratio = {:.2} (xla path includes interpret-mode \
+         Pallas overhead; see DESIGN.md §9)",
+        xla_time / native_time
+    );
+    anyhow::ensure!(max_dx < 1e-6, "stacks disagree");
+    anyhow::ensure!(res_xla < 1e-5, "xla CG did not converge");
+
+    // ---- bonus: dominant eigenpair via the power artifact -------------
+    if let Ok(exe) = engine.executor("power") {
+        let v0: Vec<f64> = (0..dim).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+        let out = exe.run_f64(&[&csr.values, &v0])?;
+        println!(
+            "\n-- power-iteration artifact: λ_max ≈ {:.6} (analytic {:.6}) --",
+            out[1][0],
+            8.0 * (std::f64::consts::PI * n as f64 / (2.0 * (n as f64 + 1.0)))
+                .sin()
+                .powi(2)
+        );
+    }
+
+    println!("\nE2E OK: all three layers agree");
+    Ok(())
+}

@@ -1,0 +1,85 @@
+//! Kernel auto-tuning demo — the paper's §"Performance prediction and
+//! optimal kernel selection" as a user workflow:
+//!
+//! 1. benchmark the SPC5 kernels on a *training* set of matrices,
+//!    recording `(Avg(r,c), GFlop/s)` per kernel;
+//! 2. fit the per-kernel polynomial models (Fig. 5);
+//! 3. for unseen matrices, predict the best kernel from the cheap
+//!    block-count scan alone — before any conversion — and compare the
+//!    choice with the measured optimum (Table 3's methodology).
+//!
+//! Run: `cargo run --release --example kernel_autotune`
+
+use spc5::bench::{measure_sequential, to_record};
+use spc5::formats::stats::block_stats;
+use spc5::formats::BlockSize;
+use spc5::kernels::{KernelKind, KernelSet};
+use spc5::matrix::suite;
+use spc5::predictor::{select_sequential, RecordStore};
+
+fn avg_for(k: KernelKind, csr: &spc5::matrix::Csr) -> f64 {
+    let bs = k.block_size().unwrap_or(BlockSize::new(1, 8));
+    block_stats(csr, bs).avg_nnz_per_block
+}
+
+fn main() -> anyhow::Result<()> {
+    let kernels = KernelKind::SPC5_KERNELS;
+
+    // Training set: a slice of Set-A surrogates across structure classes.
+    let train = ["atmosmodd", "bone010", "nd6k", "Si87H76", "circuit5M", "ns3Da", "pdb1HYS", "in-2004"];
+    // Held-out evaluation: Set-B surrogates.
+    let eval = ["Cube_Coup_dt0", "dielFilterV2real", "FullChip", "TSOPF_RS_b2383_c1"];
+
+    println!("== training: measuring {} kernels on {} matrices ==", kernels.len(), train.len());
+    let mut store = RecordStore::new();
+    for name in train {
+        let sm = suite::by_name(name).expect("suite matrix");
+        let set = KernelSet::prepare(sm.csr.clone(), &kernels);
+        for k in kernels {
+            let m = measure_sequential(&set, name, k);
+            let avg = avg_for(k, &sm.csr);
+            println!("  {name:<18} {k:<12} avg={avg:>6.2}  {:.3} GFlop/s", m.gflops);
+            store.push(to_record(&m, avg));
+        }
+    }
+
+    println!("\n== evaluation on unseen matrices ==");
+    println!(
+        "{:<20} {:>14} {:>14} {:>10} {:>10} {:>8}",
+        "matrix", "selected", "best", "pred GF/s", "real GF/s", "loss%"
+    );
+    for name in eval {
+        let sm = suite::by_name(name).expect("suite matrix");
+        let sel = select_sequential(&sm.csr, &store, &kernels)
+            .expect("records available");
+
+        // Measure every kernel to find the true optimum (Table 3 cols).
+        let set = KernelSet::prepare(sm.csr.clone(), &kernels);
+        let mut best = (kernels[0], 0.0f64);
+        let mut selected_real = 0.0f64;
+        for k in kernels {
+            let m = measure_sequential(&set, name, k);
+            if m.gflops > best.1 {
+                best = (k, m.gflops);
+            }
+            if k == sel.kernel {
+                selected_real = m.gflops;
+            }
+        }
+        let loss = 100.0 * (best.1 - selected_real) / best.1;
+        println!(
+            "{:<20} {:>14} {:>14} {:>10.3} {:>10.3} {:>7.1}%",
+            name,
+            sel.kernel.to_string(),
+            best.0.to_string(),
+            sel.predicted_gflops,
+            selected_real,
+            loss
+        );
+    }
+    println!(
+        "\n(loss% is the paper's 'Speed difference' column: 0% = optimal \
+         kernel selected; small values mean the prediction was good enough)"
+    );
+    Ok(())
+}

@@ -1,0 +1,118 @@
+//! Quickstart: the 60-second tour of SPC5-RS.
+//!
+//! Builds a sparse matrix, inspects its block-fill profile, converts it
+//! to a `β(r,c)` mask format (no zero padding), runs the AVX-512 SpMV,
+//! and verifies against the reference — the core workflow of the paper.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use spc5::formats::{csr_to_block, fill_crossover, BlockSize};
+use spc5::kernels::{spmv_block, KernelKind, KernelSet};
+use spc5::matrix::{suite, Coo};
+use spc5::util::fmt_bytes;
+
+fn main() -> anyhow::Result<()> {
+    // 1. Assemble a matrix (COO → CSR). Any source works: MatrixMarket
+    //    files (spc5::matrix::market), generators, or your own loops.
+    let mut coo = Coo::new(8, 8);
+    for (r, c, v) in [
+        (0, 0, 1.0),
+        (0, 1, 2.0),
+        (0, 4, 3.0),
+        (0, 6, 4.0),
+        (1, 1, 5.0),
+        (1, 2, 6.0),
+        (1, 3, 7.0),
+        (2, 2, 8.0),
+        (2, 4, 9.0),
+        (2, 6, 10.0),
+        (3, 3, 11.0),
+        (3, 4, 12.0),
+        (4, 5, 13.0),
+        (4, 6, 14.0),
+        (6, 5, 15.0),
+        (7, 0, 16.0),
+        (7, 4, 17.0),
+        (7, 7, 18.0),
+    ] {
+        coo.push(r, c, v);
+    }
+    let csr = coo.to_csr()?;
+    println!("paper Fig. 1 matrix: {}x{}, {} nnz", csr.rows, csr.cols, csr.nnz());
+
+    // 2. Convert to β(1,4) and β(2,2) — the paper's Fig. 2 examples —
+    //    and print the storage the paper illustrates.
+    for bs in [BlockSize::new(1, 4), BlockSize::new(2, 2)] {
+        let bm = csr_to_block(&csr, bs)?;
+        println!(
+            "\nβ({},{}): {} blocks, avg {:.2} nnz/block ({:.0}% fill), {} \
+             (CSR: {})",
+            bs.r,
+            bs.c,
+            bm.n_blocks(),
+            bm.avg_nnz_per_block(),
+            100.0 * bm.fill_fraction(),
+            fmt_bytes(bm.occupancy_bytes()),
+            fmt_bytes(csr.occupancy_bytes()),
+        );
+        println!("  values       = {:?}", bm.values);
+        println!("  block_colidx = {:?}", bm.block_colidx);
+        println!("  block_rowptr = {:?}", bm.block_rowptr);
+        println!(
+            "  block_masks  = {:?}",
+            bm.block_masks.iter().map(|m| format!("{m:0w$b}", w = bs.c)).collect::<Vec<_>>()
+        );
+    }
+
+    // 3. Run the SpMV through the optimized kernel and verify.
+    let bm = csr_to_block(&csr, BlockSize::new(1, 8))?;
+    let x: Vec<f64> = (0..8).map(|i| 1.0 + i as f64 * 0.5).collect();
+    let mut y = vec![0.0; 8];
+    spmv_block(&bm, &x, &mut y, false);
+    let mut want = vec![0.0; 8];
+    csr.spmv_ref(&x, &mut want);
+    assert_eq!(y, want);
+    println!(
+        "\nβ(1,8) SpMV (AVX-512 available: {}): y = {:?}",
+        spc5::util::avx512_available(),
+        y
+    );
+
+    // 4. On a realistic matrix: every kernel, one line each.
+    let sm = suite::by_name("bone010").expect("suite matrix");
+    println!(
+        "\nsuite surrogate '{}' ({} rows, {} nnz):",
+        sm.name,
+        sm.csr.rows,
+        sm.csr.nnz()
+    );
+    let set = KernelSet::prepare(sm.csr.clone(), &KernelKind::ALL);
+    let x: Vec<f64> = (0..sm.csr.cols).map(|i| (i % 10) as f64 * 0.1).collect();
+    let mut want = vec![0.0; sm.csr.rows];
+    sm.csr.spmv_ref(&x, &mut want);
+    for k in KernelKind::ALL {
+        let m = spc5::bench::measure_sequential(&set, sm.name, k);
+        let mut y = vec![0.0; sm.csr.rows];
+        set.spmv(k, &x, &mut y);
+        let max_err = y
+            .iter()
+            .zip(&want)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f64, f64::max);
+        println!(
+            "  {:<12} {:>7.3} GFlop/s   max|err| = {:.2e}",
+            m.kernel.to_string(),
+            m.gflops,
+            max_err
+        );
+        assert!(max_err < 1e-8);
+    }
+
+    // 5. Eq. (4): when does the block storage beat CSR?
+    println!("\nEq. (4) storage crossovers (min avg nnz/block):");
+    for bs in BlockSize::PAPER_SIZES {
+        println!("  {}: {:.2}", bs, fill_crossover(bs));
+    }
+    println!("\nquickstart OK");
+    Ok(())
+}

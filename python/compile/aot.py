@@ -1,0 +1,152 @@
+"""AOT compile path: lower the L2 graphs to HLO **text** artifacts.
+
+HLO text (not ``.serialize()``): jax ≥ 0.5 emits HloModuleProto with
+64-bit instruction ids that the rust side's xla_extension 0.5.1
+rejects; the text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Artifacts (under ``--out-dir``, default ``../artifacts``):
+
+- ``spmv_poisson{N}.hlo.txt``  — one SpMV on the 2D Poisson N×N grid
+  matrix in β(1,8) descriptors;
+- ``cg_poisson{N}_it{K}.hlo.txt`` — K CG iterations on the same system;
+- ``power_poisson{N}_it{K}.hlo.txt`` — K power-method steps;
+- ``manifest.json`` — shapes the Rust runtime validates against before
+  executing (rows, cols, nnz, padded block count, strip size).
+
+Python runs ONCE (`make artifacts`); nothing here is on the request
+path.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .kernels.ref import poisson2d_csr
+from .kernels.spmv_block import STRIP, csr_to_block_desc
+from .model import cg_graph, power_iteration_graph, spmv_graph
+
+jax.config.update("jax_enable_x64", True)
+
+# Workload parameters shared with the Rust examples (examples/cg_solver.rs).
+POISSON_N = 64
+CG_ITERS = 200
+POWER_ITERS = 50
+DTYPE = np.float64
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (the interchange format).
+
+    ``print_large_constants=True`` is essential: the default printer
+    elides big dense constants as ``{...}``, which the consumer-side
+    text parser (xla_extension 0.5.1) silently turns into garbage —
+    the block-descriptor arrays baked into the kernel are exactly such
+    constants.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def lower_and_write(fn, args, path: str) -> None:
+    lowered = jax.jit(fn).lower(*args)
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"wrote {path} ({len(text)} chars)")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--n", type=int, default=POISSON_N)
+    ap.add_argument("--cg-iters", type=int, default=CG_ITERS)
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    n = args.n
+    rowptr, colidx, values = poisson2d_csr(n, dtype=DTYPE)
+    dim = n * n
+    desc = csr_to_block_desc(
+        rowptr, colidx, values, dim, dim, r=1, c=8, dtype=DTYPE
+    )
+    print(
+        f"poisson {n}x{n}: dim={dim} nnz={desc.nnz} "
+        f"blocks_padded={desc.n_padded} strip={STRIP}"
+    )
+
+    vspec = jax.ShapeDtypeStruct((desc.nnz,), DTYPE)
+    xspec = jax.ShapeDtypeStruct((dim,), DTYPE)
+
+    spmv_name = f"spmv_poisson{n}.hlo.txt"
+    lower_and_write(
+        spmv_graph(desc), (vspec, xspec), os.path.join(args.out_dir, spmv_name)
+    )
+
+    cg_name = f"cg_poisson{n}_it{args.cg_iters}.hlo.txt"
+    lower_and_write(
+        cg_graph(desc, args.cg_iters),
+        (vspec, xspec, xspec),
+        os.path.join(args.out_dir, cg_name),
+    )
+
+    power_name = f"power_poisson{n}_it{POWER_ITERS}.hlo.txt"
+    lower_and_write(
+        power_iteration_graph(desc, POWER_ITERS),
+        (vspec, xspec),
+        os.path.join(args.out_dir, power_name),
+    )
+
+    manifest = {
+        "version": 1,
+        "strip": STRIP,
+        "workloads": {
+            "spmv": {
+                "file": spmv_name,
+                "n": n,
+                "rows": dim,
+                "cols": dim,
+                "nnz": int(desc.nnz),
+                "blocks_padded": int(desc.n_padded),
+                "params": ["values[nnz]", "x[cols]"],
+                "outputs": ["y[rows]"],
+            },
+            "cg": {
+                "file": cg_name,
+                "n": n,
+                "rows": dim,
+                "cols": dim,
+                "nnz": int(desc.nnz),
+                "iters": args.cg_iters,
+                "params": ["values[nnz]", "b[rows]", "x0[rows]"],
+                "outputs": ["x[rows]", "r_norm2[]"],
+            },
+            "power": {
+                "file": power_name,
+                "n": n,
+                "rows": dim,
+                "cols": dim,
+                "nnz": int(desc.nnz),
+                "iters": POWER_ITERS,
+                "params": ["values[nnz]", "v0[rows]"],
+                "outputs": ["v[rows]", "lambda[]"],
+            },
+        },
+    }
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {mpath}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Dump block descriptors as JSON — consumed by the Rust integration
+test `cross_lang.rs` to prove the Python and Rust β conversions emit
+identical streams (the property the AOT artifact path relies on: the
+Rust coordinator feeds `values` in CSR order to an executable whose
+descriptor constants came from the Python conversion).
+
+Usage: python -m compile.dump --n 12
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+from .kernels.ref import poisson2d_csr
+from .kernels.spmv_block import csr_to_block_desc
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=12)
+    ap.add_argument("--r", type=int, default=1)
+    ap.add_argument("--c", type=int, default=8)
+    args = ap.parse_args()
+
+    rowptr, colidx, values = poisson2d_csr(args.n)
+    dim = args.n * args.n
+    desc = csr_to_block_desc(
+        rowptr, colidx, values, dim, dim, r=args.r, c=args.c
+    )
+    print(
+        json.dumps(
+            {
+                "rows": desc.rows,
+                "cols": desc.cols,
+                "c": desc.c,
+                "nnz": desc.nnz,
+                "block_row": desc.block_row.tolist(),
+                "block_col": desc.block_col.tolist(),
+                "block_mask": desc.block_mask.tolist(),
+                "block_off": desc.block_off.tolist(),
+            }
+        )
+    )
+
+
+if __name__ == "__main__":
+    main()

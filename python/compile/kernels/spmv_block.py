@@ -1,0 +1,276 @@
+"""L1 — Pallas kernel: block-based SpMV without zero padding (TPU rethink).
+
+The paper's kernels rely on AVX-512 ``vexpandpd``: inflate the next
+``popcnt(mask)`` packed values into the lanes selected by a bitmask.
+TPUs have no expand instruction, so a mechanical port is impossible.
+The TPU-shaped equivalent implemented here keeps the paper's core
+insight — *store only the nonzeros, keep intra-block sparsity as one
+mask word, re-inflate in registers, never in memory* — and maps each
+piece to TPU-native constructs (DESIGN.md §Hardware-Adaptation):
+
+=====================  =============================================
+paper (AVX-512)        this kernel (Pallas/TPU)
+=====================  =============================================
+``vexpandpd`` serial   per-lane *rank* = prefix-popcount of the mask,
+``idx_val += popcnt``  block *value offsets* precomputed host-side →
+                       a masked gather ``values[offset + rank]``
+row-interval walk      grid over fixed-size block *strips*; the
+                       HBM→VMEM schedule the paper wrote with row
+                       intervals is a ``BlockSpec`` over strips
+masked load of x       ``where(bit, x[col0+k], 0)`` gather
+per-row accumulators   strip-local segment-sum by row, accumulated
+``vaddsd`` at end      into the output ref across sequential grid
+                       steps
+=====================  =============================================
+
+Padding only ever touches *block descriptors* (strips are padded with
+``mask = 0`` entries); the values array stays exactly the nonzeros —
+the paper's "no zero padding" storage contract.
+
+The kernel's unit of work is a **block row** (one ``(row, col0, mask,
+offset)`` record). Any ``β(r,c)`` with r > 1 is flattened to block rows
+host-side, so one kernel serves every paper block size.
+
+Everything runs with ``interpret=True``: the CPU PJRT plugin cannot
+execute Mosaic custom-calls; real-TPU efficiency is estimated in
+DESIGN.md §9.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+# Blocks per grid step. Must match `STRIP` in rust/src/runtime/mod.rs —
+# the Rust coordinator pads its descriptor arrays to this granularity
+# before feeding the AOT artifact.
+STRIP = 256
+
+
+@dataclass(frozen=True)
+class BlockDesc:
+    """Host-side descriptor arrays of a β(r,c) matrix, flattened to
+    block rows and padded to a multiple of STRIP.
+
+    Invariant: ``offsets[i]`` is the index into ``values`` of block row
+    i's first nonzero; padding entries have ``mask == 0`` and repeat the
+    last offset, so they gather nothing.
+    """
+
+    rows: int
+    cols: int
+    c: int  # block width (bits per mask)
+    block_row: np.ndarray  # [nb_pad] int32 — target row of each block row
+    block_col: np.ndarray  # [nb_pad] int32 — leftmost column
+    block_mask: np.ndarray  # [nb_pad] int32 — c-bit mask
+    block_off: np.ndarray  # [nb_pad] int32 — prefix popcount into values
+    values: np.ndarray  # [nnz] float — the nonzeros, NO padding
+
+    @property
+    def n_padded(self) -> int:
+        return len(self.block_row)
+
+    @property
+    def nnz(self) -> int:
+        return len(self.values)
+
+
+def csr_to_block_desc(
+    rowptr: np.ndarray,
+    colidx: np.ndarray,
+    values: np.ndarray,
+    rows: int,
+    cols: int,
+    r: int = 1,
+    c: int = 8,
+    dtype=np.float64,
+) -> BlockDesc:
+    """CSR → β(r,c) descriptors, flattened to block rows.
+
+    Mirrors the greedy cover of ``rust/src/formats/convert.rs`` exactly:
+    inside each r-row interval, blocks anchor at the leftmost uncovered
+    nonzero; values are appended block by block, row-major inside the
+    block. The flattened (row, col0, mask, offset) records keep that
+    value order, so the two implementations produce bit-identical
+    streams (checked by an integration test).
+    """
+    assert 1 <= c <= 8 and r * c <= 64
+    b_row: list[int] = []
+    b_col: list[int] = []
+    b_mask: list[int] = []
+    b_off: list[int] = []
+    vals: list[float] = []
+
+    intervals = (rows + r - 1) // r
+    for it in range(intervals):
+        row0 = it * r
+        rows_here = min(r, rows - row0)
+        cursor = [int(rowptr[row0 + i]) for i in range(rows_here)]
+        ends = [int(rowptr[row0 + i + 1]) for i in range(rows_here)]
+        while True:
+            min_col = None
+            for i in range(rows_here):
+                if cursor[i] < ends[i]:
+                    col = int(colidx[cursor[i]])
+                    if min_col is None or col < min_col:
+                        min_col = col
+            if min_col is None:
+                break
+            col_end = min_col + c
+            for i in range(rows_here):
+                mask = 0
+                off = len(vals)
+                while cursor[i] < ends[i] and int(colidx[cursor[i]]) < col_end:
+                    k = cursor[i]
+                    mask |= 1 << (int(colidx[k]) - min_col)
+                    vals.append(float(values[k]))
+                    cursor[i] += 1
+                if mask != 0:
+                    b_row.append(row0 + i)
+                    b_col.append(min_col)
+                    b_mask.append(mask)
+                    b_off.append(off)
+
+    nb = len(b_row)
+    nb_pad = max(STRIP, ((nb + STRIP - 1) // STRIP) * STRIP)
+    pad = nb_pad - nb
+    last_off = len(vals)
+    return BlockDesc(
+        rows=rows,
+        cols=cols,
+        c=c,
+        block_row=np.asarray(b_row + [0] * pad, dtype=np.int32),
+        block_col=np.asarray(b_col + [0] * pad, dtype=np.int32),
+        block_mask=np.asarray(b_mask + [0] * pad, dtype=np.int32),
+        block_off=np.asarray(b_off + [last_off] * pad, dtype=np.int32),
+        values=np.asarray(vals, dtype=dtype),
+    )
+
+
+def _spmv_kernel(row_ref, col_ref, mask_ref, off_ref, val_ref, x_ref, o_ref, *, c: int, rows: int):
+    """Pallas kernel body: one grid step = one strip of STRIP block rows.
+
+    The expand: for lane k of a block, ``rank_k = popcount(mask &
+    ((1<<k)-1))`` ranks the set bits; ``values[offset + rank_k]``
+    fetches the packed nonzero that lane k would have received from
+    ``vexpandpd``; lanes with a clear bit contribute zero without
+    touching memory semantics (gather index is clamped in-bounds).
+    """
+    step = pl.program_id(0)
+
+    # Strip-local descriptor slices (VMEM-resident per BlockSpec).
+    rowv = row_ref[...]
+    colv = col_ref[...]
+    maskv = mask_ref[...]
+    offv = off_ref[...]
+
+    # lanes [STRIP, c]
+    lane = jnp.arange(c, dtype=jnp.int32)[None, :]
+    bits = (maskv[:, None] >> lane) & 1  # 1 where the block holds a value
+    below = maskv[:, None] & ((1 << lane) - 1)
+    # prefix popcount per lane (rank of the value inside the block)
+    rank = jax.lax.population_count(below.astype(jnp.uint32)).astype(jnp.int32)
+
+    nnz = val_ref.shape[0]
+    vidx = jnp.clip(offv[:, None] + rank, 0, nnz - 1)
+    gathered = val_ref[vidx]  # [STRIP, c]
+    xcols = jnp.clip(colv[:, None] + lane, 0, x_ref.shape[0] - 1)
+    xg = x_ref[xcols]
+    contrib = jnp.where(bits == 1, gathered * xg, 0.0)
+    partial = jnp.sum(contrib, axis=1)  # [STRIP]
+
+    # Segment-sum by target row (padding rows carry mask 0 → contribute 0).
+    y_update = jnp.zeros((rows,), dtype=o_ref.dtype).at[rowv].add(partial)
+
+    # Sequential grid: initialize on the first step, accumulate after.
+    @pl.when(step == 0)
+    def _init():
+        o_ref[...] = y_update
+
+    @pl.when(step != 0)
+    def _acc():
+        o_ref[...] = o_ref[...] + y_update
+
+
+def spmv(desc: BlockDesc, x: jax.Array) -> jax.Array:
+    """``y = A @ x`` for a matrix in block-descriptor form.
+
+    Jittable; lowers to a single pallas_call with a grid over strips.
+    """
+    nb = desc.n_padded
+    assert nb % STRIP == 0
+    grid = nb // STRIP
+    dtype = desc.values.dtype
+    if desc.nnz == 0:
+        # Degenerate empty matrix: nothing to gather (and a 0-length
+        # operand cannot be indexed), the product is identically zero.
+        return jnp.zeros((desc.rows,), dtype=dtype)
+    kernel = functools.partial(_spmv_kernel, c=desc.c, rows=desc.rows)
+    strip_spec = pl.BlockSpec((STRIP,), lambda i: (i,))
+    full = lambda shape: pl.BlockSpec(shape, lambda i: tuple(0 for _ in shape))
+    return pl.pallas_call(
+        kernel,
+        grid=(grid,),
+        in_specs=[
+            strip_spec,  # block_row
+            strip_spec,  # block_col
+            strip_spec,  # block_mask
+            strip_spec,  # block_off
+            full((desc.nnz,)),  # values
+            full((desc.cols,)),  # x
+        ],
+        out_specs=full((desc.rows,)),
+        out_shape=jax.ShapeDtypeStruct((desc.rows,), dtype),
+        interpret=True,
+    )(
+        jnp.asarray(desc.block_row),
+        jnp.asarray(desc.block_col),
+        jnp.asarray(desc.block_mask),
+        jnp.asarray(desc.block_off),
+        jnp.asarray(desc.values),
+        x.astype(dtype),
+    )
+
+
+def spmv_operator(desc: BlockDesc):
+    """Returns a jit-compatible ``matvec(values, x)`` closure over the
+    static descriptor arrays — the form L2 (model.py) composes into CG.
+
+    ``values`` is a runtime argument so one compiled executable serves
+    any matrix with the same sparsity structure (the classic iterative-
+    solver deployment: structure fixed, coefficients change).
+    """
+    assert desc.nnz > 0, "AOT operator needs a non-empty matrix"
+    row = jnp.asarray(desc.block_row)
+    col = jnp.asarray(desc.block_col)
+    mask = jnp.asarray(desc.block_mask)
+    off = jnp.asarray(desc.block_off)
+    nb = desc.n_padded
+    grid = nb // STRIP
+    kernel = functools.partial(_spmv_kernel, c=desc.c, rows=desc.rows)
+    strip_spec = pl.BlockSpec((STRIP,), lambda i: (i,))
+    full = lambda shape: pl.BlockSpec(shape, lambda i: tuple(0 for _ in shape))
+
+    def matvec(values: jax.Array, x: jax.Array) -> jax.Array:
+        return pl.pallas_call(
+            kernel,
+            grid=(grid,),
+            in_specs=[
+                strip_spec,
+                strip_spec,
+                strip_spec,
+                strip_spec,
+                full((desc.nnz,)),
+                full((desc.cols,)),
+            ],
+            out_specs=full((desc.rows,)),
+            out_shape=jax.ShapeDtypeStruct((desc.rows,), values.dtype),
+            interpret=True,
+        )(row, col, mask, off, values, x)
+
+    return matvec

@@ -1,0 +1,90 @@
+"""L2 — the JAX compute graphs built on the L1 Pallas kernel.
+
+Two graphs, both AOT-lowered by :mod:`compile.aot` and executed from
+the Rust coordinator:
+
+- :func:`spmv_graph` — a single SpMV ``y = A·x`` (the paper's hot
+  operation);
+- :func:`cg_graph` — ``iters`` steps of the conjugate-gradient method
+  (the paper's motivating application: "iterative solvers based on
+  Krylov subspaces, such as the popular CG method"), with the Pallas
+  SpMV as the only matrix touch-point. Lowered with a
+  ``lax.fori_loop`` so the whole solve is ONE executable — no
+  host↔device round-trip per iteration.
+
+The matrix *structure* (block descriptors) is compile-time constant;
+``values`` and the vectors are runtime parameters, so one artifact
+serves every matrix with that sparsity pattern.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.spmv_block import BlockDesc, spmv_operator
+
+
+def spmv_graph(desc: BlockDesc):
+    """Returns ``f(values, x) -> (y,)`` for AOT lowering."""
+    matvec = spmv_operator(desc)
+
+    def f(values, x):
+        return (matvec(values, x),)
+
+    return f
+
+
+def cg_graph(desc: BlockDesc, iters: int):
+    """Returns ``f(values, b, x0) -> (x, r_norm2)`` running `iters` CG
+    steps on the SPD system ``A x = b``.
+
+    Classic (unpreconditioned) CG; every iteration's single SpMV goes
+    through the Pallas kernel. The final squared residual norm comes
+    back with the solution so the caller can verify convergence without
+    a second artifact.
+    """
+    assert desc.rows == desc.cols, "CG needs a square (SPD) matrix"
+    matvec = spmv_operator(desc)
+
+    def f(values, b, x0):
+        r0 = b - matvec(values, x0)
+        p0 = r0
+        rs0 = jnp.dot(r0, r0)
+
+        def step(_, state):
+            x, r, p, rs = state
+            ap = matvec(values, p)
+            denom = jnp.dot(p, ap)
+            alpha = jnp.where(denom != 0.0, rs / denom, 0.0)
+            x = x + alpha * p
+            r = r - alpha * ap
+            rs_new = jnp.dot(r, r)
+            beta = jnp.where(rs != 0.0, rs_new / rs, 0.0)
+            p = r + beta * p
+            return (x, r, p, rs_new)
+
+        x, r, _, rs = jax.lax.fori_loop(0, iters, step, (x0, r0, p0, rs0))
+        del r
+        return (x, rs)
+
+    return f
+
+
+def power_iteration_graph(desc: BlockDesc, iters: int):
+    """Returns ``f(values, v0) -> (v, lambda)`` — `iters` power-method
+    steps estimating the dominant eigenpair; a second, cheaper L2
+    consumer of the kernel used by the spmv_server example."""
+    assert desc.rows == desc.cols
+    matvec = spmv_operator(desc)
+
+    def f(values, v0):
+        def step(_, v):
+            w = matvec(values, v)
+            return w / jnp.linalg.norm(w)
+
+        v = jax.lax.fori_loop(0, iters, step, v0 / jnp.linalg.norm(v0))
+        lam = jnp.dot(v, matvec(values, v))
+        return (v, lam)
+
+    return f

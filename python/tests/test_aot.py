@@ -1,0 +1,57 @@
+"""AOT lowering contract tests — guards for the HLO-text interchange.
+
+The rust side parses HLO *text* with xla_extension 0.5.1. Two gotchas
+are pinned here:
+
+1. large dense constants must be printed in full — the default printer
+   elides them as ``{...}`` and the consumer-side parser silently turns
+   that into garbage (this exact bug cost a debugging session; see
+   aot.to_hlo_text);
+2. the entry computation must take (values, x[, ...]) as parameters
+   with the shapes the manifest advertises, and return a tuple.
+"""
+
+import jax
+import numpy as np
+
+from compile.aot import to_hlo_text
+from compile.kernels.ref import poisson2d_csr
+from compile.kernels.spmv_block import csr_to_block_desc
+from compile.model import cg_graph, spmv_graph
+
+jax.config.update("jax_enable_x64", True)
+
+
+def lower(n=8, iters=4):
+    rowptr, colidx, values = poisson2d_csr(n)
+    dim = n * n
+    desc = csr_to_block_desc(rowptr, colidx, values, dim, dim)
+    vspec = jax.ShapeDtypeStruct((desc.nnz,), np.float64)
+    xspec = jax.ShapeDtypeStruct((dim,), np.float64)
+    spmv_text = to_hlo_text(jax.jit(spmv_graph(desc)).lower(vspec, xspec))
+    cg_text = to_hlo_text(
+        jax.jit(cg_graph(desc, iters)).lower(vspec, xspec, xspec)
+    )
+    return desc, spmv_text, cg_text
+
+
+def test_no_elided_constants():
+    _, spmv_text, cg_text = lower()
+    assert "{...}" not in spmv_text, "large constants must be printed"
+    assert "{...}" not in cg_text
+
+
+def test_entry_signature_matches_manifest_contract():
+    desc, spmv_text, cg_text = lower()
+    dim = desc.rows
+    # ENTRY takes f64[nnz] then f64[dim].
+    assert f"f64[{desc.nnz}]" in spmv_text
+    assert f"f64[{dim}]" in spmv_text
+    # CG takes three params (values, b, x0) and returns (x, rs).
+    entry = cg_text[cg_text.rindex("ENTRY") :]
+    assert entry.count("parameter(") == 3, entry[:400]
+
+
+def test_hlo_text_is_parseable_header():
+    _, spmv_text, _ = lower()
+    assert spmv_text.lstrip().startswith("HloModule")

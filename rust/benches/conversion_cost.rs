@@ -1,0 +1,48 @@
+//! Regenerates the paper's §Test-matrices claim: "The time taken to
+//! convert any of the matrices from Set-A from the CSR format to one of
+//! ours is around twice the time of a single SpMV in sequential."
+//!
+//! Reports, per matrix and block size, conversion time / one sequential
+//! CSR SpMV.
+
+use spc5::bench::runner::maybe_quick;
+use spc5::bench::{bench_vector, Table, RUNS};
+use spc5::formats::{csr_to_block, BlockSize};
+use spc5::matrix::suite;
+use spc5::util::timer::mean_of_runs;
+
+fn main() {
+    let matrices = maybe_quick(suite::set_a());
+    let mut t = Table::new(
+        "Conversion cost: CSR->b(r,c) time as multiple of one CSR SpMV",
+        &["matrix", "spmv ms", "b(1,8)", "b(2,4)", "b(2,8)", "b(4,4)",
+          "b(4,8)", "b(8,4)"],
+    );
+    let mut ratios: Vec<f64> = Vec::new();
+    for sm in &matrices {
+        let x = bench_vector(sm.csr.cols, 3);
+        let mut y = vec![0.0; sm.csr.rows];
+        let spmv_s = mean_of_runs(RUNS, || {
+            spc5::kernels::csr::spmv(&sm.csr, &x, &mut y);
+        });
+        let mut row =
+            vec![sm.name.to_string(), format!("{:.3}", spmv_s * 1e3)];
+        for bs in BlockSize::PAPER_SIZES {
+            let conv_s = mean_of_runs(4, || {
+                std::hint::black_box(csr_to_block(&sm.csr, bs).unwrap());
+            });
+            let ratio = conv_s / spmv_s;
+            ratios.push(ratio);
+            row.push(format!("{ratio:.1}x"));
+        }
+        t.row(row);
+        eprintln!("  measured {}", sm.name);
+    }
+    t.emit("conversion_cost");
+    ratios.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    println!(
+        "conversion/spmv ratio: median {:.1}x, p90 {:.1}x (paper: ~2x)",
+        ratios[ratios.len() / 2],
+        ratios[ratios.len() * 9 / 10]
+    );
+}

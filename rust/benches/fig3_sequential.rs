@@ -1,0 +1,67 @@
+//! Regenerates paper **Fig. 3**: sequential double-precision GFlop/s
+//! for the CSR baseline (MKL stand-in), CSR5, and the eight SPC5
+//! kernels on every Set-A matrix, with the speedup of the best SPC5
+//! kernel over the best baseline printed per matrix (the number above
+//! the bars in the paper's figure).
+//!
+//! Also primes `records.json` — the training data for the prediction
+//! benches (fig5 / table3) — exactly as the paper uses Set-A timings.
+
+use spc5::bench::runner::{best_by_matrix, maybe_quick, run_sequential};
+use spc5::bench::{append_records, Table};
+use spc5::kernels::KernelKind;
+use spc5::matrix::suite;
+
+fn main() {
+    let matrices = maybe_quick(suite::set_a());
+    let kernels = KernelKind::ALL;
+    eprintln!(
+        "fig3: {} matrices x {} kernels (16-run means)...",
+        matrices.len(),
+        kernels.len()
+    );
+    let (ms, recs) = run_sequential(&matrices, &kernels);
+    if let Err(e) = append_records(&recs) {
+        eprintln!("warning: could not persist records: {e}");
+    }
+
+    let mut t = Table::new(
+        "Fig. 3: sequential GFlop/s (double precision)",
+        &[
+            "matrix", "csr", "csr5", "b(1,8)", "b(1,8)t", "b(2,4)", "b(2,4)t",
+            "b(2,8)", "b(4,4)", "b(4,8)", "b(8,4)", "best spc5 speedup",
+        ],
+    );
+    let is_baseline =
+        |k: KernelKind| matches!(k, KernelKind::Csr | KernelKind::Csr5);
+    let best_base = best_by_matrix(&ms, |m| is_baseline(m.kernel));
+    let best_spc5 = best_by_matrix(&ms, |m| !is_baseline(m.kernel));
+
+    for sm in &matrices {
+        let mut row = vec![sm.name.to_string()];
+        for k in kernels {
+            let g = ms
+                .iter()
+                .find(|m| m.matrix == sm.name && m.kernel == k)
+                .map(|m| m.gflops)
+                .unwrap_or(0.0);
+            row.push(format!("{g:.2}"));
+        }
+        let speedup = best_spc5[sm.name].gflops / best_base[sm.name].gflops;
+        row.push(format!("{:+.0}%", (speedup - 1.0) * 100.0));
+        t.row(row);
+    }
+    t.emit("fig3");
+
+    // Shape summary (the paper's qualitative claims).
+    let wins = matrices
+        .iter()
+        .filter(|sm| best_spc5[sm.name].gflops > best_base[sm.name].gflops)
+        .count();
+    println!(
+        "SPC5 beats the best baseline on {wins}/{} matrices (paper: \"often \
+         up to 50%\", losing only on scatter-structured matrices like \
+         kron/ns3Da)",
+        matrices.len()
+    );
+}

@@ -1,0 +1,72 @@
+//! Regenerates paper **Fig. 4**: parallel GFlop/s for the SPC5 kernels
+//! with and without the NUMA-split optimization.
+//!
+//! The paper runs 52 threads on a 2-socket Skylake; this container has
+//! one core, so the defaults are scaled (threads = {2, 4}, override
+//! with SPC5_THREADS="2,4,8"). The *code paths* are identical — the
+//! partitioner, per-thread working vectors, syncless merge and the
+//! array-splitting NUMA mode all execute; what the host cannot show is
+//! cross-socket memory latency (EXPERIMENTS.md discusses this).
+//!
+//! Also appends multi-thread records for the fig6 regression.
+
+use spc5::bench::runner::{maybe_quick, run_parallel};
+use spc5::bench::{append_records, Table};
+use spc5::kernels::KernelKind;
+use spc5::matrix::suite;
+
+fn thread_counts() -> Vec<usize> {
+    std::env::var("SPC5_THREADS")
+        .ok()
+        .map(|s| {
+            s.split(',')
+                .filter_map(|t| t.trim().parse().ok())
+                .collect::<Vec<usize>>()
+        })
+        .filter(|v| !v.is_empty())
+        .unwrap_or_else(|| vec![2, 4])
+}
+
+fn main() {
+    let matrices = maybe_quick(suite::set_a());
+    let kernels = KernelKind::SPC5_KERNELS;
+    let threads = thread_counts();
+    eprintln!(
+        "fig4: {} matrices x {} kernels x threads {threads:?} x numa {{off,on}}...",
+        matrices.len(),
+        kernels.len()
+    );
+    let (ms, recs) = run_parallel(&matrices, &kernels, &threads, &[false, true]);
+    if let Err(e) = append_records(&recs) {
+        eprintln!("warning: could not persist records: {e}");
+    }
+
+    for &tc in &threads {
+        let mut t = Table::new(
+            &format!("Fig. 4: parallel GFlop/s, {tc} threads (plain / NUMA-split)"),
+            &[
+                "matrix", "b(1,8)", "b(1,8)t", "b(2,4)", "b(2,4)t", "b(2,8)",
+                "b(4,4)", "b(4,8)", "b(8,4)",
+            ],
+        );
+        for sm in &matrices {
+            let mut row = vec![sm.name.to_string()];
+            for k in kernels {
+                let find = |numa: bool| {
+                    ms.iter()
+                        .find(|m| {
+                            m.matrix == sm.name
+                                && m.kernel == k
+                                && m.threads == tc
+                                && m.numa == numa
+                        })
+                        .map(|m| m.gflops)
+                        .unwrap_or(0.0)
+                };
+                row.push(format!("{:.2} / {:.2}", find(false), find(true)));
+            }
+            t.row(row);
+        }
+        t.emit(&format!("fig4_t{tc}"));
+    }
+}

@@ -1,0 +1,87 @@
+//! Regenerates paper **Fig. 5**: per-kernel polynomial interpolation of
+//! sequential GFlop/s against the average number of NNZ per block,
+//! fitted on Set-A records.
+//!
+//! Prints the fitted coefficients, the RMSE on the training dots, and
+//! a sampled curve per kernel (the CSV is the plot data).
+
+use spc5::bench::runner::{ensure_records, maybe_quick};
+use spc5::bench::Table;
+use spc5::kernels::KernelKind;
+use spc5::matrix::suite;
+use spc5::predictor::select::fit_sequential;
+
+fn main() {
+    let matrices = maybe_quick(suite::set_a());
+    let kernels = KernelKind::ALL;
+    let store =
+        ensure_records(&matrices, &kernels, &[1]).expect("record store");
+
+    let models = fit_sequential(&store, &kernels);
+
+    let mut t = Table::new(
+        "Fig. 5: polynomial fit gflops ~ avg nnz/block (sequential, Set-A)",
+        &["kernel", "#dots", "coeffs (c0..c3)", "rmse"],
+    );
+    for k in kernels {
+        let recs = store.for_kernel(k, 1);
+        let Some(m) = models.get(&k) else { continue };
+        let xs: Vec<f64> = recs.iter().map(|r| r.avg_nnz_per_block).collect();
+        let ys: Vec<f64> = recs.iter().map(|r| r.gflops).collect();
+        t.row(vec![
+            k.to_string(),
+            xs.len().to_string(),
+            m.coeffs
+                .iter()
+                .map(|c| format!("{c:.4}"))
+                .collect::<Vec<_>>()
+                .join(", "),
+            format!("{:.3}", m.rmse(&xs, &ys)),
+        ]);
+    }
+    t.emit("fig5_models");
+
+    // Sampled curves: gflops prediction at avg = 1..32 per kernel.
+    let mut curve = Table::new(
+        "Fig. 5 curves: predicted GFlop/s vs avg nnz/block",
+        &["avg", "csr", "csr5", "b(1,8)", "b(1,8)t", "b(2,4)", "b(2,4)t",
+          "b(2,8)", "b(4,4)", "b(4,8)", "b(8,4)"],
+    );
+    for step in 0..32 {
+        let avg = 1.0 + step as f64;
+        let mut row = vec![format!("{avg:.0}")];
+        for k in kernels {
+            let v = models.get(&k).map(|m| m.eval(avg)).unwrap_or(f64::NAN);
+            row.push(format!("{v:.2}"));
+        }
+        curve.row(row);
+    }
+    curve.emit("fig5_curves");
+
+    // The paper's qualitative observation: dots correlate with avg.
+    for k in [KernelKind::Beta(1, 8), KernelKind::Beta(4, 8)] {
+        let recs = store.for_kernel(k, 1);
+        if recs.len() < 4 {
+            continue;
+        }
+        let lo: Vec<f64> = recs
+            .iter()
+            .filter(|r| r.avg_nnz_per_block < 3.0)
+            .map(|r| r.gflops)
+            .collect();
+        let hi: Vec<f64> = recs
+            .iter()
+            .filter(|r| r.avg_nnz_per_block >= 3.0)
+            .map(|r| r.gflops)
+            .collect();
+        if !lo.is_empty() && !hi.is_empty() {
+            let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+            println!(
+                "{k}: mean gflops at avg<3 = {:.2}, at avg>=3 = {:.2} \
+                 (paper: clear positive correlation)",
+                mean(&lo),
+                mean(&hi)
+            );
+        }
+    }
+}

@@ -1,0 +1,269 @@
+//! Microbenchmark / ablation: kernel GFlop/s as a controlled function
+//! of block fill, plus AVX-512-vs-scalar and header-layout ablations —
+//! the design-choice experiments DESIGN.md calls out (not a paper
+//! figure, but the evidence behind the paper's §Design discussion).
+//!
+//! Workload: banded matrices whose in-band density sweeps 10%..100%,
+//! so `Avg(r,c)` moves while dims and nnz structure stay comparable.
+
+use spc5::bench::{bench_vector, Table, RUNS};
+use spc5::formats::block32::csr_to_block32;
+use spc5::formats::{csr_to_block, BlockSize};
+use spc5::kernels::{avx512, avx512f32, scalar, spmm, KernelKind, KernelSet};
+use spc5::matrix::{reorder, suite};
+use spc5::parallel::{ParallelSpmv, ParallelStrategy};
+use spc5::util::timer::{mean_of_runs, spmv_gflops};
+
+fn main() {
+    fill_sweep();
+    simd_vs_scalar();
+    reorder_ablation();
+    f32_vs_f64();
+    spmm_ablation();
+    xcopy_ablation();
+    predictor_ablation();
+}
+
+/// GFlop/s vs block fill for every kernel.
+fn fill_sweep() {
+    let mut t = Table::new(
+        "Ablation A: GFlop/s vs in-band density (banded 40k, bw 24)",
+        &["density", "avg(1,8)", "csr", "b(1,8)", "b(2,4)", "b(2,8)",
+          "b(4,4)", "b(4,8)", "b(8,4)"],
+    );
+    for step in 1..=8 {
+        let density = step as f64 / 8.0;
+        let csr = suite::banded(40_000, 24, density, 77);
+        let kernels = [
+            KernelKind::Csr,
+            KernelKind::Beta(1, 8),
+            KernelKind::Beta(2, 4),
+            KernelKind::Beta(2, 8),
+            KernelKind::Beta(4, 4),
+            KernelKind::Beta(4, 8),
+            KernelKind::Beta(8, 4),
+        ];
+        let avg18 = spc5::formats::stats::block_stats(
+            &csr,
+            BlockSize::new(1, 8),
+        )
+        .avg_nnz_per_block;
+        let set = KernelSet::prepare(csr, &kernels);
+        let mut row =
+            vec![format!("{:.0}%", density * 100.0), format!("{avg18:.2}")];
+        for k in kernels {
+            let m = spc5::bench::measure_sequential(&set, "banded", k);
+            row.push(format!("{:.2}", m.gflops));
+        }
+        t.row(row);
+        eprintln!("  density {:.0}%", density * 100.0);
+    }
+    t.emit("ablation_fill");
+}
+
+/// Reordering ablation (paper §Matrix permutation: "any improvement to
+/// the shape of the matrix will certainly improve the efficiency of
+/// our kernels by reducing the number of blocks"): shuffle a structured
+/// matrix, then recover with RCM / column packing and measure fill +
+/// GFlop/s.
+fn reorder_ablation() {
+    let m = suite::contact_runs(4_000, 3, 48, 0xAB1);
+    let mut rng = spc5::util::Rng::new(13);
+    let mut perm: Vec<u32> = (0..m.rows as u32).collect();
+    rng.shuffle(&mut perm);
+    let shuffle = reorder::Permutation { perm };
+    let shuffled = reorder::permute(&m, &shuffle, &shuffle);
+    let rcm = reorder::cuthill_mckee(&shuffled);
+    let restored = reorder::permute(&shuffled, &rcm, &rcm);
+    let cp = reorder::column_pack(&shuffled);
+    let packed = reorder::permute(
+        &shuffled,
+        &reorder::Permutation::identity(shuffled.rows),
+        &cp,
+    );
+
+    let mut t = Table::new(
+        "Ablation C: reordering vs b(2,8) fill and GFlop/s (contact 4k, shuffled)",
+        &["variant", "avg(2,8)", "gflops b(2,8)"],
+    );
+    for (name, csr) in [
+        ("original", &m),
+        ("shuffled", &shuffled),
+        ("rcm", &restored),
+        ("column-pack", &packed),
+    ] {
+        let avg = spc5::formats::stats::block_stats(csr, BlockSize::new(2, 8))
+            .avg_nnz_per_block;
+        let set = KernelSet::prepare(csr.clone(), &[KernelKind::Beta(2, 8)]);
+        let meas =
+            spc5::bench::measure_sequential(&set, name, KernelKind::Beta(2, 8));
+        t.row(vec![
+            name.to_string(),
+            format!("{avg:.2}"),
+            format!("{:.2}", meas.gflops),
+        ]);
+    }
+    t.emit("ablation_reorder");
+}
+
+/// f32 sixteen-lane kernels vs the f64 eight-lane kernels.
+fn f32_vs_f64() {
+    let csr = suite::contact_runs(6_000, 3, 48, 21);
+    let x64 = bench_vector(csr.cols, 4);
+    let x32: Vec<f32> = x64.iter().map(|&v| v as f32).collect();
+    let mut t = Table::new(
+        "Ablation D: f32 vexpandps (c=16) vs f64 vexpandpd (c=8)",
+        &["kernel", "GFlop/s", "bytes/nnz"],
+    );
+    for (name, bs64) in
+        [("f64 b(1,8)", BlockSize::new(1, 8)), ("f64 b(4,8)", BlockSize::new(4, 8))]
+    {
+        let bm = csr_to_block(&csr, bs64).unwrap();
+        let mut y = vec![0.0f64; csr.rows];
+        let s = mean_of_runs(RUNS, || {
+            let _ = avx512::spmv(&bm, &x64, &mut y, false);
+        });
+        t.row(vec![
+            name.into(),
+            format!("{:.2}", spmv_gflops(bm.nnz(), s)),
+            format!("{:.1}", bm.occupancy_bytes() as f64 / bm.nnz() as f64),
+        ]);
+    }
+    for (name, bs32) in [
+        ("f32 b(1,16)", BlockSize::new(1, 16)),
+        ("f32 b(4,16)", BlockSize::new(4, 16)),
+    ] {
+        let bm = csr_to_block32(&csr, bs32).unwrap();
+        let mut y = vec![0.0f32; csr.rows];
+        let s = mean_of_runs(RUNS, || avx512f32::spmv32(&bm, &x32, &mut y));
+        t.row(vec![
+            name.into(),
+            format!("{:.2}", spmv_gflops(bm.nnz(), s)),
+            format!("{:.1}", bm.occupancy_bytes() as f64 / bm.nnz() as f64),
+        ]);
+    }
+    t.emit("ablation_f32");
+}
+
+/// Multi-vector SpMM: effective GFlop/s per vector as k grows.
+fn spmm_ablation() {
+    let csr = suite::fem_blocked(20_000, 3, 8, 31);
+    let bm = csr_to_block(&csr, BlockSize::new(2, 8)).unwrap();
+    let mut t = Table::new(
+        "Ablation E: multi-vector SpMM b(2,8) (x reuse across k vectors)",
+        &["k", "total GFlop/s", "GFlop/s per vector"],
+    );
+    // k = 1 via the SpMV kernel.
+    let x1 = bench_vector(csr.cols, 6);
+    let mut y1 = vec![0.0f64; csr.rows];
+    let s1 = mean_of_runs(RUNS, || {
+        avx512::spmv(&bm, &x1, &mut y1, false);
+    });
+    let g1 = spmv_gflops(bm.nnz(), s1);
+    t.row(vec!["1 (spmv)".into(), format!("{g1:.2}"), format!("{g1:.2}")]);
+    // k = 8 via the SpMM kernel.
+    let x8 = bench_vector(csr.cols * 8, 6);
+    let mut y8 = vec![0.0f64; csr.rows * 8];
+    let s8 = mean_of_runs(RUNS, || {
+        spmm::spmm_k8(&bm, &x8, &mut y8);
+    });
+    let g8 = 8.0 * spmv_gflops(bm.nnz(), s8);
+    t.row(vec!["8 (spmm)".into(), format!("{g8:.2}"), format!("{:.2}", g8 / 8.0)]);
+    t.emit("ablation_spmm");
+}
+
+/// NUMA x-duplication (paper conclusion): copy cost vs local reads.
+fn xcopy_ablation() {
+    let csr = suite::fem_blocked(24_000, 3, 8, 41);
+    let bm = csr_to_block(&csr, BlockSize::new(2, 8)).unwrap();
+    let mut t = Table::new(
+        "Ablation F: parallel strategies at 4 threads (1-core host: copy \
+         costs visible, NUMA latency benefits are not)",
+        &["strategy", "GFlop/s"],
+    );
+    for (name, strategy) in [
+        ("shared", ParallelStrategy::Shared),
+        ("numa-split", ParallelStrategy::NumaSplit),
+        ("numa-split + x copy", ParallelStrategy::NumaSplitXCopy),
+    ] {
+        let p = ParallelSpmv::new(bm.clone(), 4, strategy, false);
+        let m = spc5::bench::measure_parallel(&p, "fem", KernelKind::Beta(2, 8));
+        t.row(vec![name.into(), format!("{:.2}", m.gflops)]);
+    }
+    t.emit("ablation_xcopy");
+}
+
+/// Record-based vs analytic-model kernel selection.
+fn predictor_ablation() {
+    use spc5::predictor::model::{calibrate, select_by_model};
+    let kinds = KernelKind::SPC5_KERNELS;
+    // Calibrate the model from one CSR measurement.
+    let cal = suite::by_name("bone010").unwrap();
+    let set = KernelSet::prepare(cal.csr.clone(), &[KernelKind::Csr]);
+    let csr_meas =
+        spc5::bench::measure_sequential(&set, "bone010", KernelKind::Csr);
+    let machine = calibrate(csr_meas.gflops);
+
+    let mut t = Table::new(
+        "Ablation G: analytic-model selection (no training records)",
+        &["matrix", "model pick", "measured best", "loss%"],
+    );
+    for name in ["nd6k", "ns3Da", "pwtk", "kron_g500-logn21", "Dense-8000"] {
+        let sm = suite::by_name(name).unwrap();
+        let (pick, _) = select_by_model(&sm.csr, &machine, &kinds);
+        let set = KernelSet::prepare(sm.csr.clone(), &kinds);
+        let mut best = (kinds[0], 0.0f64);
+        let mut pick_g = 0.0f64;
+        for k in kinds {
+            let m = spc5::bench::measure_sequential(&set, name, k);
+            if m.gflops > best.1 {
+                best = (k, m.gflops);
+            }
+            if k == pick {
+                pick_g = m.gflops;
+            }
+        }
+        t.row(vec![
+            name.into(),
+            pick.to_string(),
+            best.0.to_string(),
+            format!("{:.1}%", 100.0 * (best.1 - pick_g) / best.1),
+        ]);
+        eprintln!("  ablation G: {name}");
+    }
+    t.emit("ablation_model");
+}
+
+/// AVX-512 vexpand kernels vs the scalar Algorithm-1 on one matrix.
+fn simd_vs_scalar() {
+    let csr = suite::fem_blocked(30_000, 3, 8, 5);
+    let x = bench_vector(csr.cols, 9);
+    let mut t = Table::new(
+        "Ablation B: AVX-512 vexpand vs scalar Algorithm 1 (bone010-class)",
+        &["block size", "scalar GF/s", "avx512 GF/s", "speedup"],
+    );
+    for bs in BlockSize::PAPER_SIZES {
+        let bm = csr_to_block(&csr, bs).unwrap();
+        let mut y = vec![0.0; csr.rows];
+        let s_scalar = mean_of_runs(RUNS, || {
+            scalar::spmv_generic(&bm, &x, &mut y);
+        });
+        let g_scalar = spmv_gflops(bm.nnz(), s_scalar);
+        let (g_simd, speedup) = if spc5::util::avx512_available() {
+            let s_simd = mean_of_runs(RUNS, || {
+                avx512::spmv(&bm, &x, &mut y, false);
+            });
+            let g = spmv_gflops(bm.nnz(), s_simd);
+            (g, g / g_scalar)
+        } else {
+            (f64::NAN, f64::NAN)
+        };
+        t.row(vec![
+            bs.to_string(),
+            format!("{g_scalar:.2}"),
+            format!("{g_simd:.2}"),
+            format!("{speedup:.2}x"),
+        ]);
+    }
+    t.emit("ablation_simd");
+}

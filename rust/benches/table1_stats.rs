@@ -1,0 +1,48 @@
+//! Regenerates paper **Table 1**: Set-A matrices with dim, nnz,
+//! nnz/row, and `Avg(r,c)` + fill% for the six paper block sizes,
+//! printing the paper's transcribed Avg next to ours so the surrogate
+//! calibration is visible.
+
+use spc5::bench::paper_ref::paper_avg;
+use spc5::bench::Table;
+use spc5::formats::stats::paper_profile;
+use spc5::matrix::suite;
+
+fn main() {
+    run("Table 1 (Set-A): block statistics", suite::set_a(), "table1");
+}
+
+pub fn run(title: &str, ms: Vec<suite::SuiteMatrix>, slug: &str) {
+    let mut t = Table::new(
+        title,
+        &[
+            "name", "class", "dim", "nnz", "nnz/row", "b(1,8)", "b(2,4)",
+            "b(2,8)", "b(4,4)", "b(4,8)", "b(8,4)",
+        ],
+    );
+    for sm in spc5::bench::runner::maybe_quick(ms) {
+        let prof = paper_profile(&sm.csr);
+        let paper = paper_avg(sm.name);
+        let mut row = vec![
+            sm.name.to_string(),
+            sm.class.to_string(),
+            sm.csr.rows.to_string(),
+            sm.csr.nnz().to_string(),
+            format!("{:.1}", sm.csr.nnz_per_row()),
+        ];
+        for (i, st) in prof.iter().enumerate() {
+            let ours = format!(
+                "{:.1} ({:.0}%)",
+                st.avg_nnz_per_block,
+                100.0 * st.fill_fraction
+            );
+            let cell = match paper {
+                Some(p) => format!("{ours} [paper {:.1}]", p[i]),
+                None => ours,
+            };
+            row.push(cell);
+        }
+        t.row(row);
+    }
+    t.emit(slug);
+}

@@ -1,0 +1,12 @@
+//! Regenerates paper **Table 2**: Set-B matrices (the independent
+//! prediction-evaluation set) with the same statistics as Table 1.
+
+use spc5::matrix::suite;
+
+#[path = "table1_stats.rs"]
+#[allow(dead_code)]
+mod table1;
+
+fn main() {
+    table1::run("Table 2 (Set-B): block statistics", suite::set_b(), "table2");
+}

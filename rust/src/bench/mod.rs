@@ -1,0 +1,210 @@
+//! Benchmark harness shared by the `cargo bench` targets.
+//!
+//! The vendor set has no `criterion`, so this module implements the
+//! measurement protocol the paper itself uses: "The execution time is
+//! measured as an average of 16 consecutive runs without accessing the
+//! matrix before the first run", reported as GFlop/s = `2·nnz / T`.
+//! Output is a markdown/CSV table per paper table/figure, printed to
+//! stdout and optionally persisted for the predictor's record store.
+
+pub mod paper_ref;
+pub mod runner;
+
+use crate::kernels::{KernelKind, KernelSet};
+use crate::parallel::{ParallelSpmv, ParallelStrategy};
+use crate::predictor::{PerfRecord, RecordStore};
+use crate::util::timer::{mean_of_runs, spmv_gflops};
+use crate::util::Rng;
+
+/// Runs per measurement (the paper's protocol).
+pub const RUNS: usize = 16;
+
+/// One measured cell.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub matrix: String,
+    pub kernel: KernelKind,
+    pub threads: usize,
+    pub numa: bool,
+    pub gflops: f64,
+    pub seconds: f64,
+}
+
+/// Measures one kernel on a prepared [`KernelSet`] (sequential).
+pub fn measure_sequential(
+    set: &KernelSet,
+    matrix: &str,
+    kernel: KernelKind,
+) -> Measurement {
+    let nnz = set.csr.nnz();
+    let x = bench_vector(set.csr.cols, 0xBE7C);
+    let mut y = vec![0.0f64; set.csr.rows];
+    let seconds = mean_of_runs(RUNS, || {
+        set.spmv(kernel, &x, &mut y);
+    });
+    std::hint::black_box(&y);
+    Measurement {
+        matrix: matrix.to_string(),
+        kernel,
+        threads: 1,
+        numa: false,
+        gflops: spmv_gflops(nnz, seconds),
+        seconds,
+    }
+}
+
+/// Measures a β kernel on a pre-built parallel executor.
+pub fn measure_parallel(
+    p: &ParallelSpmv,
+    matrix: &str,
+    kernel: KernelKind,
+) -> Measurement {
+    let bm = p.matrix();
+    let nnz = bm.nnz();
+    let x = bench_vector(bm.cols, 0xBE7C);
+    let mut y = vec![0.0f64; bm.rows];
+    let seconds = mean_of_runs(RUNS, || {
+        p.spmv(&x, &mut y);
+    });
+    std::hint::black_box(&y);
+    Measurement {
+        matrix: matrix.to_string(),
+        kernel,
+        threads: p.n_threads(),
+        numa: p.strategy() == ParallelStrategy::NumaSplit,
+        gflops: spmv_gflops(nnz, seconds),
+        seconds,
+    }
+}
+
+/// The deterministic input vector used by every benchmark.
+pub fn bench_vector(len: usize, seed: u64) -> Vec<f64> {
+    let mut rng = Rng::new(seed);
+    (0..len).map(|_| rng.range_f64(-1.0, 1.0)).collect()
+}
+
+/// Converts measurements into predictor records (`avg` computed by the
+/// caller, since it depends on the kernel's block size).
+pub fn to_record(m: &Measurement, avg: f64) -> PerfRecord {
+    PerfRecord {
+        matrix: m.matrix.clone(),
+        kernel: m.kernel,
+        avg_nnz_per_block: avg,
+        threads: m.threads,
+        gflops: m.gflops,
+    }
+}
+
+/// Markdown table writer for the bench binaries.
+pub struct Table {
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len());
+        self.rows.push(cells);
+    }
+
+    /// Renders the table as github-style markdown.
+    pub fn to_markdown(&self) -> String {
+        let mut out = format!("\n## {}\n\n", self.title);
+        out.push_str(&format!("| {} |\n", self.header.join(" | ")));
+        out.push_str(&format!(
+            "|{}\n",
+            "---|".repeat(self.header.len())
+        ));
+        for r in &self.rows {
+            out.push_str(&format!("| {} |\n", r.join(" | ")));
+        }
+        out
+    }
+
+    /// Renders as CSV (for plotting scripts).
+    pub fn to_csv(&self) -> String {
+        let mut out = self.header.join(",");
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&r.join(","));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Prints markdown to stdout and, when `SPC5_BENCH_OUT` is set,
+    /// writes the CSV next to it for later analysis.
+    pub fn emit(&self, slug: &str) {
+        println!("{}", self.to_markdown());
+        if let Ok(dir) = std::env::var("SPC5_BENCH_OUT") {
+            let path = std::path::Path::new(&dir).join(format!("{slug}.csv"));
+            if let Err(e) = std::fs::write(&path, self.to_csv()) {
+                eprintln!("warning: could not write {}: {e}", path.display());
+            }
+        }
+    }
+}
+
+/// Persist + merge records into the store file used by `spc5 predict`
+/// and the prediction benches (default `records.json`, override with
+/// `SPC5_RECORDS`).
+pub fn records_path() -> std::path::PathBuf {
+    std::env::var("SPC5_RECORDS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| std::path::PathBuf::from("records.json"))
+}
+
+/// Appends records to the store file (creating it if missing).
+pub fn append_records(records: &[PerfRecord]) -> anyhow::Result<()> {
+    let path = records_path();
+    let mut store = if path.exists() {
+        RecordStore::load(&path)?
+    } else {
+        RecordStore::new()
+    };
+    store.records.extend(records.iter().cloned());
+    store.save(&path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::suite;
+
+    #[test]
+    fn measure_sequential_produces_positive_gflops() {
+        let csr = suite::poisson2d(24);
+        let set = KernelSet::prepare(csr, &[KernelKind::Csr, KernelKind::Beta(1, 8)]);
+        let m = measure_sequential(&set, "poisson", KernelKind::Beta(1, 8));
+        assert!(m.gflops > 0.0);
+        assert!(m.seconds > 0.0);
+        assert_eq!(m.threads, 1);
+    }
+
+    #[test]
+    fn table_renders() {
+        let mut t = Table::new("Fig X", &["matrix", "gflops"]);
+        t.row(vec!["m1".into(), "1.23".into()]);
+        let md = t.to_markdown();
+        assert!(md.contains("## Fig X"));
+        assert!(md.contains("| m1 | 1.23 |"));
+        let csv = t.to_csv();
+        assert!(csv.starts_with("matrix,gflops\n"));
+        assert!(csv.contains("m1,1.23"));
+    }
+
+    #[test]
+    fn bench_vector_deterministic() {
+        assert_eq!(bench_vector(16, 1), bench_vector(16, 1));
+        assert_ne!(bench_vector(16, 1), bench_vector(16, 2));
+    }
+}

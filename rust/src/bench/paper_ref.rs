@@ -1,0 +1,79 @@
+//! Reference values transcribed from the paper's tables, used by the
+//! bench binaries to print "paper vs ours" columns.
+//!
+//! Values are `Avg(r,c) = N_NNZ / N_blocks(r,c)` for the six block
+//! sizes in table order: β(1,8), β(2,4), β(2,8), β(4,4), β(4,8), β(8,4).
+
+/// Paper Table 1 (Set-A): `(name, [avg per size])`.
+pub const TABLE1_AVG: [(&str, [f64; 6]); 23] = [
+    ("atmosmodd", [1.4, 2.8, 2.8, 4.7, 5.6, 5.1]),
+    ("Ga19As19H42", [2.4, 3.7, 4.6, 6.6, 8.4, 7.7]),
+    ("mip1", [6.5, 7.1, 13.0, 14.0, 25.0, 24.0]),
+    ("rajat31", [1.4, 1.9, 1.9, 2.1, 2.3, 2.2]),
+    ("bone010", [4.6, 5.9, 9.0, 11.0, 17.0, 16.0]),
+    ("HV15R", [5.4, 5.7, 10.0, 9.7, 18.0, 15.0]),
+    ("mixtank_new", [2.5, 3.0, 3.9, 3.8, 5.5, 4.9]),
+    ("Si41Ge41H72", [2.6, 3.9, 5.0, 6.8, 9.0, 8.2]),
+    ("cage15", [1.2, 2.0, 2.1, 3.1, 3.6, 3.4]),
+    ("in-2004", [3.8, 4.4, 6.2, 6.7, 9.6, 9.6]),
+    ("nd6k", [6.5, 6.6, 12.0, 12.0, 23.0, 22.0]),
+    ("Si87H76", [1.8, 3.0, 3.4, 5.5, 6.5, 6.1]),
+    ("circuit5M", [2.0, 3.3, 3.7, 5.5, 6.7, 6.7]),
+    ("indochina-2004", [4.6, 5.1, 7.7, 8.3, 12.0, 13.0]),
+    ("ns3Da", [1.2, 1.2, 1.3, 1.4, 1.5, 1.5]),
+    ("CO", [1.5, 2.6, 2.9, 5.1, 5.7, 5.5]),
+    ("kron_g500-logn21", [1.0, 1.0, 1.0, 1.0, 1.0, 1.0]),
+    ("pdb1HYS", [6.2, 6.6, 12.0, 12.0, 20.0, 20.0]),
+    ("torso1", [6.5, 7.5, 13.0, 13.0, 25.0, 21.0]),
+    ("crankseg_2", [5.3, 6.0, 9.5, 9.7, 16.0, 15.0]),
+    ("ldoor", [7.0, 6.4, 13.0, 11.0, 21.0, 17.0]),
+    ("pwtk", [6.0, 6.7, 12.0, 13.0, 23.0, 21.0]),
+    ("Dense-8000", [8.0, 8.0, 16.0, 16.0, 32.0, 32.0]),
+];
+
+/// Paper Table 2 (Set-B).
+pub const TABLE2_AVG: [(&str, [f64; 6]); 11] = [
+    ("bundle_adj", [5.8, 6.8, 11.0, 12.0, 21.0, 19.0]),
+    ("Cube_Coup_dt0", [5.9, 8.0, 12.0, 16.0, 24.0, 20.0]),
+    ("dielFilterV2real", [2.6, 2.6, 3.6, 3.6, 5.1, 4.9]),
+    ("Emilia_923", [4.1, 5.0, 7.0, 7.5, 11.0, 11.0]),
+    ("FullChip", [2.0, 2.4, 2.9, 3.3, 4.2, 4.2]),
+    ("Hook_1498", [4.1, 5.1, 6.9, 7.7, 11.0, 11.0]),
+    ("RM07R", [4.9, 4.7, 8.3, 7.6, 13.0, 12.0]),
+    ("Serena", [4.1, 5.1, 7.0, 7.6, 11.0, 11.0]),
+    ("spal_004", [6.0, 4.0, 7.3, 4.3, 8.1, 4.4]),
+    ("TSOPF_RS_b2383_c1", [7.6, 7.8, 15.0, 15.0, 30.0, 29.0]),
+    ("wikipedia-20060925", [1.1, 1.1, 1.1, 1.1, 1.1, 1.1]),
+];
+
+/// Paper reference avg for one matrix, if transcribed.
+pub fn paper_avg(name: &str) -> Option<&'static [f64; 6]> {
+    TABLE1_AVG
+        .iter()
+        .chain(TABLE2_AVG.iter())
+        .find(|(n, _)| *n == name)
+        .map(|(_, v)| v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lookup_works() {
+        assert_eq!(paper_avg("nd6k").unwrap()[0], 6.5);
+        assert_eq!(paper_avg("wikipedia-20060925").unwrap()[5], 1.1);
+        assert!(paper_avg("unknown").is_none());
+    }
+
+    #[test]
+    fn tables_cover_suites() {
+        // Every suite surrogate has a transcribed paper row.
+        for sm in crate::matrix::suite::set_a() {
+            assert!(paper_avg(sm.name).is_some(), "{}", sm.name);
+        }
+        for sm in crate::matrix::suite::set_b() {
+            assert!(paper_avg(sm.name).is_some(), "{}", sm.name);
+        }
+    }
+}

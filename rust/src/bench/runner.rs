@@ -1,0 +1,188 @@
+//! Shared drivers for the per-figure bench binaries.
+//!
+//! Each `cargo bench` target regenerates one paper table/figure; the
+//! heavy lifting (suite iteration, measurement, record management)
+//! lives here so the binaries stay declarative.
+
+use super::{measure_parallel, measure_sequential, to_record, Measurement};
+use crate::formats::stats::block_stats;
+use crate::formats::{csr_to_block, BlockSize};
+use crate::kernels::{KernelKind, KernelSet};
+use crate::matrix::suite::SuiteMatrix;
+use crate::parallel::{ParallelSpmv, ParallelStrategy};
+use crate::predictor::{PerfRecord, RecordStore};
+
+/// Honors `SPC5_QUICK=1`: trims a matrix list to a fast subset so the
+/// full bench suite can be smoke-run in CI.
+pub fn maybe_quick(mut ms: Vec<SuiteMatrix>) -> Vec<SuiteMatrix> {
+    if std::env::var("SPC5_QUICK").ok().as_deref() == Some("1") {
+        ms.truncate(6);
+    }
+    ms
+}
+
+/// `Avg(r,c)` feature for a kernel on a matrix (β(1,8) for baselines).
+pub fn kernel_avg(k: KernelKind, csr: &crate::matrix::Csr) -> f64 {
+    let bs = k.block_size().unwrap_or(BlockSize::new(1, 8));
+    block_stats(csr, bs).avg_nnz_per_block
+}
+
+/// Measures all `kernels` sequentially on every matrix; returns the
+/// measurements plus predictor records.
+pub fn run_sequential(
+    matrices: &[SuiteMatrix],
+    kernels: &[KernelKind],
+) -> (Vec<Measurement>, Vec<PerfRecord>) {
+    let mut out = Vec::new();
+    let mut recs = Vec::new();
+    for sm in matrices {
+        let set = KernelSet::prepare(sm.csr.clone(), kernels);
+        for &k in kernels {
+            let m = measure_sequential(&set, sm.name, k);
+            recs.push(to_record(&m, kernel_avg(k, &sm.csr)));
+            out.push(m);
+        }
+        eprintln!("  measured {}", sm.name);
+    }
+    (out, recs)
+}
+
+/// Measures β kernels in parallel on every matrix at each thread count
+/// and NUMA mode.
+pub fn run_parallel(
+    matrices: &[SuiteMatrix],
+    kernels: &[KernelKind],
+    thread_counts: &[usize],
+    numa_modes: &[bool],
+) -> (Vec<Measurement>, Vec<PerfRecord>) {
+    let mut out = Vec::new();
+    let mut recs = Vec::new();
+    for sm in matrices {
+        for &k in kernels {
+            let Some(bs) = k.block_size() else { continue };
+            let bm = csr_to_block(&sm.csr, bs).expect("paper sizes valid");
+            let avg = bm.avg_nnz_per_block();
+            for &threads in thread_counts {
+                for &numa in numa_modes {
+                    let strategy = if numa {
+                        ParallelStrategy::NumaSplit
+                    } else {
+                        ParallelStrategy::Shared
+                    };
+                    let p = ParallelSpmv::new(
+                        bm.clone(),
+                        threads,
+                        strategy,
+                        matches!(k, KernelKind::BetaTest(..)),
+                    );
+                    let m = measure_parallel(&p, sm.name, k);
+                    // Records keep only the non-NUMA runs (one point per
+                    // (kernel, matrix, threads), like the paper's fits).
+                    if !numa {
+                        recs.push(to_record(&m, avg));
+                    }
+                    out.push(m);
+                }
+            }
+        }
+        eprintln!("  measured {}", sm.name);
+    }
+    (out, recs)
+}
+
+/// Loads `records.json` when it already holds records at the wanted
+/// thread counts; otherwise measures Set-A now and persists. Keeps the
+/// prediction benches standalone while letting fig3/fig4 prime the
+/// store.
+pub fn ensure_records(
+    matrices: &[SuiteMatrix],
+    kernels: &[KernelKind],
+    thread_counts: &[usize],
+) -> anyhow::Result<RecordStore> {
+    let path = super::records_path();
+    if path.exists() {
+        let store = RecordStore::load(&path)?;
+        let have_all = thread_counts.iter().all(|&t| {
+            kernels.iter().any(|&k| !store.for_kernel(k, t).is_empty())
+        });
+        if have_all {
+            eprintln!("using existing records from {}", path.display());
+            return Ok(store);
+        }
+    }
+    eprintln!("priming record store (this measures Set-A once)...");
+    let mut store = if path.exists() {
+        RecordStore::load(&path)?
+    } else {
+        RecordStore::new()
+    };
+    if thread_counts == [1] {
+        let (_, recs) = run_sequential(matrices, kernels);
+        store.records.extend(recs);
+    } else {
+        let seq_needed = thread_counts.contains(&1);
+        if seq_needed {
+            let (_, recs) = run_sequential(matrices, kernels);
+            store.records.extend(recs);
+        }
+        let par: Vec<usize> =
+            thread_counts.iter().copied().filter(|&t| t > 1).collect();
+        if !par.is_empty() {
+            let (_, recs) = run_parallel(matrices, kernels, &par, &[false]);
+            store.records.extend(recs);
+        }
+    }
+    store.save(&path)?;
+    Ok(store)
+}
+
+/// Best measurement per matrix among `filter`-selected kernels.
+pub fn best_by_matrix<'a>(
+    ms: &'a [Measurement],
+    filter: impl Fn(&Measurement) -> bool,
+) -> std::collections::BTreeMap<String, &'a Measurement> {
+    let mut best: std::collections::BTreeMap<String, &Measurement> =
+        std::collections::BTreeMap::new();
+    for m in ms.iter().filter(|m| filter(m)) {
+        best.entry(m.matrix.clone())
+            .and_modify(|b| {
+                if m.gflops > b.gflops {
+                    *b = m;
+                }
+            })
+            .or_insert(m);
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::suite;
+
+    #[test]
+    fn run_sequential_counts() {
+        let ms: Vec<SuiteMatrix> = suite::test_subset().into_iter().take(2).collect();
+        let kernels = [KernelKind::Csr, KernelKind::Beta(1, 8)];
+        let (out, recs) = run_sequential(&ms, &kernels);
+        assert_eq!(out.len(), 4);
+        assert_eq!(recs.len(), 4);
+        assert!(out.iter().all(|m| m.gflops > 0.0));
+    }
+
+    #[test]
+    fn best_by_matrix_picks_max() {
+        let mk = |matrix: &str, g: f64| Measurement {
+            matrix: matrix.into(),
+            kernel: KernelKind::Csr,
+            threads: 1,
+            numa: false,
+            gflops: g,
+            seconds: 1.0,
+        };
+        let ms = vec![mk("a", 1.0), mk("a", 3.0), mk("b", 2.0)];
+        let best = best_by_matrix(&ms, |_| true);
+        assert_eq!(best["a"].gflops, 3.0);
+        assert_eq!(best["b"].gflops, 2.0);
+    }
+}

@@ -1,0 +1,149 @@
+//! Conjugate-gradient solver on the native kernels — the paper's
+//! motivating workload ("iterative solvers based on Krylov subspaces,
+//! such as the popular CG method"), used by the CG example to compare
+//! the pure-Rust path against the AOT-compiled XLA path (which runs the
+//! same algorithm lowered from JAX — see python/compile/model.py).
+
+use super::engine::SpmvEngine;
+
+/// Outcome of a CG solve.
+#[derive(Clone, Debug)]
+pub struct CgReport {
+    pub iterations: usize,
+    /// Final squared residual norm ‖b − A·x‖².
+    pub residual_norm2: f64,
+    pub converged: bool,
+    /// Total SpMV count (1 initial + 1 per iteration).
+    pub spmv_count: usize,
+}
+
+/// Solves the SPD system `A·x = b` with (unpreconditioned) CG through
+/// the engine's SpMV. `x` holds the initial guess on entry, the
+/// solution on exit. Stops at `max_iters` or when the squared residual
+/// drops below `tol2`.
+pub fn cg_solve(
+    engine: &SpmvEngine,
+    b: &[f64],
+    x: &mut [f64],
+    max_iters: usize,
+    tol2: f64,
+) -> CgReport {
+    let n = b.len();
+    assert_eq!(x.len(), n);
+    let mut spmv_count = 0usize;
+
+    // r = b − A·x
+    let mut r = vec![0.0f64; n];
+    engine.spmv_into(x, &mut r);
+    spmv_count += 1;
+    for i in 0..n {
+        r[i] = b[i] - r[i];
+    }
+    let mut p = r.clone();
+    let mut rs: f64 = r.iter().map(|v| v * v).sum();
+    let mut ap = vec![0.0f64; n];
+
+    let mut iterations = 0usize;
+    while iterations < max_iters && rs > tol2 {
+        engine.spmv_into(&p, &mut ap);
+        spmv_count += 1;
+        let denom: f64 = p.iter().zip(&ap).map(|(a, b)| a * b).sum();
+        if denom == 0.0 {
+            break;
+        }
+        let alpha = rs / denom;
+        for i in 0..n {
+            x[i] += alpha * p[i];
+            r[i] -= alpha * ap[i];
+        }
+        let rs_new: f64 = r.iter().map(|v| v * v).sum();
+        let beta = rs_new / rs;
+        for i in 0..n {
+            p[i] = r[i] + beta * p[i];
+        }
+        rs = rs_new;
+        iterations += 1;
+    }
+
+    CgReport {
+        iterations,
+        residual_norm2: rs,
+        converged: rs <= tol2,
+        spmv_count,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::engine::EngineConfig;
+    use crate::kernels::KernelKind;
+    use crate::matrix::suite;
+    use crate::util::Rng;
+
+    fn solve_poisson(n: usize, kernel: KernelKind, threads: usize) -> (Vec<f64>, CgReport, crate::matrix::Csr) {
+        let csr = suite::poisson2d(n);
+        let cfg = EngineConfig {
+            threads,
+            kernel: Some(kernel),
+            ..Default::default()
+        };
+        let engine = SpmvEngine::new(csr.clone(), &cfg, None).unwrap();
+        let mut rng = Rng::new(33);
+        let b: Vec<f64> = (0..csr.rows).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+        let mut x = vec![0.0; csr.rows];
+        let report = cg_solve(&engine, &b, &mut x, 2000, 1e-20);
+        // Check A·x ≈ b.
+        let mut ax = vec![0.0; csr.rows];
+        csr.spmv_ref(&x, &mut ax);
+        for i in 0..csr.rows {
+            assert!((ax[i] - b[i]).abs() < 1e-7, "row {i}");
+        }
+        (x, report, csr)
+    }
+
+    #[test]
+    fn converges_on_poisson_seq() {
+        let (_, report, _) = solve_poisson(12, KernelKind::Beta(1, 8), 1);
+        assert!(report.converged, "{report:?}");
+        assert!(report.iterations < 600);
+        assert_eq!(report.spmv_count, report.iterations + 1);
+    }
+
+    #[test]
+    fn converges_on_poisson_parallel() {
+        let (_, report, _) = solve_poisson(12, KernelKind::Beta(4, 4), 4);
+        assert!(report.converged, "{report:?}");
+    }
+
+    #[test]
+    fn same_solution_across_kernels() {
+        let (x1, _, _) = solve_poisson(10, KernelKind::Beta(1, 8), 1);
+        let (x2, _, _) = solve_poisson(10, KernelKind::Beta(8, 4), 1);
+        crate::testkit::assert_close(&x2, &x1, 1e-6, "kernel choice");
+    }
+
+    #[test]
+    fn zero_rhs_converges_immediately() {
+        let csr = suite::poisson2d(6);
+        let engine =
+            SpmvEngine::new(csr.clone(), &EngineConfig::default(), None).unwrap();
+        let b = vec![0.0; csr.rows];
+        let mut x = vec![0.0; csr.rows];
+        let report = cg_solve(&engine, &b, &mut x, 100, 1e-20);
+        assert_eq!(report.iterations, 0);
+        assert!(report.converged);
+    }
+
+    #[test]
+    fn respects_max_iters() {
+        let csr = suite::poisson2d(16);
+        let engine =
+            SpmvEngine::new(csr.clone(), &EngineConfig::default(), None).unwrap();
+        let b = vec![1.0; csr.rows];
+        let mut x = vec![0.0; csr.rows];
+        let report = cg_solve(&engine, &b, &mut x, 3, 1e-30);
+        assert_eq!(report.iterations, 3);
+        assert!(!report.converged);
+    }
+}

@@ -1,0 +1,242 @@
+//! `SpmvEngine` — the user-facing facade tying the library together.
+//!
+//! Given a CSR matrix, the engine:
+//! 1. computes the cheap `Avg(r,c)` profile (no conversion),
+//! 2. consults the record store to select the most promising kernel
+//!    (paper §Performance prediction) — or takes an explicit override,
+//! 3. converts once into the selected `β(r,c)` storage,
+//! 4. serves `spmv` calls sequentially or through the parallel runtime.
+
+use crate::formats::stats::paper_profile;
+use crate::formats::{csr_to_block, BlockMatrix};
+use crate::kernels::{spmv_block, KernelKind};
+use crate::matrix::Csr;
+use crate::parallel::{ParallelSpmv, ParallelStrategy};
+use crate::predictor::{select_parallel, select_sequential, RecordStore};
+
+/// Engine construction options.
+#[derive(Clone, Debug)]
+pub struct EngineConfig {
+    /// Worker threads (1 = sequential path).
+    pub threads: usize,
+    /// NUMA-style array splitting for the parallel path.
+    pub numa_split: bool,
+    /// Kernel override; `None` lets the predictor choose.
+    pub kernel: Option<KernelKind>,
+    /// Candidate kernels for prediction.
+    pub candidates: Vec<KernelKind>,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            threads: 1,
+            numa_split: false,
+            kernel: None,
+            candidates: KernelKind::SPC5_KERNELS.to_vec(),
+        }
+    }
+}
+
+/// A matrix bound to its chosen kernel and storage, ready to serve.
+pub struct SpmvEngine {
+    csr: Csr,
+    kernel: KernelKind,
+    predicted_gflops: Option<f64>,
+    block: Option<BlockMatrix>,
+    parallel: Option<ParallelSpmv>,
+    threads: usize,
+}
+
+impl SpmvEngine {
+    /// Builds the engine; consults `records` when no kernel override is
+    /// given (falls back to β(1,8) — the cheapest conversion, as the
+    /// paper recommends — when there are no records to predict from).
+    pub fn new(
+        csr: Csr,
+        cfg: &EngineConfig,
+        records: Option<&RecordStore>,
+    ) -> anyhow::Result<SpmvEngine> {
+        let (kernel, predicted) = match cfg.kernel {
+            Some(k) => (k, None),
+            None => {
+                let sel = records.and_then(|store| {
+                    if cfg.threads > 1 {
+                        select_parallel(&csr, store, &cfg.candidates, cfg.threads)
+                    } else {
+                        select_sequential(&csr, store, &cfg.candidates)
+                    }
+                });
+                match sel {
+                    Some(s) => (s.kernel, Some(s.predicted_gflops)),
+                    None => (KernelKind::Beta(1, 8), None),
+                }
+            }
+        };
+
+        let bs = kernel
+            .block_size()
+            .ok_or_else(|| anyhow::anyhow!("engine serves β kernels; got {kernel}"))?;
+        let block = csr_to_block(&csr, bs)?;
+        let test = matches!(kernel, KernelKind::BetaTest(..));
+
+        let (block, parallel) = if cfg.threads > 1 {
+            let strategy = if cfg.numa_split {
+                ParallelStrategy::NumaSplit
+            } else {
+                ParallelStrategy::Shared
+            };
+            (None, Some(ParallelSpmv::new(block, cfg.threads, strategy, test)))
+        } else {
+            (Some(block), None)
+        };
+
+        Ok(SpmvEngine {
+            csr,
+            kernel,
+            predicted_gflops: predicted,
+            block,
+            parallel,
+            threads: cfg.threads,
+        })
+    }
+
+    /// The kernel serving this matrix.
+    pub fn kernel(&self) -> KernelKind {
+        self.kernel
+    }
+
+    /// Predicted GFlop/s, when the predictor made the choice.
+    pub fn predicted_gflops(&self) -> Option<f64> {
+        self.predicted_gflops
+    }
+
+    /// The bound matrix.
+    pub fn csr(&self) -> &Csr {
+        &self.csr
+    }
+
+    /// Worker threads.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// `y += A·x` through the chosen kernel and runtime.
+    pub fn spmv(&self, x: &[f64], y: &mut [f64]) {
+        match (&self.parallel, &self.block) {
+            (Some(p), _) => p.spmv(x, y),
+            (None, Some(bm)) => spmv_block(
+                bm,
+                x,
+                y,
+                matches!(self.kernel, KernelKind::BetaTest(..)),
+            ),
+            _ => unreachable!("engine always holds one storage"),
+        }
+    }
+
+    /// `y = A·x` (zeroing first).
+    pub fn spmv_into(&self, x: &[f64], y: &mut [f64]) {
+        y.iter_mut().for_each(|v| *v = 0.0);
+        self.spmv(x, y);
+    }
+
+    /// The Table-1-style stats row for the bound matrix.
+    pub fn profile(&self) -> Vec<crate::formats::BlockStats> {
+        paper_profile(&self.csr)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::suite;
+    use crate::predictor::PerfRecord;
+
+    #[test]
+    fn explicit_kernel_used() {
+        let csr = suite::poisson2d(16);
+        let cfg = EngineConfig {
+            kernel: Some(KernelKind::Beta(4, 4)),
+            ..Default::default()
+        };
+        let e = SpmvEngine::new(csr, &cfg, None).unwrap();
+        assert_eq!(e.kernel(), KernelKind::Beta(4, 4));
+    }
+
+    #[test]
+    fn defaults_to_1x8_without_records() {
+        let csr = suite::poisson2d(8);
+        let e = SpmvEngine::new(csr, &EngineConfig::default(), None).unwrap();
+        assert_eq!(e.kernel(), KernelKind::Beta(1, 8));
+        assert!(e.predicted_gflops().is_none());
+    }
+
+    #[test]
+    fn predictor_drives_selection() {
+        let csr = suite::dense(64, 3);
+        let mut store = RecordStore::new();
+        // Plant records that make β(4,8) the clear winner at high fill.
+        for i in 0..12 {
+            let avg = 1.0 + i as f64 * 3.0;
+            store.push(PerfRecord {
+                matrix: format!("m{i}"),
+                kernel: KernelKind::Beta(4, 8),
+                avg_nnz_per_block: avg,
+                threads: 1,
+                gflops: 0.5 + 0.1 * avg,
+            });
+            store.push(PerfRecord {
+                matrix: format!("m{i}"),
+                kernel: KernelKind::Beta(1, 8),
+                avg_nnz_per_block: (1.0 + i as f64 * 0.6).min(8.0),
+                threads: 1,
+                gflops: 1.0,
+            });
+        }
+        let cfg = EngineConfig {
+            candidates: vec![KernelKind::Beta(1, 8), KernelKind::Beta(4, 8)],
+            ..Default::default()
+        };
+        let e = SpmvEngine::new(csr, &cfg, Some(&store)).unwrap();
+        assert_eq!(e.kernel(), KernelKind::Beta(4, 8));
+        assert!(e.predicted_gflops().unwrap() > 1.0);
+    }
+
+    #[test]
+    fn rejects_non_beta_kernel() {
+        let csr = suite::poisson2d(4);
+        let cfg = EngineConfig {
+            kernel: Some(KernelKind::Csr),
+            ..Default::default()
+        };
+        assert!(SpmvEngine::new(csr, &cfg, None).is_err());
+    }
+
+    #[test]
+    fn engine_spmv_matches_reference_seq_and_par() {
+        let csr = suite::fem_blocked(300, 3, 5, 17);
+        let x: Vec<f64> = (0..csr.cols).map(|i| (i % 7) as f64 - 3.0).collect();
+        let mut want = vec![0.0; csr.rows];
+        csr.spmv_ref(&x, &mut want);
+        for threads in [1usize, 4] {
+            for numa in [false, true] {
+                let cfg = EngineConfig {
+                    threads,
+                    numa_split: numa,
+                    kernel: Some(KernelKind::Beta(2, 8)),
+                    ..Default::default()
+                };
+                let e = SpmvEngine::new(csr.clone(), &cfg, None).unwrap();
+                let mut y = vec![0.0; csr.rows];
+                e.spmv_into(&x, &mut y);
+                crate::testkit::assert_close(
+                    &y,
+                    &want,
+                    1e-9,
+                    &format!("t={threads} numa={numa}"),
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,13 @@
+//! L3 coordination: the [`SpmvEngine`] facade (stats → predict →
+//! convert → dispatch), the native CG solver, and the request-loop
+//! service used by the `spmv_server` example.
+
+pub mod cg;
+pub mod engine;
+pub mod service;
+pub mod solvers;
+
+pub use cg::{cg_solve, CgReport};
+pub use engine::{EngineConfig, SpmvEngine};
+pub use service::{Request, Response, SpmvService};
+pub use solvers::{bicgstab, pcg_jacobi};

@@ -1,0 +1,151 @@
+//! Request-loop service — a thin serving layer over [`SpmvEngine`]
+//! demonstrating the library in a long-running deployment (the
+//! `spmv_server` example): requests arrive on a channel, a worker pool
+//! answers them, per-request latency is recorded.
+//!
+//! The matrix and kernel are fixed at service construction (the
+//! iterative-solver deployment); each request carries its own `x`.
+
+use super::engine::SpmvEngine;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::sync::Arc;
+
+/// One SpMV request.
+pub struct Request {
+    pub id: u64,
+    pub x: Vec<f64>,
+}
+
+/// The answer to a [`Request`].
+pub struct Response {
+    pub id: u64,
+    pub y: Vec<f64>,
+    /// Service-side latency in seconds (queue + compute).
+    pub latency_s: f64,
+}
+
+/// A running service instance.
+pub struct SpmvService {
+    tx: Option<mpsc::Sender<(Request, std::time::Instant)>>,
+    rx_out: mpsc::Receiver<Response>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    served: Arc<AtomicUsize>,
+}
+
+impl SpmvService {
+    /// Spawns `workers` threads sharing the engine.
+    pub fn start(engine: SpmvEngine, workers: usize) -> SpmvService {
+        assert!(workers > 0);
+        let engine = Arc::new(engine);
+        let (tx, rx) = mpsc::channel::<(Request, std::time::Instant)>();
+        let rx = Arc::new(std::sync::Mutex::new(rx));
+        let (tx_out, rx_out) = mpsc::channel::<Response>();
+        let served = Arc::new(AtomicUsize::new(0));
+
+        let mut handles = Vec::with_capacity(workers);
+        for _ in 0..workers {
+            let rx = Arc::clone(&rx);
+            let tx_out = tx_out.clone();
+            let engine = Arc::clone(&engine);
+            let served = Arc::clone(&served);
+            handles.push(std::thread::spawn(move || loop {
+                let msg = { rx.lock().unwrap().recv() };
+                let Ok((req, enqueued)) = msg else {
+                    break; // channel closed → shut down
+                };
+                let rows = engine.csr().rows;
+                let mut y = vec![0.0f64; rows];
+                engine.spmv_into(&req.x, &mut y);
+                served.fetch_add(1, Ordering::Relaxed);
+                let _ = tx_out.send(Response {
+                    id: req.id,
+                    y,
+                    latency_s: enqueued.elapsed().as_secs_f64(),
+                });
+            }));
+        }
+        SpmvService { tx: Some(tx), rx_out, workers: handles, served }
+    }
+
+    /// Enqueues a request.
+    pub fn submit(&self, req: Request) {
+        self.tx
+            .as_ref()
+            .expect("service running")
+            .send((req, std::time::Instant::now()))
+            .expect("workers alive");
+    }
+
+    /// Blocks for the next response.
+    pub fn recv(&self) -> Option<Response> {
+        self.rx_out.recv().ok()
+    }
+
+    /// Requests served so far.
+    pub fn served(&self) -> usize {
+        self.served.load(Ordering::Relaxed)
+    }
+
+    /// Graceful shutdown: waits for queued work, joins workers.
+    pub fn shutdown(mut self) -> usize {
+        drop(self.tx.take());
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+        self.served()
+    }
+}
+
+impl Drop for SpmvService {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::engine::EngineConfig;
+    use crate::matrix::suite;
+
+    #[test]
+    fn serves_correct_results() {
+        let csr = suite::poisson2d(12);
+        let engine =
+            SpmvEngine::new(csr.clone(), &EngineConfig::default(), None).unwrap();
+        let service = SpmvService::start(engine, 3);
+
+        let n_req = 20usize;
+        for id in 0..n_req as u64 {
+            let x: Vec<f64> =
+                (0..csr.cols).map(|i| (i as u64 + id) as f64 * 0.01).collect();
+            service.submit(Request { id, x });
+        }
+        let mut got = 0usize;
+        while got < n_req {
+            let resp = service.recv().expect("response");
+            let x: Vec<f64> = (0..csr.cols)
+                .map(|i| (i as u64 + resp.id) as f64 * 0.01)
+                .collect();
+            let mut want = vec![0.0; csr.rows];
+            csr.spmv_ref(&x, &mut want);
+            crate::testkit::assert_close(&resp.y, &want, 1e-9, "service");
+            assert!(resp.latency_s >= 0.0);
+            got += 1;
+        }
+        assert_eq!(service.shutdown(), n_req);
+    }
+
+    #[test]
+    fn shutdown_without_requests() {
+        let csr = suite::poisson2d(4);
+        let engine =
+            SpmvEngine::new(csr, &EngineConfig::default(), None).unwrap();
+        let service = SpmvService::start(engine, 2);
+        assert_eq!(service.shutdown(), 0);
+    }
+}

@@ -1,0 +1,312 @@
+//! The `β(r,c)` block matrix container (paper Fig. 2).
+
+use super::{BlockSize, FormatError};
+
+/// Bytes used for the column index inside an interleaved block header.
+pub const HEADER_COLIDX_BYTES: usize = 4;
+
+/// A sparse matrix in the `β(r,c)` format.
+///
+/// Four arrays, exactly as the paper describes:
+/// - `values`    — the nonzeros, block order, row-major inside a block,
+///   **no zero padding**;
+/// - `block_colidx` — leftmost column of each block;
+/// - `block_rowptr` — CSR-style prefix: blocks of row interval `i` are
+///   `block_rowptr[i]..block_rowptr[i+1]` (one interval = `r` rows);
+/// - `block_masks`  — `r` bytes per block, byte `i` holding the c-bit
+///   mask of block row `i` (bit `k` set ⇔ value at column `col0 + k`).
+///
+/// Additionally [`BlockMatrix::headers`] provides the interleaved
+/// `colidx(4B) | masks(r B)` stream that the paper's assembly kernels
+/// walk with a single pointer; the AVX-512 kernels in
+/// [`crate::kernels::avx512`] consume that layout.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BlockMatrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub bs: BlockSize,
+    pub values: Vec<f64>,
+    pub block_colidx: Vec<u32>,
+    pub block_rowptr: Vec<u32>,
+    pub block_masks: Vec<u8>,
+    /// Interleaved per-block header stream: for each block, 4 bytes of
+    /// little-endian `colidx` followed by `r` mask bytes.
+    pub headers: Vec<u8>,
+}
+
+impl BlockMatrix {
+    /// Number of row intervals (`ceil(rows / r)`).
+    #[inline]
+    pub fn intervals(&self) -> usize {
+        crate::util::ceil_div(self.rows, self.bs.r)
+    }
+
+    /// Number of blocks.
+    #[inline]
+    pub fn n_blocks(&self) -> usize {
+        self.block_colidx.len()
+    }
+
+    /// Stored nonzeros.
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Bytes per interleaved header entry.
+    #[inline]
+    pub fn header_stride(&self) -> usize {
+        HEADER_COLIDX_BYTES + self.bs.r
+    }
+
+    /// Average nonzeros per block — the paper's `Avg(r,c)` metric that
+    /// drives both the occupancy model and the kernel predictor.
+    pub fn avg_nnz_per_block(&self) -> f64 {
+        if self.n_blocks() == 0 {
+            0.0
+        } else {
+            self.nnz() as f64 / self.n_blocks() as f64
+        }
+    }
+
+    /// Block fill fraction in `[0, 1]` (Table 1 parenthesized column).
+    pub fn fill_fraction(&self) -> f64 {
+        if self.n_blocks() == 0 {
+            0.0
+        } else {
+            self.avg_nnz_per_block() / self.bs.bits() as f64
+        }
+    }
+
+    /// Validates every structural invariant of the format. Used by
+    /// tests and by debug assertions in the conversion path.
+    pub fn validate(&self) -> Result<(), FormatError> {
+        self.bs.validate()?;
+        let nb = self.n_blocks();
+        let intervals = self.intervals();
+        let fail = |msg: String| Err(FormatError::Inconsistent(msg));
+
+        if self.block_rowptr.len() != intervals + 1 {
+            return fail(format!(
+                "block_rowptr length {} != intervals+1 ({})",
+                self.block_rowptr.len(),
+                intervals + 1
+            ));
+        }
+        if self.block_rowptr[0] != 0
+            || self.block_rowptr[intervals] as usize != nb
+        {
+            return fail("block_rowptr does not span [0, n_blocks]".into());
+        }
+        if self.block_masks.len() != nb * self.bs.r {
+            return fail(format!(
+                "block_masks length {} != n_blocks*r ({})",
+                self.block_masks.len(),
+                nb * self.bs.r
+            ));
+        }
+        if self.headers.len() != nb * self.header_stride() {
+            return fail("headers length mismatch".into());
+        }
+
+        // Masks: bits beyond c must be clear; popcounts must sum to nnz;
+        // every block must be non-empty.
+        let lane_mask: u8 = if self.bs.c == 8 {
+            0xFF
+        } else {
+            (1u8 << self.bs.c) - 1
+        };
+        let mut pop_total = 0usize;
+        for b in 0..nb {
+            let mut block_pop = 0u32;
+            for i in 0..self.bs.r {
+                let m = self.block_masks[b * self.bs.r + i];
+                if m & !lane_mask != 0 {
+                    return fail(format!("mask bits beyond c in block {b}"));
+                }
+                block_pop += m.count_ones();
+            }
+            if block_pop == 0 {
+                return fail(format!("empty block {b}"));
+            }
+            pop_total += block_pop as usize;
+        }
+        if pop_total != self.nnz() {
+            return fail(format!(
+                "mask popcount sum {pop_total} != nnz {}",
+                self.nnz()
+            ));
+        }
+
+        // Per interval: blocks must be in strictly ascending, non-overlapping
+        // column order and inside the matrix.
+        for it in 0..intervals {
+            let (a, b) =
+                (self.block_rowptr[it] as usize, self.block_rowptr[it + 1] as usize);
+            if b < a {
+                return fail(format!("block_rowptr not monotone at {it}"));
+            }
+            let mut prev_end: i64 = -1;
+            for k in a..b {
+                let col = self.block_colidx[k] as i64;
+                if col <= prev_end {
+                    return fail(format!(
+                        "blocks overlap or out of order in interval {it}"
+                    ));
+                }
+                if col as usize + 1 > self.cols {
+                    return fail(format!("block col out of range in {it}"));
+                }
+                prev_end = col + self.bs.c as i64 - 1;
+            }
+        }
+
+        // Headers must mirror (colidx, masks).
+        let stride = self.header_stride();
+        for b in 0..nb {
+            let h = &self.headers[b * stride..(b + 1) * stride];
+            let col = u32::from_le_bytes([h[0], h[1], h[2], h[3]]);
+            if col != self.block_colidx[b] {
+                return fail(format!("header colidx mismatch at block {b}"));
+            }
+            for i in 0..self.bs.r {
+                if h[4 + i] != self.block_masks[b * self.bs.r + i] {
+                    return fail(format!("header mask mismatch at block {b}"));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Rebuilds the interleaved header stream from `block_colidx` +
+    /// `block_masks`.
+    pub fn rebuild_headers(&mut self) {
+        let stride = self.header_stride();
+        let nb = self.n_blocks();
+        let mut headers = Vec::with_capacity(nb * stride);
+        for b in 0..nb {
+            headers.extend_from_slice(&self.block_colidx[b].to_le_bytes());
+            headers.extend_from_slice(
+                &self.block_masks[b * self.bs.r..(b + 1) * self.bs.r],
+            );
+        }
+        self.headers = headers;
+    }
+
+    /// Total bytes of the four storage arrays (measured occupancy; the
+    /// analytical model is in [`super::occupancy`]). The interleaved
+    /// header stream duplicates colidx+masks, so it is *not* counted —
+    /// a deployment keeps either the split arrays or the headers.
+    pub fn occupancy_bytes(&self) -> usize {
+        self.values.len() * 8
+            + self.block_colidx.len() * 4
+            + self.block_rowptr.len() * 4
+            + self.block_masks.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::csr_to_block;
+    use super::*;
+    use crate::matrix::Csr;
+
+    /// The paper's Fig. 1 matrix.
+    fn fig1() -> Csr {
+        let rowptr = vec![0, 4, 7, 10, 12, 14, 14, 15, 18];
+        let colidx = vec![0, 1, 4, 6, 1, 2, 3, 2, 4, 6, 3, 4, 5, 6, 5, 0, 4, 7];
+        let values: Vec<f64> = (1..=18).map(|v| v as f64).collect();
+        Csr::from_raw(8, 8, rowptr, colidx, values).unwrap()
+    }
+
+    #[test]
+    fn fig2a_beta_1_4() {
+        // Paper Fig. 2A: β(1,4) of the Fig. 1 matrix.
+        let b = csr_to_block(&fig1(), BlockSize::new(1, 4)).unwrap();
+        b.validate().unwrap();
+        // Row 0: cols {0,1,4,6} → blocks at 0 (mask 0011) and 4 (mask 0101).
+        assert_eq!(b.block_rowptr[0], 0);
+        assert_eq!(b.block_colidx[0], 0);
+        assert_eq!(b.block_masks[0], 0b0011);
+        assert_eq!(b.block_colidx[1], 4);
+        assert_eq!(b.block_masks[1], 0b0101);
+        // Values unchanged vs CSR (r = 1).
+        assert_eq!(b.values, fig1().values);
+    }
+
+    #[test]
+    fn fig2b_beta_2_2() {
+        // Paper Fig. 2B: β(2,2).
+        let b = csr_to_block(&fig1(), BlockSize::new(2, 2)).unwrap();
+        b.validate().unwrap();
+        // Interval 0 = rows 0,1: cols row0={0,1,4,6}, row1={1,2,3}.
+        // Greedy cover: block@0 (r0:{0,1}), block@2 (r1:{2,3}... wait r0
+        // has nothing in [2,4), r1 has {2,3}), block@4 (r0:{4}), block@6
+        // (r0:{6}); plus r1 col1 is inside block@0.
+        assert_eq!(b.block_colidx[0], 0);
+        // mask byte per block row: row0 of block@0 = {0,1} → 0b11,
+        // row1 = {1} → 0b10.
+        assert_eq!(b.block_masks[0], 0b11);
+        assert_eq!(b.block_masks[1], 0b10);
+        assert_eq!(b.nnz(), 18);
+    }
+
+    #[test]
+    fn headers_mirror_arrays() {
+        let b = csr_to_block(&fig1(), BlockSize::new(2, 4)).unwrap();
+        let stride = b.header_stride();
+        assert_eq!(stride, 6);
+        for blk in 0..b.n_blocks() {
+            let h = &b.headers[blk * stride..(blk + 1) * stride];
+            assert_eq!(
+                u32::from_le_bytes([h[0], h[1], h[2], h[3]]),
+                b.block_colidx[blk]
+            );
+        }
+    }
+
+    #[test]
+    fn validate_catches_corruption() {
+        let good = csr_to_block(&fig1(), BlockSize::new(1, 8)).unwrap();
+
+        let mut bad = good.clone();
+        bad.block_masks[0] = 0; // empty block
+        assert!(bad.validate().is_err());
+
+        let mut bad = good.clone();
+        bad.values.pop(); // popcount sum != nnz
+        assert!(bad.validate().is_err());
+
+        let mut bad = good.clone();
+        bad.block_rowptr[1] = 100;
+        assert!(bad.validate().is_err());
+
+        let mut bad = good.clone();
+        bad.headers[0] ^= 0xFF; // header desync
+        assert!(bad.validate().is_err());
+
+        // Out-of-order blocks *within one interval*: β(1,4) gives row 0
+        // two blocks (cols 0 and 4) — swapping them must be rejected.
+        let mut bad = csr_to_block(&fig1(), BlockSize::new(1, 4)).unwrap();
+        assert!(bad.block_rowptr[1] >= 2, "row 0 should have 2 blocks");
+        bad.block_colidx.swap(0, 1);
+        bad.rebuild_headers();
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn mask_bits_beyond_c_detected() {
+        let mut b = csr_to_block(&fig1(), BlockSize::new(1, 4)).unwrap();
+        b.block_masks[0] |= 0b1_0000; // bit 4 invalid for c=4
+        b.rebuild_headers();
+        assert!(b.validate().is_err());
+    }
+
+    #[test]
+    fn fill_and_avg() {
+        let b = csr_to_block(&fig1(), BlockSize::new(1, 8)).unwrap();
+        let avg = b.avg_nnz_per_block();
+        assert!(avg > 1.0 && avg <= 8.0);
+        assert!((b.fill_fraction() - avg / 8.0).abs() < 1e-12);
+    }
+}

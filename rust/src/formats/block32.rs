@@ -1,0 +1,262 @@
+//! Single-precision `β32(r,c)` format — the 16-lane variant.
+//!
+//! The paper notes AVX-512 holds "16 single precision or eight double
+//! precision floating point values"; all its kernels are double. This
+//! module completes the picture: blocks up to **16 columns wide** with
+//! one `u16` mask per block row, and `vexpandps` kernels
+//! ([`crate::kernels::avx512f32`]) that inflate 16 packed floats at a
+//! time. Everything else (row alignment, greedy anchor cover, no value
+//! padding) matches the f64 format.
+
+use super::{BlockSize, FormatError};
+use crate::matrix::Csr;
+
+/// Bytes of colidx inside an interleaved f32 block header.
+pub const HEADER32_COLIDX_BYTES: usize = 4;
+
+/// A sparse matrix in `β32(r,c)` (single precision, c ≤ 16).
+#[derive(Clone, Debug, PartialEq)]
+pub struct BlockMatrix32 {
+    pub rows: usize,
+    pub cols: usize,
+    pub bs: BlockSize,
+    pub values: Vec<f32>,
+    pub block_colidx: Vec<u32>,
+    pub block_rowptr: Vec<u32>,
+    /// One 16-bit mask per block row.
+    pub block_masks: Vec<u16>,
+    /// Interleaved stream: `colidx(4B LE) | masks(2·r B LE)` per block.
+    pub headers: Vec<u8>,
+}
+
+impl BlockMatrix32 {
+    #[inline]
+    pub fn intervals(&self) -> usize {
+        crate::util::ceil_div(self.rows, self.bs.r)
+    }
+
+    #[inline]
+    pub fn n_blocks(&self) -> usize {
+        self.block_colidx.len()
+    }
+
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    #[inline]
+    pub fn header_stride(&self) -> usize {
+        HEADER32_COLIDX_BYTES + 2 * self.bs.r
+    }
+
+    /// `Avg(r,c)` (same metric as the f64 format).
+    pub fn avg_nnz_per_block(&self) -> f64 {
+        if self.n_blocks() == 0 {
+            0.0
+        } else {
+            self.nnz() as f64 / self.n_blocks() as f64
+        }
+    }
+
+    /// Measured storage bytes (f32 values + u32 colidx/rowptr + u16
+    /// masks).
+    pub fn occupancy_bytes(&self) -> usize {
+        self.values.len() * 4
+            + self.block_colidx.len() * 4
+            + self.block_rowptr.len() * 4
+            + self.block_masks.len() * 2
+    }
+
+    /// Validates the structural invariants (mask bits within c, popcount
+    /// sum == nnz, ordered non-overlapping blocks, header mirror).
+    pub fn validate(&self) -> Result<(), FormatError> {
+        if self.bs.c > 16 || self.bs.c == 0 || self.bs.r == 0 {
+            return Err(FormatError::BadBlockSize(self.bs));
+        }
+        let nb = self.n_blocks();
+        let fail = |m: String| Err(FormatError::Inconsistent(m));
+        if self.block_rowptr.len() != self.intervals() + 1
+            || self.block_rowptr[self.intervals()] as usize != nb
+        {
+            return fail("rowptr shape".into());
+        }
+        if self.block_masks.len() != nb * self.bs.r {
+            return fail("mask count".into());
+        }
+        let lane_mask: u16 = if self.bs.c == 16 {
+            0xFFFF
+        } else {
+            (1u16 << self.bs.c) - 1
+        };
+        let mut pop = 0usize;
+        for (b, chunk) in self.block_masks.chunks(self.bs.r).enumerate() {
+            let mut block_pop = 0u32;
+            for &m in chunk {
+                if m & !lane_mask != 0 {
+                    return fail(format!("mask beyond c in block {b}"));
+                }
+                block_pop += m.count_ones();
+            }
+            if block_pop == 0 {
+                return fail(format!("empty block {b}"));
+            }
+            pop += block_pop as usize;
+        }
+        if pop != self.nnz() {
+            return fail("popcount != nnz".into());
+        }
+        for it in 0..self.intervals() {
+            let (a, b) =
+                (self.block_rowptr[it] as usize, self.block_rowptr[it + 1] as usize);
+            let mut prev_end: i64 = -1;
+            for k in a..b {
+                let col = self.block_colidx[k] as i64;
+                if col <= prev_end || col as usize >= self.cols {
+                    return fail(format!("block order in interval {it}"));
+                }
+                prev_end = col + self.bs.c as i64 - 1;
+            }
+        }
+        let stride = self.header_stride();
+        if self.headers.len() != nb * stride {
+            return fail("header length".into());
+        }
+        for b in 0..nb {
+            let h = &self.headers[b * stride..(b + 1) * stride];
+            if u32::from_le_bytes([h[0], h[1], h[2], h[3]]) != self.block_colidx[b]
+            {
+                return fail(format!("header col at {b}"));
+            }
+            for i in 0..self.bs.r {
+                let m = u16::from_le_bytes([h[4 + 2 * i], h[5 + 2 * i]]);
+                if m != self.block_masks[b * self.bs.r + i] {
+                    return fail(format!("header mask at {b}"));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Converts a (double-precision) CSR matrix into `β32(r,c)` storage,
+/// truncating values to f32. Same greedy anchor cover as the f64 path.
+pub fn csr_to_block32(csr: &Csr, bs: BlockSize) -> Result<BlockMatrix32, FormatError> {
+    if bs.c > 16 || bs.c == 0 || bs.r == 0 || bs.r > 8 {
+        return Err(FormatError::BadBlockSize(bs));
+    }
+    let (r, c) = (bs.r, bs.c);
+    let intervals = crate::util::ceil_div(csr.rows, r);
+    let mut values: Vec<f32> = Vec::with_capacity(csr.nnz());
+    let mut block_colidx = Vec::new();
+    let mut block_rowptr = Vec::with_capacity(intervals + 1);
+    let mut block_masks: Vec<u16> = Vec::new();
+    block_rowptr.push(0u32);
+    let mut cursor = vec![0usize; r];
+    for it in 0..intervals {
+        let row0 = it * r;
+        let rows_here = r.min(csr.rows - row0);
+        for (i, cur) in cursor.iter_mut().enumerate().take(rows_here) {
+            *cur = csr.rowptr[row0 + i] as usize;
+        }
+        loop {
+            let mut min_col = u32::MAX;
+            for i in 0..rows_here {
+                let end = csr.rowptr[row0 + i + 1] as usize;
+                if cursor[i] < end {
+                    min_col = min_col.min(csr.colidx[cursor[i]]);
+                }
+            }
+            if min_col == u32::MAX {
+                break;
+            }
+            let col_end = min_col as usize + c;
+            block_colidx.push(min_col);
+            for i in 0..rows_here {
+                let end = csr.rowptr[row0 + i + 1] as usize;
+                let mut mask = 0u16;
+                while cursor[i] < end
+                    && (csr.colidx[cursor[i]] as usize) < col_end
+                {
+                    let k = cursor[i];
+                    mask |= 1 << (csr.colidx[k] - min_col);
+                    values.push(csr.values[k] as f32);
+                    cursor[i] += 1;
+                }
+                block_masks.push(mask);
+            }
+            for _ in rows_here..r {
+                block_masks.push(0);
+            }
+        }
+        block_rowptr.push(block_colidx.len() as u32);
+    }
+    let stride = HEADER32_COLIDX_BYTES + 2 * r;
+    let mut headers = Vec::with_capacity(block_colidx.len() * stride);
+    for b in 0..block_colidx.len() {
+        headers.extend_from_slice(&block_colidx[b].to_le_bytes());
+        for i in 0..r {
+            headers.extend_from_slice(&block_masks[b * r + i].to_le_bytes());
+        }
+    }
+    let bm = BlockMatrix32 {
+        rows: csr.rows,
+        cols: csr.cols,
+        bs,
+        values,
+        block_colidx,
+        block_rowptr,
+        block_masks,
+        headers,
+    };
+    debug_assert!(bm.validate().is_ok(), "{:?}", bm.validate());
+    Ok(bm)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::suite;
+
+    #[test]
+    fn convert_and_validate_c16() {
+        for sm in suite::test_subset().iter().take(5) {
+            for bs in [BlockSize::new(1, 16), BlockSize::new(2, 16), BlockSize::new(4, 16)] {
+                let bm = csr_to_block32(&sm.csr, bs).unwrap();
+                bm.validate().unwrap();
+                assert_eq!(bm.nnz(), sm.csr.nnz());
+            }
+        }
+    }
+
+    #[test]
+    fn c16_produces_fewer_blocks_than_c8() {
+        let sm = &suite::test_subset()[2]; // contact: long runs
+        let b8 = csr_to_block32(&sm.csr, BlockSize::new(1, 8)).unwrap();
+        let b16 = csr_to_block32(&sm.csr, BlockSize::new(1, 16)).unwrap();
+        assert!(b16.n_blocks() < b8.n_blocks());
+    }
+
+    #[test]
+    fn occupancy_beats_f64_format() {
+        let sm = &suite::test_subset()[1];
+        let b32 = csr_to_block32(&sm.csr, BlockSize::new(1, 8)).unwrap();
+        let b64 =
+            crate::formats::csr_to_block(&sm.csr, BlockSize::new(1, 8)).unwrap();
+        assert!(b32.occupancy_bytes() < b64.occupancy_bytes());
+    }
+
+    #[test]
+    fn rejects_too_wide() {
+        let csr = suite::poisson2d(4);
+        assert!(csr_to_block32(&csr, BlockSize::new(1, 17)).is_err());
+    }
+
+    #[test]
+    fn validate_catches_mask_corruption() {
+        let csr = suite::poisson2d(6);
+        let mut bm = csr_to_block32(&csr, BlockSize::new(1, 16)).unwrap();
+        bm.block_masks[0] = 0;
+        assert!(bm.validate().is_err());
+    }
+}

@@ -1,0 +1,322 @@
+//! CSR ⇄ `β(r,c)` conversion.
+//!
+//! The forward conversion implements SPC5's greedy cover: inside each
+//! row interval (r consecutive rows) blocks are created left-to-right,
+//! each block anchored at the leftmost not-yet-covered nonzero of the
+//! interval. Blocks are row-aligned but can start at any column —
+//! the paper's "partially avoid aligning the block vertically".
+
+use super::{BlockMatrix, BlockSize, FormatError};
+use crate::matrix::{Coo, Csr};
+
+/// Converts a CSR matrix into the `β(r,c)` format.
+///
+/// Complexity is `O(nnz + intervals·r)`; the paper reports ≈2× one
+/// SpMV, which `benches/conversion_cost.rs` verifies for this
+/// implementation.
+pub fn csr_to_block(csr: &Csr, bs: BlockSize) -> Result<BlockMatrix, FormatError> {
+    bs.validate()?;
+    if bs.r == 1 {
+        // Fast path: one row per block ⇒ the values array is the CSR
+        // values array verbatim (paper: "This array remains unchanged
+        // compared to the CSR format if we have one row per block"),
+        // and masks come from a single linear walk. This keeps the
+        // conversion cost near the paper's "≈2× one SpMV".
+        return Ok(csr_to_block_r1(csr, bs));
+    }
+    let (r, c) = (bs.r, bs.c);
+    let intervals = crate::util::ceil_div(csr.rows, r);
+
+    let mut values = Vec::with_capacity(csr.nnz());
+    let mut block_colidx: Vec<u32> = Vec::with_capacity(csr.nnz() / 2 + 8);
+    let mut block_rowptr: Vec<u32> = Vec::with_capacity(intervals + 1);
+    let mut block_masks: Vec<u8> =
+        Vec::with_capacity(r * (csr.nnz() / 2 + 8));
+    block_rowptr.push(0);
+
+    // Per-row cursor into csr.colidx/values.
+    let mut cursor = vec![0usize; r];
+
+    for it in 0..intervals {
+        let row0 = it * r;
+        let rows_here = r.min(csr.rows - row0);
+        for (i, cur) in cursor.iter_mut().enumerate().take(rows_here) {
+            *cur = csr.rowptr[row0 + i] as usize;
+        }
+
+        loop {
+            // Leftmost uncovered column across the interval's rows.
+            let mut min_col = u32::MAX;
+            for i in 0..rows_here {
+                let end = csr.rowptr[row0 + i + 1] as usize;
+                if cursor[i] < end {
+                    min_col = min_col.min(csr.colidx[cursor[i]]);
+                }
+            }
+            if min_col == u32::MAX {
+                break; // interval fully covered
+            }
+
+            let col_end = min_col + c as u32;
+            block_colidx.push(min_col);
+            // Row-major inside the block: row i's covered values first.
+            let colidx = &csr.colidx[..];
+            for i in 0..rows_here {
+                let end = csr.rowptr[row0 + i + 1] as usize;
+                let mut k = cursor[i];
+                let mut mask = 0u8;
+                while k < end && colidx[k] < col_end {
+                    mask |= 1 << (colidx[k] - min_col);
+                    k += 1;
+                }
+                values.extend_from_slice(&csr.values[cursor[i]..k]);
+                cursor[i] = k;
+                block_masks.push(mask);
+            }
+            // Short interval at the matrix tail: pad the *mask array*
+            // (not the values) so every block owns exactly r mask bytes.
+            for _ in rows_here..r {
+                block_masks.push(0);
+            }
+            // A block is created only at an existing nonzero, so it can
+            // never be empty — guaranteed by construction.
+        }
+        block_rowptr.push(block_colidx.len() as u32);
+    }
+
+    let mut bm = BlockMatrix {
+        rows: csr.rows,
+        cols: csr.cols,
+        bs,
+        values,
+        block_colidx,
+        block_rowptr,
+        block_masks,
+        headers: Vec::new(),
+    };
+    bm.rebuild_headers();
+    debug_assert!(bm.validate().is_ok(), "{:?}", bm.validate());
+    Ok(bm)
+}
+
+/// Specialized `r = 1` conversion: single pass over `colidx`, values
+/// copied wholesale, headers built inline.
+fn csr_to_block_r1(csr: &Csr, bs: BlockSize) -> BlockMatrix {
+    let c = bs.c as u32;
+    let rows = csr.rows;
+    let mut block_colidx: Vec<u32> = Vec::with_capacity(csr.nnz() / 2 + 8);
+    let mut block_rowptr: Vec<u32> = Vec::with_capacity(rows + 1);
+    let mut block_masks: Vec<u8> = Vec::with_capacity(csr.nnz() / 2 + 8);
+    block_rowptr.push(0);
+    let colidx = &csr.colidx[..];
+    for row in 0..rows {
+        let mut k = csr.rowptr[row] as usize;
+        let end = csr.rowptr[row + 1] as usize;
+        while k < end {
+            let anchor = colidx[k];
+            let mut mask = 1u8; // anchor bit
+            k += 1;
+            while k < end && colidx[k] - anchor < c {
+                mask |= 1 << (colidx[k] - anchor);
+                k += 1;
+            }
+            block_colidx.push(anchor);
+            block_masks.push(mask);
+        }
+        block_rowptr.push(block_colidx.len() as u32);
+    }
+    // Interleaved headers in one pass.
+    let stride = 5;
+    let mut headers = Vec::with_capacity(block_colidx.len() * stride);
+    for b in 0..block_colidx.len() {
+        headers.extend_from_slice(&block_colidx[b].to_le_bytes());
+        headers.push(block_masks[b]);
+    }
+    let bm = BlockMatrix {
+        rows,
+        cols: csr.cols,
+        bs,
+        values: csr.values.clone(),
+        block_colidx,
+        block_rowptr,
+        block_masks,
+        headers,
+    };
+    debug_assert!(bm.validate().is_ok(), "{:?}", bm.validate());
+    bm
+}
+
+/// Converts a `β(r,c)` matrix back to CSR (exact inverse of
+/// [`csr_to_block`]; property-tested as a round trip).
+pub fn block_to_csr(bm: &BlockMatrix) -> Result<Csr, FormatError> {
+    let (r, c) = (bm.bs.r, bm.bs.c);
+    let mut coo = Coo::new(bm.rows, bm.cols);
+    let mut idx_val = 0usize;
+    for it in 0..bm.intervals() {
+        let row0 = it * r;
+        let (a, b) =
+            (bm.block_rowptr[it] as usize, bm.block_rowptr[it + 1] as usize);
+        for blk in a..b {
+            let col0 = bm.block_colidx[blk] as usize;
+            for i in 0..r {
+                let mask = bm.block_masks[blk * r + i];
+                for k in 0..c {
+                    if mask & (1 << k) != 0 {
+                        coo.push(row0 + i, col0 + k, bm.values[idx_val]);
+                        idx_val += 1;
+                    }
+                }
+            }
+        }
+    }
+    if idx_val != bm.values.len() {
+        return Err(FormatError::Inconsistent(format!(
+            "consumed {idx_val} values, stored {}",
+            bm.values.len()
+        )));
+    }
+    coo.to_csr()
+        .map_err(|e| FormatError::Inconsistent(e.to_string()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::suite;
+
+    fn fig1() -> Csr {
+        let rowptr = vec![0, 4, 7, 10, 12, 14, 14, 15, 18];
+        let colidx = vec![0, 1, 4, 6, 1, 2, 3, 2, 4, 6, 3, 4, 5, 6, 5, 0, 4, 7];
+        let values: Vec<f64> = (1..=18).map(|v| v as f64).collect();
+        Csr::from_raw(8, 8, rowptr, colidx, values).unwrap()
+    }
+
+    #[test]
+    fn roundtrip_fig1_all_paper_sizes() {
+        let csr = fig1();
+        for bs in BlockSize::PAPER_SIZES {
+            let bm = csr_to_block(&csr, bs).unwrap();
+            bm.validate().unwrap();
+            let back = block_to_csr(&bm).unwrap();
+            assert_eq!(csr, back, "roundtrip failed for {bs}");
+        }
+    }
+
+    #[test]
+    fn roundtrip_suite_subset() {
+        for sm in suite::test_subset() {
+            for bs in [BlockSize::new(1, 8), BlockSize::new(4, 4), BlockSize::new(8, 4)]
+            {
+                let bm = csr_to_block(&sm.csr, bs).unwrap();
+                bm.validate().unwrap();
+                let back = block_to_csr(&bm).unwrap();
+                assert_eq!(sm.csr, back, "roundtrip failed for {} {bs}", sm.name);
+            }
+        }
+    }
+
+    #[test]
+    fn beta_1_keeps_values_order() {
+        // r = 1 ⇒ values array identical to CSR (paper §"Block-based
+        // storage": "This array remains unchanged compared to the CSR
+        // format if we have one row per block").
+        let csr = fig1();
+        for c in [4usize, 8] {
+            let bm = csr_to_block(&csr, BlockSize::new(1, c)).unwrap();
+            assert_eq!(bm.values, csr.values);
+        }
+    }
+
+    #[test]
+    fn empty_matrix() {
+        let csr = Csr::from_raw(6, 6, vec![0; 7], vec![], vec![]).unwrap();
+        let bm = csr_to_block(&csr, BlockSize::new(2, 4)).unwrap();
+        assert_eq!(bm.n_blocks(), 0);
+        assert_eq!(bm.nnz(), 0);
+        bm.validate().unwrap();
+        let back = block_to_csr(&bm).unwrap();
+        assert_eq!(csr, back);
+    }
+
+    #[test]
+    fn empty_rows_inside() {
+        // Row 5 of fig1 is empty; also craft a matrix with an entirely
+        // empty interval.
+        let csr = Csr::from_raw(
+            8,
+            8,
+            vec![0, 1, 1, 1, 1, 1, 1, 1, 2],
+            vec![3, 7],
+            vec![1.0, 2.0],
+        )
+        .unwrap();
+        for bs in BlockSize::PAPER_SIZES {
+            let bm = csr_to_block(&csr, bs).unwrap();
+            bm.validate().unwrap();
+            assert_eq!(block_to_csr(&bm).unwrap(), csr);
+        }
+    }
+
+    #[test]
+    fn rows_not_multiple_of_r() {
+        // 5 rows with r=4 → last interval has one real row.
+        let mut coo = Coo::new(5, 10);
+        for r in 0..5 {
+            coo.push(r, r, 1.0 + r as f64);
+            coo.push(r, 9, -1.0);
+        }
+        let csr = coo.to_csr().unwrap();
+        for bs in BlockSize::PAPER_SIZES {
+            let bm = csr_to_block(&csr, bs).unwrap();
+            bm.validate().unwrap();
+            assert_eq!(block_to_csr(&bm).unwrap(), csr);
+        }
+    }
+
+    #[test]
+    fn blocks_anchor_at_leftmost_nnz() {
+        // Single value at column 5 with c=4 → block starts exactly at 5.
+        let mut coo = Coo::new(1, 12);
+        coo.push(0, 5, 3.0);
+        let csr = coo.to_csr().unwrap();
+        let bm = csr_to_block(&csr, BlockSize::new(1, 4)).unwrap();
+        assert_eq!(bm.block_colidx, vec![5]);
+        assert_eq!(bm.block_masks, vec![0b0001]);
+    }
+
+    #[test]
+    fn block_near_right_edge() {
+        // Nonzero at the last column: block extends past the matrix edge
+        // logically but only in-bounds bits may be set.
+        let mut coo = Coo::new(2, 9);
+        coo.push(0, 8, 1.0);
+        coo.push(1, 8, 2.0);
+        let csr = coo.to_csr().unwrap();
+        for bs in BlockSize::PAPER_SIZES {
+            let bm = csr_to_block(&csr, bs).unwrap();
+            bm.validate().unwrap();
+            assert_eq!(block_to_csr(&bm).unwrap(), csr);
+        }
+    }
+
+    #[test]
+    fn dense_blocks_fully_filled() {
+        let csr = suite::dense(16, 1);
+        let bm = csr_to_block(&csr, BlockSize::new(4, 4)).unwrap();
+        assert!((bm.fill_fraction() - 1.0).abs() < 1e-12);
+        assert_eq!(bm.n_blocks(), (16 / 4) * (16 / 4));
+    }
+
+    #[test]
+    fn avg_matches_paper_dense_expectation() {
+        // Paper Table 1, Dense-8000 row: Avg = r*c exactly (fill 100%).
+        let csr = suite::dense(64, 2);
+        for bs in BlockSize::PAPER_SIZES {
+            let bm = csr_to_block(&csr, bs).unwrap();
+            assert!(
+                (bm.avg_nnz_per_block() - bs.bits() as f64).abs() < 1e-9,
+                "{bs}"
+            );
+        }
+    }
+}

@@ -1,0 +1,777 @@
+//! AVX-512 `vexpandpd` SpMV kernels — the paper's optimized routines
+//! (§"Optimized kernel implementation", Code 1), one per block size.
+//!
+//! Each kernel walks the interleaved header stream
+//! (`colidx:4B | masks:rB` per block — the exact memory layout the
+//! published assembly reads with a single pointer), and per block:
+//!
+//! 1. `kmov`-loads the mask byte(s),
+//! 2. `vexpandpd` (`_mm512_maskz_expandloadu_pd`) inflates the next
+//!    `popcnt(mask)` values from the *unpadded* values stream into the
+//!    lanes selected by the mask — the paper's central trick,
+//! 3. a masked load pulls the `x` window (masked lanes are never
+//!    touched, which both avoids reading past the end of `x` and
+//!    implements the paper's "use the block mask to avoid useless
+//!    memory load"),
+//! 4. one FMA per block row accumulates into per-row accumulators that
+//!    live across the whole row interval and are horizontally reduced
+//!    into `y` once per interval — like `vpxorq`/`vaddsd` in Code 1.
+//!
+//! `c = 4` kernels pack **two block rows into one 512-bit operation**
+//! (combined 8-bit mask `m_lo | m_hi << 4`, `x` window broadcast to
+//! both 256-bit halves), which resolves the paper's "expand the half
+//! vector or split into two AVX-2 registers" design choice with a
+//! single expand+FMA per row pair.
+//!
+//! The Algorithm-2 `test` variants keep two separate inner loops
+//! (scalar for `mask == 1` blocks, vector otherwise) and jump between
+//! them exactly like the paper's `goto` structure.
+//!
+//! All kernels operate on a [`Span`] — a contiguous range of row
+//! intervals with its header/value sub-streams — so the same code
+//! serves the sequential path (one span = whole matrix) and each
+//! thread of the parallel runtime (paper §Parallelization).
+
+#![allow(unsafe_code)]
+
+use crate::formats::BlockMatrix;
+
+#[cfg(target_arch = "x86_64")]
+use std::arch::x86_64::*;
+
+/// A contiguous run of row intervals plus the sub-streams that cover
+/// exactly its blocks. `rowptr` holds `n_intervals+1` *absolute* block
+/// counters (only differences are used); `headers` starts at the span's
+/// first block; `values` at its first value. `y` passed to the kernels
+/// is local to the span (`y[0]` = first row of the span) and holds
+/// `rows` entries.
+#[derive(Clone, Copy)]
+pub struct Span<'a> {
+    pub rowptr: &'a [u32],
+    pub headers: &'a [u8],
+    pub values: &'a [f64],
+    /// Rows covered by the span (may be < intervals·r at the matrix tail).
+    pub rows: usize,
+    /// Block rows per interval (`r`).
+    pub r: usize,
+}
+
+impl<'a> Span<'a> {
+    /// The whole matrix as a single span.
+    pub fn full(bm: &'a BlockMatrix) -> Span<'a> {
+        Span {
+            rowptr: &bm.block_rowptr,
+            headers: &bm.headers,
+            values: &bm.values,
+            rows: bm.rows,
+            r: bm.bs.r,
+        }
+    }
+
+    /// A thread's sub-span `[interval_begin, interval_end)`.
+    pub fn slice(
+        bm: &'a BlockMatrix,
+        interval_begin: usize,
+        interval_end: usize,
+        block_begin: usize,
+        block_end: usize,
+        val_begin: usize,
+        val_end: usize,
+    ) -> Span<'a> {
+        let stride = bm.header_stride();
+        let row_begin = interval_begin * bm.bs.r;
+        let row_end = (interval_end * bm.bs.r).min(bm.rows);
+        Span {
+            rowptr: &bm.block_rowptr[interval_begin..=interval_end],
+            headers: &bm.headers[block_begin * stride..block_end * stride],
+            values: &bm.values[val_begin..val_end],
+            rows: row_end - row_begin,
+            r: bm.bs.r,
+        }
+    }
+
+    #[inline]
+    fn intervals(&self) -> usize {
+        self.rowptr.len() - 1
+    }
+
+    #[inline]
+    fn blocks_in(&self, it: usize) -> usize {
+        (self.rowptr[it + 1] - self.rowptr[it]) as usize
+    }
+}
+
+/// Dispatches the whole-matrix SpMV to the specialized kernel for
+/// `bm.bs` if one exists. Returns `false` when the block size has no
+/// AVX-512 specialization (caller falls back to the scalar kernel).
+pub fn spmv(bm: &BlockMatrix, x: &[f64], y: &mut [f64], test: bool) -> bool {
+    spmv_span(Span::full(bm), bm.bs, x, y, test)
+}
+
+/// Runs one span. `bs` must match the span's underlying format; `y` is
+/// span-local. Returns `false` if no specialization exists.
+pub fn spmv_span(
+    span: Span<'_>,
+    bs: crate::formats::BlockSize,
+    x: &[f64],
+    y: &mut [f64],
+    test: bool,
+) -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        assert!(crate::util::avx512_available(), "AVX-512 not available");
+        assert!(y.len() >= span.rows);
+        // SAFETY: format invariants (validated at conversion) guarantee
+        // every masked lane maps inside `x`, every expand stays inside
+        // `values`, and every interval row written exists in `y`.
+        unsafe {
+            match (bs.r, bs.c, test) {
+                (1, 8, false) => spmv_1x8(span, x, y),
+                (1, 8, true) => spmv_1x8_test(span, x, y),
+                (2, 8, false) => spmv_2x8(span, x, y),
+                (4, 8, false) => spmv_4x8(span, x, y),
+                (2, 4, false) => spmv_2x4(span, x, y),
+                (2, 4, true) => spmv_2x4_test(span, x, y),
+                (4, 4, false) => spmv_4x4(span, x, y),
+                (8, 4, false) => spmv_8x4(span, x, y),
+                _ => return false,
+            }
+        }
+        true
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        let _ = (span, bs, x, y, test);
+        false
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[inline(always)]
+unsafe fn header_col(h: *const u8) -> usize {
+    u32::from_le_bytes([*h, *h.add(1), *h.add(2), *h.add(3)]) as usize
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx512f,avx512vl,avx512bw,avx512dq")]
+unsafe fn spmv_1x8(span: Span<'_>, x: &[f64], y: &mut [f64]) {
+    let stride = 5;
+    let mut h = span.headers.as_ptr();
+    let mut vals = span.values.as_ptr();
+    let xp = x.as_ptr();
+    for row in 0..span.intervals() {
+        let nb = span.blocks_in(row);
+        if nb == 0 {
+            continue;
+        }
+        let mut acc = _mm512_setzero_pd();
+        for _ in 0..nb {
+            let col = header_col(h);
+            let mask = *h.add(4);
+            let v = _mm512_maskz_expandloadu_pd(mask, vals);
+            let xv = _mm512_maskz_loadu_pd(mask, xp.add(col));
+            acc = _mm512_fmadd_pd(v, xv, acc);
+            vals = vals.add(mask.count_ones() as usize);
+            h = h.add(stride);
+        }
+        y[row] += _mm512_reduce_add_pd(acc);
+    }
+}
+
+/// β(1,8) with the Algorithm-2 test: blocks whose mask is exactly 1
+/// (single value at the anchor column — anchoring guarantees bit 0 is
+/// always set for r=1) take a scalar multiply; others the vector path.
+/// Two loops with cross-jumps, like the paper's `goto` code.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx512f,avx512vl,avx512bw,avx512dq")]
+unsafe fn spmv_1x8_test(span: Span<'_>, x: &[f64], y: &mut [f64]) {
+    let stride = 5;
+    let mut h = span.headers.as_ptr();
+    let mut vals = span.values.as_ptr();
+    let xp = x.as_ptr();
+    for row in 0..span.intervals() {
+        let nb = span.blocks_in(row);
+        if nb == 0 {
+            continue;
+        }
+        let mut acc = _mm512_setzero_pd();
+        let mut sum_scalar = 0.0f64;
+        let mut k = 0usize;
+        // "loop-for-1": stay scalar while masks are 1.
+        loop {
+            while k < nb {
+                let mask = *h.add(4);
+                if mask != 1 {
+                    break; // jump to "loop-not-1"
+                }
+                sum_scalar += *xp.add(header_col(h)) * *vals;
+                vals = vals.add(1);
+                h = h.add(stride);
+                k += 1;
+            }
+            if k == nb {
+                break;
+            }
+            // "loop-not-1": stay vectorized while masks are not 1.
+            while k < nb {
+                let mask = *h.add(4);
+                if mask == 1 {
+                    break; // jump back to "loop-for-1"
+                }
+                let v = _mm512_maskz_expandloadu_pd(mask, vals);
+                let xv = _mm512_maskz_loadu_pd(mask, xp.add(header_col(h)));
+                acc = _mm512_fmadd_pd(v, xv, acc);
+                vals = vals.add(mask.count_ones() as usize);
+                h = h.add(stride);
+                k += 1;
+            }
+            if k == nb {
+                break;
+            }
+        }
+        y[row] += sum_scalar + _mm512_reduce_add_pd(acc);
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx512f,avx512vl,avx512bw,avx512dq")]
+unsafe fn spmv_2x8(span: Span<'_>, x: &[f64], y: &mut [f64]) {
+    let stride = 6;
+    let mut h = span.headers.as_ptr();
+    let mut vals = span.values.as_ptr();
+    let xp = x.as_ptr();
+    for it in 0..span.intervals() {
+        let nb = span.blocks_in(it);
+        if nb == 0 {
+            continue;
+        }
+        let mut acc0 = _mm512_setzero_pd();
+        let mut acc1 = _mm512_setzero_pd();
+        for _ in 0..nb {
+            let col = header_col(h);
+            let m0 = *h.add(4);
+            let m1 = *h.add(5);
+            let xv = _mm512_maskz_loadu_pd(m0 | m1, xp.add(col));
+            let v0 = _mm512_maskz_expandloadu_pd(m0, vals);
+            acc0 = _mm512_fmadd_pd(v0, xv, acc0);
+            vals = vals.add(m0.count_ones() as usize);
+            let v1 = _mm512_maskz_expandloadu_pd(m1, vals);
+            acc1 = _mm512_fmadd_pd(v1, xv, acc1);
+            vals = vals.add(m1.count_ones() as usize);
+            h = h.add(stride);
+        }
+        let row0 = it * 2;
+        let q = _mm256_hadd_pd(fold256(acc0), fold256(acc1));
+        let r01 = _mm_add_pd(
+            _mm256_castpd256_pd128(q),
+            _mm256_extractf128_pd::<1>(q),
+        );
+        if row0 + 1 < span.rows {
+            let yp = y.as_mut_ptr().add(row0);
+            _mm_storeu_pd(yp, _mm_add_pd(_mm_loadu_pd(yp), r01));
+        } else {
+            let mut buf = [0.0f64; 2];
+            _mm_storeu_pd(buf.as_mut_ptr(), r01);
+            y[row0] += buf[0];
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx512f,avx512vl,avx512bw,avx512dq")]
+unsafe fn spmv_4x8(span: Span<'_>, x: &[f64], y: &mut [f64]) {
+    let stride = 8;
+    let mut h = span.headers.as_ptr();
+    let mut vals = span.values.as_ptr();
+    let xp = x.as_ptr();
+    for it in 0..span.intervals() {
+        let nb = span.blocks_in(it);
+        if nb == 0 {
+            continue;
+        }
+        let mut acc = [_mm512_setzero_pd(); 4];
+        for _ in 0..nb {
+            let col = header_col(h);
+            let m = [*h.add(4), *h.add(5), *h.add(6), *h.add(7)];
+            let xv =
+                _mm512_maskz_loadu_pd(m[0] | m[1] | m[2] | m[3], xp.add(col));
+            for i in 0..4 {
+                if m[i] != 0 {
+                    let v = _mm512_maskz_expandloadu_pd(m[i], vals);
+                    acc[i] = _mm512_fmadd_pd(v, xv, acc[i]);
+                    vals = vals.add(m[i].count_ones() as usize);
+                }
+            }
+            h = h.add(stride);
+        }
+        let row0 = it * 4;
+        let rows_here = 4.min(span.rows - row0);
+        let sums = hsum4_256(
+            fold256(acc[0]),
+            fold256(acc[1]),
+            fold256(acc[2]),
+            fold256(acc[3]),
+        );
+        if rows_here == 4 {
+            let yp = y.as_mut_ptr().add(row0);
+            _mm256_storeu_pd(yp, _mm256_add_pd(_mm256_loadu_pd(yp), sums));
+        } else {
+            let mut buf = [0.0f64; 4];
+            _mm256_storeu_pd(buf.as_mut_ptr(), sums);
+            for i in 0..rows_here {
+                y[row0 + i] += buf[i];
+            }
+        }
+    }
+}
+
+/// Sums the low (`lo = true`) or high 256-bit half of a 512-bit
+/// accumulator — used by the c=4 kernels that pack two block rows per
+/// zmm register.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx512f,avx512vl,avx512bw,avx512dq")]
+#[inline]
+unsafe fn hsum_half(acc: __m512d, lo: bool) -> f64 {
+    let mask: __mmask8 = if lo { 0x0F } else { 0xF0 };
+    _mm512_mask_reduce_add_pd(mask, acc)
+}
+
+/// Folds a 512-bit accumulator into the sum of its two 256-bit halves.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx512f,avx512vl,avx512bw,avx512dq")]
+#[inline]
+unsafe fn fold256(a: __m512d) -> __m256d {
+    _mm256_add_pd(_mm512_castpd512_pd256(a), _mm512_extractf64x4_pd::<1>(a))
+}
+
+/// Tree-reduces four row accumulators (256-bit each) into `[r0..r3]`.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx512f,avx512vl,avx512bw,avx512dq")]
+#[inline]
+unsafe fn hsum4_256(
+    p0: __m256d,
+    p1: __m256d,
+    p2: __m256d,
+    p3: __m256d,
+) -> __m256d {
+    let q01 = _mm256_hadd_pd(p0, p1);
+    let q23 = _mm256_hadd_pd(p2, p3);
+    let lo = _mm256_permute2f128_pd::<0x20>(q01, q23);
+    let hi = _mm256_permute2f128_pd::<0x31>(q01, q23);
+    _mm256_add_pd(lo, hi)
+}
+
+/// Horizontal tree-reduction of two packed-pair accumulators into the
+/// four per-row sums `[r0, r1, r2, r3]` (§Perf change 2: one hadd tree
+/// instead of four `mask_reduce_add` sequences, enabling a vector `y`
+/// update per interval).
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx512f,avx512vl,avx512bw,avx512dq")]
+#[inline]
+unsafe fn hsum4_rows(acc01: __m512d, acc23: __m512d) -> __m256d {
+    let p0 = _mm512_castpd512_pd256(acc01); // row 0 partials
+    let p1 = _mm512_extractf64x4_pd::<1>(acc01); // row 1
+    let p2 = _mm512_castpd512_pd256(acc23); // row 2
+    let p3 = _mm512_extractf64x4_pd::<1>(acc23); // row 3
+    hsum4_256(p0, p1, p2, p3)
+}
+
+/// Broadcasts one masked 4-wide `x` window into both 256-bit halves of
+/// a zmm register — shared by every row pair of a c=4 block.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx512f,avx512vl,avx512bw,avx512dq")]
+#[inline]
+unsafe fn x_window_4(union_mask: u8, xp: *const f64, col: usize) -> __m512d {
+    let xv4 = _mm256_maskz_loadu_pd(union_mask, xp.add(col));
+    _mm512_insertf64x4::<1>(_mm512_castpd256_pd512(xv4), xv4)
+}
+
+/// Shared inner step of the c=4 kernels: one block's pair of rows
+/// `(i, i+1)` → combined-mask expand + FMA against the pre-broadcast
+/// `x` window (loaded once per block, not per pair — §Perf change 1).
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx512f,avx512vl,avx512bw,avx512dq")]
+#[inline]
+unsafe fn fma_pair_4(
+    m_lo: u8,
+    m_hi: u8,
+    xv: __m512d,
+    vals: &mut *const f64,
+    acc: __m512d,
+) -> __m512d {
+    let combined = m_lo | (m_hi << 4);
+    if combined == 0 {
+        return acc;
+    }
+    // One expand pulls both rows' values: row i in lanes 0..4 (mask
+    // low nibble), row i+1 in lanes 4..8 (high nibble).
+    let v = _mm512_maskz_expandloadu_pd(combined, *vals);
+    *vals = vals.add(combined.count_ones() as usize);
+    _mm512_fmadd_pd(v, xv, acc)
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx512f,avx512vl,avx512bw,avx512dq")]
+unsafe fn spmv_2x4(span: Span<'_>, x: &[f64], y: &mut [f64]) {
+    let stride = 6;
+    let mut h = span.headers.as_ptr();
+    let mut vals = span.values.as_ptr();
+    let xp = x.as_ptr();
+    for it in 0..span.intervals() {
+        let nb = span.blocks_in(it);
+        if nb == 0 {
+            continue;
+        }
+        let mut acc = _mm512_setzero_pd();
+        for _ in 0..nb {
+            let col = header_col(h);
+            let (m0, m1) = (*h.add(4), *h.add(5));
+            let xv = x_window_4(m0 | m1, xp, col);
+            acc = fma_pair_4(m0, m1, xv, &mut vals, acc);
+            h = h.add(stride);
+        }
+        let row0 = it * 2;
+        let q = _mm256_hadd_pd(
+            _mm512_castpd512_pd256(acc),
+            _mm512_extractf64x4_pd::<1>(acc),
+        );
+        let r01 = _mm_add_pd(
+            _mm256_castpd256_pd128(q),
+            _mm256_extractf128_pd::<1>(q),
+        );
+        if row0 + 1 < span.rows {
+            let yp = y.as_mut_ptr().add(row0);
+            _mm_storeu_pd(yp, _mm_add_pd(_mm_loadu_pd(yp), r01));
+        } else {
+            let mut buf = [0.0f64; 2];
+            _mm_storeu_pd(buf.as_mut_ptr(), r01);
+            y[row0] += buf[0];
+        }
+    }
+}
+
+/// β(2,4) with the Algorithm-2 test (single-value blocks take the
+/// scalar path).
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx512f,avx512vl,avx512bw,avx512dq")]
+unsafe fn spmv_2x4_test(span: Span<'_>, x: &[f64], y: &mut [f64]) {
+    let stride = 6;
+    let mut h = span.headers.as_ptr();
+    let mut vals = span.values.as_ptr();
+    let xp = x.as_ptr();
+    for it in 0..span.intervals() {
+        let nb = span.blocks_in(it);
+        if nb == 0 {
+            continue;
+        }
+        let mut acc = _mm512_setzero_pd();
+        let mut s0 = 0.0f64;
+        let mut s1 = 0.0f64;
+        let mut k = 0usize;
+        loop {
+            // Scalar loop: combined mask has a single bit.
+            while k < nb {
+                let (m0, m1) = (*h.add(4), *h.add(5));
+                if (m0 | (m1 << 4)).count_ones() != 1 {
+                    break;
+                }
+                let col = header_col(h);
+                if m0 != 0 {
+                    s0 += *xp.add(col + m0.trailing_zeros() as usize) * *vals;
+                } else {
+                    s1 += *xp.add(col + m1.trailing_zeros() as usize) * *vals;
+                }
+                vals = vals.add(1);
+                h = h.add(stride);
+                k += 1;
+            }
+            if k == nb {
+                break;
+            }
+            // Vector loop.
+            while k < nb {
+                let (m0, m1) = (*h.add(4), *h.add(5));
+                if (m0 | (m1 << 4)).count_ones() == 1 {
+                    break;
+                }
+                let col = header_col(h);
+                let xv = x_window_4(m0 | m1, xp, col);
+                acc = fma_pair_4(m0, m1, xv, &mut vals, acc);
+                h = h.add(stride);
+                k += 1;
+            }
+            if k == nb {
+                break;
+            }
+        }
+        let row0 = it * 2;
+        y[row0] += s0 + hsum_half(acc, true);
+        if row0 + 1 < span.rows {
+            y[row0 + 1] += s1 + hsum_half(acc, false);
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx512f,avx512vl,avx512bw,avx512dq")]
+unsafe fn spmv_4x4(span: Span<'_>, x: &[f64], y: &mut [f64]) {
+    let stride = 8;
+    let mut h = span.headers.as_ptr();
+    let mut vals = span.values.as_ptr();
+    let xp = x.as_ptr();
+    for it in 0..span.intervals() {
+        let nb = span.blocks_in(it);
+        if nb == 0 {
+            continue;
+        }
+        let mut acc01 = _mm512_setzero_pd();
+        let mut acc23 = _mm512_setzero_pd();
+        for _ in 0..nb {
+            let col = header_col(h);
+            let m = [*h.add(4), *h.add(5), *h.add(6), *h.add(7)];
+            let xv = x_window_4(m[0] | m[1] | m[2] | m[3], xp, col);
+            acc01 = fma_pair_4(m[0], m[1], xv, &mut vals, acc01);
+            acc23 = fma_pair_4(m[2], m[3], xv, &mut vals, acc23);
+            h = h.add(stride);
+        }
+        let row0 = it * 4;
+        let rows_here = 4.min(span.rows - row0);
+        let sums = hsum4_rows(acc01, acc23);
+        if rows_here == 4 {
+            // Vector y update: one masked load/add/store for the interval.
+            let yp = y.as_mut_ptr().add(row0);
+            let cur = _mm256_loadu_pd(yp);
+            _mm256_storeu_pd(yp, _mm256_add_pd(cur, sums));
+        } else {
+            let mut buf = [0.0f64; 4];
+            _mm256_storeu_pd(buf.as_mut_ptr(), sums);
+            for i in 0..rows_here {
+                y[row0 + i] += buf[i];
+            }
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx512f,avx512vl,avx512bw,avx512dq")]
+unsafe fn spmv_8x4(span: Span<'_>, x: &[f64], y: &mut [f64]) {
+    let stride = 12;
+    let mut h = span.headers.as_ptr();
+    let mut vals = span.values.as_ptr();
+    let xp = x.as_ptr();
+    for it in 0..span.intervals() {
+        let nb = span.blocks_in(it);
+        if nb == 0 {
+            continue;
+        }
+        let mut acc = [_mm512_setzero_pd(); 4];
+        for _ in 0..nb {
+            let col = header_col(h);
+            let m: [u8; 8] = [
+                *h.add(4),
+                *h.add(5),
+                *h.add(6),
+                *h.add(7),
+                *h.add(8),
+                *h.add(9),
+                *h.add(10),
+                *h.add(11),
+            ];
+            let union = m.iter().fold(0u8, |a, &b| a | b);
+            let xv = x_window_4(union, xp, col);
+            for p in 0..4 {
+                acc[p] = fma_pair_4(m[2 * p], m[2 * p + 1], xv, &mut vals, acc[p]);
+            }
+            h = h.add(stride);
+        }
+        let row0 = it * 8;
+        let rows_here = 8.min(span.rows - row0);
+        let sums0 = hsum4_rows(acc[0], acc[1]);
+        let sums1 = hsum4_rows(acc[2], acc[3]);
+        if rows_here == 8 {
+            let yp = y.as_mut_ptr().add(row0);
+            _mm256_storeu_pd(yp, _mm256_add_pd(_mm256_loadu_pd(yp), sums0));
+            let yp4 = yp.add(4);
+            _mm256_storeu_pd(yp4, _mm256_add_pd(_mm256_loadu_pd(yp4), sums1));
+        } else {
+            let mut buf = [0.0f64; 8];
+            _mm256_storeu_pd(buf.as_mut_ptr(), sums0);
+            _mm256_storeu_pd(buf.as_mut_ptr().add(4), sums1);
+            for i in 0..rows_here {
+                y[row0 + i] += buf[i];
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::{csr_to_block, BlockSize};
+    use crate::matrix::{suite, Coo, Csr};
+
+    fn check(csr: &Csr, bs: BlockSize, test: bool) {
+        if !crate::util::avx512_available() {
+            return; // skipped on non-AVX-512 hosts
+        }
+        let bm = csr_to_block(csr, bs).unwrap();
+        let x: Vec<f64> =
+            (0..csr.cols).map(|i| ((i * 13) % 17) as f64 - 8.0).collect();
+        let mut want = vec![0.0; csr.rows];
+        csr.spmv_ref(&x, &mut want);
+        let mut got = vec![0.0; csr.rows];
+        assert!(spmv(&bm, &x, &mut got, test), "no kernel for {bs} test={test}");
+        for i in 0..csr.rows {
+            assert!(
+                (got[i] - want[i]).abs() <= 1e-9 * want[i].abs().max(1.0),
+                "{bs} test={test} row {i}: {} vs {}",
+                got[i],
+                want[i]
+            );
+        }
+    }
+
+    #[test]
+    fn all_kernels_match_reference() {
+        for sm in suite::test_subset() {
+            for bs in BlockSize::PAPER_SIZES {
+                check(&sm.csr, bs, false);
+            }
+            check(&sm.csr, BlockSize::new(1, 8), true);
+            check(&sm.csr, BlockSize::new(2, 4), true);
+        }
+    }
+
+    #[test]
+    fn block_at_last_column() {
+        // Block anchored at the very last column: the masked x load must
+        // not fault or read junk.
+        let mut coo = Coo::new(16, 9);
+        for r in 0..16 {
+            coo.push(r, 8, (r + 1) as f64);
+        }
+        let csr = coo.to_csr().unwrap();
+        for bs in BlockSize::PAPER_SIZES {
+            check(&csr, bs, false);
+        }
+        check(&csr, BlockSize::new(1, 8), true);
+        check(&csr, BlockSize::new(2, 4), true);
+    }
+
+    #[test]
+    fn single_row_matrix() {
+        let mut coo = Coo::new(1, 64);
+        for c in [0usize, 3, 9, 10, 11, 40, 63] {
+            coo.push(0, c, c as f64 + 0.5);
+        }
+        let csr = coo.to_csr().unwrap();
+        for bs in BlockSize::PAPER_SIZES {
+            check(&csr, bs, false);
+        }
+    }
+
+    #[test]
+    fn rows_not_multiple_of_r() {
+        let mut coo = Coo::new(13, 20);
+        for r in 0..13 {
+            coo.push(r, r, 1.0);
+            coo.push(r, 19, 2.0);
+        }
+        let csr = coo.to_csr().unwrap();
+        for bs in BlockSize::PAPER_SIZES {
+            check(&csr, bs, false);
+        }
+    }
+
+    #[test]
+    fn alternating_single_multi_blocks_test_variant() {
+        // Worst case for Algorithm 2: block kinds alternate, forcing a
+        // jump at every block.
+        let mut coo = Coo::new(1, 400);
+        let mut col = 0usize;
+        let mut toggle = false;
+        while col + 8 < 400 {
+            if toggle {
+                for k in 0..5 {
+                    coo.push(0, col + k, (col + k) as f64 * 0.1 + 1.0);
+                }
+            } else {
+                coo.push(0, col, col as f64 * 0.1 + 1.0);
+            }
+            toggle = !toggle;
+            col += 16;
+        }
+        let csr = coo.to_csr().unwrap();
+        check(&csr, BlockSize::new(1, 8), true);
+        check(&csr, BlockSize::new(2, 4), true);
+    }
+
+    #[test]
+    fn dense_matrix_full_masks() {
+        let csr = suite::dense(32, 5);
+        for bs in BlockSize::PAPER_SIZES {
+            check(&csr, bs, false);
+        }
+    }
+
+    #[test]
+    fn empty_and_sparse_intervals() {
+        // Rows with no blocks at all (paper Fig. 1 row 5).
+        let csr = Csr::from_raw(
+            9,
+            9,
+            vec![0, 2, 2, 2, 3, 3, 3, 3, 3, 4],
+            vec![0, 8, 4, 0],
+            vec![1.0, 2.0, 3.0, 4.0],
+        )
+        .unwrap();
+        for bs in BlockSize::PAPER_SIZES {
+            check(&csr, bs, false);
+        }
+        check(&csr, BlockSize::new(1, 8), true);
+        check(&csr, BlockSize::new(2, 4), true);
+    }
+
+    #[test]
+    fn span_slices_compose_to_full() {
+        if !crate::util::avx512_available() {
+            return;
+        }
+        // Running two half-spans must equal the full-matrix result.
+        let csr = suite::poisson2d(24);
+        for bs in [BlockSize::new(2, 4), BlockSize::new(4, 8)] {
+            let bm = csr_to_block(&csr, bs).unwrap();
+            let x: Vec<f64> = (0..csr.cols).map(|i| (i % 5) as f64).collect();
+            let spans = crate::parallel::partition_intervals(&bm, 2);
+            let mut y = vec![0.0; csr.rows];
+            for s in &spans {
+                let val_end = spans
+                    .iter()
+                    .find(|t| t.interval_begin == s.interval_end)
+                    .map(|t| t.val_begin)
+                    .unwrap_or(bm.values.len());
+                let sp = Span::slice(
+                    &bm,
+                    s.interval_begin,
+                    s.interval_end,
+                    s.block_begin,
+                    s.block_end,
+                    s.val_begin,
+                    val_end,
+                );
+                assert!(spmv_span(
+                    sp,
+                    bs,
+                    &x,
+                    &mut y[s.row_begin..s.row_end],
+                    false
+                ));
+            }
+            let mut want = vec![0.0; csr.rows];
+            csr.spmv_ref(&x, &mut want);
+            for i in 0..csr.rows {
+                assert!((y[i] - want[i]).abs() < 1e-9, "{bs} row {i}");
+            }
+        }
+    }
+}

@@ -1,0 +1,227 @@
+//! SpMV kernels.
+//!
+//! - [`scalar`] — the generic Algorithm 1 for any `β(r,c)` plus the
+//!   Algorithm 2 "test" variants; portable, used as fallback and as the
+//!   differential-testing reference.
+//! - [`avx512`] — the paper's optimized kernels: one `vexpandpd`-based
+//!   routine per paper block size, walking the interleaved header
+//!   stream exactly like the published assembly (Code 1).
+//! - [`csr`] — tuned CSR baseline (the "Intel MKL" stand-in).
+//! - [`csr5`] — re-implementation of the CSR5 format and kernel
+//!   (Liu & Vinter 2015), the paper's second comparator.
+//!
+//! All kernels compute `y += A·x` (accumulating, like the paper's
+//! `vaddsd` into `y`), so callers zero `y` when they need `y = A·x`.
+
+pub mod avx512;
+pub mod avx512f32;
+pub mod csr;
+pub mod csr5;
+pub mod scalar;
+pub mod spmm;
+
+use crate::formats::{BlockMatrix, BlockSize};
+use crate::matrix::Csr;
+
+/// Identifies one of the kernels benchmarked in the paper (Fig. 3/4
+/// legend). `Test` variants are Algorithm 2 (scalar/vector dual loop).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum KernelKind {
+    /// CSR row loop — the MKL stand-in baseline.
+    Csr,
+    /// CSR5 (Liu & Vinter 2015) comparator.
+    Csr5,
+    /// `β(r,c)` kernel without the single-value test.
+    Beta(u8, u8),
+    /// `β(r,c)` kernel with the Algorithm-2 test.
+    BetaTest(u8, u8),
+}
+
+impl KernelKind {
+    /// The eight SPC5 kernels of the paper's evaluation:
+    /// β(1,8), β(1,8)test, β(2,4), β(2,4)test, β(2,8), β(4,4), β(4,8), β(8,4).
+    pub const SPC5_KERNELS: [KernelKind; 8] = [
+        KernelKind::Beta(1, 8),
+        KernelKind::BetaTest(1, 8),
+        KernelKind::Beta(2, 4),
+        KernelKind::BetaTest(2, 4),
+        KernelKind::Beta(2, 8),
+        KernelKind::Beta(4, 4),
+        KernelKind::Beta(4, 8),
+        KernelKind::Beta(8, 4),
+    ];
+
+    /// All kernels including baselines (the full Fig. 3 bar group).
+    pub const ALL: [KernelKind; 10] = [
+        KernelKind::Csr,
+        KernelKind::Csr5,
+        KernelKind::Beta(1, 8),
+        KernelKind::BetaTest(1, 8),
+        KernelKind::Beta(2, 4),
+        KernelKind::BetaTest(2, 4),
+        KernelKind::Beta(2, 8),
+        KernelKind::Beta(4, 4),
+        KernelKind::Beta(4, 8),
+        KernelKind::Beta(8, 4),
+    ];
+
+    /// Block size of a β kernel, if any.
+    pub fn block_size(&self) -> Option<BlockSize> {
+        match *self {
+            KernelKind::Beta(r, c) | KernelKind::BetaTest(r, c) => {
+                Some(BlockSize::new(r as usize, c as usize))
+            }
+            _ => None,
+        }
+    }
+
+    /// Parses e.g. `csr`, `csr5`, `b(2,8)`, `b(1,8)test`.
+    pub fn parse(s: &str) -> Option<KernelKind> {
+        let t = s.trim().to_ascii_lowercase();
+        match t.as_str() {
+            "csr" => return Some(KernelKind::Csr),
+            "csr5" => return Some(KernelKind::Csr5),
+            _ => {}
+        }
+        let (body, test) = match t.strip_suffix("test") {
+            Some(b) => (b.trim_end_matches('_').to_string(), true),
+            None => (t, false),
+        };
+        let inner = body
+            .strip_prefix("b(")
+            .or_else(|| body.strip_prefix("beta("))?
+            .strip_suffix(')')?;
+        let mut parts = inner.split(',');
+        let r: u8 = parts.next()?.trim().parse().ok()?;
+        let c: u8 = parts.next()?.trim().parse().ok()?;
+        Some(if test {
+            KernelKind::BetaTest(r, c)
+        } else {
+            KernelKind::Beta(r, c)
+        })
+    }
+}
+
+impl std::fmt::Display for KernelKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match *self {
+            KernelKind::Csr => write!(f, "csr"),
+            KernelKind::Csr5 => write!(f, "csr5"),
+            KernelKind::Beta(r, c) => write!(f, "b({r},{c})"),
+            KernelKind::BetaTest(r, c) => write!(f, "b({r},{c})test"),
+        }
+    }
+}
+
+/// Executes the β-format SpMV `y += A·x`, dispatching to the AVX-512
+/// specialization when the CPU supports it and the block size is one of
+/// the six optimized ones, otherwise to the generic scalar kernel.
+/// `test` selects the Algorithm-2 variant (β(1,8) and β(2,4) only, as
+/// in the paper).
+pub fn spmv_block(bm: &BlockMatrix, x: &[f64], y: &mut [f64], test: bool) {
+    assert_eq!(x.len(), bm.cols, "x length mismatch");
+    assert_eq!(y.len(), bm.rows, "y length mismatch");
+    if crate::util::avx512_available() && avx512::spmv(bm, x, y, test) {
+        return;
+    }
+    if test {
+        scalar::spmv_generic_test(bm, x, y);
+    } else {
+        scalar::spmv_generic(bm, x, y);
+    }
+}
+
+/// Pre-converted storage bundle: run any [`KernelKind`] on one matrix.
+/// Conversion happens once in [`KernelSet::prepare`] so benchmark loops
+/// measure only the SpMV itself (the paper's protocol).
+pub struct KernelSet {
+    pub csr: Csr,
+    blocks: std::collections::HashMap<BlockSize, BlockMatrix>,
+    csr5: Option<csr5::Csr5Matrix>,
+}
+
+impl KernelSet {
+    /// Prepares every storage needed to run `kinds` on `csr`.
+    pub fn prepare(csr: Csr, kinds: &[KernelKind]) -> Self {
+        let mut blocks = std::collections::HashMap::new();
+        let mut want_csr5 = false;
+        for k in kinds {
+            match k {
+                KernelKind::Csr5 => want_csr5 = true,
+                _ => {
+                    if let Some(bs) = k.block_size() {
+                        blocks.entry(bs).or_insert_with(|| {
+                            crate::formats::csr_to_block(&csr, bs)
+                                .expect("paper sizes are valid")
+                        });
+                    }
+                }
+            }
+        }
+        let csr5 = want_csr5.then(|| csr5::Csr5Matrix::from_csr(&csr));
+        KernelSet { csr, blocks, csr5 }
+    }
+
+    /// Runs `y += A·x` with the chosen kernel.
+    pub fn spmv(&self, kind: KernelKind, x: &[f64], y: &mut [f64]) {
+        match kind {
+            KernelKind::Csr => csr::spmv(&self.csr, x, y),
+            KernelKind::Csr5 => {
+                self.csr5.as_ref().expect("csr5 prepared").spmv(x, y)
+            }
+            KernelKind::Beta(..) | KernelKind::BetaTest(..) => {
+                let bs = kind.block_size().unwrap();
+                let bm = self
+                    .blocks
+                    .get(&bs)
+                    .expect("block storage prepared for kernel");
+                spmv_block(bm, x, y, matches!(kind, KernelKind::BetaTest(..)));
+            }
+        }
+    }
+
+    /// Access a prepared block matrix (for stats/occupancy reporting).
+    pub fn block(&self, bs: BlockSize) -> Option<&BlockMatrix> {
+        self.blocks.get(&bs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip() {
+        for k in KernelKind::ALL {
+            assert_eq!(KernelKind::parse(&k.to_string()), Some(k));
+        }
+        assert_eq!(KernelKind::parse("B(4,8)"), Some(KernelKind::Beta(4, 8)));
+        assert_eq!(
+            KernelKind::parse("beta(1,8)test"),
+            Some(KernelKind::BetaTest(1, 8))
+        );
+        assert_eq!(KernelKind::parse("nope"), None);
+        assert_eq!(KernelKind::parse("b(x,8)"), None);
+    }
+
+    #[test]
+    fn kernel_set_runs_all() {
+        let csr = crate::matrix::suite::poisson2d(20);
+        let set = KernelSet::prepare(csr.clone(), &KernelKind::ALL);
+        let x: Vec<f64> = (0..csr.cols).map(|i| (i % 7) as f64 - 3.0).collect();
+        let mut want = vec![0.0; csr.rows];
+        csr.spmv_ref(&x, &mut want);
+        for k in KernelKind::ALL {
+            let mut y = vec![0.0; csr.rows];
+            set.spmv(k, &x, &mut y);
+            for i in 0..y.len() {
+                assert!(
+                    (y[i] - want[i]).abs() <= 1e-9 * want[i].abs().max(1.0),
+                    "{k} row {i}: {} vs {}",
+                    y[i],
+                    want[i]
+                );
+            }
+        }
+    }
+}

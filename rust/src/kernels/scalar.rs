@@ -1,0 +1,254 @@
+//! Portable scalar kernels — the paper's Algorithm 1 (generic `β(r,c)`
+//! SpMV) and Algorithm 2 (the `test` variant with separate scalar /
+//! vector inner loops).
+//!
+//! These are the semantic reference for the AVX-512 specializations and
+//! the fallback on non-AVX-512 hosts.
+
+use super::avx512::Span;
+use crate::formats::{BlockMatrix, BlockSize};
+
+/// Algorithm 1: generic scalar SpMV for any block size, `y += A·x`.
+///
+/// Iterates row intervals with step `r`; inside an interval walks the
+/// blocks left-to-right, accumulating one partial sum per block row and
+/// flushing into `y` at interval end — exactly the structure the
+/// vectorized kernels replicate.
+pub fn spmv_generic(bm: &BlockMatrix, x: &[f64], y: &mut [f64]) {
+    let (r, c) = (bm.bs.r, bm.bs.c);
+    let mut idx_val = 0usize;
+    let mut sums = vec![0.0f64; r];
+    for it in 0..bm.intervals() {
+        let row0 = it * r;
+        let (a, b) =
+            (bm.block_rowptr[it] as usize, bm.block_rowptr[it + 1] as usize);
+        sums.iter_mut().for_each(|s| *s = 0.0);
+        for blk in a..b {
+            let col0 = bm.block_colidx[blk] as usize;
+            for i in 0..r {
+                let mask = bm.block_masks[blk * r + i];
+                if mask == 0 {
+                    continue;
+                }
+                let mut sum = sums[i];
+                for k in 0..c {
+                    if mask & (1 << k) != 0 {
+                        sum += x[col0 + k] * bm.values[idx_val];
+                        idx_val += 1;
+                    }
+                }
+                sums[i] = sum;
+            }
+        }
+        let rows_here = r.min(bm.rows - row0);
+        for i in 0..rows_here {
+            y[row0 + i] += sums[i];
+        }
+    }
+    debug_assert_eq!(idx_val, bm.values.len());
+}
+
+/// Algorithm 2: the `test` variant. Blocks whose mask has exactly one
+/// set bit are handled by a scalar multiply (no vector load of `x`, no
+/// expand); denser blocks take the block path. The two inner loops and
+/// the jump between them mirror the paper's goto structure: the state
+/// machine stays in one mode across consecutive blocks of the same
+/// kind, which is what makes the branch predictable.
+pub fn spmv_generic_test(bm: &BlockMatrix, x: &[f64], y: &mut [f64]) {
+    let (r, c) = (bm.bs.r, bm.bs.c);
+    let mut idx_val = 0usize;
+    let mut sums = vec![0.0f64; r];
+    for it in 0..bm.intervals() {
+        let row0 = it * r;
+        let (a, b) =
+            (bm.block_rowptr[it] as usize, bm.block_rowptr[it + 1] as usize);
+        sums.iter_mut().for_each(|s| *s = 0.0);
+
+        let mut blk = a;
+        // Mode flag emulating the two jump-connected loops of Alg. 2.
+        // `single` ⇔ currently in the "mask has one bit" loop.
+        let mut single = true;
+        while blk < b {
+            let col0 = bm.block_colidx[blk] as usize;
+            // Popcount over the whole block (all r mask bytes).
+            let mut pop = 0u32;
+            for i in 0..r {
+                pop += bm.block_masks[blk * r + i].count_ones();
+            }
+            if pop == 1 {
+                if !single {
+                    single = true; // jump: vector loop → scalar loop
+                }
+                // Single value: locate its (row, lane) and multiply.
+                for i in 0..r {
+                    let mask = bm.block_masks[blk * r + i];
+                    if mask != 0 {
+                        let k = mask.trailing_zeros() as usize;
+                        sums[i] += x[col0 + k] * bm.values[idx_val];
+                        idx_val += 1;
+                        break;
+                    }
+                }
+            } else {
+                if single {
+                    single = false; // jump: scalar loop → vector loop
+                }
+                for i in 0..r {
+                    let mask = bm.block_masks[blk * r + i];
+                    if mask == 0 {
+                        continue;
+                    }
+                    let mut sum = sums[i];
+                    for k in 0..c {
+                        if mask & (1 << k) != 0 {
+                            sum += x[col0 + k] * bm.values[idx_val];
+                            idx_val += 1;
+                        }
+                    }
+                    sums[i] = sum;
+                }
+            }
+            blk += 1;
+        }
+        let rows_here = r.min(bm.rows - row0);
+        for i in 0..rows_here {
+            y[row0 + i] += sums[i];
+        }
+    }
+    debug_assert_eq!(idx_val, bm.values.len());
+}
+
+/// Span-based Algorithm 1 (the portable counterpart of
+/// [`super::avx512::spmv_span`], used by the parallel runtime on
+/// non-AVX-512 hosts). `y` is span-local.
+pub fn spmv_generic_span(span: Span<'_>, bs: BlockSize, x: &[f64], y: &mut [f64]) {
+    let (r, c) = (bs.r, bs.c);
+    let stride = 4 + r;
+    let intervals = span.rowptr.len() - 1;
+    let mut idx_val = 0usize;
+    let mut hp = 0usize;
+    let mut sums = vec![0.0f64; r];
+    for it in 0..intervals {
+        let nb = (span.rowptr[it + 1] - span.rowptr[it]) as usize;
+        if nb == 0 {
+            continue;
+        }
+        sums.iter_mut().for_each(|s| *s = 0.0);
+        for _ in 0..nb {
+            let h = &span.headers[hp..hp + stride];
+            let col0 = u32::from_le_bytes([h[0], h[1], h[2], h[3]]) as usize;
+            for i in 0..r {
+                let mask = h[4 + i];
+                if mask == 0 {
+                    continue;
+                }
+                let mut sum = sums[i];
+                for k in 0..c {
+                    if mask & (1 << k) != 0 {
+                        sum += x[col0 + k] * span.values[idx_val];
+                        idx_val += 1;
+                    }
+                }
+                sums[i] = sum;
+            }
+            hp += stride;
+        }
+        let row0 = it * r;
+        let rows_here = r.min(span.rows - row0);
+        for i in 0..rows_here {
+            y[row0 + i] += sums[i];
+        }
+    }
+    debug_assert_eq!(idx_val, span.values.len());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::csr_to_block;
+    use crate::matrix::{suite, Csr};
+
+    fn check(csr: &Csr, bs: BlockSize, test: bool) {
+        let bm = csr_to_block(csr, bs).unwrap();
+        let x: Vec<f64> =
+            (0..csr.cols).map(|i| ((i * 37) % 11) as f64 - 5.0).collect();
+        let mut want = vec![0.0; csr.rows];
+        csr.spmv_ref(&x, &mut want);
+        let mut got = vec![0.0; csr.rows];
+        if test {
+            spmv_generic_test(&bm, &x, &mut got);
+        } else {
+            spmv_generic(&bm, &x, &mut got);
+        }
+        for i in 0..csr.rows {
+            assert!(
+                (got[i] - want[i]).abs() <= 1e-9 * want[i].abs().max(1.0),
+                "{bs} test={test} row {i}: {} vs {}",
+                got[i],
+                want[i]
+            );
+        }
+    }
+
+    #[test]
+    fn generic_matches_csr_all_sizes() {
+        for sm in suite::test_subset() {
+            for bs in BlockSize::PAPER_SIZES {
+                check(&sm.csr, bs, false);
+            }
+        }
+    }
+
+    #[test]
+    fn test_variant_matches_csr_all_sizes() {
+        for sm in suite::test_subset() {
+            for bs in BlockSize::PAPER_SIZES {
+                check(&sm.csr, bs, true);
+            }
+        }
+    }
+
+    #[test]
+    fn non_paper_sizes_work_too() {
+        // Generic kernel accepts any r*c<=64, c<=8 (e.g. the paper's
+        // Fig. 2 β(1,4)/β(2,2) illustrations).
+        let sm = &suite::test_subset()[1];
+        for bs in [
+            BlockSize::new(1, 4),
+            BlockSize::new(2, 2),
+            BlockSize::new(3, 5),
+            BlockSize::new(8, 8),
+        ] {
+            check(&sm.csr, bs, false);
+            check(&sm.csr, bs, true);
+        }
+    }
+
+    #[test]
+    fn span_version_matches_full() {
+        let csr = suite::poisson2d(16);
+        for bs in BlockSize::PAPER_SIZES {
+            let bm = csr_to_block(&csr, bs).unwrap();
+            let x: Vec<f64> = (0..csr.cols).map(|i| (i % 5) as f64).collect();
+            let mut want = vec![0.0; csr.rows];
+            spmv_generic(&bm, &x, &mut want);
+            let mut got = vec![0.0; csr.rows];
+            spmv_generic_span(Span::full(&bm), bs, &x, &mut got);
+            for i in 0..csr.rows {
+                assert!((got[i] - want[i]).abs() < 1e-12, "{bs} row {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn accumulates_into_y() {
+        let csr = suite::poisson2d(8);
+        let bm = csr_to_block(&csr, BlockSize::new(2, 4)).unwrap();
+        let x = vec![1.0; csr.cols];
+        let mut y = vec![10.0; csr.rows];
+        spmv_generic(&bm, &x, &mut y);
+        let mut want = vec![10.0; csr.rows];
+        csr.spmv_ref(&x, &mut want);
+        assert_eq!(y, want);
+    }
+}

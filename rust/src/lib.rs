@@ -1,0 +1,51 @@
+//! # SPC5-RS — block-based SpMV without zero padding
+//!
+//! Reproduction of Bramas & Kus, *"Computing the sparse matrix vector
+//! product using block-based kernels without zero padding on processors
+//! with AVX-512 instructions"* (PeerJ CS, 2018) — the SPC5 library —
+//! as a three-layer Rust + JAX + Pallas system.
+//!
+//! The crate provides:
+//!
+//! - [`matrix`] — sparse-matrix substrate: COO / CSR containers,
+//!   MatrixMarket I/O, a dense oracle, and deterministic synthetic
+//!   generators reproducing the structural classes of the paper's
+//!   SuiteSparse benchmark sets (Set-A / Set-B).
+//! - [`formats`] — the paper's contribution: `β(r,c)` block formats that
+//!   store one *bitmask per block* instead of zero padding, conversion
+//!   from CSR, block statistics and the memory-occupancy model
+//!   (paper Eq. 1–4).
+//! - [`kernels`] — SpMV kernels: the generic scalar Algorithm 1, native
+//!   AVX-512 `vexpandpd` kernels for the six paper block sizes, the
+//!   Algorithm 2 "test" variants, a tuned CSR baseline (MKL stand-in)
+//!   and a full CSR5 re-implementation (Liu & Vinter 2015).
+//! - [`parallel`] — the paper's static block-balanced shared-memory
+//!   parallelization with per-thread result buffers, syncless merge and
+//!   an optional NUMA-style array split.
+//! - [`predictor`] — the record-based kernel-selection system:
+//!   polynomial interpolation (sequential, Fig. 5) and 2D regression
+//!   (parallel, Fig. 6) over performance records.
+//! - [`runtime`] — PJRT/XLA executor loading AOT artifacts produced by
+//!   the Python (JAX + Pallas) compile path.
+//! - [`coordinator`] — the `SpmvEngine` facade tying everything
+//!   together (stats → predict → convert → dispatch) plus a CG solver.
+//! - [`bench`] — the measurement harness used by `cargo bench` targets
+//!   that regenerate every table and figure of the paper.
+
+pub mod bench;
+pub mod coordinator;
+pub mod formats;
+pub mod kernels;
+pub mod matrix;
+pub mod parallel;
+pub mod predictor;
+pub mod runtime;
+pub mod testkit;
+pub mod util;
+
+/// Number of f64 lanes in a 512-bit vector — the paper's `VEC_SIZE`.
+pub const VEC_SIZE: usize = 8;
+
+pub use formats::{BlockMatrix, BlockSize};
+pub use kernels::KernelKind;
+pub use matrix::{Coo, Csr};

@@ -1,0 +1,369 @@
+//! `spc5` — command-line interface to the SPC5-RS library.
+//!
+//! Subcommands:
+//! - `stats   --set A|B | --matrix NAME | --mtx FILE` — Table 1/2 rows.
+//! - `spmv    --matrix NAME [--kernel K] [--threads N] [--numa]` —
+//!   one measured SpMV (16-run mean, like the paper).
+//! - `predict --matrix NAME [--threads N] [--records FILE]` — kernel
+//!   selection from recorded performance.
+//! - `cg      [--n N] [--iters K] [--engine native|xla]` — conjugate
+//!   gradient on the 2D Poisson system; `xla` runs the AOT artifact.
+//! - `gen     --class CLASS --out FILE.mtx [--dim D]` — write a
+//!   synthetic matrix in MatrixMarket format.
+//! - `kernels` — list kernels and CPU feature support.
+
+use spc5::bench;
+use spc5::coordinator::{cg_solve, EngineConfig, SpmvEngine};
+use spc5::formats::stats::paper_profile;
+use spc5::kernels::{KernelKind, KernelSet};
+use spc5::matrix::{market, suite, Csr};
+use spc5::predictor::{select_parallel, select_sequential, RecordStore};
+use spc5::util::Rng;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+/// Tiny argument parser: `--key value` pairs + positional subcommand.
+struct Args {
+    flags: std::collections::HashMap<String, String>,
+}
+
+impl Args {
+    fn parse(rest: &[String]) -> anyhow::Result<Args> {
+        let mut flags = std::collections::HashMap::new();
+        let mut i = 0;
+        while i < rest.len() {
+            let a = &rest[i];
+            if let Some(key) = a.strip_prefix("--") {
+                // boolean flags: --numa, --csv
+                if i + 1 >= rest.len() || rest[i + 1].starts_with("--") {
+                    flags.insert(key.to_string(), "true".to_string());
+                    i += 1;
+                } else {
+                    flags.insert(key.to_string(), rest[i + 1].clone());
+                    i += 2;
+                }
+            } else {
+                anyhow::bail!("unexpected argument '{a}'");
+            }
+        }
+        Ok(Args { flags })
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    fn get_usize(&self, key: &str, default: usize) -> anyhow::Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key} expects a number")),
+        }
+    }
+
+    fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+}
+
+fn load_matrix(a: &Args) -> anyhow::Result<(String, Csr)> {
+    if let Some(name) = a.get("matrix") {
+        let sm = suite::by_name(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown suite matrix '{name}'"))?;
+        Ok((sm.name.to_string(), sm.csr))
+    } else if let Some(path) = a.get("mtx") {
+        let coo = market::read_file(path)?;
+        Ok((path.to_string(), coo.to_csr()?))
+    } else {
+        anyhow::bail!("need --matrix NAME or --mtx FILE (see `spc5 stats --set A` for names)")
+    }
+}
+
+fn run(args: &[String]) -> anyhow::Result<()> {
+    let Some(cmd) = args.first() else {
+        print_help();
+        return Ok(());
+    };
+    let a = Args::parse(&args[1..])?;
+    match cmd.as_str() {
+        "stats" => cmd_stats(&a),
+        "spmv" => cmd_spmv(&a),
+        "predict" => cmd_predict(&a),
+        "cg" => cmd_cg(&a),
+        "gen" => cmd_gen(&a),
+        "kernels" => cmd_kernels(),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => anyhow::bail!("unknown subcommand '{other}' (try `spc5 help`)"),
+    }
+}
+
+fn print_help() {
+    println!(
+        "spc5 — block-based SpMV without zero padding (SPC5 reproduction)\n\
+         \n\
+         usage: spc5 <command> [--flags]\n\
+         \n\
+         commands:\n\
+         \x20 stats    --set A|B | --matrix NAME | --mtx FILE   block-fill stats (Tables 1/2)\n\
+         \x20 spmv     --matrix NAME [--kernel K] [--threads N] [--numa]\n\
+         \x20 predict  --matrix NAME [--threads N] [--records FILE]\n\
+         \x20 cg       [--n N] [--iters K] [--engine native|xla] [--threads N]\n\
+         \x20 gen      --class CLASS --out FILE.mtx [--dim D] [--seed S]\n\
+         \x20 kernels  list kernels + CPU support\n"
+    );
+}
+
+fn cmd_stats(a: &Args) -> anyhow::Result<()> {
+    let matrices: Vec<(String, Csr)> = if let Some(set) = a.get("set") {
+        let list = match set.to_ascii_uppercase().as_str() {
+            "A" => suite::set_a(),
+            "B" => suite::set_b(),
+            _ => anyhow::bail!("--set expects A or B"),
+        };
+        list.into_iter().map(|m| (m.name.to_string(), m.csr)).collect()
+    } else {
+        vec![load_matrix(a)?]
+    };
+
+    println!(
+        "{:<20} {:>9} {:>11} {:>8}  {}",
+        "name", "dim", "nnz", "nnz/row", "Avg(r,c) [fill%] for the six paper sizes"
+    );
+    for (name, csr) in matrices {
+        let prof = paper_profile(&csr);
+        let cells: Vec<String> = prof
+            .iter()
+            .map(|s| {
+                format!(
+                    "{}={:.1}({:.0}%)",
+                    s.bs,
+                    s.avg_nnz_per_block,
+                    100.0 * s.fill_fraction
+                )
+            })
+            .collect();
+        println!(
+            "{:<20} {:>9} {:>11} {:>8.1}  {}",
+            name,
+            csr.rows,
+            csr.nnz(),
+            csr.nnz_per_row(),
+            cells.join(" ")
+        );
+    }
+    Ok(())
+}
+
+fn cmd_spmv(a: &Args) -> anyhow::Result<()> {
+    let (name, csr) = load_matrix(a)?;
+    let kernel = match a.get("kernel") {
+        None => KernelKind::Beta(1, 8),
+        Some(k) => KernelKind::parse(k)
+            .ok_or_else(|| anyhow::anyhow!("bad kernel '{k}' (try b(4,8), csr, csr5)"))?,
+    };
+    let threads = a.get_usize("threads", 1)?;
+    let nnz = csr.nnz();
+
+    let m = if threads <= 1 || kernel.block_size().is_none() {
+        let set = KernelSet::prepare(csr, &[kernel]);
+        bench::measure_sequential(&set, &name, kernel)
+    } else {
+        let bs = kernel.block_size().unwrap();
+        let bm = spc5::formats::csr_to_block(&csr, bs)?;
+        let strategy = if a.has("numa") {
+            spc5::parallel::ParallelStrategy::NumaSplit
+        } else {
+            spc5::parallel::ParallelStrategy::Shared
+        };
+        let p = spc5::parallel::ParallelSpmv::new(
+            bm,
+            threads,
+            strategy,
+            matches!(kernel, KernelKind::BetaTest(..)),
+        );
+        bench::measure_parallel(&p, &name, kernel)
+    };
+    println!(
+        "{name}: kernel={} threads={} numa={} nnz={} time={:.6}s gflops={:.3}",
+        m.kernel, m.threads, m.numa, nnz, m.seconds, m.gflops
+    );
+    Ok(())
+}
+
+
+fn cmd_predict(a: &Args) -> anyhow::Result<()> {
+    let (name, csr) = load_matrix(a)?;
+    let threads = a.get_usize("threads", 1)?;
+    let path = a
+        .get("records")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(bench::records_path);
+    anyhow::ensure!(
+        path.exists(),
+        "no record store at {} — run `cargo bench --bench fig3_sequential` \
+         (or fig4_parallel) first, or pass --records",
+        path.display()
+    );
+    let store = RecordStore::load(&path)?;
+    let kinds = KernelKind::SPC5_KERNELS;
+    let sel = if threads > 1 {
+        select_parallel(&csr, &store, &kinds, threads)
+    } else {
+        select_sequential(&csr, &store, &kinds)
+    }
+    .ok_or_else(|| anyhow::anyhow!("record store has no usable records"))?;
+    println!("matrix {name} (threads={threads}):");
+    for (k, p) in &sel.all {
+        let marker = if *k == sel.kernel { " <= selected" } else { "" };
+        println!("  {k:<12} predicted {p:.3} GFlop/s{marker}");
+    }
+    Ok(())
+}
+
+fn cmd_cg(a: &Args) -> anyhow::Result<()> {
+    let n = a.get_usize("n", 64)?;
+    let iters = a.get_usize("iters", 200)?;
+    let threads = a.get_usize("threads", 1)?;
+    let engine_kind = a.get("engine").unwrap_or("native");
+    let csr = suite::poisson2d(n);
+    let dim = csr.rows;
+    let mut rng = Rng::new(0xC6);
+    let b: Vec<f64> = (0..dim).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+
+    match engine_kind {
+        "native" => {
+            let cfg = EngineConfig { threads, ..Default::default() };
+            let engine = SpmvEngine::new(csr.clone(), &cfg, None)?;
+            let mut x = vec![0.0; dim];
+            let t = spc5::util::Timer::start();
+            let report = cg_solve(&engine, &b, &mut x, iters, 1e-20);
+            let secs = t.elapsed_s();
+            let gflops = 2.0 * csr.nnz() as f64 * report.spmv_count as f64
+                / secs
+                / 1e9;
+            println!(
+                "native CG: n={n} dim={dim} kernel={} threads={threads} \
+                 iters={} residual2={:.3e} converged={} time={:.3}s \
+                 spmv-gflops={:.3}",
+                engine.kernel(),
+                report.iterations,
+                report.residual_norm2,
+                report.converged,
+                secs,
+                gflops
+            );
+        }
+        "xla" => {
+            let dir = a.get("artifacts").unwrap_or("artifacts");
+            let mut engine = spc5::runtime::XlaEngine::new(dir)?;
+            println!("PJRT platform: {}", engine.platform());
+            engine.validate_matrix("cg", &csr)?;
+            let w = engine.manifest.workload("cg")?.clone();
+            anyhow::ensure!(
+                w.iters == Some(iters),
+                "artifact compiled for {} iters; pass --iters {} or re-run \
+                 `make artifacts`",
+                w.iters.unwrap_or(0),
+                w.iters.unwrap_or(0)
+            );
+            let exe = engine.executor("cg")?;
+            let x0 = vec![0.0f64; dim];
+            let t = spc5::util::Timer::start();
+            let out = exe.run_f64(&[&csr.values, &b, &x0])?;
+            let secs = t.elapsed_s();
+            let rs = out[1][0];
+            println!(
+                "xla CG: n={n} dim={dim} iters={iters} residual2={rs:.3e} \
+                 time={:.3}s (single compiled executable, Pallas SpMV inside)",
+                secs
+            );
+            // Cross-check against the native solution.
+            let mut ax = vec![0.0; dim];
+            csr.spmv_ref(&out[0], &mut ax);
+            let err: f64 = ax
+                .iter()
+                .zip(&b)
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum::<f64>()
+                .sqrt();
+            println!("xla CG: ‖A·x − b‖ = {err:.3e}");
+        }
+        other => anyhow::bail!("--engine expects native|xla, got '{other}'"),
+    }
+    Ok(())
+}
+
+fn cmd_gen(a: &Args) -> anyhow::Result<()> {
+    let class = a
+        .get("class")
+        .ok_or_else(|| anyhow::anyhow!("--class required (fem, stencil, circuit, rmat, scatter, dense, banded, web, contact, quantum)"))?;
+    let out = a.get("out").ok_or_else(|| anyhow::anyhow!("--out required"))?;
+    let dim = a.get_usize("dim", 4096)?;
+    let seed = a.get_usize("seed", 1)? as u64;
+    let csr = match class {
+        "fem" => suite::fem_blocked(dim / 3, 3, 7, seed),
+        "stencil" => {
+            let s = (dim as f64).cbrt().ceil() as usize;
+            suite::stencil3d(s, s, s)
+        }
+        "circuit" => suite::circuit(dim, 4, 8, seed),
+        "rmat" => suite::rmat((dim as f64).log2().ceil() as u32, 16, seed),
+        "scatter" => suite::uniform_scatter(dim, 20, seed),
+        "dense" => suite::dense(dim.min(4096), seed),
+        "banded" => suite::banded(dim, 16, 0.2, seed),
+        "web" => suite::webgraph(dim, 14, 0.7, seed),
+        "contact" => suite::contact_runs(dim, 3, 48, seed),
+        "quantum" => suite::quantum_clusters(dim, 5, 12, 12, seed),
+        other => anyhow::bail!("unknown class '{other}'"),
+    };
+    let mut coo = spc5::matrix::Coo::new(csr.rows, csr.cols);
+    for r in 0..csr.rows {
+        for k in csr.row_range(r) {
+            coo.push(r, csr.colidx[k] as usize, csr.values[k]);
+        }
+    }
+    market::write_file(out, &coo)?;
+    println!(
+        "wrote {out}: {}x{} nnz={} class={class}",
+        csr.rows,
+        csr.cols,
+        csr.nnz()
+    );
+    Ok(())
+}
+
+fn cmd_kernels() -> anyhow::Result<()> {
+    println!(
+        "AVX-512 available: {}",
+        spc5::util::avx512_available()
+    );
+    println!("kernels:");
+    for k in KernelKind::ALL {
+        let simd = match k {
+            KernelKind::Csr | KernelKind::Csr5 => "portable",
+            _ => {
+                if spc5::util::avx512_available() {
+                    "avx512 vexpandpd"
+                } else {
+                    "scalar fallback"
+                }
+            }
+        };
+        println!("  {k:<12} [{simd}]");
+    }
+    Ok(())
+}

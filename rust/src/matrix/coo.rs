@@ -1,0 +1,143 @@
+//! Coordinate (COO) sparse matrix — the assembly / interchange format.
+
+use super::{Csr, MatrixError, Result};
+
+/// A sparse matrix as unsorted `(row, col, value)` triplets.
+///
+/// COO is the natural assembly format (FEM codes, generators, file
+/// readers all emit triplets); every other format in the crate is
+/// produced from it through [`Coo::to_csr`].
+#[derive(Clone, Debug, Default)]
+pub struct Coo {
+    pub rows: usize,
+    pub cols: usize,
+    pub entries: Vec<(u32, u32, f64)>,
+}
+
+impl Coo {
+    /// Creates an empty matrix of the given dimensions.
+    pub fn new(rows: usize, cols: usize) -> Self {
+        Coo { rows, cols, entries: Vec::new() }
+    }
+
+    /// Adds one entry. Duplicate `(r, c)` pairs are summed by `to_csr`.
+    #[inline]
+    pub fn push(&mut self, r: usize, c: usize, v: f64) {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.entries.push((r as u32, c as u32, v));
+    }
+
+    /// Number of stored triplets (before duplicate merging).
+    pub fn nnz(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Validates all indices are in bounds.
+    pub fn validate(&self) -> Result<()> {
+        for &(r, c, v) in &self.entries {
+            if r as usize >= self.rows || c as usize >= self.cols {
+                return Err(MatrixError::Invalid(format!(
+                    "entry ({r},{c}) out of bounds for {}x{}",
+                    self.rows, self.cols
+                )));
+            }
+            if !v.is_finite() {
+                return Err(MatrixError::Invalid(format!(
+                    "non-finite value at ({r},{c})"
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// Converts to CSR: sorts row-major then column-ascending (the order
+    /// the paper's formats require), merging duplicates by addition and
+    /// dropping explicit zeros that result from cancellation.
+    pub fn to_csr(&self) -> Result<Csr> {
+        self.validate()?;
+        let mut ents = self.entries.clone();
+        ents.sort_unstable_by(|a, b| (a.0, a.1).cmp(&(b.0, b.1)));
+
+        let mut rowptr = vec![0u32; self.rows + 1];
+        let mut colidx: Vec<u32> = Vec::with_capacity(ents.len());
+        let mut values: Vec<f64> = Vec::with_capacity(ents.len());
+
+        let mut i = 0;
+        while i < ents.len() {
+            let (r, c, mut v) = ents[i];
+            let mut j = i + 1;
+            while j < ents.len() && ents[j].0 == r && ents[j].1 == c {
+                v += ents[j].2;
+                j += 1;
+            }
+            i = j;
+            if v != 0.0 {
+                colidx.push(c);
+                values.push(v);
+                rowptr[r as usize + 1] += 1;
+            }
+        }
+        for r in 0..self.rows {
+            rowptr[r + 1] += rowptr[r];
+        }
+        Csr::from_raw(self.rows, self.cols, rowptr, colidx, values)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_matrix() {
+        let coo = Coo::new(4, 4);
+        let csr = coo.to_csr().unwrap();
+        assert_eq!(csr.nnz(), 0);
+        assert_eq!(csr.rowptr, vec![0, 0, 0, 0, 0]);
+    }
+
+    #[test]
+    fn duplicates_are_summed() {
+        let mut coo = Coo::new(2, 2);
+        coo.push(0, 0, 1.0);
+        coo.push(0, 0, 2.0);
+        coo.push(1, 1, 5.0);
+        let csr = coo.to_csr().unwrap();
+        assert_eq!(csr.nnz(), 2);
+        assert_eq!(csr.values, vec![3.0, 5.0]);
+    }
+
+    #[test]
+    fn cancellation_drops_entry() {
+        let mut coo = Coo::new(1, 2);
+        coo.push(0, 1, 2.0);
+        coo.push(0, 1, -2.0);
+        let csr = coo.to_csr().unwrap();
+        assert_eq!(csr.nnz(), 0);
+    }
+
+    #[test]
+    fn unsorted_input_sorted_in_csr() {
+        let mut coo = Coo::new(3, 4);
+        coo.push(2, 3, 1.0);
+        coo.push(0, 2, 2.0);
+        coo.push(0, 0, 3.0);
+        coo.push(2, 0, 4.0);
+        let csr = coo.to_csr().unwrap();
+        assert_eq!(csr.rowptr, vec![0, 2, 2, 4]);
+        assert_eq!(csr.colidx, vec![0, 2, 0, 3]);
+        assert_eq!(csr.values, vec![3.0, 2.0, 4.0, 1.0]);
+    }
+
+    #[test]
+    fn out_of_bounds_rejected() {
+        let coo = Coo { rows: 2, cols: 2, entries: vec![(2, 0, 1.0)] };
+        assert!(coo.to_csr().is_err());
+    }
+
+    #[test]
+    fn non_finite_rejected() {
+        let coo = Coo { rows: 1, cols: 1, entries: vec![(0, 0, f64::NAN)] };
+        assert!(coo.to_csr().is_err());
+    }
+}

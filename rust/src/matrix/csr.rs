@@ -1,0 +1,264 @@
+//! Compressed Sparse Row (CSR) — the de-facto standard SpMV storage and
+//! the paper's baseline format (Fig. 1).
+
+use super::{Dense, MatrixError, Result};
+
+/// CSR matrix: `rowptr` (len rows+1), `colidx` + `values` (len nnz),
+/// rows stored contiguously with ascending column indices.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Csr {
+    pub rows: usize,
+    pub cols: usize,
+    pub rowptr: Vec<u32>,
+    pub colidx: Vec<u32>,
+    pub values: Vec<f64>,
+}
+
+impl Csr {
+    /// Builds from raw arrays after validating the CSR invariants:
+    /// monotone rowptr, in-bounds strictly-ascending columns per row.
+    pub fn from_raw(
+        rows: usize,
+        cols: usize,
+        rowptr: Vec<u32>,
+        colidx: Vec<u32>,
+        values: Vec<f64>,
+    ) -> Result<Self> {
+        if rowptr.len() != rows + 1 {
+            return Err(MatrixError::Invalid(format!(
+                "rowptr length {} != rows+1 ({})",
+                rowptr.len(),
+                rows + 1
+            )));
+        }
+        if colidx.len() != values.len() {
+            return Err(MatrixError::Invalid(format!(
+                "colidx length {} != values length {}",
+                colidx.len(),
+                values.len()
+            )));
+        }
+        if rowptr[0] != 0 || rowptr[rows] as usize != colidx.len() {
+            return Err(MatrixError::Invalid(
+                "rowptr does not span [0, nnz]".to_string(),
+            ));
+        }
+        for r in 0..rows {
+            let (a, b) = (rowptr[r] as usize, rowptr[r + 1] as usize);
+            if b < a {
+                return Err(MatrixError::Invalid(format!(
+                    "rowptr not monotone at row {r}"
+                )));
+            }
+            let mut prev: i64 = -1;
+            for k in a..b {
+                let c = colidx[k] as i64;
+                if c <= prev {
+                    return Err(MatrixError::Invalid(format!(
+                        "columns not strictly ascending in row {r}"
+                    )));
+                }
+                if c as usize >= cols {
+                    return Err(MatrixError::Invalid(format!(
+                        "column {c} out of bounds in row {r}"
+                    )));
+                }
+                prev = c;
+            }
+        }
+        Ok(Csr { rows, cols, rowptr, colidx, values })
+    }
+
+    /// Number of stored nonzeros.
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Average nonzeros per row (`N_NNZ / N_rows`, Table 1 column 4).
+    pub fn nnz_per_row(&self) -> f64 {
+        if self.rows == 0 {
+            0.0
+        } else {
+            self.nnz() as f64 / self.rows as f64
+        }
+    }
+
+    /// The row range `[start, end)` into `colidx`/`values`.
+    #[inline]
+    pub fn row_range(&self, r: usize) -> std::ops::Range<usize> {
+        self.rowptr[r] as usize..self.rowptr[r + 1] as usize
+    }
+
+    /// Memory occupancy in bytes per the paper's Eq. (3):
+    /// `nnz*(S_int + S_float) + S_int*(rows+1)`.
+    pub fn occupancy_bytes(&self) -> usize {
+        self.nnz() * (4 + 8) + 4 * (self.rows + 1)
+    }
+
+    /// Reference sequential SpMV `y += A x` in pure safe Rust. This is
+    /// the semantic definition every kernel is tested against.
+    pub fn spmv_ref(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.cols);
+        assert_eq!(y.len(), self.rows);
+        for r in 0..self.rows {
+            let mut sum = 0.0;
+            for k in self.row_range(r) {
+                sum += self.values[k] * x[self.colidx[k] as usize];
+            }
+            y[r] += sum;
+        }
+    }
+
+    /// Materializes as a dense oracle (tests / tiny matrices only).
+    pub fn to_dense(&self) -> Dense {
+        let mut d = Dense::zeros(self.rows, self.cols);
+        for r in 0..self.rows {
+            for k in self.row_range(r) {
+                d.set(r, self.colidx[k] as usize, self.values[k]);
+            }
+        }
+        d
+    }
+
+    /// Extracts the sub-matrix of full rows `[r0, r1)` (used by the
+    /// NUMA-split parallel mode to give each thread its own arrays).
+    pub fn row_slice(&self, r0: usize, r1: usize) -> Csr {
+        assert!(r0 <= r1 && r1 <= self.rows);
+        let a = self.rowptr[r0] as usize;
+        let b = self.rowptr[r1] as usize;
+        let rowptr: Vec<u32> =
+            self.rowptr[r0..=r1].iter().map(|&p| p - self.rowptr[r0]).collect();
+        Csr {
+            rows: r1 - r0,
+            cols: self.cols,
+            rowptr,
+            colidx: self.colidx[a..b].to_vec(),
+            values: self.values[a..b].to_vec(),
+        }
+    }
+
+    /// Transposes the matrix (CSR → CSR of the transpose). Used by
+    /// generators to symmetrize patterns.
+    pub fn transpose(&self) -> Csr {
+        let mut rowptr = vec![0u32; self.cols + 1];
+        for &c in &self.colidx {
+            rowptr[c as usize + 1] += 1;
+        }
+        for c in 0..self.cols {
+            rowptr[c + 1] += rowptr[c];
+        }
+        let mut colidx = vec![0u32; self.nnz()];
+        let mut values = vec![0f64; self.nnz()];
+        let mut next = rowptr.clone();
+        for r in 0..self.rows {
+            for k in self.row_range(r) {
+                let c = self.colidx[k] as usize;
+                let dst = next[c] as usize;
+                colidx[dst] = r as u32;
+                values[dst] = self.values[k];
+                next[c] += 1;
+            }
+        }
+        Csr { rows: self.cols, cols: self.rows, rowptr, colidx, values }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The 8×8 example from the paper's Fig. 1.
+    pub fn paper_fig1() -> Csr {
+        let rowptr = vec![0, 4, 7, 10, 12, 14, 14, 15, 18];
+        let colidx = vec![0, 1, 4, 6, 1, 2, 3, 2, 4, 6, 3, 4, 5, 6, 5, 0, 4, 7];
+        let values: Vec<f64> = (1..=18).map(|v| v as f64).collect();
+        Csr::from_raw(8, 8, rowptr, colidx, values).unwrap()
+    }
+
+    #[test]
+    fn fig1_matrix_valid() {
+        let m = paper_fig1();
+        assert_eq!(m.nnz(), 18);
+        assert_eq!(m.row_range(5), 14..14); // empty row 5, like the paper
+    }
+
+    #[test]
+    fn spmv_matches_dense() {
+        let m = paper_fig1();
+        let x: Vec<f64> = (0..8).map(|i| 0.5 + i as f64).collect();
+        let mut y = vec![0.0; 8];
+        m.spmv_ref(&x, &mut y);
+        let d = m.to_dense();
+        let yd = d.matvec(&x);
+        for (a, b) in y.iter().zip(&yd) {
+            assert!((a - b).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn occupancy_eq3() {
+        let m = paper_fig1();
+        // 18*(4+8) + 4*9 = 216 + 36 = 252
+        assert_eq!(m.occupancy_bytes(), 252);
+    }
+
+    #[test]
+    fn invalid_rowptr_rejected() {
+        assert!(Csr::from_raw(2, 2, vec![0, 1], vec![0], vec![1.0]).is_err());
+        assert!(Csr::from_raw(2, 2, vec![0, 2, 1], vec![0, 1], vec![1.0, 2.0])
+            .is_err());
+        assert!(Csr::from_raw(1, 1, vec![1, 1], vec![], vec![]).is_err());
+    }
+
+    #[test]
+    fn non_ascending_columns_rejected() {
+        assert!(
+            Csr::from_raw(1, 4, vec![0, 2], vec![2, 1], vec![1.0, 2.0]).is_err()
+        );
+        // duplicate column
+        assert!(
+            Csr::from_raw(1, 4, vec![0, 2], vec![1, 1], vec![1.0, 2.0]).is_err()
+        );
+    }
+
+    #[test]
+    fn out_of_bounds_column_rejected() {
+        assert!(Csr::from_raw(1, 2, vec![0, 1], vec![5], vec![1.0]).is_err());
+    }
+
+    #[test]
+    fn row_slice_preserves_rows() {
+        let m = paper_fig1();
+        let s = m.row_slice(2, 5);
+        assert_eq!(s.rows, 3);
+        assert_eq!(s.nnz(), (m.rowptr[5] - m.rowptr[2]) as usize);
+        let x: Vec<f64> = (0..8).map(|i| i as f64 * 0.1).collect();
+        let mut y_full = vec![0.0; 8];
+        m.spmv_ref(&x, &mut y_full);
+        let mut y_slice = vec![0.0; 3];
+        s.spmv_ref(&x, &mut y_slice);
+        for i in 0..3 {
+            assert!((y_full[2 + i] - y_slice[i]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn transpose_twice_is_identity() {
+        let m = paper_fig1();
+        let tt = m.transpose().transpose();
+        assert_eq!(m, tt);
+    }
+
+    #[test]
+    fn transpose_matches_dense() {
+        let m = paper_fig1();
+        let t = m.transpose();
+        let d = m.to_dense();
+        for r in 0..8 {
+            for c in 0..8 {
+                assert_eq!(d.get(r, c), t.to_dense().get(c, r));
+            }
+        }
+    }
+}

@@ -1,0 +1,80 @@
+//! Dense matrix oracle — used only by tests and tiny examples to define
+//! ground-truth SpMV semantics.
+
+/// Row-major dense matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Dense {
+    pub rows: usize,
+    pub cols: usize,
+    data: Vec<f64>,
+}
+
+impl Dense {
+    /// All-zero matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Dense { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> f64 {
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: f64) {
+        self.data[r * self.cols + c] = v;
+    }
+
+    /// `y = A x` (fresh output).
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.cols);
+        let mut y = vec![0.0; self.rows];
+        for r in 0..self.rows {
+            let mut sum = 0.0;
+            for c in 0..self.cols {
+                sum += self.get(r, c) * x[c];
+            }
+            y[r] = sum;
+        }
+        y
+    }
+
+    /// Number of nonzero entries.
+    pub fn nnz(&self) -> usize {
+        self.data.iter().filter(|&&v| v != 0.0).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matvec_identity() {
+        let mut m = Dense::zeros(3, 3);
+        for i in 0..3 {
+            m.set(i, i, 1.0);
+        }
+        let x = vec![3.0, -1.0, 2.5];
+        assert_eq!(m.matvec(&x), x);
+    }
+
+    #[test]
+    fn matvec_rectangular() {
+        let mut m = Dense::zeros(2, 3);
+        m.set(0, 0, 1.0);
+        m.set(0, 2, 2.0);
+        m.set(1, 1, -1.0);
+        let y = m.matvec(&[1.0, 2.0, 3.0]);
+        assert_eq!(y, vec![7.0, -2.0]);
+    }
+
+    #[test]
+    fn nnz_counts() {
+        let mut m = Dense::zeros(2, 2);
+        assert_eq!(m.nnz(), 0);
+        m.set(0, 1, 4.0);
+        m.set(1, 0, -4.0);
+        assert_eq!(m.nnz(), 2);
+    }
+}

@@ -1,0 +1,296 @@
+//! MatrixMarket (.mtx) reader / writer.
+//!
+//! Supports the `matrix coordinate (real|integer|pattern)
+//! (general|symmetric|skew-symmetric)` subset — everything the
+//! SuiteSparse collection uses for the paper's benchmark sets — plus
+//! `array real general` for small dense inputs. Parsing is
+//! failure-injection tested (truncated files, bad counts, out-of-range
+//! indices).
+
+use super::{Coo, MatrixError, Result};
+use std::io::{BufRead, BufReader, Read, Write};
+use std::path::Path;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Field {
+    Real,
+    Integer,
+    Pattern,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Symmetry {
+    General,
+    Symmetric,
+    SkewSymmetric,
+}
+
+fn err(line: usize, msg: impl Into<String>) -> MatrixError {
+    MatrixError::Market { line, msg: msg.into() }
+}
+
+/// Reads a MatrixMarket stream into COO.
+pub fn read_coo<R: Read>(reader: R) -> Result<Coo> {
+    let mut lines = BufReader::new(reader).lines().enumerate();
+
+    // Header line.
+    let (_, header) = lines
+        .next()
+        .ok_or_else(|| err(1, "empty file"))
+        .and_then(|(i, l)| l.map(|l| (i, l)).map_err(MatrixError::Io))?;
+    let h: Vec<String> =
+        header.split_whitespace().map(|t| t.to_ascii_lowercase()).collect();
+    if h.len() < 4 || h[0] != "%%matrixmarket" || h[1] != "matrix" {
+        return Err(err(1, "not a MatrixMarket matrix header"));
+    }
+    let coordinate = match h[2].as_str() {
+        "coordinate" => true,
+        "array" => false,
+        other => return Err(err(1, format!("unsupported format '{other}'"))),
+    };
+    let field = match h[3].as_str() {
+        "real" => Field::Real,
+        "integer" => Field::Integer,
+        "pattern" => Field::Pattern,
+        other => return Err(err(1, format!("unsupported field '{other}'"))),
+    };
+    let symmetry = match h.get(4).map(|s| s.as_str()).unwrap_or("general") {
+        "general" => Symmetry::General,
+        "symmetric" => Symmetry::Symmetric,
+        "skew-symmetric" => Symmetry::SkewSymmetric,
+        other => return Err(err(1, format!("unsupported symmetry '{other}'"))),
+    };
+    if !coordinate && field == Field::Pattern {
+        return Err(err(1, "array+pattern is not a valid combination"));
+    }
+
+    // Skip comments, find the size line.
+    let mut size_line = None;
+    let mut lineno = 1;
+    for (i, l) in &mut lines {
+        lineno = i + 1;
+        let l = l.map_err(MatrixError::Io)?;
+        let t = l.trim();
+        if t.is_empty() || t.starts_with('%') {
+            continue;
+        }
+        size_line = Some(t.to_string());
+        break;
+    }
+    let size_line = size_line.ok_or_else(|| err(lineno, "missing size line"))?;
+    let dims: Vec<usize> = size_line
+        .split_whitespace()
+        .map(|t| t.parse::<usize>().map_err(|_| err(lineno, "bad size entry")))
+        .collect::<Result<_>>()?;
+
+    if coordinate {
+        if dims.len() != 3 {
+            return Err(err(lineno, "coordinate size line needs 3 numbers"));
+        }
+        let (rows, cols, nnz) = (dims[0], dims[1], dims[2]);
+        let mut coo = Coo::new(rows, cols);
+        let mut seen = 0usize;
+        for (i, l) in &mut lines {
+            let lno = i + 1;
+            let l = l.map_err(MatrixError::Io)?;
+            let t = l.trim();
+            if t.is_empty() || t.starts_with('%') {
+                continue;
+            }
+            let toks: Vec<&str> = t.split_whitespace().collect();
+            let need = if field == Field::Pattern { 2 } else { 3 };
+            if toks.len() < need {
+                return Err(err(lno, "too few fields in entry"));
+            }
+            let r: usize =
+                toks[0].parse().map_err(|_| err(lno, "bad row index"))?;
+            let c: usize =
+                toks[1].parse().map_err(|_| err(lno, "bad col index"))?;
+            if r < 1 || r > rows || c < 1 || c > cols {
+                return Err(err(lno, format!("index ({r},{c}) out of range")));
+            }
+            let v = match field {
+                Field::Pattern => 1.0,
+                _ => toks[2]
+                    .parse::<f64>()
+                    .map_err(|_| err(lno, "bad value"))?,
+            };
+            coo.push(r - 1, c - 1, v);
+            match symmetry {
+                Symmetry::General => {}
+                Symmetry::Symmetric if r != c => coo.push(c - 1, r - 1, v),
+                Symmetry::SkewSymmetric if r != c => coo.push(c - 1, r - 1, -v),
+                _ => {}
+            }
+            seen += 1;
+        }
+        if seen != nnz {
+            return Err(err(
+                lineno,
+                format!("entry count mismatch: header says {nnz}, found {seen}"),
+            ));
+        }
+        Ok(coo)
+    } else {
+        if dims.len() != 2 {
+            return Err(err(lineno, "array size line needs 2 numbers"));
+        }
+        let (rows, cols) = (dims[0], dims[1]);
+        let mut vals = Vec::with_capacity(rows * cols);
+        for (i, l) in &mut lines {
+            let lno = i + 1;
+            let l = l.map_err(MatrixError::Io)?;
+            let t = l.trim();
+            if t.is_empty() || t.starts_with('%') {
+                continue;
+            }
+            for tok in t.split_whitespace() {
+                vals.push(
+                    tok.parse::<f64>().map_err(|_| err(lno, "bad value"))?,
+                );
+            }
+        }
+        if vals.len() != rows * cols {
+            return Err(err(
+                lineno,
+                format!("expected {} values, found {}", rows * cols, vals.len()),
+            ));
+        }
+        let mut coo = Coo::new(rows, cols);
+        // Array format is column-major.
+        for c in 0..cols {
+            for r in 0..rows {
+                let v = vals[c * rows + r];
+                if v != 0.0 {
+                    coo.push(r, c, v);
+                }
+            }
+        }
+        Ok(coo)
+    }
+}
+
+/// Reads a `.mtx` file into COO.
+pub fn read_file(path: impl AsRef<Path>) -> Result<Coo> {
+    read_coo(std::fs::File::open(path)?)
+}
+
+/// Writes a COO matrix as `coordinate real general`.
+pub fn write_coo<W: Write>(mut w: W, coo: &Coo) -> Result<()> {
+    writeln!(w, "%%MatrixMarket matrix coordinate real general")?;
+    writeln!(w, "% written by spc5-rs")?;
+    writeln!(w, "{} {} {}", coo.rows, coo.cols, coo.entries.len())?;
+    for &(r, c, v) in &coo.entries {
+        writeln!(w, "{} {} {:.17e}", r + 1, c + 1, v)?;
+    }
+    Ok(())
+}
+
+/// Writes a `.mtx` file.
+pub fn write_file(path: impl AsRef<Path>, coo: &Coo) -> Result<()> {
+    write_coo(std::fs::File::create(path)?, coo)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SIMPLE: &str = "%%MatrixMarket matrix coordinate real general\n\
+         % comment\n\
+         3 4 3\n\
+         1 1 2.5\n\
+         2 3 -1\n\
+         3 4 7e-2\n";
+
+    #[test]
+    fn reads_general_real() {
+        let coo = read_coo(SIMPLE.as_bytes()).unwrap();
+        assert_eq!((coo.rows, coo.cols), (3, 4));
+        assert_eq!(coo.entries, vec![(0, 0, 2.5), (1, 2, -1.0), (2, 3, 0.07)]);
+    }
+
+    #[test]
+    fn reads_symmetric() {
+        let src = "%%MatrixMarket matrix coordinate real symmetric\n\
+                   3 3 2\n1 1 4\n3 1 5\n";
+        let coo = read_coo(src.as_bytes()).unwrap();
+        // diagonal kept once, off-diagonal mirrored
+        assert_eq!(coo.entries.len(), 3);
+        let csr = coo.to_csr().unwrap();
+        assert_eq!(csr.to_dense().get(0, 2), 5.0);
+        assert_eq!(csr.to_dense().get(2, 0), 5.0);
+    }
+
+    #[test]
+    fn reads_skew_symmetric() {
+        let src = "%%MatrixMarket matrix coordinate real skew-symmetric\n\
+                   2 2 1\n2 1 3\n";
+        let csr = read_coo(src.as_bytes()).unwrap().to_csr().unwrap();
+        assert_eq!(csr.to_dense().get(1, 0), 3.0);
+        assert_eq!(csr.to_dense().get(0, 1), -3.0);
+    }
+
+    #[test]
+    fn reads_pattern() {
+        let src = "%%MatrixMarket matrix coordinate pattern general\n\
+                   2 2 2\n1 2\n2 1\n";
+        let coo = read_coo(src.as_bytes()).unwrap();
+        assert!(coo.entries.iter().all(|&(_, _, v)| v == 1.0));
+    }
+
+    #[test]
+    fn reads_array() {
+        let src = "%%MatrixMarket matrix array real general\n\
+                   2 2\n1\n0\n0\n4\n";
+        let csr = read_coo(src.as_bytes()).unwrap().to_csr().unwrap();
+        assert_eq!(csr.nnz(), 2);
+        assert_eq!(csr.to_dense().get(1, 1), 4.0);
+    }
+
+    #[test]
+    fn roundtrip() {
+        let coo = read_coo(SIMPLE.as_bytes()).unwrap();
+        let mut buf = Vec::new();
+        write_coo(&mut buf, &coo).unwrap();
+        let back = read_coo(buf.as_slice()).unwrap();
+        assert_eq!(coo.entries, back.entries);
+    }
+
+    #[test]
+    fn rejects_bad_header() {
+        assert!(read_coo("garbage\n1 1 0\n".as_bytes()).is_err());
+        assert!(read_coo(
+            "%%MatrixMarket matrix teapot real general\n1 1 0\n".as_bytes()
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn rejects_count_mismatch() {
+        let src = "%%MatrixMarket matrix coordinate real general\n2 2 3\n1 1 1\n";
+        assert!(read_coo(src.as_bytes()).is_err());
+    }
+
+    #[test]
+    fn rejects_out_of_range_index() {
+        let src = "%%MatrixMarket matrix coordinate real general\n2 2 1\n3 1 1\n";
+        assert!(read_coo(src.as_bytes()).is_err());
+    }
+
+    #[test]
+    fn rejects_truncated_entry() {
+        let src = "%%MatrixMarket matrix coordinate real general\n2 2 1\n1 1\n";
+        assert!(read_coo(src.as_bytes()).is_err());
+    }
+
+    #[test]
+    fn rejects_empty_file() {
+        assert!(read_coo("".as_bytes()).is_err());
+    }
+
+    #[test]
+    fn one_indexed_conversion() {
+        let coo = read_coo(SIMPLE.as_bytes()).unwrap();
+        assert_eq!(coo.entries[0].0, 0); // 1-indexed in file → 0-indexed
+    }
+}

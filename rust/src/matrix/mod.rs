@@ -1,0 +1,27 @@
+//! Sparse-matrix substrate: COO and CSR containers, a dense oracle,
+//! MatrixMarket I/O and the synthetic benchmark-suite generators that
+//! stand in for the paper's SuiteSparse matrix sets.
+
+pub mod coo;
+pub mod csr;
+pub mod dense;
+pub mod market;
+pub mod reorder;
+pub mod suite;
+
+pub use coo::Coo;
+pub use csr::Csr;
+pub use dense::Dense;
+
+/// Errors produced by the matrix substrate.
+#[derive(Debug, thiserror::Error)]
+pub enum MatrixError {
+    #[error("invalid matrix data: {0}")]
+    Invalid(String),
+    #[error("matrix market parse error at line {line}: {msg}")]
+    Market { line: usize, msg: String },
+    #[error(transparent)]
+    Io(#[from] std::io::Error),
+}
+
+pub type Result<T> = std::result::Result<T, MatrixError>;

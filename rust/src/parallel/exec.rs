@@ -1,0 +1,318 @@
+//! Threaded SpMV execution (paper §Parallelization).
+//!
+//! Construction partitions the block matrix into per-thread spans with
+//! the paper's balancing rule. Each call to [`ParallelSpmv::spmv`]
+//! spawns scoped workers; each worker computes into its **own working
+//! vector** and copies it into the disjoint slice of `y` it owns as
+//! soon as it finishes — no barrier, no atomics, exactly the paper's
+//! merge ("it does not wait for the others").
+//!
+//! [`ParallelStrategy::NumaSplit`] additionally gives every thread a
+//! private *copy* of its sub-arrays (`values`, headers, rowptr), the
+//! paper's NUMA optimization: on a multi-socket machine the per-thread
+//! allocation lands on the local memory node by first touch. The
+//! duplication cost and the structural consequences (matrix tied to the
+//! thread count) are the trade-offs the paper discusses; both variants
+//! are kept, like in SPC5.
+
+use super::partition::{partition_intervals, ThreadSpan};
+use crate::formats::{BlockMatrix, BlockSize};
+use crate::kernels::avx512::{self, Span};
+use crate::kernels::scalar;
+
+/// Memory placement strategy for the worker threads.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ParallelStrategy {
+    /// All threads read the shared matrix arrays.
+    Shared,
+    /// Each thread owns a private copy of its sub-arrays (the paper's
+    /// NUMA optimization).
+    NumaSplit,
+    /// NumaSplit plus a per-thread private copy of the `x` vector —
+    /// the paper's conclusion asks to "assess the benefit and cost of
+    /// duplicating the x vector on every memory node"; this mode
+    /// measures exactly that trade (copy cost per call vs local reads).
+    NumaSplitXCopy,
+}
+
+/// One thread's privately-owned sub-matrix (NumaSplit mode).
+struct LocalPart {
+    rowptr: Vec<u32>,
+    headers: Vec<u8>,
+    values: Vec<f64>,
+    rows: usize,
+}
+
+/// A parallel SpMV executor bound to one converted matrix.
+pub struct ParallelSpmv {
+    bs: BlockSize,
+    rows: usize,
+    cols: usize,
+    n_threads: usize,
+    test: bool,
+    spans: Vec<ThreadSpan>,
+    val_ends: Vec<usize>,
+    matrix: BlockMatrix,
+    locals: Vec<LocalPart>,
+    strategy: ParallelStrategy,
+}
+
+impl ParallelSpmv {
+    /// Builds the executor: partitions the matrix for `n_threads` and,
+    /// in NumaSplit mode, materializes the per-thread copies.
+    pub fn new(
+        matrix: BlockMatrix,
+        n_threads: usize,
+        strategy: ParallelStrategy,
+        test: bool,
+    ) -> Self {
+        assert!(n_threads > 0);
+        let spans = partition_intervals(&matrix, n_threads);
+        // Value-range end per span = next span's begin (or total).
+        let mut val_ends = Vec::with_capacity(spans.len());
+        for (i, _s) in spans.iter().enumerate() {
+            let end = if i + 1 < spans.len() {
+                spans[i + 1].val_begin
+            } else {
+                matrix.values.len()
+            };
+            val_ends.push(end);
+        }
+
+        let locals = if strategy != ParallelStrategy::Shared {
+            let stride = matrix.header_stride();
+            spans
+                .iter()
+                .zip(&val_ends)
+                .map(|(s, &ve)| {
+                    // On a NUMA host each worker would run this copy
+                    // itself after pinning (first-touch placement); the
+                    // data layout is identical either way.
+                    let rowptr: Vec<u32> = matrix.block_rowptr
+                        [s.interval_begin..=s.interval_end]
+                        .to_vec();
+                    LocalPart {
+                        rowptr,
+                        headers: matrix.headers
+                            [s.block_begin * stride..s.block_end * stride]
+                            .to_vec(),
+                        values: matrix.values[s.val_begin..ve].to_vec(),
+                        rows: s.row_end - s.row_begin,
+                    }
+                })
+                .collect()
+        } else {
+            Vec::new()
+        };
+
+        ParallelSpmv {
+            bs: matrix.bs,
+            rows: matrix.rows,
+            cols: matrix.cols,
+            n_threads,
+            test,
+            spans,
+            val_ends,
+            matrix,
+            locals,
+            strategy,
+        }
+    }
+
+    /// Number of worker threads.
+    pub fn n_threads(&self) -> usize {
+        self.n_threads
+    }
+
+    /// The strategy this executor was built with.
+    pub fn strategy(&self) -> ParallelStrategy {
+        self.strategy
+    }
+
+    /// Underlying block matrix (shared arrays).
+    pub fn matrix(&self) -> &BlockMatrix {
+        &self.matrix
+    }
+
+    /// Parallel `y += A·x`.
+    pub fn spmv(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.cols);
+        assert_eq!(y.len(), self.rows);
+
+        // Split y into per-span disjoint slices (the merge target).
+        let mut y_parts: Vec<&mut [f64]> = Vec::with_capacity(self.spans.len());
+        let mut rest = y;
+        let mut covered = 0usize;
+        for s in &self.spans {
+            let (part, tail) = rest.split_at_mut(s.row_end - covered);
+            y_parts.push(part);
+            rest = tail;
+            covered = s.row_end;
+        }
+
+        std::thread::scope(|scope| {
+            for (tid, y_part) in y_parts.into_iter().enumerate() {
+                let s = self.spans[tid];
+                scope.spawn(move || {
+                    // Per-thread working vector (paper: "we pre-allocate
+                    // a working vector of the same size").
+                    let mut work = vec![0.0f64; y_part.len()];
+                    let span = self.span_view(tid, &s);
+                    if self.strategy == ParallelStrategy::NumaSplitXCopy {
+                        // Paper conclusion: duplicate x on every memory
+                        // node. On NUMA the copy lands local by first
+                        // touch; the copy cost is part of the measure.
+                        let x_local = x.to_vec();
+                        run_span(span, self.bs, &x_local, &mut work, self.test);
+                    } else {
+                        run_span(span, self.bs, x, &mut work, self.test);
+                    }
+                    // Syncless merge: this thread's rows are disjoint.
+                    for (dst, w) in y_part.iter_mut().zip(&work) {
+                        *dst += *w;
+                    }
+                });
+            }
+        });
+    }
+
+    fn span_view<'a>(&'a self, tid: usize, s: &ThreadSpan) -> Span<'a> {
+        match self.strategy {
+            ParallelStrategy::Shared => Span::slice(
+                &self.matrix,
+                s.interval_begin,
+                s.interval_end,
+                s.block_begin,
+                s.block_end,
+                s.val_begin,
+                self.val_ends[tid],
+            ),
+            ParallelStrategy::NumaSplit | ParallelStrategy::NumaSplitXCopy => {
+                let l = &self.locals[tid];
+                Span {
+                    rowptr: &l.rowptr,
+                    headers: &l.headers,
+                    values: &l.values,
+                    rows: l.rows,
+                    r: self.bs.r,
+                }
+            }
+        }
+    }
+}
+
+fn run_span(span: Span<'_>, bs: BlockSize, x: &[f64], y: &mut [f64], test: bool) {
+    if span.rowptr.len() < 2 {
+        return;
+    }
+    if crate::util::avx512_available()
+        && avx512::spmv_span(span, bs, x, y, test)
+    {
+        return;
+    }
+    // Portable fallback (the scalar span kernel ignores `test`; the
+    // Algorithm-2 control flow only matters for performance).
+    scalar::spmv_generic_span(span, bs, x, y);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::csr_to_block;
+    use crate::matrix::suite;
+
+    fn check(
+        csr: &crate::matrix::Csr,
+        bs: BlockSize,
+        threads: usize,
+        strategy: ParallelStrategy,
+    ) {
+        let bm = csr_to_block(csr, bs).unwrap();
+        let p = ParallelSpmv::new(bm, threads, strategy, false);
+        let x: Vec<f64> =
+            (0..csr.cols).map(|i| ((i * 11) % 23) as f64 - 11.0).collect();
+        let mut want = vec![0.0; csr.rows];
+        csr.spmv_ref(&x, &mut want);
+        let mut got = vec![0.0; csr.rows];
+        p.spmv(&x, &mut got);
+        for i in 0..csr.rows {
+            assert!(
+                (got[i] - want[i]).abs() <= 1e-9 * want[i].abs().max(1.0),
+                "{bs} t={threads} {strategy:?} row {i}: {} vs {}",
+                got[i],
+                want[i]
+            );
+        }
+    }
+
+    #[test]
+    fn shared_matches_reference() {
+        for sm in suite::test_subset().iter().take(6) {
+            for bs in [BlockSize::new(1, 8), BlockSize::new(4, 4)] {
+                for threads in [1usize, 2, 4, 7] {
+                    check(&sm.csr, bs, threads, ParallelStrategy::Shared);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn numa_split_matches_reference() {
+        for sm in suite::test_subset().iter().take(6) {
+            for bs in [BlockSize::new(2, 8), BlockSize::new(8, 4)] {
+                for threads in [2usize, 5] {
+                    check(&sm.csr, bs, threads, ParallelStrategy::NumaSplit);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn x_copy_mode_matches_reference() {
+        for sm in suite::test_subset().iter().take(3) {
+            check(
+                &sm.csr,
+                BlockSize::new(2, 4),
+                3,
+                ParallelStrategy::NumaSplitXCopy,
+            );
+        }
+    }
+
+    #[test]
+    fn more_threads_than_rows() {
+        let csr = suite::poisson2d(3); // 9 rows
+        check(&csr, BlockSize::new(4, 4), 16, ParallelStrategy::Shared);
+        check(&csr, BlockSize::new(4, 4), 16, ParallelStrategy::NumaSplit);
+    }
+
+    #[test]
+    fn test_variant_parallel() {
+        let sm = &suite::test_subset()[4]; // circuit: many single blocks
+        let bm = csr_to_block(&sm.csr, BlockSize::new(1, 8)).unwrap();
+        let p = ParallelSpmv::new(bm, 4, ParallelStrategy::Shared, true);
+        let x: Vec<f64> = (0..sm.csr.cols).map(|i| (i % 3) as f64).collect();
+        let mut want = vec![0.0; sm.csr.rows];
+        sm.csr.spmv_ref(&x, &mut want);
+        let mut got = vec![0.0; sm.csr.rows];
+        p.spmv(&x, &mut got);
+        for i in 0..sm.csr.rows {
+            assert!((got[i] - want[i]).abs() <= 1e-9 * want[i].abs().max(1.0));
+        }
+    }
+
+    #[test]
+    fn accumulates_into_existing_y() {
+        let csr = suite::poisson2d(10);
+        let bm = csr_to_block(&csr, BlockSize::new(2, 4)).unwrap();
+        let p = ParallelSpmv::new(bm, 3, ParallelStrategy::Shared, false);
+        let x = vec![1.0; csr.cols];
+        let mut y = vec![5.0; csr.rows];
+        p.spmv(&x, &mut y);
+        let mut want = vec![5.0; csr.rows];
+        csr.spmv_ref(&x, &mut want);
+        for i in 0..csr.rows {
+            assert!((y[i] - want[i]).abs() < 1e-12);
+        }
+    }
+}

@@ -1,0 +1,19 @@
+//! Shared-memory parallel SpMV — the paper's §Parallelization.
+//!
+//! - [`partition`] — the static block-balanced row-interval split: each
+//!   thread receives whole row intervals with approximately
+//!   `N_blocks / N_threads` blocks, decided by the paper's
+//!   absolute-difference test.
+//! - [`exec`] — the worker pool: per-thread working vectors for `y`,
+//!   merge without synchronization (the assigned row spans are
+//!   disjoint), and an optional NUMA-style mode where every thread owns
+//!   a private copy of its sub-matrix arrays (on a multi-socket host
+//!   these copies land on the local node by first touch; the code
+//!   structure is identical here, the single-socket container just
+//!   cannot show the latency gap).
+
+pub mod exec;
+pub mod partition;
+
+pub use exec::{ParallelSpmv, ParallelStrategy};
+pub use partition::{partition_intervals, ThreadSpan};

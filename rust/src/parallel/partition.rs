@@ -1,0 +1,172 @@
+//! Static block-balanced partitioning (paper §Parallelization).
+//!
+//! "Our objective is to have approximately the same number of blocks
+//! per thread … without distributing one row to multiple threads. We
+//! add the next r rows if
+//! `|(tid+1)·N_b/t − N_blocks[row]| < |(tid+1)·N_b/t − N_blocks[row+1]|`."
+
+use crate::formats::BlockMatrix;
+
+/// The row-interval span assigned to one thread.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ThreadSpan {
+    /// First row interval (inclusive).
+    pub interval_begin: usize,
+    /// One past the last row interval.
+    pub interval_end: usize,
+    /// First matrix row covered.
+    pub row_begin: usize,
+    /// One past the last matrix row covered (clamped to `rows`).
+    pub row_end: usize,
+    /// First block index.
+    pub block_begin: usize,
+    /// One past the last block index.
+    pub block_end: usize,
+    /// First value index (prefix popcount).
+    pub val_begin: usize,
+}
+
+/// Splits the matrix's row intervals into `n_threads` spans using the
+/// paper's balancing rule. Every interval is assigned to exactly one
+/// thread; spans are contiguous and ordered; empty spans are possible
+/// for degenerate matrices (fewer blocks than threads).
+pub fn partition_intervals(bm: &BlockMatrix, n_threads: usize) -> Vec<ThreadSpan> {
+    assert!(n_threads > 0);
+    let intervals = bm.intervals();
+    let n_blocks = bm.n_blocks();
+    let per_thread = n_blocks as f64 / n_threads as f64;
+
+    // Prefix popcounts per block → value offsets for each span start.
+    let r = bm.bs.r;
+    let mut val_prefix = Vec::with_capacity(n_blocks + 1);
+    val_prefix.push(0usize);
+    let mut acc = 0usize;
+    for b in 0..n_blocks {
+        for i in 0..r {
+            acc += bm.block_masks[b * r + i].count_ones() as usize;
+        }
+        val_prefix.push(acc);
+    }
+
+    let mut spans = Vec::with_capacity(n_threads);
+    let mut it = 0usize;
+    for tid in 0..n_threads {
+        let begin = it;
+        let target = (tid + 1) as f64 * per_thread;
+        if tid == n_threads - 1 {
+            it = intervals;
+        } else {
+            // Greedily add intervals while doing so brings the cumulative
+            // block count closer to the target (the paper's test).
+            while it < intervals {
+                let here = bm.block_rowptr[it] as f64;
+                let next = bm.block_rowptr[it + 1] as f64;
+                if (target - here).abs() < (target - next).abs() {
+                    break;
+                }
+                it += 1;
+            }
+        }
+        let block_begin = bm.block_rowptr[begin] as usize;
+        let block_end = bm.block_rowptr[it] as usize;
+        spans.push(ThreadSpan {
+            interval_begin: begin,
+            interval_end: it,
+            row_begin: (begin * r).min(bm.rows),
+            row_end: (it * r).min(bm.rows),
+            block_begin,
+            block_end,
+            val_begin: val_prefix[block_begin],
+        });
+    }
+    spans
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::{csr_to_block, BlockSize};
+    use crate::matrix::suite;
+
+    fn spans_for(n: usize, threads: usize) -> (Vec<ThreadSpan>, usize, usize) {
+        let csr = suite::poisson2d(n);
+        let bm = csr_to_block(&csr, BlockSize::new(2, 4)).unwrap();
+        let spans = partition_intervals(&bm, threads);
+        (spans, bm.intervals(), bm.n_blocks())
+    }
+
+    #[test]
+    fn covers_all_intervals_disjointly() {
+        for threads in [1usize, 2, 3, 4, 7, 16] {
+            let (spans, intervals, n_blocks) = spans_for(30, threads);
+            assert_eq!(spans.len(), threads);
+            assert_eq!(spans[0].interval_begin, 0);
+            assert_eq!(spans.last().unwrap().interval_end, intervals);
+            assert_eq!(spans.last().unwrap().block_end, n_blocks);
+            for w in spans.windows(2) {
+                assert_eq!(w[0].interval_end, w[1].interval_begin);
+                assert_eq!(w[0].block_end, w[1].block_begin);
+                assert_eq!(w[0].row_end, w[1].row_begin);
+            }
+        }
+    }
+
+    #[test]
+    fn balanced_within_one_interval_of_ideal() {
+        let (spans, _, n_blocks) = spans_for(60, 4);
+        let ideal = n_blocks as f64 / 4.0;
+        for s in &spans {
+            let got = (s.block_end - s.block_begin) as f64;
+            // The balance is limited by interval granularity; Poisson
+            // intervals hold ~2 rows × ~3 blocks, so tolerance is loose
+            // but meaningful.
+            assert!(
+                (got - ideal).abs() <= ideal * 0.25 + 8.0,
+                "span {s:?} far from ideal {ideal}"
+            );
+        }
+    }
+
+    #[test]
+    fn more_threads_than_blocks() {
+        let (spans, intervals, _) = spans_for(4, 32);
+        assert_eq!(spans.len(), 32);
+        assert_eq!(spans.last().unwrap().interval_end, intervals);
+        // All intervals covered, some spans empty — still consistent.
+        for w in spans.windows(2) {
+            assert_eq!(w[0].interval_end, w[1].interval_begin);
+        }
+    }
+
+    #[test]
+    fn val_begin_matches_prefix() {
+        let csr = suite::fem_blocked(200, 3, 5, 3);
+        let bm = csr_to_block(&csr, BlockSize::new(4, 8)).unwrap();
+        let spans = partition_intervals(&bm, 5);
+        // val_begin of each span must equal the popcount of all masks
+        // before its first block.
+        for s in &spans {
+            let mut pop = 0usize;
+            for b in 0..s.block_begin {
+                for i in 0..bm.bs.r {
+                    pop += bm.block_masks[b * bm.bs.r + i].count_ones() as usize;
+                }
+            }
+            assert_eq!(s.val_begin, pop);
+        }
+        assert_eq!(
+            spans.last().unwrap().block_end,
+            bm.n_blocks(),
+            "last span must end at the last block"
+        );
+    }
+
+    #[test]
+    fn single_thread_gets_everything() {
+        let (spans, intervals, n_blocks) = spans_for(20, 1);
+        assert_eq!(spans[0].interval_begin, 0);
+        assert_eq!(spans[0].interval_end, intervals);
+        assert_eq!(spans[0].block_end - spans[0].block_begin, n_blocks);
+        assert_eq!(spans[0].val_begin, 0);
+    }
+}

@@ -1,0 +1,24 @@
+//! Performance prediction and optimal kernel selection
+//! (paper §"Performance prediction and optimal kernel selection").
+//!
+//! - [`records`] — the persistent store of `(kernel, matrix, Avg(r,c),
+//!   threads, GFlop/s)` measurements from previous executions.
+//! - [`polyfit`] — least-squares polynomial interpolation of
+//!   `gflops ~ Avg(r,c)` per kernel (sequential selection, Fig. 5).
+//! - [`regression2d`] — the nonlinear 2D regression
+//!   `gflops ~ f(Avg(r,c), threads)` per kernel (parallel selection,
+//!   Fig. 6).
+//! - [`select`] — ties it together: compute the cheap `Avg(r,c)` scan
+//!   for every candidate block size (no conversion needed), evaluate
+//!   the fitted model, pick the argmax (Table 3).
+
+pub mod model;
+pub mod polyfit;
+pub mod records;
+pub mod regression2d;
+pub mod select;
+
+pub use polyfit::PolyModel;
+pub use records::{PerfRecord, RecordStore};
+pub use regression2d::Reg2dModel;
+pub use select::{select_parallel, select_sequential, Selection};

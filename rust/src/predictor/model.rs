@@ -1,0 +1,176 @@
+//! Analytic performance model — a *no-training* baseline for the
+//! record-based predictor (paper §Conclusions: "more sophisticated
+//! best kernel prediction methods with multiple inputs, such as
+//! statistics on the blocks and some hardware properties, the cache
+//! size, the memory bandwidth" — this is the memory-bandwidth member
+//! of that family).
+//!
+//! SpMV is bandwidth-bound; the model predicts
+//! `gflops = 2 · BW_eff / bytes_per_nnz`, where `bytes_per_nnz` is the
+//! exact stream traffic of a `β(r,c)` kernel:
+//!
+//! - 8 B for the value itself (read once, unpadded — the format's
+//!   whole point),
+//! - `(4 + r) / avg` B of header (colidx + r mask bytes, amortized
+//!   over the block's `avg` values),
+//! - `8·c·u / avg` B of `x` window, with `u` the *useful-lane* factor
+//!   (masked loads touch only set lanes; we charge the union width),
+//! - rowptr and `y` traffic, amortized per row.
+//!
+//! `BW_eff` is calibrated once per machine from a single measured CSR
+//! run ([`calibrate`]); the comparison bench (`kernel_micro` ablation
+//! D) evaluates model-selection vs record-selection quality.
+
+use crate::formats::stats::block_stats;
+use crate::formats::BlockSize;
+use crate::kernels::KernelKind;
+use crate::matrix::Csr;
+
+/// Calibrated machine parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct MachineModel {
+    /// Effective stream bandwidth in bytes/s seen by the CSR kernel.
+    pub bw_eff: f64,
+    /// Fixed per-block overhead in seconds (pipeline + reduce costs),
+    /// folded into an equivalent byte count per block.
+    pub block_overhead_bytes: f64,
+}
+
+impl Default for MachineModel {
+    fn default() -> Self {
+        // Conservative single-core numbers; `calibrate` replaces them.
+        MachineModel { bw_eff: 12e9, block_overhead_bytes: 24.0 }
+    }
+}
+
+/// Calibrates `bw_eff` from one measured CSR SpMV (GFlop/s on a matrix
+/// large enough to stream from memory).
+pub fn calibrate(csr_gflops: f64) -> MachineModel {
+    // CSR traffic: 12 B per nnz (8 value + 4 colidx) + x gather ≈ 8 B.
+    let bytes_per_nnz = 12.0 + 8.0;
+    MachineModel {
+        bw_eff: csr_gflops * 1e9 / 2.0 * bytes_per_nnz,
+        block_overhead_bytes: 24.0,
+    }
+}
+
+/// Predicted traffic per nonzero for a β kernel at a given `Avg(r,c)`.
+pub fn bytes_per_nnz(bs: BlockSize, avg: f64) -> f64 {
+    let avg = avg.max(1.0);
+    let header = (4.0 + bs.r as f64) / avg;
+    // The union x window: masked lanes cost nothing on skipped cache
+    // lines only when whole lines are masked; charge the full window
+    // scaled by a 0.75 locality discount (neighbouring blocks share
+    // lines of x).
+    let x_traffic = 8.0 * bs.c as f64 * 0.75 / avg;
+    8.0 + header + x_traffic
+}
+
+/// Predicted GFlop/s for a kernel on a matrix profile.
+pub fn predict(m: &MachineModel, kind: KernelKind, avg: f64) -> f64 {
+    match kind {
+        KernelKind::Csr => 2.0 * m.bw_eff / (12.0 + 8.0) / 1e9,
+        KernelKind::Csr5 => 2.0 * m.bw_eff / (12.0 + 8.0) / 1e9 * 0.9,
+        KernelKind::Beta(..) | KernelKind::BetaTest(..) => {
+            let bs = kind.block_size().unwrap();
+            let mut bytes =
+                bytes_per_nnz(bs, avg) + m.block_overhead_bytes / avg.max(1.0);
+            // The Algorithm-2 test variant skips the vector machinery on
+            // mask==1 blocks: model as a discount that grows as avg→1.
+            if matches!(kind, KernelKind::BetaTest(..)) {
+                let single_fraction = (2.0 - avg).clamp(0.0, 1.0);
+                bytes -= single_fraction * (8.0 * bs.c as f64 * 0.75 - 8.0) / avg.max(1.0);
+            }
+            2.0 * m.bw_eff / bytes / 1e9
+        }
+    }
+}
+
+/// Model-based selection: argmax of [`predict`] over candidates, using
+/// the cheap block-count scan (no conversion) — same contract as
+/// [`super::select_sequential`] but requiring zero training records.
+pub fn select_by_model(
+    csr: &Csr,
+    m: &MachineModel,
+    kinds: &[KernelKind],
+) -> (KernelKind, f64) {
+    let mut best = (kinds[0], f64::MIN);
+    for &k in kinds {
+        let bs = k.block_size().unwrap_or(BlockSize::new(1, 8));
+        let avg = block_stats(csr, bs).avg_nnz_per_block;
+        let p = predict(m, k, avg);
+        if p > best.1 {
+            best = (k, p);
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::suite;
+
+    #[test]
+    fn traffic_decreases_with_fill() {
+        let bs = BlockSize::new(4, 8);
+        assert!(bytes_per_nnz(bs, 1.0) > bytes_per_nnz(bs, 8.0));
+        assert!(bytes_per_nnz(bs, 8.0) > bytes_per_nnz(bs, 32.0));
+        // Asymptote: value bytes only.
+        assert!(bytes_per_nnz(bs, 1e9) - 8.0 < 1e-6);
+    }
+
+    #[test]
+    fn beta_beats_csr_when_filled() {
+        let m = MachineModel::default();
+        let high = predict(&m, KernelKind::Beta(4, 8), 24.0);
+        let csr = predict(&m, KernelKind::Csr, 1.0);
+        assert!(high > csr, "filled blocks must beat CSR in the model");
+    }
+
+    #[test]
+    fn csr_beats_empty_blocks() {
+        let m = MachineModel::default();
+        let low = predict(&m, KernelKind::Beta(4, 8), 1.0);
+        let csr = predict(&m, KernelKind::Csr, 1.0);
+        assert!(csr > low, "empty blocks must lose to CSR in the model");
+    }
+
+    #[test]
+    fn test_variant_wins_at_avg_one() {
+        let m = MachineModel::default();
+        let plain = predict(&m, KernelKind::Beta(1, 8), 1.05);
+        let test = predict(&m, KernelKind::BetaTest(1, 8), 1.05);
+        assert!(test > plain);
+        // ...but not at high fill.
+        let plain_hi = predict(&m, KernelKind::Beta(1, 8), 6.0);
+        let test_hi = predict(&m, KernelKind::BetaTest(1, 8), 6.0);
+        assert!((test_hi - plain_hi).abs() < 1e-9);
+    }
+
+    #[test]
+    fn model_selection_sane_on_suite() {
+        let m = calibrate(1.3);
+        let kinds = KernelKind::SPC5_KERNELS;
+        // Dense: must select a tall block (r ≥ 4 amortizes the header
+        // and x traffic best); scatter: a test variant.
+        let (k_dense, _) = select_by_model(&suite::dense(64, 1), &m, &kinds);
+        assert!(
+            matches!(k_dense, KernelKind::Beta(r, _) if r >= 4),
+            "{k_dense}"
+        );
+        let (k_scatter, _) =
+            select_by_model(&suite::uniform_scatter(500, 5, 2), &m, &kinds);
+        assert!(
+            matches!(k_scatter, KernelKind::BetaTest(..)),
+            "{k_scatter}"
+        );
+    }
+
+    #[test]
+    fn calibrate_roundtrip() {
+        let m = calibrate(1.5);
+        let csr_pred = predict(&m, KernelKind::Csr, 1.0);
+        assert!((csr_pred - 1.5).abs() < 1e-9);
+    }
+}

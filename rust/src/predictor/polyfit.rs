@@ -1,0 +1,180 @@
+//! Least-squares polynomial fit (sequential prediction, paper Fig. 5).
+//!
+//! Fits `gflops ≈ Σ w_k · avg^k` per kernel with normal equations
+//! solved by Gaussian elimination with partial pivoting. Degree 3 by
+//! default (the paper's interpolation curves are low-order).
+
+/// A fitted polynomial model `y(x) = Σ coeffs[k]·x^k`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PolyModel {
+    pub coeffs: Vec<f64>,
+}
+
+impl PolyModel {
+    /// Fits a degree-`deg` polynomial to `(x, y)` samples by least
+    /// squares. Returns `None` when there are no samples. With fewer
+    /// samples than coefficients the degree is reduced automatically.
+    pub fn fit(xs: &[f64], ys: &[f64], deg: usize) -> Option<PolyModel> {
+        assert_eq!(xs.len(), ys.len());
+        if xs.is_empty() {
+            return None;
+        }
+        let deg = deg.min(xs.len() - 1);
+        let n = deg + 1;
+        // Normal equations: (VᵀV) w = Vᵀy with V the Vandermonde matrix.
+        let mut ata = vec![0.0f64; n * n];
+        let mut aty = vec![0.0f64; n];
+        for (&x, &y) in xs.iter().zip(ys) {
+            let mut powers = Vec::with_capacity(n);
+            let mut p = 1.0;
+            for _ in 0..n {
+                powers.push(p);
+                p *= x;
+            }
+            for i in 0..n {
+                aty[i] += powers[i] * y;
+                for j in 0..n {
+                    ata[i * n + j] += powers[i] * powers[j];
+                }
+            }
+        }
+        let coeffs = solve(&mut ata, &mut aty, n)?;
+        Some(PolyModel { coeffs })
+    }
+
+    /// Evaluates the polynomial at `x`.
+    pub fn eval(&self, x: f64) -> f64 {
+        // Horner.
+        self.coeffs.iter().rev().fold(0.0, |acc, &c| acc * x + c)
+    }
+
+    /// Root-mean-square error on a sample set.
+    pub fn rmse(&self, xs: &[f64], ys: &[f64]) -> f64 {
+        if xs.is_empty() {
+            return 0.0;
+        }
+        let se: f64 = xs
+            .iter()
+            .zip(ys)
+            .map(|(&x, &y)| (self.eval(x) - y).powi(2))
+            .sum();
+        (se / xs.len() as f64).sqrt()
+    }
+}
+
+/// Solves `A w = b` in place (n×n, row-major) with partial pivoting.
+/// Returns `None` for singular systems.
+pub(crate) fn solve(a: &mut [f64], b: &mut [f64], n: usize) -> Option<Vec<f64>> {
+    for col in 0..n {
+        // Pivot.
+        let mut piv = col;
+        for r in col + 1..n {
+            if a[r * n + col].abs() > a[piv * n + col].abs() {
+                piv = r;
+            }
+        }
+        if a[piv * n + col].abs() < 1e-12 {
+            return None;
+        }
+        if piv != col {
+            for k in 0..n {
+                a.swap(col * n + k, piv * n + k);
+            }
+            b.swap(col, piv);
+        }
+        // Eliminate below.
+        let d = a[col * n + col];
+        for r in col + 1..n {
+            let f = a[r * n + col] / d;
+            if f == 0.0 {
+                continue;
+            }
+            for k in col..n {
+                a[r * n + k] -= f * a[col * n + k];
+            }
+            b[r] -= f * b[col];
+        }
+    }
+    // Back substitution.
+    let mut w = vec![0.0f64; n];
+    for col in (0..n).rev() {
+        let mut s = b[col];
+        for k in col + 1..n {
+            s -= a[col * n + k] * w[k];
+        }
+        w[col] = s / a[col * n + col];
+    }
+    Some(w)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_on_polynomial_data() {
+        // y = 2 - x + 0.5x²
+        let xs: Vec<f64> = (0..10).map(|i| i as f64).collect();
+        let ys: Vec<f64> = xs.iter().map(|&x| 2.0 - x + 0.5 * x * x).collect();
+        let m = PolyModel::fit(&xs, &ys, 2).unwrap();
+        assert!((m.coeffs[0] - 2.0).abs() < 1e-8);
+        assert!((m.coeffs[1] + 1.0).abs() < 1e-8);
+        assert!((m.coeffs[2] - 0.5).abs() < 1e-8);
+        assert!(m.rmse(&xs, &ys) < 1e-8);
+    }
+
+    #[test]
+    fn degree_reduced_for_few_samples() {
+        let m = PolyModel::fit(&[1.0, 2.0], &[3.0, 5.0], 5).unwrap();
+        assert_eq!(m.coeffs.len(), 2); // linear
+        assert!((m.eval(1.5) - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_input_is_none() {
+        assert!(PolyModel::fit(&[], &[], 3).is_none());
+    }
+
+    #[test]
+    fn noisy_fit_reasonable() {
+        // y = 1 + 0.3x with deterministic "noise".
+        let xs: Vec<f64> = (0..50).map(|i| i as f64 * 0.2).collect();
+        let ys: Vec<f64> = xs
+            .iter()
+            .enumerate()
+            .map(|(i, &x)| 1.0 + 0.3 * x + if i % 2 == 0 { 0.05 } else { -0.05 })
+            .collect();
+        let m = PolyModel::fit(&xs, &ys, 1).unwrap();
+        assert!((m.coeffs[1] - 0.3).abs() < 0.02);
+        assert!(m.rmse(&xs, &ys) < 0.06);
+    }
+
+    #[test]
+    fn solve_identity() {
+        let mut a = vec![1.0, 0.0, 0.0, 1.0];
+        let mut b = vec![7.0, -2.0];
+        let w = solve(&mut a, &mut b, 2).unwrap();
+        assert_eq!(w, vec![7.0, -2.0]);
+    }
+
+    #[test]
+    fn solve_singular_none() {
+        let mut a = vec![1.0, 2.0, 2.0, 4.0];
+        let mut b = vec![1.0, 2.0];
+        assert!(solve(&mut a, &mut b, 2).is_none());
+    }
+
+    #[test]
+    fn horner_matches_naive() {
+        let m = PolyModel { coeffs: vec![1.0, -2.0, 0.25, 3.0] };
+        for x in [-2.0f64, 0.0, 0.7, 5.0] {
+            let naive: f64 = m
+                .coeffs
+                .iter()
+                .enumerate()
+                .map(|(k, &c)| c * x.powi(k as i32))
+                .sum();
+            assert!((m.eval(x) - naive).abs() < 1e-10);
+        }
+    }
+}

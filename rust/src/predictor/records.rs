@@ -1,0 +1,192 @@
+//! Performance-record store.
+//!
+//! The paper's prediction system is "record-based": the models are
+//! fitted on measurements of previous executions (Set-A). Records are
+//! persisted as JSON so the CLI's `bench` runs feed later `predict`
+//! invocations.
+
+use crate::kernels::KernelKind;
+use crate::util::json::Json;
+use std::path::Path;
+
+/// One measurement.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PerfRecord {
+    pub matrix: String,
+    pub kernel: KernelKind,
+    /// `Avg(r,c)` of the kernel's block size on this matrix (for CSR /
+    /// CSR5 the paper's plots use the β(1,8) average; we store whatever
+    /// the producer computed).
+    pub avg_nnz_per_block: f64,
+    pub threads: usize,
+    pub gflops: f64,
+}
+
+/// A set of records with JSON persistence.
+#[derive(Clone, Debug, Default)]
+pub struct RecordStore {
+    pub records: Vec<PerfRecord>,
+}
+
+impl RecordStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, r: PerfRecord) {
+        self.records.push(r);
+    }
+
+    /// All records of one kernel at a given thread count.
+    pub fn for_kernel(
+        &self,
+        kernel: KernelKind,
+        threads: usize,
+    ) -> Vec<&PerfRecord> {
+        self.records
+            .iter()
+            .filter(|r| r.kernel == kernel && r.threads == threads)
+            .collect()
+    }
+
+    /// All records of one kernel across thread counts.
+    pub fn for_kernel_all_threads(&self, kernel: KernelKind) -> Vec<&PerfRecord> {
+        self.records.iter().filter(|r| r.kernel == kernel).collect()
+    }
+
+    /// Serializes to JSON text.
+    pub fn to_json(&self) -> String {
+        let arr: Vec<Json> = self
+            .records
+            .iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("matrix", Json::Str(r.matrix.clone())),
+                    ("kernel", Json::Str(r.kernel.to_string())),
+                    ("avg", Json::Num(r.avg_nnz_per_block)),
+                    ("threads", Json::Num(r.threads as f64)),
+                    ("gflops", Json::Num(r.gflops)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("version", Json::Num(1.0)),
+            ("records", Json::Arr(arr)),
+        ])
+        .to_string()
+    }
+
+    /// Parses from JSON text.
+    pub fn from_json(text: &str) -> anyhow::Result<Self> {
+        let v = Json::parse(text)?;
+        let mut store = RecordStore::new();
+        let arr = v
+            .get("records")
+            .and_then(|r| r.as_arr())
+            .ok_or_else(|| anyhow::anyhow!("missing 'records' array"))?;
+        for (i, item) in arr.iter().enumerate() {
+            let field = |k: &str| {
+                item.get(k)
+                    .ok_or_else(|| anyhow::anyhow!("record {i}: missing {k}"))
+            };
+            let kernel_s = field("kernel")?
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("record {i}: kernel not str"))?;
+            let kernel = KernelKind::parse(kernel_s)
+                .ok_or_else(|| anyhow::anyhow!("record {i}: bad kernel"))?;
+            let num = |k: &str| -> anyhow::Result<f64> {
+                field(k)?
+                    .as_f64()
+                    .ok_or_else(|| anyhow::anyhow!("record {i}: {k} not num"))
+            };
+            store.push(PerfRecord {
+                matrix: field("matrix")?
+                    .as_str()
+                    .ok_or_else(|| anyhow::anyhow!("record {i}: matrix"))?
+                    .to_string(),
+                kernel,
+                avg_nnz_per_block: num("avg")?,
+                threads: num("threads")? as usize,
+                gflops: num("gflops")?,
+            });
+        }
+        Ok(store)
+    }
+
+    /// Saves to a file.
+    pub fn save(&self, path: impl AsRef<Path>) -> anyhow::Result<()> {
+        std::fs::write(path, self.to_json())?;
+        Ok(())
+    }
+
+    /// Loads from a file.
+    pub fn load(path: impl AsRef<Path>) -> anyhow::Result<Self> {
+        Self::from_json(&std::fs::read_to_string(path)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> RecordStore {
+        let mut s = RecordStore::new();
+        for (m, k, a, t, g) in [
+            ("m1", KernelKind::Beta(1, 8), 2.4, 1, 3.0),
+            ("m1", KernelKind::Beta(4, 4), 6.6, 1, 3.02),
+            ("m2", KernelKind::Csr, 1.0, 4, 1.2),
+            ("m2", KernelKind::BetaTest(2, 4), 1.9, 4, 2.2),
+        ] {
+            s.push(PerfRecord {
+                matrix: m.to_string(),
+                kernel: k,
+                avg_nnz_per_block: a,
+                threads: t,
+                gflops: g,
+            });
+        }
+        s
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let s = sample();
+        let text = s.to_json();
+        let back = RecordStore::from_json(&text).unwrap();
+        assert_eq!(s.records, back.records);
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let s = sample();
+        let dir = std::env::temp_dir().join("spc5_test_records");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("r.json");
+        s.save(&path).unwrap();
+        let back = RecordStore::load(&path).unwrap();
+        assert_eq!(s.records, back.records);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn filters() {
+        let s = sample();
+        assert_eq!(s.for_kernel(KernelKind::Beta(1, 8), 1).len(), 1);
+        assert_eq!(s.for_kernel(KernelKind::Beta(1, 8), 4).len(), 0);
+        assert_eq!(
+            s.for_kernel_all_threads(KernelKind::BetaTest(2, 4)).len(),
+            1
+        );
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(RecordStore::from_json("{}").is_err());
+        assert!(RecordStore::from_json(r#"{"records":[{"matrix":"m"}]}"#)
+            .is_err());
+        assert!(RecordStore::from_json(
+            r#"{"records":[{"matrix":"m","kernel":"bogus","avg":1,"threads":1,"gflops":1}]}"#
+        )
+        .is_err());
+    }
+}

@@ -1,0 +1,134 @@
+//! Nonlinear 2D regression for the parallel predictor (paper Fig. 6):
+//! `gflops ≈ f(avg, threads)` per kernel, fitted on Set-A records at
+//! several thread counts.
+//!
+//! Basis: `{1, a, a², t, t², a·t, a·log2(t), log2(t)}` with
+//! `a = Avg(r,c)`, `t = threads` — a small nonlinear feature map whose
+//! weights are solved by linear least squares (the paper's "non-linear
+//! 2D regression").
+
+use super::polyfit::solve;
+
+/// Number of basis functions.
+const NBASIS: usize = 8;
+
+fn basis(avg: f64, threads: f64) -> [f64; NBASIS] {
+    let lt = threads.max(1.0).log2();
+    [
+        1.0,
+        avg,
+        avg * avg,
+        threads,
+        threads * threads,
+        avg * threads,
+        avg * lt,
+        lt,
+    ]
+}
+
+/// A fitted 2D model.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Reg2dModel {
+    pub weights: Vec<f64>,
+}
+
+impl Reg2dModel {
+    /// Least-squares fit on `(avg, threads, gflops)` samples. Returns
+    /// `None` for an empty or degenerate sample set.
+    pub fn fit(samples: &[(f64, f64, f64)]) -> Option<Reg2dModel> {
+        if samples.is_empty() {
+            return None;
+        }
+        let n = NBASIS;
+        let mut ata = vec![0.0f64; n * n];
+        let mut aty = vec![0.0f64; n];
+        for &(a, t, y) in samples {
+            let phi = basis(a, t);
+            for i in 0..n {
+                aty[i] += phi[i] * y;
+                for j in 0..n {
+                    ata[i * n + j] += phi[i] * phi[j];
+                }
+            }
+        }
+        // Ridge damping keeps the system well-posed when the sample set
+        // is small or collinear (e.g. all records at one thread count).
+        for i in 0..n {
+            ata[i * n + i] += 1e-6;
+        }
+        let weights = solve(&mut ata, &mut aty, n)?;
+        Some(Reg2dModel { weights })
+    }
+
+    /// Predicted GFlop/s at `(avg, threads)`.
+    pub fn eval(&self, avg: f64, threads: f64) -> f64 {
+        basis(avg, threads)
+            .iter()
+            .zip(&self.weights)
+            .map(|(p, w)| p * w)
+            .sum()
+    }
+
+    /// RMSE over a sample set.
+    pub fn rmse(&self, samples: &[(f64, f64, f64)]) -> f64 {
+        if samples.is_empty() {
+            return 0.0;
+        }
+        let se: f64 = samples
+            .iter()
+            .map(|&(a, t, y)| (self.eval(a, t) - y).powi(2))
+            .sum();
+        (se / samples.len() as f64).sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn recovers_planted_model() {
+        // y = 0.5 + 0.2a + 0.1·a·log2(t)
+        let mut samples = Vec::new();
+        for ai in 1..20 {
+            for &t in &[1.0f64, 2.0, 4.0, 8.0, 16.0] {
+                let a = ai as f64 * 0.5;
+                samples.push((a, t, 0.5 + 0.2 * a + 0.1 * a * t.log2()));
+            }
+        }
+        let m = Reg2dModel::fit(&samples).unwrap();
+        assert!(m.rmse(&samples) < 1e-6);
+        assert!((m.eval(4.0, 8.0) - (0.5 + 0.8 + 1.2)).abs() < 1e-4);
+    }
+
+    #[test]
+    fn empty_is_none() {
+        assert!(Reg2dModel::fit(&[]).is_none());
+    }
+
+    #[test]
+    fn single_thread_records_still_fit() {
+        // Degenerate in t (all t=1): ridge keeps it solvable; the model
+        // must still interpolate over `a` sensibly.
+        let samples: Vec<(f64, f64, f64)> =
+            (1..30).map(|i| (i as f64 * 0.3, 1.0, i as f64 * 0.1)).collect();
+        let m = Reg2dModel::fit(&samples).unwrap();
+        assert!(m.rmse(&samples) < 0.05);
+    }
+
+    #[test]
+    fn interpolates_between_thread_counts() {
+        let mut samples = Vec::new();
+        for &t in &[1.0f64, 4.0, 16.0] {
+            for ai in 1..16 {
+                let a = ai as f64;
+                samples.push((a, t, a * t.sqrt() * 0.1));
+            }
+        }
+        let m = Reg2dModel::fit(&samples).unwrap();
+        // Not exact (sqrt is outside the basis) but monotone-ish and
+        // bounded error on the fitted domain.
+        assert!(m.rmse(&samples) < 0.35);
+        assert!(m.eval(8.0, 16.0) > m.eval(8.0, 1.0));
+    }
+}

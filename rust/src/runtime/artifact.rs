@@ -1,0 +1,130 @@
+//! Artifact manifest: shapes and file names the AOT pass recorded.
+//!
+//! The Rust side validates its own matrix conversion against these
+//! before feeding an executable — a mismatch (e.g. the Python and Rust
+//! β conversions disagreeing on nnz) fails loudly instead of producing
+//! silent garbage.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// One AOT-compiled workload.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Workload {
+    pub name: String,
+    pub file: PathBuf,
+    pub rows: usize,
+    pub cols: usize,
+    pub nnz: usize,
+    pub iters: Option<usize>,
+}
+
+/// Parsed `artifacts/manifest.json`.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub strip: usize,
+    pub workloads: BTreeMap<String, Workload>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    /// Loads and validates the manifest from an artifacts directory.
+    pub fn load(dir: impl AsRef<Path>) -> anyhow::Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let text = std::fs::read_to_string(dir.join("manifest.json"))?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parses manifest JSON (exposed for tests).
+    pub fn parse(text: &str, dir: PathBuf) -> anyhow::Result<Manifest> {
+        let v = Json::parse(text)?;
+        let strip = v
+            .get("strip")
+            .and_then(|s| s.as_f64())
+            .ok_or_else(|| anyhow::anyhow!("manifest: missing strip"))?
+            as usize;
+        let wl = match v.get("workloads") {
+            Some(Json::Obj(m)) => m,
+            _ => anyhow::bail!("manifest: missing workloads object"),
+        };
+        let mut workloads = BTreeMap::new();
+        for (name, w) in wl {
+            let num = |k: &str| -> anyhow::Result<usize> {
+                w.get(k)
+                    .and_then(|x| x.as_f64())
+                    .map(|x| x as usize)
+                    .ok_or_else(|| anyhow::anyhow!("workload {name}: missing {k}"))
+            };
+            let file = w
+                .get("file")
+                .and_then(|f| f.as_str())
+                .ok_or_else(|| anyhow::anyhow!("workload {name}: missing file"))?;
+            workloads.insert(
+                name.clone(),
+                Workload {
+                    name: name.clone(),
+                    file: dir.join(file),
+                    rows: num("rows")?,
+                    cols: num("cols")?,
+                    nnz: num("nnz")?,
+                    iters: w.get("iters").and_then(|x| x.as_f64()).map(|x| x as usize),
+                },
+            );
+        }
+        Ok(Manifest { strip, workloads, dir })
+    }
+
+    /// Looks up a workload by name.
+    pub fn workload(&self, name: &str) -> anyhow::Result<&Workload> {
+        self.workloads
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("no workload '{name}' in manifest"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1, "strip": 256,
+      "workloads": {
+        "spmv": {"file": "s.hlo.txt", "rows": 16, "cols": 16, "nnz": 64},
+        "cg": {"file": "c.hlo.txt", "rows": 16, "cols": 16, "nnz": 64, "iters": 10}
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/a")).unwrap();
+        assert_eq!(m.strip, 256);
+        let w = m.workload("cg").unwrap();
+        assert_eq!(w.iters, Some(10));
+        assert_eq!(w.file, PathBuf::from("/a/c.hlo.txt"));
+        assert_eq!(m.workload("spmv").unwrap().nnz, 64);
+        assert!(m.workload("nope").is_err());
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Manifest::parse("{}", PathBuf::new()).is_err());
+        assert!(Manifest::parse(
+            r#"{"strip": 1, "workloads": {"w": {"file": "f"}}}"#,
+            PathBuf::new()
+        )
+        .is_err());
+        assert!(Manifest::parse("not json", PathBuf::new()).is_err());
+    }
+
+    #[test]
+    fn real_manifest_if_built() {
+        // When `make artifacts` has run, the real manifest must parse.
+        let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+        if std::path::Path::new(dir).join("manifest.json").exists() {
+            let m = Manifest::load(dir).unwrap();
+            assert!(m.workloads.contains_key("spmv"));
+            assert!(m.workloads.contains_key("cg"));
+        }
+    }
+}

@@ -1,0 +1,146 @@
+//! PJRT executor: compile HLO-text artifacts once, run them many times.
+//!
+//! Follows the reference wiring in /opt/xla-example/load_hlo: text →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `PjRtClient::compile` → `execute`. Outputs are tuples
+//! (`return_tuple=True` at lowering).
+
+use super::artifact::{Manifest, Workload};
+use std::collections::HashMap;
+use std::path::Path;
+
+/// One compiled workload.
+pub struct Executor {
+    exe: xla::PjRtLoadedExecutable,
+    pub workload: Workload,
+}
+
+impl Executor {
+    /// Runs the executable on f64 vector parameters, returning every
+    /// tuple element flattened to `Vec<f64>`.
+    pub fn run_f64(&self, params: &[&[f64]]) -> anyhow::Result<Vec<Vec<f64>>> {
+        let literals: Vec<xla::Literal> =
+            params.iter().map(|p| xla::Literal::vec1(p)).collect();
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0]
+            .to_literal_sync()?;
+        let parts = result.to_tuple()?;
+        parts
+            .into_iter()
+            .map(|l| l.to_vec::<f64>().map_err(Into::into))
+            .collect()
+    }
+}
+
+/// PJRT CPU client plus the compiled-executable cache.
+pub struct XlaEngine {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    cache: HashMap<String, Executor>,
+}
+
+impl XlaEngine {
+    /// Creates the CPU client and loads the artifact manifest.
+    pub fn new(artifacts_dir: impl AsRef<Path>) -> anyhow::Result<Self> {
+        let manifest = Manifest::load(&artifacts_dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(XlaEngine { client, manifest, cache: HashMap::new() })
+    }
+
+    /// Platform string (for logs).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compiles (or returns the cached) executable for a workload.
+    pub fn executor(&mut self, name: &str) -> anyhow::Result<&Executor> {
+        if !self.cache.contains_key(name) {
+            let w = self.manifest.workload(name)?.clone();
+            let path = w
+                .file
+                .to_str()
+                .ok_or_else(|| anyhow::anyhow!("non-utf8 artifact path"))?;
+            let proto = xla::HloModuleProto::from_text_file(path)?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp)?;
+            self.cache
+                .insert(name.to_string(), Executor { exe, workload: w });
+        }
+        Ok(&self.cache[name])
+    }
+
+    /// Validates that a CSR matrix matches a workload's compiled
+    /// shapes (rows/cols/nnz). Call before feeding `values`.
+    pub fn validate_matrix(
+        &self,
+        name: &str,
+        csr: &crate::matrix::Csr,
+    ) -> anyhow::Result<()> {
+        let w = self.manifest.workload(name)?;
+        anyhow::ensure!(
+            w.rows == csr.rows && w.cols == csr.cols && w.nnz == csr.nnz(),
+            "matrix shape ({}, {}, nnz {}) does not match artifact '{name}' \
+             ({}, {}, nnz {}) — regenerate artifacts or the matrix",
+            csr.rows,
+            csr.cols,
+            csr.nnz(),
+            w.rows,
+            w.cols,
+            w.nnz
+        );
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::suite;
+
+    fn artifacts_dir() -> Option<std::path::PathBuf> {
+        let dir =
+            std::path::Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"));
+        dir.join("manifest.json").exists().then(|| dir.to_path_buf())
+    }
+
+    /// End-to-end: the XLA artifact (jax+pallas lowered) must agree
+    /// with the native Rust kernels on the shared Poisson workload.
+    #[test]
+    fn xla_spmv_matches_native() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        };
+        let mut engine = XlaEngine::new(dir).unwrap();
+        let w = engine.manifest.workload("spmv").unwrap().clone();
+        let n = (w.rows as f64).sqrt() as usize;
+        let csr = suite::poisson2d(n);
+        engine.validate_matrix("spmv", &csr).unwrap();
+
+        let x: Vec<f64> =
+            (0..csr.cols).map(|i| ((i % 31) as f64) * 0.1 - 1.5).collect();
+        let exe = engine.executor("spmv").unwrap();
+        let out = exe.run_f64(&[&csr.values, &x]).unwrap();
+        assert_eq!(out.len(), 1);
+
+        let mut want = vec![0.0; csr.rows];
+        csr.spmv_ref(&x, &mut want);
+        for i in 0..csr.rows {
+            assert!(
+                (out[0][i] - want[i]).abs() <= 1e-9 * want[i].abs().max(1.0),
+                "row {i}: xla {} vs native {}",
+                out[0][i],
+                want[i]
+            );
+        }
+    }
+
+    #[test]
+    fn validate_matrix_rejects_mismatch() {
+        let Some(dir) = artifacts_dir() else {
+            return;
+        };
+        let engine = XlaEngine::new(dir).unwrap();
+        let wrong = suite::poisson2d(8);
+        assert!(engine.validate_matrix("spmv", &wrong).is_err());
+    }
+}

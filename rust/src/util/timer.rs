@@ -1,0 +1,90 @@
+//! Wall-clock timing helpers used by the benchmark harness.
+
+use std::time::Instant;
+
+/// Simple wall-clock timer.
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    /// Starts a new timer.
+    pub fn start() -> Self {
+        Timer { start: Instant::now() }
+    }
+
+    /// Elapsed seconds since start.
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    /// Elapsed nanoseconds since start.
+    pub fn elapsed_ns(&self) -> u128 {
+        self.start.elapsed().as_nanos()
+    }
+
+    /// Restarts the timer and returns the previous elapsed seconds.
+    pub fn lap_s(&mut self) -> f64 {
+        let e = self.elapsed_s();
+        self.start = Instant::now();
+        e
+    }
+}
+
+/// Times `f`, returning `(result, seconds)`.
+pub fn time_it<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t = Timer::start();
+    let r = f();
+    (r, t.elapsed_s())
+}
+
+/// The paper measures "an average of 16 consecutive runs without
+/// accessing the matrix before the first run". This replicates that
+/// protocol: run `f` `runs` times, return the mean seconds per run.
+pub fn mean_of_runs(runs: usize, mut f: impl FnMut()) -> f64 {
+    assert!(runs > 0);
+    let t = Timer::start();
+    for _ in 0..runs {
+        f();
+    }
+    t.elapsed_s() / runs as f64
+}
+
+/// FLOPS metric used throughout the paper: `2 × nnz / T`.
+pub fn spmv_gflops(nnz: usize, seconds: f64) -> f64 {
+    2.0 * nnz as f64 / seconds / 1e9
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_monotone() {
+        let t = Timer::start();
+        let a = t.elapsed_ns();
+        let b = t.elapsed_ns();
+        assert!(b >= a);
+    }
+
+    #[test]
+    fn time_it_returns_value() {
+        let (v, s) = time_it(|| 41 + 1);
+        assert_eq!(v, 42);
+        assert!(s >= 0.0);
+    }
+
+    #[test]
+    fn mean_of_runs_counts() {
+        let mut n = 0;
+        let _ = mean_of_runs(16, || n += 1);
+        assert_eq!(n, 16);
+    }
+
+    #[test]
+    fn gflops_formula() {
+        // 1e9 nnz in 2 seconds → 2*1e9/2/1e9 = 1 GFlop/s
+        let g = spmv_gflops(1_000_000_000, 2.0);
+        assert!((g - 1.0).abs() < 1e-12);
+    }
+}

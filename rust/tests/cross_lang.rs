@@ -1,0 +1,84 @@
+//! Cross-language consistency: the Python (`compile.kernels.spmv_block
+//! .csr_to_block_desc`) and Rust (`formats::csr_to_block`) conversions
+//! must produce the *same* block-row descriptor stream for the same
+//! matrix — the contract the AOT artifact path depends on (Rust feeds
+//! `values` in an order fixed by its own conversion to an executable
+//! whose descriptors were baked by Python's conversion).
+//!
+//! Skips when `python` (with jax) is not on PATH — the numeric
+//! agreement is separately covered by the XLA artifact tests.
+
+use spc5::formats::{csr_to_block, BlockSize};
+use spc5::matrix::suite;
+use spc5::util::json::Json;
+
+/// Flattens the Rust block matrix to (row, col, mask, offset) block
+/// rows — the Python descriptor layout.
+fn flatten(
+    bm: &spc5::formats::BlockMatrix,
+) -> (Vec<u32>, Vec<u32>, Vec<u32>, Vec<u32>) {
+    let r = bm.bs.r;
+    let (mut rows, mut cols, mut masks, mut offs) =
+        (Vec::new(), Vec::new(), Vec::new(), Vec::new());
+    let mut off = 0u32;
+    for it in 0..bm.intervals() {
+        let (a, b) =
+            (bm.block_rowptr[it] as usize, bm.block_rowptr[it + 1] as usize);
+        for blk in a..b {
+            for i in 0..r {
+                let mask = bm.block_masks[blk * r + i];
+                if mask != 0 {
+                    rows.push((it * r + i) as u32);
+                    cols.push(bm.block_colidx[blk]);
+                    masks.push(mask as u32);
+                    offs.push(off);
+                    off += mask.count_ones();
+                }
+            }
+        }
+    }
+    (rows, cols, masks, offs)
+}
+
+#[test]
+fn python_and_rust_conversions_agree() {
+    let n = 12usize;
+    let output = std::process::Command::new("python")
+        .args(["-m", "compile.dump", "--n", &n.to_string()])
+        .current_dir(concat!(env!("CARGO_MANIFEST_DIR"), "/python"))
+        .output();
+    let output = match output {
+        Ok(o) if o.status.success() => o,
+        _ => {
+            eprintln!("skipping cross-language test (python/jax unavailable)");
+            return;
+        }
+    };
+    let text = String::from_utf8(output.stdout).expect("utf8");
+    let v = Json::parse(text.trim()).expect("json from compile.dump");
+    let get_arr = |k: &str| -> Vec<u32> {
+        v.get(k)
+            .and_then(|a| a.as_arr())
+            .expect(k)
+            .iter()
+            .map(|x| x.as_f64().unwrap() as u32)
+            .collect()
+    };
+
+    let csr = suite::poisson2d(n);
+    assert_eq!(v.get("nnz").unwrap().as_f64().unwrap() as usize, csr.nnz());
+    let bm = csr_to_block(&csr, BlockSize::new(1, 8)).unwrap();
+    let (rows, cols, masks, offs) = flatten(&bm);
+
+    // Python arrays are padded to STRIP with mask-0 entries; compare the
+    // real prefix.
+    let py_masks = get_arr("block_mask");
+    let real = rows.len();
+    assert!(py_masks.len() >= real);
+    assert_eq!(&get_arr("block_row")[..real], &rows[..]);
+    assert_eq!(&get_arr("block_col")[..real], &cols[..]);
+    assert_eq!(&py_masks[..real], &masks[..]);
+    assert_eq!(&get_arr("block_off")[..real], &offs[..]);
+    // Padding must be all-zero masks.
+    assert!(py_masks[real..].iter().all(|&m| m == 0));
+}

@@ -1,0 +1,216 @@
+//! Cross-module integration tests: file I/O → conversion → engine →
+//! solver chains, the CLI surface, and the XLA artifact path when
+//! artifacts are present.
+
+use spc5::coordinator::{cg_solve, EngineConfig, Request, SpmvEngine, SpmvService};
+use spc5::kernels::KernelKind;
+use spc5::matrix::{market, suite};
+use spc5::predictor::{PerfRecord, RecordStore};
+use spc5::util::Rng;
+
+/// MatrixMarket file → CSR → engine → SpMV, end to end through the
+/// public API only.
+#[test]
+fn mtx_file_to_engine() {
+    let dir = std::env::temp_dir().join("spc5_it");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("m.mtx");
+
+    // Write a generated matrix, read it back, serve it.
+    let csr = suite::banded(500, 8, 0.4, 3);
+    let mut coo = spc5::matrix::Coo::new(csr.rows, csr.cols);
+    for r in 0..csr.rows {
+        for k in csr.row_range(r) {
+            coo.push(r, csr.colidx[k] as usize, csr.values[k]);
+        }
+    }
+    market::write_file(&path, &coo).unwrap();
+    let read_back = market::read_file(&path).unwrap().to_csr().unwrap();
+    assert_eq!(csr, read_back);
+
+    let engine =
+        SpmvEngine::new(read_back.clone(), &EngineConfig::default(), None)
+            .unwrap();
+    let x: Vec<f64> = (0..csr.cols).map(|i| (i % 13) as f64 * 0.25).collect();
+    let mut y = vec![0.0; csr.rows];
+    engine.spmv_into(&x, &mut y);
+    let mut want = vec![0.0; csr.rows];
+    csr.spmv_ref(&x, &mut want);
+    spc5::testkit::assert_close(&y, &want, 1e-9, "mtx->engine");
+    std::fs::remove_file(path).ok();
+}
+
+/// Records written by a bench-style run must round-trip through the
+/// store and drive selection.
+#[test]
+fn records_to_selection_pipeline() {
+    let dir = std::env::temp_dir().join("spc5_it2");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("records.json");
+
+    let mut store = RecordStore::new();
+    // Synthetic but realistic records across the avg range.
+    for i in 0..20 {
+        let avg = 1.0 + i as f64 * 0.4;
+        store.push(PerfRecord {
+            matrix: format!("train{i}"),
+            kernel: KernelKind::Beta(1, 8),
+            avg_nnz_per_block: avg,
+            threads: 1,
+            gflops: 1.0 + 0.2 * avg,
+        });
+        store.push(PerfRecord {
+            matrix: format!("train{i}"),
+            kernel: KernelKind::BetaTest(1, 8),
+            avg_nnz_per_block: avg,
+            threads: 1,
+            gflops: 1.8 - 0.05 * avg,
+        });
+    }
+    store.save(&path).unwrap();
+    let loaded = RecordStore::load(&path).unwrap();
+    assert_eq!(loaded.records.len(), 40);
+
+    // High-fill matrix → β(1,8); scattered → test variant.
+    let dense = suite::dense(64, 1);
+    let kinds = [KernelKind::Beta(1, 8), KernelKind::BetaTest(1, 8)];
+    let sel =
+        spc5::predictor::select_sequential(&dense, &loaded, &kinds).unwrap();
+    assert_eq!(sel.kernel, KernelKind::Beta(1, 8));
+
+    let scatter = suite::uniform_scatter(400, 4, 2);
+    let sel2 =
+        spc5::predictor::select_sequential(&scatter, &loaded, &kinds).unwrap();
+    assert_eq!(sel2.kernel, KernelKind::BetaTest(1, 8));
+    std::fs::remove_file(path).ok();
+}
+
+/// Engine + CG across kernels and thread counts reach the same answer.
+#[test]
+fn cg_engine_consistency() {
+    let csr = suite::poisson2d(20);
+    let mut rng = Rng::new(9);
+    let b: Vec<f64> = (0..csr.rows).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+    let mut solutions = Vec::new();
+    for (kernel, threads) in [
+        (KernelKind::Beta(1, 8), 1usize),
+        (KernelKind::Beta(2, 8), 1),
+        (KernelKind::Beta(4, 4), 3),
+        (KernelKind::BetaTest(1, 8), 2),
+    ] {
+        let cfg = EngineConfig {
+            threads,
+            kernel: Some(kernel),
+            ..Default::default()
+        };
+        let engine = SpmvEngine::new(csr.clone(), &cfg, None).unwrap();
+        let mut x = vec![0.0; csr.rows];
+        let report = cg_solve(&engine, &b, &mut x, 3000, 1e-22);
+        assert!(report.converged, "{kernel} t={threads}: {report:?}");
+        solutions.push(x);
+    }
+    for s in &solutions[1..] {
+        spc5::testkit::assert_close(s, &solutions[0], 1e-6, "cg kernels");
+    }
+}
+
+/// Service under concurrent load returns exact results for every id.
+#[test]
+fn service_concurrent_correctness() {
+    let csr = suite::quantum_clusters(600, 4, 10, 8, 21);
+    let engine = SpmvEngine::new(
+        csr.clone(),
+        &EngineConfig {
+            kernel: Some(KernelKind::Beta(2, 4)),
+            ..Default::default()
+        },
+        None,
+    )
+    .unwrap();
+    let service = SpmvService::start(engine, 5);
+    let n = 60u64;
+    for id in 0..n {
+        let x: Vec<f64> =
+            (0..csr.cols).map(|i| ((i as u64 * id) % 17) as f64 * 0.1).collect();
+        service.submit(Request { id, x });
+    }
+    for _ in 0..n {
+        let r = service.recv().unwrap();
+        let x: Vec<f64> = (0..csr.cols)
+            .map(|i| ((i as u64 * r.id) % 17) as f64 * 0.1)
+            .collect();
+        let mut want = vec![0.0; csr.rows];
+        csr.spmv_ref(&x, &mut want);
+        spc5::testkit::assert_close(&r.y, &want, 1e-9, "service");
+    }
+    assert_eq!(service.shutdown(), n as usize);
+}
+
+/// The full three-layer path: artifacts (if built) vs native kernels.
+#[test]
+fn xla_artifact_cg_agrees_with_native() {
+    let dir = std::path::Path::new("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping xla integration (run `make artifacts`)");
+        return;
+    }
+    let mut xla = spc5::runtime::XlaEngine::new(dir).unwrap();
+    let w = xla.manifest.workload("cg").unwrap().clone();
+    let n = (w.rows as f64).sqrt() as usize;
+    let iters = w.iters.unwrap();
+    let csr = suite::poisson2d(n);
+    xla.validate_matrix("cg", &csr).unwrap();
+
+    let mut rng = Rng::new(0x17E6);
+    let b: Vec<f64> = (0..csr.rows).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+    let x0 = vec![0.0; csr.rows];
+    let out = xla.executor("cg").unwrap().run_f64(&[&csr.values, &b, &x0]).unwrap();
+
+    let engine =
+        SpmvEngine::new(csr.clone(), &EngineConfig::default(), None).unwrap();
+    let mut x_native = vec![0.0; csr.rows];
+    cg_solve(&engine, &b, &mut x_native, iters, 1e-30);
+    spc5::testkit::assert_close(&out[0], &x_native, 1e-6, "xla vs native cg");
+}
+
+/// CLI binary smoke tests through std::process.
+#[test]
+fn cli_smoke() {
+    let bin = env!("CARGO_BIN_EXE_spc5");
+    let run = |args: &[&str]| {
+        std::process::Command::new(bin)
+            .args(args)
+            .output()
+            .expect("spawn spc5")
+    };
+    // help
+    let out = run(&["help"]);
+    assert!(out.status.success());
+    assert!(String::from_utf8_lossy(&out.stdout).contains("commands:"));
+    // kernels
+    let out = run(&["kernels"]);
+    assert!(out.status.success());
+    // stats on one matrix
+    let out = run(&["stats", "--matrix", "nd6k"]);
+    assert!(out.status.success());
+    assert!(String::from_utf8_lossy(&out.stdout).contains("nd6k"));
+    // spmv with explicit kernel
+    let out = run(&["spmv", "--matrix", "ns3Da", "--kernel", "b(2,8)"]);
+    assert!(out.status.success());
+    assert!(String::from_utf8_lossy(&out.stdout).contains("gflops"));
+    // unknown matrix → error exit
+    let out = run(&["spmv", "--matrix", "definitely-not-a-matrix"]);
+    assert!(!out.status.success());
+    // bad kernel → error exit
+    let out = run(&["spmv", "--matrix", "ns3Da", "--kernel", "b(9,9)"]);
+    assert!(!out.status.success());
+    // gen + stats on the file
+    let dir = std::env::temp_dir().join("spc5_cli");
+    std::fs::create_dir_all(&dir).unwrap();
+    let mtx = dir.join("gen.mtx");
+    let out = run(&["gen", "--class", "banded", "--dim", "400", "--out", mtx.to_str().unwrap()]);
+    assert!(out.status.success());
+    let out = run(&["stats", "--mtx", mtx.to_str().unwrap()]);
+    assert!(out.status.success());
+    std::fs::remove_file(mtx).ok();
+}
