@@ -13,7 +13,7 @@
 //!
 //! Run: `make artifacts && cargo run --release --example cg_solver`
 
-use spc5::coordinator::{cg_solve, EngineConfig, SpmvEngine};
+use spc5::coordinator::{cg_solve, SpmvEngine};
 use spc5::kernels::KernelKind;
 use spc5::matrix::suite;
 use spc5::runtime::XlaEngine;
@@ -41,8 +41,7 @@ fn main() -> anyhow::Result<()> {
         KernelKind::Beta(2, 4),
         KernelKind::Beta(4, 4),
     ] {
-        let cfg = EngineConfig { kernel: Some(kernel), ..Default::default() };
-        let engine = SpmvEngine::new(csr.clone(), &cfg, None)?;
+        let engine = SpmvEngine::builder(csr.clone()).kernel(kernel).build()?;
         let mut x = vec![0.0; dim];
         let t = Timer::start();
         let report = cg_solve(&engine, &b, &mut x, iters, 1e-20);

@@ -108,7 +108,28 @@ fn main() -> anyhow::Result<()> {
         assert!(max_err < 1e-8);
     }
 
-    // 5. Eq. (4): when does the block storage beat CSR?
+    // 5. The same stack at single precision: 16 floats per AVX-512
+    //    register, u16 masks, blocks up to 16 columns wide (β32).
+    let csr32 = sm.csr.to_precision::<f32>();
+    let engine32 = spc5::SpmvEngine::builder(csr32.clone())
+        .kernel(KernelKind::Beta(1, 16))
+        .build()?;
+    let x32: Vec<f32> = x.iter().map(|&v| v as f32).collect();
+    let mut y32 = vec![0.0f32; csr32.rows];
+    engine32.spmv_into(&x32, &mut y32);
+    let max_err32 = y32
+        .iter()
+        .zip(&want)
+        .map(|(a, b)| (*a as f64 - b).abs())
+        .fold(0.0f64, f64::max);
+    println!(
+        "\nf32 β(1,16) through the same engine API: max|err vs f64| = \
+         {max_err32:.2e} (storage: {} vs f64 {})",
+        fmt_bytes(spc5::formats::csr_to_block(&csr32, BlockSize::new(1, 16))?.occupancy_bytes()),
+        fmt_bytes(csr_to_block(&sm.csr, BlockSize::new(1, 8))?.occupancy_bytes()),
+    );
+
+    // 6. Eq. (4): when does the block storage beat CSR?
     println!("\nEq. (4) storage crossovers (min avg nnz/block):");
     for bs in BlockSize::PAPER_SIZES {
         println!("  {}: {:.2}", bs, fill_crossover(bs));

@@ -8,7 +8,7 @@
 //!
 //! Run: `cargo run --release --example spmv_server`
 
-use spc5::coordinator::{EngineConfig, Request, SpmvEngine, SpmvService};
+use spc5::coordinator::{Request, SpmvEngine, SpmvService};
 use spc5::kernels::KernelKind;
 use spc5::matrix::suite;
 use spc5::util::{Rng, Timer};
@@ -23,11 +23,9 @@ fn main() -> anyhow::Result<()> {
         csr.nnz()
     );
 
-    let cfg = EngineConfig {
-        kernel: Some(KernelKind::Beta(4, 4)),
-        ..Default::default()
-    };
-    let engine = SpmvEngine::new(csr.clone(), &cfg, None)?;
+    let engine = SpmvEngine::builder(csr.clone())
+        .kernel(KernelKind::Beta(4, 4))
+        .build()?;
     println!("kernel: {}", engine.kernel());
 
     let workers = 4usize;

@@ -7,9 +7,8 @@
 //! so `Avg(r,c)` moves while dims and nnz structure stay comparable.
 
 use spc5::bench::{bench_vector, Table, RUNS};
-use spc5::formats::block32::csr_to_block32;
 use spc5::formats::{csr_to_block, BlockSize};
-use spc5::kernels::{avx512, avx512f32, scalar, spmm, KernelKind, KernelSet};
+use spc5::kernels::{avx512, scalar, spmm, spmv_block, KernelKind, KernelSet};
 use spc5::matrix::{reorder, suite};
 use spc5::parallel::{ParallelSpmv, ParallelStrategy};
 use spc5::util::timer::{mean_of_runs, spmv_gflops};
@@ -106,9 +105,12 @@ fn reorder_ablation() {
     t.emit("ablation_reorder");
 }
 
-/// f32 sixteen-lane kernels vs the f64 eight-lane kernels.
+/// f32 sixteen-lane kernels vs the f64 eight-lane kernels — both
+/// served by the same generic stack (`csr_to_block::<T>` +
+/// `spmv_block::<T>`).
 fn f32_vs_f64() {
     let csr = suite::contact_runs(6_000, 3, 48, 21);
+    let csr32 = csr.to_precision::<f32>();
     let x64 = bench_vector(csr.cols, 4);
     let x32: Vec<f32> = x64.iter().map(|&v| v as f32).collect();
     let mut t = Table::new(
@@ -121,7 +123,7 @@ fn f32_vs_f64() {
         let bm = csr_to_block(&csr, bs64).unwrap();
         let mut y = vec![0.0f64; csr.rows];
         let s = mean_of_runs(RUNS, || {
-            let _ = avx512::spmv(&bm, &x64, &mut y, false);
+            spmv_block(&bm, &x64, &mut y, false);
         });
         t.row(vec![
             name.into(),
@@ -133,9 +135,9 @@ fn f32_vs_f64() {
         ("f32 b(1,16)", BlockSize::new(1, 16)),
         ("f32 b(4,16)", BlockSize::new(4, 16)),
     ] {
-        let bm = csr_to_block32(&csr, bs32).unwrap();
-        let mut y = vec![0.0f32; csr.rows];
-        let s = mean_of_runs(RUNS, || avx512f32::spmv32(&bm, &x32, &mut y));
+        let bm = csr_to_block(&csr32, bs32).unwrap();
+        let mut y = vec![0.0f32; csr32.rows];
+        let s = mean_of_runs(RUNS, || spmv_block(&bm, &x32, &mut y, false));
         t.row(vec![
             name.into(),
             format!("{:.2}", spmv_gflops(bm.nnz(), s)),
@@ -153,11 +155,12 @@ fn spmm_ablation() {
         "Ablation E: multi-vector SpMM b(2,8) (x reuse across k vectors)",
         &["k", "total GFlop/s", "GFlop/s per vector"],
     );
-    // k = 1 via the SpMV kernel.
+    // k = 1 via the SpMV dispatch (AVX-512 when available, scalar
+    // otherwise — never a silent no-op).
     let x1 = bench_vector(csr.cols, 6);
     let mut y1 = vec![0.0f64; csr.rows];
     let s1 = mean_of_runs(RUNS, || {
-        avx512::spmv(&bm, &x1, &mut y1, false);
+        spmv_block(&bm, &x1, &mut y1, false);
     });
     let g1 = spmv_gflops(bm.nnz(), s1);
     t.row(vec!["1 (spmv)".into(), format!("{g1:.2}"), format!("{g1:.2}")]);

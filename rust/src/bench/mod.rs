@@ -13,6 +13,7 @@ pub mod runner;
 use crate::kernels::{KernelKind, KernelSet};
 use crate::parallel::{ParallelSpmv, ParallelStrategy};
 use crate::predictor::{PerfRecord, RecordStore};
+use crate::scalar::Scalar;
 use crate::util::timer::{mean_of_runs, spmv_gflops};
 use crate::util::Rng;
 
@@ -30,15 +31,19 @@ pub struct Measurement {
     pub seconds: f64,
 }
 
-/// Measures one kernel on a prepared [`KernelSet`] (sequential).
-pub fn measure_sequential(
-    set: &KernelSet,
+/// Measures one kernel on a prepared [`KernelSet`] (sequential), at
+/// either precision.
+pub fn measure_sequential<T: Scalar>(
+    set: &KernelSet<T>,
     matrix: &str,
     kernel: KernelKind,
 ) -> Measurement {
     let nnz = set.csr.nnz();
-    let x = bench_vector(set.csr.cols, 0xBE7C);
-    let mut y = vec![0.0f64; set.csr.rows];
+    let x: Vec<T> = bench_vector(set.csr.cols, 0xBE7C)
+        .into_iter()
+        .map(T::from_f64)
+        .collect();
+    let mut y = vec![T::ZERO; set.csr.rows];
     let seconds = mean_of_runs(RUNS, || {
         set.spmv(kernel, &x, &mut y);
     });
@@ -54,15 +59,18 @@ pub fn measure_sequential(
 }
 
 /// Measures a β kernel on a pre-built parallel executor.
-pub fn measure_parallel(
-    p: &ParallelSpmv,
+pub fn measure_parallel<T: Scalar>(
+    p: &ParallelSpmv<T>,
     matrix: &str,
     kernel: KernelKind,
 ) -> Measurement {
     let bm = p.matrix();
     let nnz = bm.nnz();
-    let x = bench_vector(bm.cols, 0xBE7C);
-    let mut y = vec![0.0f64; bm.rows];
+    let x: Vec<T> = bench_vector(bm.cols, 0xBE7C)
+        .into_iter()
+        .map(T::from_f64)
+        .collect();
+    let mut y = vec![T::ZERO; bm.rows];
     let seconds = mean_of_runs(RUNS, || {
         p.spmv(&x, &mut y);
     });

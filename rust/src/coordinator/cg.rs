@@ -3,8 +3,14 @@
 //! such as the popular CG method"), used by the CG example to compare
 //! the pure-Rust path against the AOT-compiled XLA path (which runs the
 //! same algorithm lowered from JAX — see python/compile/model.py).
+//!
+//! Generic over the engine's precision: vectors are `T`, while the
+//! Krylov scalars (dot products, α, β, residual norms) accumulate in
+//! f64 — the mixed-precision shape single-precision solvers need to
+//! stay stable.
 
 use super::engine::SpmvEngine;
+use crate::scalar::Scalar;
 
 /// Outcome of a CG solve.
 #[derive(Clone, Debug)]
@@ -17,14 +23,19 @@ pub struct CgReport {
     pub spmv_count: usize,
 }
 
+/// f64-accumulated dot product of two `T` vectors.
+pub(crate) fn dot_f64<T: Scalar>(a: &[T], b: &[T]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| x.to_f64() * y.to_f64()).sum()
+}
+
 /// Solves the SPD system `A·x = b` with (unpreconditioned) CG through
 /// the engine's SpMV. `x` holds the initial guess on entry, the
 /// solution on exit. Stops at `max_iters` or when the squared residual
 /// drops below `tol2`.
-pub fn cg_solve(
-    engine: &SpmvEngine,
-    b: &[f64],
-    x: &mut [f64],
+pub fn cg_solve<T: Scalar>(
+    engine: &SpmvEngine<T>,
+    b: &[T],
+    x: &mut [T],
     max_iters: usize,
     tol2: f64,
 ) -> CgReport {
@@ -33,33 +44,34 @@ pub fn cg_solve(
     let mut spmv_count = 0usize;
 
     // r = b − A·x
-    let mut r = vec![0.0f64; n];
+    let mut r = vec![T::ZERO; n];
     engine.spmv_into(x, &mut r);
     spmv_count += 1;
     for i in 0..n {
         r[i] = b[i] - r[i];
     }
     let mut p = r.clone();
-    let mut rs: f64 = r.iter().map(|v| v * v).sum();
-    let mut ap = vec![0.0f64; n];
+    let mut rs: f64 = dot_f64(&r, &r);
+    let mut ap = vec![T::ZERO; n];
 
     let mut iterations = 0usize;
     while iterations < max_iters && rs > tol2 {
         engine.spmv_into(&p, &mut ap);
         spmv_count += 1;
-        let denom: f64 = p.iter().zip(&ap).map(|(a, b)| a * b).sum();
+        let denom: f64 = dot_f64(&p, &ap);
         if denom == 0.0 {
             break;
         }
         let alpha = rs / denom;
+        let alpha_t = T::from_f64(alpha);
         for i in 0..n {
-            x[i] += alpha * p[i];
-            r[i] -= alpha * ap[i];
+            x[i] += alpha_t * p[i];
+            r[i] -= alpha_t * ap[i];
         }
-        let rs_new: f64 = r.iter().map(|v| v * v).sum();
-        let beta = rs_new / rs;
+        let rs_new: f64 = dot_f64(&r, &r);
+        let beta_t = T::from_f64(rs_new / rs);
         for i in 0..n {
-            p[i] = r[i] + beta * p[i];
+            p[i] = r[i] + beta_t * p[i];
         }
         rs = rs_new;
         iterations += 1;
@@ -76,19 +88,21 @@ pub fn cg_solve(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::engine::EngineConfig;
     use crate::kernels::KernelKind;
-    use crate::matrix::suite;
+    use crate::matrix::{suite, Csr};
     use crate::util::Rng;
 
-    fn solve_poisson(n: usize, kernel: KernelKind, threads: usize) -> (Vec<f64>, CgReport, crate::matrix::Csr) {
+    fn solve_poisson(
+        n: usize,
+        kernel: KernelKind,
+        threads: usize,
+    ) -> (Vec<f64>, CgReport, Csr) {
         let csr = suite::poisson2d(n);
-        let cfg = EngineConfig {
-            threads,
-            kernel: Some(kernel),
-            ..Default::default()
-        };
-        let engine = SpmvEngine::new(csr.clone(), &cfg, None).unwrap();
+        let engine = SpmvEngine::builder(csr.clone())
+            .threads(threads)
+            .kernel(kernel)
+            .build()
+            .unwrap();
         let mut rng = Rng::new(33);
         let b: Vec<f64> = (0..csr.rows).map(|_| rng.range_f64(-1.0, 1.0)).collect();
         let mut x = vec![0.0; csr.rows];
@@ -117,6 +131,17 @@ mod tests {
     }
 
     #[test]
+    fn converges_through_csr_baseline() {
+        // CG through the engine's CSR (and CSR5) dispatch — possible
+        // only now that the facade serves the baselines.
+        let (x_csr, report, _) = solve_poisson(10, KernelKind::Csr, 1);
+        assert!(report.converged, "{report:?}");
+        let (x_csr5, report5, _) = solve_poisson(10, KernelKind::Csr5, 1);
+        assert!(report5.converged, "{report5:?}");
+        crate::testkit::assert_close(&x_csr5, &x_csr, 1e-6, "csr vs csr5");
+    }
+
+    #[test]
     fn same_solution_across_kernels() {
         let (x1, _, _) = solve_poisson(10, KernelKind::Beta(1, 8), 1);
         let (x2, _, _) = solve_poisson(10, KernelKind::Beta(8, 4), 1);
@@ -124,10 +149,32 @@ mod tests {
     }
 
     #[test]
+    fn f32_cg_converges_loosely() {
+        // Single-precision CG with f64 Krylov scalars: converges to an
+        // f32-appropriate tolerance on a small SPD system.
+        let csr32: Csr<f32> = suite::poisson2d(8).to_precision();
+        let engine = SpmvEngine::builder(csr32.clone())
+            .kernel(KernelKind::Beta(1, 16))
+            .build()
+            .unwrap();
+        let mut rng = Rng::new(7);
+        let b: Vec<f32> = (0..csr32.rows)
+            .map(|_| rng.range_f64(-1.0, 1.0) as f32)
+            .collect();
+        let mut x = vec![0.0f32; csr32.rows];
+        let report = cg_solve(&engine, &b, &mut x, 2000, 1e-8);
+        assert!(report.converged, "{report:?}");
+        let mut ax = vec![0.0f32; csr32.rows];
+        csr32.spmv_ref(&x, &mut ax);
+        for i in 0..csr32.rows {
+            assert!((ax[i] - b[i]).abs() < 1e-3, "row {i}");
+        }
+    }
+
+    #[test]
     fn zero_rhs_converges_immediately() {
         let csr = suite::poisson2d(6);
-        let engine =
-            SpmvEngine::new(csr.clone(), &EngineConfig::default(), None).unwrap();
+        let engine = SpmvEngine::builder(csr.clone()).build().unwrap();
         let b = vec![0.0; csr.rows];
         let mut x = vec![0.0; csr.rows];
         let report = cg_solve(&engine, &b, &mut x, 100, 1e-20);
@@ -138,8 +185,7 @@ mod tests {
     #[test]
     fn respects_max_iters() {
         let csr = suite::poisson2d(16);
-        let engine =
-            SpmvEngine::new(csr.clone(), &EngineConfig::default(), None).unwrap();
+        let engine = SpmvEngine::builder(csr.clone()).build().unwrap();
         let b = vec![1.0; csr.rows];
         let mut x = vec![0.0; csr.rows];
         let report = cg_solve(&engine, &b, &mut x, 3, 1e-30);

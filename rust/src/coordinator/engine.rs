@@ -1,104 +1,87 @@
-//! `SpmvEngine` — the user-facing facade tying the library together.
+//! `SpmvEngine<T>` — the user-facing facade tying the library together.
+//!
+//! Built through the fluent [`SpmvEngine::builder`]:
+//!
+//! ```no_run
+//! use spc5::{Csr, KernelKind, SpmvEngine};
+//! # fn demo(csr: Csr, store: &spc5::predictor::RecordStore) -> anyhow::Result<()> {
+//! let engine = SpmvEngine::builder(csr)
+//!     .threads(4)
+//!     .numa_split(true)
+//!     .records(store)                      // predictor picks the kernel
+//!     .candidates(&KernelKind::ALL)        // ... among these
+//!     .build()?;
+//! # Ok(()) }
+//! ```
 //!
 //! Given a CSR matrix, the engine:
 //! 1. computes the cheap `Avg(r,c)` profile (no conversion),
 //! 2. consults the record store to select the most promising kernel
 //!    (paper §Performance prediction) — or takes an explicit override,
-//! 3. converts once into the selected `β(r,c)` storage,
+//! 3. converts once into the selected storage,
 //! 4. serves `spmv` calls sequentially or through the parallel runtime.
+//!
+//! The engine serves **every** [`KernelKind`]: the `β(r,c)` kernels
+//! (sequential or block-balanced parallel), the CSR baseline
+//! (row-chunked across threads), and the CSR5 comparator (sequential —
+//! the reference CSR5 kernel carries open-row state across tiles).
 
 use crate::formats::stats::paper_profile;
 use crate::formats::{csr_to_block, BlockMatrix};
-use crate::kernels::{spmv_block, KernelKind};
+use crate::kernels::{csr as csr_kernel, csr5, spmv_block, KernelKind};
 use crate::matrix::Csr;
 use crate::parallel::{ParallelSpmv, ParallelStrategy};
 use crate::predictor::{select_parallel, select_sequential, RecordStore};
+use crate::scalar::Scalar;
 
-/// Engine construction options.
-#[derive(Clone, Debug)]
-pub struct EngineConfig {
-    /// Worker threads (1 = sequential path).
-    pub threads: usize,
-    /// NUMA-style array splitting for the parallel path.
-    pub numa_split: bool,
-    /// Kernel override; `None` lets the predictor choose.
-    pub kernel: Option<KernelKind>,
-    /// Candidate kernels for prediction.
-    pub candidates: Vec<KernelKind>,
+/// The storage a built engine dispatches to.
+enum Storage<T: Scalar> {
+    /// Sequential β kernel over one converted block matrix.
+    Block(BlockMatrix<T>),
+    /// Parallel β kernel (paper §Parallelization).
+    BlockParallel(ParallelSpmv<T>),
+    /// CSR baseline; `chunks` holds the nnz-balanced row split when
+    /// `threads > 1` (empty = sequential).
+    Csr { chunks: Vec<(usize, usize)> },
+    /// CSR5 comparator (sequential by construction).
+    Csr5(csr5::Csr5Matrix<T>),
 }
 
-impl Default for EngineConfig {
-    fn default() -> Self {
-        EngineConfig {
+/// A matrix bound to its chosen kernel and storage, ready to serve.
+pub struct SpmvEngine<T: Scalar = f64> {
+    csr: Csr<T>,
+    kernel: KernelKind,
+    predicted_gflops: Option<f64>,
+    storage: Storage<T>,
+    threads: usize,
+}
+
+/// Fluent configuration for [`SpmvEngine`] — replaces the old
+/// `EngineConfig` + `SpmvEngine::new(csr, &cfg, records)` triple.
+pub struct SpmvEngineBuilder<'r, T: Scalar = f64> {
+    csr: Csr<T>,
+    threads: usize,
+    numa_split: bool,
+    kernel: Option<KernelKind>,
+    candidates: Vec<KernelKind>,
+    records: Option<&'r RecordStore>,
+}
+
+impl<T: Scalar> SpmvEngine<T> {
+    /// Starts building an engine for `csr`. Defaults: 1 thread, no
+    /// NUMA split, predictor-driven kernel selection over
+    /// [`KernelKind::SPC5_KERNELS`] (falling back to β(1,8) — the
+    /// cheapest conversion, as the paper recommends — when no records
+    /// are supplied).
+    pub fn builder(csr: Csr<T>) -> SpmvEngineBuilder<'static, T> {
+        SpmvEngineBuilder {
+            csr,
             threads: 1,
             numa_split: false,
             kernel: None,
             candidates: KernelKind::SPC5_KERNELS.to_vec(),
+            records: None,
         }
-    }
-}
-
-/// A matrix bound to its chosen kernel and storage, ready to serve.
-pub struct SpmvEngine {
-    csr: Csr,
-    kernel: KernelKind,
-    predicted_gflops: Option<f64>,
-    block: Option<BlockMatrix>,
-    parallel: Option<ParallelSpmv>,
-    threads: usize,
-}
-
-impl SpmvEngine {
-    /// Builds the engine; consults `records` when no kernel override is
-    /// given (falls back to β(1,8) — the cheapest conversion, as the
-    /// paper recommends — when there are no records to predict from).
-    pub fn new(
-        csr: Csr,
-        cfg: &EngineConfig,
-        records: Option<&RecordStore>,
-    ) -> anyhow::Result<SpmvEngine> {
-        let (kernel, predicted) = match cfg.kernel {
-            Some(k) => (k, None),
-            None => {
-                let sel = records.and_then(|store| {
-                    if cfg.threads > 1 {
-                        select_parallel(&csr, store, &cfg.candidates, cfg.threads)
-                    } else {
-                        select_sequential(&csr, store, &cfg.candidates)
-                    }
-                });
-                match sel {
-                    Some(s) => (s.kernel, Some(s.predicted_gflops)),
-                    None => (KernelKind::Beta(1, 8), None),
-                }
-            }
-        };
-
-        let bs = kernel
-            .block_size()
-            .ok_or_else(|| anyhow::anyhow!("engine serves β kernels; got {kernel}"))?;
-        let block = csr_to_block(&csr, bs)?;
-        let test = matches!(kernel, KernelKind::BetaTest(..));
-
-        let (block, parallel) = if cfg.threads > 1 {
-            let strategy = if cfg.numa_split {
-                ParallelStrategy::NumaSplit
-            } else {
-                ParallelStrategy::Shared
-            };
-            (None, Some(ParallelSpmv::new(block, cfg.threads, strategy, test)))
-        } else {
-            (Some(block), None)
-        };
-
-        Ok(SpmvEngine {
-            csr,
-            kernel,
-            predicted_gflops: predicted,
-            block,
-            parallel,
-            threads: cfg.threads,
-        })
     }
 
     /// The kernel serving this matrix.
@@ -112,7 +95,7 @@ impl SpmvEngine {
     }
 
     /// The bound matrix.
-    pub fn csr(&self) -> &Csr {
+    pub fn csr(&self) -> &Csr<T> {
         &self.csr
     }
 
@@ -122,22 +105,29 @@ impl SpmvEngine {
     }
 
     /// `y += A·x` through the chosen kernel and runtime.
-    pub fn spmv(&self, x: &[f64], y: &mut [f64]) {
-        match (&self.parallel, &self.block) {
-            (Some(p), _) => p.spmv(x, y),
-            (None, Some(bm)) => spmv_block(
+    pub fn spmv(&self, x: &[T], y: &mut [T]) {
+        match &self.storage {
+            Storage::Block(bm) => spmv_block(
                 bm,
                 x,
                 y,
                 matches!(self.kernel, KernelKind::BetaTest(..)),
             ),
-            _ => unreachable!("engine always holds one storage"),
+            Storage::BlockParallel(p) => p.spmv(x, y),
+            Storage::Csr { chunks } => {
+                if chunks.is_empty() {
+                    csr_kernel::spmv(&self.csr, x, y);
+                } else {
+                    self.spmv_csr_parallel(chunks, x, y);
+                }
+            }
+            Storage::Csr5(m) => m.spmv(x, y),
         }
     }
 
     /// `y = A·x` (zeroing first).
-    pub fn spmv_into(&self, x: &[f64], y: &mut [f64]) {
-        y.iter_mut().for_each(|v| *v = 0.0);
+    pub fn spmv_into(&self, x: &[T], y: &mut [T]) {
+        y.iter_mut().for_each(|v| *v = T::ZERO);
         self.spmv(x, y);
     }
 
@@ -145,6 +135,149 @@ impl SpmvEngine {
     pub fn profile(&self) -> Vec<crate::formats::BlockStats> {
         paper_profile(&self.csr)
     }
+
+    /// Row-chunked parallel CSR: each scoped worker owns a disjoint
+    /// contiguous row range (balanced by nnz at build time) and writes
+    /// its own `y` slice — same syncless-merge shape as the β runtime.
+    fn spmv_csr_parallel(
+        &self,
+        chunks: &[(usize, usize)],
+        x: &[T],
+        y: &mut [T],
+    ) {
+        assert_eq!(x.len(), self.csr.cols);
+        assert_eq!(y.len(), self.csr.rows);
+        std::thread::scope(|scope| {
+            let mut rest = y;
+            let mut covered = 0usize;
+            for &(r0, r1) in chunks {
+                debug_assert_eq!(r0, covered);
+                let (part, tail) = rest.split_at_mut(r1 - covered);
+                rest = tail;
+                covered = r1;
+                let csr = &self.csr;
+                scope.spawn(move || {
+                    csr_kernel::spmv_rows(csr, r0, r1, x, part);
+                });
+            }
+        });
+    }
+}
+
+impl<'r, T: Scalar> SpmvEngineBuilder<'r, T> {
+    /// Worker threads (1 = sequential path).
+    pub fn threads(mut self, n: usize) -> Self {
+        self.threads = n.max(1);
+        self
+    }
+
+    /// NUMA-style array splitting for the parallel β path.
+    pub fn numa_split(mut self, on: bool) -> Self {
+        self.numa_split = on;
+        self
+    }
+
+    /// Explicit kernel override (skips the predictor). Any
+    /// [`KernelKind`] is accepted, including `Csr` and `Csr5`.
+    pub fn kernel(mut self, k: KernelKind) -> Self {
+        self.kernel = Some(k);
+        self
+    }
+
+    /// Candidate kernels for predictor-driven selection.
+    pub fn candidates(mut self, kinds: &[KernelKind]) -> Self {
+        self.candidates = kinds.to_vec();
+        self
+    }
+
+    /// Performance records the predictor selects from.
+    pub fn records<'b>(self, store: &'b RecordStore) -> SpmvEngineBuilder<'b, T> {
+        SpmvEngineBuilder {
+            csr: self.csr,
+            threads: self.threads,
+            numa_split: self.numa_split,
+            kernel: self.kernel,
+            candidates: self.candidates,
+            records: Some(store),
+        }
+    }
+
+    /// Selects the kernel (override > predictor > β(1,8) default),
+    /// converts the storage once, and returns the ready engine.
+    pub fn build(self) -> anyhow::Result<SpmvEngine<T>> {
+        let SpmvEngineBuilder {
+            csr,
+            threads,
+            numa_split,
+            kernel,
+            candidates,
+            records,
+        } = self;
+
+        let (kernel, predicted) = match kernel {
+            Some(k) => (k, None),
+            None => {
+                let sel = records.and_then(|store| {
+                    if threads > 1 {
+                        select_parallel(&csr, store, &candidates, threads)
+                    } else {
+                        select_sequential(&csr, store, &candidates)
+                    }
+                });
+                match sel {
+                    Some(s) => (s.kernel, Some(s.predicted_gflops)),
+                    None => (KernelKind::Beta(1, 8), None),
+                }
+            }
+        };
+
+        let storage = match kernel {
+            KernelKind::Csr => {
+                let chunks = if threads > 1 {
+                    csr_row_chunks(&csr, threads)
+                } else {
+                    Vec::new()
+                };
+                Storage::Csr { chunks }
+            }
+            KernelKind::Csr5 => {
+                Storage::Csr5(csr5::Csr5Matrix::from_csr(&csr))
+            }
+            KernelKind::Beta(..) | KernelKind::BetaTest(..) => {
+                let bs = kernel.block_size().expect("β kernel has a size");
+                let block = csr_to_block(&csr, bs)?;
+                let test = matches!(kernel, KernelKind::BetaTest(..));
+                if threads > 1 {
+                    let strategy = if numa_split {
+                        ParallelStrategy::NumaSplit
+                    } else {
+                        ParallelStrategy::Shared
+                    };
+                    Storage::BlockParallel(ParallelSpmv::new(
+                        block, threads, strategy, test,
+                    ))
+                } else {
+                    Storage::Block(block)
+                }
+            }
+        };
+
+        Ok(SpmvEngine {
+            csr,
+            kernel,
+            predicted_gflops: predicted,
+            storage,
+            threads,
+        })
+    }
+}
+
+/// Splits `0..rows` into `n` contiguous chunks with approximately equal
+/// nnz — the paper's balancing rule applied to the rowptr prefix (the
+/// same [`crate::parallel::balanced_prefix_split`] the β runtime uses
+/// on its block prefix).
+fn csr_row_chunks<T: Scalar>(csr: &Csr<T>, n: usize) -> Vec<(usize, usize)> {
+    crate::parallel::balanced_prefix_split(&csr.rowptr, n)
 }
 
 #[cfg(test)]
@@ -156,20 +289,87 @@ mod tests {
     #[test]
     fn explicit_kernel_used() {
         let csr = suite::poisson2d(16);
-        let cfg = EngineConfig {
-            kernel: Some(KernelKind::Beta(4, 4)),
-            ..Default::default()
-        };
-        let e = SpmvEngine::new(csr, &cfg, None).unwrap();
+        let e = SpmvEngine::builder(csr)
+            .kernel(KernelKind::Beta(4, 4))
+            .build()
+            .unwrap();
         assert_eq!(e.kernel(), KernelKind::Beta(4, 4));
     }
 
     #[test]
     fn defaults_to_1x8_without_records() {
         let csr = suite::poisson2d(8);
-        let e = SpmvEngine::new(csr, &EngineConfig::default(), None).unwrap();
+        let e = SpmvEngine::builder(csr).build().unwrap();
         assert_eq!(e.kernel(), KernelKind::Beta(1, 8));
         assert!(e.predicted_gflops().is_none());
+    }
+
+    #[test]
+    fn serves_csr_and_csr5_baselines() {
+        // The facade must dispatch the paper's own baselines (this used
+        // to be a construction error).
+        let csr = suite::poisson2d(14);
+        let x: Vec<f64> = (0..csr.cols).map(|i| (i % 9) as f64 - 4.0).collect();
+        let mut want = vec![0.0; csr.rows];
+        csr.spmv_ref(&x, &mut want);
+        for kernel in [KernelKind::Csr, KernelKind::Csr5] {
+            for threads in [1usize, 3] {
+                let e = SpmvEngine::builder(csr.clone())
+                    .kernel(kernel)
+                    .threads(threads)
+                    .build()
+                    .unwrap();
+                assert_eq!(e.kernel(), kernel);
+                let mut y = vec![0.0; csr.rows];
+                e.spmv_into(&x, &mut y);
+                crate::testkit::assert_close(
+                    &y,
+                    &want,
+                    1e-9,
+                    &format!("{kernel} t={threads}"),
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn csr_row_chunks_cover_disjointly() {
+        let csr = suite::circuit(3_000, 3, 4, 11);
+        for n in [1usize, 2, 5, 16] {
+            let chunks = csr_row_chunks(&csr, n);
+            assert_eq!(chunks.len(), n);
+            assert_eq!(chunks[0].0, 0);
+            assert_eq!(chunks.last().unwrap().1, csr.rows);
+            for w in chunks.windows(2) {
+                assert_eq!(w[0].1, w[1].0);
+            }
+        }
+    }
+
+    #[test]
+    fn f32_engine_serves_wide_kernel() {
+        let csr32: Csr<f32> = suite::poisson2d(12).to_precision();
+        let e = SpmvEngine::builder(csr32.clone())
+            .kernel(KernelKind::Beta(1, 16))
+            .build()
+            .unwrap();
+        let x: Vec<f32> = (0..csr32.cols).map(|i| (i % 5) as f32 * 0.5).collect();
+        let mut y = vec![0.0f32; csr32.rows];
+        e.spmv_into(&x, &mut y);
+        let mut want = vec![0.0f32; csr32.rows];
+        csr32.spmv_ref(&x, &mut want);
+        for i in 0..csr32.rows {
+            assert!((y[i] - want[i]).abs() <= 2e-4 * want[i].abs().max(1.0));
+        }
+    }
+
+    #[test]
+    fn wide_kernel_rejected_for_f64() {
+        let csr = suite::poisson2d(6);
+        let err = SpmvEngine::builder(csr)
+            .kernel(KernelKind::Beta(1, 16))
+            .build();
+        assert!(err.is_err(), "β(1,16) is f32-only");
     }
 
     #[test]
@@ -194,23 +394,13 @@ mod tests {
                 gflops: 1.0,
             });
         }
-        let cfg = EngineConfig {
-            candidates: vec![KernelKind::Beta(1, 8), KernelKind::Beta(4, 8)],
-            ..Default::default()
-        };
-        let e = SpmvEngine::new(csr, &cfg, Some(&store)).unwrap();
+        let e = SpmvEngine::builder(csr)
+            .candidates(&[KernelKind::Beta(1, 8), KernelKind::Beta(4, 8)])
+            .records(&store)
+            .build()
+            .unwrap();
         assert_eq!(e.kernel(), KernelKind::Beta(4, 8));
         assert!(e.predicted_gflops().unwrap() > 1.0);
-    }
-
-    #[test]
-    fn rejects_non_beta_kernel() {
-        let csr = suite::poisson2d(4);
-        let cfg = EngineConfig {
-            kernel: Some(KernelKind::Csr),
-            ..Default::default()
-        };
-        assert!(SpmvEngine::new(csr, &cfg, None).is_err());
     }
 
     #[test]
@@ -221,13 +411,12 @@ mod tests {
         csr.spmv_ref(&x, &mut want);
         for threads in [1usize, 4] {
             for numa in [false, true] {
-                let cfg = EngineConfig {
-                    threads,
-                    numa_split: numa,
-                    kernel: Some(KernelKind::Beta(2, 8)),
-                    ..Default::default()
-                };
-                let e = SpmvEngine::new(csr.clone(), &cfg, None).unwrap();
+                let e = SpmvEngine::builder(csr.clone())
+                    .threads(threads)
+                    .numa_split(numa)
+                    .kernel(KernelKind::Beta(2, 8))
+                    .build()
+                    .unwrap();
                 let mut y = vec![0.0; csr.rows];
                 e.spmv_into(&x, &mut y);
                 crate::testkit::assert_close(

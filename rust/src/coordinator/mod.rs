@@ -1,6 +1,9 @@
 //! L3 coordination: the [`SpmvEngine`] facade (stats → predict →
-//! convert → dispatch), the native CG solver, and the request-loop
-//! service used by the `spmv_server` example.
+//! convert → dispatch, built through the fluent
+//! [`SpmvEngine::builder`] and serving every [`crate::KernelKind`]),
+//! the native Krylov solvers, and the request-loop service used by the
+//! `spmv_server` example. All of it generic over the precision
+//! ([`crate::scalar::Scalar`], `f64` by default).
 
 pub mod cg;
 pub mod engine;
@@ -8,6 +11,6 @@ pub mod service;
 pub mod solvers;
 
 pub use cg::{cg_solve, CgReport};
-pub use engine::{EngineConfig, SpmvEngine};
+pub use engine::{SpmvEngine, SpmvEngineBuilder};
 pub use service::{Request, Response, SpmvService};
 pub use solvers::{bicgstab, pcg_jacobi};

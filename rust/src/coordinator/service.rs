@@ -1,46 +1,48 @@
 //! Request-loop service — a thin serving layer over [`SpmvEngine`]
 //! demonstrating the library in a long-running deployment (the
 //! `spmv_server` example): requests arrive on a channel, a worker pool
-//! answers them, per-request latency is recorded.
+//! answers them, per-request latency is recorded. Generic over the
+//! engine's precision.
 //!
 //! The matrix and kernel are fixed at service construction (the
 //! iterative-solver deployment); each request carries its own `x`.
 
 use super::engine::SpmvEngine;
+use crate::scalar::Scalar;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::Arc;
 
 /// One SpMV request.
-pub struct Request {
+pub struct Request<T: Scalar = f64> {
     pub id: u64,
-    pub x: Vec<f64>,
+    pub x: Vec<T>,
 }
 
 /// The answer to a [`Request`].
-pub struct Response {
+pub struct Response<T: Scalar = f64> {
     pub id: u64,
-    pub y: Vec<f64>,
+    pub y: Vec<T>,
     /// Service-side latency in seconds (queue + compute).
     pub latency_s: f64,
 }
 
 /// A running service instance.
-pub struct SpmvService {
-    tx: Option<mpsc::Sender<(Request, std::time::Instant)>>,
-    rx_out: mpsc::Receiver<Response>,
+pub struct SpmvService<T: Scalar = f64> {
+    tx: Option<mpsc::Sender<(Request<T>, std::time::Instant)>>,
+    rx_out: mpsc::Receiver<Response<T>>,
     workers: Vec<std::thread::JoinHandle<()>>,
     served: Arc<AtomicUsize>,
 }
 
-impl SpmvService {
+impl<T: Scalar> SpmvService<T> {
     /// Spawns `workers` threads sharing the engine.
-    pub fn start(engine: SpmvEngine, workers: usize) -> SpmvService {
+    pub fn start(engine: SpmvEngine<T>, workers: usize) -> SpmvService<T> {
         assert!(workers > 0);
         let engine = Arc::new(engine);
-        let (tx, rx) = mpsc::channel::<(Request, std::time::Instant)>();
+        let (tx, rx) = mpsc::channel::<(Request<T>, std::time::Instant)>();
         let rx = Arc::new(std::sync::Mutex::new(rx));
-        let (tx_out, rx_out) = mpsc::channel::<Response>();
+        let (tx_out, rx_out) = mpsc::channel::<Response<T>>();
         let served = Arc::new(AtomicUsize::new(0));
 
         let mut handles = Vec::with_capacity(workers);
@@ -55,7 +57,7 @@ impl SpmvService {
                     break; // channel closed → shut down
                 };
                 let rows = engine.csr().rows;
-                let mut y = vec![0.0f64; rows];
+                let mut y = vec![T::ZERO; rows];
                 engine.spmv_into(&req.x, &mut y);
                 served.fetch_add(1, Ordering::Relaxed);
                 let _ = tx_out.send(Response {
@@ -69,7 +71,7 @@ impl SpmvService {
     }
 
     /// Enqueues a request.
-    pub fn submit(&self, req: Request) {
+    pub fn submit(&self, req: Request<T>) {
         self.tx
             .as_ref()
             .expect("service running")
@@ -78,7 +80,7 @@ impl SpmvService {
     }
 
     /// Blocks for the next response.
-    pub fn recv(&self) -> Option<Response> {
+    pub fn recv(&self) -> Option<Response<T>> {
         self.rx_out.recv().ok()
     }
 
@@ -97,7 +99,7 @@ impl SpmvService {
     }
 }
 
-impl Drop for SpmvService {
+impl<T: Scalar> Drop for SpmvService<T> {
     fn drop(&mut self) {
         drop(self.tx.take());
         for h in self.workers.drain(..) {
@@ -109,14 +111,13 @@ impl Drop for SpmvService {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::engine::EngineConfig;
-    use crate::matrix::suite;
+    use crate::kernels::KernelKind;
+    use crate::matrix::{suite, Csr};
 
     #[test]
     fn serves_correct_results() {
         let csr = suite::poisson2d(12);
-        let engine =
-            SpmvEngine::new(csr.clone(), &EngineConfig::default(), None).unwrap();
+        let engine = SpmvEngine::builder(csr.clone()).build().unwrap();
         let service = SpmvService::start(engine, 3);
 
         let n_req = 20usize;
@@ -141,10 +142,56 @@ mod tests {
     }
 
     #[test]
+    fn f32_service_serves_wide_blocks() {
+        let csr32: Csr<f32> = suite::poisson2d(10).to_precision();
+        let engine = SpmvEngine::builder(csr32.clone())
+            .kernel(KernelKind::Beta(2, 16))
+            .build()
+            .unwrap();
+        let service = SpmvService::start(engine, 2);
+        for id in 0..8u64 {
+            let x: Vec<f32> = (0..csr32.cols)
+                .map(|i| ((i as u64 + id) % 13) as f32 * 0.1)
+                .collect();
+            service.submit(Request { id, x });
+        }
+        for _ in 0..8 {
+            let resp = service.recv().expect("response");
+            let x: Vec<f32> = (0..csr32.cols)
+                .map(|i| ((i as u64 + resp.id) % 13) as f32 * 0.1)
+                .collect();
+            let mut want = vec![0.0f32; csr32.rows];
+            csr32.spmv_ref(&x, &mut want);
+            for i in 0..want.len() {
+                assert!(
+                    (resp.y[i] - want[i]).abs() <= 2e-4 * want[i].abs().max(1.0)
+                );
+            }
+        }
+        assert_eq!(service.shutdown(), 8);
+    }
+
+    #[test]
+    fn service_over_csr_baseline() {
+        let csr = suite::poisson2d(8);
+        let engine = SpmvEngine::builder(csr.clone())
+            .kernel(KernelKind::Csr)
+            .build()
+            .unwrap();
+        let service = SpmvService::start(engine, 2);
+        let x = vec![1.0; csr.cols];
+        service.submit(Request { id: 0, x: x.clone() });
+        let resp = service.recv().unwrap();
+        let mut want = vec![0.0; csr.rows];
+        csr.spmv_ref(&x, &mut want);
+        crate::testkit::assert_close(&resp.y, &want, 1e-9, "csr service");
+        assert_eq!(service.shutdown(), 1);
+    }
+
+    #[test]
     fn shutdown_without_requests() {
         let csr = suite::poisson2d(4);
-        let engine =
-            SpmvEngine::new(csr, &EngineConfig::default(), None).unwrap();
+        let engine = SpmvEngine::builder(csr).build().unwrap();
         let service = SpmvService::start(engine, 2);
         assert_eq!(service.shutdown(), 0);
     }

@@ -3,15 +3,17 @@
 //! based on Krylov subspaces"): Jacobi-preconditioned CG for SPD
 //! systems and BiCGSTAB for general square systems. Both touch the
 //! matrix exclusively through [`SpmvEngine::spmv_into`], so every
-//! iteration exercises the paper's kernels.
+//! iteration exercises the paper's kernels — at either precision
+//! (vectors in `T`, Krylov scalars accumulated in f64).
 
-use super::cg::CgReport;
+use super::cg::{dot_f64, CgReport};
 use super::engine::SpmvEngine;
+use crate::scalar::Scalar;
 
 /// Extracts the diagonal of the engine's matrix (Jacobi preconditioner).
-fn diagonal(engine: &SpmvEngine) -> Vec<f64> {
+fn diagonal<T: Scalar>(engine: &SpmvEngine<T>) -> Vec<T> {
     let csr = engine.csr();
-    let mut d = vec![0.0f64; csr.rows];
+    let mut d = vec![T::ZERO; csr.rows];
     for r in 0..csr.rows {
         for k in csr.row_range(r) {
             if csr.colidx[k] as usize == r {
@@ -22,45 +24,43 @@ fn diagonal(engine: &SpmvEngine) -> Vec<f64> {
     d
 }
 
-fn dot(a: &[f64], b: &[f64]) -> f64 {
-    a.iter().zip(b).map(|(x, y)| x * y).sum()
-}
-
 /// Jacobi-preconditioned conjugate gradient for SPD systems.
 /// `x` holds the initial guess on entry and the solution on exit.
-pub fn pcg_jacobi(
-    engine: &SpmvEngine,
-    b: &[f64],
-    x: &mut [f64],
+pub fn pcg_jacobi<T: Scalar>(
+    engine: &SpmvEngine<T>,
+    b: &[T],
+    x: &mut [T],
     max_iters: usize,
     tol2: f64,
 ) -> CgReport {
     let n = b.len();
     let d = diagonal(engine);
-    let dinv: Vec<f64> =
-        d.iter().map(|&v| if v != 0.0 { 1.0 / v } else { 1.0 }).collect();
+    let dinv: Vec<T> = d
+        .iter()
+        .map(|&v| if v != T::ZERO { T::ONE / v } else { T::ONE })
+        .collect();
 
-    let mut r = vec![0.0; n];
+    let mut r = vec![T::ZERO; n];
     engine.spmv_into(x, &mut r);
     let mut spmv_count = 1usize;
     for i in 0..n {
         r[i] = b[i] - r[i];
     }
-    let mut z: Vec<f64> = r.iter().zip(&dinv).map(|(ri, di)| ri * di).collect();
+    let mut z: Vec<T> = r.iter().zip(&dinv).map(|(&ri, &di)| ri * di).collect();
     let mut p = z.clone();
-    let mut rz = dot(&r, &z);
-    let mut ap = vec![0.0; n];
+    let mut rz = dot_f64(&r, &z);
+    let mut ap = vec![T::ZERO; n];
 
     let mut iterations = 0usize;
-    let mut rs: f64 = dot(&r, &r);
+    let mut rs: f64 = dot_f64(&r, &r);
     while iterations < max_iters && rs > tol2 {
         engine.spmv_into(&p, &mut ap);
         spmv_count += 1;
-        let denom = dot(&p, &ap);
+        let denom = dot_f64(&p, &ap);
         if denom == 0.0 {
             break;
         }
-        let alpha = rz / denom;
+        let alpha = T::from_f64(rz / denom);
         for i in 0..n {
             x[i] += alpha * p[i];
             r[i] -= alpha * ap[i];
@@ -68,13 +68,13 @@ pub fn pcg_jacobi(
         for i in 0..n {
             z[i] = r[i] * dinv[i];
         }
-        let rz_new = dot(&r, &z);
-        let beta = rz_new / rz;
+        let rz_new = dot_f64(&r, &z);
+        let beta = T::from_f64(rz_new / rz);
         for i in 0..n {
             p[i] = z[i] + beta * p[i];
         }
         rz = rz_new;
-        rs = dot(&r, &r);
+        rs = dot_f64(&r, &r);
         iterations += 1;
     }
     CgReport {
@@ -86,15 +86,15 @@ pub fn pcg_jacobi(
 }
 
 /// BiCGSTAB for general (non-symmetric) square systems.
-pub fn bicgstab(
-    engine: &SpmvEngine,
-    b: &[f64],
-    x: &mut [f64],
+pub fn bicgstab<T: Scalar>(
+    engine: &SpmvEngine<T>,
+    b: &[T],
+    x: &mut [T],
     max_iters: usize,
     tol2: f64,
 ) -> CgReport {
     let n = b.len();
-    let mut r = vec![0.0; n];
+    let mut r = vec![T::ZERO; n];
     engine.spmv_into(x, &mut r);
     let mut spmv_count = 1usize;
     for i in 0..n {
@@ -104,42 +104,45 @@ pub fn bicgstab(
     let mut rho = 1.0f64;
     let mut alpha = 1.0f64;
     let mut omega = 1.0f64;
-    let mut v = vec![0.0; n];
-    let mut p = vec![0.0; n];
-    let mut s = vec![0.0; n];
-    let mut t = vec![0.0; n];
+    let mut v = vec![T::ZERO; n];
+    let mut p = vec![T::ZERO; n];
+    let mut s = vec![T::ZERO; n];
+    let mut t = vec![T::ZERO; n];
 
     let mut iterations = 0usize;
-    let mut rs = dot(&r, &r);
+    let mut rs = dot_f64(&r, &r);
     while iterations < max_iters && rs > tol2 {
-        let rho_new = dot(&r0, &r);
+        let rho_new = dot_f64(&r0, &r);
         if rho_new == 0.0 {
             break; // breakdown
         }
-        let beta = (rho_new / rho) * (alpha / omega);
+        let beta = T::from_f64((rho_new / rho) * (alpha / omega));
+        let omega_t = T::from_f64(omega);
         for i in 0..n {
-            p[i] = r[i] + beta * (p[i] - omega * v[i]);
+            p[i] = r[i] + beta * (p[i] - omega_t * v[i]);
         }
         engine.spmv_into(&p, &mut v);
         spmv_count += 1;
-        let r0v = dot(&r0, &v);
+        let r0v = dot_f64(&r0, &v);
         if r0v == 0.0 {
             break;
         }
         alpha = rho_new / r0v;
+        let alpha_t = T::from_f64(alpha);
         for i in 0..n {
-            s[i] = r[i] - alpha * v[i];
+            s[i] = r[i] - alpha_t * v[i];
         }
         engine.spmv_into(&s, &mut t);
         spmv_count += 1;
-        let tt = dot(&t, &t);
-        omega = if tt != 0.0 { dot(&t, &s) / tt } else { 0.0 };
+        let tt = dot_f64(&t, &t);
+        omega = if tt != 0.0 { dot_f64(&t, &s) / tt } else { 0.0 };
+        let omega_t = T::from_f64(omega);
         for i in 0..n {
-            x[i] += alpha * p[i] + omega * s[i];
-            r[i] = s[i] - omega * t[i];
+            x[i] += alpha_t * p[i] + omega_t * s[i];
+            r[i] = s[i] - omega_t * t[i];
         }
         rho = rho_new;
-        rs = dot(&r, &r);
+        rs = dot_f64(&r, &r);
         iterations += 1;
         if omega == 0.0 {
             break;
@@ -156,14 +159,12 @@ pub fn bicgstab(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::engine::EngineConfig;
     use crate::kernels::KernelKind;
-    use crate::matrix::{suite, Coo};
+    use crate::matrix::{suite, Coo, Csr};
     use crate::util::Rng;
 
-    fn engine_for(csr: crate::matrix::Csr, kernel: KernelKind) -> SpmvEngine {
-        let cfg = EngineConfig { kernel: Some(kernel), ..Default::default() };
-        SpmvEngine::new(csr, &cfg, None).unwrap()
+    fn engine_for(csr: Csr, kernel: KernelKind) -> SpmvEngine {
+        SpmvEngine::builder(csr).kernel(kernel).build().unwrap()
     }
 
     #[test]
@@ -231,6 +232,39 @@ mod tests {
         csr.spmv_ref(&x, &mut ax);
         for i in 0..csr.rows {
             assert!((ax[i] - b[i]).abs() < 1e-6, "row {i}");
+        }
+    }
+
+    #[test]
+    fn bicgstab_through_csr5_baseline() {
+        let csr = suite::circuit(600, 3, 2, 5);
+        let engine = engine_for(csr.clone(), KernelKind::Csr5);
+        let mut rng = Rng::new(4);
+        let b: Vec<f64> =
+            (0..csr.rows).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+        let mut x = vec![0.0; csr.rows];
+        let report = bicgstab(&engine, &b, &mut x, 4000, 1e-18);
+        assert!(report.converged, "{report:?}");
+    }
+
+    #[test]
+    fn f32_pcg_jacobi_converges() {
+        let csr32: Csr<f32> = suite::poisson2d(10).to_precision();
+        let engine = SpmvEngine::builder(csr32.clone())
+            .kernel(KernelKind::Beta(1, 16))
+            .build()
+            .unwrap();
+        let mut rng = Rng::new(21);
+        let b: Vec<f32> = (0..csr32.rows)
+            .map(|_| rng.range_f64(-1.0, 1.0) as f32)
+            .collect();
+        let mut x = vec![0.0f32; csr32.rows];
+        let report = pcg_jacobi(&engine, &b, &mut x, 3000, 1e-8);
+        assert!(report.converged, "{report:?}");
+        let mut ax = vec![0.0f32; csr32.rows];
+        csr32.spmv_ref(&x, &mut ax);
+        for i in 0..csr32.rows {
+            assert!((ax[i] - b[i]).abs() < 1e-3, "row {i}");
         }
     }
 

@@ -1,6 +1,13 @@
-//! The `β(r,c)` block matrix container (paper Fig. 2).
+//! The `β(r,c)` block matrix container (paper Fig. 2), generic over
+//! the element precision.
+//!
+//! For `T = f64` this is the paper's format verbatim (one `u8` mask
+//! per block row, 8 lanes). For `T = f32` the same layout widens to
+//! `u16` masks and up to 16 columns — the "β32" variant the paper
+//! mentions ("16 single precision values") but never ships.
 
 use super::{BlockSize, FormatError};
+use crate::scalar::{MaskWord, Scalar};
 
 /// Bytes used for the column index inside an interleaved block header.
 pub const HEADER_COLIDX_BYTES: usize = 4;
@@ -13,28 +20,29 @@ pub const HEADER_COLIDX_BYTES: usize = 4;
 /// - `block_colidx` — leftmost column of each block;
 /// - `block_rowptr` — CSR-style prefix: blocks of row interval `i` are
 ///   `block_rowptr[i]..block_rowptr[i+1]` (one interval = `r` rows);
-/// - `block_masks`  — `r` bytes per block, byte `i` holding the c-bit
-///   mask of block row `i` (bit `k` set ⇔ value at column `col0 + k`).
+/// - `block_masks`  — `r` mask words per block, word `i` holding the
+///   c-bit mask of block row `i` (bit `k` set ⇔ value at column
+///   `col0 + k`).
 ///
 /// Additionally [`BlockMatrix::headers`] provides the interleaved
-/// `colidx(4B) | masks(r B)` stream that the paper's assembly kernels
-/// walk with a single pointer; the AVX-512 kernels in
+/// `colidx(4B) | masks(r · mask_bytes)` stream that the paper's
+/// assembly kernels walk with a single pointer; the AVX-512 kernels in
 /// [`crate::kernels::avx512`] consume that layout.
 #[derive(Clone, Debug, PartialEq)]
-pub struct BlockMatrix {
+pub struct BlockMatrix<T: Scalar = f64> {
     pub rows: usize,
     pub cols: usize,
     pub bs: BlockSize,
-    pub values: Vec<f64>,
+    pub values: Vec<T>,
     pub block_colidx: Vec<u32>,
     pub block_rowptr: Vec<u32>,
-    pub block_masks: Vec<u8>,
+    pub block_masks: Vec<T::Mask>,
     /// Interleaved per-block header stream: for each block, 4 bytes of
-    /// little-endian `colidx` followed by `r` mask bytes.
+    /// little-endian `colidx` followed by `r` little-endian mask words.
     pub headers: Vec<u8>,
 }
 
-impl BlockMatrix {
+impl<T: Scalar> BlockMatrix<T> {
     /// Number of row intervals (`ceil(rows / r)`).
     #[inline]
     pub fn intervals(&self) -> usize {
@@ -56,7 +64,7 @@ impl BlockMatrix {
     /// Bytes per interleaved header entry.
     #[inline]
     pub fn header_stride(&self) -> usize {
-        HEADER_COLIDX_BYTES + self.bs.r
+        HEADER_COLIDX_BYTES + <T::Mask as MaskWord>::BYTES * self.bs.r
     }
 
     /// Average nonzeros per block — the paper's `Avg(r,c)` metric that
@@ -81,7 +89,7 @@ impl BlockMatrix {
     /// Validates every structural invariant of the format. Used by
     /// tests and by debug assertions in the conversion path.
     pub fn validate(&self) -> Result<(), FormatError> {
-        self.bs.validate()?;
+        self.bs.validate_for::<T>()?;
         let nb = self.n_blocks();
         let intervals = self.intervals();
         let fail = |msg: String| Err(FormatError::Inconsistent(msg));
@@ -111,17 +119,12 @@ impl BlockMatrix {
 
         // Masks: bits beyond c must be clear; popcounts must sum to nnz;
         // every block must be non-empty.
-        let lane_mask: u8 = if self.bs.c == 8 {
-            0xFF
-        } else {
-            (1u8 << self.bs.c) - 1
-        };
         let mut pop_total = 0usize;
         for b in 0..nb {
             let mut block_pop = 0u32;
             for i in 0..self.bs.r {
                 let m = self.block_masks[b * self.bs.r + i];
-                if m & !lane_mask != 0 {
+                if m.any_above(self.bs.c) {
                     return fail(format!("mask bits beyond c in block {b}"));
                 }
                 block_pop += m.count_ones();
@@ -163,6 +166,7 @@ impl BlockMatrix {
 
         // Headers must mirror (colidx, masks).
         let stride = self.header_stride();
+        let mb = <T::Mask as MaskWord>::BYTES;
         for b in 0..nb {
             let h = &self.headers[b * stride..(b + 1) * stride];
             let col = u32::from_le_bytes([h[0], h[1], h[2], h[3]]);
@@ -170,7 +174,8 @@ impl BlockMatrix {
                 return fail(format!("header colidx mismatch at block {b}"));
             }
             for i in 0..self.bs.r {
-                if h[4 + i] != self.block_masks[b * self.bs.r + i] {
+                let m = <T::Mask as MaskWord>::read_le(&h[HEADER_COLIDX_BYTES + mb * i..]);
+                if m != self.block_masks[b * self.bs.r + i] {
                     return fail(format!("header mask mismatch at block {b}"));
                 }
             }
@@ -186,9 +191,9 @@ impl BlockMatrix {
         let mut headers = Vec::with_capacity(nb * stride);
         for b in 0..nb {
             headers.extend_from_slice(&self.block_colidx[b].to_le_bytes());
-            headers.extend_from_slice(
-                &self.block_masks[b * self.bs.r..(b + 1) * self.bs.r],
-            );
+            for i in 0..self.bs.r {
+                self.block_masks[b * self.bs.r + i].push_le(&mut headers);
+            }
         }
         self.headers = headers;
     }
@@ -198,10 +203,10 @@ impl BlockMatrix {
     /// header stream duplicates colidx+masks, so it is *not* counted —
     /// a deployment keeps either the split arrays or the headers.
     pub fn occupancy_bytes(&self) -> usize {
-        self.values.len() * 8
+        self.values.len() * T::BYTES
             + self.block_colidx.len() * 4
             + self.block_rowptr.len() * 4
-            + self.block_masks.len()
+            + self.block_masks.len() * <T::Mask as MaskWord>::BYTES
     }
 }
 
@@ -240,9 +245,6 @@ mod tests {
         let b = csr_to_block(&fig1(), BlockSize::new(2, 2)).unwrap();
         b.validate().unwrap();
         // Interval 0 = rows 0,1: cols row0={0,1,4,6}, row1={1,2,3}.
-        // Greedy cover: block@0 (r0:{0,1}), block@2 (r1:{2,3}... wait r0
-        // has nothing in [2,4), r1 has {2,3}), block@4 (r0:{4}), block@6
-        // (r0:{6}); plus r1 col1 is inside block@0.
         assert_eq!(b.block_colidx[0], 0);
         // mask byte per block row: row0 of block@0 = {0,1} → 0b11,
         // row1 = {1} → 0b10.
@@ -263,6 +265,19 @@ mod tests {
                 b.block_colidx[blk]
             );
         }
+    }
+
+    #[test]
+    fn f32_headers_use_two_byte_masks() {
+        let csr32: Csr<f32> = fig1().to_precision();
+        let b = csr_to_block(&csr32, BlockSize::new(2, 16)).unwrap();
+        b.validate().unwrap();
+        // 4 colidx bytes + 2 rows × 2 mask bytes.
+        assert_eq!(b.header_stride(), 8);
+        assert_eq!(b.nnz(), 18);
+        // f32 values + u16 masks store fewer bytes than the f64 format.
+        let b64 = csr_to_block(&fig1(), BlockSize::new(2, 8)).unwrap();
+        assert!(b.occupancy_bytes() < b64.occupancy_bytes());
     }
 
     #[test]
@@ -298,6 +313,12 @@ mod tests {
     fn mask_bits_beyond_c_detected() {
         let mut b = csr_to_block(&fig1(), BlockSize::new(1, 4)).unwrap();
         b.block_masks[0] |= 0b1_0000; // bit 4 invalid for c=4
+        b.rebuild_headers();
+        assert!(b.validate().is_err());
+
+        let csr32: Csr<f32> = fig1().to_precision();
+        let mut b = csr_to_block(&csr32, BlockSize::new(1, 12)).unwrap();
+        b.block_masks[0] |= 1 << 12; // bit 12 invalid for c=12
         b.rebuild_headers();
         assert!(b.validate().is_err());
     }

@@ -1,21 +1,29 @@
-//! CSR ⇄ `β(r,c)` conversion.
+//! CSR ⇄ `β(r,c)` conversion, generic over the element precision.
 //!
 //! The forward conversion implements SPC5's greedy cover: inside each
 //! row interval (r consecutive rows) blocks are created left-to-right,
 //! each block anchored at the leftmost not-yet-covered nonzero of the
 //! interval. Blocks are row-aligned but can start at any column —
 //! the paper's "partially avoid aligning the block vertically".
+//!
+//! The same routine serves both precisions: the mask word and the
+//! maximum block width come from the scalar (`u8`/8 for f64, `u16`/16
+//! for f32).
 
 use super::{BlockMatrix, BlockSize, FormatError};
 use crate::matrix::{Coo, Csr};
+use crate::scalar::{MaskWord, Scalar};
 
 /// Converts a CSR matrix into the `β(r,c)` format.
 ///
 /// Complexity is `O(nnz + intervals·r)`; the paper reports ≈2× one
 /// SpMV, which `benches/conversion_cost.rs` verifies for this
 /// implementation.
-pub fn csr_to_block(csr: &Csr, bs: BlockSize) -> Result<BlockMatrix, FormatError> {
-    bs.validate()?;
+pub fn csr_to_block<T: Scalar>(
+    csr: &Csr<T>,
+    bs: BlockSize,
+) -> Result<BlockMatrix<T>, FormatError> {
+    bs.validate_for::<T>()?;
     if bs.r == 1 {
         // Fast path: one row per block ⇒ the values array is the CSR
         // values array verbatim (paper: "This array remains unchanged
@@ -27,10 +35,10 @@ pub fn csr_to_block(csr: &Csr, bs: BlockSize) -> Result<BlockMatrix, FormatError
     let (r, c) = (bs.r, bs.c);
     let intervals = crate::util::ceil_div(csr.rows, r);
 
-    let mut values = Vec::with_capacity(csr.nnz());
+    let mut values: Vec<T> = Vec::with_capacity(csr.nnz());
     let mut block_colidx: Vec<u32> = Vec::with_capacity(csr.nnz() / 2 + 8);
     let mut block_rowptr: Vec<u32> = Vec::with_capacity(intervals + 1);
-    let mut block_masks: Vec<u8> =
+    let mut block_masks: Vec<T::Mask> =
         Vec::with_capacity(r * (csr.nnz() / 2 + 8));
     block_rowptr.push(0);
 
@@ -64,9 +72,9 @@ pub fn csr_to_block(csr: &Csr, bs: BlockSize) -> Result<BlockMatrix, FormatError
             for i in 0..rows_here {
                 let end = csr.rowptr[row0 + i + 1] as usize;
                 let mut k = cursor[i];
-                let mut mask = 0u8;
+                let mut mask = <T::Mask as MaskWord>::ZERO;
                 while k < end && colidx[k] < col_end {
-                    mask |= 1 << (colidx[k] - min_col);
+                    mask.set((colidx[k] - min_col) as usize);
                     k += 1;
                 }
                 values.extend_from_slice(&csr.values[cursor[i]..k]);
@@ -74,9 +82,9 @@ pub fn csr_to_block(csr: &Csr, bs: BlockSize) -> Result<BlockMatrix, FormatError
                 block_masks.push(mask);
             }
             // Short interval at the matrix tail: pad the *mask array*
-            // (not the values) so every block owns exactly r mask bytes.
+            // (not the values) so every block owns exactly r mask words.
             for _ in rows_here..r {
-                block_masks.push(0);
+                block_masks.push(<T::Mask as MaskWord>::ZERO);
             }
             // A block is created only at an existing nonzero, so it can
             // never be empty — guaranteed by construction.
@@ -101,12 +109,12 @@ pub fn csr_to_block(csr: &Csr, bs: BlockSize) -> Result<BlockMatrix, FormatError
 
 /// Specialized `r = 1` conversion: single pass over `colidx`, values
 /// copied wholesale, headers built inline.
-fn csr_to_block_r1(csr: &Csr, bs: BlockSize) -> BlockMatrix {
+fn csr_to_block_r1<T: Scalar>(csr: &Csr<T>, bs: BlockSize) -> BlockMatrix<T> {
     let c = bs.c as u32;
     let rows = csr.rows;
     let mut block_colidx: Vec<u32> = Vec::with_capacity(csr.nnz() / 2 + 8);
     let mut block_rowptr: Vec<u32> = Vec::with_capacity(rows + 1);
-    let mut block_masks: Vec<u8> = Vec::with_capacity(csr.nnz() / 2 + 8);
+    let mut block_masks: Vec<T::Mask> = Vec::with_capacity(csr.nnz() / 2 + 8);
     block_rowptr.push(0);
     let colidx = &csr.colidx[..];
     for row in 0..rows {
@@ -114,10 +122,10 @@ fn csr_to_block_r1(csr: &Csr, bs: BlockSize) -> BlockMatrix {
         let end = csr.rowptr[row + 1] as usize;
         while k < end {
             let anchor = colidx[k];
-            let mut mask = 1u8; // anchor bit
+            let mut mask = <T::Mask as MaskWord>::bit(0); // anchor bit
             k += 1;
             while k < end && colidx[k] - anchor < c {
-                mask |= 1 << (colidx[k] - anchor);
+                mask.set((colidx[k] - anchor) as usize);
                 k += 1;
             }
             block_colidx.push(anchor);
@@ -126,11 +134,11 @@ fn csr_to_block_r1(csr: &Csr, bs: BlockSize) -> BlockMatrix {
         block_rowptr.push(block_colidx.len() as u32);
     }
     // Interleaved headers in one pass.
-    let stride = 5;
+    let stride = super::HEADER_COLIDX_BYTES + <T::Mask as MaskWord>::BYTES;
     let mut headers = Vec::with_capacity(block_colidx.len() * stride);
     for b in 0..block_colidx.len() {
         headers.extend_from_slice(&block_colidx[b].to_le_bytes());
-        headers.push(block_masks[b]);
+        block_masks[b].push_le(&mut headers);
     }
     let bm = BlockMatrix {
         rows,
@@ -148,7 +156,9 @@ fn csr_to_block_r1(csr: &Csr, bs: BlockSize) -> BlockMatrix {
 
 /// Converts a `β(r,c)` matrix back to CSR (exact inverse of
 /// [`csr_to_block`]; property-tested as a round trip).
-pub fn block_to_csr(bm: &BlockMatrix) -> Result<Csr, FormatError> {
+pub fn block_to_csr<T: Scalar>(
+    bm: &BlockMatrix<T>,
+) -> Result<Csr<T>, FormatError> {
     let (r, c) = (bm.bs.r, bm.bs.c);
     let mut coo = Coo::new(bm.rows, bm.cols);
     let mut idx_val = 0usize;
@@ -161,7 +171,7 @@ pub fn block_to_csr(bm: &BlockMatrix) -> Result<Csr, FormatError> {
             for i in 0..r {
                 let mask = bm.block_masks[blk * r + i];
                 for k in 0..c {
-                    if mask & (1 << k) != 0 {
+                    if mask.test(k) {
                         coo.push(row0 + i, col0 + k, bm.values[idx_val]);
                         idx_val += 1;
                     }
@@ -203,6 +213,20 @@ mod tests {
     }
 
     #[test]
+    fn roundtrip_f32_wide_sizes() {
+        let csr32: Csr<f32> = fig1().to_precision();
+        for bs in BlockSize::PAPER_SIZES
+            .into_iter()
+            .chain(BlockSize::F32_WIDE_SIZES)
+        {
+            let bm = csr_to_block(&csr32, bs).unwrap();
+            bm.validate().unwrap();
+            let back = block_to_csr(&bm).unwrap();
+            assert_eq!(csr32, back, "f32 roundtrip failed for {bs}");
+        }
+    }
+
+    #[test]
     fn roundtrip_suite_subset() {
         for sm in suite::test_subset() {
             for bs in [BlockSize::new(1, 8), BlockSize::new(4, 4), BlockSize::new(8, 4)]
@@ -213,6 +237,25 @@ mod tests {
                 assert_eq!(sm.csr, back, "roundtrip failed for {} {bs}", sm.name);
             }
         }
+    }
+
+    #[test]
+    fn wide_blocks_reduce_block_count() {
+        // c=16 can only merge more columns per block than c=8.
+        for sm in suite::test_subset().iter().take(5) {
+            let csr32 = sm.csr.to_precision::<f32>();
+            let b8 = csr_to_block(&csr32, BlockSize::new(1, 8)).unwrap();
+            let b16 = csr_to_block(&csr32, BlockSize::new(1, 16)).unwrap();
+            assert!(b16.n_blocks() <= b8.n_blocks(), "{}", sm.name);
+        }
+    }
+
+    #[test]
+    fn wide_sizes_rejected_for_f64() {
+        let csr = fig1();
+        assert!(csr_to_block(&csr, BlockSize::new(1, 16)).is_err());
+        let csr32: Csr<f32> = csr.to_precision();
+        assert!(csr_to_block(&csr32, BlockSize::new(1, 17)).is_err());
     }
 
     #[test]
@@ -229,7 +272,7 @@ mod tests {
 
     #[test]
     fn empty_matrix() {
-        let csr = Csr::from_raw(6, 6, vec![0; 7], vec![], vec![]).unwrap();
+        let csr = Csr::<f64>::from_raw(6, 6, vec![0; 7], vec![], vec![]).unwrap();
         let bm = csr_to_block(&csr, BlockSize::new(2, 4)).unwrap();
         assert_eq!(bm.n_blocks(), 0);
         assert_eq!(bm.nnz(), 0);

@@ -1,15 +1,19 @@
 //! The paper's contribution: `β(r,c)` block-based sparse formats
-//! **without zero padding** (DESIGN.md §6).
+//! **without zero padding** (DESIGN.md §6), generic over the element
+//! precision.
 //!
 //! A `β(r,c)` matrix covers the nonzeros with `r×c` blocks that are
 //! *row-aligned* (block row start ≡ 0 mod r) but start at any column.
-//! Instead of padding each block to density, one `r·c`-bit mask per
-//! block records which positions hold a value; the `values` array
-//! stores only true nonzeros, in block order and row-major inside each
-//! block.
+//! Instead of padding each block to density, one mask word per block
+//! row records which positions hold a value; the `values` array stores
+//! only true nonzeros, in block order and row-major inside each block.
+//!
+//! The mask word is the scalar's [`crate::scalar::MaskWord`]: `u8`
+//! (8 lanes) for `f64`, `u16` (16 lanes) for `f32` — so `β(1,16)` and
+//! friends (the "β32" sizes) exist only in the single-precision
+//! instantiation, where one AVX-512 register holds 16 floats.
 
 pub mod block;
-pub mod block32;
 pub mod convert;
 pub mod occupancy;
 pub mod stats;
@@ -19,8 +23,10 @@ pub use convert::{block_to_csr, csr_to_block};
 pub use occupancy::{beta_occupancy_bytes, csr_occupancy_bytes, fill_crossover};
 pub use stats::BlockStats;
 
-/// A block size `r×c`. The paper's optimized kernels cover the six
-/// sizes below; the generic scalar kernel accepts any `r·c ≤ 64`.
+/// A block size `r×c`. The paper's optimized f64 kernels cover the six
+/// sizes in [`BlockSize::PAPER_SIZES`]; the f32 stack adds the 16-lane
+/// sizes in [`BlockSize::F32_WIDE_SIZES`]; the generic scalar kernel
+/// accepts any `r ≤ 8`, `c ≤` mask width.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct BlockSize {
     pub r: usize,
@@ -43,20 +49,41 @@ impl BlockSize {
         BlockSize::new(8, 4),
     ];
 
+    /// The 16-column sizes only the f32 instantiation supports (one
+    /// `vexpandps` per block row inflates 16 packed floats).
+    pub const F32_WIDE_SIZES: [BlockSize; 3] = [
+        BlockSize::new(1, 16),
+        BlockSize::new(2, 16),
+        BlockSize::new(4, 16),
+    ];
+
     /// Bits in one block mask.
     pub const fn bits(&self) -> usize {
         self.r * self.c
     }
 
-    /// Validates `r·c ≤ 64` and `c ≤ 8` (one mask byte per block row).
-    pub fn validate(&self) -> Result<(), FormatError> {
-        if self.r == 0 || self.c == 0 {
-            return Err(FormatError::BadBlockSize(*self));
-        }
-        if self.c > 8 || self.bits() > 64 {
-            return Err(FormatError::BadBlockSize(*self));
+    /// Validates against an explicit mask width: `1 ≤ c ≤ mask_bits`
+    /// and `1 ≤ r ≤ 8` (one mask word per block row, at most 8 rows per
+    /// interval).
+    pub fn validate_for_mask(&self, mask_bits: usize) -> Result<(), FormatError> {
+        if self.r == 0 || self.c == 0 || self.r > 8 || self.c > mask_bits {
+            return Err(FormatError::BadBlockSize(*self, mask_bits));
         }
         Ok(())
+    }
+
+    /// Validates for the scalar `T` (`c ≤ 8` for f64, `c ≤ 16` for f32).
+    pub fn validate_for<T: crate::scalar::Scalar>(
+        &self,
+    ) -> Result<(), FormatError> {
+        self.validate_for_mask(
+            <T::Mask as crate::scalar::MaskWord>::BITS,
+        )
+    }
+
+    /// Validates for the default double-precision format (`c ≤ 8`).
+    pub fn validate(&self) -> Result<(), FormatError> {
+        self.validate_for_mask(8)
     }
 }
 
@@ -67,13 +94,30 @@ impl std::fmt::Display for BlockSize {
 }
 
 /// Errors produced by the format layer.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum FormatError {
-    #[error("unsupported block size {0} (need 1<=c<=8, r*c<=64)")]
-    BadBlockSize(BlockSize),
-    #[error("inconsistent block storage: {0}")]
+    /// Block size outside `1<=r<=8`, `1<=c<=mask_bits`.
+    BadBlockSize(BlockSize, usize),
+    /// Structural invariant violation.
     Inconsistent(String),
 }
+
+impl std::fmt::Display for FormatError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FormatError::BadBlockSize(bs, mask_bits) => write!(
+                f,
+                "unsupported block size {bs} (need 1<=r<=8, 1<=c<={mask_bits} \
+                 for this precision)"
+            ),
+            FormatError::Inconsistent(msg) => {
+                write!(f, "inconsistent block storage: {msg}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for FormatError {}
 
 #[cfg(test)]
 mod tests {
@@ -83,7 +127,17 @@ mod tests {
     fn paper_sizes_are_valid() {
         for bs in BlockSize::PAPER_SIZES {
             bs.validate().unwrap();
+            bs.validate_for::<f64>().unwrap();
+            bs.validate_for::<f32>().unwrap();
             assert!(bs.bits() <= 64);
+        }
+    }
+
+    #[test]
+    fn wide_sizes_are_f32_only() {
+        for bs in BlockSize::F32_WIDE_SIZES {
+            assert!(bs.validate_for::<f64>().is_err(), "{bs}");
+            bs.validate_for::<f32>().unwrap();
         }
     }
 
@@ -93,10 +147,13 @@ mod tests {
         assert!(BlockSize::new(1, 0).validate().is_err());
         assert!(BlockSize::new(1, 9).validate().is_err());
         assert!(BlockSize::new(16, 8).validate().is_err());
+        assert!(BlockSize::new(1, 17).validate_for::<f32>().is_err());
+        assert!(BlockSize::new(16, 16).validate_for::<f32>().is_err());
     }
 
     #[test]
     fn display_format() {
         assert_eq!(BlockSize::new(2, 8).to_string(), "b(2,8)");
+        assert_eq!(BlockSize::new(1, 16).to_string(), "b(1,16)");
     }
 }

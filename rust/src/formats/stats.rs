@@ -4,6 +4,7 @@
 
 use super::BlockSize;
 use crate::matrix::Csr;
+use crate::scalar::Scalar;
 
 /// Per-(matrix, block-size) statistics.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -20,7 +21,7 @@ pub struct BlockStats {
 /// format* — the cheap scan the predictor runs before any conversion
 /// ("The Avg.NNZ/blocks numbers can be obtained without converting the
 /// matrices into a block-based storage").
-pub fn count_blocks(csr: &Csr, bs: BlockSize) -> usize {
+pub fn count_blocks<T: Scalar>(csr: &Csr<T>, bs: BlockSize) -> usize {
     let (r, c) = (bs.r, bs.c);
     let intervals = crate::util::ceil_div(csr.rows, r);
     let mut n_blocks = 0usize;
@@ -58,7 +59,7 @@ pub fn count_blocks(csr: &Csr, bs: BlockSize) -> usize {
 }
 
 /// Computes the stats for one block size (cheap scan, no conversion).
-pub fn block_stats(csr: &Csr, bs: BlockSize) -> BlockStats {
+pub fn block_stats<T: Scalar>(csr: &Csr<T>, bs: BlockSize) -> BlockStats {
     let n_blocks = count_blocks(csr, bs);
     let avg = if n_blocks == 0 {
         0.0
@@ -74,7 +75,7 @@ pub fn block_stats(csr: &Csr, bs: BlockSize) -> BlockStats {
 }
 
 /// Stats for all six paper block sizes — one Table 1/2 row.
-pub fn paper_profile(csr: &Csr) -> Vec<BlockStats> {
+pub fn paper_profile<T: Scalar>(csr: &Csr<T>) -> Vec<BlockStats> {
     BlockSize::PAPER_SIZES
         .iter()
         .map(|&bs| block_stats(csr, bs))

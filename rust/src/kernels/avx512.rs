@@ -1,14 +1,17 @@
-//! AVX-512 `vexpandpd` SpMV kernels — the paper's optimized routines
-//! (§"Optimized kernel implementation", Code 1), one per block size.
+//! AVX-512 SpMV kernels — the paper's optimized routines
+//! (§"Optimized kernel implementation", Code 1), one per block size,
+//! for **both precisions** behind one span abstraction.
 //!
 //! Each kernel walks the interleaved header stream
-//! (`colidx:4B | masks:rB` per block — the exact memory layout the
-//! published assembly reads with a single pointer), and per block:
+//! (`colidx:4B | masks:r·mask_bytes` per block — the exact memory
+//! layout the published assembly reads with a single pointer), and per
+//! block:
 //!
-//! 1. `kmov`-loads the mask byte(s),
-//! 2. `vexpandpd` (`_mm512_maskz_expandloadu_pd`) inflates the next
-//!    `popcnt(mask)` values from the *unpadded* values stream into the
-//!    lanes selected by the mask — the paper's central trick,
+//! 1. `kmov`-loads the mask word(s),
+//! 2. `vexpandpd` / `vexpandps` (`_mm512_maskz_expandloadu_pd/ps`)
+//!    inflates the next `popcnt(mask)` values from the *unpadded*
+//!    values stream into the lanes selected by the mask — the paper's
+//!    central trick,
 //! 3. a masked load pulls the `x` window (masked lanes are never
 //!    touched, which both avoids reading past the end of `x` and
 //!    implements the paper's "use the block mask to avoid useless
@@ -17,24 +20,30 @@
 //!    live across the whole row interval and are horizontally reduced
 //!    into `y` once per interval — like `vpxorq`/`vaddsd` in Code 1.
 //!
-//! `c = 4` kernels pack **two block rows into one 512-bit operation**
-//! (combined 8-bit mask `m_lo | m_hi << 4`, `x` window broadcast to
-//! both 256-bit halves), which resolves the paper's "expand the half
-//! vector or split into two AVX-2 registers" design choice with a
-//! single expand+FMA per row pair.
+//! **f64** (8 lanes, `u8` masks): the paper's six sizes. `c = 4`
+//! kernels pack two block rows into one 512-bit operation (combined
+//! 8-bit mask `m_lo | m_hi << 4`, `x` window broadcast to both 256-bit
+//! halves). The Algorithm-2 `test` variants keep two separate inner
+//! loops (scalar for `mask == 1` blocks, vector otherwise) and jump
+//! between them exactly like the paper's `goto` structure.
 //!
-//! The Algorithm-2 `test` variants keep two separate inner loops
-//! (scalar for `mask == 1` blocks, vector otherwise) and jump between
-//! them exactly like the paper's `goto` structure.
+//! **f32** (16 lanes, `u16` masks): `vexpandps` inflates 16 packed
+//! floats per block row — the paper's "16 single precision values"
+//! lane count, which it mentions but never ships kernels for.
+//! Specializations: β(1,16), β(2,16), β(4,16); other sizes fall back
+//! to the generic scalar kernel.
 //!
 //! All kernels operate on a [`Span`] — a contiguous range of row
 //! intervals with its header/value sub-streams — so the same code
 //! serves the sequential path (one span = whole matrix) and each
-//! thread of the parallel runtime (paper §Parallelization).
+//! thread of the parallel runtime (paper §Parallelization). Dispatch
+//! is routed per scalar through
+//! [`crate::scalar::Scalar::spmv_span_simd`].
 
 #![allow(unsafe_code)]
 
-use crate::formats::BlockMatrix;
+use crate::formats::{BlockMatrix, BlockSize};
+use crate::scalar::Scalar;
 
 #[cfg(target_arch = "x86_64")]
 use std::arch::x86_64::*;
@@ -46,19 +55,19 @@ use std::arch::x86_64::*;
 /// is local to the span (`y[0]` = first row of the span) and holds
 /// `rows` entries.
 #[derive(Clone, Copy)]
-pub struct Span<'a> {
+pub struct Span<'a, T: Scalar = f64> {
     pub rowptr: &'a [u32],
     pub headers: &'a [u8],
-    pub values: &'a [f64],
+    pub values: &'a [T],
     /// Rows covered by the span (may be < intervals·r at the matrix tail).
     pub rows: usize,
     /// Block rows per interval (`r`).
     pub r: usize,
 }
 
-impl<'a> Span<'a> {
+impl<'a, T: Scalar> Span<'a, T> {
     /// The whole matrix as a single span.
-    pub fn full(bm: &'a BlockMatrix) -> Span<'a> {
+    pub fn full(bm: &'a BlockMatrix<T>) -> Span<'a, T> {
         Span {
             rowptr: &bm.block_rowptr,
             headers: &bm.headers,
@@ -70,14 +79,14 @@ impl<'a> Span<'a> {
 
     /// A thread's sub-span `[interval_begin, interval_end)`.
     pub fn slice(
-        bm: &'a BlockMatrix,
+        bm: &'a BlockMatrix<T>,
         interval_begin: usize,
         interval_end: usize,
         block_begin: usize,
         block_end: usize,
         val_begin: usize,
         val_end: usize,
-    ) -> Span<'a> {
+    ) -> Span<'a, T> {
         let stride = bm.header_stride();
         let row_begin = interval_begin * bm.bs.r;
         let row_end = (interval_end * bm.bs.r).min(bm.rows);
@@ -102,24 +111,45 @@ impl<'a> Span<'a> {
 }
 
 /// Dispatches the whole-matrix SpMV to the specialized kernel for
-/// `bm.bs` if one exists. Returns `false` when the block size has no
-/// AVX-512 specialization (caller falls back to the scalar kernel).
-pub fn spmv(bm: &BlockMatrix, x: &[f64], y: &mut [f64], test: bool) -> bool {
-    spmv_span(Span::full(bm), bm.bs, x, y, test)
+/// `bm.bs` through the scalar's dispatch hook. Returns `false` when
+/// the block size has no AVX-512 specialization for `T` or the host
+/// lacks AVX-512 (caller falls back to the scalar kernel).
+pub fn spmv<T: Scalar>(
+    bm: &BlockMatrix<T>,
+    x: &[T],
+    y: &mut [T],
+    test: bool,
+) -> bool {
+    T::spmv_span_simd(Span::full(bm), bm.bs, x, y, test)
 }
 
-/// Runs one span. `bs` must match the span's underlying format; `y` is
-/// span-local. Returns `false` if no specialization exists.
-pub fn spmv_span(
-    span: Span<'_>,
-    bs: crate::formats::BlockSize,
+/// Runs one span through the scalar's AVX-512 dispatch. `bs` must
+/// match the span's underlying format; `y` is span-local. Returns
+/// `false` if no specialization exists.
+pub fn spmv_span<T: Scalar>(
+    span: Span<'_, T>,
+    bs: BlockSize,
+    x: &[T],
+    y: &mut [T],
+    test: bool,
+) -> bool {
+    T::spmv_span_simd(span, bs, x, y, test)
+}
+
+/// Double-precision dispatch: the paper's six `vexpandpd` kernels plus
+/// the two Algorithm-2 `test` variants.
+pub fn spmv_span_f64(
+    span: Span<'_, f64>,
+    bs: BlockSize,
     x: &[f64],
     y: &mut [f64],
     test: bool,
 ) -> bool {
     #[cfg(target_arch = "x86_64")]
     {
-        assert!(crate::util::avx512_available(), "AVX-512 not available");
+        if !crate::util::avx512_available() {
+            return false;
+        }
         assert!(y.len() >= span.rows);
         // SAFETY: format invariants (validated at conversion) guarantee
         // every masked lane maps inside `x`, every expand stays inside
@@ -146,10 +176,55 @@ pub fn spmv_span(
     }
 }
 
+/// Single-precision dispatch: the 16-lane `vexpandps` kernels
+/// (β(1,16), β(2,16), β(4,16)). There are no Algorithm-2 `test`
+/// specializations at 16 lanes — `test = true` falls back to the
+/// portable Algorithm-2 kernel by returning `false`.
+pub fn spmv_span_f32(
+    span: Span<'_, f32>,
+    bs: BlockSize,
+    x: &[f32],
+    y: &mut [f32],
+    test: bool,
+) -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if test || !crate::util::avx512_available() {
+            return false;
+        }
+        if bs.c != 16 {
+            return false;
+        }
+        assert!(y.len() >= span.rows);
+        // SAFETY: same format invariants as the f64 path, with u16
+        // masks (validated at conversion: c = 16 lanes, in-bounds).
+        unsafe {
+            match bs.r {
+                1 => spmv_f32_1x16(span, x, y),
+                2 => spmv_f32_rx16::<2>(span, x, y),
+                4 => spmv_f32_rx16::<4>(span, x, y),
+                _ => return false,
+            }
+        }
+        true
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        let _ = (span, bs, x, y, test);
+        false
+    }
+}
+
 #[cfg(target_arch = "x86_64")]
 #[inline(always)]
 unsafe fn header_col(h: *const u8) -> usize {
     u32::from_le_bytes([*h, *h.add(1), *h.add(2), *h.add(3)]) as usize
+}
+
+#[cfg(target_arch = "x86_64")]
+#[inline(always)]
+unsafe fn header_mask16(h: *const u8, i: usize) -> u16 {
+    u16::from_le_bytes([*h.add(4 + 2 * i), *h.add(5 + 2 * i)])
 }
 
 #[cfg(target_arch = "x86_64")]
@@ -604,10 +679,84 @@ unsafe fn spmv_8x4(span: Span<'_>, x: &[f64], y: &mut [f64]) {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Single-precision 16-lane kernels (`vexpandps`, u16 masks).
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx512f,avx512vl,avx512bw,avx512dq")]
+unsafe fn spmv_f32_1x16(span: Span<'_, f32>, x: &[f32], y: &mut [f32]) {
+    let stride = 6; // 4B colidx + one u16 mask
+    let mut h = span.headers.as_ptr();
+    let mut vals = span.values.as_ptr();
+    let xp = x.as_ptr();
+    for row in 0..span.intervals() {
+        let nb = span.blocks_in(row);
+        if nb == 0 {
+            continue;
+        }
+        let mut acc = _mm512_setzero_ps();
+        for _ in 0..nb {
+            let col = header_col(h);
+            let mask = header_mask16(h, 0);
+            let v = _mm512_maskz_expandloadu_ps(mask, vals);
+            let xv = _mm512_maskz_loadu_ps(mask, xp.add(col));
+            acc = _mm512_fmadd_ps(v, xv, acc);
+            vals = vals.add(mask.count_ones() as usize);
+            h = h.add(stride);
+        }
+        y[row] += _mm512_reduce_add_ps(acc);
+    }
+}
+
+/// Shared r×16 kernel body for r ∈ {2, 4} (const-generic unrolled).
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx512f,avx512vl,avx512bw,avx512dq")]
+unsafe fn spmv_f32_rx16<const R: usize>(
+    span: Span<'_, f32>,
+    x: &[f32],
+    y: &mut [f32],
+) {
+    let stride = 4 + 2 * R;
+    let mut h = span.headers.as_ptr();
+    let mut vals = span.values.as_ptr();
+    let xp = x.as_ptr();
+    for it in 0..span.intervals() {
+        let nb = span.blocks_in(it);
+        if nb == 0 {
+            continue;
+        }
+        let mut acc = [_mm512_setzero_ps(); R];
+        for _ in 0..nb {
+            let col = header_col(h);
+            let mut union = 0u16;
+            let mut masks = [0u16; R];
+            for i in 0..R {
+                masks[i] = header_mask16(h, i);
+                union |= masks[i];
+            }
+            let xv = _mm512_maskz_loadu_ps(union, xp.add(col));
+            for i in 0..R {
+                if masks[i] != 0 {
+                    let v = _mm512_maskz_expandloadu_ps(masks[i], vals);
+                    acc[i] = _mm512_fmadd_ps(v, xv, acc[i]);
+                    vals = vals.add(masks[i].count_ones() as usize);
+                }
+            }
+            h = h.add(stride);
+        }
+        let row0 = it * R;
+        let rows_here = R.min(span.rows - row0);
+        for i in 0..rows_here {
+            y[row0 + i] += _mm512_reduce_add_ps(acc[i]);
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::formats::{csr_to_block, BlockSize};
+    use crate::formats::csr_to_block;
     use crate::matrix::{suite, Coo, Csr};
 
     fn check(csr: &Csr, bs: BlockSize, test: bool) {
@@ -631,6 +780,29 @@ mod tests {
         }
     }
 
+    fn check_f32(csr: &Csr, bs: BlockSize) {
+        if !crate::util::avx512_available() {
+            return;
+        }
+        let csr32: Csr<f32> = csr.to_precision();
+        let bm = csr_to_block(&csr32, bs).unwrap();
+        let x: Vec<f32> =
+            (0..csr.cols).map(|i| ((i * 7) % 9) as f32 * 0.25 - 1.0).collect();
+        // f64 reference on the f32-truncated values for a fair compare.
+        let x64: Vec<f64> = x.iter().map(|&v| v as f64).collect();
+        let want64 = csr32.to_dense().matvec(&x64);
+        let mut got = vec![0.0f32; csr.rows];
+        assert!(spmv(&bm, &x, &mut got, false), "no f32 kernel for {bs}");
+        for i in 0..csr.rows {
+            let w = want64[i] as f32;
+            assert!(
+                (got[i] - w).abs() <= 2e-4 * w.abs().max(1.0),
+                "f32 {bs} row {i}: {} vs {w}",
+                got[i]
+            );
+        }
+    }
+
     #[test]
     fn all_kernels_match_reference() {
         for sm in suite::test_subset() {
@@ -640,6 +812,40 @@ mod tests {
             check(&sm.csr, BlockSize::new(1, 8), true);
             check(&sm.csr, BlockSize::new(2, 4), true);
         }
+    }
+
+    #[test]
+    fn f32_kernels_match_reference() {
+        for sm in suite::test_subset().iter().take(6) {
+            if sm.csr.rows > 3000 {
+                continue; // dense oracle stays small
+            }
+            for bs in BlockSize::F32_WIDE_SIZES {
+                check_f32(&sm.csr, bs);
+            }
+        }
+    }
+
+    #[test]
+    fn f32_edge_column_masked_load() {
+        let mut coo = Coo::new(5, 17);
+        for r in 0..5 {
+            coo.push(r, 16, 1.5 + r as f64);
+        }
+        let csr = coo.to_csr().unwrap();
+        for bs in [BlockSize::new(1, 16), BlockSize::new(4, 16)] {
+            check_f32(&csr, bs);
+        }
+    }
+
+    #[test]
+    fn f32_non_specialized_sizes_return_false() {
+        let csr32: Csr<f32> = suite::poisson2d(6).to_precision();
+        let bm = csr_to_block(&csr32, BlockSize::new(2, 8)).unwrap();
+        let x = vec![1.0f32; csr32.cols];
+        let mut y = vec![0.0f32; csr32.rows];
+        // c != 16 has no f32 AVX-512 specialization.
+        assert!(!spmv(&bm, &x, &mut y, false));
     }
 
     #[test]
@@ -668,6 +874,9 @@ mod tests {
         for bs in BlockSize::PAPER_SIZES {
             check(&csr, bs, false);
         }
+        for bs in BlockSize::F32_WIDE_SIZES {
+            check_f32(&csr, bs);
+        }
     }
 
     #[test]
@@ -680,6 +889,9 @@ mod tests {
         let csr = coo.to_csr().unwrap();
         for bs in BlockSize::PAPER_SIZES {
             check(&csr, bs, false);
+        }
+        for bs in BlockSize::F32_WIDE_SIZES {
+            check_f32(&csr, bs);
         }
     }
 
@@ -712,6 +924,9 @@ mod tests {
         for bs in BlockSize::PAPER_SIZES {
             check(&csr, bs, false);
         }
+        for bs in BlockSize::F32_WIDE_SIZES {
+            check_f32(&csr, bs);
+        }
     }
 
     #[test]
@@ -730,6 +945,9 @@ mod tests {
         }
         check(&csr, BlockSize::new(1, 8), true);
         check(&csr, BlockSize::new(2, 4), true);
+        for bs in BlockSize::F32_WIDE_SIZES {
+            check_f32(&csr, bs);
+        }
     }
 
     #[test]

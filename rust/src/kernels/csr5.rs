@@ -18,6 +18,7 @@
 //!   loop, as in the reference implementation.
 
 use crate::matrix::Csr;
+use crate::scalar::Scalar;
 
 /// SIMD lanes (doubles in a 512-bit vector).
 pub const OMEGA: usize = 8;
@@ -34,34 +35,34 @@ struct Tile {
     flag_rows: Vec<u32>,
 }
 
-/// A matrix converted to CSR5.
-pub struct Csr5Matrix {
+/// A matrix converted to CSR5 (generic over the element precision).
+pub struct Csr5Matrix<T: Scalar = f64> {
     pub rows: usize,
     pub cols: usize,
     /// Transposed per-tile values: tile t, element (i, j) at
     /// `t·ωσ + i·ω + j` holding original nnz `t·ωσ + j·σ + i`.
-    vals_t: Vec<f64>,
+    vals_t: Vec<T>,
     cols_t: Vec<u32>,
     tiles: Vec<Tile>,
     /// Row open at the entry of each tile (the row the first element
     /// continues, before any flag fires).
     tile_open_row: Vec<u32>,
     /// CSR tail (entries beyond the last full tile).
-    tail: Csr,
+    tail: Csr<T>,
     /// Row where the tail starts (its first partial row).
     nnz: usize,
 }
 
-impl Csr5Matrix {
+impl<T: Scalar> Csr5Matrix<T> {
     /// Builds CSR5 storage from CSR.
-    pub fn from_csr(m: &Csr) -> Self {
+    pub fn from_csr(m: &Csr<T>) -> Self {
         let tile_elems = OMEGA * SIGMA;
         let n_tiles = m.nnz() / tile_elems;
         let tiled_nnz = n_tiles * tile_elems;
 
         // Row of each nnz position (expanded rowptr) for the tiled part,
         // plus flags.
-        let mut vals_t = vec![0f64; tiled_nnz];
+        let mut vals_t = vec![T::ZERO; tiled_nnz];
         let mut cols_t = vec![0u32; tiled_nnz];
         let mut tiles = Vec::with_capacity(n_tiles);
         let mut tile_open_row = Vec::with_capacity(n_tiles);
@@ -125,15 +126,15 @@ impl Csr5Matrix {
     }
 
     /// `y += A·x`.
-    pub fn spmv(&self, x: &[f64], y: &mut [f64]) {
+    pub fn spmv(&self, x: &[T], y: &mut [T]) {
         assert_eq!(x.len(), self.cols);
         assert_eq!(y.len(), self.rows);
         let tile_elems = OMEGA * SIGMA;
-        let mut prod = [0f64; OMEGA * SIGMA];
+        let mut prod = [T::ZERO; OMEGA * SIGMA];
 
         // Open-row carry across tiles: (open_row, open_sum) flow from
         // tile to tile; a flag closes the open segment into y.
-        let mut open_sum = 0f64;
+        let mut open_sum = T::ZERO;
         let mut open_row = self
             .tile_open_row
             .first()
@@ -156,7 +157,7 @@ impl Csr5Matrix {
                     if tile.bit_flag[p / 64] & (1u64 << (p % 64)) != 0 {
                         // Row start: close the open segment.
                         y[open_row] += open_sum;
-                        open_sum = 0.0;
+                        open_sum = T::ZERO;
                         open_row = tile.flag_rows[fr] as usize;
                         fr += 1;
                     }
@@ -174,7 +175,7 @@ impl Csr5Matrix {
         // Tail via the CSR row loop.
         if self.tail.nnz() > 0 {
             for r in 0..self.tail.rows {
-                let mut s = 0.0;
+                let mut s = T::ZERO;
                 for k in self.tail.row_range(r) {
                     s += self.tail.values[k] * x[self.tail.colidx[k] as usize];
                 }
@@ -194,7 +195,7 @@ impl Csr5Matrix {
 /// partial tile). The tail covers complete trailing rows plus possibly
 /// one partial row at its head; partial sums simply accumulate into the
 /// same `y` row, so correctness is preserved.
-fn build_tail(m: &Csr, start: usize) -> Csr {
+fn build_tail<T: Scalar>(m: &Csr<T>, start: usize) -> Csr<T> {
     // First row that has entries at position >= start.
     let mut first_row = match m.rowptr.binary_search(&(start as u32)) {
         Ok(mut r) => {

@@ -1,11 +1,12 @@
-//! SpMV kernels.
+//! SpMV kernels behind one precision-generic dispatch.
 //!
 //! - [`scalar`] — the generic Algorithm 1 for any `β(r,c)` plus the
 //!   Algorithm 2 "test" variants; portable, used as fallback and as the
 //!   differential-testing reference.
-//! - [`avx512`] — the paper's optimized kernels: one `vexpandpd`-based
-//!   routine per paper block size, walking the interleaved header
-//!   stream exactly like the published assembly (Code 1).
+//! - [`avx512`] — the optimized kernels: the paper's `vexpandpd`
+//!   routines for the six f64 block sizes and the 16-lane `vexpandps`
+//!   routines for the f32 `β(r,16)` sizes, walking the interleaved
+//!   header stream exactly like the published assembly (Code 1).
 //! - [`csr`] — tuned CSR baseline (the "Intel MKL" stand-in).
 //! - [`csr5`] — re-implementation of the CSR5 format and kernel
 //!   (Liu & Vinter 2015), the paper's second comparator.
@@ -14,7 +15,6 @@
 //! `vaddsd` into `y`), so callers zero `y` when they need `y = A·x`.
 
 pub mod avx512;
-pub mod avx512f32;
 pub mod csr;
 pub mod csr5;
 pub mod scalar;
@@ -22,9 +22,14 @@ pub mod spmm;
 
 use crate::formats::{BlockMatrix, BlockSize};
 use crate::matrix::Csr;
+use crate::scalar::Scalar;
 
 /// Identifies one of the kernels benchmarked in the paper (Fig. 3/4
 /// legend). `Test` variants are Algorithm 2 (scalar/vector dual loop).
+///
+/// The kind is precision-agnostic: `Beta(1, 16)` is only *servable* by
+/// the f32 stack (16 lanes), which the format layer enforces at
+/// conversion time.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub enum KernelKind {
     /// CSR row loop — the MKL stand-in baseline.
@@ -65,6 +70,14 @@ impl KernelKind {
         KernelKind::Beta(8, 4),
     ];
 
+    /// The 16-lane kernels only the f32 stack serves:
+    /// β(1,16), β(2,16), β(4,16).
+    pub const F32_WIDE_KERNELS: [KernelKind; 3] = [
+        KernelKind::Beta(1, 16),
+        KernelKind::Beta(2, 16),
+        KernelKind::Beta(4, 16),
+    ];
+
     /// Block size of a β kernel, if any.
     pub fn block_size(&self) -> Option<BlockSize> {
         match *self {
@@ -75,7 +88,9 @@ impl KernelKind {
         }
     }
 
-    /// Parses e.g. `csr`, `csr5`, `b(2,8)`, `b(1,8)test`.
+    /// Parses e.g. `csr`, `csr5`, `b(2,8)`, `b(1,8)test`, and the f32
+    /// spellings `b32(1,16)` / `beta32(2,16)test`. Trailing garbage
+    /// (`b(2,8)x`, `b(2,8,9)`) is rejected.
     pub fn parse(s: &str) -> Option<KernelKind> {
         let t = s.trim().to_ascii_lowercase();
         match t.as_str() {
@@ -88,12 +103,17 @@ impl KernelKind {
             None => (t, false),
         };
         let inner = body
-            .strip_prefix("b(")
+            .strip_prefix("b32(")
+            .or_else(|| body.strip_prefix("beta32("))
+            .or_else(|| body.strip_prefix("b("))
             .or_else(|| body.strip_prefix("beta("))?
             .strip_suffix(')')?;
         let mut parts = inner.split(',');
         let r: u8 = parts.next()?.trim().parse().ok()?;
         let c: u8 = parts.next()?.trim().parse().ok()?;
+        if parts.next().is_some() {
+            return None; // `b(2,8,9)`-style garbage
+        }
         Some(if test {
             KernelKind::BetaTest(r, c)
         } else {
@@ -113,12 +133,18 @@ impl std::fmt::Display for KernelKind {
     }
 }
 
-/// Executes the β-format SpMV `y += A·x`, dispatching to the AVX-512
-/// specialization when the CPU supports it and the block size is one of
-/// the six optimized ones, otherwise to the generic scalar kernel.
-/// `test` selects the Algorithm-2 variant (β(1,8) and β(2,4) only, as
-/// in the paper).
-pub fn spmv_block(bm: &BlockMatrix, x: &[f64], y: &mut [f64], test: bool) {
+/// Executes the β-format SpMV `y += A·x`, dispatching to the scalar's
+/// AVX-512 specialization when the CPU supports it and the block size
+/// is one of the optimized ones (`vexpandpd` at `T = f64`, `vexpandps`
+/// at `T = f32`), otherwise to the generic scalar kernel. `test`
+/// selects the Algorithm-2 variant (vectorized for β(1,8) and β(2,4)
+/// at f64, as in the paper; portable elsewhere).
+pub fn spmv_block<T: Scalar>(
+    bm: &BlockMatrix<T>,
+    x: &[T],
+    y: &mut [T],
+    test: bool,
+) {
     assert_eq!(x.len(), bm.cols, "x length mismatch");
     assert_eq!(y.len(), bm.rows, "y length mismatch");
     if crate::util::avx512_available() && avx512::spmv(bm, x, y, test) {
@@ -134,15 +160,19 @@ pub fn spmv_block(bm: &BlockMatrix, x: &[f64], y: &mut [f64], test: bool) {
 /// Pre-converted storage bundle: run any [`KernelKind`] on one matrix.
 /// Conversion happens once in [`KernelSet::prepare`] so benchmark loops
 /// measure only the SpMV itself (the paper's protocol).
-pub struct KernelSet {
-    pub csr: Csr,
-    blocks: std::collections::HashMap<BlockSize, BlockMatrix>,
-    csr5: Option<csr5::Csr5Matrix>,
+pub struct KernelSet<T: Scalar = f64> {
+    pub csr: Csr<T>,
+    blocks: std::collections::HashMap<BlockSize, BlockMatrix<T>>,
+    csr5: Option<csr5::Csr5Matrix<T>>,
 }
 
-impl KernelSet {
+impl<T: Scalar> KernelSet<T> {
     /// Prepares every storage needed to run `kinds` on `csr`.
-    pub fn prepare(csr: Csr, kinds: &[KernelKind]) -> Self {
+    ///
+    /// Panics when a β size is invalid for this precision (e.g.
+    /// `Beta(1, 16)` at `T = f64`); use [`crate::SpmvEngine`] for
+    /// fallible construction.
+    pub fn prepare(csr: Csr<T>, kinds: &[KernelKind]) -> Self {
         let mut blocks = std::collections::HashMap::new();
         let mut want_csr5 = false;
         for k in kinds {
@@ -152,7 +182,7 @@ impl KernelSet {
                     if let Some(bs) = k.block_size() {
                         blocks.entry(bs).or_insert_with(|| {
                             crate::formats::csr_to_block(&csr, bs)
-                                .expect("paper sizes are valid")
+                                .expect("block size valid for this precision")
                         });
                     }
                 }
@@ -163,7 +193,7 @@ impl KernelSet {
     }
 
     /// Runs `y += A·x` with the chosen kernel.
-    pub fn spmv(&self, kind: KernelKind, x: &[f64], y: &mut [f64]) {
+    pub fn spmv(&self, kind: KernelKind, x: &[T], y: &mut [T]) {
         match kind {
             KernelKind::Csr => csr::spmv(&self.csr, x, y),
             KernelKind::Csr5 => {
@@ -181,7 +211,7 @@ impl KernelSet {
     }
 
     /// Access a prepared block matrix (for stats/occupancy reporting).
-    pub fn block(&self, bs: BlockSize) -> Option<&BlockMatrix> {
+    pub fn block(&self, bs: BlockSize) -> Option<&BlockMatrix<T>> {
         self.blocks.get(&bs)
     }
 }
@@ -205,6 +235,41 @@ mod tests {
     }
 
     #[test]
+    fn parse_accepts_f32_spellings() {
+        // β32 names and their Display round trip.
+        for k in KernelKind::F32_WIDE_KERNELS {
+            assert_eq!(KernelKind::parse(&k.to_string()), Some(k));
+        }
+        assert_eq!(
+            KernelKind::parse("b32(1,16)"),
+            Some(KernelKind::Beta(1, 16))
+        );
+        assert_eq!(
+            KernelKind::parse("B32(2,16)"),
+            Some(KernelKind::Beta(2, 16))
+        );
+        assert_eq!(
+            KernelKind::parse("beta32(4,16)"),
+            Some(KernelKind::Beta(4, 16))
+        );
+        assert_eq!(
+            KernelKind::parse("b32(2,16)test"),
+            Some(KernelKind::BetaTest(2, 16))
+        );
+    }
+
+    #[test]
+    fn parse_rejects_trailing_garbage() {
+        assert_eq!(KernelKind::parse("b(2,8)x"), None);
+        assert_eq!(KernelKind::parse("b(2,8,9)"), None);
+        assert_eq!(KernelKind::parse("b(2,)"), None);
+        assert_eq!(KernelKind::parse("b(,8)"), None);
+        assert_eq!(KernelKind::parse("b32(1,16)junk"), None);
+        assert_eq!(KernelKind::parse("csr5 extra"), None);
+        assert_eq!(KernelKind::parse("b(2,8)testx"), None);
+    }
+
+    #[test]
     fn kernel_set_runs_all() {
         let csr = crate::matrix::suite::poisson2d(20);
         let set = KernelSet::prepare(csr.clone(), &KernelKind::ALL);
@@ -217,6 +282,33 @@ mod tests {
             for i in 0..y.len() {
                 assert!(
                     (y[i] - want[i]).abs() <= 1e-9 * want[i].abs().max(1.0),
+                    "{k} row {i}: {} vs {}",
+                    y[i],
+                    want[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn f32_kernel_set_runs_wide_and_baselines() {
+        let csr = crate::matrix::suite::poisson2d(20);
+        let csr32: Csr<f32> = csr.to_precision();
+        let kinds: Vec<KernelKind> = KernelKind::ALL
+            .into_iter()
+            .chain(KernelKind::F32_WIDE_KERNELS)
+            .collect();
+        let set = KernelSet::prepare(csr32.clone(), &kinds);
+        let x: Vec<f32> =
+            (0..csr32.cols).map(|i| (i % 7) as f32 - 3.0).collect();
+        let mut want = vec![0.0f32; csr32.rows];
+        csr32.spmv_ref(&x, &mut want);
+        for k in kinds {
+            let mut y = vec![0.0f32; csr32.rows];
+            set.spmv(k, &x, &mut y);
+            for i in 0..y.len() {
+                assert!(
+                    (y[i] - want[i]).abs() <= 2e-4 * want[i].abs().max(1.0),
                     "{k} row {i}: {} vs {}",
                     y[i],
                     want[i]

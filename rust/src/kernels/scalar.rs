@@ -1,12 +1,14 @@
 //! Portable scalar kernels — the paper's Algorithm 1 (generic `β(r,c)`
 //! SpMV) and Algorithm 2 (the `test` variant with separate scalar /
-//! vector inner loops).
+//! vector inner loops) — generic over the element precision.
 //!
 //! These are the semantic reference for the AVX-512 specializations and
-//! the fallback on non-AVX-512 hosts.
+//! the fallback on non-AVX-512 hosts (and for block sizes without a
+//! vectorized specialization, e.g. any f32 size with `c != 16`).
 
 use super::avx512::Span;
 use crate::formats::{BlockMatrix, BlockSize};
+use crate::scalar::{MaskWord, Scalar};
 
 /// Algorithm 1: generic scalar SpMV for any block size, `y += A·x`.
 ///
@@ -14,25 +16,25 @@ use crate::formats::{BlockMatrix, BlockSize};
 /// blocks left-to-right, accumulating one partial sum per block row and
 /// flushing into `y` at interval end — exactly the structure the
 /// vectorized kernels replicate.
-pub fn spmv_generic(bm: &BlockMatrix, x: &[f64], y: &mut [f64]) {
+pub fn spmv_generic<T: Scalar>(bm: &BlockMatrix<T>, x: &[T], y: &mut [T]) {
     let (r, c) = (bm.bs.r, bm.bs.c);
     let mut idx_val = 0usize;
-    let mut sums = vec![0.0f64; r];
+    let mut sums = vec![T::ZERO; r];
     for it in 0..bm.intervals() {
         let row0 = it * r;
         let (a, b) =
             (bm.block_rowptr[it] as usize, bm.block_rowptr[it + 1] as usize);
-        sums.iter_mut().for_each(|s| *s = 0.0);
+        sums.iter_mut().for_each(|s| *s = T::ZERO);
         for blk in a..b {
             let col0 = bm.block_colidx[blk] as usize;
             for i in 0..r {
                 let mask = bm.block_masks[blk * r + i];
-                if mask == 0 {
+                if mask.is_zero() {
                     continue;
                 }
                 let mut sum = sums[i];
                 for k in 0..c {
-                    if mask & (1 << k) != 0 {
+                    if mask.test(k) {
                         sum += x[col0 + k] * bm.values[idx_val];
                         idx_val += 1;
                     }
@@ -54,15 +56,15 @@ pub fn spmv_generic(bm: &BlockMatrix, x: &[f64], y: &mut [f64]) {
 /// the jump between them mirror the paper's goto structure: the state
 /// machine stays in one mode across consecutive blocks of the same
 /// kind, which is what makes the branch predictable.
-pub fn spmv_generic_test(bm: &BlockMatrix, x: &[f64], y: &mut [f64]) {
+pub fn spmv_generic_test<T: Scalar>(bm: &BlockMatrix<T>, x: &[T], y: &mut [T]) {
     let (r, c) = (bm.bs.r, bm.bs.c);
     let mut idx_val = 0usize;
-    let mut sums = vec![0.0f64; r];
+    let mut sums = vec![T::ZERO; r];
     for it in 0..bm.intervals() {
         let row0 = it * r;
         let (a, b) =
             (bm.block_rowptr[it] as usize, bm.block_rowptr[it + 1] as usize);
-        sums.iter_mut().for_each(|s| *s = 0.0);
+        sums.iter_mut().for_each(|s| *s = T::ZERO);
 
         let mut blk = a;
         // Mode flag emulating the two jump-connected loops of Alg. 2.
@@ -70,7 +72,7 @@ pub fn spmv_generic_test(bm: &BlockMatrix, x: &[f64], y: &mut [f64]) {
         let mut single = true;
         while blk < b {
             let col0 = bm.block_colidx[blk] as usize;
-            // Popcount over the whole block (all r mask bytes).
+            // Popcount over the whole block (all r mask words).
             let mut pop = 0u32;
             for i in 0..r {
                 pop += bm.block_masks[blk * r + i].count_ones();
@@ -82,7 +84,7 @@ pub fn spmv_generic_test(bm: &BlockMatrix, x: &[f64], y: &mut [f64]) {
                 // Single value: locate its (row, lane) and multiply.
                 for i in 0..r {
                     let mask = bm.block_masks[blk * r + i];
-                    if mask != 0 {
+                    if !mask.is_zero() {
                         let k = mask.trailing_zeros() as usize;
                         sums[i] += x[col0 + k] * bm.values[idx_val];
                         idx_val += 1;
@@ -95,12 +97,12 @@ pub fn spmv_generic_test(bm: &BlockMatrix, x: &[f64], y: &mut [f64]) {
                 }
                 for i in 0..r {
                     let mask = bm.block_masks[blk * r + i];
-                    if mask == 0 {
+                    if mask.is_zero() {
                         continue;
                     }
                     let mut sum = sums[i];
                     for k in 0..c {
-                        if mask & (1 << k) != 0 {
+                        if mask.test(k) {
                             sum += x[col0 + k] * bm.values[idx_val];
                             idx_val += 1;
                         }
@@ -121,30 +123,36 @@ pub fn spmv_generic_test(bm: &BlockMatrix, x: &[f64], y: &mut [f64]) {
 /// Span-based Algorithm 1 (the portable counterpart of
 /// [`super::avx512::spmv_span`], used by the parallel runtime on
 /// non-AVX-512 hosts). `y` is span-local.
-pub fn spmv_generic_span(span: Span<'_>, bs: BlockSize, x: &[f64], y: &mut [f64]) {
+pub fn spmv_generic_span<T: Scalar>(
+    span: Span<'_, T>,
+    bs: BlockSize,
+    x: &[T],
+    y: &mut [T],
+) {
     let (r, c) = (bs.r, bs.c);
-    let stride = 4 + r;
+    let mb = <T::Mask as MaskWord>::BYTES;
+    let stride = 4 + mb * r;
     let intervals = span.rowptr.len() - 1;
     let mut idx_val = 0usize;
     let mut hp = 0usize;
-    let mut sums = vec![0.0f64; r];
+    let mut sums = vec![T::ZERO; r];
     for it in 0..intervals {
         let nb = (span.rowptr[it + 1] - span.rowptr[it]) as usize;
         if nb == 0 {
             continue;
         }
-        sums.iter_mut().for_each(|s| *s = 0.0);
+        sums.iter_mut().for_each(|s| *s = T::ZERO);
         for _ in 0..nb {
             let h = &span.headers[hp..hp + stride];
             let col0 = u32::from_le_bytes([h[0], h[1], h[2], h[3]]) as usize;
             for i in 0..r {
-                let mask = h[4 + i];
-                if mask == 0 {
+                let mask = <T::Mask as MaskWord>::read_le(&h[4 + mb * i..]);
+                if mask.is_zero() {
                     continue;
                 }
                 let mut sum = sums[i];
                 for k in 0..c {
-                    if mask & (1 << k) != 0 {
+                    if mask.test(k) {
                         sum += x[col0 + k] * span.values[idx_val];
                         idx_val += 1;
                     }
@@ -210,7 +218,7 @@ mod tests {
 
     #[test]
     fn non_paper_sizes_work_too() {
-        // Generic kernel accepts any r*c<=64, c<=8 (e.g. the paper's
+        // Generic kernel accepts any r<=8, c<=8 (e.g. the paper's
         // Fig. 2 β(1,4)/β(2,2) illustrations).
         let sm = &suite::test_subset()[1];
         for bs in [
@@ -221,6 +229,35 @@ mod tests {
         ] {
             check(&sm.csr, bs, false);
             check(&sm.csr, bs, true);
+        }
+    }
+
+    #[test]
+    fn f32_generic_and_test_variants_agree() {
+        // The f32 instantiation of Algorithms 1 and 2 must agree with
+        // the f32 CSR reference, including at 16-wide sizes.
+        let sm = &suite::test_subset()[2];
+        let csr32: Csr<f32> = sm.csr.to_precision();
+        let x: Vec<f32> =
+            (0..csr32.cols).map(|i| ((i * 5) % 7) as f32 * 0.5 - 1.5).collect();
+        let mut want = vec![0.0f32; csr32.rows];
+        csr32.spmv_ref(&x, &mut want);
+        for bs in [
+            BlockSize::new(1, 16),
+            BlockSize::new(2, 16),
+            BlockSize::new(4, 12),
+            BlockSize::new(2, 8),
+        ] {
+            let bm = csr_to_block(&csr32, bs).unwrap();
+            let mut got = vec![0.0f32; csr32.rows];
+            spmv_generic(&bm, &x, &mut got);
+            let mut got_test = vec![0.0f32; csr32.rows];
+            spmv_generic_test(&bm, &x, &mut got_test);
+            for i in 0..csr32.rows {
+                let tol = 2e-4 * want[i].abs().max(1.0);
+                assert!((got[i] - want[i]).abs() <= tol, "{bs} row {i}");
+                assert!((got_test[i] - want[i]).abs() <= tol, "{bs} test row {i}");
+            }
         }
     }
 
@@ -236,6 +273,22 @@ mod tests {
             spmv_generic_span(Span::full(&bm), bs, &x, &mut got);
             for i in 0..csr.rows {
                 assert!((got[i] - want[i]).abs() < 1e-12, "{bs} row {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn f32_span_version_matches_full() {
+        let csr32: Csr<f32> = suite::poisson2d(16).to_precision();
+        for bs in BlockSize::F32_WIDE_SIZES {
+            let bm = csr_to_block(&csr32, bs).unwrap();
+            let x: Vec<f32> = (0..csr32.cols).map(|i| (i % 5) as f32).collect();
+            let mut want = vec![0.0f32; csr32.rows];
+            spmv_generic(&bm, &x, &mut want);
+            let mut got = vec![0.0f32; csr32.rows];
+            spmv_generic_span(Span::full(&bm), bs, &x, &mut got);
+            for i in 0..csr32.rows {
+                assert!((got[i] - want[i]).abs() < 1e-6, "{bs} row {i}");
             }
         }
     }

@@ -17,32 +17,34 @@
 //!   row; broadcast-FMA per nonzero), any β block size.
 
 use crate::formats::BlockMatrix;
+use crate::scalar::{MaskWord, Scalar};
 
 #[cfg(target_arch = "x86_64")]
 use std::arch::x86_64::*;
 
-/// Scalar SpMM for any block size and vector count `k`.
-pub fn spmm_generic(bm: &BlockMatrix, x: &[f64], y: &mut [f64], k: usize) {
+/// Scalar SpMM for any block size and vector count `k`, generic over
+/// the element precision.
+pub fn spmm_generic<T: Scalar>(bm: &BlockMatrix<T>, x: &[T], y: &mut [T], k: usize) {
     assert_eq!(x.len(), bm.cols * k, "x must be cols*k");
     assert_eq!(y.len(), bm.rows * k, "y must be rows*k");
     let (r, c) = (bm.bs.r, bm.bs.c);
     let mut idx_val = 0usize;
     // Per-interval accumulators: r rows × k lanes.
-    let mut sums = vec![0.0f64; r * k];
+    let mut sums = vec![T::ZERO; r * k];
     for it in 0..bm.intervals() {
         let row0 = it * r;
         let (a, b) =
             (bm.block_rowptr[it] as usize, bm.block_rowptr[it + 1] as usize);
-        sums.iter_mut().for_each(|s| *s = 0.0);
+        sums.iter_mut().for_each(|s| *s = T::ZERO);
         for blk in a..b {
             let col0 = bm.block_colidx[blk] as usize;
             for i in 0..r {
                 let mask = bm.block_masks[blk * r + i];
-                if mask == 0 {
+                if mask.is_zero() {
                     continue;
                 }
                 for lane in 0..c {
-                    if mask & (1 << lane) != 0 {
+                    if mask.test(lane) {
                         let v = bm.values[idx_val];
                         idx_val += 1;
                         let xrow = &x[(col0 + lane) * k..(col0 + lane + 1) * k];

@@ -3,32 +3,67 @@
 //! Reproduction of Bramas & Kus, *"Computing the sparse matrix vector
 //! product using block-based kernels without zero padding on processors
 //! with AVX-512 instructions"* (PeerJ CS, 2018) — the SPC5 library —
-//! as a three-layer Rust + JAX + Pallas system.
+//! grown into a precision-generic SpMV serving stack.
 //!
-//! The crate provides:
+//! ## The generic stack
 //!
-//! - [`matrix`] — sparse-matrix substrate: COO / CSR containers,
-//!   MatrixMarket I/O, a dense oracle, and deterministic synthetic
-//!   generators reproducing the structural classes of the paper's
-//!   SuiteSparse benchmark sets (Set-A / Set-B).
-//! - [`formats`] — the paper's contribution: `β(r,c)` block formats that
-//!   store one *bitmask per block* instead of zero padding, conversion
-//!   from CSR, block statistics and the memory-occupancy model
-//!   (paper Eq. 1–4).
-//! - [`kernels`] — SpMV kernels: the generic scalar Algorithm 1, native
-//!   AVX-512 `vexpandpd` kernels for the six paper block sizes, the
-//!   Algorithm 2 "test" variants, a tuned CSR baseline (MKL stand-in)
-//!   and a full CSR5 re-implementation (Liu & Vinter 2015).
+//! Every layer is parameterized over the sealed [`Scalar`] trait
+//! (`f64` and `f32`, with `f64` as the default type parameter): one
+//! `Csr<T>` → `BlockMatrix<T>` → kernel → engine pipeline instead of
+//! per-precision copies. The scalar decides the lane count of a
+//! 512-bit vector (8 doubles / 16 floats), the per-block-row mask word
+//! (`u8` / `u16`) and the AVX-512 dispatch (`vexpandpd` /
+//! `vexpandps`). Double-precision code looks exactly like it did when
+//! the crate was f64-only; single precision is the same API at
+//! `T = f32` with blocks up to 16 columns wide (`β32`).
+//!
+//! ```no_run
+//! use spc5::{Csr, SpmvEngine, KernelKind};
+//!
+//! # fn demo(csr: Csr) -> anyhow::Result<()> {
+//! // f64 (default): predictor-driven kernel choice, 4 worker threads.
+//! let engine = SpmvEngine::builder(csr.clone()).threads(4).build()?;
+//! let x = vec![1.0; csr.cols];
+//! let mut y = vec![0.0; csr.rows];
+//! engine.spmv_into(&x, &mut y);
+//!
+//! // f32: same stack, 16-lane blocks, explicit kernel override.
+//! let _engine32 = SpmvEngine::builder(csr.to_precision::<f32>())
+//!     .kernel(KernelKind::Beta(1, 16))
+//!     .build()?;
+//! # Ok(()) }
+//! ```
+//!
+//! ## Modules
+//!
+//! - [`scalar`] — the sealed [`Scalar`] / [`scalar::MaskWord`] traits:
+//!   the precision axis everything else is generic over.
+//! - [`matrix`] — sparse-matrix substrate: `Coo<T>` / `Csr<T>`
+//!   containers, MatrixMarket I/O, a dense oracle, reordering, and
+//!   deterministic synthetic generators reproducing the structural
+//!   classes of the paper's SuiteSparse benchmark sets.
+//! - [`formats`] — the paper's contribution: `β(r,c)` block formats
+//!   storing one *bitmask per block* instead of zero padding
+//!   (`BlockMatrix<T>`), conversion from CSR, block statistics and the
+//!   memory-occupancy model (paper Eq. 1–4).
+//! - [`kernels`] — SpMV kernels behind one dispatch: the generic
+//!   scalar Algorithm 1/2, native AVX-512 `vexpandpd` (f64) and
+//!   `vexpandps` (f32) span kernels, a tuned CSR baseline (MKL
+//!   stand-in) and a CSR5 re-implementation — all runnable through
+//!   `KernelSet<T>` / [`kernels::spmv_block`].
 //! - [`parallel`] — the paper's static block-balanced shared-memory
-//!   parallelization with per-thread result buffers, syncless merge and
-//!   an optional NUMA-style array split.
+//!   parallelization with per-thread result buffers, syncless merge
+//!   and an optional NUMA-style array split (`ParallelSpmv<T>`).
 //! - [`predictor`] — the record-based kernel-selection system:
 //!   polynomial interpolation (sequential, Fig. 5) and 2D regression
 //!   (parallel, Fig. 6) over performance records.
 //! - [`runtime`] — PJRT/XLA executor loading AOT artifacts produced by
-//!   the Python (JAX + Pallas) compile path.
-//! - [`coordinator`] — the `SpmvEngine` facade tying everything
-//!   together (stats → predict → convert → dispatch) plus a CG solver.
+//!   the Python (JAX + Pallas) compile path (behind the `xla` feature;
+//!   a stub with the same API otherwise).
+//! - [`coordinator`] — `SpmvEngine<T>` (built through
+//!   [`SpmvEngine::builder`]: stats → predict → convert → dispatch,
+//!   serving **every** [`KernelKind`] including the CSR/CSR5
+//!   baselines), the Krylov solvers, and `SpmvService<T>`.
 //! - [`bench`] — the measurement harness used by `cargo bench` targets
 //!   that regenerate every table and figure of the paper.
 
@@ -40,12 +75,16 @@ pub mod matrix;
 pub mod parallel;
 pub mod predictor;
 pub mod runtime;
+pub mod scalar;
 pub mod testkit;
 pub mod util;
 
 /// Number of f64 lanes in a 512-bit vector — the paper's `VEC_SIZE`.
+/// The generic form is [`Scalar::LANES`] (8 for f64, 16 for f32).
 pub const VEC_SIZE: usize = 8;
 
+pub use coordinator::SpmvEngine;
 pub use formats::{BlockMatrix, BlockSize};
 pub use kernels::KernelKind;
 pub use matrix::{Coo, Csr};
+pub use scalar::Scalar;

@@ -13,11 +13,12 @@
 //! - `kernels` — list kernels and CPU feature support.
 
 use spc5::bench;
-use spc5::coordinator::{cg_solve, EngineConfig, SpmvEngine};
+use spc5::coordinator::{cg_solve, SpmvEngine};
 use spc5::formats::stats::paper_profile;
-use spc5::kernels::{KernelKind, KernelSet};
+use spc5::kernels::KernelKind;
 use spc5::matrix::{market, suite, Csr};
 use spc5::predictor::{select_parallel, select_sequential, RecordStore};
+use spc5::util::timer::{mean_of_runs, spmv_gflops};
 use spc5::util::Rng;
 
 fn main() {
@@ -119,7 +120,7 @@ fn print_help() {
          \n\
          commands:\n\
          \x20 stats    --set A|B | --matrix NAME | --mtx FILE   block-fill stats (Tables 1/2)\n\
-         \x20 spmv     --matrix NAME [--kernel K] [--threads N] [--numa]\n\
+         \x20 spmv     --matrix NAME [--kernel K] [--threads N] [--numa] [--precision f32|f64]\n\
          \x20 predict  --matrix NAME [--threads N] [--records FILE]\n\
          \x20 cg       [--n N] [--iters K] [--engine native|xla] [--threads N]\n\
          \x20 gen      --class CLASS --out FILE.mtx [--dim D] [--seed S]\n\
@@ -172,35 +173,55 @@ fn cmd_spmv(a: &Args) -> anyhow::Result<()> {
     let (name, csr) = load_matrix(a)?;
     let kernel = match a.get("kernel") {
         None => KernelKind::Beta(1, 8),
-        Some(k) => KernelKind::parse(k)
-            .ok_or_else(|| anyhow::anyhow!("bad kernel '{k}' (try b(4,8), csr, csr5)"))?,
+        Some(k) => KernelKind::parse(k).ok_or_else(|| {
+            anyhow::anyhow!("bad kernel '{k}' (try b(4,8), b32(1,16), csr, csr5)")
+        })?,
     };
     let threads = a.get_usize("threads", 1)?;
+    let numa = a.has("numa");
     let nnz = csr.nnz();
 
-    let m = if threads <= 1 || kernel.block_size().is_none() {
-        let set = KernelSet::prepare(csr, &[kernel]);
-        bench::measure_sequential(&set, &name, kernel)
-    } else {
-        let bs = kernel.block_size().unwrap();
-        let bm = spc5::formats::csr_to_block(&csr, bs)?;
-        let strategy = if a.has("numa") {
-            spc5::parallel::ParallelStrategy::NumaSplit
-        } else {
-            spc5::parallel::ParallelStrategy::Shared
-        };
-        let p = spc5::parallel::ParallelSpmv::new(
-            bm,
-            threads,
-            strategy,
-            matches!(kernel, KernelKind::BetaTest(..)),
+    let precision = a.get("precision").unwrap_or("f64");
+    if precision != "f32" && precision != "f64" {
+        anyhow::bail!("--precision expects f32 or f64, got '{precision}'");
+    }
+
+    // One engine serves every KernelKind — β kernels, CSR and CSR5 —
+    // at either precision.
+    if precision == "f32" {
+        let engine = SpmvEngine::builder(csr.to_precision::<f32>())
+            .threads(threads)
+            .numa_split(numa)
+            .kernel(kernel)
+            .build()?;
+        let x: Vec<f32> = bench::bench_vector(engine.csr().cols, 0xBE7C)
+            .into_iter()
+            .map(|v| v as f32)
+            .collect();
+        let mut y = vec![0.0f32; engine.csr().rows];
+        let seconds = mean_of_runs(bench::RUNS, || engine.spmv(&x, &mut y));
+        std::hint::black_box(&y);
+        println!(
+            "{name}: kernel={kernel} precision=f32 threads={threads} \
+             numa={numa} nnz={nnz} time={seconds:.6}s gflops={:.3}",
+            spmv_gflops(nnz, seconds)
         );
-        bench::measure_parallel(&p, &name, kernel)
-    };
-    println!(
-        "{name}: kernel={} threads={} numa={} nnz={} time={:.6}s gflops={:.3}",
-        m.kernel, m.threads, m.numa, nnz, m.seconds, m.gflops
-    );
+    } else {
+        let engine = SpmvEngine::builder(csr)
+            .threads(threads)
+            .numa_split(numa)
+            .kernel(kernel)
+            .build()?;
+        let x = bench::bench_vector(engine.csr().cols, 0xBE7C);
+        let mut y = vec![0.0f64; engine.csr().rows];
+        let seconds = mean_of_runs(bench::RUNS, || engine.spmv(&x, &mut y));
+        std::hint::black_box(&y);
+        println!(
+            "{name}: kernel={kernel} precision=f64 threads={threads} \
+             numa={numa} nnz={nnz} time={seconds:.6}s gflops={:.3}",
+            spmv_gflops(nnz, seconds)
+        );
+    }
     Ok(())
 }
 
@@ -246,8 +267,8 @@ fn cmd_cg(a: &Args) -> anyhow::Result<()> {
 
     match engine_kind {
         "native" => {
-            let cfg = EngineConfig { threads, ..Default::default() };
-            let engine = SpmvEngine::new(csr.clone(), &cfg, None)?;
+            let engine =
+                SpmvEngine::builder(csr.clone()).threads(threads).build()?;
             let mut x = vec![0.0; dim];
             let t = spc5::util::Timer::start();
             let report = cg_solve(&engine, &b, &mut x, iters, 1e-20);

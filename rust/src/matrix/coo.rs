@@ -1,6 +1,7 @@
 //! Coordinate (COO) sparse matrix — the assembly / interchange format.
 
 use super::{Csr, MatrixError, Result};
+use crate::scalar::Scalar;
 
 /// A sparse matrix as unsorted `(row, col, value)` triplets.
 ///
@@ -8,13 +9,13 @@ use super::{Csr, MatrixError, Result};
 /// readers all emit triplets); every other format in the crate is
 /// produced from it through [`Coo::to_csr`].
 #[derive(Clone, Debug, Default)]
-pub struct Coo {
+pub struct Coo<T: Scalar = f64> {
     pub rows: usize,
     pub cols: usize,
-    pub entries: Vec<(u32, u32, f64)>,
+    pub entries: Vec<(u32, u32, T)>,
 }
 
-impl Coo {
+impl<T: Scalar> Coo<T> {
     /// Creates an empty matrix of the given dimensions.
     pub fn new(rows: usize, cols: usize) -> Self {
         Coo { rows, cols, entries: Vec::new() }
@@ -22,7 +23,7 @@ impl Coo {
 
     /// Adds one entry. Duplicate `(r, c)` pairs are summed by `to_csr`.
     #[inline]
-    pub fn push(&mut self, r: usize, c: usize, v: f64) {
+    pub fn push(&mut self, r: usize, c: usize, v: T) {
         debug_assert!(r < self.rows && c < self.cols);
         self.entries.push((r as u32, c as u32, v));
     }
@@ -53,14 +54,14 @@ impl Coo {
     /// Converts to CSR: sorts row-major then column-ascending (the order
     /// the paper's formats require), merging duplicates by addition and
     /// dropping explicit zeros that result from cancellation.
-    pub fn to_csr(&self) -> Result<Csr> {
+    pub fn to_csr(&self) -> Result<Csr<T>> {
         self.validate()?;
         let mut ents = self.entries.clone();
         ents.sort_unstable_by(|a, b| (a.0, a.1).cmp(&(b.0, b.1)));
 
         let mut rowptr = vec![0u32; self.rows + 1];
         let mut colidx: Vec<u32> = Vec::with_capacity(ents.len());
-        let mut values: Vec<f64> = Vec::with_capacity(ents.len());
+        let mut values: Vec<T> = Vec::with_capacity(ents.len());
 
         let mut i = 0;
         while i < ents.len() {
@@ -71,7 +72,7 @@ impl Coo {
                 j += 1;
             }
             i = j;
-            if v != 0.0 {
+            if v != T::ZERO {
                 colidx.push(c);
                 values.push(v);
                 rowptr[r as usize + 1] += 1;
@@ -90,7 +91,7 @@ mod tests {
 
     #[test]
     fn empty_matrix() {
-        let coo = Coo::new(4, 4);
+        let coo: Coo = Coo::new(4, 4);
         let csr = coo.to_csr().unwrap();
         assert_eq!(csr.nnz(), 0);
         assert_eq!(csr.rowptr, vec![0, 0, 0, 0, 0]);
@@ -114,6 +115,16 @@ mod tests {
         coo.push(0, 1, -2.0);
         let csr = coo.to_csr().unwrap();
         assert_eq!(csr.nnz(), 0);
+    }
+
+    #[test]
+    fn f32_assembly_works_end_to_end() {
+        let mut coo: Coo<f32> = Coo::new(2, 2);
+        coo.push(0, 0, 1.5f32);
+        coo.push(0, 0, 0.25f32);
+        coo.push(1, 0, -2.0f32);
+        let csr = coo.to_csr().unwrap();
+        assert_eq!(csr.values, vec![1.75f32, -2.0f32]);
     }
 
     #[test]

@@ -1,20 +1,22 @@
 //! Compressed Sparse Row (CSR) — the de-facto standard SpMV storage and
-//! the paper's baseline format (Fig. 1).
+//! the paper's baseline format (Fig. 1). Generic over the element
+//! precision ([`Scalar`], `f64` by default).
 
 use super::{Dense, MatrixError, Result};
+use crate::scalar::Scalar;
 
 /// CSR matrix: `rowptr` (len rows+1), `colidx` + `values` (len nnz),
 /// rows stored contiguously with ascending column indices.
 #[derive(Clone, Debug, Default, PartialEq)]
-pub struct Csr {
+pub struct Csr<T: Scalar = f64> {
     pub rows: usize,
     pub cols: usize,
     pub rowptr: Vec<u32>,
     pub colidx: Vec<u32>,
-    pub values: Vec<f64>,
+    pub values: Vec<T>,
 }
 
-impl Csr {
+impl<T: Scalar> Csr<T> {
     /// Builds from raw arrays after validating the CSR invariants:
     /// monotone rowptr, in-bounds strictly-ascending columns per row.
     pub fn from_raw(
@@ -22,7 +24,7 @@ impl Csr {
         cols: usize,
         rowptr: Vec<u32>,
         colidx: Vec<u32>,
-        values: Vec<f64>,
+        values: Vec<T>,
     ) -> Result<Self> {
         if rowptr.len() != rows + 1 {
             return Err(MatrixError::Invalid(format!(
@@ -91,18 +93,19 @@ impl Csr {
     }
 
     /// Memory occupancy in bytes per the paper's Eq. (3):
-    /// `nnz*(S_int + S_float) + S_int*(rows+1)`.
+    /// `nnz*(S_int + S_float) + S_int*(rows+1)`, with `S_float` the
+    /// size of this precision's element.
     pub fn occupancy_bytes(&self) -> usize {
-        self.nnz() * (4 + 8) + 4 * (self.rows + 1)
+        self.nnz() * (4 + T::BYTES) + 4 * (self.rows + 1)
     }
 
     /// Reference sequential SpMV `y += A x` in pure safe Rust. This is
     /// the semantic definition every kernel is tested against.
-    pub fn spmv_ref(&self, x: &[f64], y: &mut [f64]) {
+    pub fn spmv_ref(&self, x: &[T], y: &mut [T]) {
         assert_eq!(x.len(), self.cols);
         assert_eq!(y.len(), self.rows);
         for r in 0..self.rows {
-            let mut sum = 0.0;
+            let mut sum = T::ZERO;
             for k in self.row_range(r) {
                 sum += self.values[k] * x[self.colidx[k] as usize];
             }
@@ -110,20 +113,35 @@ impl Csr {
         }
     }
 
-    /// Materializes as a dense oracle (tests / tiny matrices only).
+    /// Materializes as a **widened-to-f64** dense oracle (tests / tiny
+    /// matrices only). For `T = f32` this is the differential-testing
+    /// reference: the exact f64 product over the f32-truncated values.
     pub fn to_dense(&self) -> Dense {
         let mut d = Dense::zeros(self.rows, self.cols);
         for r in 0..self.rows {
             for k in self.row_range(r) {
-                d.set(r, self.colidx[k] as usize, self.values[k]);
+                d.set(r, self.colidx[k] as usize, self.values[k].to_f64());
             }
         }
         d
     }
 
+    /// Casts the matrix to another precision (same structure, values
+    /// converted through f64). `to_precision::<f32>()` is the entry
+    /// point to the 16-lane `β32` stack.
+    pub fn to_precision<U: Scalar>(&self) -> Csr<U> {
+        Csr {
+            rows: self.rows,
+            cols: self.cols,
+            rowptr: self.rowptr.clone(),
+            colidx: self.colidx.clone(),
+            values: self.values.iter().map(|&v| U::from_f64(v.to_f64())).collect(),
+        }
+    }
+
     /// Extracts the sub-matrix of full rows `[r0, r1)` (used by the
     /// NUMA-split parallel mode to give each thread its own arrays).
-    pub fn row_slice(&self, r0: usize, r1: usize) -> Csr {
+    pub fn row_slice(&self, r0: usize, r1: usize) -> Csr<T> {
         assert!(r0 <= r1 && r1 <= self.rows);
         let a = self.rowptr[r0] as usize;
         let b = self.rowptr[r1] as usize;
@@ -140,7 +158,7 @@ impl Csr {
 
     /// Transposes the matrix (CSR → CSR of the transpose). Used by
     /// generators to symmetrize patterns.
-    pub fn transpose(&self) -> Csr {
+    pub fn transpose(&self) -> Csr<T> {
         let mut rowptr = vec![0u32; self.cols + 1];
         for &c in &self.colidx {
             rowptr[c as usize + 1] += 1;
@@ -149,7 +167,7 @@ impl Csr {
             rowptr[c + 1] += rowptr[c];
         }
         let mut colidx = vec![0u32; self.nnz()];
-        let mut values = vec![0f64; self.nnz()];
+        let mut values = vec![T::ZERO; self.nnz()];
         let mut next = rowptr.clone();
         for r in 0..self.rows {
             for k in self.row_range(r) {
@@ -201,30 +219,66 @@ mod tests {
         let m = paper_fig1();
         // 18*(4+8) + 4*9 = 216 + 36 = 252
         assert_eq!(m.occupancy_bytes(), 252);
+        // f32: values halve, indices stay.
+        assert_eq!(m.to_precision::<f32>().occupancy_bytes(), 18 * 8 + 36);
+    }
+
+    #[test]
+    fn precision_cast_preserves_structure() {
+        let m = paper_fig1();
+        let m32: Csr<f32> = m.to_precision();
+        assert_eq!(m32.rowptr, m.rowptr);
+        assert_eq!(m32.colidx, m.colidx);
+        assert_eq!(m32.values[4], 5.0f32);
+        // Round trip through f32 is exact for these small integers.
+        assert_eq!(m32.to_precision::<f64>(), m);
+    }
+
+    #[test]
+    fn f32_spmv_ref_matches_widened_dense() {
+        let m32: Csr<f32> = paper_fig1().to_precision();
+        let x32: Vec<f32> = (0..8).map(|i| 0.25 * i as f32 - 1.0).collect();
+        let mut y32 = vec![0.0f32; 8];
+        m32.spmv_ref(&x32, &mut y32);
+        let x64: Vec<f64> = x32.iter().map(|&v| v as f64).collect();
+        let want = m32.to_dense().matvec(&x64);
+        for i in 0..8 {
+            assert!((y32[i] as f64 - want[i]).abs() < 1e-5, "row {i}");
+        }
     }
 
     #[test]
     fn invalid_rowptr_rejected() {
-        assert!(Csr::from_raw(2, 2, vec![0, 1], vec![0], vec![1.0]).is_err());
-        assert!(Csr::from_raw(2, 2, vec![0, 2, 1], vec![0, 1], vec![1.0, 2.0])
+        assert!(Csr::<f64>::from_raw(2, 2, vec![0, 1], vec![0], vec![1.0])
             .is_err());
-        assert!(Csr::from_raw(1, 1, vec![1, 1], vec![], vec![]).is_err());
+        assert!(Csr::<f64>::from_raw(
+            2,
+            2,
+            vec![0, 2, 1],
+            vec![0, 1],
+            vec![1.0, 2.0]
+        )
+        .is_err());
+        assert!(Csr::<f64>::from_raw(1, 1, vec![1, 1], vec![], vec![]).is_err());
     }
 
     #[test]
     fn non_ascending_columns_rejected() {
-        assert!(
-            Csr::from_raw(1, 4, vec![0, 2], vec![2, 1], vec![1.0, 2.0]).is_err()
-        );
+        assert!(Csr::<f64>::from_raw(1, 4, vec![0, 2], vec![2, 1], vec![
+            1.0, 2.0
+        ])
+        .is_err());
         // duplicate column
-        assert!(
-            Csr::from_raw(1, 4, vec![0, 2], vec![1, 1], vec![1.0, 2.0]).is_err()
-        );
+        assert!(Csr::<f64>::from_raw(1, 4, vec![0, 2], vec![1, 1], vec![
+            1.0, 2.0
+        ])
+        .is_err());
     }
 
     #[test]
     fn out_of_bounds_column_rejected() {
-        assert!(Csr::from_raw(1, 2, vec![0, 1], vec![5], vec![1.0]).is_err());
+        assert!(Csr::<f64>::from_raw(1, 2, vec![0, 1], vec![5], vec![1.0])
+            .is_err());
     }
 
     #[test]

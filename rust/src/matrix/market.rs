@@ -8,6 +8,7 @@
 //! indices).
 
 use super::{Coo, MatrixError, Result};
+use crate::scalar::Scalar;
 use std::io::{BufRead, BufReader, Read, Write};
 use std::path::Path;
 
@@ -29,8 +30,9 @@ fn err(line: usize, msg: impl Into<String>) -> MatrixError {
     MatrixError::Market { line, msg: msg.into() }
 }
 
-/// Reads a MatrixMarket stream into COO.
-pub fn read_coo<R: Read>(reader: R) -> Result<Coo> {
+/// Reads a MatrixMarket stream into COO at any precision (values are
+/// parsed as f64 and converted through [`Scalar::from_f64`]).
+pub fn read_coo<T: Scalar, R: Read>(reader: R) -> Result<Coo<T>> {
     let mut lines = BufReader::new(reader).lines().enumerate();
 
     // Header line.
@@ -115,6 +117,7 @@ pub fn read_coo<R: Read>(reader: R) -> Result<Coo> {
                     .parse::<f64>()
                     .map_err(|_| err(lno, "bad value"))?,
             };
+            let v = T::from_f64(v);
             coo.push(r - 1, c - 1, v);
             match symmetry {
                 Symmetry::General => {}
@@ -162,7 +165,7 @@ pub fn read_coo<R: Read>(reader: R) -> Result<Coo> {
             for r in 0..rows {
                 let v = vals[c * rows + r];
                 if v != 0.0 {
-                    coo.push(r, c, v);
+                    coo.push(r, c, T::from_f64(v));
                 }
             }
         }
@@ -171,12 +174,12 @@ pub fn read_coo<R: Read>(reader: R) -> Result<Coo> {
 }
 
 /// Reads a `.mtx` file into COO.
-pub fn read_file(path: impl AsRef<Path>) -> Result<Coo> {
+pub fn read_file<T: Scalar>(path: impl AsRef<Path>) -> Result<Coo<T>> {
     read_coo(std::fs::File::open(path)?)
 }
 
 /// Writes a COO matrix as `coordinate real general`.
-pub fn write_coo<W: Write>(mut w: W, coo: &Coo) -> Result<()> {
+pub fn write_coo<T: Scalar, W: Write>(mut w: W, coo: &Coo<T>) -> Result<()> {
     writeln!(w, "%%MatrixMarket matrix coordinate real general")?;
     writeln!(w, "% written by spc5-rs")?;
     writeln!(w, "{} {} {}", coo.rows, coo.cols, coo.entries.len())?;
@@ -187,7 +190,7 @@ pub fn write_coo<W: Write>(mut w: W, coo: &Coo) -> Result<()> {
 }
 
 /// Writes a `.mtx` file.
-pub fn write_file(path: impl AsRef<Path>, coo: &Coo) -> Result<()> {
+pub fn write_file<T: Scalar>(path: impl AsRef<Path>, coo: &Coo<T>) -> Result<()> {
     write_coo(std::fs::File::create(path)?, coo)
 }
 
@@ -204,16 +207,23 @@ mod tests {
 
     #[test]
     fn reads_general_real() {
-        let coo = read_coo(SIMPLE.as_bytes()).unwrap();
+        let coo = read_coo::<f64, _>(SIMPLE.as_bytes()).unwrap();
         assert_eq!((coo.rows, coo.cols), (3, 4));
         assert_eq!(coo.entries, vec![(0, 0, 2.5), (1, 2, -1.0), (2, 3, 0.07)]);
+    }
+
+    #[test]
+    fn reads_f32() {
+        let coo = read_coo::<f32, _>(SIMPLE.as_bytes()).unwrap();
+        assert_eq!((coo.rows, coo.cols), (3, 4));
+        assert_eq!(coo.entries[0], (0, 0, 2.5f32));
     }
 
     #[test]
     fn reads_symmetric() {
         let src = "%%MatrixMarket matrix coordinate real symmetric\n\
                    3 3 2\n1 1 4\n3 1 5\n";
-        let coo = read_coo(src.as_bytes()).unwrap();
+        let coo = read_coo::<f64, _>(src.as_bytes()).unwrap();
         // diagonal kept once, off-diagonal mirrored
         assert_eq!(coo.entries.len(), 3);
         let csr = coo.to_csr().unwrap();
@@ -225,7 +235,7 @@ mod tests {
     fn reads_skew_symmetric() {
         let src = "%%MatrixMarket matrix coordinate real skew-symmetric\n\
                    2 2 1\n2 1 3\n";
-        let csr = read_coo(src.as_bytes()).unwrap().to_csr().unwrap();
+        let csr = read_coo::<f64, _>(src.as_bytes()).unwrap().to_csr().unwrap();
         assert_eq!(csr.to_dense().get(1, 0), 3.0);
         assert_eq!(csr.to_dense().get(0, 1), -3.0);
     }
@@ -234,7 +244,7 @@ mod tests {
     fn reads_pattern() {
         let src = "%%MatrixMarket matrix coordinate pattern general\n\
                    2 2 2\n1 2\n2 1\n";
-        let coo = read_coo(src.as_bytes()).unwrap();
+        let coo = read_coo::<f64, _>(src.as_bytes()).unwrap();
         assert!(coo.entries.iter().all(|&(_, _, v)| v == 1.0));
     }
 
@@ -242,24 +252,24 @@ mod tests {
     fn reads_array() {
         let src = "%%MatrixMarket matrix array real general\n\
                    2 2\n1\n0\n0\n4\n";
-        let csr = read_coo(src.as_bytes()).unwrap().to_csr().unwrap();
+        let csr = read_coo::<f64, _>(src.as_bytes()).unwrap().to_csr().unwrap();
         assert_eq!(csr.nnz(), 2);
         assert_eq!(csr.to_dense().get(1, 1), 4.0);
     }
 
     #[test]
     fn roundtrip() {
-        let coo = read_coo(SIMPLE.as_bytes()).unwrap();
+        let coo = read_coo::<f64, _>(SIMPLE.as_bytes()).unwrap();
         let mut buf = Vec::new();
         write_coo(&mut buf, &coo).unwrap();
-        let back = read_coo(buf.as_slice()).unwrap();
+        let back = read_coo::<f64, _>(buf.as_slice()).unwrap();
         assert_eq!(coo.entries, back.entries);
     }
 
     #[test]
     fn rejects_bad_header() {
-        assert!(read_coo("garbage\n1 1 0\n".as_bytes()).is_err());
-        assert!(read_coo(
+        assert!(read_coo::<f64, _>("garbage\n1 1 0\n".as_bytes()).is_err());
+        assert!(read_coo::<f64, _>(
             "%%MatrixMarket matrix teapot real general\n1 1 0\n".as_bytes()
         )
         .is_err());
@@ -268,29 +278,29 @@ mod tests {
     #[test]
     fn rejects_count_mismatch() {
         let src = "%%MatrixMarket matrix coordinate real general\n2 2 3\n1 1 1\n";
-        assert!(read_coo(src.as_bytes()).is_err());
+        assert!(read_coo::<f64, _>(src.as_bytes()).is_err());
     }
 
     #[test]
     fn rejects_out_of_range_index() {
         let src = "%%MatrixMarket matrix coordinate real general\n2 2 1\n3 1 1\n";
-        assert!(read_coo(src.as_bytes()).is_err());
+        assert!(read_coo::<f64, _>(src.as_bytes()).is_err());
     }
 
     #[test]
     fn rejects_truncated_entry() {
         let src = "%%MatrixMarket matrix coordinate real general\n2 2 1\n1 1\n";
-        assert!(read_coo(src.as_bytes()).is_err());
+        assert!(read_coo::<f64, _>(src.as_bytes()).is_err());
     }
 
     #[test]
     fn rejects_empty_file() {
-        assert!(read_coo("".as_bytes()).is_err());
+        assert!(read_coo::<f64, _>("".as_bytes()).is_err());
     }
 
     #[test]
     fn one_indexed_conversion() {
-        let coo = read_coo(SIMPLE.as_bytes()).unwrap();
+        let coo = read_coo::<f64, _>(SIMPLE.as_bytes()).unwrap();
         assert_eq!(coo.entries[0].0, 0); // 1-indexed in file → 0-indexed
     }
 }

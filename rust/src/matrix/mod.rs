@@ -1,4 +1,5 @@
-//! Sparse-matrix substrate: COO and CSR containers, a dense oracle,
+//! Sparse-matrix substrate: COO and CSR containers (generic over
+//! [`crate::scalar::Scalar`], `f64` by default), a dense oracle,
 //! MatrixMarket I/O and the synthetic benchmark-suite generators that
 //! stand in for the paper's SuiteSparse matrix sets.
 
@@ -14,14 +15,43 @@ pub use csr::Csr;
 pub use dense::Dense;
 
 /// Errors produced by the matrix substrate.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum MatrixError {
-    #[error("invalid matrix data: {0}")]
+    /// Structurally invalid matrix data.
     Invalid(String),
-    #[error("matrix market parse error at line {line}: {msg}")]
+    /// MatrixMarket parse failure.
     Market { line: usize, msg: String },
-    #[error(transparent)]
-    Io(#[from] std::io::Error),
+    /// Underlying I/O failure.
+    Io(std::io::Error),
+}
+
+impl std::fmt::Display for MatrixError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            MatrixError::Invalid(msg) => {
+                write!(f, "invalid matrix data: {msg}")
+            }
+            MatrixError::Market { line, msg } => {
+                write!(f, "matrix market parse error at line {line}: {msg}")
+            }
+            MatrixError::Io(e) => write!(f, "{e}"),
+        }
+    }
+}
+
+impl std::error::Error for MatrixError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            MatrixError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for MatrixError {
+    fn from(e: std::io::Error) -> Self {
+        MatrixError::Io(e)
+    }
 }
 
 pub type Result<T> = std::result::Result<T, MatrixError>;

@@ -16,6 +16,7 @@
 //!   fills `β(r,c)` blocks.
 
 use super::{Coo, Csr};
+use crate::scalar::Scalar;
 
 /// A permutation: `perm[new_index] = old_index`.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -54,7 +55,11 @@ impl Permutation {
 
 /// Applies row and column permutations to a matrix:
 /// `B[i, j] = A[row_perm[i], col_perm[j]]`.
-pub fn permute(csr: &Csr, rows: &Permutation, cols: &Permutation) -> Csr {
+pub fn permute<T: Scalar>(
+    csr: &Csr<T>,
+    rows: &Permutation,
+    cols: &Permutation,
+) -> Csr<T> {
     assert_eq!(rows.perm.len(), csr.rows);
     assert_eq!(cols.perm.len(), csr.cols);
     let col_inv = cols.inverse();
@@ -69,7 +74,7 @@ pub fn permute(csr: &Csr, rows: &Permutation, cols: &Permutation) -> Csr {
 }
 
 /// Permutes a vector into the reordered space: `out[i] = x[perm[i]]`.
-pub fn permute_vec(x: &[f64], p: &Permutation) -> Vec<f64> {
+pub fn permute_vec<T: Scalar>(x: &[T], p: &Permutation) -> Vec<T> {
     p.perm.iter().map(|&old| x[old as usize]).collect()
 }
 
@@ -77,7 +82,7 @@ pub fn permute_vec(x: &[f64], p: &Permutation) -> Vec<f64> {
 /// square matrix. Returns a row/column permutation that reduces
 /// bandwidth (and, for FEM-class matrices, concentrates the pattern
 /// near the diagonal, improving block fill).
-pub fn cuthill_mckee(csr: &Csr) -> Permutation {
+pub fn cuthill_mckee<T: Scalar>(csr: &Csr<T>) -> Permutation {
     assert_eq!(csr.rows, csr.cols, "RCM needs a square matrix");
     let n = csr.rows;
     // Symmetrized adjacency (pattern of A + Aᵀ, diagonal dropped).
@@ -138,7 +143,7 @@ pub fn cuthill_mckee(csr: &Csr) -> Permutation {
 /// columns are visited in a nearest-neighbour walk where closeness is
 /// co-occurrence weight, sampled over a bounded number of rows per
 /// column to stay `O(nnz·w)`.
-pub fn column_pack(csr: &Csr) -> Permutation {
+pub fn column_pack<T: Scalar>(csr: &Csr<T>) -> Permutation {
     let n = csr.cols;
     let t = csr.transpose(); // rows of `t` = columns of `csr`
     let mut visited = vec![false; n];
@@ -180,7 +185,7 @@ pub fn column_pack(csr: &Csr) -> Permutation {
 
 /// Bandwidth of a matrix (max |r - c| over nonzeros) — the quantity RCM
 /// minimizes; used by tests and the ablation bench.
-pub fn bandwidth(csr: &Csr) -> usize {
+pub fn bandwidth<T: Scalar>(csr: &Csr<T>) -> usize {
     let mut bw = 0usize;
     for r in 0..csr.rows {
         for k in csr.row_range(r) {

@@ -27,6 +27,10 @@
 //! - Kronecker graph (`kron_g500-logn21`) — RMAT, worst-case fill ≈ 1.
 //! - uniform scatter (`ns3Da`, `cage15`) — random columns, fill ≈ 1.
 //! - dense (`Dense-8000` → Dense-2000 surrogate).
+//!
+//! Generators always assemble in f64 (deterministic double values);
+//! drive the single-precision (`β32`) stack by casting afterwards
+//! with [`Csr::to_precision`].
 
 use super::{Coo, Csr};
 use crate::util::Rng;

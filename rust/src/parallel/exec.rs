@@ -1,4 +1,5 @@
-//! Threaded SpMV execution (paper §Parallelization).
+//! Threaded SpMV execution (paper §Parallelization), generic over the
+//! element precision.
 //!
 //! Construction partitions the block matrix into per-thread spans with
 //! the paper's balancing rule. Each call to [`ParallelSpmv::spmv`]
@@ -17,8 +18,9 @@
 
 use super::partition::{partition_intervals, ThreadSpan};
 use crate::formats::{BlockMatrix, BlockSize};
-use crate::kernels::avx512::{self, Span};
+use crate::kernels::avx512::Span;
 use crate::kernels::scalar;
+use crate::scalar::Scalar;
 
 /// Memory placement strategy for the worker threads.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -36,15 +38,15 @@ pub enum ParallelStrategy {
 }
 
 /// One thread's privately-owned sub-matrix (NumaSplit mode).
-struct LocalPart {
+struct LocalPart<T: Scalar> {
     rowptr: Vec<u32>,
     headers: Vec<u8>,
-    values: Vec<f64>,
+    values: Vec<T>,
     rows: usize,
 }
 
 /// A parallel SpMV executor bound to one converted matrix.
-pub struct ParallelSpmv {
+pub struct ParallelSpmv<T: Scalar = f64> {
     bs: BlockSize,
     rows: usize,
     cols: usize,
@@ -52,16 +54,16 @@ pub struct ParallelSpmv {
     test: bool,
     spans: Vec<ThreadSpan>,
     val_ends: Vec<usize>,
-    matrix: BlockMatrix,
-    locals: Vec<LocalPart>,
+    matrix: BlockMatrix<T>,
+    locals: Vec<LocalPart<T>>,
     strategy: ParallelStrategy,
 }
 
-impl ParallelSpmv {
+impl<T: Scalar> ParallelSpmv<T> {
     /// Builds the executor: partitions the matrix for `n_threads` and,
     /// in NumaSplit mode, materializes the per-thread copies.
     pub fn new(
-        matrix: BlockMatrix,
+        matrix: BlockMatrix<T>,
         n_threads: usize,
         strategy: ParallelStrategy,
         test: bool,
@@ -130,17 +132,17 @@ impl ParallelSpmv {
     }
 
     /// Underlying block matrix (shared arrays).
-    pub fn matrix(&self) -> &BlockMatrix {
+    pub fn matrix(&self) -> &BlockMatrix<T> {
         &self.matrix
     }
 
     /// Parallel `y += A·x`.
-    pub fn spmv(&self, x: &[f64], y: &mut [f64]) {
+    pub fn spmv(&self, x: &[T], y: &mut [T]) {
         assert_eq!(x.len(), self.cols);
         assert_eq!(y.len(), self.rows);
 
         // Split y into per-span disjoint slices (the merge target).
-        let mut y_parts: Vec<&mut [f64]> = Vec::with_capacity(self.spans.len());
+        let mut y_parts: Vec<&mut [T]> = Vec::with_capacity(self.spans.len());
         let mut rest = y;
         let mut covered = 0usize;
         for s in &self.spans {
@@ -156,7 +158,7 @@ impl ParallelSpmv {
                 scope.spawn(move || {
                     // Per-thread working vector (paper: "we pre-allocate
                     // a working vector of the same size").
-                    let mut work = vec![0.0f64; y_part.len()];
+                    let mut work = vec![T::ZERO; y_part.len()];
                     let span = self.span_view(tid, &s);
                     if self.strategy == ParallelStrategy::NumaSplitXCopy {
                         // Paper conclusion: duplicate x on every memory
@@ -176,7 +178,7 @@ impl ParallelSpmv {
         });
     }
 
-    fn span_view<'a>(&'a self, tid: usize, s: &ThreadSpan) -> Span<'a> {
+    fn span_view<'a>(&'a self, tid: usize, s: &ThreadSpan) -> Span<'a, T> {
         match self.strategy {
             ParallelStrategy::Shared => Span::slice(
                 &self.matrix,
@@ -201,12 +203,18 @@ impl ParallelSpmv {
     }
 }
 
-fn run_span(span: Span<'_>, bs: BlockSize, x: &[f64], y: &mut [f64], test: bool) {
+fn run_span<T: Scalar>(
+    span: Span<'_, T>,
+    bs: BlockSize,
+    x: &[T],
+    y: &mut [T],
+    test: bool,
+) {
     if span.rowptr.len() < 2 {
         return;
     }
     if crate::util::avx512_available()
-        && avx512::spmv_span(span, bs, x, y, test)
+        && T::spmv_span_simd(span, bs, x, y, test)
     {
         return;
     }
@@ -219,10 +227,10 @@ fn run_span(span: Span<'_>, bs: BlockSize, x: &[f64], y: &mut [f64], test: bool)
 mod tests {
     use super::*;
     use crate::formats::csr_to_block;
-    use crate::matrix::suite;
+    use crate::matrix::{suite, Csr};
 
     fn check(
-        csr: &crate::matrix::Csr,
+        csr: &Csr,
         bs: BlockSize,
         threads: usize,
         strategy: ParallelStrategy,
@@ -276,6 +284,37 @@ mod tests {
                 3,
                 ParallelStrategy::NumaSplitXCopy,
             );
+        }
+    }
+
+    #[test]
+    fn f32_parallel_matches_reference() {
+        // The 16-lane f32 stack through the span-parallel runtime.
+        for sm in suite::test_subset().iter().take(4) {
+            let csr32: Csr<f32> = sm.csr.to_precision();
+            for bs in [BlockSize::new(1, 16), BlockSize::new(4, 16)] {
+                let bm = csr_to_block(&csr32, bs).unwrap();
+                for strategy in
+                    [ParallelStrategy::Shared, ParallelStrategy::NumaSplit]
+                {
+                    let p = ParallelSpmv::new(bm.clone(), 3, strategy, false);
+                    let x: Vec<f32> = (0..csr32.cols)
+                        .map(|i| ((i * 11) % 23) as f32 * 0.125 - 1.0)
+                        .collect();
+                    let mut want = vec![0.0f32; csr32.rows];
+                    csr32.spmv_ref(&x, &mut want);
+                    let mut got = vec![0.0f32; csr32.rows];
+                    p.spmv(&x, &mut got);
+                    for i in 0..csr32.rows {
+                        assert!(
+                            (got[i] - want[i]).abs()
+                                <= 2e-4 * want[i].abs().max(1.0),
+                            "{} {bs} {strategy:?} row {i}",
+                            sm.name
+                        );
+                    }
+                }
+            }
         }
     }
 

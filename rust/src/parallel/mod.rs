@@ -16,4 +16,4 @@ pub mod exec;
 pub mod partition;
 
 pub use exec::{ParallelSpmv, ParallelStrategy};
-pub use partition::{partition_intervals, ThreadSpan};
+pub use partition::{balanced_prefix_split, partition_intervals, ThreadSpan};

@@ -6,6 +6,7 @@
 //! `|(tid+1)·N_b/t − N_blocks[row]| < |(tid+1)·N_b/t − N_blocks[row+1]|`."
 
 use crate::formats::BlockMatrix;
+use crate::scalar::{MaskWord, Scalar};
 
 /// The row-interval span assigned to one thread.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -26,15 +27,50 @@ pub struct ThreadSpan {
     pub val_begin: usize,
 }
 
+/// Splits the positions `0..prefix.len()-1` into `n` contiguous
+/// chunks whose prefix-sum weights are approximately equal, using the
+/// paper's absolute-difference test: a chunk keeps growing while doing
+/// so brings its cumulative weight closer to `(tid+1)·total/n`.
+///
+/// `prefix` is any monotone prefix-sum array (`prefix[i]` = weight
+/// before item `i`): block counts per row interval here, nnz per row
+/// for the engine's parallel-CSR path.
+pub fn balanced_prefix_split(prefix: &[u32], n: usize) -> Vec<(usize, usize)> {
+    assert!(n > 0);
+    assert!(!prefix.is_empty());
+    let items = prefix.len() - 1;
+    let per = prefix[items] as f64 / n as f64;
+    let mut chunks = Vec::with_capacity(n);
+    let mut i = 0usize;
+    for tid in 0..n {
+        let begin = i;
+        if tid == n - 1 {
+            i = items;
+        } else {
+            let target = (tid + 1) as f64 * per;
+            while i < items {
+                let here = prefix[i] as f64;
+                let next = prefix[i + 1] as f64;
+                if (target - here).abs() < (target - next).abs() {
+                    break;
+                }
+                i += 1;
+            }
+        }
+        chunks.push((begin, i));
+    }
+    chunks
+}
+
 /// Splits the matrix's row intervals into `n_threads` spans using the
 /// paper's balancing rule. Every interval is assigned to exactly one
 /// thread; spans are contiguous and ordered; empty spans are possible
 /// for degenerate matrices (fewer blocks than threads).
-pub fn partition_intervals(bm: &BlockMatrix, n_threads: usize) -> Vec<ThreadSpan> {
-    assert!(n_threads > 0);
-    let intervals = bm.intervals();
+pub fn partition_intervals<T: Scalar>(
+    bm: &BlockMatrix<T>,
+    n_threads: usize,
+) -> Vec<ThreadSpan> {
     let n_blocks = bm.n_blocks();
-    let per_thread = n_blocks as f64 / n_threads as f64;
 
     // Prefix popcounts per block → value offsets for each span start.
     let r = bm.bs.r;
@@ -48,38 +84,22 @@ pub fn partition_intervals(bm: &BlockMatrix, n_threads: usize) -> Vec<ThreadSpan
         val_prefix.push(acc);
     }
 
-    let mut spans = Vec::with_capacity(n_threads);
-    let mut it = 0usize;
-    for tid in 0..n_threads {
-        let begin = it;
-        let target = (tid + 1) as f64 * per_thread;
-        if tid == n_threads - 1 {
-            it = intervals;
-        } else {
-            // Greedily add intervals while doing so brings the cumulative
-            // block count closer to the target (the paper's test).
-            while it < intervals {
-                let here = bm.block_rowptr[it] as f64;
-                let next = bm.block_rowptr[it + 1] as f64;
-                if (target - here).abs() < (target - next).abs() {
-                    break;
-                }
-                it += 1;
+    balanced_prefix_split(&bm.block_rowptr, n_threads)
+        .into_iter()
+        .map(|(begin, it)| {
+            let block_begin = bm.block_rowptr[begin] as usize;
+            let block_end = bm.block_rowptr[it] as usize;
+            ThreadSpan {
+                interval_begin: begin,
+                interval_end: it,
+                row_begin: (begin * r).min(bm.rows),
+                row_end: (it * r).min(bm.rows),
+                block_begin,
+                block_end,
+                val_begin: val_prefix[block_begin],
             }
-        }
-        let block_begin = bm.block_rowptr[begin] as usize;
-        let block_end = bm.block_rowptr[it] as usize;
-        spans.push(ThreadSpan {
-            interval_begin: begin,
-            interval_end: it,
-            row_begin: (begin * r).min(bm.rows),
-            row_end: (it * r).min(bm.rows),
-            block_begin,
-            block_end,
-            val_begin: val_prefix[block_begin],
-        });
-    }
-    spans
+        })
+        .collect()
 }
 
 #[cfg(test)]

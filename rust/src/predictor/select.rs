@@ -13,6 +13,7 @@ use crate::formats::stats::block_stats;
 use crate::formats::BlockSize;
 use crate::kernels::KernelKind;
 use crate::matrix::Csr;
+use crate::scalar::Scalar;
 use std::collections::HashMap;
 
 /// Result of a selection.
@@ -34,7 +35,10 @@ fn kernel_avg(kind: KernelKind, stats: &HashMap<BlockSize, f64>) -> f64 {
 }
 
 /// Computes the per-size `Avg(r,c)` map with the cheap scan.
-pub fn avg_profile(csr: &Csr, kinds: &[KernelKind]) -> HashMap<BlockSize, f64> {
+pub fn avg_profile<T: Scalar>(
+    csr: &Csr<T>,
+    kinds: &[KernelKind],
+) -> HashMap<BlockSize, f64> {
     let mut sizes: Vec<BlockSize> = kinds
         .iter()
         .map(|k| k.block_size().unwrap_or(BlockSize::new(1, 8)))
@@ -85,8 +89,8 @@ pub fn fit_parallel(
 }
 
 /// Sequential selection: argmax over the candidates' predicted speed.
-pub fn select_sequential(
-    csr: &Csr,
+pub fn select_sequential<T: Scalar>(
+    csr: &Csr<T>,
     store: &RecordStore,
     kinds: &[KernelKind],
 ) -> Option<Selection> {
@@ -96,8 +100,8 @@ pub fn select_sequential(
 }
 
 /// Parallel selection at a given thread count.
-pub fn select_parallel(
-    csr: &Csr,
+pub fn select_parallel<T: Scalar>(
+    csr: &Csr<T>,
     store: &RecordStore,
     kinds: &[KernelKind],
     threads: usize,

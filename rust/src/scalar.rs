@@ -1,0 +1,358 @@
+//! The sealed [`Scalar`] trait — the precision axis of the crate.
+//!
+//! The paper notes AVX-512 holds "16 single precision or eight double
+//! precision floating point values"; everything downstream of that one
+//! sentence is captured here. A [`Scalar`] bundles:
+//!
+//! - the element type (`f64` or `f32`),
+//! - its per-block-row **mask word** ([`Scalar::Mask`]): `u8` rows ×
+//!   8 lanes for `f64`, `u16` rows × 16 lanes for `f32`,
+//! - the AVX-512 span dispatch hook ([`Scalar::spmv_span_simd`]) that
+//!   routes a `β(r,c)` span to the `vexpandpd` / `vexpandps` kernels.
+//!
+//! `Csr<T>`, `BlockMatrix<T>`, `KernelSet<T>`, `SpmvEngine<T>` and
+//! `SpmvService<T>` are all generic over this trait, with `T = f64` as
+//! the default type parameter so double precision code reads exactly
+//! like it did before the API became generic.
+//!
+//! The trait is **sealed**: the format invariants, the unsafe kernels
+//! and the header layout are only proven for these two instantiations.
+
+use crate::formats::BlockSize;
+use crate::kernels::avx512::{self, Span};
+
+mod private {
+    pub trait Sealed {}
+    impl Sealed for f32 {}
+    impl Sealed for f64 {}
+    impl Sealed for u8 {}
+    impl Sealed for u16 {}
+}
+
+/// A per-block-row bitmask word (`u8` for β, `u16` for β32).
+///
+/// Bit `k` set ⇔ the block row holds a value at column `col0 + k`.
+pub trait MaskWord:
+    private::Sealed
+    + Copy
+    + PartialEq
+    + Eq
+    + std::hash::Hash
+    + std::fmt::Debug
+    + Send
+    + Sync
+    + 'static
+{
+    /// Lanes addressable by this mask (8 or 16).
+    const BITS: usize;
+    /// Bytes one mask occupies in the interleaved header stream.
+    const BYTES: usize;
+    /// The empty mask.
+    const ZERO: Self;
+
+    /// A mask with only bit `k` set.
+    fn bit(k: usize) -> Self;
+    /// Sets bit `k` in place.
+    fn set(&mut self, k: usize);
+    /// Whether bit `k` is set.
+    fn test(self, k: usize) -> bool;
+    /// Number of set bits.
+    fn count_ones(self) -> u32;
+    /// Index of the lowest set bit (`BITS` when empty).
+    fn trailing_zeros(self) -> u32;
+    /// The mask with the low `c` bits set (`c <= BITS`).
+    fn low_bits(c: usize) -> Self;
+    /// Whether any bit at position `>= c` is set.
+    fn any_above(self, c: usize) -> bool;
+    /// Whether no bit is set.
+    fn is_zero(self) -> bool;
+    /// Appends the little-endian byte encoding to a header stream.
+    fn push_le(self, out: &mut Vec<u8>);
+    /// Reads a mask from the first `BYTES` bytes of a header slice.
+    fn read_le(bytes: &[u8]) -> Self;
+}
+
+impl MaskWord for u8 {
+    const BITS: usize = 8;
+    const BYTES: usize = 1;
+    const ZERO: u8 = 0;
+
+    #[inline]
+    fn bit(k: usize) -> u8 {
+        1u8 << k
+    }
+    #[inline]
+    fn set(&mut self, k: usize) {
+        *self |= 1u8 << k;
+    }
+    #[inline]
+    fn test(self, k: usize) -> bool {
+        self & (1u8 << k) != 0
+    }
+    #[inline]
+    fn count_ones(self) -> u32 {
+        u8::count_ones(self)
+    }
+    #[inline]
+    fn trailing_zeros(self) -> u32 {
+        u8::trailing_zeros(self)
+    }
+    #[inline]
+    fn low_bits(c: usize) -> u8 {
+        if c >= 8 {
+            0xFF
+        } else {
+            (1u8 << c) - 1
+        }
+    }
+    #[inline]
+    fn any_above(self, c: usize) -> bool {
+        self & !Self::low_bits(c) != 0
+    }
+    #[inline]
+    fn is_zero(self) -> bool {
+        self == 0
+    }
+    #[inline]
+    fn push_le(self, out: &mut Vec<u8>) {
+        out.push(self);
+    }
+    #[inline]
+    fn read_le(bytes: &[u8]) -> u8 {
+        bytes[0]
+    }
+}
+
+impl MaskWord for u16 {
+    const BITS: usize = 16;
+    const BYTES: usize = 2;
+    const ZERO: u16 = 0;
+
+    #[inline]
+    fn bit(k: usize) -> u16 {
+        1u16 << k
+    }
+    #[inline]
+    fn set(&mut self, k: usize) {
+        *self |= 1u16 << k;
+    }
+    #[inline]
+    fn test(self, k: usize) -> bool {
+        self & (1u16 << k) != 0
+    }
+    #[inline]
+    fn count_ones(self) -> u32 {
+        u16::count_ones(self)
+    }
+    #[inline]
+    fn trailing_zeros(self) -> u32 {
+        u16::trailing_zeros(self)
+    }
+    #[inline]
+    fn low_bits(c: usize) -> u16 {
+        if c >= 16 {
+            0xFFFF
+        } else {
+            (1u16 << c) - 1
+        }
+    }
+    #[inline]
+    fn any_above(self, c: usize) -> bool {
+        self & !Self::low_bits(c) != 0
+    }
+    #[inline]
+    fn is_zero(self) -> bool {
+        self == 0
+    }
+    #[inline]
+    fn push_le(self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.to_le_bytes());
+    }
+    #[inline]
+    fn read_le(bytes: &[u8]) -> u16 {
+        u16::from_le_bytes([bytes[0], bytes[1]])
+    }
+}
+
+/// A floating-point element type the SPC5 stack is instantiated at.
+pub trait Scalar:
+    private::Sealed
+    + Copy
+    + Default
+    + PartialEq
+    + PartialOrd
+    + std::fmt::Debug
+    + std::fmt::Display
+    + std::fmt::LowerExp
+    + std::ops::Add<Output = Self>
+    + std::ops::Sub<Output = Self>
+    + std::ops::Mul<Output = Self>
+    + std::ops::Div<Output = Self>
+    + std::ops::Neg<Output = Self>
+    + std::ops::AddAssign
+    + std::ops::SubAssign
+    + std::ops::MulAssign
+    + Send
+    + Sync
+    + 'static
+{
+    /// Per-block-row mask word (`u8` for f64, `u16` for f32).
+    type Mask: MaskWord;
+
+    /// Additive identity.
+    const ZERO: Self;
+    /// Multiplicative identity.
+    const ONE: Self;
+    /// Lanes in a 512-bit vector (8 for f64, 16 for f32).
+    const LANES: usize;
+    /// Bytes per element.
+    const BYTES: usize;
+    /// Human-readable name ("f64" / "f32").
+    const NAME: &'static str;
+
+    /// Lossy conversion from double precision.
+    fn from_f64(v: f64) -> Self;
+    /// Widening conversion to double precision.
+    fn to_f64(self) -> f64;
+    /// Absolute value.
+    fn abs(self) -> Self;
+    /// Whether the value is neither infinite nor NaN.
+    fn is_finite(self) -> bool;
+
+    /// Runs one `β(r,c)` span through this scalar's AVX-512 kernels.
+    /// Returns `false` when no specialization exists for `bs` (or the
+    /// host lacks AVX-512); the caller falls back to the portable
+    /// Algorithm-1 kernel.
+    fn spmv_span_simd(
+        span: Span<'_, Self>,
+        bs: BlockSize,
+        x: &[Self],
+        y: &mut [Self],
+        test: bool,
+    ) -> bool;
+}
+
+impl Scalar for f64 {
+    type Mask = u8;
+
+    const ZERO: f64 = 0.0;
+    const ONE: f64 = 1.0;
+    const LANES: usize = 8;
+    const BYTES: usize = 8;
+    const NAME: &'static str = "f64";
+
+    #[inline]
+    fn from_f64(v: f64) -> f64 {
+        v
+    }
+    #[inline]
+    fn to_f64(self) -> f64 {
+        self
+    }
+    #[inline]
+    fn abs(self) -> f64 {
+        f64::abs(self)
+    }
+    #[inline]
+    fn is_finite(self) -> bool {
+        f64::is_finite(self)
+    }
+
+    #[inline]
+    fn spmv_span_simd(
+        span: Span<'_, f64>,
+        bs: BlockSize,
+        x: &[f64],
+        y: &mut [f64],
+        test: bool,
+    ) -> bool {
+        avx512::spmv_span_f64(span, bs, x, y, test)
+    }
+}
+
+impl Scalar for f32 {
+    type Mask = u16;
+
+    const ZERO: f32 = 0.0;
+    const ONE: f32 = 1.0;
+    const LANES: usize = 16;
+    const BYTES: usize = 4;
+    const NAME: &'static str = "f32";
+
+    #[inline]
+    fn from_f64(v: f64) -> f32 {
+        v as f32
+    }
+    #[inline]
+    fn to_f64(self) -> f64 {
+        self as f64
+    }
+    #[inline]
+    fn abs(self) -> f32 {
+        f32::abs(self)
+    }
+    #[inline]
+    fn is_finite(self) -> bool {
+        f32::is_finite(self)
+    }
+
+    #[inline]
+    fn spmv_span_simd(
+        span: Span<'_, f32>,
+        bs: BlockSize,
+        x: &[f32],
+        y: &mut [f32],
+        test: bool,
+    ) -> bool {
+        avx512::spmv_span_f32(span, bs, x, y, test)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mask_word_bit_ops() {
+        assert_eq!(<u8 as MaskWord>::low_bits(8), 0xFF);
+        assert_eq!(<u8 as MaskWord>::low_bits(3), 0b111);
+        assert_eq!(<u16 as MaskWord>::low_bits(16), 0xFFFF);
+        assert_eq!(<u16 as MaskWord>::low_bits(9), 0x1FF);
+        let mut m = <u16 as MaskWord>::ZERO;
+        m.set(0);
+        m.set(15);
+        assert!(m.test(0) && m.test(15) && !m.test(7));
+        assert_eq!(MaskWord::count_ones(m), 2);
+        assert_eq!(MaskWord::trailing_zeros(m), 0);
+        assert!(m.any_above(15));
+        assert!(!m.any_above(16));
+    }
+
+    #[test]
+    fn mask_word_le_roundtrip() {
+        let mut buf = Vec::new();
+        0xABu8.push_le(&mut buf);
+        0xBEEFu16.push_le(&mut buf);
+        assert_eq!(buf, vec![0xAB, 0xEF, 0xBE]);
+        assert_eq!(<u8 as MaskWord>::read_le(&buf[0..]), 0xAB);
+        assert_eq!(<u16 as MaskWord>::read_le(&buf[1..]), 0xBEEF);
+    }
+
+    #[test]
+    fn scalar_constants_line_up() {
+        // One 512-bit vector = LANES elements = 64 bytes, and the mask
+        // addresses exactly LANES lanes.
+        assert_eq!(f64::LANES * f64::BYTES, 64);
+        assert_eq!(f32::LANES * f32::BYTES, 64);
+        assert_eq!(<<f64 as Scalar>::Mask as MaskWord>::BITS, f64::LANES);
+        assert_eq!(<<f32 as Scalar>::Mask as MaskWord>::BITS, f32::LANES);
+    }
+
+    #[test]
+    fn precision_conversions() {
+        assert_eq!(f32::from_f64(1.5), 1.5f32);
+        assert_eq!(Scalar::to_f64(2.5f32), 2.5f64);
+        assert!(Scalar::is_finite(1.0f64));
+        assert!(!Scalar::is_finite(f32::NAN));
+    }
+}

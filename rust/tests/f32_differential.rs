@@ -1,0 +1,150 @@
+//! Differential tests for the single-precision stack: the generic
+//! `spmv_block::<f32>` (and, when the host supports it, the AVX-512
+//! `vexpandps` path it dispatches to) is checked against a
+//! **widened-to-f64 dense oracle** — the exact double-precision product
+//! over the f32-truncated values — with an f32-appropriate relative
+//! tolerance, across the suite generators and every β32 size.
+
+use spc5::formats::{csr_to_block, BlockSize};
+use spc5::kernels::{scalar, spmv_block};
+use spc5::matrix::{suite, Csr};
+
+/// Every size the f32 stack serves: the paper's six plus the 16-lane
+/// β32 sizes.
+fn f32_sizes() -> Vec<BlockSize> {
+    BlockSize::PAPER_SIZES
+        .into_iter()
+        .chain(BlockSize::F32_WIDE_SIZES)
+        .collect()
+}
+
+/// Per-row error budget: `coeff · Σ|a_rc·x_c|` models worst-case f32
+/// accumulation error (each of the ≤ few hundred terms contributes at
+/// most one half-ulp of the running magnitude), plus a small absolute
+/// floor for all-cancelling rows.
+fn row_tolerances(csr32: &Csr<f32>, x: &[f32], coeff: f64) -> Vec<f64> {
+    let mut tol = vec![1e-5f64; csr32.rows];
+    for r in 0..csr32.rows {
+        let mut l1 = 0.0f64;
+        for k in csr32.row_range(r) {
+            l1 += (csr32.values[k] as f64 * x[csr32.colidx[k] as usize] as f64)
+                .abs();
+        }
+        tol[r] += coeff * l1;
+    }
+    tol
+}
+
+/// The widened oracle: the f64 dense product over the f32-truncated
+/// values. Materialized literally for small matrices; evaluated
+/// sparsely (identical sums — skipped terms are exact zeros) when the
+/// dense array would be large.
+fn widened_oracle(csr32: &Csr<f32>, x: &[f32]) -> Vec<f64> {
+    let x64: Vec<f64> = x.iter().map(|&v| v as f64).collect();
+    if csr32.rows * csr32.cols <= 1_000_000 {
+        return csr32.to_dense().matvec(&x64);
+    }
+    let csr64: Csr<f64> = csr32.to_precision();
+    let mut y = vec![0.0f64; csr64.rows];
+    csr64.spmv_ref(&x64, &mut y);
+    y
+}
+
+fn bench_x(cols: usize) -> Vec<f32> {
+    (0..cols).map(|i| ((i * 13) % 29) as f32 * 0.125 - 1.75).collect()
+}
+
+#[test]
+fn f32_spmv_block_matches_widened_oracle_across_suite() {
+    for sm in suite::test_subset() {
+        let csr32 = sm.csr.to_precision::<f32>();
+        let x = bench_x(csr32.cols);
+        let want = widened_oracle(&csr32, &x);
+        let tol = row_tolerances(&csr32, &x, 1e-4);
+        for bs in f32_sizes() {
+            let bm = csr_to_block(&csr32, bs).unwrap();
+            let mut y = vec![0.0f32; csr32.rows];
+            spmv_block(&bm, &x, &mut y, false);
+            for i in 0..csr32.rows {
+                assert!(
+                    (y[i] as f64 - want[i]).abs() <= tol[i],
+                    "{} {bs} row {i}: {} vs {} (tol {})",
+                    sm.name,
+                    y[i],
+                    want[i],
+                    tol[i]
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn f32_test_variant_matches_widened_oracle() {
+    // Algorithm 2 at f32: same numbers as Algorithm 1 (the control flow
+    // never changes the per-row summation content).
+    for sm in suite::test_subset().iter().take(5) {
+        let csr32 = sm.csr.to_precision::<f32>();
+        let x = bench_x(csr32.cols);
+        let want = widened_oracle(&csr32, &x);
+        let tol = row_tolerances(&csr32, &x, 1e-4);
+        for bs in [BlockSize::new(1, 16), BlockSize::new(1, 8)] {
+            let bm = csr_to_block(&csr32, bs).unwrap();
+            let mut y = vec![0.0f32; csr32.rows];
+            spmv_block(&bm, &x, &mut y, true);
+            for i in 0..csr32.rows {
+                assert!(
+                    (y[i] as f64 - want[i]).abs() <= tol[i],
+                    "{} {bs} test row {i}",
+                    sm.name
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn f32_simd_dispatch_agrees_with_portable_kernel() {
+    // The dispatched path (AVX-512 when available, else the same scalar
+    // kernel) and the explicitly-portable Algorithm 1 must agree to
+    // accumulation-order tolerance on every β32 size.
+    for sm in suite::test_subset().iter().take(6) {
+        let csr32 = sm.csr.to_precision::<f32>();
+        let x = bench_x(csr32.cols);
+        let tol = row_tolerances(&csr32, &x, 1e-4);
+        for bs in BlockSize::F32_WIDE_SIZES {
+            let bm = csr_to_block(&csr32, bs).unwrap();
+            let mut dispatched = vec![0.0f32; csr32.rows];
+            spmv_block(&bm, &x, &mut dispatched, false);
+            let mut portable = vec![0.0f32; csr32.rows];
+            scalar::spmv_generic(&bm, &x, &mut portable);
+            for i in 0..csr32.rows {
+                assert!(
+                    (dispatched[i] as f64 - portable[i] as f64).abs() <= tol[i],
+                    "{} {bs} row {i}: simd {} vs portable {}",
+                    sm.name,
+                    dispatched[i],
+                    portable[i]
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn f32_wide_conversion_reduces_storage_vs_f64() {
+    // The point of the 16-lane stack: halved values + u16 masks beat
+    // the f64 format's bytes on every suite class.
+    for sm in suite::test_subset().iter().take(6) {
+        let csr32 = sm.csr.to_precision::<f32>();
+        let b32 = csr_to_block(&csr32, BlockSize::new(1, 16)).unwrap();
+        let b64 = csr_to_block(&sm.csr, BlockSize::new(1, 8)).unwrap();
+        assert!(
+            b32.occupancy_bytes() < b64.occupancy_bytes(),
+            "{}: {} vs {}",
+            sm.name,
+            b32.occupancy_bytes(),
+            b64.occupancy_bytes()
+        );
+    }
+}

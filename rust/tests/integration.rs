@@ -2,7 +2,7 @@
 //! solver chains, the CLI surface, and the XLA artifact path when
 //! artifacts are present.
 
-use spc5::coordinator::{cg_solve, EngineConfig, Request, SpmvEngine, SpmvService};
+use spc5::coordinator::{cg_solve, Request, SpmvEngine, SpmvService};
 use spc5::kernels::KernelKind;
 use spc5::matrix::{market, suite};
 use spc5::predictor::{PerfRecord, RecordStore};
@@ -28,9 +28,7 @@ fn mtx_file_to_engine() {
     let read_back = market::read_file(&path).unwrap().to_csr().unwrap();
     assert_eq!(csr, read_back);
 
-    let engine =
-        SpmvEngine::new(read_back.clone(), &EngineConfig::default(), None)
-            .unwrap();
+    let engine = SpmvEngine::builder(read_back.clone()).build().unwrap();
     let x: Vec<f64> = (0..csr.cols).map(|i| (i % 13) as f64 * 0.25).collect();
     let mut y = vec![0.0; csr.rows];
     engine.spmv_into(&x, &mut y);
@@ -97,13 +95,16 @@ fn cg_engine_consistency() {
         (KernelKind::Beta(2, 8), 1),
         (KernelKind::Beta(4, 4), 3),
         (KernelKind::BetaTest(1, 8), 2),
+        // The facade now serves the paper's baselines too.
+        (KernelKind::Csr, 1),
+        (KernelKind::Csr, 4),
+        (KernelKind::Csr5, 1),
     ] {
-        let cfg = EngineConfig {
-            threads,
-            kernel: Some(kernel),
-            ..Default::default()
-        };
-        let engine = SpmvEngine::new(csr.clone(), &cfg, None).unwrap();
+        let engine = SpmvEngine::builder(csr.clone())
+            .threads(threads)
+            .kernel(kernel)
+            .build()
+            .unwrap();
         let mut x = vec![0.0; csr.rows];
         let report = cg_solve(&engine, &b, &mut x, 3000, 1e-22);
         assert!(report.converged, "{kernel} t={threads}: {report:?}");
@@ -118,15 +119,10 @@ fn cg_engine_consistency() {
 #[test]
 fn service_concurrent_correctness() {
     let csr = suite::quantum_clusters(600, 4, 10, 8, 21);
-    let engine = SpmvEngine::new(
-        csr.clone(),
-        &EngineConfig {
-            kernel: Some(KernelKind::Beta(2, 4)),
-            ..Default::default()
-        },
-        None,
-    )
-    .unwrap();
+    let engine = SpmvEngine::builder(csr.clone())
+        .kernel(KernelKind::Beta(2, 4))
+        .build()
+        .unwrap();
     let service = SpmvService::start(engine, 5);
     let n = 60u64;
     for id in 0..n {
@@ -166,11 +162,55 @@ fn xla_artifact_cg_agrees_with_native() {
     let x0 = vec![0.0; csr.rows];
     let out = xla.executor("cg").unwrap().run_f64(&[&csr.values, &b, &x0]).unwrap();
 
-    let engine =
-        SpmvEngine::new(csr.clone(), &EngineConfig::default(), None).unwrap();
+    let engine = SpmvEngine::builder(csr.clone()).build().unwrap();
     let mut x_native = vec![0.0; csr.rows];
     cg_solve(&engine, &b, &mut x_native, iters, 1e-30);
     spc5::testkit::assert_close(&out[0], &x_native, 1e-6, "xla vs native cg");
+}
+
+/// Full f32 pipeline through the public API only: cast → engine
+/// (predictor default and explicit 16-lane kernel) → service.
+#[test]
+fn f32_engine_and_service_end_to_end() {
+    let csr64 = suite::banded(400, 10, 0.5, 6);
+    let csr = csr64.to_precision::<f32>();
+    let x: Vec<f32> = (0..csr.cols).map(|i| (i % 11) as f32 * 0.2 - 1.0).collect();
+    let mut want = vec![0.0f32; csr.rows];
+    csr.spmv_ref(&x, &mut want);
+
+    for kernel in [
+        KernelKind::Beta(1, 8),
+        KernelKind::Beta(1, 16),
+        KernelKind::Beta(4, 16),
+        KernelKind::Csr,
+        KernelKind::Csr5,
+    ] {
+        let engine = SpmvEngine::builder(csr.clone())
+            .kernel(kernel)
+            .threads(2)
+            .build()
+            .unwrap();
+        let mut y = vec![0.0f32; csr.rows];
+        engine.spmv_into(&x, &mut y);
+        for i in 0..csr.rows {
+            assert!(
+                (y[i] - want[i]).abs() <= 2e-4 * want[i].abs().max(1.0),
+                "{kernel} row {i}"
+            );
+        }
+    }
+
+    let engine = SpmvEngine::builder(csr.clone())
+        .kernel(KernelKind::Beta(2, 16))
+        .build()
+        .unwrap();
+    let service = SpmvService::start(engine, 2);
+    service.submit(Request { id: 1, x: x.clone() });
+    let resp = service.recv().unwrap();
+    for i in 0..csr.rows {
+        assert!((resp.y[i] - want[i]).abs() <= 2e-4 * want[i].abs().max(1.0));
+    }
+    assert_eq!(service.shutdown(), 1);
 }
 
 /// CLI binary smoke tests through std::process.
@@ -198,6 +238,19 @@ fn cli_smoke() {
     let out = run(&["spmv", "--matrix", "ns3Da", "--kernel", "b(2,8)"]);
     assert!(out.status.success());
     assert!(String::from_utf8_lossy(&out.stdout).contains("gflops"));
+    // baselines now served by the engine
+    let out = run(&["spmv", "--matrix", "ns3Da", "--kernel", "csr5"]);
+    assert!(out.status.success());
+    // f32 stack with a 16-lane kernel
+    let out = run(&[
+        "spmv", "--matrix", "ns3Da", "--kernel", "b32(1,16)", "--precision",
+        "f32",
+    ]);
+    assert!(out.status.success());
+    assert!(String::from_utf8_lossy(&out.stdout).contains("precision=f32"));
+    // 16-lane kernel at f64 → construction error
+    let out = run(&["spmv", "--matrix", "ns3Da", "--kernel", "b(1,16)"]);
+    assert!(!out.status.success());
     // unknown matrix → error exit
     let out = run(&["spmv", "--matrix", "definitely-not-a-matrix"]);
     assert!(!out.status.success());

@@ -1,0 +1,92 @@
+//! Minimal, dependency-free stand-in for the `anyhow` crate.
+//!
+//! The container builds fully offline, so the crate vendors the small
+//! subset of the `anyhow` API it actually uses: the opaque [`Error`]
+//! type, the [`Result`] alias, and the `anyhow!` / `bail!` / `ensure!`
+//! macros. Semantics match the real crate for this subset: any
+//! `std::error::Error` converts into [`Error`] through `?`, and
+//! [`Error`] itself deliberately does **not** implement
+//! `std::error::Error` (that is what makes the blanket `From` legal).
+
+use std::fmt;
+
+/// An opaque, message-carrying error.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Wraps any displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { msg: message.to_string() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        Error { msg: e.to_string() }
+    }
+}
+
+/// `Result` defaulting to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Builds an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)+) => {
+        $crate::Error::msg(format!($($arg)+))
+    };
+}
+
+/// Returns early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)+) => {
+        return Err($crate::anyhow!($($arg)+))
+    };
+}
+
+/// Returns early with a formatted [`Error`] when the condition fails.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)+) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn macros_and_conversions() {
+        fn inner(fail: bool) -> crate::Result<u32> {
+            crate::ensure!(!fail, "failed with code {}", 7);
+            Ok(1)
+        }
+        assert_eq!(inner(false).unwrap(), 1);
+        assert_eq!(inner(true).unwrap_err().to_string(), "failed with code 7");
+
+        fn io_err() -> crate::Result<()> {
+            Err(std::io::Error::new(std::io::ErrorKind::Other, "disk on fire"))?;
+            Ok(())
+        }
+        assert!(io_err().unwrap_err().to_string().contains("disk on fire"));
+    }
+}
