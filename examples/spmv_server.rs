@@ -1,10 +1,12 @@
-//! Serving demo: the SPC5 engine behind a request loop.
+//! Serving demo: the SPC5 engine behind a micro-batching request loop.
 //!
-//! Starts an [`SpmvService`] with a worker pool over one converted
-//! matrix (the iterative-solver deployment: structure fixed, many
-//! products), drives it with a batch of requests, and reports
-//! throughput and latency percentiles — the "library in production"
-//! view of the paper's kernels.
+//! Starts an [`SpmvService`] over one converted matrix (the
+//! iterative-solver deployment: structure fixed, many products). The
+//! engine owns a persistent worker pool created once; the service adds
+//! a dispatcher that **coalesces concurrent requests into multi-RHS
+//! batches** served by one matrix traversal. Reports throughput, the
+//! service-side latency percentiles and the batch-size histogram — the
+//! "library in production" view of the paper's kernels.
 //!
 //! Run: `cargo run --release --example spmv_server`
 
@@ -17,56 +19,89 @@ fn main() -> anyhow::Result<()> {
     let sm = suite::by_name("Si87H76").expect("suite matrix");
     let csr = sm.csr.clone();
     println!(
-        "serving '{}' ({} rows, {} nnz) with kernel auto-default",
+        "serving '{}' ({} rows, {} nnz)",
         sm.name,
         csr.rows,
         csr.nnz()
     );
 
+    let threads = 2usize;
     let engine = SpmvEngine::builder(csr.clone())
         .kernel(KernelKind::Beta(4, 4))
+        .threads(threads)
         .build()?;
-    println!("kernel: {}", engine.kernel());
+    println!("kernel: {} | pool workers: {threads}", engine.kernel());
 
-    let workers = 4usize;
-    let service = SpmvService::start(engine, workers);
-    println!("workers: {workers}");
+    let max_batch = 8usize;
+    let service = SpmvService::start(engine, max_batch);
+    println!("dispatcher max batch: {max_batch}");
 
-    // Drive: 200 requests with distinct vectors.
+    // Drive: 200 requests with distinct vectors, submitted in bursts so
+    // the dispatcher has something to coalesce.
     let n_req = 200usize;
     let mut rng = Rng::new(0x5E6E);
     let t = Timer::start();
-    for id in 0..n_req as u64 {
-        let x: Vec<f64> =
-            (0..csr.cols).map(|_| rng.range_f64(-1.0, 1.0)).collect();
-        service.submit(Request { id, x });
-    }
-    let mut latencies = Vec::with_capacity(n_req);
+    let mut submitted = 0usize;
     let mut checked = 0usize;
-    for _ in 0..n_req {
-        let resp = service.recv().expect("response");
-        latencies.push(resp.latency_s);
-        // Spot-check a few responses against the reference.
-        if resp.id % 50 == 0 {
-            checked += 1;
-            assert_eq!(resp.y.len(), csr.rows);
+    let mut received = 0usize;
+    // Inputs retained for the spot-checked ids (every 50th request).
+    let mut retained: std::collections::HashMap<u64, Vec<f64>> =
+        std::collections::HashMap::new();
+    while received < n_req {
+        // Burst of up to 10 submissions, then drain what's ready.
+        while submitted < n_req && submitted - received < 10 {
+            let id = submitted as u64;
+            let x: Vec<f64> =
+                (0..csr.cols).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+            if id % 50 == 0 {
+                retained.insert(id, x.clone());
+            }
+            if let Err(e) = service.submit(Request { id, x }) {
+                // A stopped service is a deployment event, not a panic.
+                eprintln!("submit failed: {e}");
+                return Err(anyhow::anyhow!("service rejected request: {e}"));
+            }
+            submitted += 1;
         }
+        let resp = service.recv().expect("response");
+        // Spot-check retained responses against the CSR reference.
+        if let Some(x) = retained.remove(&resp.id) {
+            let mut want = vec![0.0; csr.rows];
+            csr.spmv_ref(&x, &mut want);
+            for i in 0..csr.rows {
+                assert!(
+                    (resp.y[i] - want[i]).abs()
+                        <= 1e-9 * want[i].abs().max(1.0),
+                    "response {} row {i} disagrees with reference",
+                    resp.id
+                );
+            }
+            checked += 1;
+        }
+        received += 1;
     }
     let wall = t.elapsed_s();
-    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let pct = |p: f64| latencies[(p * (latencies.len() - 1) as f64) as usize];
 
+    let stats = service.stats();
     println!("\n== results ==");
     println!("requests      : {n_req} ({checked} spot-checked)");
     println!("wall time     : {wall:.3}s");
     println!("throughput    : {:.1} SpMV/s", n_req as f64 / wall);
     println!(
-        "               ({:.2} effective GFlop/s across workers)",
+        "               ({:.2} effective GFlop/s)",
         2.0 * csr.nnz() as f64 * n_req as f64 / wall / 1e9
     );
-    println!("latency p50   : {:.2} ms", pct(0.50) * 1e3);
-    println!("latency p90   : {:.2} ms", pct(0.90) * 1e3);
-    println!("latency p99   : {:.2} ms", pct(0.99) * 1e3);
+    println!("latency p50   : {:.2} ms", stats.p50_s * 1e3);
+    println!("latency p95   : {:.2} ms", stats.p95_s * 1e3);
+    println!("latency p99   : {:.2} ms", stats.p99_s * 1e3);
+    println!("batches       : {}", stats.batches);
+    print!("batch sizes   :");
+    for (i, &count) in stats.batch_hist.iter().enumerate() {
+        if count > 0 {
+            print!(" {}×{count}", i + 1);
+        }
+    }
+    println!();
     let served = service.shutdown();
     assert_eq!(served, n_req);
     println!("server drained cleanly ({served} served)");

@@ -10,7 +10,7 @@ use spc5::bench::{bench_vector, Table, RUNS};
 use spc5::formats::{csr_to_block, BlockSize};
 use spc5::kernels::{avx512, scalar, spmm, spmv_block, KernelKind, KernelSet};
 use spc5::matrix::{reorder, suite};
-use spc5::parallel::{ParallelSpmv, ParallelStrategy};
+use spc5::parallel::{ParallelSpmv, ParallelStrategy, WorkerPool};
 use spc5::util::timer::{mean_of_runs, spmv_gflops};
 
 fn main() {
@@ -20,6 +20,8 @@ fn main() {
     f32_vs_f64();
     spmm_ablation();
     xcopy_ablation();
+    pool_handoff_ablation();
+    batched_parallel_ablation();
     predictor_ablation();
 }
 
@@ -194,6 +196,87 @@ fn xcopy_ablation() {
         t.row(vec![name.into(), format!("{:.2}", m.gflops)]);
     }
     t.emit("ablation_xcopy");
+}
+
+/// Pool epoch handoff vs per-call thread spawning — the dispatch
+/// overhead an iterative solver pays on *every* SpMV (the reason the
+/// runtime keeps its workers alive; paper: the threads "do not wait",
+/// SPC5 keeps them across the whole run).
+fn pool_handoff_ablation() {
+    const DISPATCHES: usize = 200;
+    let threads = 4usize;
+    let pool = WorkerPool::new(threads);
+    let mut t = Table::new(
+        "Ablation H: per-SpMV dispatch cost, persistent pool vs \
+         thread::scope spawn (4 workers, empty task)",
+        &["mechanism", "µs per dispatch"],
+    );
+    let s_pool = mean_of_runs(RUNS, || {
+        for _ in 0..DISPATCHES {
+            pool.run(|_ctx| {});
+        }
+    });
+    t.row(vec![
+        "pool epoch handoff".into(),
+        format!("{:.2}", s_pool / DISPATCHES as f64 * 1e6),
+    ]);
+    let s_scope = mean_of_runs(RUNS, || {
+        for _ in 0..DISPATCHES {
+            std::thread::scope(|scope| {
+                for _ in 0..threads {
+                    scope.spawn(|| {});
+                }
+            });
+        }
+    });
+    t.row(vec![
+        "scoped spawn (old runtime)".into(),
+        format!("{:.2}", s_scope / DISPATCHES as f64 * 1e6),
+    ]);
+    t.emit("ablation_pool_handoff");
+}
+
+/// Batched multi-RHS through the parallel runtime: requests/s a server
+/// gets from coalescing k clients into one traversal vs k separate
+/// parallel SpMVs on the same pool.
+fn batched_parallel_ablation() {
+    let csr = suite::fem_blocked(20_000, 3, 8, 47);
+    let bm = csr_to_block(&csr, BlockSize::new(2, 8)).unwrap();
+    let p = ParallelSpmv::new(bm, 4, ParallelStrategy::Shared, false);
+    let k = 8usize;
+    let mut t = Table::new(
+        "Ablation I: serving k=8 requests, batched spmm vs k spmv \
+         (b(2,8), 4 pool workers)",
+        &["path", "total GFlop/s", "per-request GFlop/s"],
+    );
+    let nnz = p.matrix().nnz();
+    let x1 = bench_vector(csr.cols, 3);
+    let mut y1 = vec![0.0f64; csr.rows];
+    let s_seq = mean_of_runs(RUNS, || {
+        for _ in 0..k {
+            y1.iter_mut().for_each(|v| *v = 0.0);
+            p.spmv(&x1, &mut y1);
+        }
+    });
+    let g_seq = k as f64 * spmv_gflops(nnz, s_seq);
+    t.row(vec![
+        "k × spmv".into(),
+        format!("{g_seq:.2}"),
+        format!("{:.2}", g_seq / k as f64),
+    ]);
+    let xk = bench_vector(csr.cols * k, 3);
+    let mut yk = vec![0.0f64; csr.rows * k];
+    let s_bat = mean_of_runs(RUNS, || {
+        yk.iter_mut().for_each(|v| *v = 0.0);
+        p.spmm(&xk, &mut yk, k);
+    });
+    let g_bat = k as f64 * spmv_gflops(nnz, s_bat);
+    t.row(vec![
+        "1 × spmm(k=8)".into(),
+        format!("{g_bat:.2}"),
+        format!("{:.2}", g_bat / k as f64),
+    ]);
+    t.emit("ablation_batched_parallel");
 }
 
 /// Record-based vs analytic-model kernel selection.

@@ -85,6 +85,36 @@ pub fn measure_parallel<T: Scalar>(
     }
 }
 
+/// Measures the batched multi-RHS product (`k` right-hand sides in one
+/// traversal) on a pre-built parallel executor. `gflops` counts the
+/// work of all `k` vectors — the serving-throughput view.
+pub fn measure_spmm<T: Scalar>(
+    p: &ParallelSpmv<T>,
+    matrix: &str,
+    kernel: KernelKind,
+    k: usize,
+) -> Measurement {
+    let bm = p.matrix();
+    let nnz = bm.nnz();
+    let x: Vec<T> = bench_vector(bm.cols * k, 0xBE7C)
+        .into_iter()
+        .map(T::from_f64)
+        .collect();
+    let mut y = vec![T::ZERO; bm.rows * k];
+    let seconds = mean_of_runs(RUNS, || {
+        p.spmm(&x, &mut y, k);
+    });
+    std::hint::black_box(&y);
+    Measurement {
+        matrix: matrix.to_string(),
+        kernel,
+        threads: p.n_threads(),
+        numa: p.strategy() == ParallelStrategy::NumaSplit,
+        gflops: k as f64 * spmv_gflops(nnz, seconds),
+        seconds,
+    }
+}
+
 /// The deterministic input vector used by every benchmark.
 pub fn bench_vector(len: usize, seed: u64) -> Vec<f64> {
     let mut rng = Rng::new(seed);
@@ -196,6 +226,20 @@ mod tests {
         assert!(m.gflops > 0.0);
         assert!(m.seconds > 0.0);
         assert_eq!(m.threads, 1);
+    }
+
+    #[test]
+    fn measure_spmm_produces_positive_gflops() {
+        let csr = suite::poisson2d(16);
+        let bm = crate::formats::csr_to_block(
+            &csr,
+            crate::formats::BlockSize::new(2, 4),
+        )
+        .unwrap();
+        let p = ParallelSpmv::new(bm, 2, ParallelStrategy::Shared, false);
+        let m = measure_spmm(&p, "poisson", KernelKind::Beta(2, 4), 4);
+        assert!(m.gflops > 0.0);
+        assert_eq!(m.threads, 2);
     }
 
     #[test]

@@ -8,6 +8,13 @@
 //! Krylov scalars (dot products, α, β, residual norms) accumulate in
 //! f64 — the mixed-precision shape single-precision solvers need to
 //! stay stable.
+//!
+//! Every `spmv_into` inside the iteration loop reuses the engine's
+//! **persistent worker pool**: a 500-iteration solve wakes the same
+//! long-lived workers 500 times instead of spawning (and tearing down)
+//! 500 × `threads` threads, and the per-worker working vectors are
+//! allocated once, not per call (see `rust/tests/runtime_pool.rs` for
+//! the thread-count regression test).
 
 use super::engine::SpmvEngine;
 use crate::scalar::Scalar;

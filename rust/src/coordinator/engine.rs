@@ -25,14 +25,28 @@
 //! (sequential or block-balanced parallel), the CSR baseline
 //! (row-chunked across threads), and the CSR5 comparator (sequential —
 //! the reference CSR5 kernel carries open-row state across tiles).
+//!
+//! With `threads > 1` the engine owns **one** [`WorkerPool`] for its
+//! lifetime: the β runtime attaches to it, the row-chunked CSR path
+//! runs on it, and every `spmv`/`spmm` afterwards — including each
+//! iteration of the Krylov solvers and each batch of the serving layer
+//! — is an epoch handoff to the same long-lived workers. No per-call
+//! thread spawning anywhere on the hot path.
+//!
+//! [`SpmvEngine::spmm`] is the multi-RHS entry (`Y += A·X`, `k`
+//! right-hand sides in one matrix traversal) that the service's
+//! micro-batching dispatcher coalesces concurrent requests into.
 
 use crate::formats::stats::paper_profile;
 use crate::formats::{csr_to_block, BlockMatrix};
-use crate::kernels::{csr as csr_kernel, csr5, spmv_block, KernelKind};
+use crate::kernels::{csr as csr_kernel, csr5, spmm, spmv_block, KernelKind};
 use crate::matrix::Csr;
-use crate::parallel::{ParallelSpmv, ParallelStrategy};
+use crate::parallel::{
+    ParallelSpmv, ParallelStrategy, SendSlice, WorkerPool,
+};
 use crate::predictor::{select_parallel, select_sequential, RecordStore};
 use crate::scalar::Scalar;
+use std::sync::Arc;
 
 /// The storage a built engine dispatches to.
 enum Storage<T: Scalar> {
@@ -54,6 +68,9 @@ pub struct SpmvEngine<T: Scalar = f64> {
     predicted_gflops: Option<f64>,
     storage: Storage<T>,
     threads: usize,
+    /// The persistent runtime every parallel path runs on, created
+    /// once at build time (`None` when `threads == 1`).
+    pool: Option<Arc<WorkerPool>>,
 }
 
 /// Fluent configuration for [`SpmvEngine`] — replaces the old
@@ -104,6 +121,13 @@ impl<T: Scalar> SpmvEngine<T> {
         self.threads
     }
 
+    /// The engine's persistent worker pool (`None` when sequential).
+    /// Shared by the β runtime, the chunked CSR path, the solvers and
+    /// the serving layer for the engine's whole lifetime.
+    pub fn pool(&self) -> Option<&Arc<WorkerPool>> {
+        self.pool.as_ref()
+    }
+
     /// `y += A·x` through the chosen kernel and runtime.
     pub fn spmv(&self, x: &[T], y: &mut [T]) {
         match &self.storage {
@@ -131,14 +155,59 @@ impl<T: Scalar> SpmvEngine<T> {
         self.spmv(x, y);
     }
 
+    /// Multi-RHS `Y += A·X`: `x` holds `k` right-hand sides row-major
+    /// (`x[c*k + j]` = vector `j` at position `c`, see
+    /// [`crate::kernels::spmm`]), `y` likewise `[rows × k]`. The block
+    /// storages traverse the matrix **once** for all `k` vectors — the
+    /// batching lever the serving layer uses; the CSR/CSR5 baselines
+    /// fall back to `k` single-vector passes. For `BetaTest` kernels
+    /// the `k > 1` path uses the standard SpMM traversal (Algorithm 2
+    /// has no multi-RHS form); results are identical.
+    pub fn spmm(&self, x: &[T], y: &mut [T], k: usize) {
+        assert!(k > 0);
+        assert_eq!(x.len(), self.csr.cols * k, "x must be cols*k");
+        assert_eq!(y.len(), self.csr.rows * k, "y must be rows*k");
+        if k == 1 {
+            return self.spmv(x, y);
+        }
+        match &self.storage {
+            Storage::Block(bm) => spmm::spmm_auto(bm, x, y, k),
+            Storage::BlockParallel(p) => p.spmm(x, y, k),
+            Storage::Csr { .. } | Storage::Csr5(_) => {
+                // No native multi-RHS kernel for the baselines: run k
+                // de-interleaved single-vector products.
+                let (rows, cols) = (self.csr.rows, self.csr.cols);
+                let mut xj = vec![T::ZERO; cols];
+                let mut yj = vec![T::ZERO; rows];
+                for j in 0..k {
+                    for c in 0..cols {
+                        xj[c] = x[c * k + j];
+                    }
+                    yj.iter_mut().for_each(|v| *v = T::ZERO);
+                    self.spmv(&xj, &mut yj);
+                    for r in 0..rows {
+                        y[r * k + j] += yj[r];
+                    }
+                }
+            }
+        }
+    }
+
+    /// Multi-RHS `Y = A·X` (zeroing first).
+    pub fn spmm_into(&self, x: &[T], y: &mut [T], k: usize) {
+        y.iter_mut().for_each(|v| *v = T::ZERO);
+        self.spmm(x, y, k);
+    }
+
     /// The Table-1-style stats row for the bound matrix.
     pub fn profile(&self) -> Vec<crate::formats::BlockStats> {
         paper_profile(&self.csr)
     }
 
-    /// Row-chunked parallel CSR: each scoped worker owns a disjoint
+    /// Row-chunked parallel CSR: each **pool** worker owns a disjoint
     /// contiguous row range (balanced by nnz at build time) and writes
-    /// its own `y` slice — same syncless-merge shape as the β runtime.
+    /// its own `y` slice — same syncless-merge shape as the β runtime,
+    /// on the same persistent workers (no per-call spawn).
     fn spmv_csr_parallel(
         &self,
         chunks: &[(usize, usize)],
@@ -147,19 +216,18 @@ impl<T: Scalar> SpmvEngine<T> {
     ) {
         assert_eq!(x.len(), self.csr.cols);
         assert_eq!(y.len(), self.csr.rows);
-        std::thread::scope(|scope| {
-            let mut rest = y;
-            let mut covered = 0usize;
-            for &(r0, r1) in chunks {
-                debug_assert_eq!(r0, covered);
-                let (part, tail) = rest.split_at_mut(r1 - covered);
-                rest = tail;
-                covered = r1;
-                let csr = &self.csr;
-                scope.spawn(move || {
-                    csr_kernel::spmv_rows(csr, r0, r1, x, part);
-                });
+        let pool = self.pool.as_ref().expect("chunked CSR needs the pool");
+        debug_assert_eq!(chunks.len(), pool.n_threads());
+        let y_all = SendSlice::new(y);
+        pool.run(|ctx: crate::parallel::WorkerCtx<'_>| {
+            let (r0, r1) = chunks[ctx.tid];
+            if r0 == r1 {
+                return;
             }
+            // SAFETY: chunks are contiguous and disjoint across
+            // workers; the borrow outlives the blocked `run` call.
+            let part = unsafe { y_all.subslice_mut(r0, r1) };
+            csr_kernel::spmv_rows(&self.csr, r0, r1, x, part);
         });
     }
 }
@@ -231,6 +299,15 @@ impl<'r, T: Scalar> SpmvEngineBuilder<'r, T> {
             }
         };
 
+        // One persistent pool per engine lifetime: spawned here, shared
+        // by whichever parallel path the kernel choice needs, reused by
+        // every solver iteration and service batch afterwards. CSR5 has
+        // no parallel path (the reference kernel carries open-row state
+        // across tiles), so it never gets idle parked workers.
+        let parallel_kernel = !matches!(kernel, KernelKind::Csr5);
+        let pool = (threads > 1 && parallel_kernel)
+            .then(|| Arc::new(WorkerPool::new(threads)));
+
         let storage = match kernel {
             KernelKind::Csr => {
                 let chunks = if threads > 1 {
@@ -247,17 +324,21 @@ impl<'r, T: Scalar> SpmvEngineBuilder<'r, T> {
                 let bs = kernel.block_size().expect("β kernel has a size");
                 let block = csr_to_block(&csr, bs)?;
                 let test = matches!(kernel, KernelKind::BetaTest(..));
-                if threads > 1 {
-                    let strategy = if numa_split {
-                        ParallelStrategy::NumaSplit
-                    } else {
-                        ParallelStrategy::Shared
-                    };
-                    Storage::BlockParallel(ParallelSpmv::new(
-                        block, threads, strategy, test,
-                    ))
-                } else {
-                    Storage::Block(block)
+                match &pool {
+                    Some(pool) => {
+                        let strategy = if numa_split {
+                            ParallelStrategy::NumaSplit
+                        } else {
+                            ParallelStrategy::Shared
+                        };
+                        Storage::BlockParallel(ParallelSpmv::with_pool(
+                            block,
+                            Arc::clone(pool),
+                            strategy,
+                            test,
+                        ))
+                    }
+                    None => Storage::Block(block),
                 }
             }
         };
@@ -268,6 +349,7 @@ impl<'r, T: Scalar> SpmvEngineBuilder<'r, T> {
             predicted_gflops: predicted,
             storage,
             threads,
+            pool,
         })
     }
 }
@@ -401,6 +483,63 @@ mod tests {
             .unwrap();
         assert_eq!(e.kernel(), KernelKind::Beta(4, 8));
         assert!(e.predicted_gflops().unwrap() > 1.0);
+    }
+
+    #[test]
+    fn engine_pool_exists_only_when_parallel() {
+        let csr = suite::poisson2d(8);
+        let seq = SpmvEngine::builder(csr.clone()).build().unwrap();
+        assert!(seq.pool().is_none());
+        let par =
+            SpmvEngine::builder(csr.clone()).threads(3).build().unwrap();
+        assert_eq!(par.pool().unwrap().n_threads(), 3);
+        // CSR5 is sequential by construction: no idle parked workers
+        // even when threads are requested.
+        let csr5 = SpmvEngine::builder(csr)
+            .kernel(KernelKind::Csr5)
+            .threads(4)
+            .build()
+            .unwrap();
+        assert!(csr5.pool().is_none());
+    }
+
+    #[test]
+    fn spmm_matches_k_single_spmvs_across_storages() {
+        let csr = suite::fem_blocked(260, 3, 5, 9);
+        let mut rng = crate::util::Rng::new(77);
+        for k in [2usize, 3, 8] {
+            let x: Vec<f64> = (0..csr.cols * k)
+                .map(|_| rng.range_f64(-1.0, 1.0))
+                .collect();
+            for (kernel, threads) in [
+                (KernelKind::Beta(2, 8), 1usize),
+                (KernelKind::Beta(2, 8), 4),
+                (KernelKind::Csr, 3),
+                (KernelKind::Csr5, 1),
+            ] {
+                let e = SpmvEngine::builder(csr.clone())
+                    .kernel(kernel)
+                    .threads(threads)
+                    .build()
+                    .unwrap();
+                let mut y = vec![0.0; csr.rows * k];
+                e.spmm_into(&x, &mut y, k);
+                // Oracle: k independent single-vector engine calls.
+                for j in 0..k {
+                    let xj: Vec<f64> =
+                        (0..csr.cols).map(|c| x[c * k + j]).collect();
+                    let mut want = vec![0.0; csr.rows];
+                    e.spmv_into(&xj, &mut want);
+                    for r in 0..csr.rows {
+                        assert!(
+                            (y[r * k + j] - want[r]).abs()
+                                <= 1e-9 * want[r].abs().max(1.0),
+                            "{kernel} t={threads} k={k} j={j} row {r}"
+                        );
+                    }
+                }
+            }
+        }
     }
 
     #[test]

@@ -12,5 +12,7 @@ pub mod solvers;
 
 pub use cg::{cg_solve, CgReport};
 pub use engine::{SpmvEngine, SpmvEngineBuilder};
-pub use service::{Request, Response, SpmvService};
+pub use service::{
+    Request, Response, ServiceError, ServiceStats, SpmvService,
+};
 pub use solvers::{bicgstab, pcg_jacobi};

@@ -1,17 +1,30 @@
-//! Request-loop service — a thin serving layer over [`SpmvEngine`]
-//! demonstrating the library in a long-running deployment (the
-//! `spmv_server` example): requests arrive on a channel, a worker pool
-//! answers them, per-request latency is recorded. Generic over the
-//! engine's precision.
+//! Request-loop service — the serving layer over [`SpmvEngine`] used
+//! by the `spmv_server` example, generic over the engine's precision.
 //!
 //! The matrix and kernel are fixed at service construction (the
 //! iterative-solver deployment); each request carries its own `x`.
+//!
+//! ## Micro-batching dispatcher
+//!
+//! One dispatcher thread drains the request queue and **coalesces
+//! concurrent requests against the same matrix into a single
+//! multi-RHS product** routed through [`SpmvEngine::spmm`] (the block
+//! kernels traverse the matrix once for all `k` right-hand sides —
+//! amortizing matrix traffic across clients), falling back to the
+//! single-vector SpMV when only one request is pending. The compute
+//! itself runs on the engine's persistent [`crate::parallel::WorkerPool`]
+//! when the engine is parallel — the service spawns no per-request
+//! threads and shares the same runtime as the solvers.
+//!
+//! Per-request latency (queue + compute) and per-batch size are
+//! recorded; [`SpmvService::stats`] exposes p50/p95/p99 and the
+//! batch-size histogram.
 
 use super::engine::SpmvEngine;
 use crate::scalar::Scalar;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 /// One SpMV request.
 pub struct Request<T: Scalar = f64> {
@@ -27,56 +40,143 @@ pub struct Response<T: Scalar = f64> {
     pub latency_s: f64,
 }
 
-/// A running service instance.
+/// Why a [`SpmvService::submit`] was rejected.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ServiceError {
+    /// The dispatcher is gone (service shut down or crashed); the
+    /// request was not enqueued.
+    Stopped,
+    /// `x` does not match the served matrix's column count; accepting
+    /// it would poison the whole batch it lands in.
+    ShapeMismatch { expected: usize, got: usize },
+}
+
+impl std::fmt::Display for ServiceError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServiceError::Stopped => {
+                write!(f, "service stopped: request not enqueued")
+            }
+            ServiceError::ShapeMismatch { expected, got } => write!(
+                f,
+                "request x has {got} entries, matrix expects {expected}"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for ServiceError {}
+
+/// Service-level latency / batching statistics snapshot.
+#[derive(Clone, Debug)]
+pub struct ServiceStats {
+    /// Requests completed.
+    pub served: usize,
+    /// Dispatched batches (≤ served; smaller when coalescing happens).
+    pub batches: usize,
+    /// Latency percentiles in seconds over the most recent
+    /// [`LATENCY_WINDOW`] requests (0.0 when nothing served yet).
+    pub p50_s: f64,
+    pub p95_s: f64,
+    pub p99_s: f64,
+    /// `batch_hist[i]` = number of batches of size `i + 1`.
+    pub batch_hist: Vec<usize>,
+}
+
+/// Latency samples kept for the percentiles — a bounded ring, so a
+/// long-running deployment neither grows without bound nor pays more
+/// than an O(window log window) sort per stats snapshot.
+pub const LATENCY_WINDOW: usize = 4096;
+
+#[derive(Default)]
+struct StatsInner {
+    /// Ring of the last [`LATENCY_WINDOW`] per-request latencies.
+    latencies_s: Vec<f64>,
+    /// Next ring slot to overwrite once the window is full.
+    next: usize,
+    batch_hist: Vec<usize>,
+    batches: usize,
+}
+
+impl StatsInner {
+    fn record_batch(&mut self, size: usize) {
+        if self.batch_hist.len() < size {
+            self.batch_hist.resize(size, 0);
+        }
+        self.batch_hist[size - 1] += 1;
+        self.batches += 1;
+    }
+
+    fn record_latency(&mut self, latency_s: f64) {
+        if self.latencies_s.len() < LATENCY_WINDOW {
+            self.latencies_s.push(latency_s);
+        } else {
+            self.latencies_s[self.next] = latency_s;
+            self.next = (self.next + 1) % LATENCY_WINDOW;
+        }
+    }
+}
+
+/// A running service instance (see module docs).
 pub struct SpmvService<T: Scalar = f64> {
     tx: Option<mpsc::Sender<(Request<T>, std::time::Instant)>>,
     rx_out: mpsc::Receiver<Response<T>>,
-    workers: Vec<std::thread::JoinHandle<()>>,
+    dispatcher: Option<std::thread::JoinHandle<()>>,
     served: Arc<AtomicUsize>,
+    stats: Arc<Mutex<StatsInner>>,
+    cols: usize,
+    max_batch: usize,
 }
 
 impl<T: Scalar> SpmvService<T> {
-    /// Spawns `workers` threads sharing the engine.
-    pub fn start(engine: SpmvEngine<T>, workers: usize) -> SpmvService<T> {
-        assert!(workers > 0);
-        let engine = Arc::new(engine);
+    /// Starts the dispatcher over `engine`, coalescing up to
+    /// `max_batch` pending requests into one multi-RHS product. The
+    /// parallel compute runs on the engine's own persistent pool; the
+    /// service adds exactly one dispatcher thread.
+    pub fn start(engine: SpmvEngine<T>, max_batch: usize) -> SpmvService<T> {
+        assert!(max_batch > 0);
+        let (cols, rows) = (engine.csr().cols, engine.csr().rows);
         let (tx, rx) = mpsc::channel::<(Request<T>, std::time::Instant)>();
-        let rx = Arc::new(std::sync::Mutex::new(rx));
         let (tx_out, rx_out) = mpsc::channel::<Response<T>>();
         let served = Arc::new(AtomicUsize::new(0));
+        let stats = Arc::new(Mutex::new(StatsInner::default()));
 
-        let mut handles = Vec::with_capacity(workers);
-        for _ in 0..workers {
-            let rx = Arc::clone(&rx);
-            let tx_out = tx_out.clone();
-            let engine = Arc::clone(&engine);
-            let served = Arc::clone(&served);
-            handles.push(std::thread::spawn(move || loop {
-                let msg = { rx.lock().unwrap().recv() };
-                let Ok((req, enqueued)) = msg else {
-                    break; // channel closed → shut down
-                };
-                let rows = engine.csr().rows;
-                let mut y = vec![T::ZERO; rows];
-                engine.spmv_into(&req.x, &mut y);
-                served.fetch_add(1, Ordering::Relaxed);
-                let _ = tx_out.send(Response {
-                    id: req.id,
-                    y,
-                    latency_s: enqueued.elapsed().as_secs_f64(),
-                });
-            }));
+        let served_d = Arc::clone(&served);
+        let stats_d = Arc::clone(&stats);
+        let dispatcher = std::thread::Builder::new()
+            .name("spc5-dispatch".into())
+            .spawn(move || {
+                dispatch_loop(
+                    engine, rx, tx_out, served_d, stats_d, rows, max_batch,
+                )
+            })
+            .expect("spawn dispatcher");
+
+        SpmvService {
+            tx: Some(tx),
+            rx_out,
+            dispatcher: Some(dispatcher),
+            served,
+            stats,
+            cols,
+            max_batch,
         }
-        SpmvService { tx: Some(tx), rx_out, workers: handles, served }
     }
 
-    /// Enqueues a request.
-    pub fn submit(&self, req: Request<T>) {
+    /// Enqueues a request. Fails instead of panicking when the
+    /// dispatcher is gone or the vector has the wrong length.
+    pub fn submit(&self, req: Request<T>) -> Result<(), ServiceError> {
+        if req.x.len() != self.cols {
+            return Err(ServiceError::ShapeMismatch {
+                expected: self.cols,
+                got: req.x.len(),
+            });
+        }
         self.tx
             .as_ref()
-            .expect("service running")
+            .ok_or(ServiceError::Stopped)?
             .send((req, std::time::Instant::now()))
-            .expect("workers alive");
+            .map_err(|_| ServiceError::Stopped)
     }
 
     /// Blocks for the next response.
@@ -89,10 +189,47 @@ impl<T: Scalar> SpmvService<T> {
         self.served.load(Ordering::Relaxed)
     }
 
-    /// Graceful shutdown: waits for queued work, joins workers.
+    /// The coalescing limit this service was started with.
+    pub fn max_batch(&self) -> usize {
+        self.max_batch
+    }
+
+    /// Snapshot of the latency percentiles and batch-size histogram.
+    pub fn stats(&self) -> ServiceStats {
+        // Hold the dispatcher-shared lock only for the cheap clones;
+        // sort after releasing it so monitoring polls cannot stall the
+        // dispatch hot path.
+        let (mut sorted, batches, batch_hist) = {
+            let inner =
+                self.stats.lock().unwrap_or_else(|e| e.into_inner());
+            (
+                inner.latencies_s.clone(),
+                inner.batches,
+                inner.batch_hist.clone(),
+            )
+        };
+        sorted.sort_by(|a, b| a.partial_cmp(b).expect("finite latencies"));
+        let pct = |p: f64| -> f64 {
+            if sorted.is_empty() {
+                0.0
+            } else {
+                sorted[((p * (sorted.len() - 1) as f64).round()) as usize]
+            }
+        };
+        ServiceStats {
+            served: self.served(),
+            batches,
+            p50_s: pct(0.50),
+            p95_s: pct(0.95),
+            p99_s: pct(0.99),
+            batch_hist,
+        }
+    }
+
+    /// Graceful shutdown: waits for queued work, joins the dispatcher.
     pub fn shutdown(mut self) -> usize {
         drop(self.tx.take());
-        for h in self.workers.drain(..) {
+        if let Some(h) = self.dispatcher.take() {
             let _ = h.join();
         }
         self.served()
@@ -102,9 +239,103 @@ impl<T: Scalar> SpmvService<T> {
 impl<T: Scalar> Drop for SpmvService<T> {
     fn drop(&mut self) {
         drop(self.tx.take());
-        for h in self.workers.drain(..) {
+        if let Some(h) = self.dispatcher.take() {
             let _ = h.join();
         }
+    }
+}
+
+/// The dispatcher: blocking-recv one request, greedily drain whatever
+/// else is already queued (up to `max_batch`), serve the batch through
+/// one engine call, answer every member.
+#[allow(clippy::too_many_arguments)]
+fn dispatch_loop<T: Scalar>(
+    engine: SpmvEngine<T>,
+    rx: mpsc::Receiver<(Request<T>, std::time::Instant)>,
+    tx_out: mpsc::Sender<Response<T>>,
+    served: Arc<AtomicUsize>,
+    stats: Arc<Mutex<StatsInner>>,
+    rows: usize,
+    max_batch: usize,
+) {
+    // Reused across batches: the packed X/Y panels.
+    let mut xb: Vec<T> = Vec::new();
+    let mut yb: Vec<T> = Vec::new();
+    let mut batch: Vec<(Request<T>, std::time::Instant)> = Vec::new();
+
+    loop {
+        batch.clear();
+        match rx.recv() {
+            Ok(first) => batch.push(first),
+            Err(_) => return, // channel closed → drain done, shut down
+        }
+        while batch.len() < max_batch {
+            match rx.try_recv() {
+                Ok(next) => batch.push(next),
+                Err(_) => break,
+            }
+        }
+
+        let k = batch.len();
+        if k == 1 {
+            // Single pending request: plain SpMV, no packing cost.
+            let (req, enqueued) = &batch[0];
+            let mut y = vec![T::ZERO; rows];
+            engine.spmv_into(&req.x, &mut y);
+            finish(&tx_out, &served, &stats, 1, [(req.id, y, enqueued)]);
+        } else {
+            // Coalesce: one [cols × k] panel, one matrix traversal.
+            // Packed c-major/j-minor so every slot is written exactly
+            // once (no redundant zero-fill on the dispatch hot path).
+            let cols = engine.csr().cols;
+            xb.clear();
+            xb.reserve(cols * k);
+            for c in 0..cols {
+                for (req, _) in batch.iter() {
+                    xb.push(req.x[c]);
+                }
+            }
+            if yb.len() != rows * k {
+                yb.resize(rows * k, T::ZERO);
+            }
+            engine.spmm_into(&xb, &mut yb, k);
+            let members = batch.iter().enumerate().map(|(j, (req, enq))| {
+                let y: Vec<T> = (0..rows).map(|r| yb[r * k + j]).collect();
+                (req.id, y, enq)
+            });
+            finish(&tx_out, &served, &stats, k, members);
+        }
+    }
+}
+
+/// Answers every member of one served batch and records statistics.
+/// The stats lock is released before any response is sent, so a
+/// concurrent `stats()` poll never delays delivery.
+fn finish<'a, T: Scalar>(
+    tx_out: &mpsc::Sender<Response<T>>,
+    served: &AtomicUsize,
+    stats: &Mutex<StatsInner>,
+    batch_size: usize,
+    members: impl IntoIterator<Item = (u64, Vec<T>, &'a std::time::Instant)>,
+) {
+    let responses: Vec<Response<T>> = members
+        .into_iter()
+        .map(|(id, y, enqueued)| Response {
+            id,
+            y,
+            latency_s: enqueued.elapsed().as_secs_f64(),
+        })
+        .collect();
+    {
+        let mut st = stats.lock().unwrap_or_else(|e| e.into_inner());
+        st.record_batch(batch_size);
+        for r in &responses {
+            st.record_latency(r.latency_s);
+        }
+    }
+    for r in responses {
+        served.fetch_add(1, Ordering::Relaxed);
+        let _ = tx_out.send(r);
     }
 }
 
@@ -118,13 +349,13 @@ mod tests {
     fn serves_correct_results() {
         let csr = suite::poisson2d(12);
         let engine = SpmvEngine::builder(csr.clone()).build().unwrap();
-        let service = SpmvService::start(engine, 3);
+        let service = SpmvService::start(engine, 4);
 
         let n_req = 20usize;
         for id in 0..n_req as u64 {
             let x: Vec<f64> =
                 (0..csr.cols).map(|i| (i as u64 + id) as f64 * 0.01).collect();
-            service.submit(Request { id, x });
+            service.submit(Request { id, x }).unwrap();
         }
         let mut got = 0usize;
         while got < n_req {
@@ -148,12 +379,12 @@ mod tests {
             .kernel(KernelKind::Beta(2, 16))
             .build()
             .unwrap();
-        let service = SpmvService::start(engine, 2);
+        let service = SpmvService::start(engine, 3);
         for id in 0..8u64 {
             let x: Vec<f32> = (0..csr32.cols)
                 .map(|i| ((i as u64 + id) % 13) as f32 * 0.1)
                 .collect();
-            service.submit(Request { id, x });
+            service.submit(Request { id, x }).unwrap();
         }
         for _ in 0..8 {
             let resp = service.recv().expect("response");
@@ -180,7 +411,7 @@ mod tests {
             .unwrap();
         let service = SpmvService::start(engine, 2);
         let x = vec![1.0; csr.cols];
-        service.submit(Request { id: 0, x: x.clone() });
+        service.submit(Request { id: 0, x: x.clone() }).unwrap();
         let resp = service.recv().unwrap();
         let mut want = vec![0.0; csr.rows];
         csr.spmv_ref(&x, &mut want);
@@ -194,5 +425,81 @@ mod tests {
         let engine = SpmvEngine::builder(csr).build().unwrap();
         let service = SpmvService::start(engine, 2);
         assert_eq!(service.shutdown(), 0);
+    }
+
+    #[test]
+    fn submit_rejects_wrong_shape() {
+        let csr = suite::poisson2d(6);
+        let cols = csr.cols;
+        let engine = SpmvEngine::builder(csr).build().unwrap();
+        let service = SpmvService::start(engine, 2);
+        let err = service
+            .submit(Request { id: 0, x: vec![1.0; cols + 3] })
+            .unwrap_err();
+        assert_eq!(
+            err,
+            ServiceError::ShapeMismatch { expected: cols, got: cols + 3 }
+        );
+        assert_eq!(service.shutdown(), 0);
+    }
+
+    #[test]
+    fn batching_coalesces_and_stats_report() {
+        // Submit a burst before reading any response: the dispatcher
+        // must coalesce at least one multi-request batch, and the
+        // histogram/percentiles must account for every request.
+        let csr = suite::poisson2d(10);
+        let engine = SpmvEngine::builder(csr.clone())
+            .kernel(KernelKind::Beta(1, 8))
+            .threads(2)
+            .build()
+            .unwrap();
+        let service = SpmvService::start(engine, 8);
+        let n = 40u64;
+        for id in 0..n {
+            let x: Vec<f64> = (0..csr.cols)
+                .map(|i| ((i as u64 * 3 + id) % 11) as f64 * 0.2)
+                .collect();
+            service.submit(Request { id, x }).unwrap();
+        }
+        for _ in 0..n {
+            let resp = service.recv().unwrap();
+            let x: Vec<f64> = (0..csr.cols)
+                .map(|i| ((i as u64 * 3 + resp.id) % 11) as f64 * 0.2)
+                .collect();
+            let mut want = vec![0.0; csr.rows];
+            csr.spmv_ref(&x, &mut want);
+            crate::testkit::assert_close(&resp.y, &want, 1e-9, "batched");
+        }
+        let stats = service.stats();
+        assert_eq!(stats.served, n as usize);
+        assert!(stats.batches <= stats.served);
+        let hist_total: usize = stats
+            .batch_hist
+            .iter()
+            .enumerate()
+            .map(|(i, &c)| (i + 1) * c)
+            .sum();
+        assert_eq!(hist_total, n as usize, "histogram covers all requests");
+        assert!(stats.p50_s <= stats.p95_s && stats.p95_s <= stats.p99_s);
+        assert_eq!(service.shutdown(), n as usize);
+    }
+
+    #[test]
+    fn max_batch_one_disables_coalescing() {
+        let csr = suite::poisson2d(6);
+        let engine = SpmvEngine::builder(csr.clone()).build().unwrap();
+        let service = SpmvService::start(engine, 1);
+        for id in 0..10u64 {
+            let x = vec![0.5; csr.cols];
+            service.submit(Request { id, x }).unwrap();
+        }
+        for _ in 0..10 {
+            service.recv().unwrap();
+        }
+        let stats = service.stats();
+        assert_eq!(stats.batches, 10);
+        assert_eq!(stats.batch_hist, vec![10]);
+        assert_eq!(service.shutdown(), 10);
     }
 }

@@ -4,7 +4,9 @@
 //! systems and BiCGSTAB for general square systems. Both touch the
 //! matrix exclusively through [`SpmvEngine::spmv_into`], so every
 //! iteration exercises the paper's kernels — at either precision
-//! (vectors in `T`, Krylov scalars accumulated in f64).
+//! (vectors in `T`, Krylov scalars accumulated in f64) — and, on a
+//! parallel engine, runs on the engine's persistent worker pool (one
+//! pool for the whole solve, no per-iteration thread spawning).
 
 use super::cg::{dot_f64, CgReport};
 use super::engine::SpmvEngine;

@@ -34,6 +34,36 @@
 //! # Ok(()) }
 //! ```
 //!
+//! ## Runtime architecture
+//!
+//! Every parallel path runs on **one persistent
+//! [`parallel::WorkerPool`]** rather than per-call thread spawning:
+//!
+//! - **Pool lifecycle** — a parallel engine spawns its pool once at
+//!   `build()` and owns it for its lifetime. The β runtime
+//!   (`ParallelSpmv`), the row-chunked CSR baseline, every iteration
+//!   of the Krylov solvers, and the serving layer all hand work to the
+//!   same parked workers. A standalone `ParallelSpmv::new` creates its
+//!   own pool; `ParallelSpmv::with_pool` attaches to a shared one.
+//! - **Epoch handoff** — `pool.run(task)` publishes a borrowed closure,
+//!   bumps an epoch counter and wakes the workers; each worker computes
+//!   its span into its own reusable working vector and merges into its
+//!   disjoint slice of `y` as soon as *it* finishes (the paper's
+//!   syncless merge: "it does not wait for the others"); the caller
+//!   returns when the last worker checks in. No spawn, no channel, no
+//!   allocation per call.
+//! - **NUMA first-touch** — in `NumaSplit` modes each worker *itself*
+//!   materializes its private copy of its sub-arrays (values, headers,
+//!   rowptr) inside its `LocalStore` at attach time, so on a
+//!   multi-socket host the copies land on the worker's local memory
+//!   node by first touch — previously the copies were made once on the
+//!   constructing thread while workers changed every call.
+//! - **Batched serving** — `SpmvService` runs a micro-batching
+//!   dispatcher: concurrent requests against the same matrix coalesce
+//!   into one multi-RHS `SpmvEngine::spmm` call (the block kernels
+//!   traverse the matrix once for all `k` right-hand sides), falling
+//!   back to single-vector SpMV for a batch of one.
+//!
 //! ## Modules
 //!
 //! - [`scalar`] — the sealed [`Scalar`] / [`scalar::MaskWord`] traits:
@@ -51,9 +81,11 @@
 //!   `vexpandps` (f32) span kernels, a tuned CSR baseline (MKL
 //!   stand-in) and a CSR5 re-implementation — all runnable through
 //!   `KernelSet<T>` / [`kernels::spmv_block`].
-//! - [`parallel`] — the paper's static block-balanced shared-memory
-//!   parallelization with per-thread result buffers, syncless merge
-//!   and an optional NUMA-style array split (`ParallelSpmv<T>`).
+//! - [`parallel`] — the persistent worker-pool runtime
+//!   (`WorkerPool`) plus the paper's static block-balanced
+//!   shared-memory parallelization with per-thread result buffers,
+//!   syncless merge and an optional NUMA-style array split
+//!   (`ParallelSpmv<T>`, multi-RHS `spmm` included).
 //! - [`predictor`] — the record-based kernel-selection system:
 //!   polynomial interpolation (sequential, Fig. 5) and 2D regression
 //!   (parallel, Fig. 6) over performance records.
@@ -63,7 +95,9 @@
 //! - [`coordinator`] — `SpmvEngine<T>` (built through
 //!   [`SpmvEngine::builder`]: stats → predict → convert → dispatch,
 //!   serving **every** [`KernelKind`] including the CSR/CSR5
-//!   baselines), the Krylov solvers, and `SpmvService<T>`.
+//!   baselines, owning one pool for all its parallel paths), the
+//!   Krylov solvers (each iteration reuses the engine's pool), and the
+//!   micro-batching `SpmvService<T>`.
 //! - [`bench`] — the measurement harness used by `cargo bench` targets
 //!   that regenerate every table and figure of the paper.
 

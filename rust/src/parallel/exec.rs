@@ -1,26 +1,38 @@
-//! Threaded SpMV execution (paper §Parallelization), generic over the
-//! element precision.
+//! Threaded SpMV/SpMM execution (paper §Parallelization), generic over
+//! the element precision — a thin façade over the persistent
+//! [`WorkerPool`] runtime.
 //!
 //! Construction partitions the block matrix into per-thread spans with
-//! the paper's balancing rule. Each call to [`ParallelSpmv::spmv`]
-//! spawns scoped workers; each worker computes into its **own working
-//! vector** and copies it into the disjoint slice of `y` it owns as
-//! soon as it finishes — no barrier, no atomics, exactly the paper's
-//! merge ("it does not wait for the others").
+//! the paper's balancing rule and **attaches** it to the pool: each
+//! worker builds its reusable working vector — and, in the NumaSplit
+//! modes, its private `LocalPart` copy of its sub-arrays — **on its own
+//! thread**, so first-touch NUMA placement is real (the old
+//! `thread::scope` runtime copied on the constructing thread and spawned
+//! fresh workers every call). Each call to [`ParallelSpmv::spmv`] is
+//! then an epoch handoff: wake the parked workers, each computes into
+//! its worker-owned vector and copies it into the disjoint slice of `y`
+//! it owns as soon as it finishes — no barrier between workers, no
+//! atomics, exactly the paper's merge ("it does not wait for the
+//! others") — with **no thread spawn and no allocation per call**.
 //!
 //! [`ParallelStrategy::NumaSplit`] additionally gives every thread a
 //! private *copy* of its sub-arrays (`values`, headers, rowptr), the
-//! paper's NUMA optimization: on a multi-socket machine the per-thread
-//! allocation lands on the local memory node by first touch. The
-//! duplication cost and the structural consequences (matrix tied to the
-//! thread count) are the trade-offs the paper discusses; both variants
-//! are kept, like in SPC5.
+//! paper's NUMA optimization. The duplication cost and the structural
+//! consequences (matrix tied to the thread count) are the trade-offs
+//! the paper discusses; both variants are kept, like in SPC5.
+//!
+//! [`ParallelSpmv::spmm`] runs the multi-RHS product (`Y += A·X`, `k`
+//! right-hand sides in one matrix traversal) over the same spans and
+//! scratch — the batched path the serving layer coalesces concurrent
+//! requests into.
 
 use super::partition::{partition_intervals, ThreadSpan};
+use super::pool::{next_attach_id, SendSlice, WorkerCtx, WorkerPool};
 use crate::formats::{BlockMatrix, BlockSize};
 use crate::kernels::avx512::Span;
-use crate::kernels::scalar;
+use crate::kernels::{scalar, spmm};
 use crate::scalar::Scalar;
+use std::sync::Arc;
 
 /// Memory placement strategy for the worker threads.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -28,7 +40,7 @@ pub enum ParallelStrategy {
     /// All threads read the shared matrix arrays.
     Shared,
     /// Each thread owns a private copy of its sub-arrays (the paper's
-    /// NUMA optimization).
+    /// NUMA optimization), materialized on the worker's own thread.
     NumaSplit,
     /// NumaSplit plus a per-thread private copy of the `x` vector —
     /// the paper's conclusion asks to "assess the benefit and cost of
@@ -45,23 +57,38 @@ struct LocalPart<T: Scalar> {
     rows: usize,
 }
 
-/// A parallel SpMV executor bound to one converted matrix.
+/// One worker's persistent, reusable state: the working vector the
+/// paper pre-allocates, the x-copy buffer (XCopy mode), the multi-RHS
+/// accumulator scratch and the NUMA sub-array copies. Lives in the
+/// worker's `LocalStore`, created and touched only on that worker's
+/// thread.
+struct WorkerLocal<T: Scalar> {
+    work: Vec<T>,
+    xbuf: Vec<T>,
+    /// `r·k` interval accumulators for the portable SpMM span kernel.
+    mrhs: Vec<T>,
+    part: Option<LocalPart<T>>,
+}
+
+/// A parallel SpMV/SpMM executor bound to one converted matrix and one
+/// [`WorkerPool`].
 pub struct ParallelSpmv<T: Scalar = f64> {
     bs: BlockSize,
     rows: usize,
     cols: usize,
-    n_threads: usize,
     test: bool,
     spans: Vec<ThreadSpan>,
     val_ends: Vec<usize>,
     matrix: BlockMatrix<T>,
-    locals: Vec<LocalPart<T>>,
     strategy: ParallelStrategy,
+    pool: Arc<WorkerPool>,
+    attach_id: u64,
 }
 
 impl<T: Scalar> ParallelSpmv<T> {
-    /// Builds the executor: partitions the matrix for `n_threads` and,
-    /// in NumaSplit mode, materializes the per-thread copies.
+    /// Convenience constructor owning a fresh pool of `n_threads`
+    /// workers. Prefer [`ParallelSpmv::with_pool`] when a longer-lived
+    /// pool exists (the engine shares one across all its paths).
     pub fn new(
         matrix: BlockMatrix<T>,
         n_threads: usize,
@@ -69,7 +96,25 @@ impl<T: Scalar> ParallelSpmv<T> {
         test: bool,
     ) -> Self {
         assert!(n_threads > 0);
-        let spans = partition_intervals(&matrix, n_threads);
+        Self::with_pool(
+            matrix,
+            Arc::new(WorkerPool::new(n_threads)),
+            strategy,
+            test,
+        )
+    }
+
+    /// Builds the executor on an existing pool: partitions the matrix
+    /// across the pool's workers and attaches — every worker creates
+    /// its reusable scratch (and, in NumaSplit modes, its first-touch
+    /// `LocalPart` copy) on its own thread before this returns.
+    pub fn with_pool(
+        matrix: BlockMatrix<T>,
+        pool: Arc<WorkerPool>,
+        strategy: ParallelStrategy,
+        test: bool,
+    ) -> Self {
+        let spans = partition_intervals(&matrix, pool.n_threads());
         // Value-range end per span = next span's begin (or total).
         let mut val_ends = Vec::with_capacity(spans.len());
         for (i, _s) in spans.iter().enumerate() {
@@ -81,49 +126,30 @@ impl<T: Scalar> ParallelSpmv<T> {
             val_ends.push(end);
         }
 
-        let locals = if strategy != ParallelStrategy::Shared {
-            let stride = matrix.header_stride();
-            spans
-                .iter()
-                .zip(&val_ends)
-                .map(|(s, &ve)| {
-                    // On a NUMA host each worker would run this copy
-                    // itself after pinning (first-touch placement); the
-                    // data layout is identical either way.
-                    let rowptr: Vec<u32> = matrix.block_rowptr
-                        [s.interval_begin..=s.interval_end]
-                        .to_vec();
-                    LocalPart {
-                        rowptr,
-                        headers: matrix.headers
-                            [s.block_begin * stride..s.block_end * stride]
-                            .to_vec(),
-                        values: matrix.values[s.val_begin..ve].to_vec(),
-                        rows: s.row_end - s.row_begin,
-                    }
-                })
-                .collect()
-        } else {
-            Vec::new()
-        };
-
-        ParallelSpmv {
+        let p = ParallelSpmv {
             bs: matrix.bs,
             rows: matrix.rows,
             cols: matrix.cols,
-            n_threads,
             test,
             spans,
             val_ends,
             matrix,
-            locals,
             strategy,
-        }
+            pool,
+            attach_id: next_attach_id(),
+        };
+        // Attach: each worker materializes its own state in place.
+        p.pool.run(|ctx: WorkerCtx<'_>| {
+            let tid = ctx.tid;
+            ctx.locals
+                .get_or_insert_with(p.attach_id, || p.build_local(tid));
+        });
+        p
     }
 
     /// Number of worker threads.
     pub fn n_threads(&self) -> usize {
-        self.n_threads
+        self.pool.n_threads()
     }
 
     /// The strategy this executor was built with.
@@ -136,50 +162,90 @@ impl<T: Scalar> ParallelSpmv<T> {
         &self.matrix
     }
 
-    /// Parallel `y += A·x`.
+    /// The pool this executor runs on.
+    pub fn pool(&self) -> &Arc<WorkerPool> {
+        &self.pool
+    }
+
+    /// Builds one worker's persistent state. Called on the worker's own
+    /// thread (attach time, or lazily if the slot was evicted), so the
+    /// copies land on the local memory node by first touch.
+    fn build_local(&self, tid: usize) -> WorkerLocal<T> {
+        let part = if self.strategy != ParallelStrategy::Shared {
+            let s = &self.spans[tid];
+            let ve = self.val_ends[tid];
+            let stride = self.matrix.header_stride();
+            Some(LocalPart {
+                rowptr: self.matrix.block_rowptr
+                    [s.interval_begin..=s.interval_end]
+                    .to_vec(),
+                headers: self.matrix.headers
+                    [s.block_begin * stride..s.block_end * stride]
+                    .to_vec(),
+                values: self.matrix.values[s.val_begin..ve].to_vec(),
+                rows: s.row_end - s.row_begin,
+            })
+        } else {
+            None
+        };
+        WorkerLocal {
+            work: Vec::new(),
+            xbuf: Vec::new(),
+            mrhs: Vec::new(),
+            part,
+        }
+    }
+
+    /// Parallel `y += A·x` — one pool epoch, no spawn, no allocation
+    /// (worker scratch is reused across calls; each worker carves its
+    /// disjoint span rows out of `y` itself).
     pub fn spmv(&self, x: &[T], y: &mut [T]) {
         assert_eq!(x.len(), self.cols);
         assert_eq!(y.len(), self.rows);
-
-        // Split y into per-span disjoint slices (the merge target).
-        let mut y_parts: Vec<&mut [T]> = Vec::with_capacity(self.spans.len());
-        let mut rest = y;
-        let mut covered = 0usize;
-        for s in &self.spans {
-            let (part, tail) = rest.split_at_mut(s.row_end - covered);
-            y_parts.push(part);
-            rest = tail;
-            covered = s.row_end;
-        }
-
-        std::thread::scope(|scope| {
-            for (tid, y_part) in y_parts.into_iter().enumerate() {
-                let s = self.spans[tid];
-                scope.spawn(move || {
-                    // Per-thread working vector (paper: "we pre-allocate
-                    // a working vector of the same size").
-                    let mut work = vec![T::ZERO; y_part.len()];
-                    let span = self.span_view(tid, &s);
-                    if self.strategy == ParallelStrategy::NumaSplitXCopy {
-                        // Paper conclusion: duplicate x on every memory
-                        // node. On NUMA the copy lands local by first
-                        // touch; the copy cost is part of the measure.
-                        let x_local = x.to_vec();
-                        run_span(span, self.bs, &x_local, &mut work, self.test);
-                    } else {
-                        run_span(span, self.bs, x, &mut work, self.test);
-                    }
-                    // Syncless merge: this thread's rows are disjoint.
-                    for (dst, w) in y_part.iter_mut().zip(&work) {
-                        *dst += *w;
-                    }
-                });
-            }
-        });
+        let y_all = SendSlice::new(y);
+        self.pool
+            .run(|ctx: WorkerCtx<'_>| self.worker_pass(ctx, &y_all, x, 1));
     }
 
-    fn span_view<'a>(&'a self, tid: usize, s: &ThreadSpan) -> Span<'a, T> {
-        match self.strategy {
+    /// Parallel multi-RHS `Y += A·X` with `X`/`Y` row-major
+    /// `[cols × k]` / `[rows × k]` (see [`crate::kernels::spmm`]):
+    /// one traversal of the matrix serves all `k` right-hand sides.
+    ///
+    /// Note: the Algorithm-2 `test` traversal has no multi-RHS
+    /// counterpart, so a `BetaTest` executor serves `k > 1` through the
+    /// standard SpMM traversal — the result is identical (same
+    /// products, same per-interval accumulation order); only the
+    /// single-value branch-prediction trick is specific to `k == 1`.
+    pub fn spmm(&self, x: &[T], y: &mut [T], k: usize) {
+        assert!(k > 0);
+        assert_eq!(x.len(), self.cols * k, "x must be cols*k");
+        assert_eq!(y.len(), self.rows * k, "y must be rows*k");
+        if k == 1 {
+            return self.spmv(x, y);
+        }
+        let y_all = SendSlice::new(y);
+        self.pool
+            .run(|ctx: WorkerCtx<'_>| self.worker_pass(ctx, &y_all, x, k));
+    }
+
+    /// One worker's share of an SpMV (`k == 1`) or SpMM (`k > 1`)
+    /// epoch: compute the span into the reusable working vector, then
+    /// merge into the disjoint `y` part (syncless — rows are disjoint).
+    fn worker_pass(
+        &self,
+        ctx: WorkerCtx<'_>,
+        y_all: &SendSlice<T>,
+        x: &[T],
+        k: usize,
+    ) {
+        let tid = ctx.tid;
+        let local: &mut WorkerLocal<T> = ctx
+            .locals
+            .get_or_insert_with(self.attach_id, || self.build_local(tid));
+        let WorkerLocal { work, xbuf, mrhs, part } = local;
+
+        let s = &self.spans[tid];
+        let span = match self.strategy {
             ParallelStrategy::Shared => Span::slice(
                 &self.matrix,
                 s.interval_begin,
@@ -189,8 +255,9 @@ impl<T: Scalar> ParallelSpmv<T> {
                 s.val_begin,
                 self.val_ends[tid],
             ),
-            ParallelStrategy::NumaSplit | ParallelStrategy::NumaSplitXCopy => {
-                let l = &self.locals[tid];
+            ParallelStrategy::NumaSplit
+            | ParallelStrategy::NumaSplitXCopy => {
+                let l = part.as_ref().expect("NumaSplit local attached");
                 Span {
                     rowptr: &l.rowptr,
                     headers: &l.headers,
@@ -199,7 +266,50 @@ impl<T: Scalar> ParallelSpmv<T> {
                     r: self.bs.r,
                 }
             }
+        };
+
+        // SAFETY: spans are contiguous and disjoint across workers, so
+        // each worker's row range aliases nothing; the borrow is alive
+        // while the caller blocks in `run`.
+        let y_part =
+            unsafe { y_all.subslice_mut(s.row_begin * k, s.row_end * k) };
+        // Reusable working vector (paper: "we pre-allocate a working
+        // vector of the same size") — zeroed, not reallocated.
+        work.clear();
+        work.resize(y_part.len(), T::ZERO);
+
+        let xs: &[T] = if self.strategy == ParallelStrategy::NumaSplitXCopy
+        {
+            // Paper conclusion: duplicate x on every memory node. The
+            // worker-owned buffer lands local by first touch; the copy
+            // cost per call is part of the measure.
+            xbuf.clear();
+            xbuf.extend_from_slice(x);
+            xbuf
+        } else {
+            x
+        };
+
+        if k == 1 {
+            run_span(span, self.bs, xs, work, self.test);
+        } else {
+            spmm::spmm_span_scratch(span, self.bs, xs, work, k, mrhs);
         }
+        // Syncless merge: this thread's rows are disjoint.
+        for (dst, w) in y_part.iter_mut().zip(work.iter()) {
+            *dst += *w;
+        }
+    }
+}
+
+impl<T: Scalar> Drop for ParallelSpmv<T> {
+    fn drop(&mut self) {
+        if std::thread::panicking() {
+            return;
+        }
+        // Detach: release the per-worker scratch held under our id.
+        let id = self.attach_id;
+        self.pool.run(|ctx: WorkerCtx<'_>| ctx.locals.remove(id));
     }
 }
 
@@ -352,6 +462,108 @@ mod tests {
         csr.spmv_ref(&x, &mut want);
         for i in 0..csr.rows {
             assert!((y[i] - want[i]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn repeated_calls_reuse_the_same_pool() {
+        // Many SpMVs over one executor: results stay exact and no state
+        // leaks between epochs (the reused scratch is re-zeroed).
+        let csr = suite::poisson2d(14);
+        let bm = csr_to_block(&csr, BlockSize::new(2, 8)).unwrap();
+        let p = ParallelSpmv::new(bm, 4, ParallelStrategy::Shared, false);
+        for round in 0..20u64 {
+            let x: Vec<f64> = (0..csr.cols)
+                .map(|i| ((i as u64 + round) % 13) as f64 * 0.25 - 1.0)
+                .collect();
+            let mut want = vec![0.0; csr.rows];
+            csr.spmv_ref(&x, &mut want);
+            let mut got = vec![0.0; csr.rows];
+            p.spmv(&x, &mut got);
+            crate::testkit::assert_close(&got, &want, 1e-9, "reuse");
+        }
+    }
+
+    #[test]
+    fn two_executors_share_one_pool() {
+        // Engine-style sharing: one pool, two attached matrices with
+        // different strategies; attach ids keep their scratch apart.
+        let pool = Arc::new(WorkerPool::new(3));
+        let a = suite::poisson2d(12);
+        let b = suite::fem_blocked(200, 3, 5, 17);
+        let pa = ParallelSpmv::with_pool(
+            csr_to_block(&a, BlockSize::new(1, 8)).unwrap(),
+            Arc::clone(&pool),
+            ParallelStrategy::Shared,
+            false,
+        );
+        let pb = ParallelSpmv::with_pool(
+            csr_to_block(&b, BlockSize::new(2, 4)).unwrap(),
+            Arc::clone(&pool),
+            ParallelStrategy::NumaSplit,
+            false,
+        );
+        for (csr, p) in [(&a, &pa), (&b, &pb), (&a, &pa)] {
+            let x: Vec<f64> =
+                (0..csr.cols).map(|i| (i % 7) as f64 - 3.0).collect();
+            let mut want = vec![0.0; csr.rows];
+            csr.spmv_ref(&x, &mut want);
+            let mut got = vec![0.0; csr.rows];
+            p.spmv(&x, &mut got);
+            crate::testkit::assert_close(&got, &want, 1e-9, "shared pool");
+        }
+    }
+
+    #[test]
+    fn parallel_spmm_matches_k_single_spmvs() {
+        let csr = suite::quantum_clusters(300, 3, 8, 5, 11);
+        let bm = csr_to_block(&csr, BlockSize::new(2, 8)).unwrap();
+        let p = ParallelSpmv::new(bm, 4, ParallelStrategy::Shared, false);
+        for k in [2usize, 3, 8] {
+            let x: Vec<f64> = (0..csr.cols * k)
+                .map(|i| ((i * 7) % 19) as f64 * 0.1 - 0.9)
+                .collect();
+            let mut y = vec![0.0; csr.rows * k];
+            p.spmm(&x, &mut y, k);
+            // Oracle: k independent single-vector products.
+            for j in 0..k {
+                let xj: Vec<f64> =
+                    (0..csr.cols).map(|c| x[c * k + j]).collect();
+                let mut want = vec![0.0; csr.rows];
+                csr.spmv_ref(&xj, &mut want);
+                for r in 0..csr.rows {
+                    assert!(
+                        (y[r * k + j] - want[r]).abs()
+                            <= 1e-9 * want[r].abs().max(1.0),
+                        "k={k} j={j} row {r}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_spmm_numa_split_matches() {
+        let csr = suite::fem_blocked(240, 3, 6, 13);
+        let bm = csr_to_block(&csr, BlockSize::new(4, 4)).unwrap();
+        let p = ParallelSpmv::new(bm, 3, ParallelStrategy::NumaSplit, false);
+        let k = 4usize;
+        let x: Vec<f64> = (0..csr.cols * k)
+            .map(|i| ((i * 5) % 17) as f64 * 0.2 - 1.5)
+            .collect();
+        let mut y = vec![0.0; csr.rows * k];
+        p.spmm(&x, &mut y, k);
+        for j in 0..k {
+            let xj: Vec<f64> = (0..csr.cols).map(|c| x[c * k + j]).collect();
+            let mut want = vec![0.0; csr.rows];
+            csr.spmv_ref(&xj, &mut want);
+            for r in 0..csr.rows {
+                assert!(
+                    (y[r * k + j] - want[r]).abs()
+                        <= 1e-9 * want[r].abs().max(1.0),
+                    "j={j} row {r}"
+                );
+            }
         }
     }
 }

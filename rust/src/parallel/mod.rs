@@ -1,19 +1,28 @@
-//! Shared-memory parallel SpMV — the paper's §Parallelization.
+//! Shared-memory parallel SpMV — the paper's §Parallelization, on a
+//! persistent runtime.
 //!
+//! - [`pool`] — the long-lived [`pool::WorkerPool`]: parked worker
+//!   threads woken by epoch handoff, each owning reusable per-worker
+//!   scratch ([`pool::LocalStore`]). Created once, shared by every
+//!   layer above (β runtime, engine CSR chunks, solvers, service).
 //! - [`partition`] — the static block-balanced row-interval split: each
 //!   thread receives whole row intervals with approximately
 //!   `N_blocks / N_threads` blocks, decided by the paper's
 //!   absolute-difference test.
-//! - [`exec`] — the worker pool: per-thread working vectors for `y`,
-//!   merge without synchronization (the assigned row spans are
-//!   disjoint), and an optional NUMA-style mode where every thread owns
-//!   a private copy of its sub-matrix arrays (on a multi-socket host
-//!   these copies land on the local node by first touch; the code
-//!   structure is identical here, the single-socket container just
-//!   cannot show the latency gap).
+//! - [`exec`] — the executor façade: per-thread working vectors for
+//!   `y`, merge without synchronization (the assigned row spans are
+//!   disjoint), an optional NUMA-style mode where every thread copies
+//!   its sub-matrix arrays **on its own thread** (first-touch
+//!   placement), and a multi-RHS [`exec::ParallelSpmv::spmm`] path.
+//!
+//! No per-call thread spawning anywhere: `ParallelSpmv::new` spawns the
+//! workers once (or attaches to an existing pool via `with_pool`), and
+//! every subsequent product is a wake → compute → syncless-merge epoch.
 
 pub mod exec;
 pub mod partition;
+pub mod pool;
 
 pub use exec::{ParallelSpmv, ParallelStrategy};
 pub use partition::{balanced_prefix_split, partition_intervals, ThreadSpan};
+pub use pool::{LocalStore, SendSlice, WorkerCtx, WorkerPool};

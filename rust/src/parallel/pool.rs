@@ -1,0 +1,376 @@
+//! The persistent worker-pool runtime underneath every parallel path.
+//!
+//! The paper's parallel design assumes **long-lived** workers: each
+//! thread is bound to its span of the matrix once, owns its working
+//! vector, and on a NUMA host owns first-touch-placed copies of its
+//! sub-arrays. Spawning fresh threads per SpMV (as the old
+//! `std::thread::scope` runtime did) breaks all three properties — a
+//! 500-iteration CG solve paid 500× thread creation and allocation,
+//! and the "local" copies were touched once by the constructing thread
+//! while the workers changed every call.
+//!
+//! [`WorkerPool`] fixes the lifecycle: `n` threads are spawned once and
+//! parked on a condvar. Each call to [`WorkerPool::run`] is an
+//! **epoch handoff**:
+//!
+//! 1. the caller publishes a task (a borrowed closure — no allocation,
+//!    no `Arc`, no per-call channel) and bumps the epoch counter,
+//! 2. every worker wakes, observes the new epoch, runs the task with
+//!    its thread id and its private [`LocalStore`],
+//! 3. each worker decrements the active count as soon as *it* finishes
+//!    (the paper's merge: "it does not wait for the others" — there is
+//!    no inter-worker barrier, only the caller waits for the last),
+//! 4. the caller returns once the count hits zero, which is what makes
+//!    the borrowed closure sound.
+//!
+//! Per-worker state lives in the worker's own [`LocalStore`], a typed
+//! slot map keyed by attach id. State is **created on the worker's own
+//! thread** (first-touch placement is real on NUMA hosts) and reused
+//! across calls — the reusable working vectors, NUMA sub-array copies
+//! and multi-RHS scratch of the executors above.
+
+use std::any::Any;
+use std::collections::HashMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+
+/// Poison-tolerant lock: a panic inside a pool *task* is caught and
+/// re-raised on the caller, so a poisoned mutex only means some caller
+/// unwound — the protected state is still consistent.
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Poison-tolerant condvar wait (see [`lock`]).
+fn wait<'a, T>(cv: &Condvar, g: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
+    cv.wait(g).unwrap_or_else(|e| e.into_inner())
+}
+
+/// Allocates process-unique ids for executors attaching per-worker
+/// state to a pool (see [`LocalStore`]).
+static NEXT_ATTACH_ID: AtomicU64 = AtomicU64::new(1);
+
+/// Reserves a fresh attach id.
+pub fn next_attach_id() -> u64 {
+    NEXT_ATTACH_ID.fetch_add(1, Ordering::Relaxed)
+}
+
+/// Typed per-worker storage, owned by one worker thread and handed to
+/// tasks through [`WorkerCtx`]. Keys are attach ids so several
+/// executors can share one pool without clobbering each other's state.
+#[derive(Default)]
+pub struct LocalStore {
+    slots: HashMap<u64, Box<dyn Any + Send>>,
+}
+
+impl LocalStore {
+    /// The slot for `key`, created by `init` **on this worker thread**
+    /// the first time it is touched (this is where NUMA first-touch
+    /// placement actually happens).
+    pub fn get_or_insert_with<S: Send + 'static>(
+        &mut self,
+        key: u64,
+        init: impl FnOnce() -> S,
+    ) -> &mut S {
+        self.slots
+            .entry(key)
+            .or_insert_with(|| Box::new(init()))
+            .downcast_mut::<S>()
+            .expect("attach id reused with a different state type")
+    }
+
+    /// Drops the slot for `key` (detach).
+    pub fn remove(&mut self, key: u64) {
+        self.slots.remove(&key);
+    }
+}
+
+/// What a task sees: which worker it is on, and that worker's state.
+pub struct WorkerCtx<'a> {
+    /// Worker index in `0..n_threads`.
+    pub tid: usize,
+    /// This worker's private storage (reusable scratch lives here).
+    pub locals: &'a mut LocalStore,
+}
+
+/// A mutable buffer handed to the workers through a shared closure;
+/// each worker reconstructs only its own **disjoint** sub-range
+/// (per-span / per-chunk), which is what makes the paper's merge
+/// syncless.
+pub struct SendSlice<T> {
+    ptr: *mut T,
+    len: usize,
+}
+
+// SAFETY: workers only materialize pairwise-disjoint sub-ranges, each
+// for the duration of one `run` call while the caller blocks on the
+// original borrow.
+unsafe impl<T: Send> Send for SendSlice<T> {}
+unsafe impl<T: Send> Sync for SendSlice<T> {}
+
+impl<T> SendSlice<T> {
+    /// Captures a mutable slice for hand-off to one worker.
+    pub fn new(s: &mut [T]) -> SendSlice<T> {
+        SendSlice { ptr: s.as_mut_ptr(), len: s.len() }
+    }
+
+    /// Reconstructs the sub-slice `[start, end)` — how each worker
+    /// carves its disjoint share out of one captured buffer without any
+    /// per-call partition allocation.
+    ///
+    /// # Safety
+    /// Ranges materialized across workers within one `run` epoch must
+    /// be pairwise disjoint, and the original borrow must be held alive
+    /// by the blocked caller.
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn subslice_mut(&self, start: usize, end: usize) -> &mut [T] {
+        debug_assert!(start <= end && end <= self.len);
+        std::slice::from_raw_parts_mut(self.ptr.add(start), end - start)
+    }
+}
+
+/// The task pointer published for one epoch. The lifetime is erased;
+/// soundness comes from `run` not returning before every worker is
+/// done with the closure.
+#[derive(Clone, Copy)]
+struct SharedTask(&'static (dyn Fn(WorkerCtx<'_>) + Sync));
+
+struct State {
+    /// Bumped once per `run`; workers compare against their last-seen
+    /// value, so a wake-up without new work is harmless.
+    epoch: u64,
+    /// Workers still computing the current epoch.
+    active: usize,
+    task: Option<SharedTask>,
+    /// First panic payload of this epoch (resumed on the caller so the
+    /// original message and location survive).
+    panic: Option<Box<dyn Any + Send>>,
+    shutdown: bool,
+}
+
+struct Inner {
+    state: Mutex<State>,
+    /// Workers park here between epochs.
+    work_cv: Condvar,
+    /// The caller parks here until `active == 0`.
+    done_cv: Condvar,
+}
+
+/// A pool of persistent, parked worker threads (see module docs).
+///
+/// Created once (typically owned by an `SpmvEngine` for its lifetime,
+/// shared with its executors via `Arc`); every SpMV/SpMM afterwards is
+/// an epoch handoff with zero thread creation and zero allocation on
+/// the pool's side.
+pub struct WorkerPool {
+    inner: Arc<Inner>,
+    /// Serializes concurrent `run` callers (e.g. an engine shared
+    /// across user threads): one epoch in flight at a time.
+    run_lock: Mutex<()>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    n: usize,
+}
+
+impl WorkerPool {
+    /// Spawns `n` workers, parked until the first [`WorkerPool::run`].
+    pub fn new(n: usize) -> WorkerPool {
+        assert!(n > 0);
+        let inner = Arc::new(Inner {
+            state: Mutex::new(State {
+                epoch: 0,
+                active: 0,
+                task: None,
+                panic: None,
+                shutdown: false,
+            }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+        });
+        let handles = (0..n)
+            .map(|tid| {
+                let inner = Arc::clone(&inner);
+                std::thread::Builder::new()
+                    .name(format!("spc5-pool-{tid}"))
+                    .spawn(move || worker_loop(tid, &inner))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        WorkerPool { inner, run_lock: Mutex::new(()), handles, n }
+    }
+
+    /// Number of workers.
+    pub fn n_threads(&self) -> usize {
+        self.n
+    }
+
+    /// Runs `task` on every worker (called with `tid` = `0..n`) and
+    /// blocks until all are done. The closure may borrow caller state;
+    /// writes go through disjoint [`SendSlice`]s.
+    pub fn run(&self, task: impl Fn(WorkerCtx<'_>) + Sync) {
+        let _serial = lock(&self.run_lock);
+        let short: &(dyn Fn(WorkerCtx<'_>) + Sync) = &task;
+        // SAFETY: the pointed-to closure outlives the epoch because we
+        // do not return until `active == 0` (every worker has finished
+        // calling it) — the classic scoped-pool lifetime erasure.
+        let published: &'static (dyn Fn(WorkerCtx<'_>) + Sync) =
+            unsafe { std::mem::transmute(short) };
+
+        let mut st = lock(&self.inner.state);
+        debug_assert_eq!(st.active, 0, "run_lock guarantees one epoch");
+        st.task = Some(SharedTask(published));
+        st.active = self.n;
+        st.panic = None;
+        st.epoch += 1;
+        self.inner.work_cv.notify_all();
+        while st.active > 0 {
+            st = wait(&self.inner.done_cv, st);
+        }
+        st.task = None;
+        if let Some(payload) = st.panic.take() {
+            drop(st);
+            std::panic::resume_unwind(payload);
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut st = lock(&self.inner.state);
+            st.shutdown = true;
+            self.inner.work_cv.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(tid: usize, inner: &Inner) {
+    let mut locals = LocalStore::default();
+    let mut seen = 0u64;
+    loop {
+        let task = {
+            let mut st = lock(&inner.state);
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if st.epoch != seen {
+                    seen = st.epoch;
+                    break st.task.expect("task published with epoch");
+                }
+                st = wait(&inner.work_cv, st);
+            }
+        };
+        let outcome = catch_unwind(AssertUnwindSafe(|| {
+            (task.0)(WorkerCtx { tid, locals: &mut locals })
+        }));
+        let mut st = lock(&inner.state);
+        if let Err(payload) = outcome {
+            st.panic.get_or_insert(payload);
+        }
+        st.active -= 1;
+        if st.active == 0 {
+            inner.done_cv.notify_all();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn runs_every_worker_once_per_epoch() {
+        let pool = WorkerPool::new(4);
+        let hits = AtomicUsize::new(0);
+        for _ in 0..100 {
+            pool.run(|_ctx| {
+                hits.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        assert_eq!(hits.load(Ordering::Relaxed), 400);
+    }
+
+    #[test]
+    fn workers_write_disjoint_slices() {
+        let pool = WorkerPool::new(3);
+        let mut y = vec![0usize; 9];
+        let y_all = SendSlice::new(&mut y);
+        pool.run(|ctx| {
+            // SAFETY: one disjoint range per worker.
+            let part =
+                unsafe { y_all.subslice_mut(ctx.tid * 3, (ctx.tid + 1) * 3) };
+            for v in part.iter_mut() {
+                *v = ctx.tid + 1;
+            }
+        });
+        assert_eq!(y, vec![1, 1, 1, 2, 2, 2, 3, 3, 3]);
+    }
+
+    #[test]
+    fn locals_persist_across_epochs() {
+        let pool = WorkerPool::new(2);
+        let id = next_attach_id();
+        // Each worker counts its own epochs in its LocalStore.
+        for round in 1usize..=5 {
+            let seen = Mutex::new(Vec::new());
+            pool.run(|ctx| {
+                let counter =
+                    ctx.locals.get_or_insert_with(id, || 0usize);
+                *counter += 1;
+                seen.lock().unwrap().push(*counter);
+            });
+            let got = seen.into_inner().unwrap();
+            assert_eq!(got, vec![round; 2], "round {round}");
+        }
+    }
+
+    #[test]
+    fn distinct_attach_ids_do_not_collide() {
+        let pool = WorkerPool::new(2);
+        let (a, b) = (next_attach_id(), next_attach_id());
+        pool.run(|ctx| {
+            *ctx.locals.get_or_insert_with(a, || 0usize) += 1;
+            *ctx.locals.get_or_insert_with(b, || 100usize) += 1;
+        });
+        let check = Mutex::new(Vec::new());
+        pool.run(|ctx| {
+            let va = *ctx.locals.get_or_insert_with(a, || 0usize);
+            let vb = *ctx.locals.get_or_insert_with(b, || 0usize);
+            check.lock().unwrap().push((va, vb));
+        });
+        for (va, vb) in check.into_inner().unwrap() {
+            assert_eq!((va, vb), (1, 101));
+        }
+    }
+
+    #[test]
+    fn pool_shuts_down_cleanly() {
+        let pool = WorkerPool::new(3);
+        pool.run(|_| {});
+        drop(pool); // must not hang
+    }
+
+    #[test]
+    fn worker_panic_propagates_to_caller() {
+        let pool = WorkerPool::new(2);
+        let res = catch_unwind(AssertUnwindSafe(|| {
+            pool.run(|ctx| {
+                if ctx.tid == 1 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(res.is_err());
+        // The pool must stay usable after a task panic.
+        let hits = AtomicUsize::new(0);
+        pool.run(|_| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 2);
+    }
+}

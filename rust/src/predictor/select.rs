@@ -118,14 +118,17 @@ fn rank(
     stats: &HashMap<BlockSize, f64>,
     predict: impl Fn(KernelKind, f64) -> Option<f64>,
 ) -> Option<Selection> {
+    // A degenerate fitted model (e.g. collinear training records) can
+    // predict NaN/±inf; such kernels are non-candidates, not panics.
     let mut all: Vec<(KernelKind, f64)> = kinds
         .iter()
         .filter_map(|&k| predict(k, kernel_avg(k, stats)).map(|p| (k, p)))
+        .filter(|(_, p)| p.is_finite())
         .collect();
     if all.is_empty() {
         return None;
     }
-    all.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    all.sort_by(|a, b| b.1.partial_cmp(&a.1).expect("finite predictions"));
     Some(Selection {
         kernel: all[0].0,
         predicted_gflops: all[0].1,
@@ -213,6 +216,33 @@ mod tests {
         let s1 = select_parallel(&m, &store, &kinds, 1).unwrap();
         let s4 = select_parallel(&m, &store, &kinds, 4).unwrap();
         assert!(s4.predicted_gflops > s1.predicted_gflops);
+    }
+
+    #[test]
+    fn non_finite_predictions_are_not_candidates() {
+        // Regression: `rank` used `partial_cmp(..).unwrap()`, so one
+        // NaN-predicting model panicked the whole selector.
+        let stats = avg_profile(
+            &suite::poisson2d(8),
+            &[KernelKind::Beta(1, 8), KernelKind::Beta(4, 8)],
+        );
+        let kinds = [
+            KernelKind::Csr,
+            KernelKind::Beta(1, 8),
+            KernelKind::Beta(4, 8),
+        ];
+        let sel = rank(&kinds, &stats, |k, _avg| match k {
+            KernelKind::Csr => Some(f64::NAN),
+            KernelKind::Beta(1, 8) => Some(f64::INFINITY),
+            _ => Some(2.5),
+        })
+        .expect("finite candidate remains");
+        assert_eq!(sel.kernel, KernelKind::Beta(4, 8));
+        assert_eq!(sel.all.len(), 1, "NaN/inf kernels dropped");
+
+        // Every prediction non-finite → no selection at all (the
+        // caller falls back to the β(1,8) default).
+        assert!(rank(&kinds, &stats, |_, _| Some(f64::NAN)).is_none());
     }
 
     #[test]

@@ -230,6 +230,18 @@ pub trait Scalar:
         y: &mut [Self],
         test: bool,
     ) -> bool;
+
+    /// Runs one span of the multi-RHS product (`k` right-hand sides,
+    /// row-major `X`/`Y` — see [`crate::kernels::spmm`]) through this
+    /// scalar's SIMD specialization, if one exists for `k`. Returns
+    /// `false` to fall back to the portable span SpMM.
+    fn spmm_span_simd(
+        span: Span<'_, Self>,
+        bs: BlockSize,
+        x: &[Self],
+        y: &mut [Self],
+        k: usize,
+    ) -> bool;
 }
 
 impl Scalar for f64 {
@@ -268,6 +280,17 @@ impl Scalar for f64 {
     ) -> bool {
         avx512::spmv_span_f64(span, bs, x, y, test)
     }
+
+    #[inline]
+    fn spmm_span_simd(
+        span: Span<'_, f64>,
+        bs: BlockSize,
+        x: &[f64],
+        y: &mut [f64],
+        k: usize,
+    ) -> bool {
+        crate::kernels::spmm::spmm_span_simd_f64(span, bs, x, y, k)
+    }
 }
 
 impl Scalar for f32 {
@@ -305,6 +328,19 @@ impl Scalar for f32 {
         test: bool,
     ) -> bool {
         avx512::spmv_span_f32(span, bs, x, y, test)
+    }
+
+    #[inline]
+    fn spmm_span_simd(
+        _span: Span<'_, f32>,
+        _bs: BlockSize,
+        _x: &[f32],
+        _y: &mut [f32],
+        _k: usize,
+    ) -> bool {
+        // No f32 SpMM specialization yet; the generic span kernel
+        // still gives the one-traversal multi-RHS batching win.
+        false
     }
 }
 

@@ -128,7 +128,7 @@ fn service_concurrent_correctness() {
     for id in 0..n {
         let x: Vec<f64> =
             (0..csr.cols).map(|i| ((i as u64 * id) % 17) as f64 * 0.1).collect();
-        service.submit(Request { id, x });
+        service.submit(Request { id, x }).unwrap();
     }
     for _ in 0..n {
         let r = service.recv().unwrap();
@@ -205,7 +205,7 @@ fn f32_engine_and_service_end_to_end() {
         .build()
         .unwrap();
     let service = SpmvService::start(engine, 2);
-    service.submit(Request { id: 1, x: x.clone() });
+    service.submit(Request { id: 1, x: x.clone() }).unwrap();
     let resp = service.recv().unwrap();
     for i in 0..csr.rows {
         assert!((resp.y[i] - want[i]).abs() <= 2e-4 * want[i].abs().max(1.0));

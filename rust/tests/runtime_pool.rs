@@ -1,0 +1,251 @@
+//! Runtime-reuse regression tests for the persistent worker-pool
+//! runtime: (1) an iterative solve must run entirely on pool threads
+//! created once — no per-call spawning anywhere on the SpMV hot path —
+//! and (2) batched multi-RHS serving must match k independent
+//! single-vector products at both precisions.
+
+use spc5::coordinator::{cg_solve, Request, SpmvEngine, SpmvService};
+use spc5::kernels::KernelKind;
+use spc5::matrix::{suite, Csr};
+use spc5::util::Rng;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Mutex, MutexGuard};
+
+/// Serializes the tests in this binary: the thread-count watcher must
+/// not observe pools spawned by a concurrently running sibling test.
+fn serial() -> MutexGuard<'static, ()> {
+    static GATE: Mutex<()> = Mutex::new(());
+    GATE.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Live thread count of this process (Linux: /proc/self/status).
+#[cfg(target_os = "linux")]
+fn process_threads() -> usize {
+    let status =
+        std::fs::read_to_string("/proc/self/status").expect("proc status");
+    status
+        .lines()
+        .find_map(|l| l.strip_prefix("Threads:"))
+        .expect("Threads: line")
+        .trim()
+        .parse()
+        .expect("thread count")
+}
+
+/// Runs `work` while a high-rate watcher samples the process thread
+/// count; returns `(baseline_before, peak_during)`. The watcher itself
+/// accounts for exactly one thread above the baseline.
+#[cfg(target_os = "linux")]
+fn thread_peak_during(work: impl FnOnce()) -> (usize, usize) {
+    let baseline = process_threads();
+    let stop = AtomicBool::new(false);
+    let max_seen = AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        let watcher = scope.spawn(|| {
+            while !stop.load(Ordering::Relaxed) {
+                max_seen.fetch_max(process_threads(), Ordering::Relaxed);
+                std::thread::sleep(std::time::Duration::from_micros(100));
+            }
+        });
+        work();
+        stop.store(true, Ordering::Relaxed);
+        watcher.join().unwrap();
+    });
+    (baseline, max_seen.load(Ordering::Relaxed))
+}
+
+/// A CG solve through a parallel engine must (a) reach the reference
+/// solution and (b) never raise the process thread count above the
+/// persistent pool created at engine build — verified by a high-rate
+/// watcher sampling /proc while the solve runs. The old
+/// `thread::scope` runtime spawned 4 transient threads per SpMV, i.e.
+/// thousands over this solve.
+///
+/// The solve runs in **two watched windows**: the libtest harness may
+/// spawn a sibling test's thread (which immediately parks on
+/// `serial()`) at most once during the whole test, so at least one of
+/// the windows is free of harness noise — while per-call spawning
+/// would pollute *every* window. Asserting on the *minimum* growth
+/// keeps the test deterministic without weakening the regression.
+#[cfg(target_os = "linux")]
+#[test]
+fn cg_over_pool_keeps_thread_count_flat() {
+    let _guard = serial();
+    let csr = suite::poisson2d(20);
+    let engine = SpmvEngine::builder(csr.clone())
+        .threads(4)
+        .kernel(KernelKind::Beta(2, 4))
+        .build()
+        .unwrap();
+    // Warm-up: the pool and its per-worker scratch exist after this.
+    let x0 = vec![0.25; csr.cols];
+    let mut y0 = vec![0.0; csr.rows];
+    engine.spmv_into(&x0, &mut y0);
+
+    let mut rng = Rng::new(41);
+    let b: Vec<f64> =
+        (0..csr.rows).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+
+    let mut growths = Vec::new();
+    for window in 0..2 {
+        let mut x = vec![0.0; csr.rows];
+        let mut report = None;
+        let (baseline, peak) = thread_peak_during(|| {
+            report = Some(cg_solve(&engine, &b, &mut x, 2000, 1e-20));
+        });
+        // `peak` can read 0 if the solve outpaced the first sample.
+        growths.push(peak.saturating_sub(baseline));
+
+        let report = report.unwrap();
+        assert!(report.converged, "window {window}: {report:?}");
+        assert!(
+            report.iterations > 30,
+            "need a long solve to exercise reuse, got {report:?}"
+        );
+        // Correctness of the solve itself.
+        let mut ax = vec![0.0; csr.rows];
+        csr.spmv_ref(&x, &mut ax);
+        for i in 0..csr.rows {
+            assert!((ax[i] - b[i]).abs() < 1e-7, "window {window} row {i}");
+        }
+    }
+
+    // Budget per clean window: the watcher thread only. The old
+    // per-call runtime spawned 4 transient workers on EVERY SpMV,
+    // blowing past this in both windows.
+    let min_growth = *growths.iter().min().unwrap();
+    assert!(
+        min_growth <= 1,
+        "thread count rose during CG in every window \
+         (growths {growths:?}) — something spawned per call"
+    );
+}
+
+/// Batched multi-RHS serving must match k independent single-vector
+/// products — f64, through the full service path (burst submitted
+/// before any recv, so the dispatcher actually coalesces).
+#[test]
+fn batched_serving_matches_single_vector_oracle_f64() {
+    let _guard = serial();
+    let csr = suite::quantum_clusters(500, 4, 9, 6, 19);
+    let engine = SpmvEngine::builder(csr.clone())
+        .kernel(KernelKind::Beta(2, 8))
+        .threads(3)
+        .build()
+        .unwrap();
+    let service = SpmvService::start(engine, 8);
+    let n = 48u64;
+    for id in 0..n {
+        let x: Vec<f64> = (0..csr.cols)
+            .map(|i| ((i as u64 * 7 + id * 3) % 23) as f64 * 0.125 - 1.0)
+            .collect();
+        service.submit(Request { id, x }).unwrap();
+    }
+    for _ in 0..n {
+        let resp = service.recv().expect("response");
+        let x: Vec<f64> = (0..csr.cols)
+            .map(|i| ((i as u64 * 7 + resp.id * 3) % 23) as f64 * 0.125 - 1.0)
+            .collect();
+        let mut want = vec![0.0; csr.rows];
+        csr.spmv_ref(&x, &mut want);
+        for i in 0..csr.rows {
+            assert!(
+                (resp.y[i] - want[i]).abs() <= 1e-9 * want[i].abs().max(1.0),
+                "id {} row {i}",
+                resp.id
+            );
+        }
+    }
+    let stats = service.stats();
+    assert_eq!(stats.served, n as usize);
+    assert_eq!(service.shutdown(), n as usize);
+}
+
+/// Same differential, f32 through the 16-lane stack.
+#[test]
+fn batched_serving_matches_single_vector_oracle_f32() {
+    let _guard = serial();
+    let csr32: Csr<f32> = suite::banded(600, 12, 0.5, 9).to_precision();
+    let engine = SpmvEngine::builder(csr32.clone())
+        .kernel(KernelKind::Beta(2, 16))
+        .threads(2)
+        .build()
+        .unwrap();
+    let service = SpmvService::start(engine, 6);
+    let n = 30u64;
+    for id in 0..n {
+        let x: Vec<f32> = (0..csr32.cols)
+            .map(|i| ((i as u64 * 5 + id) % 17) as f32 * 0.1 - 0.8)
+            .collect();
+        service.submit(Request { id, x }).unwrap();
+    }
+    for _ in 0..n {
+        let resp = service.recv().expect("response");
+        let x: Vec<f32> = (0..csr32.cols)
+            .map(|i| ((i as u64 * 5 + resp.id) % 17) as f32 * 0.1 - 0.8)
+            .collect();
+        let mut want = vec![0.0f32; csr32.rows];
+        csr32.spmv_ref(&x, &mut want);
+        for i in 0..csr32.rows {
+            assert!(
+                (resp.y[i] - want[i]).abs() <= 2e-4 * want[i].abs().max(1.0),
+                "id {} row {i}",
+                resp.id
+            );
+        }
+    }
+    assert_eq!(service.shutdown(), n as usize);
+}
+
+/// Direct (no service) engine-level differential: `spmm` against k
+/// engine `spmv` calls at both precisions, parallel storage.
+#[test]
+fn engine_spmm_differential_both_precisions() {
+    let _guard = serial();
+    let csr = suite::fem_blocked(300, 3, 6, 23);
+    let k = 5usize;
+    let e64 = SpmvEngine::builder(csr.clone())
+        .kernel(KernelKind::Beta(4, 4))
+        .threads(3)
+        .build()
+        .unwrap();
+    let x64: Vec<f64> = (0..csr.cols * k)
+        .map(|i| ((i * 11) % 31) as f64 * 0.0625 - 0.9)
+        .collect();
+    let mut y64 = vec![0.0; csr.rows * k];
+    e64.spmm_into(&x64, &mut y64, k);
+    for j in 0..k {
+        let xj: Vec<f64> = (0..csr.cols).map(|c| x64[c * k + j]).collect();
+        let mut want = vec![0.0; csr.rows];
+        e64.spmv_into(&xj, &mut want);
+        for r in 0..csr.rows {
+            assert!(
+                (y64[r * k + j] - want[r]).abs()
+                    <= 1e-9 * want[r].abs().max(1.0),
+                "f64 j={j} row {r}"
+            );
+        }
+    }
+
+    let csr32: Csr<f32> = csr.to_precision();
+    let e32 = SpmvEngine::builder(csr32.clone())
+        .kernel(KernelKind::Beta(1, 16))
+        .threads(3)
+        .build()
+        .unwrap();
+    let x32: Vec<f32> = x64.iter().map(|&v| v as f32).collect();
+    let mut y32 = vec![0.0f32; csr32.rows * k];
+    e32.spmm_into(&x32, &mut y32, k);
+    for j in 0..k {
+        let xj: Vec<f32> = (0..csr32.cols).map(|c| x32[c * k + j]).collect();
+        let mut want = vec![0.0f32; csr32.rows];
+        e32.spmv_into(&xj, &mut want);
+        for r in 0..csr32.rows {
+            assert!(
+                (y32[r * k + j] - want[r]).abs()
+                    <= 2e-4 * want[r].abs().max(1.0),
+                "f32 j={j} row {r}"
+            );
+        }
+    }
+}
