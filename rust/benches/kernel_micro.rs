@@ -6,16 +6,30 @@
 //! Workload: banded matrices whose in-band density sweeps 10%..100%,
 //! so `Avg(r,c)` moves while dims and nnz structure stay comparable.
 
-use spc5::bench::{bench_vector, Table, RUNS};
+use spc5::bench::{bench_vector, runner, to_record, Measurement, Table, RUNS};
+use spc5::coordinator::SpmvEngine;
 use spc5::formats::{csr_to_block, BlockSize};
 use spc5::kernels::{avx512, scalar, spmm, spmv_block, KernelKind, KernelSet};
-use spc5::matrix::{reorder, suite};
+use spc5::matrix::{reorder, suite, Csr};
 use spc5::parallel::{ParallelSpmv, ParallelStrategy, WorkerPool};
+use spc5::predictor::RecordStore;
 use spc5::util::timer::{mean_of_runs, spmv_gflops};
 
 fn main() {
+    // `SPC5_ABLATION=<name>` runs a single section (CI runs `hybrid`
+    // to produce the BENCH_3.json artifact without the full sweep).
+    if let Ok(only) = std::env::var("SPC5_ABLATION") {
+        match only.as_str() {
+            "hybrid" => return hybrid_ablation(),
+            "prefetch" => return prefetch_ablation(),
+            other => {
+                eprintln!("unknown SPC5_ABLATION='{other}', running all")
+            }
+        }
+    }
     fill_sweep();
     simd_vs_scalar();
+    prefetch_ablation();
     reorder_ablation();
     f32_vs_f64();
     spmm_ablation();
@@ -23,6 +37,7 @@ fn main() {
     pool_handoff_ablation();
     batched_parallel_ablation();
     predictor_ablation();
+    hybrid_ablation();
 }
 
 /// GFlop/s vs block fill for every kernel.
@@ -60,6 +75,158 @@ fn fill_sweep() {
         eprintln!("  density {:.0}%", density * 100.0);
     }
     t.emit("ablation_fill");
+}
+
+/// Software-prefetch ablation: the β hot loops issue `_mm_prefetch`
+/// for the next blocks' header/value cache lines (on by default); this
+/// measures both sides on a streaming-bound and a cache-resident
+/// matrix to prove the hint is not a regression.
+fn prefetch_ablation() {
+    let mut t = Table::new(
+        "Ablation P: software prefetch in the β hot loops (on vs off)",
+        &["matrix", "kernel", "pf on GF/s", "pf off GF/s", "on/off"],
+    );
+    let mats = [
+        ("fem-30k", suite::fem_blocked(30_000, 3, 8, 5)),
+        ("banded-40k", suite::banded(40_000, 24, 0.6, 77)),
+    ];
+    let kernels = [
+        KernelKind::Beta(1, 8),
+        KernelKind::Beta(2, 4),
+        KernelKind::Beta(2, 8),
+        KernelKind::Beta(4, 8),
+        KernelKind::Beta(8, 4),
+    ];
+    for (name, csr) in &mats {
+        let set = KernelSet::prepare(csr.clone(), &kernels);
+        for &k in &kernels {
+            avx512::set_prefetch(true);
+            let g_on = spc5::bench::measure_sequential(&set, name, k).gflops;
+            avx512::set_prefetch(false);
+            let g_off = spc5::bench::measure_sequential(&set, name, k).gflops;
+            avx512::set_prefetch(true);
+            t.row(vec![
+                name.to_string(),
+                k.to_string(),
+                format!("{g_on:.2}"),
+                format!("{g_off:.2}"),
+                format!("{:.3}x", g_on / g_off),
+            ]);
+        }
+        eprintln!("  prefetch ablation: {name}");
+    }
+    t.emit("ablation_prefetch");
+}
+
+/// Hybrid row-panel schedule vs every fixed kernel, on homogeneous
+/// suite-class matrices (hybrid should tie the best fixed β) and on a
+/// constructed mixed matrix — banded half + scattered half — where no
+/// fixed kernel is right for both halves (hybrid should win outright).
+/// Fixed-kernel measurements double as the predictor records that
+/// drive the per-panel choice, and everything is persisted to
+/// `BENCH_3.json` (CI uploads it as an artifact).
+fn hybrid_ablation() {
+    let mats: Vec<(&str, Csr)> = vec![
+        ("banded-dense", suite::banded(20_000, 24, 1.0, 7)),
+        ("banded-mid", suite::banded(20_000, 24, 0.5, 8)),
+        ("fem-blocked", suite::fem_blocked(8_000, 3, 8, 9)),
+        ("contact", suite::contact_runs(6_000, 3, 48, 10)),
+        ("scatter", suite::uniform_scatter(20_000, 8, 11)),
+        ("mixed-band-scatter", suite::mixed_band_scatter(24_000, 12)),
+    ];
+    let fixed = [
+        KernelKind::Csr,
+        KernelKind::Beta(1, 8),
+        KernelKind::Beta(2, 4),
+        KernelKind::Beta(2, 8),
+        KernelKind::Beta(4, 4),
+        KernelKind::Beta(4, 8),
+        KernelKind::Beta(8, 4),
+    ];
+
+    // Pass 1: fixed kernels — measurements + predictor records.
+    let mut store = RecordStore::new();
+    let mut all: Vec<Measurement> = Vec::new();
+    for (name, csr) in &mats {
+        let set = KernelSet::prepare(csr.clone(), &fixed);
+        for &k in &fixed {
+            let m = spc5::bench::measure_sequential(&set, name, k);
+            store.push(to_record(&m, runner::kernel_avg(k, csr)));
+            all.push(m);
+        }
+        eprintln!("  hybrid ablation: measured fixed kernels on {name}");
+    }
+
+    // Pass 2: hybrid, per-panel choices driven by the records above.
+    let mut t = Table::new(
+        "Ablation J: hybrid row-panel schedule vs fixed kernels (sequential)",
+        &[
+            "matrix",
+            "hybrid GF/s",
+            "segments",
+            "best fixed",
+            "best GF/s",
+            "hybrid/best",
+            "best β GF/s",
+            "hybrid/best-β",
+        ],
+    );
+    for (name, csr) in &mats {
+        let engine = SpmvEngine::builder(csr.clone())
+            .kernel(KernelKind::Hybrid)
+            .records(&store)
+            .build()
+            .expect("hybrid engine builds");
+        let x = bench_vector(csr.cols, 0xBE7C);
+        let mut y = vec![0.0f64; csr.rows];
+        let seconds = mean_of_runs(RUNS, || engine.spmv(&x, &mut y));
+        std::hint::black_box(&y);
+        let gflops = spmv_gflops(csr.nnz(), seconds);
+        let segments = engine.hybrid().map_or(0, |hm| hm.n_segments());
+        all.push(Measurement {
+            matrix: name.to_string(),
+            kernel: KernelKind::Hybrid,
+            threads: 1,
+            numa: false,
+            gflops,
+            seconds,
+        });
+
+        let best = |pred: &dyn Fn(&Measurement) -> bool| {
+            all.iter()
+                .filter(|&m| m.matrix == *name && pred(m))
+                .max_by(|a, b| a.gflops.total_cmp(&b.gflops))
+                .expect("measured")
+                .clone()
+        };
+        let best_fixed = best(&|m| m.kernel != KernelKind::Hybrid);
+        let best_beta = best(&|m| {
+            matches!(m.kernel, KernelKind::Beta(..) | KernelKind::BetaTest(..))
+        });
+        t.row(vec![
+            name.to_string(),
+            format!("{gflops:.2}"),
+            format!("{segments}"),
+            best_fixed.kernel.to_string(),
+            format!("{:.2}", best_fixed.gflops),
+            format!("{:.3}x", gflops / best_fixed.gflops),
+            format!("{:.2}", best_beta.gflops),
+            format!("{:.3}x", gflops / best_beta.gflops),
+        ]);
+        eprintln!("  hybrid ablation: {name} hybrid {gflops:.2} GF/s");
+    }
+    t.emit("ablation_hybrid");
+
+    let out = std::env::var("SPC5_BENCH_JSON")
+        .unwrap_or_else(|_| "BENCH_3.json".to_string());
+    match runner::write_bench_json(
+        std::path::Path::new(&out),
+        "kernel_micro/hybrid",
+        &all,
+    ) {
+        Ok(()) => eprintln!("  wrote {out}"),
+        Err(e) => eprintln!("warning: {e}"),
+    }
 }
 
 /// Reordering ablation (paper §Matrix permutation: "any improvement to

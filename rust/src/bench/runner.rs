@@ -136,6 +136,40 @@ pub fn ensure_records(
     Ok(store)
 }
 
+/// Writes a machine-readable benchmark report (GFlop/s per matrix ×
+/// kernel) — the artifact CI uploads so the perf trajectory of the
+/// repo is tracked across commits (`BENCH_3.json` for this PR's hybrid
+/// evidence). Schema: `{schema, suite, avx512, results: [{matrix,
+/// kernel, threads, numa, gflops, seconds}]}`.
+pub fn write_bench_json(
+    path: &std::path::Path,
+    suite_label: &str,
+    measurements: &[Measurement],
+) -> anyhow::Result<()> {
+    use crate::util::json::Json;
+    let results: Vec<Json> = measurements
+        .iter()
+        .map(|m| {
+            Json::obj(vec![
+                ("matrix", Json::Str(m.matrix.clone())),
+                ("kernel", Json::Str(m.kernel.to_string())),
+                ("threads", Json::Num(m.threads as f64)),
+                ("numa", Json::Bool(m.numa)),
+                ("gflops", Json::Num(m.gflops)),
+                ("seconds", Json::Num(m.seconds)),
+            ])
+        })
+        .collect();
+    let doc = Json::obj(vec![
+        ("schema", Json::Str("spc5-bench-v1".into())),
+        ("suite", Json::Str(suite_label.into())),
+        ("avx512", Json::Bool(crate::util::avx512_available())),
+        ("results", Json::Arr(results)),
+    ]);
+    std::fs::write(path, format!("{doc}\n"))
+        .map_err(|e| anyhow::anyhow!("write {}: {e}", path.display()))
+}
+
 /// Best measurement per matrix among `filter`-selected kernels.
 pub fn best_by_matrix<'a>(
     ms: &'a [Measurement],

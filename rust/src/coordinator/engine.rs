@@ -23,8 +23,18 @@
 //!
 //! The engine serves **every** [`KernelKind`]: the `β(r,c)` kernels
 //! (sequential or block-balanced parallel), the CSR baseline
-//! (row-chunked across threads), and the CSR5 comparator (sequential —
-//! the reference CSR5 kernel carries open-row state across tiles).
+//! (row-chunked across threads), the CSR5 comparator (sequential —
+//! the reference CSR5 kernel carries open-row state across tiles),
+//! and the hybrid row-panel schedule
+//! ([`crate::formats::HybridMatrix`]: per-panel β/CSR choice driven by
+//! the fill crossover and the predictor's fitted surface, parallel by
+//! nnz-balanced segment chunks on the pool).
+//!
+//! Two build-time levers ride on the builder:
+//! [`SpmvEngineBuilder::panel_rows`] tunes the hybrid panel height and
+//! [`SpmvEngineBuilder::reorder`] applies RCM / column-packing before
+//! profiling and conversion (products transparently permute x/y, so
+//! callers keep their original index space).
 //!
 //! With `threads > 1` the engine owns **one** [`WorkerPool`] for its
 //! lifetime: the β runtime attaches to it, the row-chunked CSR path
@@ -38,15 +48,19 @@
 //! micro-batching dispatcher coalesces concurrent requests into.
 
 use crate::formats::stats::paper_profile;
-use crate::formats::{csr_to_block, BlockMatrix};
+use crate::formats::{
+    csr_to_block, BlockMatrix, BlockSize, HybridConfig, HybridMatrix,
+};
 use crate::kernels::{csr as csr_kernel, csr5, spmm, spmv_block, KernelKind};
+use crate::matrix::reorder::{self, Permutation, ReorderKind};
 use crate::matrix::Csr;
 use crate::parallel::{
-    ParallelSpmv, ParallelStrategy, SendSlice, WorkerPool,
+    balanced_prefix_split, ParallelSpmv, ParallelStrategy, SendSlice,
+    WorkerPool,
 };
 use crate::predictor::{select_parallel, select_sequential, RecordStore};
 use crate::scalar::Scalar;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 /// The storage a built engine dispatches to.
 enum Storage<T: Scalar> {
@@ -59,6 +73,31 @@ enum Storage<T: Scalar> {
     Csr { chunks: Vec<(usize, usize)> },
     /// CSR5 comparator (sequential by construction).
     Csr5(csr5::Csr5Matrix<T>),
+    /// Heterogeneous row-panel schedule; `chunks` holds the
+    /// nnz-balanced *segment* split when `threads > 1`.
+    Hybrid { hm: HybridMatrix<T>, chunks: Vec<(usize, usize)> },
+}
+
+/// The permutations a reordering engine applies around every product:
+/// the bound matrix is `B[i,j] = A[rows[i], cols[j]]`, so `x` is
+/// gathered through `cols` on the way in and `y` scattered through
+/// `rows` on the way out — callers keep the original index space.
+struct ReorderState<T: Scalar> {
+    kind: ReorderKind,
+    rows: Permutation,
+    cols: Permutation,
+    /// Reusable gather/scatter buffers `(xp, yp)` — allocating them
+    /// per call would reintroduce the hot-path allocation the pool
+    /// runtime removed. The lock is uncontended in practice (products
+    /// on one engine are serialized by their callers); it exists so
+    /// `spmv(&self, ..)` stays shareable.
+    scratch: Mutex<(Vec<T>, Vec<T>)>,
+}
+
+impl<T: Scalar> ReorderState<T> {
+    fn new(kind: ReorderKind, rows: Permutation, cols: Permutation) -> Self {
+        ReorderState { kind, rows, cols, scratch: Mutex::new((Vec::new(), Vec::new())) }
+    }
 }
 
 /// A matrix bound to its chosen kernel and storage, ready to serve.
@@ -71,6 +110,9 @@ pub struct SpmvEngine<T: Scalar = f64> {
     /// The persistent runtime every parallel path runs on, created
     /// once at build time (`None` when `threads == 1`).
     pool: Option<Arc<WorkerPool>>,
+    /// Build-time reordering; when present, `csr` is the *permuted*
+    /// matrix and every `spmv`/`spmm` transparently permutes x/y.
+    reorder: Option<ReorderState<T>>,
 }
 
 /// Fluent configuration for [`SpmvEngine`] — replaces the old
@@ -82,6 +124,8 @@ pub struct SpmvEngineBuilder<'r, T: Scalar = f64> {
     kernel: Option<KernelKind>,
     candidates: Vec<KernelKind>,
     records: Option<&'r RecordStore>,
+    panel_rows: usize,
+    reorder: Option<ReorderKind>,
 }
 
 impl<T: Scalar> SpmvEngine<T> {
@@ -98,6 +142,8 @@ impl<T: Scalar> SpmvEngine<T> {
             kernel: None,
             candidates: KernelKind::SPC5_KERNELS.to_vec(),
             records: None,
+            panel_rows: crate::formats::hybrid::DEFAULT_PANEL_ROWS,
+            reorder: None,
         }
     }
 
@@ -128,8 +174,43 @@ impl<T: Scalar> SpmvEngine<T> {
         self.pool.as_ref()
     }
 
-    /// `y += A·x` through the chosen kernel and runtime.
+    /// The reordering applied at build time, if any.
+    pub fn reorder_kind(&self) -> Option<ReorderKind> {
+        self.reorder.as_ref().map(|r| r.kind)
+    }
+
+    /// For hybrid engines: the compiled panel schedule.
+    pub fn hybrid(&self) -> Option<&HybridMatrix<T>> {
+        match &self.storage {
+            Storage::Hybrid { hm, .. } => Some(hm),
+            _ => None,
+        }
+    }
+
+    /// `y += A·x` through the chosen kernel and runtime. When the
+    /// engine was built with a reordering, `x`/`y` stay in the
+    /// caller's original index space — the permutation is applied
+    /// internally around the product.
     pub fn spmv(&self, x: &[T], y: &mut [T]) {
+        match &self.reorder {
+            None => self.spmv_permuted(x, y),
+            Some(st) => {
+                let mut guard = st.scratch.lock().expect("scratch poisoned");
+                let (xp, yp) = &mut *guard;
+                xp.clear();
+                xp.extend(st.cols.perm.iter().map(|&old| x[old as usize]));
+                yp.clear();
+                yp.resize(self.csr.rows, T::ZERO);
+                self.spmv_permuted(xp, yp);
+                for (new_r, &old_r) in st.rows.perm.iter().enumerate() {
+                    y[old_r as usize] += yp[new_r];
+                }
+            }
+        }
+    }
+
+    /// `y += B·x` in the bound (possibly permuted) index space.
+    fn spmv_permuted(&self, x: &[T], y: &mut [T]) {
         match &self.storage {
             Storage::Block(bm) => spmv_block(
                 bm,
@@ -146,6 +227,13 @@ impl<T: Scalar> SpmvEngine<T> {
                 }
             }
             Storage::Csr5(m) => m.spmv(x, y),
+            Storage::Hybrid { hm, chunks } => {
+                if chunks.is_empty() {
+                    hm.spmv(x, y);
+                } else {
+                    self.hybrid_parallel(hm, chunks, x, y, 1);
+                }
+            }
         }
     }
 
@@ -170,9 +258,43 @@ impl<T: Scalar> SpmvEngine<T> {
         if k == 1 {
             return self.spmv(x, y);
         }
+        match &self.reorder {
+            None => self.spmm_permuted(x, y, k),
+            Some(st) => {
+                let mut guard = st.scratch.lock().expect("scratch poisoned");
+                let (xp, yp) = &mut *guard;
+                xp.clear();
+                xp.resize(x.len(), T::ZERO);
+                for (new_c, &old_c) in st.cols.perm.iter().enumerate() {
+                    let old_c = old_c as usize;
+                    xp[new_c * k..(new_c + 1) * k]
+                        .copy_from_slice(&x[old_c * k..(old_c + 1) * k]);
+                }
+                yp.clear();
+                yp.resize(y.len(), T::ZERO);
+                self.spmm_permuted(xp, yp, k);
+                for (new_r, &old_r) in st.rows.perm.iter().enumerate() {
+                    let old_r = old_r as usize;
+                    for j in 0..k {
+                        y[old_r * k + j] += yp[new_r * k + j];
+                    }
+                }
+            }
+        }
+    }
+
+    /// Multi-RHS product in the bound (possibly permuted) index space.
+    fn spmm_permuted(&self, x: &[T], y: &mut [T], k: usize) {
         match &self.storage {
             Storage::Block(bm) => spmm::spmm_auto(bm, x, y, k),
             Storage::BlockParallel(p) => p.spmm(x, y, k),
+            Storage::Hybrid { hm, chunks } => {
+                if chunks.is_empty() {
+                    hm.spmm(x, y, k);
+                } else {
+                    self.hybrid_parallel(hm, chunks, x, y, k);
+                }
+            }
             Storage::Csr { .. } | Storage::Csr5(_) => {
                 // No native multi-RHS kernel for the baselines: run k
                 // de-interleaved single-vector products.
@@ -184,7 +306,9 @@ impl<T: Scalar> SpmvEngine<T> {
                         xj[c] = x[c * k + j];
                     }
                     yj.iter_mut().for_each(|v| *v = T::ZERO);
-                    self.spmv(&xj, &mut yj);
+                    // `x` is already in the bound index space here, so
+                    // stay below the reorder wrapper.
+                    self.spmv_permuted(&xj, &mut yj);
                     for r in 0..rows {
                         y[r * k + j] += yj[r];
                     }
@@ -202,6 +326,41 @@ impl<T: Scalar> SpmvEngine<T> {
     /// The Table-1-style stats row for the bound matrix.
     pub fn profile(&self) -> Vec<crate::formats::BlockStats> {
         paper_profile(&self.csr)
+    }
+
+    /// Parallel hybrid pass: each pool worker owns a contiguous run of
+    /// schedule segments (balanced by nnz at build time) and writes the
+    /// disjoint `y` rows those segments cover — the same syncless-merge
+    /// shape as the other parallel paths. Serves both SpMV (`k == 1`)
+    /// and SpMM (`k > 1`) epochs.
+    fn hybrid_parallel(
+        &self,
+        hm: &HybridMatrix<T>,
+        chunks: &[(usize, usize)],
+        x: &[T],
+        y: &mut [T],
+        k: usize,
+    ) {
+        let pool = self.pool.as_ref().expect("parallel hybrid needs the pool");
+        debug_assert_eq!(chunks.len(), pool.n_threads());
+        let y_all = SendSlice::new(y);
+        pool.run(|ctx: crate::parallel::WorkerCtx<'_>| {
+            let (s0, s1) = chunks[ctx.tid];
+            for seg in &hm.segments[s0..s1] {
+                // SAFETY: segments are ordered and disjoint in rows, and
+                // chunks are contiguous disjoint segment ranges, so no
+                // two workers touch the same `y` rows; the borrow
+                // outlives the blocked `run` call.
+                let part = unsafe {
+                    y_all.subslice_mut(seg.row_begin * k, seg.row_end * k)
+                };
+                if k == 1 {
+                    seg.spmv(x, part);
+                } else {
+                    seg.spmm(x, part, k);
+                }
+            }
+        });
     }
 
     /// Row-chunked parallel CSR: each **pool** worker owns a disjoint
@@ -258,6 +417,23 @@ impl<'r, T: Scalar> SpmvEngineBuilder<'r, T> {
         self
     }
 
+    /// Rows per panel for the hybrid schedule (must be a positive
+    /// multiple of 8; only used by [`KernelKind::Hybrid`]).
+    pub fn panel_rows(mut self, rows: usize) -> Self {
+        self.panel_rows = rows;
+        self
+    }
+
+    /// Applies a bandwidth/fill-improving reordering to the matrix at
+    /// build time (paper §"Matrix permutation/reordering"). The engine
+    /// stores the permuted matrix and transparently permutes `x`/`y`
+    /// in every `spmv`/`spmm`, so callers keep their original index
+    /// space. [`ReorderKind::Rcm`] needs a square matrix.
+    pub fn reorder(mut self, kind: ReorderKind) -> Self {
+        self.reorder = Some(kind);
+        self
+    }
+
     /// Performance records the predictor selects from.
     pub fn records<'b>(self, store: &'b RecordStore) -> SpmvEngineBuilder<'b, T> {
         SpmvEngineBuilder {
@@ -267,6 +443,8 @@ impl<'r, T: Scalar> SpmvEngineBuilder<'r, T> {
             kernel: self.kernel,
             candidates: self.candidates,
             records: Some(store),
+            panel_rows: self.panel_rows,
+            reorder: self.reorder,
         }
     }
 
@@ -280,7 +458,35 @@ impl<'r, T: Scalar> SpmvEngineBuilder<'r, T> {
             kernel,
             candidates,
             records,
+            panel_rows,
+            reorder: reorder_kind,
         } = self;
+
+        // Build-time reordering: permute first so block-fill profiling,
+        // kernel selection and conversion all see the improved shape.
+        let (csr, reorder_state) = match reorder_kind {
+            None => (csr, None),
+            Some(ReorderKind::Rcm) => {
+                anyhow::ensure!(
+                    csr.rows == csr.cols,
+                    "RCM reordering needs a square matrix \
+                     ({}x{} given)",
+                    csr.rows,
+                    csr.cols
+                );
+                let p = reorder::cuthill_mckee(&csr);
+                let permuted = reorder::permute(&csr, &p, &p);
+                let st = ReorderState::new(ReorderKind::Rcm, p.clone(), p);
+                (permuted, Some(st))
+            }
+            Some(ReorderKind::ColPack) => {
+                let rows = Permutation::identity(csr.rows);
+                let cols = reorder::column_pack(&csr);
+                let permuted = reorder::permute(&csr, &rows, &cols);
+                let st = ReorderState::new(ReorderKind::ColPack, rows, cols);
+                (permuted, Some(st))
+            }
+        };
 
         let (kernel, predicted) = match kernel {
             Some(k) => (k, None),
@@ -320,6 +526,34 @@ impl<'r, T: Scalar> SpmvEngineBuilder<'r, T> {
             KernelKind::Csr5 => {
                 Storage::Csr5(csr5::Csr5Matrix::from_csr(&csr))
             }
+            KernelKind::Hybrid => {
+                let cfg = HybridConfig {
+                    panel_rows,
+                    candidates: hybrid_candidates::<T>(&candidates),
+                    // Ask the schedule compiler for ≥ one segment per
+                    // worker, else a homogeneous matrix merges into a
+                    // single segment and parallelism collapses.
+                    split: threads,
+                };
+                // Fitted GFlop/s surface for the panel compiler when
+                // records exist (sequential fits — the panel decision
+                // models single-span kernel speed).
+                let kinds: Vec<KernelKind> = std::iter::once(KernelKind::Csr)
+                    .chain(cfg.candidates.iter().map(|bs| {
+                        KernelKind::Beta(bs.r as u8, bs.c as u8)
+                    }))
+                    .collect();
+                let models = records.map(|store| {
+                    crate::predictor::select::fit_sequential(store, &kinds)
+                });
+                let hm = HybridMatrix::from_csr(&csr, &cfg, models.as_ref())?;
+                let chunks = if threads > 1 {
+                    hybrid_segment_chunks(&hm, threads)
+                } else {
+                    Vec::new()
+                };
+                Storage::Hybrid { hm, chunks }
+            }
             KernelKind::Beta(..) | KernelKind::BetaTest(..) => {
                 let bs = kernel.block_size().expect("β kernel has a size");
                 let block = csr_to_block(&csr, bs)?;
@@ -350,8 +584,49 @@ impl<'r, T: Scalar> SpmvEngineBuilder<'r, T> {
             storage,
             threads,
             pool,
+            reorder: reorder_state,
         })
     }
+}
+
+/// β candidate sizes for the hybrid panel compiler: the builder's
+/// candidate kernels filtered to sizes valid at this precision — or,
+/// when the builder still holds the default f64 list, the precision's
+/// own default set (so an f32 hybrid engine considers the 16-lane
+/// sizes it has AVX-512 kernels for).
+fn hybrid_candidates<T: Scalar>(kinds: &[KernelKind]) -> Vec<BlockSize> {
+    if kinds == KernelKind::SPC5_KERNELS {
+        return HybridConfig::for_scalar::<T>().candidates;
+    }
+    let mut sizes: Vec<BlockSize> = kinds
+        .iter()
+        .filter_map(|k| k.block_size())
+        .filter(|bs| bs.validate_for::<T>().is_ok())
+        .collect();
+    sizes.sort_unstable();
+    sizes.dedup();
+    if sizes.is_empty() {
+        HybridConfig::for_scalar::<T>().candidates
+    } else {
+        sizes
+    }
+}
+
+/// Splits the hybrid schedule's segment list into `n` contiguous runs
+/// of approximately equal nnz (the same prefix rule as the β and CSR
+/// parallel paths).
+fn hybrid_segment_chunks<T: Scalar>(
+    hm: &HybridMatrix<T>,
+    n: usize,
+) -> Vec<(usize, usize)> {
+    let mut prefix = Vec::with_capacity(hm.segments.len() + 1);
+    prefix.push(0u32);
+    let mut acc = 0u64;
+    for s in &hm.segments {
+        acc += s.nnz as u64;
+        prefix.push(u32::try_from(acc).expect("nnz fits the u32 prefix"));
+    }
+    balanced_prefix_split(&prefix, n)
 }
 
 /// Splits `0..rows` into `n` contiguous chunks with approximately equal
@@ -540,6 +815,180 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn hybrid_engine_matches_reference_seq_and_par() {
+        let csr = suite::mixed_band_scatter(2_048, 5);
+        let x: Vec<f64> = (0..csr.cols).map(|i| (i % 9) as f64 - 4.0).collect();
+        let mut want = vec![0.0; csr.rows];
+        csr.spmv_ref(&x, &mut want);
+        for threads in [1usize, 3] {
+            let e = SpmvEngine::builder(csr.clone())
+                .kernel(KernelKind::Hybrid)
+                .panel_rows(128)
+                .threads(threads)
+                .build()
+                .unwrap();
+            assert_eq!(e.kernel(), KernelKind::Hybrid);
+            let hm = e.hybrid().expect("hybrid storage");
+            hm.validate().unwrap();
+            assert!(hm.n_segments() >= 2, "mixed matrix should split");
+            let mut y = vec![0.0; csr.rows];
+            e.spmv_into(&x, &mut y);
+            crate::testkit::assert_close(
+                &y,
+                &want,
+                1e-9,
+                &format!("hybrid t={threads}"),
+            );
+        }
+    }
+
+    #[test]
+    fn hybrid_engine_spmm_matches_k_spmvs() {
+        let csr = suite::mixed_band_scatter(1_536, 11);
+        let k = 4usize;
+        let mut rng = crate::util::Rng::new(3);
+        let x: Vec<f64> =
+            (0..csr.cols * k).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+        for threads in [1usize, 3] {
+            let e = SpmvEngine::builder(csr.clone())
+                .kernel(KernelKind::Hybrid)
+                .panel_rows(64)
+                .threads(threads)
+                .build()
+                .unwrap();
+            let mut y = vec![0.0; csr.rows * k];
+            e.spmm_into(&x, &mut y, k);
+            for j in 0..k {
+                let xj: Vec<f64> =
+                    (0..csr.cols).map(|c| x[c * k + j]).collect();
+                let mut want = vec![0.0; csr.rows];
+                e.spmv_into(&xj, &mut want);
+                for r in 0..csr.rows {
+                    assert!(
+                        (y[r * k + j] - want[r]).abs()
+                            <= 1e-9 * want[r].abs().max(1.0),
+                        "t={threads} j={j} row {r}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn hybrid_rejects_bad_panel_rows() {
+        let csr = suite::poisson2d(8);
+        let err = SpmvEngine::builder(csr)
+            .kernel(KernelKind::Hybrid)
+            .panel_rows(12)
+            .build();
+        assert!(err.is_err(), "panel_rows=12 must be rejected");
+    }
+
+    #[test]
+    fn reorder_preserves_spmv_and_spmm_semantics() {
+        use crate::matrix::ReorderKind;
+        // Shuffled structured matrix: reordering changes the internal
+        // layout, but engine products must stay in the caller's index
+        // space for every kernel class.
+        let m = suite::quantum_clusters(400, 3, 8, 6, 5);
+        let mut rng = crate::util::Rng::new(2);
+        let mut perm: Vec<u32> = (0..m.rows as u32).collect();
+        rng.shuffle(&mut perm);
+        let p = crate::matrix::reorder::Permutation { perm };
+        let csr = crate::matrix::reorder::permute(&m, &p, &p);
+
+        let x: Vec<f64> = (0..csr.cols).map(|i| (i % 7) as f64 - 3.0).collect();
+        let mut want = vec![0.0; csr.rows];
+        csr.spmv_ref(&x, &mut want);
+        for kind in [ReorderKind::Rcm, ReorderKind::ColPack] {
+            for kernel in [
+                KernelKind::Beta(2, 4),
+                KernelKind::Csr,
+                KernelKind::Hybrid,
+            ] {
+                let e = SpmvEngine::builder(csr.clone())
+                    .kernel(kernel)
+                    .reorder(kind)
+                    .panel_rows(64)
+                    .build()
+                    .unwrap();
+                assert_eq!(e.reorder_kind(), Some(kind));
+                let mut y = vec![0.0; csr.rows];
+                e.spmv_into(&x, &mut y);
+                crate::testkit::assert_close(
+                    &y,
+                    &want,
+                    1e-9,
+                    &format!("{kind} {kernel}"),
+                );
+                // spmm path under reordering.
+                let k = 3usize;
+                let xk: Vec<f64> = (0..csr.cols * k)
+                    .map(|i| ((i * 5) % 13) as f64 * 0.25 - 1.5)
+                    .collect();
+                let mut yk = vec![0.0; csr.rows * k];
+                e.spmm_into(&xk, &mut yk, k);
+                for j in 0..k {
+                    let xj: Vec<f64> =
+                        (0..csr.cols).map(|c| xk[c * k + j]).collect();
+                    let mut wj = vec![0.0; csr.rows];
+                    csr.spmv_ref(&xj, &mut wj);
+                    for r in 0..csr.rows {
+                        assert!(
+                            (yk[r * k + j] - wj[r]).abs()
+                                <= 1e-9 * wj[r].abs().max(1.0),
+                            "{kind} {kernel} spmm j={j} row {r}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn rcm_reorder_requires_square() {
+        use crate::matrix::ReorderKind;
+        let csr = suite::rect_runs(40, 400, 3, 20, 1);
+        assert!(SpmvEngine::builder(csr.clone())
+            .reorder(ReorderKind::Rcm)
+            .build()
+            .is_err());
+        // Column packing has no squareness requirement.
+        SpmvEngine::builder(csr)
+            .reorder(ReorderKind::ColPack)
+            .kernel(KernelKind::Csr)
+            .build()
+            .unwrap();
+    }
+
+    #[test]
+    fn reorder_improves_fill_on_shuffled_band() {
+        use crate::matrix::ReorderKind;
+        // RCM at build time must improve the β(2,8) fill the engine
+        // sees (the reason to wire reordering into the engine at all).
+        let band = suite::banded(600, 6, 1.0, 3);
+        let mut rng = crate::util::Rng::new(7);
+        let mut perm: Vec<u32> = (0..600).collect();
+        rng.shuffle(&mut perm);
+        let p = crate::matrix::reorder::Permutation { perm };
+        let shuffled = crate::matrix::reorder::permute(&band, &p, &p);
+        let bs = crate::formats::BlockSize::new(2, 8);
+        let fill_before =
+            crate::formats::stats::block_stats(&shuffled, bs).avg_nnz_per_block;
+        let e = SpmvEngine::builder(shuffled)
+            .kernel(KernelKind::Beta(2, 8))
+            .reorder(ReorderKind::Rcm)
+            .build()
+            .unwrap();
+        let fill_after =
+            crate::formats::stats::block_stats(e.csr(), bs).avg_nnz_per_block;
+        assert!(
+            fill_after > fill_before * 1.2,
+            "RCM should recover fill: {fill_before:.2} -> {fill_after:.2}"
+        );
     }
 
     #[test]

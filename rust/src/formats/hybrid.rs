@@ -1,0 +1,654 @@
+//! Heterogeneous row-panel storage: per-panel `β(r,c)` / CSR kernel
+//! selection.
+//!
+//! The paper's own conclusion — the optimal `β(r,c)` depends on the
+//! matrix — is applied by the engine at whole-matrix granularity, but
+//! real matrices are heterogeneous *within* themselves (a banded FEM
+//! region next to a scattered coupling region fills blocks very
+//! differently). [`HybridMatrix`] cuts the rows into fixed-height
+//! **panels** (a multiple of 8 rows, tunable via
+//! [`HybridConfig::panel_rows`]) and picks a storage independently per
+//! panel:
+//!
+//! 1. for every candidate block size run the cheap no-conversion scan
+//!    ([`crate::formats::stats::block_stats`]) on the panel,
+//! 2. gate candidates by the paper's storage crossover
+//!    ([`super::occupancy::fill_crossover`], Eq. 4): a β size whose
+//!    panel fill is below the crossover stores more bytes than CSR and
+//!    is never chosen,
+//! 3. rank the surviving candidates (and CSR) on the predictor's
+//!    fitted GFlop/s surface when performance records exist, or on the
+//!    analytic bandwidth model ([`crate::predictor::model`]) otherwise.
+//!
+//! A schedule compiler then merges adjacent same-choice panels into
+//! **segments** and converts each segment once, so the hot loop is a
+//! flat walk over precompiled `(kernel, row span)` segments with zero
+//! per-panel branching: β segments run through the existing AVX-512
+//! span kernels ([`crate::kernels::avx512::spmv_span`] via
+//! [`crate::kernels::spmv_block`]), CSR segments through the tuned CSR
+//! row loop. When [`HybridConfig::split`] asks for more parallelism
+//! than the merge produced, merged runs are re-cut into nnz-balanced
+//! pieces at panel boundaries. The engine's parallel path splits the
+//! segment list by nnz with
+//! [`crate::parallel::balanced_prefix_split`] and runs the chunks on
+//! its [`crate::parallel::WorkerPool`].
+//!
+//! This is the same design move as SELL-C-σ's row-chunk-local format
+//! decisions (Kreutzer et al.) and Fukaya et al.'s part-wise kernel
+//! assignment, expressed in SPC5's block-without-padding world.
+
+use super::occupancy::fill_crossover;
+use super::stats::block_stats;
+use super::{csr_to_block, BlockMatrix, BlockSize, FormatError};
+use crate::kernels::KernelKind;
+use crate::matrix::Csr;
+use crate::predictor::model::{predict, MachineModel};
+use crate::predictor::PolyModel;
+use crate::scalar::{MaskWord, Scalar};
+use std::collections::HashMap;
+
+/// Per-panel storage decision.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PanelKernel {
+    /// The panel is stored as `β(r,c)` blocks and served by the block
+    /// kernels.
+    Beta(BlockSize),
+    /// The panel stays CSR and is served by the CSR row loop.
+    Csr,
+}
+
+impl std::fmt::Display for PanelKernel {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PanelKernel::Beta(bs) => write!(f, "{bs}"),
+            PanelKernel::Csr => write!(f, "csr"),
+        }
+    }
+}
+
+/// Configuration of the panel cut and the candidate β sizes.
+#[derive(Clone, Debug)]
+pub struct HybridConfig {
+    /// Rows per panel; must be a positive multiple of 8 so every
+    /// kernel row-interval height (`r ∈ {1,2,4,8}`) divides panel
+    /// boundaries.
+    pub panel_rows: usize,
+    /// Candidate block sizes a panel may choose from.
+    pub candidates: Vec<BlockSize>,
+    /// Minimum segment count the schedule compiler aims for: merged
+    /// same-choice runs are re-cut (at panel boundaries, nnz-balanced)
+    /// so a schedule has roughly this many segments to distribute.
+    /// The parallel engine sets it to the worker count — otherwise a
+    /// homogeneous matrix compiles to one segment and would occupy a
+    /// single worker. `1` (the default) merges maximally.
+    pub split: usize,
+}
+
+/// Default panel height: small enough to separate structurally
+/// different regions of the suite matrices, large enough that segment
+/// dispatch cost vanishes against the per-panel work.
+pub const DEFAULT_PANEL_ROWS: usize = 512;
+
+impl HybridConfig {
+    /// Default configuration for scalar `T`: the paper's six sizes at
+    /// 8 mask lanes (f64), the three 16-wide sizes at 16 lanes (f32 —
+    /// only those have AVX-512 specializations).
+    pub fn for_scalar<T: Scalar>() -> Self {
+        let candidates = if <T::Mask as MaskWord>::BITS >= 16 {
+            BlockSize::F32_WIDE_SIZES.to_vec()
+        } else {
+            BlockSize::PAPER_SIZES.to_vec()
+        };
+        HybridConfig { panel_rows: DEFAULT_PANEL_ROWS, candidates, split: 1 }
+    }
+
+    fn validate<T: Scalar>(&self) -> Result<(), FormatError> {
+        if self.panel_rows == 0 || self.panel_rows % 8 != 0 {
+            return Err(FormatError::Inconsistent(format!(
+                "panel_rows must be a positive multiple of 8, got {}",
+                self.panel_rows
+            )));
+        }
+        if self.candidates.is_empty() {
+            return Err(FormatError::Inconsistent(
+                "hybrid needs at least one candidate block size".into(),
+            ));
+        }
+        for bs in &self.candidates {
+            bs.validate_for::<T>()?;
+        }
+        Ok(())
+    }
+}
+
+/// Storage of one compiled segment (a run of same-choice panels).
+pub enum SegmentStorage<T: Scalar> {
+    /// Converted block storage; `rows` counts the segment's rows,
+    /// `cols` the full matrix width (x is indexed globally).
+    Block(BlockMatrix<T>),
+    /// Row-sliced CSR with segment-local rowptr.
+    Csr(Csr<T>),
+}
+
+/// One entry of the compiled schedule: a contiguous row range bound to
+/// its converted storage and kernel.
+pub struct HybridSegment<T: Scalar> {
+    /// First matrix row (inclusive); always a panel boundary.
+    pub row_begin: usize,
+    /// One past the last matrix row.
+    pub row_end: usize,
+    /// Nonzeros in the segment (the parallel split weight).
+    pub nnz: usize,
+    /// The merged panel decision this segment was compiled from.
+    pub kernel: PanelKernel,
+    pub storage: SegmentStorage<T>,
+}
+
+impl<T: Scalar> HybridSegment<T> {
+    /// `y += A_seg · x` with `y` segment-local (`row_end - row_begin`
+    /// entries) and `x` the full input vector.
+    #[inline]
+    pub fn spmv(&self, x: &[T], y: &mut [T]) {
+        match &self.storage {
+            SegmentStorage::Block(bm) => {
+                crate::kernels::spmv_block(bm, x, y, false)
+            }
+            SegmentStorage::Csr(c) => crate::kernels::csr::spmv(c, x, y),
+        }
+    }
+
+    /// Multi-RHS `Y += A_seg · X` (`x` row-major `[cols × k]`, `y`
+    /// segment-local `[rows × k]`).
+    #[inline]
+    pub fn spmm(&self, x: &[T], y: &mut [T], k: usize) {
+        match &self.storage {
+            SegmentStorage::Block(bm) => {
+                crate::kernels::spmm::spmm_auto(bm, x, y, k)
+            }
+            SegmentStorage::Csr(c) => crate::kernels::csr::spmm(c, x, y, k),
+        }
+    }
+}
+
+/// A sparse matrix compiled into a flat schedule of per-row-panel
+/// kernel segments. See the module docs for the selection rules.
+pub struct HybridMatrix<T: Scalar = f64> {
+    pub rows: usize,
+    pub cols: usize,
+    /// The panel height the schedule was compiled with.
+    pub panel_rows: usize,
+    /// Per-panel decision, before merging (one entry per
+    /// `ceil(rows / panel_rows)` panel) — kept for introspection,
+    /// tests and the stats report.
+    pub choices: Vec<PanelKernel>,
+    /// The compiled schedule: ordered, contiguous, disjoint row
+    /// segments covering `0..rows`.
+    pub segments: Vec<HybridSegment<T>>,
+}
+
+impl<T: Scalar> HybridMatrix<T> {
+    /// Compiles `csr` into a hybrid schedule. `models` is the
+    /// predictor's fitted sequential GFlop/s surface per kernel
+    /// (from [`crate::predictor::select::fit_sequential`]); pass
+    /// `None` to rank candidates with the analytic bandwidth model.
+    pub fn from_csr(
+        csr: &Csr<T>,
+        cfg: &HybridConfig,
+        models: Option<&HashMap<KernelKind, PolyModel>>,
+    ) -> Result<HybridMatrix<T>, FormatError> {
+        cfg.validate::<T>()?;
+        let rows = csr.rows;
+        let n_panels = crate::util::ceil_div(rows, cfg.panel_rows);
+
+        // Phase 1: decide each panel independently.
+        let mut choices = Vec::with_capacity(n_panels);
+        for p in 0..n_panels {
+            let r0 = p * cfg.panel_rows;
+            let r1 = (r0 + cfg.panel_rows).min(rows);
+            let sub = csr.row_slice(r0, r1);
+            if sub.nnz() == 0 {
+                // Empty panels carry no work: inherit the previous
+                // choice so they never break a mergeable run.
+                choices.push(*choices.last().unwrap_or(&PanelKernel::Csr));
+            } else {
+                choices.push(choose_panel(&sub, &cfg.candidates, models));
+            }
+        }
+
+        // Phase 2: merge adjacent same-choice panels, re-cut each
+        // merged run into nnz-balanced pieces (still at panel
+        // boundaries) when `cfg.split` asks for more segments than the
+        // merge produced — so the parallel path can feed every worker
+        // even on a homogeneous matrix — and convert each piece once.
+        let target_nnz =
+            crate::util::ceil_div(csr.nnz().max(1), cfg.split.max(1));
+        let mut segments: Vec<HybridSegment<T>> = Vec::new();
+        let mut begin = 0usize;
+        while begin < n_panels {
+            let choice = choices[begin];
+            let mut end = begin + 1;
+            while end < n_panels && choices[end] == choice {
+                end += 1;
+            }
+            // nnz prefix over the run's panel boundaries (fits u32:
+            // the whole rowptr is u32).
+            let base = csr.rowptr[begin * cfg.panel_rows];
+            let prefix: Vec<u32> = (begin..=end)
+                .map(|p| {
+                    let row = (p * cfg.panel_rows).min(rows);
+                    csr.rowptr[row] - base
+                })
+                .collect();
+            let run_nnz = *prefix.last().unwrap() as usize;
+            let parts = crate::util::ceil_div(run_nnz, target_nnz)
+                .clamp(1, end - begin);
+            for (p0, p1) in crate::parallel::balanced_prefix_split(
+                &prefix, parts,
+            ) {
+                if p0 == p1 {
+                    continue; // degenerate chunk (weights too skewed)
+                }
+                let row_begin = (begin + p0) * cfg.panel_rows;
+                let row_end = ((begin + p1) * cfg.panel_rows).min(rows);
+                let sub = csr.row_slice(row_begin, row_end);
+                let nnz = sub.nnz();
+                let storage = match choice {
+                    PanelKernel::Beta(bs) => {
+                        SegmentStorage::Block(csr_to_block(&sub, bs)?)
+                    }
+                    PanelKernel::Csr => SegmentStorage::Csr(sub),
+                };
+                segments.push(HybridSegment {
+                    row_begin,
+                    row_end,
+                    nnz,
+                    kernel: choice,
+                    storage,
+                });
+            }
+            begin = end;
+        }
+
+        let hm = HybridMatrix {
+            rows,
+            cols: csr.cols,
+            panel_rows: cfg.panel_rows,
+            choices,
+            segments,
+        };
+        debug_assert!(hm.validate().is_ok(), "{:?}", hm.validate().err());
+        Ok(hm)
+    }
+
+    /// Total stored nonzeros.
+    pub fn nnz(&self) -> usize {
+        self.segments.iter().map(|s| s.nnz).sum()
+    }
+
+    /// Number of compiled segments.
+    pub fn n_segments(&self) -> usize {
+        self.segments.len()
+    }
+
+    /// Distinct kernels in the schedule, in row order (deduped runs).
+    pub fn kernels_used(&self) -> Vec<PanelKernel> {
+        let mut out: Vec<PanelKernel> = Vec::new();
+        for s in &self.segments {
+            if out.last() != Some(&s.kernel) {
+                out.push(s.kernel);
+            }
+        }
+        out
+    }
+
+    /// Sequential `y += A·x`: a flat walk over the compiled segments.
+    pub fn spmv(&self, x: &[T], y: &mut [T]) {
+        assert_eq!(x.len(), self.cols, "x length mismatch");
+        assert_eq!(y.len(), self.rows, "y length mismatch");
+        for seg in &self.segments {
+            seg.spmv(x, &mut y[seg.row_begin..seg.row_end]);
+        }
+    }
+
+    /// Sequential multi-RHS `Y += A·X` (`x` row-major `[cols × k]`,
+    /// `y` `[rows × k]`; see [`crate::kernels::spmm`]).
+    pub fn spmm(&self, x: &[T], y: &mut [T], k: usize) {
+        assert!(k > 0);
+        assert_eq!(x.len(), self.cols * k, "x must be cols*k");
+        assert_eq!(y.len(), self.rows * k, "y must be rows*k");
+        for seg in &self.segments {
+            seg.spmm(x, &mut y[seg.row_begin * k..seg.row_end * k], k);
+        }
+    }
+
+    /// Checks every structural invariant of the compiled schedule:
+    /// segments are ordered, contiguous, disjoint, start on panel
+    /// boundaries and cover `0..rows` exactly once; per-segment
+    /// storages are internally consistent and their nnz sum to the
+    /// matrix total.
+    pub fn validate(&self) -> Result<(), FormatError> {
+        let fail = |msg: String| Err(FormatError::Inconsistent(msg));
+        if self.panel_rows == 0 || self.panel_rows % 8 != 0 {
+            return fail(format!("bad panel_rows {}", self.panel_rows));
+        }
+        let n_panels = crate::util::ceil_div(self.rows, self.panel_rows);
+        if self.choices.len() != n_panels {
+            return fail(format!(
+                "choices length {} != panels {n_panels}",
+                self.choices.len()
+            ));
+        }
+        let mut expect_row = 0usize;
+        for (i, s) in self.segments.iter().enumerate() {
+            if s.row_begin != expect_row {
+                return fail(format!(
+                    "segment {i} begins at {} (expected {expect_row}) — \
+                     rows covered more or less than once",
+                    s.row_begin
+                ));
+            }
+            if s.row_end <= s.row_begin || s.row_end > self.rows {
+                return fail(format!("segment {i} has bad row range"));
+            }
+            if s.row_begin % self.panel_rows != 0 {
+                return fail(format!(
+                    "segment {i} does not start on a panel boundary"
+                ));
+            }
+            let seg_rows = s.row_end - s.row_begin;
+            match &s.storage {
+                SegmentStorage::Block(bm) => {
+                    if !matches!(s.kernel, PanelKernel::Beta(bs) if bs == bm.bs)
+                    {
+                        return fail(format!(
+                            "segment {i} kernel/storage mismatch"
+                        ));
+                    }
+                    if bm.rows != seg_rows || bm.cols != self.cols {
+                        return fail(format!("segment {i} block dims wrong"));
+                    }
+                    if bm.nnz() != s.nnz {
+                        return fail(format!("segment {i} nnz mismatch"));
+                    }
+                    bm.validate()?;
+                }
+                SegmentStorage::Csr(c) => {
+                    if s.kernel != PanelKernel::Csr {
+                        return fail(format!(
+                            "segment {i} kernel/storage mismatch"
+                        ));
+                    }
+                    if c.rows != seg_rows || c.cols != self.cols {
+                        return fail(format!("segment {i} csr dims wrong"));
+                    }
+                    if c.nnz() != s.nnz {
+                        return fail(format!("segment {i} nnz mismatch"));
+                    }
+                }
+            }
+            expect_row = s.row_end;
+        }
+        if expect_row != self.rows {
+            return fail(format!(
+                "segments cover rows 0..{expect_row}, matrix has {}",
+                self.rows
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// Picks the kernel for one panel. Candidates below the Eq.-4 storage
+/// crossover are discarded; survivors and CSR are ranked on the fitted
+/// GFlop/s surface when `models` covers CSR, otherwise on the analytic
+/// bandwidth model (whose machine scale cancels out of the argmax).
+fn choose_panel<T: Scalar>(
+    sub: &Csr<T>,
+    candidates: &[BlockSize],
+    models: Option<&HashMap<KernelKind, PolyModel>>,
+) -> PanelKernel {
+    // Fitted predictions are only comparable to each other, so the
+    // fitted path is taken as a whole or not at all: it needs a CSR
+    // model to rank β choices against.
+    let fitted = models.filter(|m| m.contains_key(&KernelKind::Csr));
+    let analytic = MachineModel::default();
+
+    let avg18 = block_stats(sub, BlockSize::new(1, 8)).avg_nnz_per_block;
+    let csr_score = match fitted {
+        Some(m) => m[&KernelKind::Csr].eval(avg18),
+        None => predict(&analytic, KernelKind::Csr, avg18),
+    };
+
+    let mut best: Option<(BlockSize, f64)> = None;
+    for &bs in candidates {
+        let avg = block_stats(sub, bs).avg_nnz_per_block;
+        if avg < fill_crossover(bs) {
+            continue; // stores more bytes than CSR (paper Eq. 4)
+        }
+        let kind = KernelKind::Beta(bs.r as u8, bs.c as u8);
+        let score = match fitted {
+            Some(m) => match m.get(&kind) {
+                Some(poly) => poly.eval(avg),
+                None => continue, // no surface for this kernel
+            },
+            None => predict(&analytic, kind, avg),
+        };
+        if !score.is_finite() {
+            continue;
+        }
+        let better = match best {
+            None => true,
+            Some((_, s)) => score > s,
+        };
+        if better {
+            best = Some((bs, score));
+        }
+    }
+
+    match best {
+        Some((bs, score)) if !csr_score.is_finite() || score > csr_score => {
+            PanelKernel::Beta(bs)
+        }
+        _ => PanelKernel::Csr,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::suite;
+
+    fn cfg(panel_rows: usize) -> HybridConfig {
+        HybridConfig { panel_rows, ..HybridConfig::for_scalar::<f64>() }
+    }
+
+    #[test]
+    fn panel_rows_must_be_multiple_of_8() {
+        let csr = suite::poisson2d(8);
+        for bad in [0usize, 4, 7, 12] {
+            assert!(
+                HybridMatrix::from_csr(&csr, &cfg(bad), None).is_err(),
+                "panel_rows {bad} accepted"
+            );
+        }
+        HybridMatrix::from_csr(&csr, &cfg(8), None).unwrap();
+    }
+
+    #[test]
+    fn schedule_is_contiguous_and_validates() {
+        for sm in suite::test_subset().iter().take(6) {
+            for panel in [8usize, 64, 512] {
+                let hm =
+                    HybridMatrix::from_csr(&sm.csr, &cfg(panel), None).unwrap();
+                hm.validate().unwrap();
+                assert_eq!(hm.nnz(), sm.csr.nnz(), "{} p={panel}", sm.name);
+            }
+        }
+    }
+
+    #[test]
+    fn homogeneous_matrix_compiles_to_one_segment() {
+        // A uniformly dense band: every panel should make the same
+        // choice, and merging should collapse them into one segment.
+        let csr = suite::banded(4_000, 16, 1.0, 3);
+        let hm = HybridMatrix::from_csr(&csr, &cfg(256), None).unwrap();
+        assert_eq!(hm.n_segments(), 1, "choices: {:?}", hm.kernels_used());
+        assert!(matches!(hm.segments[0].kernel, PanelKernel::Beta(_)));
+    }
+
+    #[test]
+    fn split_hint_subdivides_homogeneous_runs() {
+        // With a split hint, the same homogeneous matrix must be cut
+        // into nnz-balanced same-kernel segments for the worker pool.
+        let csr = suite::banded(4_000, 16, 1.0, 3);
+        let cfg4 = HybridConfig { split: 4, ..cfg(256) };
+        let hm = HybridMatrix::from_csr(&csr, &cfg4, None).unwrap();
+        hm.validate().unwrap();
+        assert!(hm.n_segments() >= 3, "{} segments", hm.n_segments());
+        assert_eq!(hm.kernels_used().len(), 1, "one kernel class expected");
+        let max = hm.segments.iter().map(|s| s.nnz).max().unwrap();
+        let min = hm.segments.iter().map(|s| s.nnz).min().unwrap();
+        assert!(
+            max <= min * 2 + csr.nnz() / 4,
+            "segments unbalanced: min {min} max {max}"
+        );
+    }
+
+    #[test]
+    fn scatter_matrix_stays_csr() {
+        // Avg fill ≈ 1: every β size is below its crossover.
+        let csr = suite::uniform_scatter(3_000, 4, 5);
+        let hm = HybridMatrix::from_csr(&csr, &cfg(256), None).unwrap();
+        assert_eq!(hm.n_segments(), 1);
+        assert_eq!(hm.segments[0].kernel, PanelKernel::Csr);
+    }
+
+    #[test]
+    fn mixed_matrix_uses_both_kernel_classes() {
+        let csr = suite::mixed_band_scatter(4_096, 9);
+        let hm = HybridMatrix::from_csr(&csr, &cfg(256), None).unwrap();
+        let used = hm.kernels_used();
+        assert!(
+            used.iter().any(|k| matches!(k, PanelKernel::Beta(_))),
+            "no β segment: {used:?}"
+        );
+        assert!(
+            used.contains(&PanelKernel::Csr),
+            "no CSR segment: {used:?}"
+        );
+        // Merging must compress ~16 panels into a handful of segments.
+        assert!(hm.n_segments() <= 4, "{} segments", hm.n_segments());
+    }
+
+    #[test]
+    fn spmv_matches_reference() {
+        for sm in suite::test_subset().iter().take(8) {
+            let hm = HybridMatrix::from_csr(&sm.csr, &cfg(64), None).unwrap();
+            let x: Vec<f64> = (0..sm.csr.cols)
+                .map(|i| ((i * 13) % 17) as f64 - 8.0)
+                .collect();
+            let mut want = vec![0.0; sm.csr.rows];
+            sm.csr.spmv_ref(&x, &mut want);
+            let mut got = vec![0.0; sm.csr.rows];
+            hm.spmv(&x, &mut got);
+            crate::testkit::assert_close(&got, &want, 1e-9, sm.name);
+        }
+    }
+
+    #[test]
+    fn spmm_matches_k_spmvs() {
+        let csr = suite::mixed_band_scatter(1_024, 2);
+        let hm = HybridMatrix::from_csr(&csr, &cfg(64), None).unwrap();
+        let k = 3usize;
+        let x: Vec<f64> = (0..csr.cols * k)
+            .map(|i| ((i * 7) % 19) as f64 * 0.1 - 0.9)
+            .collect();
+        let mut y = vec![0.0; csr.rows * k];
+        hm.spmm(&x, &mut y, k);
+        for j in 0..k {
+            let xj: Vec<f64> = (0..csr.cols).map(|c| x[c * k + j]).collect();
+            let mut want = vec![0.0; csr.rows];
+            csr.spmv_ref(&xj, &mut want);
+            for r in 0..csr.rows {
+                assert!(
+                    (y[r * k + j] - want[r]).abs()
+                        <= 1e-9 * want[r].abs().max(1.0),
+                    "j={j} row {r}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn empty_matrix_compiles() {
+        let csr =
+            Csr::<f64>::from_raw(16, 16, vec![0; 17], vec![], vec![]).unwrap();
+        let hm = HybridMatrix::from_csr(&csr, &cfg(8), None).unwrap();
+        hm.validate().unwrap();
+        let x = vec![1.0; 16];
+        let mut y = vec![0.0; 16];
+        hm.spmv(&x, &mut y);
+        assert!(y.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn fitted_surface_drives_choice() {
+        use crate::predictor::select::fit_sequential;
+        use crate::predictor::{PerfRecord, RecordStore};
+        // Records that make CSR dominate everything: the schedule must
+        // be all-CSR even on a block-friendly matrix.
+        let mut store = RecordStore::new();
+        for i in 0..8 {
+            let avg = 1.0 + i as f64;
+            store.push(PerfRecord {
+                matrix: format!("m{i}"),
+                kernel: KernelKind::Csr,
+                avg_nnz_per_block: avg,
+                threads: 1,
+                gflops: 50.0,
+            });
+            for bs in BlockSize::PAPER_SIZES {
+                store.push(PerfRecord {
+                    matrix: format!("m{i}"),
+                    kernel: KernelKind::Beta(bs.r as u8, bs.c as u8),
+                    avg_nnz_per_block: avg * (bs.bits() as f64 / 8.0),
+                    threads: 1,
+                    gflops: 0.1,
+                });
+            }
+        }
+        let kinds: Vec<KernelKind> = std::iter::once(KernelKind::Csr)
+            .chain(
+                BlockSize::PAPER_SIZES
+                    .iter()
+                    .map(|bs| KernelKind::Beta(bs.r as u8, bs.c as u8)),
+            )
+            .collect();
+        let models = fit_sequential(&store, &kinds);
+        let csr = suite::banded(2_048, 16, 1.0, 1);
+        let hm =
+            HybridMatrix::from_csr(&csr, &cfg(256), Some(&models)).unwrap();
+        assert_eq!(hm.kernels_used(), vec![PanelKernel::Csr]);
+    }
+
+    #[test]
+    fn f32_hybrid_uses_wide_candidates() {
+        let csr32 = suite::banded(2_048, 16, 1.0, 4).to_precision::<f32>();
+        let cfg32 = HybridConfig::for_scalar::<f32>();
+        assert_eq!(cfg32.candidates, BlockSize::F32_WIDE_SIZES.to_vec());
+        let hm = HybridMatrix::from_csr(&csr32, &cfg32, None).unwrap();
+        hm.validate().unwrap();
+        let x: Vec<f32> =
+            (0..csr32.cols).map(|i| (i % 5) as f32 * 0.5 - 1.0).collect();
+        let mut want = vec![0.0f32; csr32.rows];
+        csr32.spmv_ref(&x, &mut want);
+        let mut got = vec![0.0f32; csr32.rows];
+        hm.spmv(&x, &mut got);
+        for i in 0..csr32.rows {
+            assert!(
+                (got[i] - want[i]).abs() <= 2e-4 * want[i].abs().max(1.0),
+                "row {i}"
+            );
+        }
+    }
+}

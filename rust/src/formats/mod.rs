@@ -15,11 +15,15 @@
 
 pub mod block;
 pub mod convert;
+pub mod hybrid;
 pub mod occupancy;
 pub mod stats;
 
 pub use block::{BlockMatrix, HEADER_COLIDX_BYTES};
 pub use convert::{block_to_csr, csr_to_block};
+pub use hybrid::{
+    HybridConfig, HybridMatrix, HybridSegment, PanelKernel, SegmentStorage,
+};
 pub use occupancy::{beta_occupancy_bytes, csr_occupancy_bytes, fill_crossover};
 pub use stats::BlockStats;
 

@@ -44,9 +44,63 @@
 
 use crate::formats::{BlockMatrix, BlockSize};
 use crate::scalar::Scalar;
+use std::sync::atomic::{AtomicBool, Ordering};
 
 #[cfg(target_arch = "x86_64")]
 use std::arch::x86_64::*;
+
+/// Software prefetch toggle for the β hot loops (on by default; the
+/// `SPC5_NO_PREFETCH` environment variable or [`set_prefetch`] turn it
+/// off — the `kernel_micro` ablation uses the latter to measure both
+/// sides). Read once per span call, then baked into the kernel via a
+/// const generic so the per-block path carries no branch.
+static PREFETCH_ON: AtomicBool = AtomicBool::new(true);
+static PREFETCH_ENV: std::sync::Once = std::sync::Once::new();
+
+/// Enables/disables software prefetch in the AVX-512 β kernels
+/// (overrides the `SPC5_NO_PREFETCH` environment default).
+pub fn set_prefetch(enabled: bool) {
+    // Consume the env hook first so it cannot override this later.
+    PREFETCH_ENV.call_once(|| {});
+    PREFETCH_ON.store(enabled, Ordering::Relaxed);
+}
+
+/// Whether the β kernels issue software prefetches.
+pub fn prefetch_enabled() -> bool {
+    PREFETCH_ENV.call_once(|| {
+        if std::env::var_os("SPC5_NO_PREFETCH").is_some() {
+            PREFETCH_ON.store(false, Ordering::Relaxed);
+        }
+    });
+    PREFETCH_ON.load(Ordering::Relaxed)
+}
+
+/// Header-stream prefetch distance in blocks (~1–2 cache lines of
+/// interleaved headers ahead of the walk).
+#[cfg(target_arch = "x86_64")]
+const PF_BLOCKS_AHEAD: usize = 8;
+/// Values-stream prefetch distance in bytes (two cache lines).
+#[cfg(target_arch = "x86_64")]
+const PF_VALUE_BYTES_AHEAD: usize = 128;
+
+/// Issues T0 prefetches for the two streams a β kernel walks linearly:
+/// the interleaved header stream and the unpadded values stream. The
+/// `x` window is *not* prefetched — its address depends on the block's
+/// colidx, which is exactly what the header prefetch makes available
+/// early. Near the span tail the computed addresses run past the end
+/// of the streams: `wrapping_add` keeps the pointer arithmetic defined
+/// (plain `add` would be UB out of bounds even without a dereference),
+/// and the prefetch instruction itself never faults on any address.
+#[cfg(target_arch = "x86_64")]
+#[inline(always)]
+unsafe fn prefetch_streams<T>(h: *const u8, stride: usize, vals: *const T) {
+    _mm_prefetch::<_MM_HINT_T0>(
+        h.wrapping_add(PF_BLOCKS_AHEAD * stride) as *const i8
+    );
+    _mm_prefetch::<_MM_HINT_T0>(
+        (vals as *const i8).wrapping_add(PF_VALUE_BYTES_AHEAD),
+    );
+}
 
 /// A contiguous run of row intervals plus the sub-streams that cover
 /// exactly its blocks. `rowptr` holds `n_intervals+1` *absolute* block
@@ -151,19 +205,26 @@ pub fn spmv_span_f64(
             return false;
         }
         assert!(y.len() >= span.rows);
+        let pf = prefetch_enabled();
         // SAFETY: format invariants (validated at conversion) guarantee
         // every masked lane maps inside `x`, every expand stays inside
         // `values`, and every interval row written exists in `y`.
         unsafe {
-            match (bs.r, bs.c, test) {
-                (1, 8, false) => spmv_1x8(span, x, y),
-                (1, 8, true) => spmv_1x8_test(span, x, y),
-                (2, 8, false) => spmv_2x8(span, x, y),
-                (4, 8, false) => spmv_4x8(span, x, y),
-                (2, 4, false) => spmv_2x4(span, x, y),
-                (2, 4, true) => spmv_2x4_test(span, x, y),
-                (4, 4, false) => spmv_4x4(span, x, y),
-                (8, 4, false) => spmv_8x4(span, x, y),
+            match (bs.r, bs.c, test, pf) {
+                (1, 8, false, true) => spmv_1x8::<true>(span, x, y),
+                (1, 8, false, false) => spmv_1x8::<false>(span, x, y),
+                (1, 8, true, _) => spmv_1x8_test(span, x, y),
+                (2, 8, false, true) => spmv_2x8::<true>(span, x, y),
+                (2, 8, false, false) => spmv_2x8::<false>(span, x, y),
+                (4, 8, false, true) => spmv_4x8::<true>(span, x, y),
+                (4, 8, false, false) => spmv_4x8::<false>(span, x, y),
+                (2, 4, false, true) => spmv_2x4::<true>(span, x, y),
+                (2, 4, false, false) => spmv_2x4::<false>(span, x, y),
+                (2, 4, true, _) => spmv_2x4_test(span, x, y),
+                (4, 4, false, true) => spmv_4x4::<true>(span, x, y),
+                (4, 4, false, false) => spmv_4x4::<false>(span, x, y),
+                (8, 4, false, true) => spmv_8x4::<true>(span, x, y),
+                (8, 4, false, false) => spmv_8x4::<false>(span, x, y),
                 _ => return false,
             }
         }
@@ -196,13 +257,17 @@ pub fn spmv_span_f32(
             return false;
         }
         assert!(y.len() >= span.rows);
+        let pf = prefetch_enabled();
         // SAFETY: same format invariants as the f64 path, with u16
         // masks (validated at conversion: c = 16 lanes, in-bounds).
         unsafe {
-            match bs.r {
-                1 => spmv_f32_1x16(span, x, y),
-                2 => spmv_f32_rx16::<2>(span, x, y),
-                4 => spmv_f32_rx16::<4>(span, x, y),
+            match (bs.r, pf) {
+                (1, true) => spmv_f32_1x16::<true>(span, x, y),
+                (1, false) => spmv_f32_1x16::<false>(span, x, y),
+                (2, true) => spmv_f32_rx16::<2, true>(span, x, y),
+                (2, false) => spmv_f32_rx16::<2, false>(span, x, y),
+                (4, true) => spmv_f32_rx16::<4, true>(span, x, y),
+                (4, false) => spmv_f32_rx16::<4, false>(span, x, y),
                 _ => return false,
             }
         }
@@ -229,7 +294,7 @@ unsafe fn header_mask16(h: *const u8, i: usize) -> u16 {
 
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx512f,avx512vl,avx512bw,avx512dq")]
-unsafe fn spmv_1x8(span: Span<'_>, x: &[f64], y: &mut [f64]) {
+unsafe fn spmv_1x8<const PF: bool>(span: Span<'_>, x: &[f64], y: &mut [f64]) {
     let stride = 5;
     let mut h = span.headers.as_ptr();
     let mut vals = span.values.as_ptr();
@@ -241,6 +306,9 @@ unsafe fn spmv_1x8(span: Span<'_>, x: &[f64], y: &mut [f64]) {
         }
         let mut acc = _mm512_setzero_pd();
         for _ in 0..nb {
+            if PF {
+                prefetch_streams(h, stride, vals);
+            }
             let col = header_col(h);
             let mask = *h.add(4);
             let v = _mm512_maskz_expandloadu_pd(mask, vals);
@@ -310,7 +378,7 @@ unsafe fn spmv_1x8_test(span: Span<'_>, x: &[f64], y: &mut [f64]) {
 
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx512f,avx512vl,avx512bw,avx512dq")]
-unsafe fn spmv_2x8(span: Span<'_>, x: &[f64], y: &mut [f64]) {
+unsafe fn spmv_2x8<const PF: bool>(span: Span<'_>, x: &[f64], y: &mut [f64]) {
     let stride = 6;
     let mut h = span.headers.as_ptr();
     let mut vals = span.values.as_ptr();
@@ -323,6 +391,9 @@ unsafe fn spmv_2x8(span: Span<'_>, x: &[f64], y: &mut [f64]) {
         let mut acc0 = _mm512_setzero_pd();
         let mut acc1 = _mm512_setzero_pd();
         for _ in 0..nb {
+            if PF {
+                prefetch_streams(h, stride, vals);
+            }
             let col = header_col(h);
             let m0 = *h.add(4);
             let m1 = *h.add(5);
@@ -354,7 +425,7 @@ unsafe fn spmv_2x8(span: Span<'_>, x: &[f64], y: &mut [f64]) {
 
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx512f,avx512vl,avx512bw,avx512dq")]
-unsafe fn spmv_4x8(span: Span<'_>, x: &[f64], y: &mut [f64]) {
+unsafe fn spmv_4x8<const PF: bool>(span: Span<'_>, x: &[f64], y: &mut [f64]) {
     let stride = 8;
     let mut h = span.headers.as_ptr();
     let mut vals = span.values.as_ptr();
@@ -366,6 +437,9 @@ unsafe fn spmv_4x8(span: Span<'_>, x: &[f64], y: &mut [f64]) {
         }
         let mut acc = [_mm512_setzero_pd(); 4];
         for _ in 0..nb {
+            if PF {
+                prefetch_streams(h, stride, vals);
+            }
             let col = header_col(h);
             let m = [*h.add(4), *h.add(5), *h.add(6), *h.add(7)];
             let xv =
@@ -487,7 +561,7 @@ unsafe fn fma_pair_4(
 
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx512f,avx512vl,avx512bw,avx512dq")]
-unsafe fn spmv_2x4(span: Span<'_>, x: &[f64], y: &mut [f64]) {
+unsafe fn spmv_2x4<const PF: bool>(span: Span<'_>, x: &[f64], y: &mut [f64]) {
     let stride = 6;
     let mut h = span.headers.as_ptr();
     let mut vals = span.values.as_ptr();
@@ -499,6 +573,9 @@ unsafe fn spmv_2x4(span: Span<'_>, x: &[f64], y: &mut [f64]) {
         }
         let mut acc = _mm512_setzero_pd();
         for _ in 0..nb {
+            if PF {
+                prefetch_streams(h, stride, vals);
+            }
             let col = header_col(h);
             let (m0, m1) = (*h.add(4), *h.add(5));
             let xv = x_window_4(m0 | m1, xp, col);
@@ -589,7 +666,7 @@ unsafe fn spmv_2x4_test(span: Span<'_>, x: &[f64], y: &mut [f64]) {
 
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx512f,avx512vl,avx512bw,avx512dq")]
-unsafe fn spmv_4x4(span: Span<'_>, x: &[f64], y: &mut [f64]) {
+unsafe fn spmv_4x4<const PF: bool>(span: Span<'_>, x: &[f64], y: &mut [f64]) {
     let stride = 8;
     let mut h = span.headers.as_ptr();
     let mut vals = span.values.as_ptr();
@@ -602,6 +679,9 @@ unsafe fn spmv_4x4(span: Span<'_>, x: &[f64], y: &mut [f64]) {
         let mut acc01 = _mm512_setzero_pd();
         let mut acc23 = _mm512_setzero_pd();
         for _ in 0..nb {
+            if PF {
+                prefetch_streams(h, stride, vals);
+            }
             let col = header_col(h);
             let m = [*h.add(4), *h.add(5), *h.add(6), *h.add(7)];
             let xv = x_window_4(m[0] | m[1] | m[2] | m[3], xp, col);
@@ -629,7 +709,7 @@ unsafe fn spmv_4x4(span: Span<'_>, x: &[f64], y: &mut [f64]) {
 
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx512f,avx512vl,avx512bw,avx512dq")]
-unsafe fn spmv_8x4(span: Span<'_>, x: &[f64], y: &mut [f64]) {
+unsafe fn spmv_8x4<const PF: bool>(span: Span<'_>, x: &[f64], y: &mut [f64]) {
     let stride = 12;
     let mut h = span.headers.as_ptr();
     let mut vals = span.values.as_ptr();
@@ -641,6 +721,9 @@ unsafe fn spmv_8x4(span: Span<'_>, x: &[f64], y: &mut [f64]) {
         }
         let mut acc = [_mm512_setzero_pd(); 4];
         for _ in 0..nb {
+            if PF {
+                prefetch_streams(h, stride, vals);
+            }
             let col = header_col(h);
             let m: [u8; 8] = [
                 *h.add(4),
@@ -685,7 +768,11 @@ unsafe fn spmv_8x4(span: Span<'_>, x: &[f64], y: &mut [f64]) {
 
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx512f,avx512vl,avx512bw,avx512dq")]
-unsafe fn spmv_f32_1x16(span: Span<'_, f32>, x: &[f32], y: &mut [f32]) {
+unsafe fn spmv_f32_1x16<const PF: bool>(
+    span: Span<'_, f32>,
+    x: &[f32],
+    y: &mut [f32],
+) {
     let stride = 6; // 4B colidx + one u16 mask
     let mut h = span.headers.as_ptr();
     let mut vals = span.values.as_ptr();
@@ -697,6 +784,9 @@ unsafe fn spmv_f32_1x16(span: Span<'_, f32>, x: &[f32], y: &mut [f32]) {
         }
         let mut acc = _mm512_setzero_ps();
         for _ in 0..nb {
+            if PF {
+                prefetch_streams(h, stride, vals);
+            }
             let col = header_col(h);
             let mask = header_mask16(h, 0);
             let v = _mm512_maskz_expandloadu_ps(mask, vals);
@@ -712,7 +802,7 @@ unsafe fn spmv_f32_1x16(span: Span<'_, f32>, x: &[f32], y: &mut [f32]) {
 /// Shared r×16 kernel body for r ∈ {2, 4} (const-generic unrolled).
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx512f,avx512vl,avx512bw,avx512dq")]
-unsafe fn spmv_f32_rx16<const R: usize>(
+unsafe fn spmv_f32_rx16<const R: usize, const PF: bool>(
     span: Span<'_, f32>,
     x: &[f32],
     y: &mut [f32],
@@ -728,6 +818,9 @@ unsafe fn spmv_f32_rx16<const R: usize>(
         }
         let mut acc = [_mm512_setzero_ps(); R];
         for _ in 0..nb {
+            if PF {
+                prefetch_streams(h, stride, vals);
+            }
             let col = header_col(h);
             let mut union = 0u16;
             let mut masks = [0u16; R];
@@ -811,6 +904,28 @@ mod tests {
             }
             check(&sm.csr, BlockSize::new(1, 8), true);
             check(&sm.csr, BlockSize::new(2, 4), true);
+        }
+    }
+
+    #[test]
+    fn prefetch_toggle_does_not_change_results() {
+        // Prefetch is a pure hint: both kernel instantiations must
+        // produce bit-identical sums on every block size.
+        let csr = suite::fem_blocked(400, 3, 6, 21);
+        let x: Vec<f64> = (0..csr.cols).map(|i| (i % 11) as f64 - 5.0).collect();
+        for bs in BlockSize::PAPER_SIZES {
+            let bm = csr_to_block(&csr, bs).unwrap();
+            let mut y_on = vec![0.0; csr.rows];
+            let mut y_off = vec![0.0; csr.rows];
+            set_prefetch(true);
+            let ran_on = spmv(&bm, &x, &mut y_on, false);
+            set_prefetch(false);
+            let ran_off = spmv(&bm, &x, &mut y_off, false);
+            set_prefetch(true);
+            assert_eq!(ran_on, ran_off, "{bs}");
+            if ran_on {
+                assert_eq!(y_on, y_off, "{bs}");
+            }
         }
     }
 

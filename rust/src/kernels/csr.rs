@@ -58,10 +58,55 @@ pub fn spmv_rows<T: Scalar>(
     }
 }
 
+/// Multi-RHS `Y += A·X` over CSR with the row-major `[cols × k]` /
+/// `[rows × k]` layout of [`crate::kernels::spmm`]: each nonzero is a
+/// dense k-wide AXPY, so no de-interleaving pass is needed (used by
+/// the hybrid schedule's CSR segments).
+pub fn spmm<T: Scalar>(m: &Csr<T>, x: &[T], y: &mut [T], k: usize) {
+    assert!(k > 0);
+    assert_eq!(x.len(), m.cols * k, "x must be cols*k");
+    assert_eq!(y.len(), m.rows * k, "y must be rows*k");
+    for r in 0..m.rows {
+        let yrow = &mut y[r * k..(r + 1) * k];
+        for idx in m.row_range(r) {
+            let v = m.values[idx];
+            let c = m.colidx[idx] as usize;
+            let xrow = &x[c * k..(c + 1) * k];
+            for j in 0..k {
+                yrow[j] += v * xrow[j];
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::matrix::suite;
+
+    #[test]
+    fn spmm_matches_k_spmvs() {
+        let sm = &suite::test_subset()[2];
+        let csr = &sm.csr;
+        let k = 3usize;
+        let x: Vec<f64> = (0..csr.cols * k)
+            .map(|i| ((i * 11) % 23) as f64 * 0.2 - 2.0)
+            .collect();
+        let mut y = vec![0.0; csr.rows * k];
+        spmm(csr, &x, &mut y, k);
+        for j in 0..k {
+            let xj: Vec<f64> = (0..csr.cols).map(|c| x[c * k + j]).collect();
+            let mut want = vec![0.0; csr.rows];
+            csr.spmv_ref(&xj, &mut want);
+            for r in 0..csr.rows {
+                assert!(
+                    (y[r * k + j] - want[r]).abs()
+                        <= 1e-9 * want[r].abs().max(1.0),
+                    "j={j} row {r}"
+                );
+            }
+        }
+    }
 
     #[test]
     fn matches_reference_on_suite() {

@@ -40,6 +40,10 @@ pub enum KernelKind {
     Beta(u8, u8),
     /// `β(r,c)` kernel with the Algorithm-2 test.
     BetaTest(u8, u8),
+    /// Heterogeneous row-panel schedule: each panel independently
+    /// chooses a `β(r,c)` blocking or stays CSR
+    /// ([`crate::formats::HybridMatrix`]).
+    Hybrid,
 }
 
 impl KernelKind {
@@ -96,6 +100,7 @@ impl KernelKind {
         match t.as_str() {
             "csr" => return Some(KernelKind::Csr),
             "csr5" => return Some(KernelKind::Csr5),
+            "hybrid" => return Some(KernelKind::Hybrid),
             _ => {}
         }
         let (body, test) = match t.strip_suffix("test") {
@@ -129,6 +134,7 @@ impl std::fmt::Display for KernelKind {
             KernelKind::Csr5 => write!(f, "csr5"),
             KernelKind::Beta(r, c) => write!(f, "b({r},{c})"),
             KernelKind::BetaTest(r, c) => write!(f, "b({r},{c})test"),
+            KernelKind::Hybrid => write!(f, "hybrid"),
         }
     }
 }
@@ -164,6 +170,7 @@ pub struct KernelSet<T: Scalar = f64> {
     pub csr: Csr<T>,
     blocks: std::collections::HashMap<BlockSize, BlockMatrix<T>>,
     csr5: Option<csr5::Csr5Matrix<T>>,
+    hybrid: Option<crate::formats::HybridMatrix<T>>,
 }
 
 impl<T: Scalar> KernelSet<T> {
@@ -175,9 +182,11 @@ impl<T: Scalar> KernelSet<T> {
     pub fn prepare(csr: Csr<T>, kinds: &[KernelKind]) -> Self {
         let mut blocks = std::collections::HashMap::new();
         let mut want_csr5 = false;
+        let mut want_hybrid = false;
         for k in kinds {
             match k {
                 KernelKind::Csr5 => want_csr5 = true,
+                KernelKind::Hybrid => want_hybrid = true,
                 _ => {
                     if let Some(bs) = k.block_size() {
                         blocks.entry(bs).or_insert_with(|| {
@@ -189,7 +198,17 @@ impl<T: Scalar> KernelSet<T> {
             }
         }
         let csr5 = want_csr5.then(|| csr5::Csr5Matrix::from_csr(&csr));
-        KernelSet { csr, blocks, csr5 }
+        // Default hybrid compile: analytic panel ranking (use the
+        // engine to supply a fitted predictor surface instead).
+        let hybrid = want_hybrid.then(|| {
+            crate::formats::HybridMatrix::from_csr(
+                &csr,
+                &crate::formats::HybridConfig::for_scalar::<T>(),
+                None,
+            )
+            .expect("default hybrid config valid for this precision")
+        });
+        KernelSet { csr, blocks, csr5, hybrid }
     }
 
     /// Runs `y += A·x` with the chosen kernel.
@@ -198,6 +217,9 @@ impl<T: Scalar> KernelSet<T> {
             KernelKind::Csr => csr::spmv(&self.csr, x, y),
             KernelKind::Csr5 => {
                 self.csr5.as_ref().expect("csr5 prepared").spmv(x, y)
+            }
+            KernelKind::Hybrid => {
+                self.hybrid.as_ref().expect("hybrid prepared").spmv(x, y)
             }
             KernelKind::Beta(..) | KernelKind::BetaTest(..) => {
                 let bs = kind.block_size().unwrap();
@@ -232,6 +254,18 @@ mod tests {
         );
         assert_eq!(KernelKind::parse("nope"), None);
         assert_eq!(KernelKind::parse("b(x,8)"), None);
+    }
+
+    #[test]
+    fn parse_accepts_hybrid() {
+        assert_eq!(KernelKind::parse("hybrid"), Some(KernelKind::Hybrid));
+        assert_eq!(KernelKind::parse(" Hybrid "), Some(KernelKind::Hybrid));
+        assert_eq!(
+            KernelKind::parse(&KernelKind::Hybrid.to_string()),
+            Some(KernelKind::Hybrid)
+        );
+        assert_eq!(KernelKind::parse("hybrid2"), None);
+        assert_eq!(KernelKind::Hybrid.block_size(), None);
     }
 
     #[test]

@@ -64,6 +64,33 @@
 //!   traverse the matrix once for all `k` right-hand sides), falling
 //!   back to single-vector SpMV for a batch of one.
 //!
+//! ## Panel scheduling (the hybrid kernel)
+//!
+//! The predictor picks *one* kernel per matrix, but real matrices are
+//! heterogeneous within themselves. [`KernelKind::Hybrid`]
+//! (`formats::HybridMatrix`) cuts the rows into fixed-height panels
+//! (a multiple of 8 rows, `SpmvEngine::builder(..).panel_rows(..)`)
+//! and decides per panel: candidate β sizes below the paper's Eq.-4
+//! storage crossover are discarded, survivors and CSR are ranked on
+//! the predictor's fitted GFlop/s surface (when records are supplied)
+//! or on the analytic bandwidth model. A schedule compiler merges
+//! adjacent same-choice panels and converts each merged run **once**,
+//! so the hot loop is a flat walk over precompiled `(kernel, span)`
+//! segments — β segments on the AVX-512 span kernels, CSR segments on
+//! the tuned row loop — with zero per-panel branching. The parallel
+//! path splits the segment list by nnz (`balanced_prefix_split`) and
+//! runs the chunks on the engine's `WorkerPool`; `spmm` batches all
+//! right-hand sides through the same schedule.
+//!
+//! Related levers shipped alongside: the β hot loops software-prefetch
+//! the upcoming header/value cache lines
+//! ([`kernels::avx512::set_prefetch`] toggles the hint for ablation),
+//! and `SpmvEngine::builder(..).reorder(..)` applies RCM or
+//! column-packing at build time — the engine stores the permuted
+//! matrix and transparently permutes `x`/`y` on every product, so
+//! callers keep their original index space while conversion sees the
+//! improved block fill.
+//!
 //! ## Modules
 //!
 //! - [`scalar`] — the sealed [`Scalar`] / [`scalar::MaskWord`] traits:
@@ -74,8 +101,10 @@
 //!   classes of the paper's SuiteSparse benchmark sets.
 //! - [`formats`] — the paper's contribution: `β(r,c)` block formats
 //!   storing one *bitmask per block* instead of zero padding
-//!   (`BlockMatrix<T>`), conversion from CSR, block statistics and the
-//!   memory-occupancy model (paper Eq. 1–4).
+//!   (`BlockMatrix<T>`), conversion from CSR, block statistics, the
+//!   memory-occupancy model (paper Eq. 1–4), and the heterogeneous
+//!   row-panel schedule (`HybridMatrix<T>`: per-panel β/CSR choice
+//!   compiled into flat kernel segments).
 //! - [`kernels`] — SpMV kernels behind one dispatch: the generic
 //!   scalar Algorithm 1/2, native AVX-512 `vexpandpd` (f64) and
 //!   `vexpandps` (f32) span kernels, a tuned CSR baseline (MKL

@@ -121,6 +121,7 @@ fn print_help() {
          commands:\n\
          \x20 stats    --set A|B | --matrix NAME | --mtx FILE   block-fill stats (Tables 1/2)\n\
          \x20 spmv     --matrix NAME [--kernel K] [--threads N] [--numa] [--precision f32|f64]\n\
+         \x20          [--reorder rcm|colpack] [--panel-rows N]   (kernel `hybrid` = per-panel schedule)\n\
          \x20 predict  --matrix NAME [--threads N] [--records FILE]\n\
          \x20 cg       [--n N] [--iters K] [--engine native|xla] [--threads N]\n\
          \x20 gen      --class CLASS --out FILE.mtx [--dim D] [--seed S]\n\
@@ -174,26 +175,43 @@ fn cmd_spmv(a: &Args) -> anyhow::Result<()> {
     let kernel = match a.get("kernel") {
         None => KernelKind::Beta(1, 8),
         Some(k) => KernelKind::parse(k).ok_or_else(|| {
-            anyhow::anyhow!("bad kernel '{k}' (try b(4,8), b32(1,16), csr, csr5)")
+            anyhow::anyhow!(
+                "bad kernel '{k}' (try b(4,8), b32(1,16), csr, csr5, hybrid)"
+            )
         })?,
     };
     let threads = a.get_usize("threads", 1)?;
     let numa = a.has("numa");
+    let panel_rows =
+        a.get_usize("panel-rows", spc5::formats::hybrid::DEFAULT_PANEL_ROWS)?;
+    let reorder = match a.get("reorder") {
+        None => None,
+        Some(r) => Some(spc5::matrix::ReorderKind::parse(r).ok_or_else(
+            || anyhow::anyhow!("bad --reorder '{r}' (expects rcm|colpack)"),
+        )?),
+    };
     let nnz = csr.nnz();
 
     let precision = a.get("precision").unwrap_or("f64");
     if precision != "f32" && precision != "f64" {
         anyhow::bail!("--precision expects f32 or f64, got '{precision}'");
     }
+    let reorder_note = reorder
+        .map(|r| format!(" reorder={r}"))
+        .unwrap_or_default();
 
-    // One engine serves every KernelKind — β kernels, CSR and CSR5 —
-    // at either precision.
+    // One engine serves every KernelKind — β kernels, CSR, CSR5 and
+    // the hybrid panel schedule — at either precision.
     if precision == "f32" {
-        let engine = SpmvEngine::builder(csr.to_precision::<f32>())
+        let mut b = SpmvEngine::builder(csr.to_precision::<f32>())
             .threads(threads)
             .numa_split(numa)
             .kernel(kernel)
-            .build()?;
+            .panel_rows(panel_rows);
+        if let Some(r) = reorder {
+            b = b.reorder(r);
+        }
+        let engine = b.build()?;
         let x: Vec<f32> = bench::bench_vector(engine.csr().cols, 0xBE7C)
             .into_iter()
             .map(|v| v as f32)
@@ -203,22 +221,41 @@ fn cmd_spmv(a: &Args) -> anyhow::Result<()> {
         std::hint::black_box(&y);
         println!(
             "{name}: kernel={kernel} precision=f32 threads={threads} \
-             numa={numa} nnz={nnz} time={seconds:.6}s gflops={:.3}",
+             numa={numa}{reorder_note} nnz={nnz} time={seconds:.6}s gflops={:.3}",
             spmv_gflops(nnz, seconds)
         );
     } else {
-        let engine = SpmvEngine::builder(csr)
+        let mut b = SpmvEngine::builder(csr)
             .threads(threads)
             .numa_split(numa)
             .kernel(kernel)
-            .build()?;
+            .panel_rows(panel_rows);
+        if let Some(r) = reorder {
+            b = b.reorder(r);
+        }
+        let engine = b.build()?;
         let x = bench::bench_vector(engine.csr().cols, 0xBE7C);
         let mut y = vec![0.0f64; engine.csr().rows];
         let seconds = mean_of_runs(bench::RUNS, || engine.spmv(&x, &mut y));
         std::hint::black_box(&y);
+        if kernel == KernelKind::Hybrid {
+            if let Some(hm) = engine.hybrid() {
+                let plan: Vec<String> = hm
+                    .segments
+                    .iter()
+                    .map(|s| {
+                        format!(
+                            "rows {}..{} -> {} ({} nnz)",
+                            s.row_begin, s.row_end, s.kernel, s.nnz
+                        )
+                    })
+                    .collect();
+                println!("hybrid schedule: {}", plan.join("; "));
+            }
+        }
         println!(
             "{name}: kernel={kernel} precision=f64 threads={threads} \
-             numa={numa} nnz={nnz} time={seconds:.6}s gflops={:.3}",
+             numa={numa}{reorder_note} nnz={nnz} time={seconds:.6}s gflops={:.3}",
             spmv_gflops(nnz, seconds)
         );
     }
@@ -386,5 +423,6 @@ fn cmd_kernels() -> anyhow::Result<()> {
         };
         println!("  {k:<12} [{simd}]");
     }
+    println!("  {:<12} [per-row-panel β/CSR schedule]", KernelKind::Hybrid);
     Ok(())
 }

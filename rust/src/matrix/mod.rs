@@ -13,6 +13,7 @@ pub mod suite;
 pub use coo::Coo;
 pub use csr::Csr;
 pub use dense::Dense;
+pub use reorder::ReorderKind;
 
 /// Errors produced by the matrix substrate.
 #[derive(Debug)]

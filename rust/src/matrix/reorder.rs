@@ -18,6 +18,39 @@
 use super::{Coo, Csr};
 use crate::scalar::Scalar;
 
+/// A reordering strategy the engine can apply at build time
+/// (`SpmvEngine::builder(..).reorder(..)`; CLI `--reorder`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReorderKind {
+    /// Reverse Cuthill–McKee: symmetric row+column permutation
+    /// (square matrices only).
+    Rcm,
+    /// Greedy column packing (column permutation only).
+    ColPack,
+}
+
+impl ReorderKind {
+    /// Parses `rcm` / `colpack` (also `column-pack`, `column_pack`).
+    pub fn parse(s: &str) -> Option<ReorderKind> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "rcm" => Some(ReorderKind::Rcm),
+            "colpack" | "column-pack" | "column_pack" => {
+                Some(ReorderKind::ColPack)
+            }
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for ReorderKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ReorderKind::Rcm => write!(f, "rcm"),
+            ReorderKind::ColPack => write!(f, "colpack"),
+        }
+    }
+}
+
 /// A permutation: `perm[new_index] = old_index`.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct Permutation {
@@ -202,6 +235,20 @@ mod tests {
     use crate::formats::BlockSize;
     use crate::matrix::suite;
     use crate::util::Rng;
+
+    #[test]
+    fn reorder_kind_parses() {
+        assert_eq!(ReorderKind::parse("rcm"), Some(ReorderKind::Rcm));
+        assert_eq!(ReorderKind::parse("RCM"), Some(ReorderKind::Rcm));
+        assert_eq!(ReorderKind::parse("colpack"), Some(ReorderKind::ColPack));
+        assert_eq!(
+            ReorderKind::parse("column-pack"),
+            Some(ReorderKind::ColPack)
+        );
+        assert_eq!(ReorderKind::parse("tsp"), None);
+        assert_eq!(ReorderKind::Rcm.to_string(), "rcm");
+        assert_eq!(ReorderKind::ColPack.to_string(), "colpack");
+    }
 
     #[test]
     fn identity_roundtrip() {

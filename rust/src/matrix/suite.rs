@@ -367,6 +367,31 @@ pub fn uniform_scatter(n: usize, deg: usize, seed: u64) -> Csr {
     coo.to_csr().expect("uniform_scatter produces valid matrices")
 }
 
+/// Generator: structurally heterogeneous square matrix — the top half
+/// is a densely filled band (block-friendly, high `Avg(r,c)`), the
+/// bottom half uniform scatter (blocks stay nearly empty, CSR
+/// territory). No fixed whole-matrix kernel is right for both halves;
+/// this is the motivating case for the per-panel hybrid schedule.
+pub fn mixed_band_scatter(n: usize, seed: u64) -> Csr {
+    let mut rng = Rng::new(seed);
+    let mut coo = Coo::new(n, n);
+    let half = n / 2;
+    for r in 0..half {
+        let lo = r.saturating_sub(12);
+        let hi = (r + 12).min(n - 1);
+        for c in lo..=hi {
+            coo.push(r, c, rng.nnz_value());
+        }
+    }
+    for r in half..n {
+        coo.push(r, r, 4.0 + rng.next_f64());
+        for _ in 0..6 {
+            coo.push(r, rng.next_below(n), rng.nnz_value());
+        }
+    }
+    coo.to_csr().expect("mixed_band_scatter produces valid matrices")
+}
+
 /// Generator: dense matrix (Dense-8000 surrogate, scaled).
 pub fn dense(n: usize, seed: u64) -> Csr {
     let mut rng = Rng::new(seed);

@@ -71,6 +71,10 @@ pub fn predict(m: &MachineModel, kind: KernelKind, avg: f64) -> f64 {
     match kind {
         KernelKind::Csr => 2.0 * m.bw_eff / (12.0 + 8.0) / 1e9,
         KernelKind::Csr5 => 2.0 * m.bw_eff / (12.0 + 8.0) / 1e9 * 0.9,
+        // The hybrid schedule picks at least CSR per panel, so CSR's
+        // prediction is its safe lower bound (the panel compiler does
+        // its own per-panel ranking — see `formats::hybrid`).
+        KernelKind::Hybrid => 2.0 * m.bw_eff / (12.0 + 8.0) / 1e9,
         KernelKind::Beta(..) | KernelKind::BetaTest(..) => {
             let bs = kind.block_size().unwrap();
             let mut bytes =
