@@ -17,11 +17,13 @@ use spc5::util::timer::{mean_of_runs, spmv_gflops};
 
 fn main() {
     // `SPC5_ABLATION=<name>` runs a single section (CI runs `hybrid`
-    // to produce the BENCH_3.json artifact without the full sweep).
+    // and `tile` to produce the BENCH_3.json / BENCH_4.json artifacts
+    // without the full sweep).
     if let Ok(only) = std::env::var("SPC5_ABLATION") {
         match only.as_str() {
             "hybrid" => return hybrid_ablation(),
             "prefetch" => return prefetch_ablation(),
+            "tile" => return tile_ablation(),
             other => {
                 eprintln!("unknown SPC5_ABLATION='{other}', running all")
             }
@@ -38,6 +40,7 @@ fn main() {
     batched_parallel_ablation();
     predictor_ablation();
     hybrid_ablation();
+    tile_ablation();
 }
 
 /// GFlop/s vs block fill for every kernel.
@@ -188,6 +191,7 @@ fn hybrid_ablation() {
             kernel: KernelKind::Hybrid,
             threads: 1,
             numa: false,
+            tile_cols: 0,
             gflops,
             seconds,
         });
@@ -222,6 +226,131 @@ fn hybrid_ablation() {
     match runner::write_bench_json(
         std::path::Path::new(&out),
         "kernel_micro/hybrid",
+        &all,
+    ) {
+        Ok(()) => eprintln!("  wrote {out}"),
+        Err(e) => eprintln!("warning: {e}"),
+    }
+}
+
+/// Tile-size ablation: the column-tiled `(panel, tile)` schedule
+/// swept over tile widths (including "off" = the flat schedule and
+/// "auto" = the detected L2 share) on matrices whose `x` working set
+/// exceeds the cache — the `wide_random` generator — plus one
+/// cache-resident control where tiling should be ≈neutral. Every
+/// measurement is persisted to `BENCH_4.json` (CI uploads it next to
+/// the hybrid ablation's BENCH_3.json), `tile = 0` marking the flat
+/// rows, so the tiled-vs-flat locality win is machine-readable.
+fn tile_ablation() {
+    let mats: Vec<(&str, Csr)> = vec![
+        // x = 400k doubles ≈ 3 MB: far past a per-core L2 share.
+        ("wide-random", suite::wide_random(40_000, 400_000, 12)),
+        // Control: banded x reuse is already cache-friendly.
+        ("banded-20k", suite::banded(20_000, 24, 0.6, 77)),
+    ];
+    // Width 0 spells "auto" in KernelKind::Tiled; the resolved width
+    // is recorded per measurement from the built engine.
+    let widths: [u32; 5] = [0, 2048, 8192, 32768, 131072];
+
+    let mut all: Vec<Measurement> = Vec::new();
+    let mut t = Table::new(
+        "Ablation K: column-tile width sweep, tiled vs flat \
+         (hybrid schedule + b(1,8), sequential)",
+        &["matrix", "schedule", "tile cols", "GF/s", "vs flat"],
+    );
+    for (name, csr) in &mats {
+        let x = bench_vector(csr.cols, 0xBE7C);
+        let mut y = vec![0.0f64; csr.rows];
+        let nnz = csr.nnz();
+        let mut measure = |engine: &SpmvEngine, kernel: KernelKind| {
+            let seconds = mean_of_runs(RUNS, || engine.spmv(&x, &mut y));
+            std::hint::black_box(&y);
+            let m = Measurement {
+                matrix: name.to_string(),
+                kernel,
+                threads: 1,
+                numa: false,
+                tile_cols: engine.tile_cols().unwrap_or(0),
+                gflops: spmv_gflops(nnz, seconds),
+                seconds,
+            };
+            all.push(m.clone());
+            m
+        };
+
+        // Flat hybrid baseline.
+        let flat = SpmvEngine::builder(csr.clone())
+            .kernel(KernelKind::Hybrid)
+            .build()
+            .expect("hybrid engine builds");
+        let flat_g = measure(&flat, KernelKind::Hybrid).gflops;
+        t.row(vec![
+            name.to_string(),
+            "hybrid".into(),
+            "off".into(),
+            format!("{flat_g:.2}"),
+            "1.000x".into(),
+        ]);
+        drop(flat);
+
+        // Tiled hybrid across the width sweep.
+        for &w in &widths {
+            let engine = SpmvEngine::builder(csr.clone())
+                .kernel(KernelKind::Tiled(w))
+                .build()
+                .expect("tiled engine builds");
+            let m = measure(&engine, KernelKind::Tiled(w));
+            let label = if w == 0 {
+                format!("auto ({})", m.tile_cols)
+            } else {
+                format!("{w}")
+            };
+            t.row(vec![
+                name.to_string(),
+                "tiled hybrid".into(),
+                label,
+                format!("{:.2}", m.gflops),
+                format!("{:.3}x", m.gflops / flat_g),
+            ]);
+        }
+
+        // Flat vs tiled β(1,8) — the pure-kernel view of the same
+        // lever (builder.tile_cols path).
+        let flat_b = SpmvEngine::builder(csr.clone())
+            .kernel(KernelKind::Beta(1, 8))
+            .build()
+            .expect("β engine builds");
+        let flat_bg = measure(&flat_b, KernelKind::Beta(1, 8)).gflops;
+        t.row(vec![
+            name.to_string(),
+            "b(1,8)".into(),
+            "off".into(),
+            format!("{flat_bg:.2}"),
+            "1.000x".into(),
+        ]);
+        drop(flat_b);
+        let tiled_b = SpmvEngine::builder(csr.clone())
+            .kernel(KernelKind::Beta(1, 8))
+            .tile_auto()
+            .build()
+            .expect("tiled β engine builds");
+        let m = measure(&tiled_b, KernelKind::Beta(1, 8));
+        t.row(vec![
+            name.to_string(),
+            "b(1,8) tiled".into(),
+            format!("auto ({})", m.tile_cols),
+            format!("{:.2}", m.gflops),
+            format!("{:.3}x", m.gflops / flat_bg),
+        ]);
+        eprintln!("  tile ablation: {name}");
+    }
+    t.emit("ablation_tile");
+
+    let out = std::env::var("SPC5_BENCH4_JSON")
+        .unwrap_or_else(|_| "BENCH_4.json".to_string());
+    match runner::write_bench_json(
+        std::path::Path::new(&out),
+        "kernel_micro/tile",
         &all,
     ) {
         Ok(()) => eprintln!("  wrote {out}"),

@@ -27,6 +27,8 @@ pub struct Measurement {
     pub kernel: KernelKind,
     pub threads: usize,
     pub numa: bool,
+    /// Column tile width the run used (`0` = flat execution).
+    pub tile_cols: usize,
     pub gflops: f64,
     pub seconds: f64,
 }
@@ -53,6 +55,9 @@ pub fn measure_sequential<T: Scalar>(
         kernel,
         threads: 1,
         numa: false,
+        // The *resolved* width, so an auto-sized `tiled` run is not
+        // mistaken for flat execution (`tile = 0`) in reports/records.
+        tile_cols: set.tile_cols(kernel),
         gflops: spmv_gflops(nnz, seconds),
         seconds,
     }
@@ -80,6 +85,7 @@ pub fn measure_parallel<T: Scalar>(
         kernel,
         threads: p.n_threads(),
         numa: p.strategy() == ParallelStrategy::NumaSplit,
+        tile_cols: kernel.tile_width(),
         gflops: spmv_gflops(nnz, seconds),
         seconds,
     }
@@ -110,6 +116,7 @@ pub fn measure_spmm<T: Scalar>(
         kernel,
         threads: p.n_threads(),
         numa: p.strategy() == ParallelStrategy::NumaSplit,
+        tile_cols: kernel.tile_width(),
         gflops: k as f64 * spmv_gflops(nnz, seconds),
         seconds,
     }
@@ -129,6 +136,7 @@ pub fn to_record(m: &Measurement, avg: f64) -> PerfRecord {
         kernel: m.kernel,
         avg_nnz_per_block: avg,
         threads: m.threads,
+        tile_cols: m.tile_cols,
         gflops: m.gflops,
     }
 }

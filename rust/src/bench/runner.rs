@@ -138,9 +138,12 @@ pub fn ensure_records(
 
 /// Writes a machine-readable benchmark report (GFlop/s per matrix ×
 /// kernel) — the artifact CI uploads so the perf trajectory of the
-/// repo is tracked across commits (`BENCH_3.json` for this PR's hybrid
-/// evidence). Schema: `{schema, suite, avx512, results: [{matrix,
-/// kernel, threads, numa, gflops, seconds}]}`.
+/// repo is tracked across commits (`BENCH_3.json` for the hybrid
+/// ablation, `BENCH_4.json` for the tile-width ablation). Schema:
+/// `{schema, suite, avx512, results: [{matrix, kernel, threads, numa,
+/// tile, gflops, seconds}]}` — `tile` is the column tile width, `0`
+/// meaning flat (untiled) execution, so tiled-vs-flat comparisons are
+/// machine-readable.
 pub fn write_bench_json(
     path: &std::path::Path,
     suite_label: &str,
@@ -155,6 +158,7 @@ pub fn write_bench_json(
                 ("kernel", Json::Str(m.kernel.to_string())),
                 ("threads", Json::Num(m.threads as f64)),
                 ("numa", Json::Bool(m.numa)),
+                ("tile", Json::Num(m.tile_cols as f64)),
                 ("gflops", Json::Num(m.gflops)),
                 ("seconds", Json::Num(m.seconds)),
             ])
@@ -211,6 +215,7 @@ mod tests {
             kernel: KernelKind::Csr,
             threads: 1,
             numa: false,
+            tile_cols: 0,
             gflops: g,
             seconds: 1.0,
         };

@@ -50,6 +50,7 @@
 use crate::formats::stats::paper_profile;
 use crate::formats::{
     csr_to_block, BlockMatrix, BlockSize, HybridConfig, HybridMatrix,
+    TileCols, TiledHybrid, TiledMatrix,
 };
 use crate::kernels::{csr as csr_kernel, csr5, spmm, spmv_block, KernelKind};
 use crate::matrix::reorder::{self, Permutation, ReorderKind};
@@ -76,6 +77,14 @@ enum Storage<T: Scalar> {
     /// Heterogeneous row-panel schedule; `chunks` holds the
     /// nnz-balanced *segment* split when `threads > 1`.
     Hybrid { hm: HybridMatrix<T>, chunks: Vec<(usize, usize)> },
+    /// Column-tiled β storage (cache-blocked `(panel, tile)` walk);
+    /// `chunks` holds the nnz-balanced *panel* split when
+    /// `threads > 1` — workers own disjoint row panels, tiles are
+    /// their inner sequential loop.
+    TiledBlock { tm: TiledMatrix<T>, chunks: Vec<(usize, usize)> },
+    /// Column-tiled hybrid schedule; `chunks` splits *segments* like
+    /// the flat hybrid path.
+    TiledHybrid { th: TiledHybrid<T>, chunks: Vec<(usize, usize)> },
 }
 
 /// The permutations a reordering engine applies around every product:
@@ -113,6 +122,15 @@ pub struct SpmvEngine<T: Scalar = f64> {
     /// Build-time reordering; when present, `csr` is the *permuted*
     /// matrix and every `spmv`/`spmm` transparently permutes x/y.
     reorder: Option<ReorderState<T>>,
+    /// Reusable de-interleave buffers `(xj, yj)` for the CSR/CSR5
+    /// multi-RHS fallback — engine-owned so the micro-batching service
+    /// does not allocate two fresh vectors per batch. Uncontended like
+    /// the reorder scratch; the lock only keeps `spmm(&self, ..)`
+    /// shareable.
+    baseline_spmm_scratch: Mutex<(Vec<T>, Vec<T>)>,
+    /// Pool attach id for per-worker SpMM accumulator scratch on the
+    /// tiled parallel paths.
+    scratch_attach: u64,
 }
 
 /// Fluent configuration for [`SpmvEngine`] — replaces the old
@@ -126,6 +144,7 @@ pub struct SpmvEngineBuilder<'r, T: Scalar = f64> {
     records: Option<&'r RecordStore>,
     panel_rows: usize,
     reorder: Option<ReorderKind>,
+    tiling: Option<TileCols>,
 }
 
 impl<T: Scalar> SpmvEngine<T> {
@@ -144,6 +163,7 @@ impl<T: Scalar> SpmvEngine<T> {
             records: None,
             panel_rows: crate::formats::hybrid::DEFAULT_PANEL_ROWS,
             reorder: None,
+            tiling: None,
         }
     }
 
@@ -183,6 +203,32 @@ impl<T: Scalar> SpmvEngine<T> {
     pub fn hybrid(&self) -> Option<&HybridMatrix<T>> {
         match &self.storage {
             Storage::Hybrid { hm, .. } => Some(hm),
+            _ => None,
+        }
+    }
+
+    /// For tiled β engines: the `(panel, tile)` schedule.
+    pub fn tiled(&self) -> Option<&TiledMatrix<T>> {
+        match &self.storage {
+            Storage::TiledBlock { tm, .. } => Some(tm),
+            _ => None,
+        }
+    }
+
+    /// For tiled hybrid engines: the tiled segment schedule.
+    pub fn tiled_hybrid(&self) -> Option<&TiledHybrid<T>> {
+        match &self.storage {
+            Storage::TiledHybrid { th, .. } => Some(th),
+            _ => None,
+        }
+    }
+
+    /// Resolved column tile width, when the engine runs cache-blocked
+    /// (`None` = flat schedule).
+    pub fn tile_cols(&self) -> Option<usize> {
+        match &self.storage {
+            Storage::TiledBlock { tm, .. } => Some(tm.tile_cols),
+            Storage::TiledHybrid { th, .. } => Some(th.tile_cols),
             _ => None,
         }
     }
@@ -232,6 +278,21 @@ impl<T: Scalar> SpmvEngine<T> {
                     hm.spmv(x, y);
                 } else {
                     self.hybrid_parallel(hm, chunks, x, y, 1);
+                }
+            }
+            Storage::TiledBlock { tm, chunks } => {
+                let test = matches!(self.kernel, KernelKind::BetaTest(..));
+                if chunks.is_empty() {
+                    tm.spmv(x, y, test);
+                } else {
+                    self.tiled_block_parallel(tm, chunks, x, y, 1, test);
+                }
+            }
+            Storage::TiledHybrid { th, chunks } => {
+                if chunks.is_empty() {
+                    th.spmv(x, y);
+                } else {
+                    self.tiled_hybrid_parallel(th, chunks, x, y, 1);
                 }
             }
         }
@@ -295,12 +356,37 @@ impl<T: Scalar> SpmvEngine<T> {
                     self.hybrid_parallel(hm, chunks, x, y, k);
                 }
             }
+            Storage::TiledBlock { tm, chunks } => {
+                let test = matches!(self.kernel, KernelKind::BetaTest(..));
+                if chunks.is_empty() {
+                    tm.spmm(x, y, k);
+                } else {
+                    self.tiled_block_parallel(tm, chunks, x, y, k, test);
+                }
+            }
+            Storage::TiledHybrid { th, chunks } => {
+                if chunks.is_empty() {
+                    th.spmm(x, y, k);
+                } else {
+                    self.tiled_hybrid_parallel(th, chunks, x, y, k);
+                }
+            }
             Storage::Csr { .. } | Storage::Csr5(_) => {
                 // No native multi-RHS kernel for the baselines: run k
-                // de-interleaved single-vector products.
+                // de-interleaved single-vector products through
+                // engine-owned scratch (allocating two vectors per
+                // batch here used to be the serving layer's hot-path
+                // allocation).
                 let (rows, cols) = (self.csr.rows, self.csr.cols);
-                let mut xj = vec![T::ZERO; cols];
-                let mut yj = vec![T::ZERO; rows];
+                let mut guard = self
+                    .baseline_spmm_scratch
+                    .lock()
+                    .expect("spmm scratch poisoned");
+                let (xj, yj) = &mut *guard;
+                xj.clear();
+                xj.resize(cols, T::ZERO);
+                yj.clear();
+                yj.resize(rows, T::ZERO);
                 for j in 0..k {
                     for c in 0..cols {
                         xj[c] = x[c * k + j];
@@ -308,7 +394,7 @@ impl<T: Scalar> SpmvEngine<T> {
                     yj.iter_mut().for_each(|v| *v = T::ZERO);
                     // `x` is already in the bound index space here, so
                     // stay below the reorder wrapper.
-                    self.spmv_permuted(&xj, &mut yj);
+                    self.spmv_permuted(xj, yj);
                     for r in 0..rows {
                         y[r * k + j] += yj[r];
                     }
@@ -358,6 +444,84 @@ impl<T: Scalar> SpmvEngine<T> {
                     seg.spmv(x, part);
                 } else {
                     seg.spmm(x, part, k);
+                }
+            }
+        });
+    }
+
+    /// Parallel tiled-β pass: the 2-D `(panel, tile)` schedule on the
+    /// pool. Workers own disjoint contiguous **row-panel** ranges
+    /// (balanced by nnz at build time) so no two workers touch the
+    /// same `y` rows and no atomics are needed; each worker walks its
+    /// panels' column tiles as an inner sequential loop, which is what
+    /// keeps its `x` window cache-resident.
+    fn tiled_block_parallel(
+        &self,
+        tm: &TiledMatrix<T>,
+        chunks: &[(usize, usize)],
+        x: &[T],
+        y: &mut [T],
+        k: usize,
+        test: bool,
+    ) {
+        let pool = self.pool.as_ref().expect("parallel tiled needs the pool");
+        debug_assert_eq!(chunks.len(), pool.n_threads());
+        let y_all = SendSlice::new(y);
+        let attach = self.scratch_attach;
+        pool.run(|ctx: crate::parallel::WorkerCtx<'_>| {
+            let (p0, p1) = chunks[ctx.tid];
+            if p0 == p1 {
+                return;
+            }
+            let row_begin = tm.panels[p0].row_begin;
+            let row_end = tm.panels[p1 - 1].row_end;
+            // SAFETY: panels are ordered and disjoint in rows and
+            // chunks are contiguous disjoint panel ranges, so no two
+            // workers touch the same `y` rows; the borrow outlives the
+            // blocked `run` call.
+            let part =
+                unsafe { y_all.subslice_mut(row_begin * k, row_end * k) };
+            if k == 1 {
+                tm.spmv_panels(p0, p1, x, part, test);
+            } else {
+                let sums =
+                    ctx.locals.get_or_insert_with(attach, Vec::<T>::new);
+                tm.spmm_panels(p0, p1, x, part, k, sums);
+            }
+        });
+    }
+
+    /// Parallel tiled-hybrid pass: workers own disjoint contiguous
+    /// runs of tiled segments (the same nnz-balanced split as the flat
+    /// hybrid path); within a segment the `(panel, tile)` walk is
+    /// sequential for locality.
+    fn tiled_hybrid_parallel(
+        &self,
+        th: &TiledHybrid<T>,
+        chunks: &[(usize, usize)],
+        x: &[T],
+        y: &mut [T],
+        k: usize,
+    ) {
+        let pool = self.pool.as_ref().expect("parallel tiled needs the pool");
+        debug_assert_eq!(chunks.len(), pool.n_threads());
+        let y_all = SendSlice::new(y);
+        let attach = self.scratch_attach;
+        pool.run(|ctx: crate::parallel::WorkerCtx<'_>| {
+            let (s0, s1) = chunks[ctx.tid];
+            let sums =
+                ctx.locals.get_or_insert_with(attach, Vec::<T>::new);
+            for seg in &th.segments[s0..s1] {
+                // SAFETY: segments are ordered and disjoint in rows and
+                // chunks are contiguous disjoint segment ranges; the
+                // borrow outlives the blocked `run` call.
+                let part = unsafe {
+                    y_all.subslice_mut(seg.row_begin * k, seg.row_end * k)
+                };
+                if k == 1 {
+                    seg.spmv(x, part);
+                } else {
+                    seg.spmm(x, part, k, sums);
                 }
             }
         });
@@ -417,10 +581,36 @@ impl<'r, T: Scalar> SpmvEngineBuilder<'r, T> {
         self
     }
 
-    /// Rows per panel for the hybrid schedule (must be a positive
-    /// multiple of 8; only used by [`KernelKind::Hybrid`]).
+    /// Rows per panel for the hybrid and tiled schedules (must be a
+    /// positive multiple of 8; used by [`KernelKind::Hybrid`],
+    /// [`KernelKind::Tiled`] and tiled β storages).
     pub fn panel_rows(mut self, rows: usize) -> Self {
         self.panel_rows = rows;
+        self
+    }
+
+    /// Fixed column tile width: the built storage executes
+    /// cache-blocked, each `(panel, tile)` pass touching only an
+    /// `n`-column window of `x`. `n == 0` means auto-size (the same
+    /// spelling as `tiled(0)`). Applies to β kernels (tiled block
+    /// spans) and to the hybrid schedule (every segment tiled); the
+    /// CSR/CSR5 baselines have no tiled form and ignore it.
+    pub fn tile_cols(mut self, n: usize) -> Self {
+        self.tiling = Some(if n == 0 {
+            TileCols::Auto
+        } else {
+            TileCols::Fixed(n)
+        });
+        self
+    }
+
+    /// Auto-sized column tiling: the tile width is chosen so the `x`
+    /// window fills half the detected per-core L2
+    /// ([`crate::formats::auto_tile_cols`]; `SPC5_L2_BYTES` overrides
+    /// the detection). Same applicability as
+    /// [`SpmvEngineBuilder::tile_cols`].
+    pub fn tile_auto(mut self) -> Self {
+        self.tiling = Some(TileCols::Auto);
         self
     }
 
@@ -445,6 +635,7 @@ impl<'r, T: Scalar> SpmvEngineBuilder<'r, T> {
             records: Some(store),
             panel_rows: self.panel_rows,
             reorder: self.reorder,
+            tiling: self.tiling,
         }
     }
 
@@ -460,6 +651,7 @@ impl<'r, T: Scalar> SpmvEngineBuilder<'r, T> {
             records,
             panel_rows,
             reorder: reorder_kind,
+            tiling,
         } = self;
 
         // Build-time reordering: permute first so block-fill profiling,
@@ -527,52 +719,96 @@ impl<'r, T: Scalar> SpmvEngineBuilder<'r, T> {
                 Storage::Csr5(csr5::Csr5Matrix::from_csr(&csr))
             }
             KernelKind::Hybrid => {
-                let cfg = HybridConfig {
-                    panel_rows,
-                    candidates: hybrid_candidates::<T>(&candidates),
-                    // Ask the schedule compiler for ≥ one segment per
-                    // worker, else a homogeneous matrix merges into a
-                    // single segment and parallelism collapses.
-                    split: threads,
+                let hm = compile_hybrid(
+                    &csr, panel_rows, &candidates, records, threads,
+                )?;
+                match tiling {
+                    // builder.tile_cols / tile_auto lift the flat
+                    // hybrid schedule into the column-tiled world.
+                    Some(tc) => {
+                        let th = TiledHybrid::from_hybrid(&hm, tc)?;
+                        let chunks = if threads > 1 {
+                            nnz_chunks(th.segments.iter().map(|s| s.nnz), threads)
+                        } else {
+                            Vec::new()
+                        };
+                        Storage::TiledHybrid { th, chunks }
+                    }
+                    None => {
+                        let chunks = if threads > 1 {
+                            nnz_chunks(hm.segments.iter().map(|s| s.nnz), threads)
+                        } else {
+                            Vec::new()
+                        };
+                        Storage::Hybrid { hm, chunks }
+                    }
+                }
+            }
+            KernelKind::Tiled(w) => {
+                // The tiled kernel is the cache-blocked execution of
+                // the hybrid row-panel schedule. An inline width
+                // (`tiled(n)`) wins over the builder's tiling setting;
+                // `tiled` alone defers to it, defaulting to auto.
+                let hm = compile_hybrid(
+                    &csr, panel_rows, &candidates, records, threads,
+                )?;
+                let tc = if w > 0 {
+                    TileCols::Fixed(w as usize)
+                } else {
+                    tiling.unwrap_or(TileCols::Auto)
                 };
-                // Fitted GFlop/s surface for the panel compiler when
-                // records exist (sequential fits — the panel decision
-                // models single-span kernel speed).
-                let kinds: Vec<KernelKind> = std::iter::once(KernelKind::Csr)
-                    .chain(cfg.candidates.iter().map(|bs| {
-                        KernelKind::Beta(bs.r as u8, bs.c as u8)
-                    }))
-                    .collect();
-                let models = records.map(|store| {
-                    crate::predictor::select::fit_sequential(store, &kinds)
-                });
-                let hm = HybridMatrix::from_csr(&csr, &cfg, models.as_ref())?;
+                let th = TiledHybrid::from_hybrid(&hm, tc)?;
                 let chunks = if threads > 1 {
-                    hybrid_segment_chunks(&hm, threads)
+                    nnz_chunks(th.segments.iter().map(|s| s.nnz), threads)
                 } else {
                     Vec::new()
                 };
-                Storage::Hybrid { hm, chunks }
+                Storage::TiledHybrid { th, chunks }
             }
             KernelKind::Beta(..) | KernelKind::BetaTest(..) => {
                 let bs = kernel.block_size().expect("β kernel has a size");
-                let block = csr_to_block(&csr, bs)?;
-                let test = matches!(kernel, KernelKind::BetaTest(..));
-                match &pool {
-                    Some(pool) => {
-                        let strategy = if numa_split {
-                            ParallelStrategy::NumaSplit
+                match tiling {
+                    // Cache-blocked β: `(panel, tile)` spans over one
+                    // converted block matrix. Parallelism is the 2-D
+                    // panel split on the pool (the NUMA array-split
+                    // strategy has no tiled form and is not applied
+                    // here).
+                    Some(tcfg) => {
+                        let block = csr_to_block(&csr, bs)?;
+                        let tile_cols = tcfg.resolve::<T>(csr.cols);
+                        let tm = TiledMatrix::from_block(
+                            &block, panel_rows, tile_cols,
+                        )?;
+                        let chunks = if threads > 1 {
+                            nnz_chunks(tm.panels.iter().map(|p| p.nnz), threads)
                         } else {
-                            ParallelStrategy::Shared
+                            Vec::new()
                         };
-                        Storage::BlockParallel(ParallelSpmv::with_pool(
-                            block,
-                            Arc::clone(pool),
-                            strategy,
-                            test,
-                        ))
+                        Storage::TiledBlock { tm, chunks }
                     }
-                    None => Storage::Block(block),
+                    None => {
+                        let block = csr_to_block(&csr, bs)?;
+                        let test =
+                            matches!(kernel, KernelKind::BetaTest(..));
+                        match &pool {
+                            Some(pool) => {
+                                let strategy = if numa_split {
+                                    ParallelStrategy::NumaSplit
+                                } else {
+                                    ParallelStrategy::Shared
+                                };
+                                Storage::BlockParallel(
+                                    ParallelSpmv::with_pool(
+                                        block,
+                                        Arc::clone(pool),
+                                        strategy,
+                                        test,
+                                    ),
+                                )
+                            }
+                            None => Storage::Block(block),
+                        }
+                    }
                 }
             }
         };
@@ -585,8 +821,43 @@ impl<'r, T: Scalar> SpmvEngineBuilder<'r, T> {
             threads,
             pool,
             reorder: reorder_state,
+            baseline_spmm_scratch: Mutex::new((Vec::new(), Vec::new())),
+            scratch_attach: crate::parallel::pool::next_attach_id(),
         })
     }
+}
+
+/// Compiles the hybrid row-panel schedule for an engine build: the
+/// builder's candidate kernels filtered per precision, the schedule
+/// split sized to the worker count, and the predictor's fitted
+/// sequential GFlop/s surface supplied when records exist (the panel
+/// decision models single-span kernel speed). Shared by the flat
+/// hybrid and the tiled storages.
+fn compile_hybrid<T: Scalar>(
+    csr: &Csr<T>,
+    panel_rows: usize,
+    candidates: &[KernelKind],
+    records: Option<&RecordStore>,
+    threads: usize,
+) -> Result<HybridMatrix<T>, crate::formats::FormatError> {
+    let cfg = HybridConfig {
+        panel_rows,
+        candidates: hybrid_candidates::<T>(candidates),
+        // Ask the schedule compiler for ≥ one segment per worker, else
+        // a homogeneous matrix merges into a single segment and
+        // parallelism collapses.
+        split: threads,
+    };
+    let kinds: Vec<KernelKind> = std::iter::once(KernelKind::Csr)
+        .chain(
+            cfg.candidates
+                .iter()
+                .map(|bs| KernelKind::Beta(bs.r as u8, bs.c as u8)),
+        )
+        .collect();
+    let models = records
+        .map(|store| crate::predictor::select::fit_sequential(store, &kinds));
+    HybridMatrix::from_csr(csr, &cfg, models.as_ref())
 }
 
 /// β candidate sizes for the hybrid panel compiler: the builder's
@@ -612,18 +883,18 @@ fn hybrid_candidates<T: Scalar>(kinds: &[KernelKind]) -> Vec<BlockSize> {
     }
 }
 
-/// Splits the hybrid schedule's segment list into `n` contiguous runs
-/// of approximately equal nnz (the same prefix rule as the β and CSR
-/// parallel paths).
-fn hybrid_segment_chunks<T: Scalar>(
-    hm: &HybridMatrix<T>,
+/// Splits an ordered work list into `n` contiguous runs of
+/// approximately equal weight via the paper's prefix rule — the one
+/// balancing routine behind the hybrid-segment, tiled-panel and
+/// tiled-segment parallel splits.
+fn nnz_chunks(
+    nnzs: impl Iterator<Item = usize>,
     n: usize,
 ) -> Vec<(usize, usize)> {
-    let mut prefix = Vec::with_capacity(hm.segments.len() + 1);
-    prefix.push(0u32);
+    let mut prefix = vec![0u32];
     let mut acc = 0u64;
-    for s in &hm.segments {
-        acc += s.nnz as u64;
+    for w in nnzs {
+        acc += w as u64;
         prefix.push(u32::try_from(acc).expect("nnz fits the u32 prefix"));
     }
     balanced_prefix_split(&prefix, n)
@@ -741,6 +1012,7 @@ mod tests {
                 kernel: KernelKind::Beta(4, 8),
                 avg_nnz_per_block: avg,
                 threads: 1,
+                tile_cols: 0,
                 gflops: 0.5 + 0.1 * avg,
             });
             store.push(PerfRecord {
@@ -748,6 +1020,7 @@ mod tests {
                 kernel: KernelKind::Beta(1, 8),
                 avg_nnz_per_block: (1.0 + i as f64 * 0.6).min(8.0),
                 threads: 1,
+                tile_cols: 0,
                 gflops: 1.0,
             });
         }
@@ -908,6 +1181,7 @@ mod tests {
                 KernelKind::Beta(2, 4),
                 KernelKind::Csr,
                 KernelKind::Hybrid,
+                KernelKind::Tiled(128),
             ] {
                 let e = SpmvEngine::builder(csr.clone())
                     .kernel(kernel)
@@ -989,6 +1263,154 @@ mod tests {
             fill_after > fill_before * 1.2,
             "RCM should recover fill: {fill_before:.2} -> {fill_after:.2}"
         );
+    }
+
+    #[test]
+    fn tiled_kernel_matches_reference_seq_and_par() {
+        let csr = suite::mixed_band_scatter(2_048, 5);
+        let x: Vec<f64> = (0..csr.cols).map(|i| (i % 9) as f64 - 4.0).collect();
+        let mut want = vec![0.0; csr.rows];
+        csr.spmv_ref(&x, &mut want);
+        for threads in [1usize, 3] {
+            for kernel in [KernelKind::Tiled(0), KernelKind::Tiled(256)] {
+                let e = SpmvEngine::builder(csr.clone())
+                    .kernel(kernel)
+                    .panel_rows(128)
+                    .threads(threads)
+                    .build()
+                    .unwrap();
+                assert_eq!(e.kernel(), kernel);
+                let th = e.tiled_hybrid().expect("tiled hybrid storage");
+                th.validate().unwrap();
+                let want_tile = match kernel {
+                    KernelKind::Tiled(0) => {
+                        crate::formats::auto_tile_cols::<f64>(csr.cols)
+                    }
+                    KernelKind::Tiled(w) => w as usize,
+                    _ => unreachable!(),
+                };
+                assert_eq!(e.tile_cols(), Some(want_tile));
+                let mut y = vec![0.0; csr.rows];
+                e.spmv_into(&x, &mut y);
+                crate::testkit::assert_close(
+                    &y,
+                    &want,
+                    1e-9,
+                    &format!("{kernel} t={threads}"),
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn tiled_beta_builder_matches_flat_engine() {
+        let csr = suite::fem_blocked(400, 3, 6, 21);
+        let x: Vec<f64> = (0..csr.cols).map(|i| (i % 7) as f64 - 3.0).collect();
+        let mut want = vec![0.0; csr.rows];
+        csr.spmv_ref(&x, &mut want);
+        for kernel in [KernelKind::Beta(2, 8), KernelKind::BetaTest(2, 4)] {
+            for threads in [1usize, 4] {
+                let e = SpmvEngine::builder(csr.clone())
+                    .kernel(kernel)
+                    .tile_cols(96)
+                    .panel_rows(64)
+                    .threads(threads)
+                    .build()
+                    .unwrap();
+                assert_eq!(e.tile_cols(), Some(96));
+                let tm = e.tiled().expect("tiled β storage");
+                tm.validate().unwrap();
+                let mut y = vec![0.0; csr.rows];
+                e.spmv_into(&x, &mut y);
+                crate::testkit::assert_close(
+                    &y,
+                    &want,
+                    1e-9,
+                    &format!("tiled {kernel} t={threads}"),
+                );
+            }
+        }
+        // Baselines have no tiled form: the setting is ignored, not an
+        // error.
+        let e = SpmvEngine::builder(csr.clone())
+            .kernel(KernelKind::Csr)
+            .tile_cols(96)
+            .build()
+            .unwrap();
+        assert_eq!(e.tile_cols(), None);
+        // tile_cols(0) spells auto, consistently with `tiled(0)`.
+        let e = SpmvEngine::builder(csr.clone())
+            .kernel(KernelKind::Beta(2, 8))
+            .tile_cols(0)
+            .build()
+            .unwrap();
+        assert_eq!(
+            e.tile_cols(),
+            Some(crate::formats::auto_tile_cols::<f64>(csr.cols))
+        );
+    }
+
+    #[test]
+    fn tiled_engine_spmm_matches_k_spmvs() {
+        let csr = suite::mixed_band_scatter(1_536, 11);
+        let k = 4usize;
+        let mut rng = crate::util::Rng::new(5);
+        let x: Vec<f64> =
+            (0..csr.cols * k).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+        for threads in [1usize, 3] {
+            let e = SpmvEngine::builder(csr.clone())
+                .kernel(KernelKind::Tiled(192))
+                .panel_rows(64)
+                .threads(threads)
+                .build()
+                .unwrap();
+            let mut y = vec![0.0; csr.rows * k];
+            e.spmm_into(&x, &mut y, k);
+            for j in 0..k {
+                let xj: Vec<f64> =
+                    (0..csr.cols).map(|c| x[c * k + j]).collect();
+                let mut want = vec![0.0; csr.rows];
+                e.spmv_into(&xj, &mut want);
+                for r in 0..csr.rows {
+                    assert!(
+                        (y[r * k + j] - want[r]).abs()
+                            <= 1e-9 * want[r].abs().max(1.0),
+                        "t={threads} j={j} row {r}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn baseline_spmm_reuses_engine_scratch() {
+        // The CSR fallback must keep working when spmm is called twice
+        // with different k (scratch is resized, not assumed fresh).
+        let csr = suite::poisson2d(12);
+        let e = SpmvEngine::builder(csr.clone())
+            .kernel(KernelKind::Csr)
+            .build()
+            .unwrap();
+        for k in [3usize, 2, 5] {
+            let x: Vec<f64> = (0..csr.cols * k)
+                .map(|i| ((i * 7) % 13) as f64 * 0.5 - 3.0)
+                .collect();
+            let mut y = vec![0.0; csr.rows * k];
+            e.spmm_into(&x, &mut y, k);
+            for j in 0..k {
+                let xj: Vec<f64> =
+                    (0..csr.cols).map(|c| x[c * k + j]).collect();
+                let mut want = vec![0.0; csr.rows];
+                csr.spmv_ref(&xj, &mut want);
+                for r in 0..csr.rows {
+                    assert!(
+                        (y[r * k + j] - want[r]).abs()
+                            <= 1e-9 * want[r].abs().max(1.0),
+                        "k={k} j={j} row {r}"
+                    );
+                }
+            }
+        }
     }
 
     #[test]

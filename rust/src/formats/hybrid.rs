@@ -605,6 +605,7 @@ mod tests {
                 kernel: KernelKind::Csr,
                 avg_nnz_per_block: avg,
                 threads: 1,
+                tile_cols: 0,
                 gflops: 50.0,
             });
             for bs in BlockSize::PAPER_SIZES {
@@ -613,6 +614,7 @@ mod tests {
                     kernel: KernelKind::Beta(bs.r as u8, bs.c as u8),
                     avg_nnz_per_block: avg * (bs.bits() as f64 / 8.0),
                     threads: 1,
+                    tile_cols: 0,
                     gflops: 0.1,
                 });
             }

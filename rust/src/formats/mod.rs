@@ -18,6 +18,7 @@ pub mod convert;
 pub mod hybrid;
 pub mod occupancy;
 pub mod stats;
+pub mod tiled;
 
 pub use block::{BlockMatrix, HEADER_COLIDX_BYTES};
 pub use convert::{block_to_csr, csr_to_block};
@@ -26,6 +27,10 @@ pub use hybrid::{
 };
 pub use occupancy::{beta_occupancy_bytes, csr_occupancy_bytes, fill_crossover};
 pub use stats::BlockStats;
+pub use tiled::{
+    auto_tile_cols, TileCols, TiledConfig, TiledCsr, TiledHybrid,
+    TiledMatrix,
+};
 
 /// A block size `r×c`. The paper's optimized f64 kernels cover the six
 /// sizes in [`BlockSize::PAPER_SIZES`]; the f32 stack adds the 16-lane

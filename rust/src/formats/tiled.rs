@@ -1,0 +1,1703 @@
+//! Column-tiled (cache-blocked) execution schedules over the β and
+//! hybrid storages.
+//!
+//! The β(r,c) kernels stream their matrix arrays perfectly, but the
+//! `x`-vector loads are indexed by block column: once `x` outgrows the
+//! last-level cache, every `vexpandpd`/`vexpandps` window load is a
+//! potential memory-latency stall — the regime where wide-SIMD sparse
+//! formats lose to plain CSR (Kreutzer et al.'s SELL-C-σ analysis),
+//! best attacked with explicit cache blocking (Chen et al. on KNL/KNM).
+//!
+//! [`TiledMatrix`] reorders an existing [`BlockMatrix`] into
+//! `(row-panel, column-tile)` groups: the rows are cut into fixed
+//! panels (like the hybrid schedule), and inside each panel the blocks
+//! are bucketed by the column tile containing their anchor column.
+//! Execution walks panels outermost and tiles innermost, so
+//!
+//! - each tile pass touches only a `tile_cols`-sized window of `x`
+//!   (sized to an L2 share by [`TileCols::Auto`], or fixed by the
+//!   caller), which stays cache-resident across the whole pass, and
+//! - `y` rows of the current panel stay hot across all of its tiles
+//!   (the interval accumulators flush into the same panel-local rows
+//!   once per tile).
+//!
+//! Each `(panel, tile)` group is stored as a self-contained **span** —
+//! the same [`crate::kernels::avx512::Span`] the parallel runtime
+//! already feeds to the kernels — with its header `colidx` rewritten
+//! relative to the tile's first column. Running a span through the
+//! existing masked kernels then only needs the `x` slice to start at
+//! the tile base ([`crate::kernels::avx512::spmv_span_at`] /
+//! [`crate::kernels::spmm::spmm_span_at`]): no kernel body changes at
+//! all, for SpMV and the multi-RHS SpMM alike.
+//!
+//! [`TiledCsr`] applies the same `(panel, tile)` bucketing to a CSR
+//! storage (tile-relative `colidx`, per-span row prefixes), and
+//! [`TiledHybrid`] lifts a compiled [`HybridMatrix`] schedule into the
+//! tiled world segment by segment — β segments become [`TiledMatrix`]
+//! storages, CSR segments become [`TiledCsr`] — so the *whole* kernel
+//! stack is cache-blocked, not just the homogeneous β path.
+//!
+//! Every container has a `validate()` proving the tiling is a
+//! permutation of the source storage: spans are ordered and
+//! non-overlapping, their arrays partition the backing storage exactly,
+//! and the per-interval (per-row) block/entry counts match the counts
+//! recorded from the source at conversion time — i.e. every block
+//! lands in exactly one span.
+
+use super::{
+    csr_to_block, BlockMatrix, BlockSize, FormatError, HybridMatrix,
+    PanelKernel, SegmentStorage,
+};
+use crate::kernels::avx512::Span;
+use crate::matrix::Csr;
+use crate::scalar::{MaskWord, Scalar};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Once;
+
+/// Default panel height for tiled schedules (same as the hybrid
+/// default: a multiple of 8, so every kernel interval height divides
+/// panel boundaries).
+pub use super::hybrid::DEFAULT_PANEL_ROWS;
+
+/// Smallest tile width the auto-sizer will pick: below this the
+/// per-span dispatch overhead dominates any locality win.
+pub const MIN_TILE_COLS: usize = 1024;
+
+/// Auto-sized tile widths are rounded down to a multiple of this
+/// (a cache line of f64).
+const TILE_ALIGN: usize = 64;
+
+/// L2 share assumed when the cache hierarchy cannot be detected.
+const DEFAULT_L2_BYTES: usize = 1 << 20;
+
+static L2_ONCE: Once = Once::new();
+static L2_BYTES: AtomicUsize = AtomicUsize::new(0);
+
+/// Detected per-core L2 size in bytes, resolved once per process:
+/// the `SPC5_L2_BYTES` environment variable when set, else the Linux
+/// sysfs cache hierarchy (`cpu0/cache/index2/size`), else a 1 MiB
+/// fallback.
+pub fn l2_cache_bytes() -> usize {
+    L2_ONCE.call_once(|| {
+        let bytes = std::env::var("SPC5_L2_BYTES")
+            .ok()
+            .and_then(|s| s.trim().parse::<usize>().ok())
+            .filter(|&b| b > 0)
+            .or_else(read_sysfs_l2)
+            .unwrap_or(DEFAULT_L2_BYTES);
+        L2_BYTES.store(bytes, Ordering::Relaxed);
+    });
+    L2_BYTES.load(Ordering::Relaxed)
+}
+
+fn read_sysfs_l2() -> Option<usize> {
+    let text = std::fs::read_to_string(
+        "/sys/devices/system/cpu/cpu0/cache/index2/size",
+    )
+    .ok()?;
+    parse_cache_size(text.trim())
+}
+
+/// Parses the sysfs cache-size spelling (`"1024K"`, `"2M"`, plain
+/// bytes).
+fn parse_cache_size(s: &str) -> Option<usize> {
+    if s.is_empty() {
+        return None;
+    }
+    let (num, mult) = match s.as_bytes()[s.len() - 1] {
+        b'K' | b'k' => (&s[..s.len() - 1], 1024usize),
+        b'M' | b'm' => (&s[..s.len() - 1], 1024 * 1024),
+        b'G' | b'g' => (&s[..s.len() - 1], 1024 * 1024 * 1024),
+        _ => (s, 1),
+    };
+    num.trim()
+        .parse::<usize>()
+        .ok()
+        .and_then(|n| n.checked_mul(mult))
+        .filter(|&b| b > 0)
+}
+
+/// The tile width an `x` window of scalar `T` should use so half the
+/// detected L2 holds it (the other half is left to the streamed
+/// header/value arrays and the panel's `y` rows), clamped to
+/// `[MIN_TILE_COLS, cols]` and cache-line aligned.
+pub fn auto_tile_cols<T: Scalar>(cols: usize) -> usize {
+    let budget = l2_cache_bytes() / 2;
+    let mut tile = (budget / T::BYTES).max(MIN_TILE_COLS);
+    tile -= tile % TILE_ALIGN;
+    tile.min(cols.max(1)).max(1)
+}
+
+/// How wide the column tiles are.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TileCols {
+    /// Size the tile to an L2 share detected at runtime
+    /// ([`auto_tile_cols`]).
+    Auto,
+    /// Fixed width in columns (manual override).
+    Fixed(usize),
+}
+
+impl TileCols {
+    /// The concrete tile width for a matrix with `cols` columns at
+    /// scalar `T`.
+    pub fn resolve<T: Scalar>(self, cols: usize) -> usize {
+        match self {
+            TileCols::Auto => auto_tile_cols::<T>(cols),
+            TileCols::Fixed(n) => n.max(1),
+        }
+    }
+}
+
+/// Configuration of a tiled conversion.
+#[derive(Clone, Debug)]
+pub struct TiledConfig {
+    /// Rows per panel (positive multiple of 8, like the hybrid
+    /// schedule).
+    pub panel_rows: usize,
+    /// Column tile width.
+    pub tile_cols: TileCols,
+}
+
+impl Default for TiledConfig {
+    fn default() -> Self {
+        TiledConfig {
+            panel_rows: DEFAULT_PANEL_ROWS,
+            tile_cols: TileCols::Auto,
+        }
+    }
+}
+
+fn validate_panel_rows(panel_rows: usize) -> Result<(), FormatError> {
+    if panel_rows == 0 || panel_rows % 8 != 0 {
+        return Err(FormatError::Inconsistent(format!(
+            "panel_rows must be a positive multiple of 8, got {panel_rows}"
+        )));
+    }
+    Ok(())
+}
+
+/// One row panel of a tiled schedule: a contiguous row range plus the
+/// range of spans (column tiles) that cover its nonzeros.
+#[derive(Clone, Copy, Debug)]
+pub struct TilePanel {
+    /// First matrix row (inclusive); a multiple of `panel_rows`.
+    pub row_begin: usize,
+    /// One past the last matrix row of the panel.
+    pub row_end: usize,
+    /// Nonzeros in the panel (the parallel split weight).
+    pub nnz: usize,
+    /// Range `[span_begin, span_end)` into the container's span list.
+    pub span_begin: usize,
+    pub span_end: usize,
+}
+
+/// One `(panel, tile)` group of a [`TiledMatrix`]: a self-contained
+/// kernel span whose header `colidx` are relative to `col_begin`.
+///
+/// The span's interval prefix covers only the **occupied window**
+/// `[it_begin, it_begin + n_its)` of the panel's intervals (first to
+/// last interval owning a block in this tile), not the whole panel —
+/// on structured matrices a tile is touched by a narrow row band, and
+/// a dense whole-panel prefix per span would make the metadata rival
+/// the matrix data. (On uniformly scattered matrices the window stays
+/// wide; very small manual tile widths there still pay a metadata
+/// cost ∝ spans × window — prefer auto sizing, whose ≥1024-column
+/// floor keeps the span count low.)
+#[derive(Clone, Copy, Debug)]
+pub struct TileSpan {
+    /// Column tile index.
+    pub tile: usize,
+    /// First column of the tile (`tile * tile_cols`); the `x` window
+    /// the span's kernel call starts at.
+    pub col_begin: usize,
+    /// First panel-local interval of the occupied window.
+    pub it_begin: usize,
+    /// Intervals in the occupied window (≥ 1; first and last are
+    /// non-empty).
+    pub n_its: usize,
+    /// Blocks in the span.
+    pub n_blocks: usize,
+    /// Stored nonzeros in the span.
+    pub nnz: usize,
+    /// Start of the span's `n_its + 1` local block prefix inside the
+    /// container's `rowptr` array.
+    pub rowptr_begin: usize,
+    /// Byte offset of the span's interleaved headers.
+    pub header_begin: usize,
+    /// Offset of the span's values.
+    pub val_begin: usize,
+}
+
+/// A `β(r,c)` matrix reordered into `(row-panel, column-tile)` spans —
+/// the cache-blocked execution layout (see the module docs).
+pub struct TiledMatrix<T: Scalar = f64> {
+    pub rows: usize,
+    pub cols: usize,
+    pub bs: BlockSize,
+    /// Effective panel height: the requested height rounded down to a
+    /// multiple of the interval height `r`, so panel boundaries always
+    /// sit on interval boundaries (identical to the request for the
+    /// kernel sizes, where `r | 8 | panel_rows`).
+    pub panel_rows: usize,
+    /// Concrete column tile width.
+    pub tile_cols: usize,
+    /// Number of column tiles (`ceil(cols / tile_cols)`).
+    pub n_tiles: usize,
+    /// Panels in row order, covering `0..rows` contiguously.
+    pub panels: Vec<TilePanel>,
+    /// Spans grouped by panel, tiles ascending within a panel; empty
+    /// `(panel, tile)` combinations are omitted.
+    pub spans: Vec<TileSpan>,
+    /// Concatenated per-span local block prefixes (`span.n_its + 1`
+    /// entries each, starting at 0 — only the span's occupied
+    /// interval window, see [`TileSpan`]).
+    pub rowptr: Vec<u32>,
+    /// Concatenated per-span interleaved headers
+    /// (`colidx:4B | masks:r·mask_bytes`, colidx **tile-relative**).
+    pub headers: Vec<u8>,
+    /// Values reordered into span order (still unpadded).
+    pub values: Vec<T>,
+    /// Per-interval block counts of the *source* conversion, kept so
+    /// [`TiledMatrix::validate`] can prove every source block landed in
+    /// exactly one span.
+    pub source_blocks_per_interval: Vec<u32>,
+}
+
+impl<T: Scalar> TiledMatrix<T> {
+    /// Converts CSR → β(r,c) → tiled layout in one call.
+    pub fn from_csr(
+        csr: &Csr<T>,
+        bs: BlockSize,
+        cfg: &TiledConfig,
+    ) -> Result<TiledMatrix<T>, FormatError> {
+        let bm = csr_to_block(csr, bs)?;
+        let tile_cols = cfg.tile_cols.resolve::<T>(csr.cols);
+        TiledMatrix::from_block(&bm, cfg.panel_rows, tile_cols)
+    }
+
+    /// Reorders an existing block matrix into the tiled layout.
+    pub fn from_block(
+        bm: &BlockMatrix<T>,
+        panel_rows: usize,
+        tile_cols: usize,
+    ) -> Result<TiledMatrix<T>, FormatError> {
+        validate_panel_rows(panel_rows)?;
+        if tile_cols == 0 {
+            return Err(FormatError::Inconsistent(
+                "tile_cols must be positive".into(),
+            ));
+        }
+        let r = bm.bs.r;
+        // Effective panel height: the largest multiple of the interval
+        // height not exceeding the requested panel_rows, so panel
+        // boundaries always align with interval boundaries. For the
+        // kernel sizes (r ∈ {1,2,4,8}) this equals the request; the
+        // generic sizes (e.g. β(3,5)) round down (64 → 63).
+        let ipp = (panel_rows / r).max(1); // intervals per panel
+        let panel_rows = ipp * r;
+        let n_intervals = bm.intervals();
+        let n_panels = crate::util::ceil_div(bm.rows, panel_rows);
+        let n_tiles = crate::util::ceil_div(bm.cols.max(1), tile_cols);
+        let stride = bm.header_stride();
+
+        // Per-block value offsets (prefix of block popcounts), so each
+        // span can gather its values from the source block order.
+        let mut val_off = Vec::with_capacity(bm.n_blocks() + 1);
+        val_off.push(0usize);
+        let mut acc = 0usize;
+        for b in 0..bm.n_blocks() {
+            let mut pop = 0u32;
+            for i in 0..r {
+                pop += bm.block_masks[b * r + i].count_ones();
+            }
+            acc += pop as usize;
+            val_off.push(acc);
+        }
+
+        let source_blocks_per_interval: Vec<u32> = (0..n_intervals)
+            .map(|it| bm.block_rowptr[it + 1] - bm.block_rowptr[it])
+            .collect();
+
+        let mut panels = Vec::with_capacity(n_panels);
+        let mut spans: Vec<TileSpan> = Vec::new();
+        let mut rowptr: Vec<u32> = Vec::new();
+        let mut headers: Vec<u8> = Vec::with_capacity(bm.headers.len());
+        let mut values: Vec<T> = Vec::with_capacity(bm.values.len());
+        // Scratch: one panel's blocks as (tile, local interval, block).
+        let mut bucket: Vec<(u32, u32, u32)> = Vec::new();
+
+        for p in 0..n_panels {
+            let it0 = p * ipp;
+            let it1 = ((p + 1) * ipp).min(n_intervals);
+            let row_begin = p * panel_rows;
+            let row_end = (row_begin + panel_rows).min(bm.rows);
+
+            bucket.clear();
+            for it in it0..it1 {
+                let (a, b) = (
+                    bm.block_rowptr[it] as usize,
+                    bm.block_rowptr[it + 1] as usize,
+                );
+                for blk in a..b {
+                    let tile = bm.block_colidx[blk] as usize / tile_cols;
+                    bucket.push((tile as u32, (it - it0) as u32, blk as u32));
+                }
+            }
+            // Stable sort: within a tile the (interval, column) order of
+            // the source conversion is preserved.
+            bucket.sort_by_key(|&(tile, _, _)| tile);
+
+            let span_begin = spans.len();
+            let mut panel_nnz = 0usize;
+            let mut i = 0usize;
+            while i < bucket.len() {
+                let tile = bucket[i].0 as usize;
+                let mut j = i;
+                while j < bucket.len() && bucket[j].0 as usize == tile {
+                    j += 1;
+                }
+                let col_begin = tile * tile_cols;
+                let rowptr_begin = rowptr.len();
+                let header_begin = headers.len();
+                let val_begin = values.len();
+
+                // Occupied interval window of this tile: entries within
+                // a tile group keep the (interval, column) push order,
+                // so the first/last entries bound it.
+                let it_b = bucket[i].1 as usize;
+                let it_e = bucket[j - 1].1 as usize + 1;
+                let n_its_span = it_e - it_b;
+
+                // Local block prefix over the window's intervals.
+                let rp_base = rowptr.len();
+                rowptr.resize(rp_base + n_its_span + 1, 0);
+                for &(_, itl, _) in &bucket[i..j] {
+                    rowptr[rp_base + (itl as usize - it_b) + 1] += 1;
+                }
+                for m in 0..n_its_span {
+                    rowptr[rp_base + m + 1] += rowptr[rp_base + m];
+                }
+
+                // Headers (colidx rewritten tile-relative) and values.
+                for &(_, _, blk) in &bucket[i..j] {
+                    let blk = blk as usize;
+                    let h = &bm.headers[blk * stride..(blk + 1) * stride];
+                    let rel = bm.block_colidx[blk] as usize - col_begin;
+                    headers.extend_from_slice(&(rel as u32).to_le_bytes());
+                    headers.extend_from_slice(&h[4..]);
+                    values.extend_from_slice(
+                        &bm.values[val_off[blk]..val_off[blk + 1]],
+                    );
+                }
+
+                let nnz = values.len() - val_begin;
+                panel_nnz += nnz;
+                spans.push(TileSpan {
+                    tile,
+                    col_begin,
+                    it_begin: it_b,
+                    n_its: n_its_span,
+                    n_blocks: j - i,
+                    nnz,
+                    rowptr_begin,
+                    header_begin,
+                    val_begin,
+                });
+                i = j;
+            }
+
+            panels.push(TilePanel {
+                row_begin,
+                row_end,
+                nnz: panel_nnz,
+                span_begin,
+                span_end: spans.len(),
+            });
+        }
+
+        let tm = TiledMatrix {
+            rows: bm.rows,
+            cols: bm.cols,
+            bs: bm.bs,
+            panel_rows,
+            tile_cols,
+            n_tiles,
+            panels,
+            spans,
+            rowptr,
+            headers,
+            values,
+            source_blocks_per_interval,
+        };
+        debug_assert!(tm.validate().is_ok(), "{:?}", tm.validate().err());
+        Ok(tm)
+    }
+
+    /// Bytes per interleaved header entry.
+    #[inline]
+    pub fn header_stride(&self) -> usize {
+        4 + <T::Mask as MaskWord>::BYTES * self.bs.r
+    }
+
+    /// Stored nonzeros.
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Number of `(panel, tile)` spans.
+    #[inline]
+    pub fn n_spans(&self) -> usize {
+        self.spans.len()
+    }
+
+    /// Number of row panels.
+    #[inline]
+    pub fn n_panels(&self) -> usize {
+        self.panels.len()
+    }
+
+    /// The kernel [`Span`] of one `(panel, tile)` group, covering only
+    /// the span's occupied interval window; `y` handed to it must
+    /// start at panel-local row `s.it_begin * r`.
+    fn span(&self, panel: &TilePanel, s: &TileSpan) -> Span<'_, T> {
+        let stride = self.header_stride();
+        let r = self.bs.r;
+        let panel_len = panel.row_end - panel.row_begin;
+        // Window rows, clamping the last interval at the matrix tail.
+        let rows = ((s.it_begin + s.n_its) * r).min(panel_len) - s.it_begin * r;
+        Span {
+            rowptr: &self.rowptr
+                [s.rowptr_begin..s.rowptr_begin + s.n_its + 1],
+            headers: &self.headers
+                [s.header_begin..s.header_begin + s.n_blocks * stride],
+            values: &self.values[s.val_begin..s.val_begin + s.nnz],
+            rows,
+            r,
+        }
+    }
+
+    /// Sequential `y += A·x`: panels outermost, tiles innermost, each
+    /// tile pass re-reading only its `x` window. `test` selects the
+    /// Algorithm-2 kernel variants where they exist.
+    pub fn spmv(&self, x: &[T], y: &mut [T], test: bool) {
+        assert_eq!(x.len(), self.cols, "x length mismatch");
+        assert_eq!(y.len(), self.rows, "y length mismatch");
+        self.spmv_panels(0, self.panels.len(), x, y, test);
+    }
+
+    /// Runs panels `[p0, p1)`; `y` is local to the range (`y[0]` is
+    /// matrix row `panels[p0].row_begin`) — the worker-pool entry
+    /// point, workers owning disjoint panel ranges.
+    pub fn spmv_panels(
+        &self,
+        p0: usize,
+        p1: usize,
+        x: &[T],
+        y: &mut [T],
+        test: bool,
+    ) {
+        let base = match self.panels.get(p0) {
+            Some(p) => p.row_begin,
+            None => return,
+        };
+        for panel in &self.panels[p0..p1] {
+            let y0 = panel.row_begin - base;
+            for s in &self.spans[panel.span_begin..panel.span_end] {
+                let span = self.span(panel, s);
+                let w0 = y0 + s.it_begin * self.bs.r;
+                let yp = &mut y[w0..w0 + span.rows];
+                if !crate::kernels::avx512::spmv_span_at(
+                    span,
+                    self.bs,
+                    s.col_begin,
+                    x,
+                    yp,
+                    test,
+                ) {
+                    crate::kernels::scalar::spmv_generic_span(
+                        span,
+                        self.bs,
+                        &x[s.col_begin..],
+                        yp,
+                    );
+                }
+            }
+        }
+    }
+
+    /// Sequential multi-RHS `Y += A·X` (row-major `[cols × k]` /
+    /// `[rows × k]`, see [`crate::kernels::spmm`]).
+    pub fn spmm(&self, x: &[T], y: &mut [T], k: usize) {
+        assert!(k > 0);
+        assert_eq!(x.len(), self.cols * k, "x must be cols*k");
+        assert_eq!(y.len(), self.rows * k, "y must be rows*k");
+        let mut sums = Vec::new();
+        self.spmm_panels(0, self.panels.len(), x, y, k, &mut sums);
+    }
+
+    /// Multi-RHS form of [`TiledMatrix::spmv_panels`]; `sums` is the
+    /// reusable accumulator scratch of the portable SpMM span kernel
+    /// (per-worker in the pool).
+    pub fn spmm_panels(
+        &self,
+        p0: usize,
+        p1: usize,
+        x: &[T],
+        y: &mut [T],
+        k: usize,
+        sums: &mut Vec<T>,
+    ) {
+        let base = match self.panels.get(p0) {
+            Some(p) => p.row_begin,
+            None => return,
+        };
+        for panel in &self.panels[p0..p1] {
+            let y0 = panel.row_begin - base;
+            for s in &self.spans[panel.span_begin..panel.span_end] {
+                let span = self.span(panel, s);
+                let w0 = (y0 + s.it_begin * self.bs.r) * k;
+                let yp = &mut y[w0..w0 + span.rows * k];
+                crate::kernels::spmm::spmm_span_at(
+                    span,
+                    self.bs,
+                    s.col_begin,
+                    x,
+                    yp,
+                    k,
+                    sums,
+                );
+            }
+        }
+    }
+
+    /// Checks every structural invariant of the tiled layout and proves
+    /// the tiling is exactly-once: spans partition the backing arrays,
+    /// tiles are ordered and block columns stay inside the matrix, and
+    /// the per-interval block counts across all spans equal the counts
+    /// recorded from the source conversion.
+    pub fn validate(&self) -> Result<(), FormatError> {
+        let fail = |msg: String| Err(FormatError::Inconsistent(msg));
+        self.bs.validate_for::<T>()?;
+        let r = self.bs.r;
+        // `panel_rows` is the *effective* (interval-aligned) height
+        // computed at conversion, so it is a positive multiple of r —
+        // not necessarily of 8 for the generic block sizes.
+        if self.panel_rows == 0 || self.panel_rows % r != 0 {
+            return fail(format!(
+                "panel_rows {} not a positive multiple of r={r}",
+                self.panel_rows
+            ));
+        }
+        if self.tile_cols == 0 {
+            return fail("tile_cols must be positive".into());
+        }
+        if self.n_tiles
+            != crate::util::ceil_div(self.cols.max(1), self.tile_cols)
+        {
+            return fail("n_tiles inconsistent with cols".into());
+        }
+        let mb = <T::Mask as MaskWord>::BYTES;
+        let stride = self.header_stride();
+        let ipp = self.panel_rows / r;
+        let n_intervals = crate::util::ceil_div(self.rows, r);
+        if self.source_blocks_per_interval.len() != n_intervals {
+            return fail("source interval counts length mismatch".into());
+        }
+        let n_panels = crate::util::ceil_div(self.rows, self.panel_rows);
+        if self.panels.len() != n_panels {
+            return fail(format!(
+                "panel count {} != {n_panels}",
+                self.panels.len()
+            ));
+        }
+
+        let mut per_interval = vec![0u32; n_intervals];
+        let mut expect_row = 0usize;
+        let mut expect_span = 0usize;
+        let mut expect_rowptr = 0usize;
+        let mut expect_header = 0usize;
+        let mut expect_val = 0usize;
+
+        for (p_idx, panel) in self.panels.iter().enumerate() {
+            if panel.row_begin != expect_row
+                || panel.row_begin != p_idx * self.panel_rows
+            {
+                return fail(format!("panel {p_idx} row_begin wrong"));
+            }
+            if panel.row_end <= panel.row_begin
+                || panel.row_end > self.rows
+            {
+                return fail(format!("panel {p_idx} bad row range"));
+            }
+            if p_idx + 1 < n_panels
+                && panel.row_end - panel.row_begin != self.panel_rows
+            {
+                return fail(format!("panel {p_idx} not full height"));
+            }
+            if panel.span_begin != expect_span
+                || panel.span_end < panel.span_begin
+                || panel.span_end > self.spans.len()
+            {
+                return fail(format!("panel {p_idx} span range wrong"));
+            }
+            let panel_its =
+                crate::util::ceil_div(panel.row_end - panel.row_begin, r);
+            let it0 = p_idx * ipp;
+            let mut prev_tile: Option<usize> = None;
+            let mut panel_nnz = 0usize;
+
+            for (s_idx, s) in self.spans
+                [panel.span_begin..panel.span_end]
+                .iter()
+                .enumerate()
+            {
+                if let Some(pt) = prev_tile {
+                    if s.tile <= pt {
+                        return fail(format!(
+                            "panel {p_idx} span {s_idx}: tiles out of order"
+                        ));
+                    }
+                }
+                prev_tile = Some(s.tile);
+                if s.tile >= self.n_tiles
+                    || s.col_begin != s.tile * self.tile_cols
+                {
+                    return fail(format!(
+                        "panel {p_idx} span {s_idx}: bad tile"
+                    ));
+                }
+                if s.n_its == 0 || s.it_begin + s.n_its > panel_its {
+                    return fail(format!(
+                        "panel {p_idx} span {s_idx}: interval window out \
+                         of the panel"
+                    ));
+                }
+                if s.rowptr_begin != expect_rowptr
+                    || s.header_begin != expect_header
+                    || s.val_begin != expect_val
+                {
+                    return fail(format!(
+                        "panel {p_idx} span {s_idx}: arrays not contiguous"
+                    ));
+                }
+                expect_rowptr += s.n_its + 1;
+                expect_header += s.n_blocks * stride;
+                expect_val += s.nnz;
+                if expect_rowptr > self.rowptr.len()
+                    || expect_header > self.headers.len()
+                    || expect_val > self.values.len()
+                {
+                    return fail(format!(
+                        "panel {p_idx} span {s_idx}: arrays overflow"
+                    ));
+                }
+                let rp = &self.rowptr
+                    [s.rowptr_begin..s.rowptr_begin + s.n_its + 1];
+                if rp[0] != 0 || rp[s.n_its] as usize != s.n_blocks {
+                    return fail(format!(
+                        "panel {p_idx} span {s_idx}: rowptr does not span \
+                         the blocks"
+                    ));
+                }
+                // The window must be tight: its first and last
+                // intervals hold at least one block each.
+                if rp[1] == 0 || rp[s.n_its] == rp[s.n_its - 1] {
+                    return fail(format!(
+                        "panel {p_idx} span {s_idx}: interval window not \
+                         tight"
+                    ));
+                }
+                let mut pop_total = 0usize;
+                let mut hp = s.header_begin;
+                for m in 0..s.n_its {
+                    if rp[m + 1] < rp[m] {
+                        return fail(format!(
+                            "panel {p_idx} span {s_idx}: rowptr not monotone"
+                        ));
+                    }
+                    let nb = (rp[m + 1] - rp[m]) as usize;
+                    per_interval[it0 + s.it_begin + m] += nb as u32;
+                    let mut prev_end: i64 = -1;
+                    for _ in 0..nb {
+                        let h = &self.headers[hp..hp + stride];
+                        let rel =
+                            u32::from_le_bytes([h[0], h[1], h[2], h[3]])
+                                as usize;
+                        if rel >= self.tile_cols {
+                            return fail(format!(
+                                "panel {p_idx} span {s_idx}: block anchored \
+                                 outside its tile"
+                            ));
+                        }
+                        if (rel as i64) <= prev_end {
+                            return fail(format!(
+                                "panel {p_idx} span {s_idx}: blocks overlap \
+                                 or out of order"
+                            ));
+                        }
+                        if s.col_begin + rel + 1 > self.cols {
+                            return fail(format!(
+                                "panel {p_idx} span {s_idx}: block col out \
+                                 of range"
+                            ));
+                        }
+                        prev_end = rel as i64 + self.bs.c as i64 - 1;
+                        let mut bpop = 0u32;
+                        for i in 0..r {
+                            let m_ = <T::Mask as MaskWord>::read_le(
+                                &h[4 + mb * i..],
+                            );
+                            if m_.any_above(self.bs.c) {
+                                return fail(format!(
+                                    "panel {p_idx} span {s_idx}: mask bits \
+                                     beyond c"
+                                ));
+                            }
+                            bpop += m_.count_ones();
+                        }
+                        if bpop == 0 {
+                            return fail(format!(
+                                "panel {p_idx} span {s_idx}: empty block"
+                            ));
+                        }
+                        pop_total += bpop as usize;
+                        hp += stride;
+                    }
+                }
+                if pop_total != s.nnz {
+                    return fail(format!(
+                        "panel {p_idx} span {s_idx}: popcount sum != nnz"
+                    ));
+                }
+                panel_nnz += s.nnz;
+            }
+            if panel_nnz != panel.nnz {
+                return fail(format!("panel {p_idx} nnz mismatch"));
+            }
+            expect_span = panel.span_end;
+            expect_row = panel.row_end;
+        }
+        if expect_row != self.rows {
+            return fail(format!(
+                "panels cover rows 0..{expect_row}, matrix has {}",
+                self.rows
+            ));
+        }
+        if expect_span != self.spans.len()
+            || expect_rowptr != self.rowptr.len()
+            || expect_header != self.headers.len()
+            || expect_val != self.values.len()
+        {
+            return fail("spans do not partition the arrays".into());
+        }
+        if per_interval[..] != self.source_blocks_per_interval[..] {
+            return fail(
+                "blocks not covered exactly once (per-interval counts \
+                 diverge from the source conversion)"
+                    .into(),
+            );
+        }
+        Ok(())
+    }
+}
+
+/// One `(panel, tile)` group of a [`TiledCsr`]: `colidx` are
+/// tile-relative; the entry prefix covers only the span's occupied
+/// row window (first to last panel row with an entry in this tile),
+/// like [`TileSpan`]'s interval window.
+#[derive(Clone, Copy, Debug)]
+pub struct CsrTileSpan {
+    pub tile: usize,
+    pub col_begin: usize,
+    /// First panel-local row of the occupied window.
+    pub lr_begin: usize,
+    /// Rows in the occupied window (≥ 1; first and last are
+    /// non-empty).
+    pub n_rows: usize,
+    pub nnz: usize,
+    /// Start of the span's `n_rows + 1` local entry prefix inside the
+    /// container's `rowptr`.
+    pub rowptr_begin: usize,
+    /// Offset of the span's entries in `colidx`/`values`.
+    pub idx_begin: usize,
+}
+
+/// A CSR storage reordered into `(row-panel, column-tile)` spans — the
+/// cache-blocked companion of [`TiledMatrix`] used for the CSR
+/// segments of a tiled hybrid schedule.
+pub struct TiledCsr<T: Scalar = f64> {
+    pub rows: usize,
+    pub cols: usize,
+    pub panel_rows: usize,
+    pub tile_cols: usize,
+    pub n_tiles: usize,
+    pub panels: Vec<TilePanel>,
+    pub spans: Vec<CsrTileSpan>,
+    /// Concatenated per-span local entry prefixes (`span.n_rows + 1`
+    /// entries each, starting at 0 — only the span's occupied row
+    /// window).
+    pub rowptr: Vec<u32>,
+    /// Tile-relative column indices, span order.
+    pub colidx: Vec<u32>,
+    pub values: Vec<T>,
+    /// Source per-row entry counts, for the exactly-once proof.
+    pub source_nnz_per_row: Vec<u32>,
+}
+
+impl<T: Scalar> TiledCsr<T> {
+    /// Buckets a CSR matrix into `(panel, tile)` spans.
+    pub fn from_csr(
+        csr: &Csr<T>,
+        panel_rows: usize,
+        tile_cols: usize,
+    ) -> Result<TiledCsr<T>, FormatError> {
+        validate_panel_rows(panel_rows)?;
+        if tile_cols == 0 {
+            return Err(FormatError::Inconsistent(
+                "tile_cols must be positive".into(),
+            ));
+        }
+        let n_panels = crate::util::ceil_div(csr.rows, panel_rows);
+        let n_tiles = crate::util::ceil_div(csr.cols.max(1), tile_cols);
+        let source_nnz_per_row: Vec<u32> = (0..csr.rows)
+            .map(|row| csr.rowptr[row + 1] - csr.rowptr[row])
+            .collect();
+
+        let mut panels = Vec::with_capacity(n_panels);
+        let mut spans: Vec<CsrTileSpan> = Vec::new();
+        let mut rowptr: Vec<u32> = Vec::new();
+        let mut colidx: Vec<u32> = Vec::with_capacity(csr.nnz());
+        let mut values: Vec<T> = Vec::with_capacity(csr.nnz());
+        // Scratch: one panel's entries as (tile, local row, entry).
+        let mut bucket: Vec<(u32, u32, u32)> = Vec::new();
+
+        for p in 0..n_panels {
+            let row_begin = p * panel_rows;
+            let row_end = (row_begin + panel_rows).min(csr.rows);
+
+            bucket.clear();
+            for row in row_begin..row_end {
+                for idx in csr.row_range(row) {
+                    let tile = csr.colidx[idx] as usize / tile_cols;
+                    bucket.push((
+                        tile as u32,
+                        (row - row_begin) as u32,
+                        idx as u32,
+                    ));
+                }
+            }
+            bucket.sort_by_key(|&(tile, _, _)| tile);
+
+            let span_begin = spans.len();
+            let mut panel_nnz = 0usize;
+            let mut i = 0usize;
+            while i < bucket.len() {
+                let tile = bucket[i].0 as usize;
+                let mut j = i;
+                while j < bucket.len() && bucket[j].0 as usize == tile {
+                    j += 1;
+                }
+                let col_begin = tile * tile_cols;
+                let rowptr_begin = rowptr.len();
+                let idx_begin = values.len();
+
+                // Occupied row window (entries within a tile keep the
+                // row-then-column push order).
+                let lr_b = bucket[i].1 as usize;
+                let lr_e = bucket[j - 1].1 as usize + 1;
+                let n_rows_span = lr_e - lr_b;
+
+                let rp_base = rowptr.len();
+                rowptr.resize(rp_base + n_rows_span + 1, 0);
+                for &(_, lr, _) in &bucket[i..j] {
+                    rowptr[rp_base + (lr as usize - lr_b) + 1] += 1;
+                }
+                for m in 0..n_rows_span {
+                    rowptr[rp_base + m + 1] += rowptr[rp_base + m];
+                }
+                for &(_, _, idx) in &bucket[i..j] {
+                    let idx = idx as usize;
+                    colidx.push(csr.colidx[idx] - col_begin as u32);
+                    values.push(csr.values[idx]);
+                }
+
+                let nnz = values.len() - idx_begin;
+                panel_nnz += nnz;
+                spans.push(CsrTileSpan {
+                    tile,
+                    col_begin,
+                    lr_begin: lr_b,
+                    n_rows: n_rows_span,
+                    nnz,
+                    rowptr_begin,
+                    idx_begin,
+                });
+                i = j;
+            }
+
+            panels.push(TilePanel {
+                row_begin,
+                row_end,
+                nnz: panel_nnz,
+                span_begin,
+                span_end: spans.len(),
+            });
+        }
+
+        let tc = TiledCsr {
+            rows: csr.rows,
+            cols: csr.cols,
+            panel_rows,
+            tile_cols,
+            n_tiles,
+            panels,
+            spans,
+            rowptr,
+            colidx,
+            values,
+            source_nnz_per_row,
+        };
+        debug_assert!(tc.validate().is_ok(), "{:?}", tc.validate().err());
+        Ok(tc)
+    }
+
+    /// Stored nonzeros.
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Number of `(panel, tile)` spans.
+    #[inline]
+    pub fn n_spans(&self) -> usize {
+        self.spans.len()
+    }
+
+    /// Sequential `y += A·x`, panels outermost, tiles innermost.
+    pub fn spmv(&self, x: &[T], y: &mut [T]) {
+        assert_eq!(x.len(), self.cols, "x length mismatch");
+        assert_eq!(y.len(), self.rows, "y length mismatch");
+        self.spmv_panels(0, self.panels.len(), x, y);
+    }
+
+    /// Runs panels `[p0, p1)`; `y` local to the range.
+    pub fn spmv_panels(&self, p0: usize, p1: usize, x: &[T], y: &mut [T]) {
+        let base = match self.panels.get(p0) {
+            Some(p) => p.row_begin,
+            None => return,
+        };
+        for panel in &self.panels[p0..p1] {
+            let y0 = panel.row_begin - base;
+            for s in &self.spans[panel.span_begin..panel.span_end] {
+                let xs = &x[s.col_begin..];
+                let rp = &self.rowptr
+                    [s.rowptr_begin..s.rowptr_begin + s.n_rows + 1];
+                for lr in 0..s.n_rows {
+                    let (a, b) = (rp[lr] as usize, rp[lr + 1] as usize);
+                    if a == b {
+                        continue;
+                    }
+                    let mut sum = T::ZERO;
+                    for e in a..b {
+                        let idx = s.idx_begin + e;
+                        sum += self.values[idx]
+                            * xs[self.colidx[idx] as usize];
+                    }
+                    y[y0 + s.lr_begin + lr] += sum;
+                }
+            }
+        }
+    }
+
+    /// Sequential multi-RHS `Y += A·X`.
+    pub fn spmm(&self, x: &[T], y: &mut [T], k: usize) {
+        assert!(k > 0);
+        assert_eq!(x.len(), self.cols * k, "x must be cols*k");
+        assert_eq!(y.len(), self.rows * k, "y must be rows*k");
+        self.spmm_panels(0, self.panels.len(), x, y, k);
+    }
+
+    /// Multi-RHS form of [`TiledCsr::spmv_panels`].
+    pub fn spmm_panels(
+        &self,
+        p0: usize,
+        p1: usize,
+        x: &[T],
+        y: &mut [T],
+        k: usize,
+    ) {
+        let base = match self.panels.get(p0) {
+            Some(p) => p.row_begin,
+            None => return,
+        };
+        for panel in &self.panels[p0..p1] {
+            let y0 = panel.row_begin - base;
+            for s in &self.spans[panel.span_begin..panel.span_end] {
+                let xs = &x[s.col_begin * k..];
+                let rp = &self.rowptr
+                    [s.rowptr_begin..s.rowptr_begin + s.n_rows + 1];
+                for lr in 0..s.n_rows {
+                    let (a, b) = (rp[lr] as usize, rp[lr + 1] as usize);
+                    let row = y0 + s.lr_begin + lr;
+                    let yrow = &mut y[row * k..(row + 1) * k];
+                    for e in a..b {
+                        let idx = s.idx_begin + e;
+                        let v = self.values[idx];
+                        let c = self.colidx[idx] as usize;
+                        let xrow = &xs[c * k..(c + 1) * k];
+                        for jj in 0..k {
+                            yrow[jj] += v * xrow[jj];
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Structural invariants + exactly-once proof (per-row entry
+    /// counts across spans equal the source CSR's).
+    pub fn validate(&self) -> Result<(), FormatError> {
+        let fail = |msg: String| Err(FormatError::Inconsistent(msg));
+        validate_panel_rows(self.panel_rows)?;
+        if self.tile_cols == 0 {
+            return fail("tile_cols must be positive".into());
+        }
+        if self.source_nnz_per_row.len() != self.rows {
+            return fail("source row counts length mismatch".into());
+        }
+        let n_panels = crate::util::ceil_div(self.rows, self.panel_rows);
+        if self.panels.len() != n_panels {
+            return fail("panel count mismatch".into());
+        }
+        if self.colidx.len() != self.values.len() {
+            return fail("colidx/values length mismatch".into());
+        }
+        let mut per_row = vec![0u32; self.rows];
+        let mut expect_row = 0usize;
+        let mut expect_span = 0usize;
+        let mut expect_rowptr = 0usize;
+        let mut expect_idx = 0usize;
+        for (p_idx, panel) in self.panels.iter().enumerate() {
+            if panel.row_begin != expect_row
+                || panel.row_begin != p_idx * self.panel_rows
+                || panel.row_end <= panel.row_begin
+                || panel.row_end > self.rows
+            {
+                return fail(format!("panel {p_idx} bad row range"));
+            }
+            if panel.span_begin != expect_span
+                || panel.span_end < panel.span_begin
+                || panel.span_end > self.spans.len()
+            {
+                return fail(format!("panel {p_idx} span range wrong"));
+            }
+            let panel_len = panel.row_end - panel.row_begin;
+            let mut prev_tile: Option<usize> = None;
+            let mut panel_nnz = 0usize;
+            for s in &self.spans[panel.span_begin..panel.span_end] {
+                if let Some(pt) = prev_tile {
+                    if s.tile <= pt {
+                        return fail(format!(
+                            "panel {p_idx}: tiles out of order"
+                        ));
+                    }
+                }
+                prev_tile = Some(s.tile);
+                if s.tile >= self.n_tiles
+                    || s.col_begin != s.tile * self.tile_cols
+                {
+                    return fail(format!("panel {p_idx}: bad tile"));
+                }
+                if s.n_rows == 0 || s.lr_begin + s.n_rows > panel_len {
+                    return fail(format!(
+                        "panel {p_idx}: row window out of the panel"
+                    ));
+                }
+                if s.rowptr_begin != expect_rowptr
+                    || s.idx_begin != expect_idx
+                {
+                    return fail(format!(
+                        "panel {p_idx}: arrays not contiguous"
+                    ));
+                }
+                expect_rowptr += s.n_rows + 1;
+                expect_idx += s.nnz;
+                if expect_rowptr > self.rowptr.len()
+                    || expect_idx > self.values.len()
+                {
+                    return fail(format!("panel {p_idx}: arrays overflow"));
+                }
+                let rp = &self.rowptr
+                    [s.rowptr_begin..s.rowptr_begin + s.n_rows + 1];
+                if rp[0] != 0 || rp[s.n_rows] as usize != s.nnz {
+                    return fail(format!(
+                        "panel {p_idx}: rowptr does not span the entries"
+                    ));
+                }
+                if rp[1] == 0 || rp[s.n_rows] == rp[s.n_rows - 1] {
+                    return fail(format!(
+                        "panel {p_idx}: row window not tight"
+                    ));
+                }
+                for lr in 0..s.n_rows {
+                    if rp[lr + 1] < rp[lr] {
+                        return fail(format!(
+                            "panel {p_idx}: rowptr not monotone"
+                        ));
+                    }
+                    let (a, b) = (rp[lr] as usize, rp[lr + 1] as usize);
+                    per_row[panel.row_begin + s.lr_begin + lr] +=
+                        (b - a) as u32;
+                    let mut prev: i64 = -1;
+                    for e in a..b {
+                        let rel = self.colidx[s.idx_begin + e] as usize;
+                        if rel >= self.tile_cols
+                            || s.col_begin + rel >= self.cols
+                        {
+                            return fail(format!(
+                                "panel {p_idx}: colidx out of range"
+                            ));
+                        }
+                        if rel as i64 <= prev {
+                            return fail(format!(
+                                "panel {p_idx}: colidx out of order"
+                            ));
+                        }
+                        prev = rel as i64;
+                    }
+                }
+                panel_nnz += s.nnz;
+            }
+            if panel_nnz != panel.nnz {
+                return fail(format!("panel {p_idx} nnz mismatch"));
+            }
+            expect_span = panel.span_end;
+            expect_row = panel.row_end;
+        }
+        if expect_row != self.rows
+            || expect_span != self.spans.len()
+            || expect_rowptr != self.rowptr.len()
+            || expect_idx != self.values.len()
+        {
+            return fail("spans do not partition the arrays".into());
+        }
+        if per_row[..] != self.source_nnz_per_row[..] {
+            return fail(
+                "entries not covered exactly once (per-row counts diverge \
+                 from the source CSR)"
+                    .into(),
+            );
+        }
+        Ok(())
+    }
+}
+
+/// A hybrid segment's tiled storage.
+pub enum TiledSegmentStorage<T: Scalar> {
+    /// β segment → tiled block spans.
+    Block(TiledMatrix<T>),
+    /// CSR segment → tiled CSR spans.
+    Csr(TiledCsr<T>),
+}
+
+/// One segment of a tiled hybrid schedule (same row geometry as the
+/// flat [`crate::formats::HybridSegment`]).
+pub struct TiledHybridSegment<T: Scalar> {
+    pub row_begin: usize,
+    pub row_end: usize,
+    pub nnz: usize,
+    pub kernel: PanelKernel,
+    pub storage: TiledSegmentStorage<T>,
+}
+
+impl<T: Scalar> TiledHybridSegment<T> {
+    /// `y += A_seg·x`, `y` segment-local.
+    #[inline]
+    pub fn spmv(&self, x: &[T], y: &mut [T]) {
+        match &self.storage {
+            TiledSegmentStorage::Block(tm) => tm.spmv(x, y, false),
+            TiledSegmentStorage::Csr(tc) => tc.spmv(x, y),
+        }
+    }
+
+    /// Multi-RHS `Y += A_seg·X`, `y` segment-local; `sums` is the β
+    /// span kernel's reusable accumulator scratch.
+    #[inline]
+    pub fn spmm(&self, x: &[T], y: &mut [T], k: usize, sums: &mut Vec<T>) {
+        match &self.storage {
+            TiledSegmentStorage::Block(tm) => {
+                tm.spmm_panels(0, tm.panels.len(), x, y, k, sums)
+            }
+            TiledSegmentStorage::Csr(tc) => tc.spmm(x, y, k),
+        }
+    }
+}
+
+/// A compiled hybrid schedule lifted into the column-tiled world: the
+/// per-panel β/CSR choices are untouched, but every segment's storage
+/// is re-bucketed into `(row-panel, column-tile)` spans so the whole
+/// heterogeneous schedule is cache-blocked.
+pub struct TiledHybrid<T: Scalar = f64> {
+    pub rows: usize,
+    pub cols: usize,
+    pub panel_rows: usize,
+    pub tile_cols: usize,
+    /// Per-panel decisions inherited from the flat schedule.
+    pub choices: Vec<PanelKernel>,
+    pub segments: Vec<TiledHybridSegment<T>>,
+}
+
+impl<T: Scalar> TiledHybrid<T> {
+    /// Compiles CSR → hybrid schedule → tiled segments.
+    pub fn from_csr(
+        csr: &Csr<T>,
+        cfg: &super::HybridConfig,
+        models: Option<
+            &std::collections::HashMap<
+                crate::kernels::KernelKind,
+                crate::predictor::PolyModel,
+            >,
+        >,
+        tile_cols: TileCols,
+    ) -> Result<TiledHybrid<T>, FormatError> {
+        let hm = HybridMatrix::from_csr(csr, cfg, models)?;
+        TiledHybrid::from_hybrid(&hm, tile_cols)
+    }
+
+    /// Tiles every segment of an existing hybrid schedule.
+    pub fn from_hybrid(
+        hm: &HybridMatrix<T>,
+        tile_cols: TileCols,
+    ) -> Result<TiledHybrid<T>, FormatError> {
+        let tc = tile_cols.resolve::<T>(hm.cols);
+        let mut segments = Vec::with_capacity(hm.segments.len());
+        for seg in &hm.segments {
+            let storage = match &seg.storage {
+                SegmentStorage::Block(bm) => TiledSegmentStorage::Block(
+                    TiledMatrix::from_block(bm, hm.panel_rows, tc)?,
+                ),
+                SegmentStorage::Csr(c) => TiledSegmentStorage::Csr(
+                    TiledCsr::from_csr(c, hm.panel_rows, tc)?,
+                ),
+            };
+            segments.push(TiledHybridSegment {
+                row_begin: seg.row_begin,
+                row_end: seg.row_end,
+                nnz: seg.nnz,
+                kernel: seg.kernel,
+                storage,
+            });
+        }
+        let th = TiledHybrid {
+            rows: hm.rows,
+            cols: hm.cols,
+            panel_rows: hm.panel_rows,
+            tile_cols: tc,
+            choices: hm.choices.clone(),
+            segments,
+        };
+        debug_assert!(th.validate().is_ok(), "{:?}", th.validate().err());
+        Ok(th)
+    }
+
+    /// Total stored nonzeros.
+    pub fn nnz(&self) -> usize {
+        self.segments.iter().map(|s| s.nnz).sum()
+    }
+
+    /// Number of segments.
+    pub fn n_segments(&self) -> usize {
+        self.segments.len()
+    }
+
+    /// Total `(panel, tile)` spans across all segments.
+    pub fn n_spans(&self) -> usize {
+        self.segments
+            .iter()
+            .map(|s| match &s.storage {
+                TiledSegmentStorage::Block(tm) => tm.n_spans(),
+                TiledSegmentStorage::Csr(tc) => tc.n_spans(),
+            })
+            .sum()
+    }
+
+    /// Distinct kernels in the schedule, row order, deduped runs.
+    pub fn kernels_used(&self) -> Vec<PanelKernel> {
+        let mut out: Vec<PanelKernel> = Vec::new();
+        for s in &self.segments {
+            if out.last() != Some(&s.kernel) {
+                out.push(s.kernel);
+            }
+        }
+        out
+    }
+
+    /// Sequential `y += A·x`.
+    pub fn spmv(&self, x: &[T], y: &mut [T]) {
+        assert_eq!(x.len(), self.cols, "x length mismatch");
+        assert_eq!(y.len(), self.rows, "y length mismatch");
+        for seg in &self.segments {
+            seg.spmv(x, &mut y[seg.row_begin..seg.row_end]);
+        }
+    }
+
+    /// Sequential multi-RHS `Y += A·X`.
+    pub fn spmm(&self, x: &[T], y: &mut [T], k: usize) {
+        assert!(k > 0);
+        assert_eq!(x.len(), self.cols * k, "x must be cols*k");
+        assert_eq!(y.len(), self.rows * k, "y must be rows*k");
+        let mut sums = Vec::new();
+        for seg in &self.segments {
+            seg.spmm(
+                x,
+                &mut y[seg.row_begin * k..seg.row_end * k],
+                k,
+                &mut sums,
+            );
+        }
+    }
+
+    /// Segments contiguous over `0..rows`, per-segment storages valid
+    /// (each proving its own exactly-once coverage), geometry and nnz
+    /// consistent, one tile width everywhere.
+    pub fn validate(&self) -> Result<(), FormatError> {
+        let fail = |msg: String| Err(FormatError::Inconsistent(msg));
+        let mut expect_row = 0usize;
+        for (i, seg) in self.segments.iter().enumerate() {
+            if seg.row_begin != expect_row {
+                return fail(format!(
+                    "segment {i} begins at {} (expected {expect_row})",
+                    seg.row_begin
+                ));
+            }
+            if seg.row_end <= seg.row_begin || seg.row_end > self.rows {
+                return fail(format!("segment {i} has bad row range"));
+            }
+            let seg_rows = seg.row_end - seg.row_begin;
+            match &seg.storage {
+                TiledSegmentStorage::Block(tm) => {
+                    if !matches!(seg.kernel, PanelKernel::Beta(bs) if bs == tm.bs)
+                    {
+                        return fail(format!(
+                            "segment {i} kernel/storage mismatch"
+                        ));
+                    }
+                    if tm.rows != seg_rows
+                        || tm.cols != self.cols
+                        || tm.nnz() != seg.nnz
+                        || tm.tile_cols != self.tile_cols
+                    {
+                        return fail(format!("segment {i} geometry wrong"));
+                    }
+                    tm.validate()?;
+                }
+                TiledSegmentStorage::Csr(tc) => {
+                    if seg.kernel != PanelKernel::Csr {
+                        return fail(format!(
+                            "segment {i} kernel/storage mismatch"
+                        ));
+                    }
+                    if tc.rows != seg_rows
+                        || tc.cols != self.cols
+                        || tc.nnz() != seg.nnz
+                        || tc.tile_cols != self.tile_cols
+                    {
+                        return fail(format!("segment {i} geometry wrong"));
+                    }
+                    tc.validate()?;
+                }
+            }
+            expect_row = seg.row_end;
+        }
+        if expect_row != self.rows {
+            return fail(format!(
+                "segments cover rows 0..{expect_row}, matrix has {}",
+                self.rows
+            ));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::suite;
+
+    #[test]
+    fn cache_size_spellings_parse() {
+        assert_eq!(parse_cache_size("1024K"), Some(1024 * 1024));
+        assert_eq!(parse_cache_size("2M"), Some(2 * 1024 * 1024));
+        assert_eq!(parse_cache_size("32768"), Some(32768));
+        assert_eq!(parse_cache_size("1g"), Some(1 << 30));
+        assert_eq!(parse_cache_size(""), None);
+        assert_eq!(parse_cache_size("xK"), None);
+    }
+
+    #[test]
+    fn auto_tile_is_bounded_and_aligned() {
+        let t = auto_tile_cols::<f64>(10_000_000);
+        assert!(t >= MIN_TILE_COLS);
+        assert_eq!(t % TILE_ALIGN, 0);
+        // Never wider than the matrix.
+        assert_eq!(auto_tile_cols::<f64>(100), 100);
+        // f32 windows fit twice the columns in the same bytes.
+        assert!(auto_tile_cols::<f32>(10_000_000) >= t);
+    }
+
+    #[test]
+    fn tile_cols_resolution() {
+        assert_eq!(TileCols::Fixed(96).resolve::<f64>(1 << 20), 96);
+        assert_eq!(TileCols::Fixed(0).resolve::<f64>(1 << 20), 1);
+        let auto = TileCols::Auto.resolve::<f64>(1 << 20);
+        assert!(auto >= MIN_TILE_COLS);
+    }
+
+    #[test]
+    fn tiled_block_matches_flat_kernel() {
+        let csr = suite::banded(1_200, 10, 0.5, 3);
+        let x: Vec<f64> =
+            (0..csr.cols).map(|i| ((i * 13) % 17) as f64 - 8.0).collect();
+        for bs in BlockSize::PAPER_SIZES {
+            let bm = csr_to_block(&csr, bs).unwrap();
+            let mut want = vec![0.0; csr.rows];
+            crate::kernels::spmv_block(&bm, &x, &mut want, false);
+            for tile_cols in [64usize, 200, 4096] {
+                let tm = TiledMatrix::from_block(&bm, 64, tile_cols).unwrap();
+                tm.validate().unwrap();
+                assert_eq!(tm.nnz(), bm.nnz());
+                let mut got = vec![0.0; csr.rows];
+                tm.spmv(&x, &mut got, false);
+                for i in 0..csr.rows {
+                    assert!(
+                        (got[i] - want[i]).abs()
+                            <= 1e-12 * want[i].abs().max(1.0),
+                        "{bs} tile={tile_cols} row {i}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn single_tile_is_bit_identical_to_flat() {
+        // With one tile covering every column the span order equals the
+        // flat conversion's block order, so the accumulation order — and
+        // therefore every bit of the result — is identical.
+        let csr = suite::fem_blocked(300, 3, 6, 9);
+        let x: Vec<f64> =
+            (0..csr.cols).map(|i| ((i * 7) % 23) as f64 * 0.5 - 5.0).collect();
+        for bs in BlockSize::PAPER_SIZES {
+            let bm = csr_to_block(&csr, bs).unwrap();
+            let mut want = vec![0.0; csr.rows];
+            crate::kernels::spmv_block(&bm, &x, &mut want, false);
+            let tm =
+                TiledMatrix::from_block(&bm, 512, csr.cols.max(1)).unwrap();
+            assert_eq!(tm.n_tiles, 1);
+            let mut got = vec![0.0; csr.rows];
+            tm.spmv(&x, &mut got, false);
+            assert_eq!(got, want, "{bs}");
+        }
+    }
+
+    #[test]
+    fn generic_block_sizes_get_interval_aligned_panels() {
+        // r = 3 does not divide the requested panel height: the
+        // effective height must round down to a multiple of r (64 →
+        // 63) and the schedule must stay correct end to end.
+        let csr = suite::banded(500, 7, 0.5, 19);
+        let bm = csr_to_block(&csr, BlockSize::new(3, 5)).unwrap();
+        let tm = TiledMatrix::from_block(&bm, 64, 90).unwrap();
+        assert_eq!(tm.panel_rows, 63);
+        tm.validate().unwrap();
+        let x: Vec<f64> =
+            (0..csr.cols).map(|i| ((i * 3) % 11) as f64 - 5.0).collect();
+        let mut want = vec![0.0; csr.rows];
+        csr.spmv_ref(&x, &mut want);
+        let mut got = vec![0.0; csr.rows];
+        tm.spmv(&x, &mut got, false);
+        crate::testkit::assert_close(&got, &want, 1e-9, "b(3,5) tiled");
+    }
+
+    #[test]
+    fn tiled_spmm_matches_k_spmvs() {
+        let csr = suite::quantum_clusters(500, 3, 8, 5, 7);
+        let bm = csr_to_block(&csr, BlockSize::new(2, 8)).unwrap();
+        let tm = TiledMatrix::from_block(&bm, 64, 128).unwrap();
+        let k = 3usize;
+        let x: Vec<f64> = (0..csr.cols * k)
+            .map(|i| ((i * 5) % 19) as f64 * 0.1 - 0.9)
+            .collect();
+        let mut y = vec![0.0; csr.rows * k];
+        tm.spmm(&x, &mut y, k);
+        for j in 0..k {
+            let xj: Vec<f64> = (0..csr.cols).map(|c| x[c * k + j]).collect();
+            let mut want = vec![0.0; csr.rows];
+            csr.spmv_ref(&xj, &mut want);
+            for r in 0..csr.rows {
+                assert!(
+                    (y[r * k + j] - want[r]).abs()
+                        <= 1e-9 * want[r].abs().max(1.0),
+                    "j={j} row {r}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn panel_ranges_compose_to_full() {
+        let csr = suite::banded(900, 8, 0.4, 5);
+        let bm = csr_to_block(&csr, BlockSize::new(4, 4)).unwrap();
+        let tm = TiledMatrix::from_block(&bm, 128, 96).unwrap();
+        let x: Vec<f64> = (0..csr.cols).map(|i| (i % 5) as f64).collect();
+        let mut want = vec![0.0; csr.rows];
+        tm.spmv(&x, &mut want, false);
+        // Stitch from two disjoint panel ranges.
+        let cut = tm.panels.len() / 2;
+        let mut got = vec![0.0; csr.rows];
+        let mid_row = tm.panels[cut].row_begin;
+        tm.spmv_panels(0, cut, &x, &mut got[..mid_row], false);
+        tm.spmv_panels(cut, tm.panels.len(), &x, &mut got[mid_row..], false);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn validate_catches_corruption() {
+        let csr = suite::banded(400, 6, 0.6, 11);
+        let bm = csr_to_block(&csr, BlockSize::new(2, 4)).unwrap();
+        let good = TiledMatrix::from_block(&bm, 64, 100).unwrap();
+        good.validate().unwrap();
+
+        // A block moved across spans (count drift) must be caught.
+        let mut bad = TiledMatrix::from_block(&bm, 64, 100).unwrap();
+        if bad.spans.len() >= 2 {
+            bad.spans[0].n_blocks += 1;
+            assert!(bad.validate().is_err(), "span block count drift");
+        }
+
+        // A value dropped breaks the popcount/nnz proof.
+        let mut bad = TiledMatrix::from_block(&bm, 64, 100).unwrap();
+        bad.values.pop();
+        assert!(bad.validate().is_err(), "values truncated");
+
+        // Tile-relative colidx beyond the tile width.
+        let mut bad = TiledMatrix::from_block(&bm, 64, 100).unwrap();
+        let w = (bad.tile_cols as u32 + 5).to_le_bytes();
+        bad.headers[..4].copy_from_slice(&w);
+        assert!(bad.validate().is_err(), "colidx outside tile");
+
+        // Per-interval coverage drift (block claimed twice).
+        let mut bad = TiledMatrix::from_block(&bm, 64, 100).unwrap();
+        bad.source_blocks_per_interval[0] += 1;
+        assert!(bad.validate().is_err(), "coverage count drift");
+    }
+
+    #[test]
+    fn tiled_csr_matches_reference() {
+        let csr = suite::circuit(1_500, 3, 3, 13);
+        let tc = TiledCsr::from_csr(&csr, 64, 200).unwrap();
+        tc.validate().unwrap();
+        assert_eq!(tc.nnz(), csr.nnz());
+        let x: Vec<f64> =
+            (0..csr.cols).map(|i| ((i * 11) % 13) as f64 - 6.0).collect();
+        let mut want = vec![0.0; csr.rows];
+        csr.spmv_ref(&x, &mut want);
+        let mut got = vec![0.0; csr.rows];
+        tc.spmv(&x, &mut got);
+        crate::testkit::assert_close(&got, &want, 1e-9, "tiled csr");
+        // Multi-RHS path.
+        let k = 4usize;
+        let xk: Vec<f64> = (0..csr.cols * k)
+            .map(|i| ((i * 3) % 31) as f64 * 0.125 - 2.0)
+            .collect();
+        let mut yk = vec![0.0; csr.rows * k];
+        tc.spmm(&xk, &mut yk, k);
+        for j in 0..k {
+            let xj: Vec<f64> = (0..csr.cols).map(|c| xk[c * k + j]).collect();
+            let mut wj = vec![0.0; csr.rows];
+            csr.spmv_ref(&xj, &mut wj);
+            for r in 0..csr.rows {
+                assert!(
+                    (yk[r * k + j] - wj[r]).abs()
+                        <= 1e-9 * wj[r].abs().max(1.0),
+                    "spmm j={j} row {r}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn tiled_hybrid_matches_reference() {
+        let csr = suite::mixed_band_scatter(2_048, 9);
+        let cfg = super::super::HybridConfig {
+            panel_rows: 128,
+            ..super::super::HybridConfig::for_scalar::<f64>()
+        };
+        let th =
+            TiledHybrid::from_csr(&csr, &cfg, None, TileCols::Fixed(256))
+                .unwrap();
+        th.validate().unwrap();
+        assert_eq!(th.nnz(), csr.nnz());
+        // The mixed matrix must keep both kernel classes after tiling.
+        let used = th.kernels_used();
+        assert!(used.iter().any(|k| matches!(k, PanelKernel::Beta(_))));
+        assert!(used.contains(&PanelKernel::Csr));
+        let x: Vec<f64> =
+            (0..csr.cols).map(|i| (i % 9) as f64 - 4.0).collect();
+        let mut want = vec![0.0; csr.rows];
+        csr.spmv_ref(&x, &mut want);
+        let mut got = vec![0.0; csr.rows];
+        th.spmv(&x, &mut got);
+        crate::testkit::assert_close(&got, &want, 1e-9, "tiled hybrid");
+    }
+
+    #[test]
+    fn f32_tiled_block_matches_reference() {
+        let csr32 = suite::banded(1_024, 12, 0.8, 4).to_precision::<f32>();
+        let bm = csr_to_block(&csr32, BlockSize::new(2, 16)).unwrap();
+        let tm = TiledMatrix::from_block(&bm, 64, 160).unwrap();
+        tm.validate().unwrap();
+        let x: Vec<f32> =
+            (0..csr32.cols).map(|i| (i % 5) as f32 * 0.5 - 1.0).collect();
+        let mut want = vec![0.0f32; csr32.rows];
+        csr32.spmv_ref(&x, &mut want);
+        let mut got = vec![0.0f32; csr32.rows];
+        tm.spmv(&x, &mut got, false);
+        for i in 0..csr32.rows {
+            assert!(
+                (got[i] - want[i]).abs() <= 2e-4 * want[i].abs().max(1.0),
+                "row {i}"
+            );
+        }
+    }
+
+    #[test]
+    fn empty_matrix_tiles() {
+        let csr =
+            Csr::<f64>::from_raw(16, 16, vec![0; 17], vec![], vec![]).unwrap();
+        let tm = TiledMatrix::from_csr(
+            &csr,
+            BlockSize::new(2, 4),
+            &TiledConfig { panel_rows: 8, tile_cols: TileCols::Fixed(4) },
+        )
+        .unwrap();
+        tm.validate().unwrap();
+        assert_eq!(tm.nnz(), 0);
+        let x = vec![1.0; 16];
+        let mut y = vec![0.0; 16];
+        tm.spmv(&x, &mut y, false);
+        assert!(y.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn bad_configs_rejected() {
+        let csr = suite::poisson2d(8);
+        let bm = csr_to_block(&csr, BlockSize::new(1, 8)).unwrap();
+        assert!(TiledMatrix::from_block(&bm, 12, 64).is_err());
+        assert!(TiledMatrix::from_block(&bm, 0, 64).is_err());
+        assert!(TiledMatrix::from_block(&bm, 64, 0).is_err());
+        assert!(TiledCsr::from_csr(&csr, 12, 64).is_err());
+    }
+}

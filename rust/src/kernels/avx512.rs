@@ -190,6 +190,24 @@ pub fn spmv_span<T: Scalar>(
     T::spmv_span_simd(span, bs, x, y, test)
 }
 
+/// [`spmv_span`] with a column-base offset — the column-tiled
+/// execution hook ([`crate::formats::tiled`]). A tile-local span
+/// stores its header `colidx` relative to the tile's first column
+/// `col_base`; starting the `x` window at `col_base` lets every
+/// existing masked kernel run unchanged (the masked loads only ever
+/// touch lanes of in-matrix columns, so the shortened slice is always
+/// long enough).
+pub fn spmv_span_at<T: Scalar>(
+    span: Span<'_, T>,
+    bs: BlockSize,
+    col_base: usize,
+    x: &[T],
+    y: &mut [T],
+    test: bool,
+) -> bool {
+    T::spmv_span_simd(span, bs, &x[col_base..], y, test)
+}
+
 /// Double-precision dispatch: the paper's six `vexpandpd` kernels plus
 /// the two Algorithm-2 `test` variants.
 pub fn spmv_span_f64(

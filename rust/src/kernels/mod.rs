@@ -44,6 +44,14 @@ pub enum KernelKind {
     /// chooses a `β(r,c)` blocking or stays CSR
     /// ([`crate::formats::HybridMatrix`]).
     Hybrid,
+    /// Column-tiled (cache-blocked) hybrid schedule
+    /// ([`crate::formats::TiledHybrid`]): the hybrid row-panel choices
+    /// executed `(panel, tile)`-wise so each pass touches only a
+    /// tile-sized window of `x`. The payload is the tile width in
+    /// columns; `0` means auto-size to the detected L2 share
+    /// ([`crate::formats::auto_tile_cols`]). Spelled `tiled` /
+    /// `tiled(n)`.
+    Tiled(u32),
 }
 
 impl KernelKind {
@@ -92,16 +100,32 @@ impl KernelKind {
         }
     }
 
-    /// Parses e.g. `csr`, `csr5`, `b(2,8)`, `b(1,8)test`, and the f32
-    /// spellings `b32(1,16)` / `beta32(2,16)test`. Trailing garbage
-    /// (`b(2,8)x`, `b(2,8,9)`) is rejected.
+    /// Tile width of a tiled kernel (`0` = flat / auto-sized).
+    pub fn tile_width(&self) -> usize {
+        match *self {
+            KernelKind::Tiled(w) => w as usize,
+            _ => 0,
+        }
+    }
+
+    /// Parses e.g. `csr`, `csr5`, `b(2,8)`, `b(1,8)test`, the f32
+    /// spellings `b32(1,16)` / `beta32(2,16)test`, and the tiled
+    /// schedule `tiled` / `tiled(4096)`. Trailing garbage (`b(2,8)x`,
+    /// `b(2,8,9)`) is rejected.
     pub fn parse(s: &str) -> Option<KernelKind> {
         let t = s.trim().to_ascii_lowercase();
         match t.as_str() {
             "csr" => return Some(KernelKind::Csr),
             "csr5" => return Some(KernelKind::Csr5),
             "hybrid" => return Some(KernelKind::Hybrid),
+            "tiled" => return Some(KernelKind::Tiled(0)),
             _ => {}
+        }
+        if let Some(inner) =
+            t.strip_prefix("tiled(").and_then(|s| s.strip_suffix(')'))
+        {
+            let w: u32 = inner.trim().parse().ok()?;
+            return Some(KernelKind::Tiled(w));
         }
         let (body, test) = match t.strip_suffix("test") {
             Some(b) => (b.trim_end_matches('_').to_string(), true),
@@ -135,6 +159,8 @@ impl std::fmt::Display for KernelKind {
             KernelKind::Beta(r, c) => write!(f, "b({r},{c})"),
             KernelKind::BetaTest(r, c) => write!(f, "b({r},{c})test"),
             KernelKind::Hybrid => write!(f, "hybrid"),
+            KernelKind::Tiled(0) => write!(f, "tiled"),
+            KernelKind::Tiled(w) => write!(f, "tiled({w})"),
         }
     }
 }
@@ -171,6 +197,8 @@ pub struct KernelSet<T: Scalar = f64> {
     blocks: std::collections::HashMap<BlockSize, BlockMatrix<T>>,
     csr5: Option<csr5::Csr5Matrix<T>>,
     hybrid: Option<crate::formats::HybridMatrix<T>>,
+    /// Tiled hybrid schedules keyed by tile width (`0` = auto).
+    tiled: std::collections::HashMap<u32, crate::formats::TiledHybrid<T>>,
 }
 
 impl<T: Scalar> KernelSet<T> {
@@ -181,12 +209,51 @@ impl<T: Scalar> KernelSet<T> {
     /// fallible construction.
     pub fn prepare(csr: Csr<T>, kinds: &[KernelKind]) -> Self {
         let mut blocks = std::collections::HashMap::new();
-        let mut want_csr5 = false;
-        let mut want_hybrid = false;
+        let mut csr5 = None;
+        let mut hybrid = None;
+        let mut tiled = std::collections::HashMap::new();
         for k in kinds {
-            match k {
-                KernelKind::Csr5 => want_csr5 = true,
-                KernelKind::Hybrid => want_hybrid = true,
+            match *k {
+                KernelKind::Csr5 => {
+                    if csr5.is_none() {
+                        csr5 = Some(csr5::Csr5Matrix::from_csr(&csr));
+                    }
+                }
+                // Default hybrid compile: analytic panel ranking (use
+                // the engine to supply a fitted predictor surface
+                // instead).
+                KernelKind::Hybrid => {
+                    if hybrid.is_none() {
+                        hybrid = Some(
+                            crate::formats::HybridMatrix::from_csr(
+                                &csr,
+                                &crate::formats::HybridConfig::for_scalar::<T>(
+                                ),
+                                None,
+                            )
+                            .expect(
+                                "default hybrid config valid for this \
+                                 precision",
+                            ),
+                        );
+                    }
+                }
+                KernelKind::Tiled(w) => {
+                    tiled.entry(w).or_insert_with(|| {
+                        let tc = if w == 0 {
+                            crate::formats::TileCols::Auto
+                        } else {
+                            crate::formats::TileCols::Fixed(w as usize)
+                        };
+                        crate::formats::TiledHybrid::from_csr(
+                            &csr,
+                            &crate::formats::HybridConfig::for_scalar::<T>(),
+                            None,
+                            tc,
+                        )
+                        .expect("default tiled config valid")
+                    });
+                }
                 _ => {
                     if let Some(bs) = k.block_size() {
                         blocks.entry(bs).or_insert_with(|| {
@@ -197,18 +264,7 @@ impl<T: Scalar> KernelSet<T> {
                 }
             }
         }
-        let csr5 = want_csr5.then(|| csr5::Csr5Matrix::from_csr(&csr));
-        // Default hybrid compile: analytic panel ranking (use the
-        // engine to supply a fitted predictor surface instead).
-        let hybrid = want_hybrid.then(|| {
-            crate::formats::HybridMatrix::from_csr(
-                &csr,
-                &crate::formats::HybridConfig::for_scalar::<T>(),
-                None,
-            )
-            .expect("default hybrid config valid for this precision")
-        });
-        KernelSet { csr, blocks, csr5, hybrid }
+        KernelSet { csr, blocks, csr5, hybrid, tiled }
     }
 
     /// Runs `y += A·x` with the chosen kernel.
@@ -221,6 +277,11 @@ impl<T: Scalar> KernelSet<T> {
             KernelKind::Hybrid => {
                 self.hybrid.as_ref().expect("hybrid prepared").spmv(x, y)
             }
+            KernelKind::Tiled(w) => self
+                .tiled
+                .get(&w)
+                .expect("tiled storage prepared for kernel")
+                .spmv(x, y),
             KernelKind::Beta(..) | KernelKind::BetaTest(..) => {
                 let bs = kind.block_size().unwrap();
                 let bm = self
@@ -235,6 +296,19 @@ impl<T: Scalar> KernelSet<T> {
     /// Access a prepared block matrix (for stats/occupancy reporting).
     pub fn block(&self, bs: BlockSize) -> Option<&BlockMatrix<T>> {
         self.blocks.get(&bs)
+    }
+
+    /// Resolved column tile width a kernel runs at in this set (`0` =
+    /// flat execution) — for `tiled` (auto) the width actually chosen
+    /// at preparation, so measurements record the real window size.
+    pub fn tile_cols(&self, kind: KernelKind) -> usize {
+        match kind {
+            KernelKind::Tiled(w) => self
+                .tiled
+                .get(&w)
+                .map_or(kind.tile_width(), |th| th.tile_cols),
+            _ => 0,
+        }
     }
 }
 
@@ -266,6 +340,44 @@ mod tests {
         );
         assert_eq!(KernelKind::parse("hybrid2"), None);
         assert_eq!(KernelKind::Hybrid.block_size(), None);
+    }
+
+    #[test]
+    fn parse_accepts_tiled() {
+        assert_eq!(KernelKind::parse("tiled"), Some(KernelKind::Tiled(0)));
+        assert_eq!(KernelKind::parse(" TILED "), Some(KernelKind::Tiled(0)));
+        assert_eq!(
+            KernelKind::parse("tiled(4096)"),
+            Some(KernelKind::Tiled(4096))
+        );
+        assert_eq!(KernelKind::parse("tiled(0)"), Some(KernelKind::Tiled(0)));
+        assert_eq!(KernelKind::Tiled(0).to_string(), "tiled");
+        assert_eq!(KernelKind::Tiled(4096).to_string(), "tiled(4096)");
+        for k in [KernelKind::Tiled(0), KernelKind::Tiled(1024)] {
+            assert_eq!(KernelKind::parse(&k.to_string()), Some(k));
+        }
+        assert_eq!(KernelKind::parse("tiledx"), None);
+        assert_eq!(KernelKind::parse("tiled(4096"), None);
+        assert_eq!(KernelKind::parse("tiled(a)"), None);
+        assert_eq!(KernelKind::parse("tiled(4096)x"), None);
+        assert_eq!(KernelKind::Tiled(64).block_size(), None);
+        assert_eq!(KernelKind::Tiled(64).tile_width(), 64);
+        assert_eq!(KernelKind::Hybrid.tile_width(), 0);
+    }
+
+    #[test]
+    fn kernel_set_runs_tiled() {
+        let csr = crate::matrix::suite::mixed_band_scatter(1_024, 3);
+        let kinds = [KernelKind::Tiled(0), KernelKind::Tiled(128)];
+        let set = KernelSet::prepare(csr.clone(), &kinds);
+        let x: Vec<f64> = (0..csr.cols).map(|i| (i % 7) as f64 - 3.0).collect();
+        let mut want = vec![0.0; csr.rows];
+        csr.spmv_ref(&x, &mut want);
+        for k in kinds {
+            let mut y = vec![0.0; csr.rows];
+            set.spmv(k, &x, &mut y);
+            crate::testkit::assert_close(&y, &want, 1e-9, &k.to_string());
+        }
     }
 
     #[test]

@@ -188,6 +188,24 @@ pub fn spmm_span_scratch<T: Scalar>(
     spmm_generic_span_scratch(span, bs, x, y, k, sums);
 }
 
+/// [`spmm_span_scratch`] with a column-base offset — the SpMM side of
+/// the column-tiled execution hook (see
+/// [`crate::kernels::avx512::spmv_span_at`]). The span's `colidx` are
+/// relative to `col_base`; with the row-major `[cols × k]` layout the
+/// `x` panel simply starts `col_base · k` elements in, and both the
+/// SIMD `k = 8` kernel and the portable fallback run unchanged.
+pub fn spmm_span_at<T: Scalar>(
+    span: Span<'_, T>,
+    bs: BlockSize,
+    col_base: usize,
+    x: &[T],
+    y: &mut [T],
+    k: usize,
+    sums: &mut Vec<T>,
+) {
+    spmm_span_scratch(span, bs, &x[col_base * k..], y, k, sums)
+}
+
 /// Whole-matrix SpMM dispatch (`Y += A·X`, `X`/`Y` row-major): SIMD
 /// when available for this `(T, k)`, portable otherwise.
 pub fn spmm_auto<T: Scalar>(

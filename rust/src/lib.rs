@@ -91,6 +91,43 @@
 //! callers keep their original index space while conversion sees the
 //! improved block fill.
 //!
+//! ## Cache blocking (column tiling)
+//!
+//! The β kernels stream their own arrays perfectly, but every block
+//! load of `x` is indexed by block column: once `x` outgrows the
+//! last-level cache (wide matrices, scattered columns), those loads
+//! dominate. [`formats::TiledMatrix`] / [`formats::TiledHybrid`]
+//! reorder a converted storage into a **(row-panel × column-tile)**
+//! schedule: blocks are bucketed by the tile containing their anchor
+//! column, each `(panel, tile)` group is a self-contained kernel span
+//! whose `colidx` are tile-relative, and execution walks panels
+//! outermost, tiles innermost. One tile pass touches only a
+//! `tile_cols`-sized `x` window (cache-resident for the whole pass);
+//! the panel's `y` rows stay hot across all of its tiles. The spans
+//! run through the *existing* masked kernels unchanged — only the `x`
+//! slice starts at the tile base ([`kernels::avx512::spmv_span_at`]) —
+//! for SpMV and the multi-RHS SpMM alike.
+//!
+//! Spelling: `SpmvEngine::builder(..).tile_cols(n)` / `.tile_auto()`
+//! tiles a β or hybrid engine; [`KernelKind::Tiled`] (`parse` accepts
+//! `tiled` and `tiled(n)`) names the tiled hybrid schedule directly.
+//! Auto sizing reads the per-core L2 (override with `SPC5_L2_BYTES`)
+//! and budgets half of it for the `x` window
+//! ([`formats::auto_tile_cols`]). Parallel execution is a 2-D
+//! schedule on the engine's `WorkerPool`: workers own disjoint,
+//! nnz-balanced **row-panel** ranges (no atomics on `y`), tiles stay
+//! an inner sequential loop for locality.
+//!
+//! Prefer tiling when `x` is much larger than the LLC share and the
+//! columns touched per row spread widely (`matrix::suite::wide_random`
+//! is the stress generator); skip it for narrow or strongly banded
+//! matrices, where the window is cache-resident anyway and the extra
+//! per-span dispatch only costs. Numerically, a tiled product equals
+//! the flat one up to summation order: each row's contributions are
+//! accumulated per tile and then added, so results may differ from the
+//! flat kernel in the last bits (exactly bit-identical when one tile
+//! covers all columns); the differential tests pin this down.
+//!
 //! ## Modules
 //!
 //! - [`scalar`] — the sealed [`Scalar`] / [`scalar::MaskWord`] traits:
@@ -102,9 +139,10 @@
 //! - [`formats`] — the paper's contribution: `β(r,c)` block formats
 //!   storing one *bitmask per block* instead of zero padding
 //!   (`BlockMatrix<T>`), conversion from CSR, block statistics, the
-//!   memory-occupancy model (paper Eq. 1–4), and the heterogeneous
+//!   memory-occupancy model (paper Eq. 1–4), the heterogeneous
 //!   row-panel schedule (`HybridMatrix<T>`: per-panel β/CSR choice
-//!   compiled into flat kernel segments).
+//!   compiled into flat kernel segments), and the cache-blocked
+//!   column-tiled layouts (`TiledMatrix<T>` / `TiledHybrid<T>`).
 //! - [`kernels`] — SpMV kernels behind one dispatch: the generic
 //!   scalar Algorithm 1/2, native AVX-512 `vexpandpd` (f64) and
 //!   `vexpandps` (f32) span kernels, a tuned CSR baseline (MKL

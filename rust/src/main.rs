@@ -122,6 +122,8 @@ fn print_help() {
          \x20 stats    --set A|B | --matrix NAME | --mtx FILE   block-fill stats (Tables 1/2)\n\
          \x20 spmv     --matrix NAME [--kernel K] [--threads N] [--numa] [--precision f32|f64]\n\
          \x20          [--reorder rcm|colpack] [--panel-rows N]   (kernel `hybrid` = per-panel schedule)\n\
+         \x20          [--tile-cols N | --tile-auto]   (cache-blocked column tiling; kernel\n\
+         \x20          `tiled` / `tiled(N)` = tiled hybrid schedule)\n\
          \x20 predict  --matrix NAME [--threads N] [--records FILE]\n\
          \x20 cg       [--n N] [--iters K] [--engine native|xla] [--threads N]\n\
          \x20 gen      --class CLASS --out FILE.mtx [--dim D] [--seed S]\n\
@@ -176,7 +178,8 @@ fn cmd_spmv(a: &Args) -> anyhow::Result<()> {
         None => KernelKind::Beta(1, 8),
         Some(k) => KernelKind::parse(k).ok_or_else(|| {
             anyhow::anyhow!(
-                "bad kernel '{k}' (try b(4,8), b32(1,16), csr, csr5, hybrid)"
+                "bad kernel '{k}' (try b(4,8), b32(1,16), csr, csr5, hybrid, \
+                 tiled, tiled(4096))"
             )
         })?,
     };
@@ -184,6 +187,13 @@ fn cmd_spmv(a: &Args) -> anyhow::Result<()> {
     let numa = a.has("numa");
     let panel_rows =
         a.get_usize("panel-rows", spc5::formats::hybrid::DEFAULT_PANEL_ROWS)?;
+    let tile_cols = match a.get("tile-cols") {
+        None => None,
+        Some(v) => Some(v.parse::<usize>().map_err(|_| {
+            anyhow::anyhow!("--tile-cols expects a number, got '{v}'")
+        })?),
+    };
+    let tile_auto = a.has("tile-auto");
     let reorder = match a.get("reorder") {
         None => None,
         Some(r) => Some(spc5::matrix::ReorderKind::parse(r).ok_or_else(
@@ -211,7 +221,18 @@ fn cmd_spmv(a: &Args) -> anyhow::Result<()> {
         if let Some(r) = reorder {
             b = b.reorder(r);
         }
+        if tile_auto {
+            b = b.tile_auto();
+        }
+        if let Some(n) = tile_cols {
+            // An explicit width wins over --tile-auto when both given.
+            b = b.tile_cols(n);
+        }
         let engine = b.build()?;
+        let tile_note = engine
+            .tile_cols()
+            .map(|t| format!(" tile={t}"))
+            .unwrap_or_default();
         let x: Vec<f32> = bench::bench_vector(engine.csr().cols, 0xBE7C)
             .into_iter()
             .map(|v| v as f32)
@@ -221,7 +242,8 @@ fn cmd_spmv(a: &Args) -> anyhow::Result<()> {
         std::hint::black_box(&y);
         println!(
             "{name}: kernel={kernel} precision=f32 threads={threads} \
-             numa={numa}{reorder_note} nnz={nnz} time={seconds:.6}s gflops={:.3}",
+             numa={numa}{reorder_note}{tile_note} nnz={nnz} time={seconds:.6}s \
+             gflops={:.3}",
             spmv_gflops(nnz, seconds)
         );
     } else {
@@ -233,7 +255,18 @@ fn cmd_spmv(a: &Args) -> anyhow::Result<()> {
         if let Some(r) = reorder {
             b = b.reorder(r);
         }
+        if tile_auto {
+            b = b.tile_auto();
+        }
+        if let Some(n) = tile_cols {
+            // An explicit width wins over --tile-auto when both given.
+            b = b.tile_cols(n);
+        }
         let engine = b.build()?;
+        let tile_note = engine
+            .tile_cols()
+            .map(|t| format!(" tile={t}"))
+            .unwrap_or_default();
         let x = bench::bench_vector(engine.csr().cols, 0xBE7C);
         let mut y = vec![0.0f64; engine.csr().rows];
         let seconds = mean_of_runs(bench::RUNS, || engine.spmv(&x, &mut y));
@@ -253,9 +286,19 @@ fn cmd_spmv(a: &Args) -> anyhow::Result<()> {
                 println!("hybrid schedule: {}", plan.join("; "));
             }
         }
+        if let Some(th) = engine.tiled_hybrid() {
+            println!(
+                "tiled schedule: {} segments, {} (panel × tile) spans, \
+                 tile width {} cols",
+                th.n_segments(),
+                th.n_spans(),
+                th.tile_cols
+            );
+        }
         println!(
             "{name}: kernel={kernel} precision=f64 threads={threads} \
-             numa={numa}{reorder_note} nnz={nnz} time={seconds:.6}s gflops={:.3}",
+             numa={numa}{reorder_note}{tile_note} nnz={nnz} time={seconds:.6}s \
+             gflops={:.3}",
             spmv_gflops(nnz, seconds)
         );
     }
@@ -424,5 +467,11 @@ fn cmd_kernels() -> anyhow::Result<()> {
         println!("  {k:<12} [{simd}]");
     }
     println!("  {:<12} [per-row-panel β/CSR schedule]", KernelKind::Hybrid);
+    println!(
+        "  {:<12} [cache-blocked (panel × column-tile) hybrid schedule; \
+         tiled(N) fixes the tile width, auto width = {} cols at f64]",
+        KernelKind::Tiled(0),
+        spc5::formats::auto_tile_cols::<f64>(usize::MAX / 2)
+    );
     Ok(())
 }

@@ -392,6 +392,34 @@ pub fn mixed_band_scatter(n: usize, seed: u64) -> Csr {
     coo.to_csr().expect("mixed_band_scatter produces valid matrices")
 }
 
+/// Generator: wide scatter — a column space chosen far larger than any
+/// LLC share, so the `x` working set (`cols · 8` bytes at f64) cannot
+/// stay cache-resident across a flat SpMV. Each row mixes one short
+/// contiguous run (so β blocks exist and the block kernels are
+/// actually exercised) with uniformly random far columns (the loads
+/// that miss once `x` spills). This is the matrix class where
+/// column-tiled execution pays; flat-`x`-traffic generators hide it.
+/// Deterministic: the seed is derived from the shape.
+pub fn wide_random(rows: usize, cols: usize, nnz_per_row: usize) -> Csr {
+    let seed = 0x71DE_0000_u64
+        ^ (rows as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        ^ (cols as u64).rotate_left(17)
+        ^ (nnz_per_row as u64).rotate_left(41);
+    let mut rng = Rng::new(seed);
+    let mut coo = Coo::new(rows, cols);
+    let run = nnz_per_row.min(3).max(1);
+    for r in 0..rows {
+        let start = rng.next_below(cols.saturating_sub(run).max(1));
+        for c in start..(start + run).min(cols) {
+            coo.push(r, c, rng.nnz_value());
+        }
+        for _ in 0..nnz_per_row.saturating_sub(run) {
+            coo.push(r, rng.next_below(cols), rng.nnz_value());
+        }
+    }
+    coo.to_csr().expect("wide_random produces valid matrices")
+}
+
 /// Generator: dense matrix (Dense-8000 surrogate, scaled).
 pub fn dense(n: usize, seed: u64) -> Csr {
     let mut rng = Rng::new(seed);
@@ -604,6 +632,20 @@ mod tests {
     fn dense_is_full() {
         let d = dense(10, 3);
         assert_eq!(d.nnz(), 100);
+    }
+
+    #[test]
+    fn wide_random_shape_and_determinism() {
+        let a = wide_random(64, 50_000, 8);
+        assert_eq!(a.rows, 64);
+        assert_eq!(a.cols, 50_000);
+        // Duplicate random columns may merge: nnz is bounded, not exact.
+        assert!(a.nnz() > 64 * 4 && a.nnz() <= 64 * 8);
+        assert_eq!(a, wide_random(64, 50_000, 8));
+        assert_ne!(a, wide_random(64, 50_000, 7));
+        // Columns genuinely span the wide space (tiling is exercised).
+        let max_col = a.colidx.iter().copied().max().unwrap() as usize;
+        assert!(max_col > 25_000, "columns should spread wide: {max_col}");
     }
 
     #[test]

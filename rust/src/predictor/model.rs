@@ -73,8 +73,13 @@ pub fn predict(m: &MachineModel, kind: KernelKind, avg: f64) -> f64 {
         KernelKind::Csr5 => 2.0 * m.bw_eff / (12.0 + 8.0) / 1e9 * 0.9,
         // The hybrid schedule picks at least CSR per panel, so CSR's
         // prediction is its safe lower bound (the panel compiler does
-        // its own per-panel ranking — see `formats::hybrid`).
-        KernelKind::Hybrid => 2.0 * m.bw_eff / (12.0 + 8.0) / 1e9,
+        // its own per-panel ranking — see `formats::hybrid`). The tiled
+        // schedule executes the same choices cache-blocked: the
+        // bandwidth model carries no cache term, so it shares the
+        // bound (fitted records are what distinguish tiled from flat).
+        KernelKind::Hybrid | KernelKind::Tiled(_) => {
+            2.0 * m.bw_eff / (12.0 + 8.0) / 1e9
+        }
         KernelKind::Beta(..) | KernelKind::BetaTest(..) => {
             let bs = kind.block_size().unwrap();
             let mut bytes =

@@ -19,6 +19,11 @@ pub struct PerfRecord {
     /// the producer computed).
     pub avg_nnz_per_block: f64,
     pub threads: usize,
+    /// Column tile width the measurement ran with (`0` = flat /
+    /// untiled execution). Together with the `tiled(n)` kernel
+    /// spelling this lets the fitted surfaces rank tiled vs. flat
+    /// schedules per matrix.
+    pub tile_cols: usize,
     pub gflops: f64,
 }
 
@@ -65,6 +70,7 @@ impl RecordStore {
                     ("kernel", Json::Str(r.kernel.to_string())),
                     ("avg", Json::Num(r.avg_nnz_per_block)),
                     ("threads", Json::Num(r.threads as f64)),
+                    ("tile", Json::Num(r.tile_cols as f64)),
                     ("gflops", Json::Num(r.gflops)),
                 ])
             })
@@ -99,6 +105,11 @@ impl RecordStore {
                     .as_f64()
                     .ok_or_else(|| anyhow::anyhow!("record {i}: {k} not num"))
             };
+            // `tile` is absent in pre-tiling stores: default to flat.
+            let tile_cols = item
+                .get("tile")
+                .and_then(|t| t.as_f64())
+                .unwrap_or(0.0) as usize;
             store.push(PerfRecord {
                 matrix: field("matrix")?
                     .as_str()
@@ -107,6 +118,7 @@ impl RecordStore {
                 kernel,
                 avg_nnz_per_block: num("avg")?,
                 threads: num("threads")? as usize,
+                tile_cols,
                 gflops: num("gflops")?,
             });
         }
@@ -131,17 +143,19 @@ mod tests {
 
     fn sample() -> RecordStore {
         let mut s = RecordStore::new();
-        for (m, k, a, t, g) in [
-            ("m1", KernelKind::Beta(1, 8), 2.4, 1, 3.0),
-            ("m1", KernelKind::Beta(4, 4), 6.6, 1, 3.02),
-            ("m2", KernelKind::Csr, 1.0, 4, 1.2),
-            ("m2", KernelKind::BetaTest(2, 4), 1.9, 4, 2.2),
+        for (m, k, a, t, tile, g) in [
+            ("m1", KernelKind::Beta(1, 8), 2.4, 1, 0, 3.0),
+            ("m1", KernelKind::Beta(4, 4), 6.6, 1, 0, 3.02),
+            ("m2", KernelKind::Csr, 1.0, 4, 0, 1.2),
+            ("m2", KernelKind::BetaTest(2, 4), 1.9, 4, 0, 2.2),
+            ("m2", KernelKind::Tiled(4096), 1.9, 1, 4096, 2.8),
         ] {
             s.push(PerfRecord {
                 matrix: m.to_string(),
                 kernel: k,
                 avg_nnz_per_block: a,
                 threads: t,
+                tile_cols: tile,
                 gflops: g,
             });
         }
@@ -177,6 +191,23 @@ mod tests {
             s.for_kernel_all_threads(KernelKind::BetaTest(2, 4)).len(),
             1
         );
+    }
+
+    #[test]
+    fn tile_field_defaults_to_flat_on_old_stores() {
+        // Pre-tiling stores have no "tile" key: records must load with
+        // tile_cols = 0, and tiled kernel spellings must round-trip.
+        let s = RecordStore::from_json(
+            r#"{"records":[{"matrix":"m","kernel":"b(2,8)","avg":3.5,"threads":1,"gflops":2.0}]}"#,
+        )
+        .unwrap();
+        assert_eq!(s.records[0].tile_cols, 0);
+        let s = RecordStore::from_json(
+            r#"{"records":[{"matrix":"m","kernel":"tiled(4096)","avg":1.5,"threads":1,"tile":4096,"gflops":2.5}]}"#,
+        )
+        .unwrap();
+        assert_eq!(s.records[0].kernel, KernelKind::Tiled(4096));
+        assert_eq!(s.records[0].tile_cols, 4096);
     }
 
     #[test]

@@ -59,7 +59,16 @@ pub fn fit_sequential(
 ) -> HashMap<KernelKind, PolyModel> {
     let mut models = HashMap::new();
     for &k in kinds {
-        let recs = store.for_kernel(k, 1);
+        // A run recorded against a β/CSR kind but executed tiled (the
+        // builder.tile_cols path) must not pool into that kind's flat
+        // surface; `tiled(w)` kinds accept their own records at any
+        // resolved width.
+        let tiled_kind = matches!(k, KernelKind::Tiled(_));
+        let recs: Vec<_> = store
+            .for_kernel(k, 1)
+            .into_iter()
+            .filter(|r| tiled_kind || r.tile_cols == 0)
+            .collect();
         let xs: Vec<f64> = recs.iter().map(|r| r.avg_nnz_per_block).collect();
         let ys: Vec<f64> = recs.iter().map(|r| r.gflops).collect();
         if let Some(m) = PolyModel::fit(&xs, &ys, 3) {
@@ -76,9 +85,12 @@ pub fn fit_parallel(
 ) -> HashMap<KernelKind, Reg2dModel> {
     let mut models = HashMap::new();
     for &k in kinds {
+        // Same tiled/flat separation as `fit_sequential`.
+        let tiled_kind = matches!(k, KernelKind::Tiled(_));
         let samples: Vec<(f64, f64, f64)> = store
             .for_kernel_all_threads(k)
             .iter()
+            .filter(|r| tiled_kind || r.tile_cols == 0)
             .map(|r| (r.avg_nnz_per_block, r.threads as f64, r.gflops))
             .collect();
         if let Some(m) = Reg2dModel::fit(&samples) {
@@ -169,6 +181,7 @@ mod tests {
                         kernel: k,
                         avg_nnz_per_block: a,
                         threads: t,
+                        tile_cols: 0,
                         gflops: g * (t as f64).sqrt(),
                     });
                 }
@@ -243,6 +256,43 @@ mod tests {
         // Every prediction non-finite → no selection at all (the
         // caller falls back to the β(1,8) default).
         assert!(rank(&kinds, &stats, |_, _| Some(f64::NAN)).is_none());
+    }
+
+    #[test]
+    fn tiled_runs_do_not_pool_into_flat_fits() {
+        // Records of a β kernel executed tiled (tile_cols > 0) must be
+        // excluded from that kernel's flat surface...
+        let mut store = RecordStore::new();
+        for i in 0..8 {
+            store.push(PerfRecord {
+                matrix: format!("m{i}"),
+                kernel: KernelKind::Beta(1, 8),
+                avg_nnz_per_block: 1.0 + i as f64,
+                threads: 1,
+                tile_cols: 4096,
+                gflops: 99.0,
+            });
+        }
+        let models = fit_sequential(&store, &[KernelKind::Beta(1, 8)]);
+        assert!(models.is_empty(), "only tiled records — no flat surface");
+        // ...while tiled kernel kinds keep their own records at any
+        // resolved width (auto runs record the real window).
+        for i in 0..8 {
+            store.push(PerfRecord {
+                matrix: format!("t{i}"),
+                kernel: KernelKind::Tiled(0),
+                avg_nnz_per_block: 1.0 + i as f64,
+                threads: 1,
+                tile_cols: 65536,
+                gflops: 2.0 + i as f64 * 0.1,
+            });
+        }
+        let models = fit_sequential(
+            &store,
+            &[KernelKind::Beta(1, 8), KernelKind::Tiled(0)],
+        );
+        assert!(models.contains_key(&KernelKind::Tiled(0)));
+        assert!(!models.contains_key(&KernelKind::Beta(1, 8)));
     }
 
     #[test]

@@ -55,6 +55,7 @@ fn records_to_selection_pipeline() {
             kernel: KernelKind::Beta(1, 8),
             avg_nnz_per_block: avg,
             threads: 1,
+            tile_cols: 0,
             gflops: 1.0 + 0.2 * avg,
         });
         store.push(PerfRecord {
@@ -62,6 +63,7 @@ fn records_to_selection_pipeline() {
             kernel: KernelKind::BetaTest(1, 8),
             avg_nnz_per_block: avg,
             threads: 1,
+            tile_cols: 0,
             gflops: 1.8 - 0.05 * avg,
         });
     }

@@ -1,0 +1,318 @@
+//! Column-tiled execution: dense-oracle differentials across every
+//! suite generator class (f64 + f32, sequential + pooled, spmv +
+//! spmm), tile-coverage property tests via `validate()`, and
+//! tiled-vs-untiled comparisons (bit-exact in the single-tile case,
+//! one-ulp-per-partial accumulation tolerance otherwise — a tiled
+//! product sums each row's contributions per tile before adding them,
+//! so multi-tile results can differ from the flat kernel in the last
+//! bits).
+
+use spc5::formats::{
+    csr_to_block, BlockSize, HybridConfig, TileCols, TiledHybrid,
+    TiledMatrix,
+};
+use spc5::kernels::KernelKind;
+use spc5::matrix::{suite, Csr};
+use spc5::util::Rng;
+use spc5::SpmvEngine;
+
+/// Dense-oracle product for a matrix small enough to densify, CSR
+/// reference otherwise (wide matrices would need rows×cols cells).
+fn oracle_f64(csr: &Csr, x: &[f64]) -> Vec<f64> {
+    if csr.rows * csr.cols <= 4_000_000 {
+        csr.to_dense().matvec(x)
+    } else {
+        let mut w = vec![0.0; csr.rows];
+        csr.spmv_ref(&x.to_vec(), &mut w);
+        w
+    }
+}
+
+/// The matrices the differentials run over: every generator class in
+/// the fast subset plus the wide-scatter stress matrix whose `x`
+/// working set forces real multi-tile schedules.
+fn tiled_test_matrices() -> Vec<(String, Csr)> {
+    let mut ms: Vec<(String, Csr)> = suite::test_subset()
+        .into_iter()
+        .map(|sm| (sm.name.to_string(), sm.csr))
+        .collect();
+    ms.push(("wide-random".into(), suite::wide_random(512, 120_000, 9)));
+    ms
+}
+
+#[test]
+fn tiled_differential_f64_all_generators() {
+    for (name, csr) in tiled_test_matrices() {
+        let x: Vec<f64> = (0..csr.cols)
+            .map(|i| ((i * 13) % 29) as f64 * 0.25 - 3.0)
+            .collect();
+        let want = oracle_f64(&csr, &x);
+        // A small fixed width forces several tiles on every matrix;
+        // Tiled(0) exercises the auto-sized path.
+        for kernel in [KernelKind::Tiled(96), KernelKind::Tiled(0)] {
+            for threads in [1usize, 3] {
+                let engine = SpmvEngine::builder(csr.clone())
+                    .kernel(kernel)
+                    .panel_rows(64)
+                    .threads(threads)
+                    .build()
+                    .unwrap();
+                engine.tiled_hybrid().unwrap().validate().unwrap();
+                let mut got = vec![0.0; csr.rows];
+                engine.spmv_into(&x, &mut got);
+                for i in 0..csr.rows {
+                    assert!(
+                        (got[i] - want[i]).abs()
+                            <= 1e-9 * want[i].abs().max(1.0),
+                        "{name} {kernel} t={threads} row {i}: {} vs {}",
+                        got[i],
+                        want[i]
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn tiled_differential_f32_all_generators() {
+    for (name, csr) in tiled_test_matrices() {
+        let csr32: Csr<f32> = csr.to_precision();
+        let x: Vec<f32> = (0..csr32.cols)
+            .map(|i| ((i * 7) % 9) as f32 * 0.25 - 1.0)
+            .collect();
+        // Widened-to-f64 oracle on the truncated values, like the
+        // existing f32 differential suite.
+        let x64: Vec<f64> = x.iter().map(|&v| v as f64).collect();
+        let want64 = if csr32.rows * csr32.cols <= 4_000_000 {
+            csr32.to_dense().matvec(&x64)
+        } else {
+            let mut w = vec![0.0f32; csr32.rows];
+            csr32.spmv_ref(&x, &mut w);
+            w.iter().map(|&v| v as f64).collect()
+        };
+        for threads in [1usize, 3] {
+            let engine = SpmvEngine::builder(csr32.clone())
+                .kernel(KernelKind::Tiled(160))
+                .panel_rows(64)
+                .threads(threads)
+                .build()
+                .unwrap();
+            engine.tiled_hybrid().unwrap().validate().unwrap();
+            let mut got = vec![0.0f32; csr32.rows];
+            engine.spmv_into(&x, &mut got);
+            for i in 0..csr32.rows {
+                let w = want64[i] as f32;
+                assert!(
+                    (got[i] - w).abs() <= 2e-4 * w.abs().max(1.0),
+                    "{name} t={threads} row {i}: {} vs {w}",
+                    got[i]
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn tiled_spmm_differential_f64_and_f32() {
+    let csr = suite::mixed_band_scatter(2_048, 17);
+    let k = 5usize;
+    let mut rng = Rng::new(23);
+    let x: Vec<f64> =
+        (0..csr.cols * k).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+    for threads in [1usize, 4] {
+        let engine = SpmvEngine::builder(csr.clone())
+            .kernel(KernelKind::Tiled(256))
+            .panel_rows(128)
+            .threads(threads)
+            .build()
+            .unwrap();
+        let mut y = vec![0.0; csr.rows * k];
+        engine.spmm_into(&x, &mut y, k);
+        for j in 0..k {
+            let xj: Vec<f64> = (0..csr.cols).map(|c| x[c * k + j]).collect();
+            let want = oracle_f64(&csr, &xj);
+            for r in 0..csr.rows {
+                assert!(
+                    (y[r * k + j] - want[r]).abs()
+                        <= 1e-9 * want[r].abs().max(1.0),
+                    "f64 t={threads} j={j} row {r}"
+                );
+            }
+        }
+    }
+    // f32 multi-RHS through the tiled generic span kernel.
+    let csr32: Csr<f32> = csr.to_precision();
+    let x32: Vec<f32> = x.iter().map(|&v| v as f32).collect();
+    for threads in [1usize, 3] {
+        let engine = SpmvEngine::builder(csr32.clone())
+            .kernel(KernelKind::Tiled(256))
+            .panel_rows(128)
+            .threads(threads)
+            .build()
+            .unwrap();
+        let mut y = vec![0.0f32; csr32.rows * k];
+        engine.spmm_into(&x32, &mut y, k);
+        for j in 0..k {
+            let xj: Vec<f32> =
+                (0..csr32.cols).map(|c| x32[c * k + j]).collect();
+            let mut want = vec![0.0f32; csr32.rows];
+            csr32.spmv_ref(&xj, &mut want);
+            for r in 0..csr32.rows {
+                assert!(
+                    (y[r * k + j] - want[r]).abs()
+                        <= 2e-4 * want[r].abs().max(1.0),
+                    "f32 t={threads} j={j} row {r}"
+                );
+            }
+        }
+    }
+}
+
+/// Property: for random matrices, block sizes, panel heights and tile
+/// widths, the tiled layout validates — spans partition the storage
+/// and every block lands in exactly one span — and the product matches
+/// the flat kernel.
+#[test]
+fn tile_coverage_property() {
+    let mut rng = Rng::new(0x711E);
+    for round in 0..10u64 {
+        let rows = 16 + rng.next_below(500);
+        let cols = 16 + rng.next_below(900);
+        let mut coo = spc5::Coo::new(rows, cols);
+        for r in 0..rows {
+            if r < cols {
+                coo.push(r, r, 1.0 + r as f64);
+            }
+            let deg = 1 + rng.next_below(5);
+            for _ in 0..deg {
+                coo.push(r, rng.next_below(cols), rng.range_f64(-2.0, 2.0));
+            }
+            if r % 4 == 0 {
+                let start = rng.next_below(cols.saturating_sub(9).max(1));
+                for c in start..(start + 8).min(cols) {
+                    coo.push(r, c, 0.25);
+                }
+            }
+        }
+        let csr = coo.to_csr().unwrap();
+        let x: Vec<f64> = (0..cols).map(|i| ((i * 5) % 11) as f64).collect();
+        let mut want = vec![0.0; rows];
+        csr.spmv_ref(&x, &mut want);
+        for bs in [BlockSize::new(1, 8), BlockSize::new(4, 4)] {
+            let bm = csr_to_block(&csr, bs).unwrap();
+            for panel_rows in [8usize, 64, 512] {
+                for tile_cols in
+                    [7usize, 64, 1 + rng.next_below(cols), cols + 100]
+                {
+                    let tm =
+                        TiledMatrix::from_block(&bm, panel_rows, tile_cols)
+                            .unwrap();
+                    tm.validate().unwrap_or_else(|e| {
+                        panic!(
+                            "round {round} {bs} panel={panel_rows} \
+                             tile={tile_cols}: {e}"
+                        )
+                    });
+                    assert_eq!(tm.nnz(), csr.nnz());
+                    let mut got = vec![0.0; rows];
+                    tm.spmv(&x, &mut got, false);
+                    for i in 0..rows {
+                        assert!(
+                            (got[i] - want[i]).abs()
+                                <= 1e-9 * want[i].abs().max(1.0),
+                            "round {round} {bs} panel={panel_rows} \
+                             tile={tile_cols} row {i}"
+                        );
+                    }
+                }
+            }
+        }
+        // The tiled hybrid over the same matrix must also validate.
+        let cfg =
+            HybridConfig { panel_rows: 64, ..HybridConfig::for_scalar::<f64>() };
+        let th =
+            TiledHybrid::from_csr(&csr, &cfg, None, TileCols::Fixed(96))
+                .unwrap();
+        th.validate().unwrap();
+        assert_eq!(th.nnz(), csr.nnz());
+    }
+}
+
+/// Tiled-vs-untiled comparison on at least one matrix per generator:
+/// with a single tile covering every column the span walk reproduces
+/// the flat conversion's block order exactly, so the result must be
+/// **bit-identical**; with many tiles the result must agree within the
+/// documented accumulation-order tolerance.
+#[test]
+fn tiled_vs_untiled_per_generator() {
+    for (name, csr) in tiled_test_matrices() {
+        let bs = BlockSize::new(2, 8);
+        let bm = csr_to_block(&csr, bs).unwrap();
+        let x: Vec<f64> = (0..csr.cols)
+            .map(|i| ((i * 17) % 23) as f64 * 0.5 - 5.0)
+            .collect();
+        let mut flat = vec![0.0; csr.rows];
+        spc5::kernels::spmv_block(&bm, &x, &mut flat, false);
+
+        // One tile ⇒ same accumulation order ⇒ same bits.
+        let tm_one =
+            TiledMatrix::from_block(&bm, 512, csr.cols.max(1)).unwrap();
+        assert_eq!(tm_one.n_tiles, 1, "{name}");
+        let mut got_one = vec![0.0; csr.rows];
+        tm_one.spmv(&x, &mut got_one, false);
+        assert_eq!(got_one, flat, "{name}: single tile must be bit-exact");
+
+        // Many tiles ⇒ per-tile partial sums; tolerance covers the
+        // reassociation (documented in the module header).
+        let tile = (csr.cols / 7).max(8);
+        let tm = TiledMatrix::from_block(&bm, 512, tile).unwrap();
+        assert!(tm.n_tiles > 1, "{name}: want a real multi-tile schedule");
+        let mut got = vec![0.0; csr.rows];
+        tm.spmv(&x, &mut got, false);
+        for i in 0..csr.rows {
+            assert!(
+                (got[i] - flat[i]).abs() <= 1e-9 * flat[i].abs().max(1.0),
+                "{name} multi-tile row {i}: {} vs {}",
+                got[i],
+                flat[i]
+            );
+        }
+    }
+}
+
+/// The wide-scatter stress matrix must produce a genuinely tiled
+/// schedule under auto sizing (that is what the generator is for), and
+/// the engine must agree with the CSR reference on it.
+#[test]
+fn wide_random_exercises_tiling() {
+    let csr = suite::wide_random(768, 200_000, 8);
+    // Auto sizing is host-dependent (detected L2); the fixed width
+    // guarantees a real multi-tile schedule on any machine.
+    let engine = SpmvEngine::builder(csr.clone())
+        .kernel(KernelKind::Tiled(8192))
+        .build()
+        .unwrap();
+    assert_eq!(engine.tile_cols(), Some(8192));
+    let th = engine.tiled_hybrid().unwrap();
+    th.validate().unwrap();
+    assert!(
+        th.n_spans() > th.n_segments(),
+        "wide matrix should split into multiple (panel, tile) spans: \
+         {} spans over {} segments",
+        th.n_spans(),
+        th.n_segments()
+    );
+    let x: Vec<f64> =
+        (0..csr.cols).map(|i| ((i * 3) % 13) as f64 * 0.25).collect();
+    let mut want = vec![0.0; csr.rows];
+    csr.spmv_ref(&x, &mut want);
+    let mut got = vec![0.0; csr.rows];
+    engine.spmv_into(&x, &mut got);
+    for i in 0..csr.rows {
+        assert!(
+            (got[i] - want[i]).abs() <= 1e-9 * want[i].abs().max(1.0),
+            "row {i}"
+        );
+    }
+}
