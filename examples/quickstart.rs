@@ -134,6 +134,26 @@ fn main() -> anyhow::Result<()> {
     for bs in BlockSize::PAPER_SIZES {
         println!("  {}: {:.2}", bs, fill_crossover(bs));
     }
+
+    // 7. Inspector–executor: inspect once, serialize the decision,
+    //    instantiate anywhere. The plan is plain JSON; `from_plan`
+    //    fingerprint-checks the matrix and skips selection entirely.
+    let plan = spc5::SpmvEngine::builder(sm.csr.clone())
+        .kernel(KernelKind::Hybrid)
+        .plan()?;
+    let json = plan.to_json();
+    let restored = spc5::SpmvPlan::from_json(&json)?;
+    let engine = spc5::SpmvEngine::from_plan(sm.csr.clone(), &restored)?;
+    println!(
+        "\nplan round trip: kernel={} segments={} fingerprint={} ({} B of \
+         JSON) -> engine serves {} rows",
+        engine.plan().kernel,
+        engine.plan().schedule.len(),
+        engine.plan().fingerprint.key(),
+        json.len(),
+        engine.csr().rows
+    );
+
     println!("\nquickstart OK");
     Ok(())
 }

@@ -24,6 +24,7 @@ fn main() {
             "hybrid" => return hybrid_ablation(),
             "prefetch" => return prefetch_ablation(),
             "tile" => return tile_ablation(),
+            "plan" => return plan_ablation(),
             other => {
                 eprintln!("unknown SPC5_ABLATION='{other}', running all")
             }
@@ -41,6 +42,7 @@ fn main() {
     predictor_ablation();
     hybrid_ablation();
     tile_ablation();
+    plan_ablation();
 }
 
 /// GFlop/s vs block fill for every kernel.
@@ -351,6 +353,138 @@ fn tile_ablation() {
     match runner::write_bench_json(
         std::path::Path::new(&out),
         "kernel_micro/tile",
+        &all,
+    ) {
+        Ok(()) => eprintln!("  wrote {out}"),
+        Err(e) => eprintln!("warning: {e}"),
+    }
+}
+
+/// Plan-vs-cold ablation: what the inspector–executor split is worth
+/// on the *build* path. Cold `build()` pays selection + hybrid panel
+/// ranking + conversion on every call; `plan()` isolates the
+/// inspection cost; `from_plan()` isolates instantiation; and a warmed
+/// `PlanCache` (`builder.plan_cache(path)`) is the serving scenario —
+/// repeat workloads skip inspection entirely. Build times are
+/// persisted to `BENCH_5.json` (`gflops` is 0 for these rows — the
+/// measured quantity is `seconds` per engine build; the phase is
+/// encoded in the matrix label suffix), uploaded by CI next to
+/// BENCH_3/BENCH_4.
+fn plan_ablation() {
+    let mats: Vec<(&str, Csr)> = vec![
+        ("fem-8k", suite::fem_blocked(8_000, 3, 8, 9)),
+        ("mixed-band-scatter", suite::mixed_band_scatter(16_000, 12)),
+    ];
+    // Fitted surfaces make the inspection phase do real predictor
+    // work (per-panel ranking against the fitted CSR/β curves).
+    let mut store = RecordStore::new();
+    for i in 0..16 {
+        let avg = 1.0 + i as f64 * 2.0;
+        for (kernel, gflops) in [
+            (KernelKind::Csr, 1.4),
+            (KernelKind::Beta(1, 8), 0.9 + 0.08 * avg),
+            (KernelKind::Beta(2, 8), 0.6 + 0.10 * avg),
+            (KernelKind::Beta(4, 8), 0.4 + 0.12 * avg),
+        ] {
+            store.push(spc5::predictor::PerfRecord {
+                matrix: format!("train{i}"),
+                kernel,
+                avg_nnz_per_block: avg,
+                threads: 1,
+                tile_cols: 0,
+                gflops,
+            });
+        }
+    }
+
+    let dir = std::env::temp_dir().join("spc5_plan_ablation");
+    std::fs::create_dir_all(&dir).ok();
+
+    let mut all: Vec<Measurement> = Vec::new();
+    let mut t = Table::new(
+        "Ablation L: engine build time, cold vs planned vs cached \
+         (hybrid kernel, sequential)",
+        &["matrix", "phase", "ms per build", "vs cold"],
+    );
+    for (name, csr) in &mats {
+        let mk = || {
+            SpmvEngine::builder(csr.clone())
+                .kernel(KernelKind::Hybrid)
+                .records(&store)
+        };
+        let mut record = |phase: &str, seconds: f64| {
+            all.push(Measurement {
+                matrix: format!("{name}/{phase}"),
+                kernel: KernelKind::Hybrid,
+                threads: 1,
+                numa: false,
+                tile_cols: 0,
+                gflops: 0.0,
+                seconds,
+            });
+        };
+
+        // Cold: inspection + instantiation fused (what every repeat
+        // workload used to pay).
+        let s_cold = mean_of_runs(RUNS, || {
+            std::hint::black_box(&mk().build().expect("cold build"));
+        });
+        record("cold-build", s_cold);
+
+        // Inspection alone (scans + predictor + panel ranking).
+        let s_plan = mean_of_runs(RUNS, || {
+            std::hint::black_box(&mk().plan().expect("plan"));
+        });
+        record("plan-only", s_plan);
+
+        // Instantiation from a ready plan (fingerprint + conversion).
+        let plan = mk().plan().expect("plan");
+        let s_inst = mean_of_runs(RUNS, || {
+            std::hint::black_box(
+                &SpmvEngine::from_plan(csr.clone(), &plan)
+                    .expect("from_plan"),
+            );
+        });
+        record("from-plan", s_inst);
+
+        // The serving path: a warmed PlanCache on disk.
+        let cache_path = dir.join(format!("{name}.json"));
+        std::fs::remove_file(&cache_path).ok();
+        std::hint::black_box(
+            &mk().plan_cache(&cache_path).build().expect("cache warmup"),
+        );
+        let s_cached = mean_of_runs(RUNS, || {
+            std::hint::black_box(
+                &mk()
+                    .plan_cache(&cache_path)
+                    .build()
+                    .expect("cached build"),
+            );
+        });
+        record("cached-build", s_cached);
+
+        for (phase, s) in [
+            ("cold build()", s_cold),
+            ("plan() only", s_plan),
+            ("from_plan()", s_inst),
+            ("warmed plan_cache build()", s_cached),
+        ] {
+            t.row(vec![
+                name.to_string(),
+                phase.into(),
+                format!("{:.3}", s * 1e3),
+                format!("{:.3}x", s / s_cold),
+            ]);
+        }
+        eprintln!("  plan ablation: {name}");
+    }
+    t.emit("ablation_plan");
+
+    let out = std::env::var("SPC5_BENCH5_JSON")
+        .unwrap_or_else(|_| "BENCH_5.json".to_string());
+    match runner::write_bench_json(
+        std::path::Path::new(&out),
+        "kernel_micro/plan",
         &all,
     ) {
         Ok(()) => eprintln!("  wrote {out}"),

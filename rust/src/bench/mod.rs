@@ -210,6 +210,9 @@ pub fn records_path() -> std::path::PathBuf {
 }
 
 /// Appends records to the store file (creating it if missing).
+/// Re-measurements of a configuration replace the old record
+/// ([`RecordStore::push`] dedupes), so repeated bench runs keep the
+/// store bounded.
 pub fn append_records(records: &[PerfRecord]) -> anyhow::Result<()> {
     let path = records_path();
     let mut store = if path.exists() {
@@ -217,7 +220,9 @@ pub fn append_records(records: &[PerfRecord]) -> anyhow::Result<()> {
     } else {
         RecordStore::new()
     };
-    store.records.extend(records.iter().cloned());
+    for r in records {
+        store.push(r.clone());
+    }
     store.save(&path)
 }
 

@@ -116,20 +116,27 @@ pub fn ensure_records(
     } else {
         RecordStore::new()
     };
+    // Route through `push` so re-priming replaces stale measurements
+    // instead of growing the store without bound.
+    let mut merge = |recs: Vec<crate::predictor::PerfRecord>| {
+        for r in recs {
+            store.push(r);
+        }
+    };
     if thread_counts == [1] {
         let (_, recs) = run_sequential(matrices, kernels);
-        store.records.extend(recs);
+        merge(recs);
     } else {
         let seq_needed = thread_counts.contains(&1);
         if seq_needed {
             let (_, recs) = run_sequential(matrices, kernels);
-            store.records.extend(recs);
+            merge(recs);
         }
         let par: Vec<usize> =
             thread_counts.iter().copied().filter(|&t| t > 1).collect();
         if !par.is_empty() {
             let (_, recs) = run_parallel(matrices, kernels, &par, &[false]);
-            store.records.extend(recs);
+            merge(recs);
         }
     }
     store.save(&path)?;

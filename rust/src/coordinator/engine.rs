@@ -14,21 +14,29 @@
 //! # Ok(()) }
 //! ```
 //!
-//! Given a CSR matrix, the engine:
-//! 1. computes the cheap `Avg(r,c)` profile (no conversion),
-//! 2. consults the record store to select the most promising kernel
-//!    (paper §Performance prediction) — or takes an explicit override,
-//! 3. converts once into the selected storage,
-//! 4. serves `spmv` calls sequentially or through the parallel runtime.
+//! The build is an **inspector–executor** pipeline with a first-class
+//! plan between the halves:
 //!
-//! The engine serves **every** [`KernelKind`]: the `β(r,c)` kernels
-//! (sequential or block-balanced parallel), the CSR baseline
-//! (row-chunked across threads), the CSR5 comparator (sequential —
-//! the reference CSR5 kernel carries open-row state across tiles),
-//! and the hybrid row-panel schedule
-//! ([`crate::formats::HybridMatrix`]: per-panel β/CSR choice driven by
-//! the fill crossover and the predictor's fitted surface, parallel by
-//! nnz-balanced segment chunks on the pool).
+//! 1. **inspect** — [`SpmvEngineBuilder::plan`] computes the cheap
+//!    `Avg(r,c)` profile, consults the record store (or takes an
+//!    explicit override), ranks the hybrid panels, and resolves every
+//!    knob into a serializable [`SpmvPlan`] — converting nothing;
+//! 2. **instantiate** — [`SpmvEngine::from_plan`] converts the matrix
+//!    once into the planned storage and wires the runtime, skipping
+//!    selection entirely. A [`MatrixFingerprint`] check refuses plans
+//!    inspected on a different matrix;
+//! 3. [`SpmvEngineBuilder::build`] is exactly (1) + (2), so
+//!    `plan() → JSON → from_plan()` reproduces the built engine
+//!    bit-for-bit; [`SpmvEngineBuilder::plan_cache`] persists plans
+//!    keyed by fingerprint so repeat workloads skip inspection.
+//!
+//! The built engine holds **one** [`SparseStorage`] trait object —
+//! `β(r,c)` block storage (sequential or the pool-parallel
+//! [`crate::parallel::ParallelSpmv`]), the CSR baseline (row-chunked
+//! across threads), the CSR5 comparator, the hybrid row-panel schedule
+//! and its cache-blocked tiled forms all serve `spmv`/`spmm` through
+//! the same object-safe surface; there is no per-kernel dispatch left
+//! on the product paths.
 //!
 //! Two build-time levers ride on the builder:
 //! [`SpmvEngineBuilder::panel_rows`] tunes the hybrid panel height and
@@ -37,55 +45,31 @@
 //! callers keep their original index space).
 //!
 //! With `threads > 1` the engine owns **one** [`WorkerPool`] for its
-//! lifetime: the β runtime attaches to it, the row-chunked CSR path
-//! runs on it, and every `spmv`/`spmm` afterwards — including each
-//! iteration of the Krylov solvers and each batch of the serving layer
-//! — is an epoch handoff to the same long-lived workers. No per-call
-//! thread spawning anywhere on the hot path.
+//! lifetime: every parallel storage runs its epochs on it, and every
+//! `spmv`/`spmm` afterwards — including each iteration of the Krylov
+//! solvers and each batch of the serving layer — is an epoch handoff
+//! to the same long-lived workers. No per-call thread spawning
+//! anywhere on the hot path.
 //!
 //! [`SpmvEngine::spmm`] is the multi-RHS entry (`Y += A·X`, `k`
 //! right-hand sides in one matrix traversal) that the service's
 //! micro-batching dispatcher coalesces concurrent requests into.
 
+use super::plan::{MatrixFingerprint, PlanCache, SpmvPlan, PLAN_VERSION};
 use crate::formats::stats::paper_profile;
 use crate::formats::{
-    csr_to_block, BlockMatrix, BlockSize, HybridConfig, HybridMatrix,
-    TileCols, TiledHybrid, TiledMatrix,
+    csr_to_block, BetaTestStorage, BlockSize, Csr5Storage, CsrStorage,
+    HybridConfig, HybridMatrix, PoolExec, SparseStorage, TileCols,
+    TiledHybrid, TiledMatrix,
 };
-use crate::kernels::{csr as csr_kernel, csr5, spmm, spmv_block, KernelKind};
+use crate::kernels::{csr5, KernelKind};
 use crate::matrix::reorder::{self, Permutation, ReorderKind};
 use crate::matrix::Csr;
-use crate::parallel::{
-    balanced_prefix_split, ParallelSpmv, ParallelStrategy, SendSlice,
-    WorkerPool,
-};
+use crate::parallel::{ParallelSpmv, ParallelStrategy, WorkerPool};
 use crate::predictor::{select_parallel, select_sequential, RecordStore};
 use crate::scalar::Scalar;
+use std::path::PathBuf;
 use std::sync::{Arc, Mutex};
-
-/// The storage a built engine dispatches to.
-enum Storage<T: Scalar> {
-    /// Sequential β kernel over one converted block matrix.
-    Block(BlockMatrix<T>),
-    /// Parallel β kernel (paper §Parallelization).
-    BlockParallel(ParallelSpmv<T>),
-    /// CSR baseline; `chunks` holds the nnz-balanced row split when
-    /// `threads > 1` (empty = sequential).
-    Csr { chunks: Vec<(usize, usize)> },
-    /// CSR5 comparator (sequential by construction).
-    Csr5(csr5::Csr5Matrix<T>),
-    /// Heterogeneous row-panel schedule; `chunks` holds the
-    /// nnz-balanced *segment* split when `threads > 1`.
-    Hybrid { hm: HybridMatrix<T>, chunks: Vec<(usize, usize)> },
-    /// Column-tiled β storage (cache-blocked `(panel, tile)` walk);
-    /// `chunks` holds the nnz-balanced *panel* split when
-    /// `threads > 1` — workers own disjoint row panels, tiles are
-    /// their inner sequential loop.
-    TiledBlock { tm: TiledMatrix<T>, chunks: Vec<(usize, usize)> },
-    /// Column-tiled hybrid schedule; `chunks` splits *segments* like
-    /// the flat hybrid path.
-    TiledHybrid { th: TiledHybrid<T>, chunks: Vec<(usize, usize)> },
-}
 
 /// The permutations a reordering engine applies around every product:
 /// the bound matrix is `B[i,j] = A[rows[i], cols[j]]`, so `x` is
@@ -109,42 +93,47 @@ impl<T: Scalar> ReorderState<T> {
     }
 }
 
-/// A matrix bound to its chosen kernel and storage, ready to serve.
+/// A matrix bound to its planned kernel and storage, ready to serve.
 pub struct SpmvEngine<T: Scalar = f64> {
-    csr: Csr<T>,
-    kernel: KernelKind,
-    predicted_gflops: Option<f64>,
-    storage: Storage<T>,
-    threads: usize,
+    /// The bound (possibly permuted) matrix — shared with the CSR
+    /// baseline storage rather than copied.
+    csr: Arc<Csr<T>>,
+    /// The plan this engine was instantiated from (what `build()`
+    /// inspected or `from_plan()` was handed).
+    plan: SpmvPlan,
+    /// The one executor: every kernel class behind the same trait.
+    storage: Box<dyn SparseStorage<T>>,
+    /// The storage's nnz-balanced work split for the pool, computed
+    /// once at build ([`SparseStorage::par_split`]); empty when the
+    /// storage runs sequentially or schedules itself.
+    chunks: Vec<(usize, usize)>,
     /// The persistent runtime every parallel path runs on, created
     /// once at build time (`None` when `threads == 1`).
     pool: Option<Arc<WorkerPool>>,
     /// Build-time reordering; when present, `csr` is the *permuted*
     /// matrix and every `spmv`/`spmm` transparently permutes x/y.
     reorder: Option<ReorderState<T>>,
-    /// Reusable de-interleave buffers `(xj, yj)` for the CSR/CSR5
-    /// multi-RHS fallback — engine-owned so the micro-batching service
-    /// does not allocate two fresh vectors per batch. Uncontended like
-    /// the reorder scratch; the lock only keeps `spmm(&self, ..)`
-    /// shareable.
-    baseline_spmm_scratch: Mutex<(Vec<T>, Vec<T>)>,
     /// Pool attach id for per-worker SpMM accumulator scratch on the
     /// tiled parallel paths.
     scratch_attach: u64,
 }
 
-/// Fluent configuration for [`SpmvEngine`] — replaces the old
-/// `EngineConfig` + `SpmvEngine::new(csr, &cfg, records)` triple.
+/// Fluent configuration for [`SpmvEngine`] — the inspector half of the
+/// engine's inspector–executor split (see the module docs).
 pub struct SpmvEngineBuilder<'r, T: Scalar = f64> {
     csr: Csr<T>,
     threads: usize,
     numa_split: bool,
     kernel: Option<KernelKind>,
     candidates: Vec<KernelKind>,
+    /// Whether `.candidates(..)` was called explicitly (an explicit
+    /// list conflicts with a non-hybrid kernel override).
+    candidates_set: bool,
     records: Option<&'r RecordStore>,
     panel_rows: usize,
     reorder: Option<ReorderKind>,
     tiling: Option<TileCols>,
+    plan_cache: Option<PathBuf>,
 }
 
 impl<T: Scalar> SpmvEngine<T> {
@@ -160,21 +149,49 @@ impl<T: Scalar> SpmvEngine<T> {
             numa_split: false,
             kernel: None,
             candidates: KernelKind::SPC5_KERNELS.to_vec(),
+            candidates_set: false,
             records: None,
             panel_rows: crate::formats::hybrid::DEFAULT_PANEL_ROWS,
             reorder: None,
             tiling: None,
+            plan_cache: None,
         }
+    }
+
+    /// Instantiates an engine from a previously inspected plan —
+    /// the executor half: conversion and runtime wiring only, no
+    /// selection. Fails when `csr` does not match the plan's
+    /// [`MatrixFingerprint`] (the plan was inspected on a different
+    /// matrix) or when the plan is internally inconsistent.
+    pub fn from_plan(csr: Csr<T>, plan: &SpmvPlan) -> anyhow::Result<Self> {
+        let fp = MatrixFingerprint::of(&csr);
+        anyhow::ensure!(
+            fp == plan.fingerprint,
+            "plan fingerprint mismatch: plan was inspected on {} but this \
+             matrix is {} — refusing to instantiate",
+            plan.fingerprint.key(),
+            fp.key()
+        );
+        // The plan crossed a serialization boundary: re-validate its
+        // schedule during conversion.
+        Self::instantiate(csr, plan.clone(), None, false)
     }
 
     /// The kernel serving this matrix.
     pub fn kernel(&self) -> KernelKind {
-        self.kernel
+        self.plan.kernel
     }
 
     /// Predicted GFlop/s, when the predictor made the choice.
     pub fn predicted_gflops(&self) -> Option<f64> {
-        self.predicted_gflops
+        self.plan.predicted_gflops
+    }
+
+    /// The plan this engine executes (inspect once, introspect
+    /// forever: serialize it with [`SpmvPlan::to_json`] to reuse the
+    /// decision elsewhere).
+    pub fn plan(&self) -> &SpmvPlan {
+        &self.plan
     }
 
     /// The bound matrix.
@@ -184,12 +201,12 @@ impl<T: Scalar> SpmvEngine<T> {
 
     /// Worker threads.
     pub fn threads(&self) -> usize {
-        self.threads
+        self.plan.threads
     }
 
     /// The engine's persistent worker pool (`None` when sequential).
-    /// Shared by the β runtime, the chunked CSR path, the solvers and
-    /// the serving layer for the engine's whole lifetime.
+    /// Shared by every parallel storage, the solvers and the serving
+    /// layer for the engine's whole lifetime.
     pub fn pool(&self) -> Option<&Arc<WorkerPool>> {
         self.pool.as_ref()
     }
@@ -199,41 +216,42 @@ impl<T: Scalar> SpmvEngine<T> {
         self.reorder.as_ref().map(|r| r.kind)
     }
 
-    /// For hybrid engines: the compiled panel schedule.
+    /// The unified storage executor.
+    pub fn storage(&self) -> &dyn SparseStorage<T> {
+        &*self.storage
+    }
+
+    /// For hybrid engines: the compiled panel schedule (downcast
+    /// convenience over [`SpmvEngine::storage`]).
     pub fn hybrid(&self) -> Option<&HybridMatrix<T>> {
-        match &self.storage {
-            Storage::Hybrid { hm, .. } => Some(hm),
-            _ => None,
-        }
+        self.storage.as_any().downcast_ref::<HybridMatrix<T>>()
     }
 
-    /// For tiled β engines: the `(panel, tile)` schedule.
+    /// For tiled β engines: the `(panel, tile)` schedule (downcast
+    /// convenience).
     pub fn tiled(&self) -> Option<&TiledMatrix<T>> {
-        match &self.storage {
-            Storage::TiledBlock { tm, .. } => Some(tm),
-            _ => None,
-        }
+        let any = self.storage.as_any();
+        any.downcast_ref::<TiledMatrix<T>>().or_else(|| {
+            match any.downcast_ref::<BetaTestStorage<T>>() {
+                Some(BetaTestStorage::Tiled(tm)) => Some(tm),
+                _ => None,
+            }
+        })
     }
 
-    /// For tiled hybrid engines: the tiled segment schedule.
+    /// For tiled hybrid engines: the tiled segment schedule (downcast
+    /// convenience).
     pub fn tiled_hybrid(&self) -> Option<&TiledHybrid<T>> {
-        match &self.storage {
-            Storage::TiledHybrid { th, .. } => Some(th),
-            _ => None,
-        }
+        self.storage.as_any().downcast_ref::<TiledHybrid<T>>()
     }
 
     /// Resolved column tile width, when the engine runs cache-blocked
     /// (`None` = flat schedule).
     pub fn tile_cols(&self) -> Option<usize> {
-        match &self.storage {
-            Storage::TiledBlock { tm, .. } => Some(tm.tile_cols),
-            Storage::TiledHybrid { th, .. } => Some(th.tile_cols),
-            _ => None,
-        }
+        self.storage.tile_cols()
     }
 
-    /// `y += A·x` through the chosen kernel and runtime. When the
+    /// `y += A·x` through the planned kernel and runtime. When the
     /// engine was built with a reordering, `x`/`y` stay in the
     /// caller's original index space — the permutation is applied
     /// internally around the product.
@@ -255,46 +273,28 @@ impl<T: Scalar> SpmvEngine<T> {
         }
     }
 
-    /// `y += B·x` in the bound (possibly permuted) index space.
+    /// The pooled execution context, when this engine both has a pool
+    /// and a chunked storage split (self-scheduling storages like the
+    /// parallel β runtime keep their split internal and run through
+    /// the sequential entry point).
+    fn pool_exec(&self) -> Option<PoolExec<'_>> {
+        let pool = self.pool.as_deref()?;
+        if self.chunks.is_empty() {
+            return None;
+        }
+        Some(PoolExec {
+            pool,
+            chunks: &self.chunks,
+            scratch_attach: self.scratch_attach,
+        })
+    }
+
+    /// `y += B·x` in the bound (possibly permuted) index space — one
+    /// trait call, no per-kernel dispatch.
     fn spmv_permuted(&self, x: &[T], y: &mut [T]) {
-        match &self.storage {
-            Storage::Block(bm) => spmv_block(
-                bm,
-                x,
-                y,
-                matches!(self.kernel, KernelKind::BetaTest(..)),
-            ),
-            Storage::BlockParallel(p) => p.spmv(x, y),
-            Storage::Csr { chunks } => {
-                if chunks.is_empty() {
-                    csr_kernel::spmv(&self.csr, x, y);
-                } else {
-                    self.spmv_csr_parallel(chunks, x, y);
-                }
-            }
-            Storage::Csr5(m) => m.spmv(x, y),
-            Storage::Hybrid { hm, chunks } => {
-                if chunks.is_empty() {
-                    hm.spmv(x, y);
-                } else {
-                    self.hybrid_parallel(hm, chunks, x, y, 1);
-                }
-            }
-            Storage::TiledBlock { tm, chunks } => {
-                let test = matches!(self.kernel, KernelKind::BetaTest(..));
-                if chunks.is_empty() {
-                    tm.spmv(x, y, test);
-                } else {
-                    self.tiled_block_parallel(tm, chunks, x, y, 1, test);
-                }
-            }
-            Storage::TiledHybrid { th, chunks } => {
-                if chunks.is_empty() {
-                    th.spmv(x, y);
-                } else {
-                    self.tiled_hybrid_parallel(th, chunks, x, y, 1);
-                }
-            }
+        match self.pool_exec() {
+            Some(exec) => self.storage.spmv_pooled(exec, x, y),
+            None => self.storage.spmv_seq(x, y),
         }
     }
 
@@ -309,9 +309,8 @@ impl<T: Scalar> SpmvEngine<T> {
     /// [`crate::kernels::spmm`]), `y` likewise `[rows × k]`. The block
     /// storages traverse the matrix **once** for all `k` vectors — the
     /// batching lever the serving layer uses; the CSR/CSR5 baselines
-    /// fall back to `k` single-vector passes. For `BetaTest` kernels
-    /// the `k > 1` path uses the standard SpMM traversal (Algorithm 2
-    /// has no multi-RHS form); results are identical.
+    /// fall back to `k` single-vector passes through storage-owned
+    /// scratch.
     pub fn spmm(&self, x: &[T], y: &mut [T], k: usize) {
         assert!(k > 0);
         assert_eq!(x.len(), self.csr.cols * k, "x must be cols*k");
@@ -346,61 +345,7 @@ impl<T: Scalar> SpmvEngine<T> {
 
     /// Multi-RHS product in the bound (possibly permuted) index space.
     fn spmm_permuted(&self, x: &[T], y: &mut [T], k: usize) {
-        match &self.storage {
-            Storage::Block(bm) => spmm::spmm_auto(bm, x, y, k),
-            Storage::BlockParallel(p) => p.spmm(x, y, k),
-            Storage::Hybrid { hm, chunks } => {
-                if chunks.is_empty() {
-                    hm.spmm(x, y, k);
-                } else {
-                    self.hybrid_parallel(hm, chunks, x, y, k);
-                }
-            }
-            Storage::TiledBlock { tm, chunks } => {
-                let test = matches!(self.kernel, KernelKind::BetaTest(..));
-                if chunks.is_empty() {
-                    tm.spmm(x, y, k);
-                } else {
-                    self.tiled_block_parallel(tm, chunks, x, y, k, test);
-                }
-            }
-            Storage::TiledHybrid { th, chunks } => {
-                if chunks.is_empty() {
-                    th.spmm(x, y, k);
-                } else {
-                    self.tiled_hybrid_parallel(th, chunks, x, y, k);
-                }
-            }
-            Storage::Csr { .. } | Storage::Csr5(_) => {
-                // No native multi-RHS kernel for the baselines: run k
-                // de-interleaved single-vector products through
-                // engine-owned scratch (allocating two vectors per
-                // batch here used to be the serving layer's hot-path
-                // allocation).
-                let (rows, cols) = (self.csr.rows, self.csr.cols);
-                let mut guard = self
-                    .baseline_spmm_scratch
-                    .lock()
-                    .expect("spmm scratch poisoned");
-                let (xj, yj) = &mut *guard;
-                xj.clear();
-                xj.resize(cols, T::ZERO);
-                yj.clear();
-                yj.resize(rows, T::ZERO);
-                for j in 0..k {
-                    for c in 0..cols {
-                        xj[c] = x[c * k + j];
-                    }
-                    yj.iter_mut().for_each(|v| *v = T::ZERO);
-                    // `x` is already in the bound index space here, so
-                    // stay below the reorder wrapper.
-                    self.spmv_permuted(xj, yj);
-                    for r in 0..rows {
-                        y[r * k + j] += yj[r];
-                    }
-                }
-            }
-        }
+        self.storage.spmm(self.pool_exec(), x, y, k);
     }
 
     /// Multi-RHS `Y = A·X` (zeroing first).
@@ -414,144 +359,168 @@ impl<T: Scalar> SpmvEngine<T> {
         paper_profile(&self.csr)
     }
 
-    /// Parallel hybrid pass: each pool worker owns a contiguous run of
-    /// schedule segments (balanced by nnz at build time) and writes the
-    /// disjoint `y` rows those segments cover — the same syncless-merge
-    /// shape as the other parallel paths. Serves both SpMV (`k == 1`)
-    /// and SpMM (`k > 1`) epochs.
-    fn hybrid_parallel(
-        &self,
-        hm: &HybridMatrix<T>,
-        chunks: &[(usize, usize)],
-        x: &[T],
-        y: &mut [T],
-        k: usize,
-    ) {
-        let pool = self.pool.as_ref().expect("parallel hybrid needs the pool");
-        debug_assert_eq!(chunks.len(), pool.n_threads());
-        let y_all = SendSlice::new(y);
-        pool.run(|ctx: crate::parallel::WorkerCtx<'_>| {
-            let (s0, s1) = chunks[ctx.tid];
-            for seg in &hm.segments[s0..s1] {
-                // SAFETY: segments are ordered and disjoint in rows, and
-                // chunks are contiguous disjoint segment ranges, so no
-                // two workers touch the same `y` rows; the borrow
-                // outlives the blocked `run` call.
-                let part = unsafe {
-                    y_all.subslice_mut(seg.row_begin * k, seg.row_end * k)
-                };
-                if k == 1 {
-                    seg.spmv(x, part);
+    /// The executor half: converts `csr` into the planned storage and
+    /// wires the runtime. No selection, no records — everything the
+    /// build needs is in the plan. `pre` carries the already-permuted
+    /// matrix when the caller's inspection just computed it (so
+    /// `build()` pays the reordering once); `trusted_schedule` is set
+    /// only for schedules produced in-process this call — anything
+    /// that crossed a serialization boundary is re-validated.
+    fn instantiate(
+        csr: Csr<T>,
+        plan: SpmvPlan,
+        pre: Option<(Csr<T>, ReorderState<T>)>,
+        trusted_schedule: bool,
+    ) -> anyhow::Result<Self> {
+        // Build-time reordering: permute first so conversion sees the
+        // same improved shape the inspection ranked.
+        let (csr, reorder_state) = match pre {
+            Some((permuted, st)) => {
+                debug_assert_eq!(Some(st.kind), plan.reorder);
+                (permuted, Some(st))
+            }
+            None => match plan.reorder {
+                None => (csr, None),
+                Some(ReorderKind::Rcm) => {
+                    anyhow::ensure!(
+                        csr.rows == csr.cols,
+                        "RCM reordering needs a square matrix \
+                         ({}x{} given)",
+                        csr.rows,
+                        csr.cols
+                    );
+                    let p = reorder::cuthill_mckee(&csr);
+                    let permuted = reorder::permute(&csr, &p, &p);
+                    let st =
+                        ReorderState::new(ReorderKind::Rcm, p.clone(), p);
+                    (permuted, Some(st))
+                }
+                Some(ReorderKind::ColPack) => {
+                    let rows = Permutation::identity(csr.rows);
+                    let cols = reorder::column_pack(&csr);
+                    let permuted = reorder::permute(&csr, &rows, &cols);
+                    let st =
+                        ReorderState::new(ReorderKind::ColPack, rows, cols);
+                    (permuted, Some(st))
+                }
+            },
+        };
+        let csr = Arc::new(csr);
+        let threads = plan.threads;
+
+        // One persistent pool per engine lifetime: spawned here, shared
+        // by whichever parallel path the planned kernel needs, reused
+        // by every solver iteration and service batch afterwards. CSR5
+        // has no parallel path (the reference kernel carries open-row
+        // state across tiles), so it never gets idle parked workers.
+        let parallel_kernel = !matches!(plan.kernel, KernelKind::Csr5);
+        let pool = (threads > 1 && parallel_kernel)
+            .then(|| Arc::new(WorkerPool::new(threads)));
+
+        let storage: Box<dyn SparseStorage<T>> = match plan.kernel {
+            KernelKind::Csr => Box::new(CsrStorage::new(Arc::clone(&csr))),
+            KernelKind::Csr5 => {
+                Box::new(Csr5Storage::new(csr5::Csr5Matrix::from_csr(&csr)))
+            }
+            KernelKind::Hybrid | KernelKind::Tiled(_) => {
+                // The schedule was planned at inspection; conversion
+                // reproduces it segment for segment. Deserialized
+                // schedules are re-validated, in-process ones skip the
+                // second O(nnz) walk.
+                let hm = if trusted_schedule {
+                    HybridMatrix::from_schedule_trusted(
+                        &csr,
+                        plan.panel_rows,
+                        &plan.schedule,
+                    )?
                 } else {
-                    seg.spmm(x, part, k);
+                    HybridMatrix::from_schedule(
+                        &csr,
+                        plan.panel_rows,
+                        &plan.schedule,
+                    )?
+                };
+                match plan.tile_cols {
+                    Some(tc) => Box::new(TiledHybrid::from_hybrid(
+                        &hm,
+                        TileCols::Fixed(tc),
+                    )?),
+                    None => {
+                        anyhow::ensure!(
+                            !matches!(plan.kernel, KernelKind::Tiled(_)),
+                            "plan: tiled kernel without a resolved \
+                             tile_cols"
+                        );
+                        Box::new(hm)
+                    }
                 }
             }
-        });
-    }
-
-    /// Parallel tiled-β pass: the 2-D `(panel, tile)` schedule on the
-    /// pool. Workers own disjoint contiguous **row-panel** ranges
-    /// (balanced by nnz at build time) so no two workers touch the
-    /// same `y` rows and no atomics are needed; each worker walks its
-    /// panels' column tiles as an inner sequential loop, which is what
-    /// keeps its `x` window cache-resident.
-    fn tiled_block_parallel(
-        &self,
-        tm: &TiledMatrix<T>,
-        chunks: &[(usize, usize)],
-        x: &[T],
-        y: &mut [T],
-        k: usize,
-        test: bool,
-    ) {
-        let pool = self.pool.as_ref().expect("parallel tiled needs the pool");
-        debug_assert_eq!(chunks.len(), pool.n_threads());
-        let y_all = SendSlice::new(y);
-        let attach = self.scratch_attach;
-        pool.run(|ctx: crate::parallel::WorkerCtx<'_>| {
-            let (p0, p1) = chunks[ctx.tid];
-            if p0 == p1 {
-                return;
-            }
-            let row_begin = tm.panels[p0].row_begin;
-            let row_end = tm.panels[p1 - 1].row_end;
-            // SAFETY: panels are ordered and disjoint in rows and
-            // chunks are contiguous disjoint panel ranges, so no two
-            // workers touch the same `y` rows; the borrow outlives the
-            // blocked `run` call.
-            let part =
-                unsafe { y_all.subslice_mut(row_begin * k, row_end * k) };
-            if k == 1 {
-                tm.spmv_panels(p0, p1, x, part, test);
-            } else {
-                let sums =
-                    ctx.locals.get_or_insert_with(attach, Vec::<T>::new);
-                tm.spmm_panels(p0, p1, x, part, k, sums);
-            }
-        });
-    }
-
-    /// Parallel tiled-hybrid pass: workers own disjoint contiguous
-    /// runs of tiled segments (the same nnz-balanced split as the flat
-    /// hybrid path); within a segment the `(panel, tile)` walk is
-    /// sequential for locality.
-    fn tiled_hybrid_parallel(
-        &self,
-        th: &TiledHybrid<T>,
-        chunks: &[(usize, usize)],
-        x: &[T],
-        y: &mut [T],
-        k: usize,
-    ) {
-        let pool = self.pool.as_ref().expect("parallel tiled needs the pool");
-        debug_assert_eq!(chunks.len(), pool.n_threads());
-        let y_all = SendSlice::new(y);
-        let attach = self.scratch_attach;
-        pool.run(|ctx: crate::parallel::WorkerCtx<'_>| {
-            let (s0, s1) = chunks[ctx.tid];
-            let sums =
-                ctx.locals.get_or_insert_with(attach, Vec::<T>::new);
-            for seg in &th.segments[s0..s1] {
-                // SAFETY: segments are ordered and disjoint in rows and
-                // chunks are contiguous disjoint segment ranges; the
-                // borrow outlives the blocked `run` call.
-                let part = unsafe {
-                    y_all.subslice_mut(seg.row_begin * k, seg.row_end * k)
-                };
-                if k == 1 {
-                    seg.spmv(x, part);
-                } else {
-                    seg.spmm(x, part, k, sums);
+            KernelKind::Beta(..) | KernelKind::BetaTest(..) => {
+                let bs = plan.kernel.block_size().expect("β kernel has a size");
+                let test = matches!(plan.kernel, KernelKind::BetaTest(..));
+                let block = csr_to_block(&csr, bs)?;
+                match plan.tile_cols {
+                    // Cache-blocked β: `(panel, tile)` spans over one
+                    // converted block matrix. Parallelism is the 2-D
+                    // panel split on the pool (the NUMA array-split
+                    // strategy has no tiled form and is not applied
+                    // here).
+                    Some(tc) => {
+                        let tm = TiledMatrix::from_block(
+                            &block,
+                            plan.panel_rows,
+                            tc,
+                        )?;
+                        if test {
+                            Box::new(BetaTestStorage::Tiled(tm))
+                        } else {
+                            Box::new(tm)
+                        }
+                    }
+                    None => match &pool {
+                        Some(pool) => {
+                            let strategy = if plan.numa_split {
+                                ParallelStrategy::NumaSplit
+                            } else {
+                                ParallelStrategy::Shared
+                            };
+                            Box::new(ParallelSpmv::with_pool(
+                                block,
+                                Arc::clone(pool),
+                                strategy,
+                                test,
+                            ))
+                        }
+                        None => {
+                            if test {
+                                Box::new(BetaTestStorage::Flat(block))
+                            } else {
+                                Box::new(block)
+                            }
+                        }
+                    },
                 }
             }
-        });
-    }
+        };
 
-    /// Row-chunked parallel CSR: each **pool** worker owns a disjoint
-    /// contiguous row range (balanced by nnz at build time) and writes
-    /// its own `y` slice — same syncless-merge shape as the β runtime,
-    /// on the same persistent workers (no per-call spawn).
-    fn spmv_csr_parallel(
-        &self,
-        chunks: &[(usize, usize)],
-        x: &[T],
-        y: &mut [T],
-    ) {
-        assert_eq!(x.len(), self.csr.cols);
-        assert_eq!(y.len(), self.csr.rows);
-        let pool = self.pool.as_ref().expect("chunked CSR needs the pool");
-        debug_assert_eq!(chunks.len(), pool.n_threads());
-        let y_all = SendSlice::new(y);
-        pool.run(|ctx: crate::parallel::WorkerCtx<'_>| {
-            let (r0, r1) = chunks[ctx.tid];
-            if r0 == r1 {
-                return;
-            }
-            // SAFETY: chunks are contiguous and disjoint across
-            // workers; the borrow outlives the blocked `run` call.
-            let part = unsafe { y_all.subslice_mut(r0, r1) };
-            csr_kernel::spmv_rows(&self.csr, r0, r1, x, part);
-        });
+        // The storage's own work split, balanced once here — the hot
+        // path never re-balances. Empty for sequential and
+        // self-scheduling storages.
+        let chunks = if pool.is_some() {
+            storage.par_split(threads)
+        } else {
+            Vec::new()
+        };
+
+        Ok(SpmvEngine {
+            csr,
+            plan,
+            storage,
+            chunks,
+            pool,
+            reorder: reorder_state,
+            scratch_attach: crate::parallel::pool::next_attach_id(),
+        })
     }
 }
 
@@ -575,9 +544,13 @@ impl<'r, T: Scalar> SpmvEngineBuilder<'r, T> {
         self
     }
 
-    /// Candidate kernels for predictor-driven selection.
+    /// Candidate kernels for predictor-driven selection (and β sizes
+    /// for the hybrid panel compiler). Conflicts with a non-hybrid
+    /// explicit [`SpmvEngineBuilder::kernel`] override — the override
+    /// leaves nothing to select.
     pub fn candidates(mut self, kinds: &[KernelKind]) -> Self {
         self.candidates = kinds.to_vec();
+        self.candidates_set = true;
         self
     }
 
@@ -593,8 +566,9 @@ impl<'r, T: Scalar> SpmvEngineBuilder<'r, T> {
     /// cache-blocked, each `(panel, tile)` pass touching only an
     /// `n`-column window of `x`. `n == 0` means auto-size (the same
     /// spelling as `tiled(0)`). Applies to β kernels (tiled block
-    /// spans) and to the hybrid schedule (every segment tiled); the
-    /// CSR/CSR5 baselines have no tiled form and ignore it.
+    /// spans) and to the hybrid schedule (every segment tiled); an
+    /// explicit CSR/CSR5 kernel has no tiled form and rejects it at
+    /// plan time.
     pub fn tile_cols(mut self, n: usize) -> Self {
         self.tiling = Some(if n == 0 {
             TileCols::Auto
@@ -632,62 +606,126 @@ impl<'r, T: Scalar> SpmvEngineBuilder<'r, T> {
             numa_split: self.numa_split,
             kernel: self.kernel,
             candidates: self.candidates,
+            candidates_set: self.candidates_set,
             records: Some(store),
             panel_rows: self.panel_rows,
             reorder: self.reorder,
             tiling: self.tiling,
+            plan_cache: self.plan_cache,
         }
     }
 
-    /// Selects the kernel (override > predictor > β(1,8) default),
-    /// converts the storage once, and returns the ready engine.
-    pub fn build(self) -> anyhow::Result<SpmvEngine<T>> {
-        let SpmvEngineBuilder {
-            csr,
-            threads,
-            numa_split,
-            kernel,
-            candidates,
-            records,
-            panel_rows,
-            reorder: reorder_kind,
-            tiling,
-        } = self;
+    /// Persistent plan cache: `build()` first looks up a plan for this
+    /// matrix's fingerprint (and thread count) in the JSON store at
+    /// `path` and instantiates from it — skipping inspection entirely
+    /// — when the cached plan is compatible with the builder's
+    /// settings; on a miss it plans, stores and saves. A missing file
+    /// is an empty cache.
+    pub fn plan_cache(mut self, path: impl Into<PathBuf>) -> Self {
+        self.plan_cache = Some(path.into());
+        self
+    }
 
-        // Build-time reordering: permute first so block-fill profiling,
-        // kernel selection and conversion all see the improved shape.
-        let (csr, reorder_state) = match reorder_kind {
-            None => (csr, None),
+    /// The **inspection** phase: runs the predictor/analysis and
+    /// resolves every build decision into a serializable [`SpmvPlan`]
+    /// without converting anything. `build()` is exactly this followed
+    /// by [`SpmvEngine::from_plan`]-style instantiation.
+    pub fn plan(&self) -> anyhow::Result<SpmvPlan> {
+        Ok(self.inspect()?.0)
+    }
+
+    /// [`SpmvEngineBuilder::plan`] plus the permuted matrix and its
+    /// permutations when a reordering is configured — `build()` hands
+    /// them to instantiation so the permutation is computed once.
+    #[allow(clippy::type_complexity)]
+    fn inspect(
+        &self,
+    ) -> anyhow::Result<(SpmvPlan, Option<(Csr<T>, ReorderState<T>)>)> {
+        // --- configuration conflicts fail at inspection time. ---
+        if let Some(k) = self.kernel {
+            if self.candidates_set
+                && !matches!(k, KernelKind::Hybrid | KernelKind::Tiled(_))
+            {
+                anyhow::bail!(
+                    "explicit kernel {k} conflicts with candidates(..): \
+                     the override leaves nothing to select (candidates \
+                     only feed the hybrid/tiled panel compiler)"
+                );
+            }
+            if matches!(k, KernelKind::Csr | KernelKind::Csr5)
+                && self.tiling.is_some()
+            {
+                anyhow::bail!(
+                    "tile_cols/tile_auto has no effect on the {k} \
+                     baseline: it has no tiled form"
+                );
+            }
+            if let Some(bs) = k.block_size() {
+                bs.validate_for::<T>()?;
+            }
+        }
+        let needs_panels = self.tiling.is_some()
+            || matches!(
+                self.kernel,
+                Some(KernelKind::Hybrid | KernelKind::Tiled(_))
+            );
+        if needs_panels && (self.panel_rows == 0 || self.panel_rows % 8 != 0)
+        {
+            anyhow::bail!(
+                "panel_rows must be a positive multiple of 8, got {}",
+                self.panel_rows
+            );
+        }
+
+        // Fingerprint the matrix the caller holds (pre-reorder): that
+        // is what `from_plan` will be handed.
+        let fingerprint = MatrixFingerprint::of(&self.csr);
+
+        // Inspection sees the reordered shape (selection and panel
+        // ranking must rank what conversion will convert); the permuted
+        // matrix is returned so `build()` converts it directly instead
+        // of permuting a second time.
+        let pre: Option<(Csr<T>, ReorderState<T>)> = match self.reorder {
+            None => None,
             Some(ReorderKind::Rcm) => {
                 anyhow::ensure!(
-                    csr.rows == csr.cols,
-                    "RCM reordering needs a square matrix \
-                     ({}x{} given)",
-                    csr.rows,
-                    csr.cols
+                    self.csr.rows == self.csr.cols,
+                    "RCM reordering needs a square matrix ({}x{} given)",
+                    self.csr.rows,
+                    self.csr.cols
                 );
-                let p = reorder::cuthill_mckee(&csr);
-                let permuted = reorder::permute(&csr, &p, &p);
+                let p = reorder::cuthill_mckee(&self.csr);
+                let permuted = reorder::permute(&self.csr, &p, &p);
                 let st = ReorderState::new(ReorderKind::Rcm, p.clone(), p);
-                (permuted, Some(st))
+                Some((permuted, st))
             }
             Some(ReorderKind::ColPack) => {
-                let rows = Permutation::identity(csr.rows);
-                let cols = reorder::column_pack(&csr);
-                let permuted = reorder::permute(&csr, &rows, &cols);
+                let rows = Permutation::identity(self.csr.rows);
+                let cols = reorder::column_pack(&self.csr);
+                let permuted = reorder::permute(&self.csr, &rows, &cols);
                 let st = ReorderState::new(ReorderKind::ColPack, rows, cols);
-                (permuted, Some(st))
+                Some((permuted, st))
             }
         };
+        let csr_view: &Csr<T> = match &pre {
+            Some((permuted, _)) => permuted,
+            None => &self.csr,
+        };
 
-        let (kernel, predicted) = match kernel {
+        // Kernel selection: override > predictor > β(1,8) default.
+        let (kernel, predicted) = match self.kernel {
             Some(k) => (k, None),
             None => {
-                let sel = records.and_then(|store| {
-                    if threads > 1 {
-                        select_parallel(&csr, store, &candidates, threads)
+                let sel = self.records.and_then(|store| {
+                    if self.threads > 1 {
+                        select_parallel(
+                            csr_view,
+                            store,
+                            &self.candidates,
+                            self.threads,
+                        )
                     } else {
-                        select_sequential(&csr, store, &candidates)
+                        select_sequential(csr_view, store, &self.candidates)
                     }
                 });
                 match sel {
@@ -697,167 +735,134 @@ impl<'r, T: Scalar> SpmvEngineBuilder<'r, T> {
             }
         };
 
-        // One persistent pool per engine lifetime: spawned here, shared
-        // by whichever parallel path the kernel choice needs, reused by
-        // every solver iteration and service batch afterwards. CSR5 has
-        // no parallel path (the reference kernel carries open-row state
-        // across tiles), so it never gets idle parked workers.
-        let parallel_kernel = !matches!(kernel, KernelKind::Csr5);
-        let pool = (threads > 1 && parallel_kernel)
-            .then(|| Arc::new(WorkerPool::new(threads)));
-
-        let storage = match kernel {
-            KernelKind::Csr => {
-                let chunks = if threads > 1 {
-                    csr_row_chunks(&csr, threads)
-                } else {
-                    Vec::new()
-                };
-                Storage::Csr { chunks }
+        // Resolve the column tile width now, so instantiation does not
+        // depend on the executing machine's detected cache. An inline
+        // `tiled(n)` width wins over the builder's tiling setting;
+        // `tiled` alone defers to it, defaulting to auto. A
+        // predictor-selected baseline ignores the tiling lever (it has
+        // no tiled form).
+        let tile_cols: Option<usize> = match kernel {
+            KernelKind::Tiled(w) => Some(if w > 0 {
+                w as usize
+            } else {
+                self.tiling
+                    .unwrap_or(TileCols::Auto)
+                    .resolve::<T>(csr_view.cols)
+            }),
+            KernelKind::Beta(..)
+            | KernelKind::BetaTest(..)
+            | KernelKind::Hybrid => {
+                self.tiling.map(|t| t.resolve::<T>(csr_view.cols))
             }
-            KernelKind::Csr5 => {
-                Storage::Csr5(csr5::Csr5Matrix::from_csr(&csr))
-            }
-            KernelKind::Hybrid => {
-                let hm = compile_hybrid(
-                    &csr, panel_rows, &candidates, records, threads,
-                )?;
-                match tiling {
-                    // builder.tile_cols / tile_auto lift the flat
-                    // hybrid schedule into the column-tiled world.
-                    Some(tc) => {
-                        let th = TiledHybrid::from_hybrid(&hm, tc)?;
-                        let chunks = if threads > 1 {
-                            nnz_chunks(th.segments.iter().map(|s| s.nnz), threads)
-                        } else {
-                            Vec::new()
-                        };
-                        Storage::TiledHybrid { th, chunks }
-                    }
-                    None => {
-                        let chunks = if threads > 1 {
-                            nnz_chunks(hm.segments.iter().map(|s| s.nnz), threads)
-                        } else {
-                            Vec::new()
-                        };
-                        Storage::Hybrid { hm, chunks }
-                    }
-                }
-            }
-            KernelKind::Tiled(w) => {
-                // The tiled kernel is the cache-blocked execution of
-                // the hybrid row-panel schedule. An inline width
-                // (`tiled(n)`) wins over the builder's tiling setting;
-                // `tiled` alone defers to it, defaulting to auto.
-                let hm = compile_hybrid(
-                    &csr, panel_rows, &candidates, records, threads,
-                )?;
-                let tc = if w > 0 {
-                    TileCols::Fixed(w as usize)
-                } else {
-                    tiling.unwrap_or(TileCols::Auto)
-                };
-                let th = TiledHybrid::from_hybrid(&hm, tc)?;
-                let chunks = if threads > 1 {
-                    nnz_chunks(th.segments.iter().map(|s| s.nnz), threads)
-                } else {
-                    Vec::new()
-                };
-                Storage::TiledHybrid { th, chunks }
-            }
-            KernelKind::Beta(..) | KernelKind::BetaTest(..) => {
-                let bs = kernel.block_size().expect("β kernel has a size");
-                match tiling {
-                    // Cache-blocked β: `(panel, tile)` spans over one
-                    // converted block matrix. Parallelism is the 2-D
-                    // panel split on the pool (the NUMA array-split
-                    // strategy has no tiled form and is not applied
-                    // here).
-                    Some(tcfg) => {
-                        let block = csr_to_block(&csr, bs)?;
-                        let tile_cols = tcfg.resolve::<T>(csr.cols);
-                        let tm = TiledMatrix::from_block(
-                            &block, panel_rows, tile_cols,
-                        )?;
-                        let chunks = if threads > 1 {
-                            nnz_chunks(tm.panels.iter().map(|p| p.nnz), threads)
-                        } else {
-                            Vec::new()
-                        };
-                        Storage::TiledBlock { tm, chunks }
-                    }
-                    None => {
-                        let block = csr_to_block(&csr, bs)?;
-                        let test =
-                            matches!(kernel, KernelKind::BetaTest(..));
-                        match &pool {
-                            Some(pool) => {
-                                let strategy = if numa_split {
-                                    ParallelStrategy::NumaSplit
-                                } else {
-                                    ParallelStrategy::Shared
-                                };
-                                Storage::BlockParallel(
-                                    ParallelSpmv::with_pool(
-                                        block,
-                                        Arc::clone(pool),
-                                        strategy,
-                                        test,
-                                    ),
-                                )
-                            }
-                            None => Storage::Block(block),
-                        }
-                    }
-                }
-            }
+            KernelKind::Csr | KernelKind::Csr5 => None,
         };
 
-        Ok(SpmvEngine {
-            csr,
-            kernel,
-            predicted_gflops: predicted,
-            storage,
-            threads,
-            pool,
-            reorder: reorder_state,
-            baseline_spmm_scratch: Mutex::new((Vec::new(), Vec::new())),
-            scratch_attach: crate::parallel::pool::next_attach_id(),
-        })
-    }
-}
+        // Rank the hybrid panels and record the compiled schedule, so
+        // instantiation needs neither records nor fitted surfaces.
+        let schedule = match kernel {
+            KernelKind::Hybrid | KernelKind::Tiled(_) => {
+                let cfg = HybridConfig {
+                    panel_rows: self.panel_rows,
+                    candidates: hybrid_candidates::<T>(&self.candidates),
+                    // Ask the schedule compiler for ≥ one segment per
+                    // worker, else a homogeneous matrix merges into a
+                    // single segment and parallelism collapses.
+                    split: self.threads,
+                };
+                let kinds: Vec<KernelKind> =
+                    std::iter::once(KernelKind::Csr)
+                        .chain(cfg.candidates.iter().map(|bs| {
+                            KernelKind::Beta(bs.r as u8, bs.c as u8)
+                        }))
+                        .collect();
+                let models = self.records.map(|store| {
+                    crate::predictor::select::fit_sequential(store, &kinds)
+                });
+                HybridMatrix::<T>::plan_schedule(
+                    csr_view,
+                    &cfg,
+                    models.as_ref(),
+                )?
+            }
+            _ => Vec::new(),
+        };
 
-/// Compiles the hybrid row-panel schedule for an engine build: the
-/// builder's candidate kernels filtered per precision, the schedule
-/// split sized to the worker count, and the predictor's fitted
-/// sequential GFlop/s surface supplied when records exist (the panel
-/// decision models single-span kernel speed). Shared by the flat
-/// hybrid and the tiled storages.
-fn compile_hybrid<T: Scalar>(
-    csr: &Csr<T>,
-    panel_rows: usize,
-    candidates: &[KernelKind],
-    records: Option<&RecordStore>,
-    threads: usize,
-) -> Result<HybridMatrix<T>, crate::formats::FormatError> {
-    let cfg = HybridConfig {
-        panel_rows,
-        candidates: hybrid_candidates::<T>(candidates),
-        // Ask the schedule compiler for ≥ one segment per worker, else
-        // a homogeneous matrix merges into a single segment and
-        // parallelism collapses.
-        split: threads,
-    };
-    let kinds: Vec<KernelKind> = std::iter::once(KernelKind::Csr)
-        .chain(
-            cfg.candidates
-                .iter()
-                .map(|bs| KernelKind::Beta(bs.r as u8, bs.c as u8)),
-        )
-        .collect();
-    let models = records
-        .map(|store| crate::predictor::select::fit_sequential(store, &kinds));
-    HybridMatrix::from_csr(csr, &cfg, models.as_ref())
+        Ok((
+            SpmvPlan {
+                version: PLAN_VERSION,
+                fingerprint,
+                kernel,
+                threads: self.threads,
+                numa_split: self.numa_split,
+                reorder: self.reorder,
+                panel_rows: self.panel_rows,
+                tile_cols,
+                predicted_gflops: predicted,
+                schedule,
+            },
+            pre,
+        ))
+    }
+
+    /// Whether a cached plan can serve this builder configuration
+    /// as-is (same runtime shape, and any explicit overrides agree).
+    fn plan_compatible(&self, p: &SpmvPlan) -> bool {
+        let tile_ok = match self.tiling {
+            Some(TileCols::Fixed(n)) => p.tile_cols == Some(n),
+            Some(TileCols::Auto) => p.tile_cols.is_some(),
+            None => {
+                matches!(p.kernel, KernelKind::Tiled(_))
+                    || p.tile_cols.is_none()
+            }
+        };
+        let kernel_ok = match self.kernel {
+            None => true,
+            Some(k) => k == p.kernel,
+        };
+        p.numa_split == self.numa_split
+            && p.reorder == self.reorder
+            && p.panel_rows == self.panel_rows
+            && kernel_ok
+            && tile_ok
+    }
+
+    /// Inspect + instantiate: plans (or loads a cached plan) and
+    /// converts the storage once, returning the ready engine.
+    pub fn build(self) -> anyhow::Result<SpmvEngine<T>> {
+        let (plan, pre, trusted) = match &self.plan_cache {
+            Some(path) => {
+                let mut cache = PlanCache::load(path)?;
+                let fp = MatrixFingerprint::of(&self.csr);
+                // Scan every entry for this matrix: distinct builder
+                // configurations coexist in one cache file, so the
+                // first *compatible* plan wins, not the first match.
+                let hit = cache
+                    .plans
+                    .iter()
+                    .find(|p| {
+                        p.fingerprint == fp
+                            && p.threads == self.threads
+                            && self.plan_compatible(p)
+                    })
+                    .cloned();
+                match hit {
+                    // Disk data: the schedule gets re-validated.
+                    Some(plan) => (plan, None, false),
+                    None => {
+                        let (plan, pre) = self.inspect()?;
+                        cache.insert(plan.clone());
+                        cache.save(path)?;
+                        (plan, pre, true)
+                    }
+                }
+            }
+            None => {
+                let (plan, pre) = self.inspect()?;
+                (plan, pre, true)
+            }
+        };
+        SpmvEngine::instantiate(self.csr, plan, pre, trusted)
+    }
 }
 
 /// β candidate sizes for the hybrid panel compiler: the builder's
@@ -881,31 +886,6 @@ fn hybrid_candidates<T: Scalar>(kinds: &[KernelKind]) -> Vec<BlockSize> {
     } else {
         sizes
     }
-}
-
-/// Splits an ordered work list into `n` contiguous runs of
-/// approximately equal weight via the paper's prefix rule — the one
-/// balancing routine behind the hybrid-segment, tiled-panel and
-/// tiled-segment parallel splits.
-fn nnz_chunks(
-    nnzs: impl Iterator<Item = usize>,
-    n: usize,
-) -> Vec<(usize, usize)> {
-    let mut prefix = vec![0u32];
-    let mut acc = 0u64;
-    for w in nnzs {
-        acc += w as u64;
-        prefix.push(u32::try_from(acc).expect("nnz fits the u32 prefix"));
-    }
-    balanced_prefix_split(&prefix, n)
-}
-
-/// Splits `0..rows` into `n` contiguous chunks with approximately equal
-/// nnz — the paper's balancing rule applied to the rowptr prefix (the
-/// same [`crate::parallel::balanced_prefix_split`] the β runtime uses
-/// on its block prefix).
-fn csr_row_chunks<T: Scalar>(csr: &Csr<T>, n: usize) -> Vec<(usize, usize)> {
-    crate::parallel::balanced_prefix_split(&csr.rowptr, n)
 }
 
 #[cfg(test)]
@@ -956,20 +936,6 @@ mod tests {
                     1e-9,
                     &format!("{kernel} t={threads}"),
                 );
-            }
-        }
-    }
-
-    #[test]
-    fn csr_row_chunks_cover_disjointly() {
-        let csr = suite::circuit(3_000, 3, 4, 11);
-        for n in [1usize, 2, 5, 16] {
-            let chunks = csr_row_chunks(&csr, n);
-            assert_eq!(chunks.len(), n);
-            assert_eq!(chunks[0].0, 0);
-            assert_eq!(chunks.last().unwrap().1, csr.rows);
-            for w in chunks.windows(2) {
-                assert_eq!(w[0].1, w[1].0);
             }
         }
     }
@@ -1230,6 +1196,11 @@ mod tests {
             .reorder(ReorderKind::Rcm)
             .build()
             .is_err());
+        // The pure inspection phase rejects it too.
+        assert!(SpmvEngine::builder(csr.clone())
+            .reorder(ReorderKind::Rcm)
+            .plan()
+            .is_err());
         // Column packing has no squareness requirement.
         SpmvEngine::builder(csr)
             .reorder(ReorderKind::ColPack)
@@ -1330,14 +1301,16 @@ mod tests {
                 );
             }
         }
-        // Baselines have no tiled form: the setting is ignored, not an
-        // error.
-        let e = SpmvEngine::builder(csr.clone())
-            .kernel(KernelKind::Csr)
-            .tile_cols(96)
-            .build()
-            .unwrap();
-        assert_eq!(e.tile_cols(), None);
+        // Baselines have no tiled form: requesting one is a plan-time
+        // configuration error, not a silent no-op (this used to be
+        // ignored).
+        for kernel in [KernelKind::Csr, KernelKind::Csr5] {
+            let err = SpmvEngine::builder(csr.clone())
+                .kernel(kernel)
+                .tile_cols(96)
+                .build();
+            assert!(err.is_err(), "{kernel} must reject tile_cols");
+        }
         // tile_cols(0) spells auto, consistently with `tiled(0)`.
         let e = SpmvEngine::builder(csr.clone())
             .kernel(KernelKind::Beta(2, 8))
@@ -1436,6 +1409,49 @@ mod tests {
                     &format!("t={threads} numa={numa}"),
                 );
             }
+        }
+    }
+
+    #[test]
+    fn kernel_and_candidates_conflict() {
+        let csr = suite::poisson2d(8);
+        // A non-hybrid explicit kernel leaves nothing to select.
+        let err = SpmvEngine::builder(csr.clone())
+            .kernel(KernelKind::Beta(2, 8))
+            .candidates(&[KernelKind::Beta(1, 8)])
+            .build();
+        assert!(err.is_err(), "kernel + candidates must conflict");
+        // Hybrid/tiled kernels legitimately consume candidates (the
+        // panel compiler selects per panel).
+        SpmvEngine::builder(csr.clone())
+            .kernel(KernelKind::Hybrid)
+            .candidates(&[KernelKind::Beta(1, 8), KernelKind::Beta(2, 8)])
+            .build()
+            .unwrap();
+        SpmvEngine::builder(csr)
+            .kernel(KernelKind::Tiled(128))
+            .candidates(&[KernelKind::Beta(1, 8)])
+            .build()
+            .unwrap();
+    }
+
+    #[test]
+    fn storage_reports_kernel_kind() {
+        // The unified storage agrees with the plan across classes.
+        let csr = suite::mixed_band_scatter(1_024, 7);
+        for kernel in [
+            KernelKind::Csr,
+            KernelKind::Csr5,
+            KernelKind::Beta(2, 4),
+            KernelKind::BetaTest(2, 4),
+            KernelKind::Hybrid,
+        ] {
+            let e = SpmvEngine::builder(csr.clone())
+                .kernel(kernel)
+                .build()
+                .unwrap();
+            assert_eq!(e.storage().kernel_kind(), kernel, "{kernel}");
+            e.storage().validate().unwrap();
         }
     }
 }

@@ -1,17 +1,20 @@
-//! L3 coordination: the [`SpmvEngine`] facade (stats → predict →
-//! convert → dispatch, built through the fluent
+//! L3 coordination: the [`SpmvEngine`] facade (inspect → plan →
+//! instantiate → execute, built through the fluent
 //! [`SpmvEngine::builder`] and serving every [`crate::KernelKind`]),
-//! the native Krylov solvers, and the request-loop service used by the
-//! `spmv_server` example. All of it generic over the precision
-//! ([`crate::scalar::Scalar`], `f64` by default).
+//! the serializable [`SpmvPlan`] / [`PlanCache`] inspector–executor
+//! artifacts, the native Krylov solvers, and the request-loop service
+//! used by the `spmv_server` example. All of it generic over the
+//! precision ([`crate::scalar::Scalar`], `f64` by default).
 
 pub mod cg;
 pub mod engine;
+pub mod plan;
 pub mod service;
 pub mod solvers;
 
 pub use cg::{cg_solve, CgReport};
 pub use engine::{SpmvEngine, SpmvEngineBuilder};
+pub use plan::{MatrixFingerprint, PlanCache, SpmvPlan};
 pub use service::{
     Request, Response, ServiceError, ServiceStats, SpmvService,
 };

@@ -1,0 +1,578 @@
+//! Inspector–executor plan artifacts: [`SpmvPlan`],
+//! [`MatrixFingerprint`] and the persistent [`PlanCache`].
+//!
+//! The paper's practical claim is that the best kernel can be
+//! *predicted from previous executions* — but a prediction that lives
+//! only inside an opaque `build()` call is re-paid on every repeat
+//! workload and can be neither inspected nor shipped. Following MKL's
+//! inspector–executor split (the paper's comparison target) and the
+//! format-selection literature, the plan is a first-class artifact:
+//!
+//! 1. **inspect** — [`crate::SpmvEngineBuilder::plan`] runs the cheap
+//!    scans, the predictor and the hybrid panel ranking, converting
+//!    nothing, and returns a plain [`SpmvPlan`];
+//! 2. **serialize** — [`SpmvPlan::to_json`] / [`SpmvPlan::from_json`]
+//!    round-trip the plan through serde-free JSON (the vendor set has
+//!    no serde), so plans travel between processes and machines;
+//! 3. **instantiate** — [`crate::SpmvEngine::from_plan`] converts the
+//!    storage exactly as planned, skipping selection entirely. A
+//!    [`MatrixFingerprint`] recorded in the plan refuses instantiation
+//!    against the wrong matrix;
+//! 4. **cache** — [`PlanCache`] persists `{fingerprint → plan}` as a
+//!    JSON store ([`crate::SpmvEngineBuilder::plan_cache`]), so the
+//!    predictor's "previous executions" survive as *executable plans*,
+//!    not just performance records.
+//!
+//! The plan records every decision the builder makes: the kernel kind
+//! (with resolved block size), the resolved column tile width, the
+//! compiled hybrid row-panel schedule (per-segment row range and
+//! kernel — so instantiation reproduces the schedule bit-for-bit
+//! without the predictor's fitted surfaces), the reorder kind, thread
+//! count, NUMA split and the predicted GFlop/s.
+
+use crate::formats::stats::count_blocks;
+use crate::formats::{BlockSize, PanelKernel, ScheduleEntry};
+use crate::kernels::KernelKind;
+use crate::matrix::reorder::ReorderKind;
+use crate::matrix::Csr;
+use crate::scalar::Scalar;
+use crate::util::json::Json;
+use std::path::Path;
+
+/// Current plan schema version.
+pub const PLAN_VERSION: u32 = 1;
+
+/// A cheap structural identity of a sparse matrix: dimensions, nnz and
+/// a hash of the block-occupancy profile (the six paper-size block
+/// counts — the same no-conversion scans the predictor features on)
+/// mixed with the element precision. Value-blind by design: every
+/// decision a plan records depends only on structure, so two matrices
+/// with identical sparsity patterns share plans — but **not** across
+/// precisions (resolved tile widths and valid β sizes differ between
+/// f32 and f64, so an f32 plan must refuse an f64 build rather than
+/// fail inside conversion).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MatrixFingerprint {
+    pub rows: usize,
+    pub cols: usize,
+    pub nnz: usize,
+    /// FNV-1a over the scalar's byte width and the `β(r,c)` block
+    /// counts of [`BlockSize::PAPER_SIZES`].
+    pub stats_hash: u64,
+}
+
+impl MatrixFingerprint {
+    /// Computes the fingerprint with the cheap block-count scans (no
+    /// conversion).
+    pub fn of<T: Scalar>(csr: &Csr<T>) -> MatrixFingerprint {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        let mut mix = |v: u64| {
+            for byte in v.to_le_bytes() {
+                h ^= byte as u64;
+                h = h.wrapping_mul(0x0000_0100_0000_01b3);
+            }
+        };
+        mix(std::mem::size_of::<T>() as u64);
+        for bs in BlockSize::PAPER_SIZES {
+            mix(count_blocks(csr, bs) as u64);
+        }
+        MatrixFingerprint {
+            rows: csr.rows,
+            cols: csr.cols,
+            nnz: csr.nnz(),
+            stats_hash: h,
+        }
+    }
+
+    /// A short stable key string (used by [`PlanCache`] reporting and
+    /// error messages).
+    pub fn key(&self) -> String {
+        format!(
+            "{}x{}/{}nnz/{:016x}",
+            self.rows, self.cols, self.nnz, self.stats_hash
+        )
+    }
+
+    fn to_json(self) -> Json {
+        Json::obj(vec![
+            ("rows", Json::Num(self.rows as f64)),
+            ("cols", Json::Num(self.cols as f64)),
+            ("nnz", Json::Num(self.nnz as f64)),
+            // u64 exceeds f64's 2^53 integer range: store as hex text.
+            ("stats_hash", Json::Str(format!("{:016x}", self.stats_hash))),
+        ])
+    }
+
+    fn from_json(v: &Json) -> anyhow::Result<MatrixFingerprint> {
+        let num = |k: &str| -> anyhow::Result<f64> {
+            v.get(k)
+                .and_then(|n| n.as_f64())
+                .ok_or_else(|| anyhow::anyhow!("fingerprint: missing {k}"))
+        };
+        let dim = |k: &str| -> anyhow::Result<usize> {
+            let n = num(k)?;
+            anyhow::ensure!(
+                n >= 0.0 && n.fract() == 0.0,
+                "fingerprint: {k} must be a non-negative integer, got {n}"
+            );
+            Ok(n as usize)
+        };
+        let hash_s = v
+            .get("stats_hash")
+            .and_then(|s| s.as_str())
+            .ok_or_else(|| anyhow::anyhow!("fingerprint: missing stats_hash"))?;
+        let stats_hash = u64::from_str_radix(hash_s, 16)
+            .map_err(|_| anyhow::anyhow!("fingerprint: bad stats_hash '{hash_s}'"))?;
+        Ok(MatrixFingerprint {
+            rows: dim("rows")?,
+            cols: dim("cols")?,
+            nnz: dim("nnz")?,
+            stats_hash,
+        })
+    }
+}
+
+/// Every decision an engine build makes, as a plain serializable
+/// record — see the module docs for the lifecycle.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SpmvPlan {
+    /// Schema version ([`PLAN_VERSION`]).
+    pub version: u32,
+    /// Identity of the matrix this plan was inspected on;
+    /// [`crate::SpmvEngine::from_plan`] refuses any other matrix.
+    pub fingerprint: MatrixFingerprint,
+    /// The selected kernel, block size resolved (e.g. `b(4,8)`,
+    /// `hybrid`, `tiled(4096)`).
+    pub kernel: KernelKind,
+    /// Worker threads the engine will run with (1 = sequential).
+    pub threads: usize,
+    /// NUMA-style array splitting for the parallel β path.
+    pub numa_split: bool,
+    /// Build-time reordering applied before profiling and conversion.
+    pub reorder: Option<ReorderKind>,
+    /// Rows per panel for the hybrid/tiled schedules.
+    pub panel_rows: usize,
+    /// Resolved column tile width when the plan executes cache-blocked
+    /// (`None` = flat schedule). Auto-sizing is resolved at *plan*
+    /// time, so instantiation does not depend on the executing
+    /// machine's detected cache.
+    pub tile_cols: Option<usize>,
+    /// Predicted GFlop/s when the predictor made the choice.
+    pub predicted_gflops: Option<f64>,
+    /// The compiled hybrid row-panel schedule (empty for non-hybrid
+    /// kernels): per-segment row range and panel kernel, so
+    /// instantiation reproduces the exact segments without records.
+    pub schedule: Vec<ScheduleEntry>,
+}
+
+impl SpmvPlan {
+    /// Serializes to JSON text.
+    pub fn to_json(&self) -> String {
+        let mut fields = vec![
+            ("version", Json::Num(self.version as f64)),
+            ("fingerprint", self.fingerprint.to_json()),
+            ("kernel", Json::Str(self.kernel.to_string())),
+            ("threads", Json::Num(self.threads as f64)),
+            ("numa_split", Json::Bool(self.numa_split)),
+            ("panel_rows", Json::Num(self.panel_rows as f64)),
+        ];
+        if let Some(r) = self.reorder {
+            fields.push(("reorder", Json::Str(r.to_string())));
+        }
+        if let Some(tc) = self.tile_cols {
+            fields.push(("tile_cols", Json::Num(tc as f64)));
+        }
+        if let Some(g) = self.predicted_gflops {
+            fields.push(("predicted_gflops", Json::Num(g)));
+        }
+        if !self.schedule.is_empty() {
+            let segs: Vec<Json> = self
+                .schedule
+                .iter()
+                .map(|s| {
+                    Json::obj(vec![
+                        ("row_begin", Json::Num(s.row_begin as f64)),
+                        ("row_end", Json::Num(s.row_end as f64)),
+                        ("kernel", Json::Str(s.kernel.to_string())),
+                    ])
+                })
+                .collect();
+            fields.push(("schedule", Json::Arr(segs)));
+        }
+        Json::obj(fields).to_string()
+    }
+
+    /// Parses from JSON text, rejecting malformed plans (unknown
+    /// kernel spellings, negative or fractional dimensions, missing
+    /// fields) with a descriptive error.
+    pub fn from_json(text: &str) -> anyhow::Result<SpmvPlan> {
+        let v = Json::parse(text)?;
+        Self::from_json_value(&v)
+    }
+
+    fn from_json_value(v: &Json) -> anyhow::Result<SpmvPlan> {
+        let num = |k: &str| -> anyhow::Result<f64> {
+            v.get(k)
+                .and_then(|n| n.as_f64())
+                .ok_or_else(|| anyhow::anyhow!("plan: missing {k}"))
+        };
+        let dim = |k: &str| -> anyhow::Result<usize> {
+            let n = num(k)?;
+            anyhow::ensure!(
+                n >= 0.0 && n.fract() == 0.0,
+                "plan: {k} must be a non-negative integer, got {n}"
+            );
+            Ok(n as usize)
+        };
+        let version = dim("version")? as u32;
+        anyhow::ensure!(
+            version >= 1 && version <= PLAN_VERSION,
+            "plan: unsupported version {version} (this build understands \
+             1..={PLAN_VERSION})"
+        );
+        let fingerprint = MatrixFingerprint::from_json(
+            v.get("fingerprint")
+                .ok_or_else(|| anyhow::anyhow!("plan: missing fingerprint"))?,
+        )?;
+        let kernel_s = v
+            .get("kernel")
+            .and_then(|s| s.as_str())
+            .ok_or_else(|| anyhow::anyhow!("plan: missing kernel"))?;
+        let kernel = KernelKind::parse(kernel_s).ok_or_else(|| {
+            anyhow::anyhow!("plan: unknown kernel '{kernel_s}'")
+        })?;
+        let threads = dim("threads")?.max(1);
+        let numa_split = matches!(v.get("numa_split"), Some(Json::Bool(true)));
+        let reorder = match v.get("reorder").and_then(|s| s.as_str()) {
+            None => None,
+            Some(r) => Some(ReorderKind::parse(r).ok_or_else(|| {
+                anyhow::anyhow!("plan: unknown reorder '{r}'")
+            })?),
+        };
+        let panel_rows = dim("panel_rows")?;
+        let tile_cols = match v.get("tile_cols") {
+            None => None,
+            Some(_) => {
+                let tc = dim("tile_cols")?;
+                anyhow::ensure!(tc > 0, "plan: tile_cols must be positive");
+                Some(tc)
+            }
+        };
+        let predicted_gflops =
+            v.get("predicted_gflops").and_then(|g| g.as_f64());
+        let mut schedule = Vec::new();
+        if let Some(arr) = v.get("schedule").and_then(|a| a.as_arr()) {
+            for (i, seg) in arr.iter().enumerate() {
+                let sdim = |k: &str| -> anyhow::Result<usize> {
+                    let n = seg.get(k).and_then(|n| n.as_f64()).ok_or_else(
+                        || anyhow::anyhow!("plan: segment {i}: missing {k}"),
+                    )?;
+                    anyhow::ensure!(
+                        n >= 0.0 && n.fract() == 0.0,
+                        "plan: segment {i}: {k} must be a non-negative \
+                         integer"
+                    );
+                    Ok(n as usize)
+                };
+                let ks = seg
+                    .get("kernel")
+                    .and_then(|s| s.as_str())
+                    .ok_or_else(|| {
+                        anyhow::anyhow!("plan: segment {i}: missing kernel")
+                    })?;
+                let kernel = PanelKernel::parse(ks).ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "plan: segment {i}: unknown panel kernel '{ks}'"
+                    )
+                })?;
+                schedule.push(ScheduleEntry {
+                    row_begin: sdim("row_begin")?,
+                    row_end: sdim("row_end")?,
+                    kernel,
+                });
+            }
+        }
+        Ok(SpmvPlan {
+            version,
+            fingerprint,
+            kernel,
+            threads,
+            numa_split,
+            reorder,
+            panel_rows,
+            tile_cols,
+            predicted_gflops,
+            schedule,
+        })
+    }
+
+    /// Saves the plan to a file.
+    pub fn save(&self, path: impl AsRef<Path>) -> anyhow::Result<()> {
+        std::fs::write(path, format!("{}\n", self.to_json()))?;
+        Ok(())
+    }
+
+    /// Loads a plan from a file.
+    pub fn load(path: impl AsRef<Path>) -> anyhow::Result<SpmvPlan> {
+        Self::from_json(&std::fs::read_to_string(path)?)
+    }
+}
+
+/// A persistent `{fingerprint → plan}` store: plan once, instantiate
+/// engines from the cache in milliseconds on every repeat workload.
+/// Distinct build configurations (threads, numa, reorder, panel rows,
+/// tiling, kernel) keep distinct entries — two services sharing one
+/// cache file with different settings do not evict each other — while
+/// re-planning the *same* configuration replaces its entry (latest
+/// wins, bounded growth).
+#[derive(Clone, Debug, Default)]
+pub struct PlanCache {
+    pub plans: Vec<SpmvPlan>,
+}
+
+/// Whether two plans describe the same build configuration (everything
+/// but the predicted speed and the compiled schedule).
+fn same_config(a: &SpmvPlan, b: &SpmvPlan) -> bool {
+    a.fingerprint == b.fingerprint
+        && a.threads == b.threads
+        && a.numa_split == b.numa_split
+        && a.reorder == b.reorder
+        && a.panel_rows == b.panel_rows
+        && a.tile_cols == b.tile_cols
+        && a.kernel == b.kernel
+}
+
+impl PlanCache {
+    pub fn new() -> PlanCache {
+        PlanCache::default()
+    }
+
+    /// The most recently inserted plan for a matrix at a thread count
+    /// (builders with stricter requirements filter the [`PlanCache::plans`]
+    /// list themselves).
+    pub fn find(
+        &self,
+        fp: &MatrixFingerprint,
+        threads: usize,
+    ) -> Option<&SpmvPlan> {
+        self.plans
+            .iter()
+            .find(|p| p.fingerprint == *fp && p.threads == threads.max(1))
+    }
+
+    /// Inserts a plan: replaces the entry with the same configuration
+    /// ([`same_config`] — fingerprint, threads, numa, reorder, panel
+    /// rows, tile width, kernel), otherwise adds it at the front so
+    /// lookups prefer the newest plan.
+    pub fn insert(&mut self, plan: SpmvPlan) {
+        let key = self.plans.iter().position(|p| same_config(p, &plan));
+        match key {
+            Some(i) => self.plans[i] = plan,
+            None => self.plans.insert(0, plan),
+        }
+    }
+
+    /// Serializes the whole store to JSON text.
+    pub fn to_json(&self) -> String {
+        let arr: Vec<Json> = self
+            .plans
+            .iter()
+            .map(|p| Json::parse(&p.to_json()).expect("plan emits valid json"))
+            .collect();
+        Json::obj(vec![
+            ("version", Json::Num(PLAN_VERSION as f64)),
+            ("plans", Json::Arr(arr)),
+        ])
+        .to_string()
+    }
+
+    /// Parses a store from JSON text.
+    pub fn from_json(text: &str) -> anyhow::Result<PlanCache> {
+        let v = Json::parse(text)?;
+        let arr = v
+            .get("plans")
+            .and_then(|a| a.as_arr())
+            .ok_or_else(|| anyhow::anyhow!("plan cache: missing 'plans'"))?;
+        let mut cache = PlanCache::new();
+        for (i, p) in arr.iter().enumerate() {
+            let plan = SpmvPlan::from_json_value(p)
+                .map_err(|e| anyhow::anyhow!("plan cache entry {i}: {e}"))?;
+            // The serialized order is the lookup priority order
+            // (newest first): preserve it, keeping the first of any
+            // duplicated configuration.
+            if !cache.plans.iter().any(|q| same_config(q, &plan)) {
+                cache.plans.push(plan);
+            }
+        }
+        Ok(cache)
+    }
+
+    /// Loads a store from a file; a missing file is an empty cache
+    /// (first run), a malformed file is an error.
+    pub fn load(path: impl AsRef<Path>) -> anyhow::Result<PlanCache> {
+        match std::fs::read_to_string(path) {
+            Ok(text) => Self::from_json(&text),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                Ok(PlanCache::new())
+            }
+            Err(e) => Err(e.into()),
+        }
+    }
+
+    /// Saves the store to a file.
+    pub fn save(&self, path: impl AsRef<Path>) -> anyhow::Result<()> {
+        std::fs::write(path, format!("{}\n", self.to_json()))?;
+        Ok(())
+    }
+
+    pub fn len(&self) -> usize {
+        self.plans.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.plans.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::suite;
+
+    fn sample_plan() -> SpmvPlan {
+        SpmvPlan {
+            version: PLAN_VERSION,
+            fingerprint: MatrixFingerprint {
+                rows: 100,
+                cols: 120,
+                nnz: 999,
+                stats_hash: 0xdead_beef_cafe_f00d,
+            },
+            kernel: KernelKind::Hybrid,
+            threads: 4,
+            numa_split: true,
+            reorder: Some(ReorderKind::Rcm),
+            panel_rows: 64,
+            tile_cols: Some(4096),
+            predicted_gflops: Some(2.75),
+            schedule: vec![
+                ScheduleEntry {
+                    row_begin: 0,
+                    row_end: 64,
+                    kernel: PanelKernel::Beta(BlockSize::new(2, 8)),
+                },
+                ScheduleEntry {
+                    row_begin: 64,
+                    row_end: 100,
+                    kernel: PanelKernel::Csr,
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn plan_json_roundtrip() {
+        let p = sample_plan();
+        let back = SpmvPlan::from_json(&p.to_json()).unwrap();
+        assert_eq!(p, back);
+        // Optional fields absent.
+        let mut q = sample_plan();
+        q.reorder = None;
+        q.tile_cols = None;
+        q.predicted_gflops = None;
+        q.schedule.clear();
+        let back = SpmvPlan::from_json(&q.to_json()).unwrap();
+        assert_eq!(q, back);
+    }
+
+    #[test]
+    fn plan_rejects_malformed() {
+        let good = sample_plan().to_json();
+        // Unknown kernel spelling.
+        let bad = good.replace("\"hybrid\"", "\"turbokernel\"");
+        assert!(SpmvPlan::from_json(&bad).is_err());
+        // Negative tile width.
+        let bad = good.replace("\"tile_cols\":4096", "\"tile_cols\":-4");
+        assert!(SpmvPlan::from_json(&bad).is_err());
+        // Bad segment kernel.
+        let bad = good.replace("\"b(2,8)\"", "\"csr5\"");
+        assert!(SpmvPlan::from_json(&bad).is_err());
+        // Future schema version.
+        let bad = good.replace("\"version\":1", "\"version\":99");
+        assert!(SpmvPlan::from_json(&bad).is_err());
+        // Not even JSON.
+        assert!(SpmvPlan::from_json("{nope").is_err());
+        // Missing fingerprint.
+        assert!(SpmvPlan::from_json(r#"{"version":1,"kernel":"csr"}"#)
+            .is_err());
+    }
+
+    #[test]
+    fn fingerprint_distinguishes_structure_not_values() {
+        let a = suite::poisson2d(12);
+        let fa = MatrixFingerprint::of(&a);
+        assert_eq!(fa, MatrixFingerprint::of(&a), "deterministic");
+        // Same pattern, different values → same fingerprint.
+        let mut b = a.clone();
+        for v in &mut b.values {
+            *v *= 3.25;
+        }
+        assert_eq!(fa, MatrixFingerprint::of(&b));
+        // Different structure → different fingerprint.
+        let c = suite::poisson2d(13);
+        assert_ne!(fa, MatrixFingerprint::of(&c));
+        let d = suite::uniform_scatter(a.rows, 5, 3);
+        assert_ne!(fa, MatrixFingerprint::of(&d));
+        // Different precision → different fingerprint (plans resolve
+        // tile widths and β sizes per precision, so they must not
+        // cross).
+        let a32: crate::matrix::Csr<f32> = a.to_precision();
+        assert_ne!(fa, MatrixFingerprint::of(&a32));
+    }
+
+    #[test]
+    fn cache_roundtrip_and_replacement() {
+        let mut cache = PlanCache::new();
+        let p = sample_plan();
+        cache.insert(p.clone());
+        // Re-inserting the same configuration replaces (latest wins,
+        // bounded growth) — even when the re-plan chose a different
+        // schedule.
+        let mut p1b = sample_plan();
+        p1b.predicted_gflops = Some(9.9);
+        cache.insert(p1b);
+        assert_eq!(cache.len(), 1);
+        assert_eq!(
+            cache.find(&p.fingerprint, 4).unwrap().predicted_gflops,
+            Some(9.9)
+        );
+        // A different configuration (here: kernel) coexists instead of
+        // evicting — and the newest entry wins lookups.
+        let mut p2 = sample_plan();
+        p2.kernel = KernelKind::Csr;
+        p2.tile_cols = None;
+        p2.schedule.clear();
+        cache.insert(p2.clone());
+        assert_eq!(cache.len(), 2);
+        assert_eq!(
+            cache.find(&p.fingerprint, 4).unwrap().kernel,
+            KernelKind::Csr
+        );
+        let mut p3 = sample_plan();
+        p3.threads = 8;
+        cache.insert(p3);
+        assert_eq!(cache.len(), 3);
+
+        let back = PlanCache::from_json(&cache.to_json()).unwrap();
+        assert_eq!(back.len(), 3);
+        assert_eq!(back.find(&p.fingerprint, 4), cache.find(&p.fingerprint, 4));
+        assert!(back.find(&p.fingerprint, 2).is_none());
+    }
+
+    #[test]
+    fn cache_missing_file_is_empty() {
+        let cache =
+            PlanCache::load("/definitely/not/a/real/path.json").unwrap();
+        assert!(cache.is_empty());
+    }
+}

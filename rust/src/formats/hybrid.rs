@@ -66,6 +66,20 @@ impl std::fmt::Display for PanelKernel {
     }
 }
 
+impl PanelKernel {
+    /// Parses the [`Display`](std::fmt::Display) spelling back (`csr`
+    /// or `b(r,c)`) — what serialized plans store per segment.
+    pub fn parse(s: &str) -> Option<PanelKernel> {
+        match KernelKind::parse(s)? {
+            KernelKind::Csr => Some(PanelKernel::Csr),
+            KernelKind::Beta(r, c) => Some(PanelKernel::Beta(
+                BlockSize::new(r as usize, c as usize),
+            )),
+            _ => None,
+        }
+    }
+}
+
 /// Configuration of the panel cut and the candidate β sizes.
 #[derive(Clone, Debug)]
 pub struct HybridConfig {
@@ -119,6 +133,23 @@ impl HybridConfig {
         }
         Ok(())
     }
+}
+
+/// One planned — not yet converted — schedule entry: a contiguous row
+/// range bound to its chosen kernel. The decision half of the
+/// inspector–executor split: [`HybridMatrix::plan_schedule`] produces
+/// these (cheap scans only), [`HybridMatrix::from_schedule`] converts
+/// them. A serialized [`crate::coordinator::SpmvPlan`] records exactly
+/// this list, so a cached plan reproduces the schedule bit-for-bit
+/// without re-ranking panels.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ScheduleEntry {
+    /// First matrix row (inclusive); always a panel boundary.
+    pub row_begin: usize,
+    /// One past the last matrix row.
+    pub row_end: usize,
+    /// The merged panel decision for this row range.
+    pub kernel: PanelKernel,
 }
 
 /// Storage of one compiled segment (a run of same-choice panels).
@@ -196,6 +227,21 @@ impl<T: Scalar> HybridMatrix<T> {
         cfg: &HybridConfig,
         models: Option<&HashMap<KernelKind, PolyModel>>,
     ) -> Result<HybridMatrix<T>, FormatError> {
+        let schedule = Self::plan_schedule(csr, cfg, models)?;
+        Self::from_schedule_trusted(csr, cfg.panel_rows, &schedule)
+    }
+
+    /// The **inspection** half of the compile: decide every panel and
+    /// merge/re-cut the runs, returning the planned schedule without
+    /// converting anything. Cheap block-count scans only — this is
+    /// what [`crate::coordinator::SpmvPlan`] records so a later
+    /// [`HybridMatrix::from_schedule`] reproduces the exact same
+    /// segments without the predictor.
+    pub fn plan_schedule(
+        csr: &Csr<T>,
+        cfg: &HybridConfig,
+        models: Option<&HashMap<KernelKind, PolyModel>>,
+    ) -> Result<Vec<ScheduleEntry>, FormatError> {
         cfg.validate::<T>()?;
         let rows = csr.rows;
         let n_panels = crate::util::ceil_div(rows, cfg.panel_rows);
@@ -219,10 +265,10 @@ impl<T: Scalar> HybridMatrix<T> {
         // merged run into nnz-balanced pieces (still at panel
         // boundaries) when `cfg.split` asks for more segments than the
         // merge produced — so the parallel path can feed every worker
-        // even on a homogeneous matrix — and convert each piece once.
+        // even on a homogeneous matrix.
         let target_nnz =
             crate::util::ceil_div(csr.nnz().max(1), cfg.split.max(1));
-        let mut segments: Vec<HybridSegment<T>> = Vec::new();
+        let mut schedule: Vec<ScheduleEntry> = Vec::new();
         let mut begin = 0usize;
         while begin < n_panels {
             let choice = choices[begin];
@@ -248,36 +294,97 @@ impl<T: Scalar> HybridMatrix<T> {
                 if p0 == p1 {
                     continue; // degenerate chunk (weights too skewed)
                 }
-                let row_begin = (begin + p0) * cfg.panel_rows;
-                let row_end = ((begin + p1) * cfg.panel_rows).min(rows);
-                let sub = csr.row_slice(row_begin, row_end);
-                let nnz = sub.nnz();
-                let storage = match choice {
-                    PanelKernel::Beta(bs) => {
-                        SegmentStorage::Block(csr_to_block(&sub, bs)?)
-                    }
-                    PanelKernel::Csr => SegmentStorage::Csr(sub),
-                };
-                segments.push(HybridSegment {
-                    row_begin,
-                    row_end,
-                    nnz,
+                schedule.push(ScheduleEntry {
+                    row_begin: (begin + p0) * cfg.panel_rows,
+                    row_end: ((begin + p1) * cfg.panel_rows).min(rows),
                     kernel: choice,
-                    storage,
                 });
             }
             begin = end;
         }
+        Ok(schedule)
+    }
 
-        let hm = HybridMatrix {
-            rows,
-            cols: csr.cols,
-            panel_rows: cfg.panel_rows,
-            choices,
-            segments,
-        };
+    /// The **instantiation** half: convert a planned schedule into the
+    /// executable segment storages. `schedule` may come from a
+    /// deserialized plan, so every structural invariant is re-checked
+    /// (via [`HybridMatrix::validate`]) rather than trusted.
+    pub fn from_schedule(
+        csr: &Csr<T>,
+        panel_rows: usize,
+        schedule: &[ScheduleEntry],
+    ) -> Result<HybridMatrix<T>, FormatError> {
+        let hm = Self::assemble(csr, panel_rows, schedule)?;
+        hm.validate()?;
+        Ok(hm)
+    }
+
+    /// Fast path for schedules produced in-process by
+    /// [`HybridMatrix::plan_schedule`] during the same build: skips
+    /// the O(nnz) re-validation a deserialized schedule needs (debug
+    /// builds still assert).
+    pub(crate) fn from_schedule_trusted(
+        csr: &Csr<T>,
+        panel_rows: usize,
+        schedule: &[ScheduleEntry],
+    ) -> Result<HybridMatrix<T>, FormatError> {
+        let hm = Self::assemble(csr, panel_rows, schedule)?;
         debug_assert!(hm.validate().is_ok(), "{:?}", hm.validate().err());
         Ok(hm)
+    }
+
+    fn assemble(
+        csr: &Csr<T>,
+        panel_rows: usize,
+        schedule: &[ScheduleEntry],
+    ) -> Result<HybridMatrix<T>, FormatError> {
+        if panel_rows == 0 || panel_rows % 8 != 0 {
+            return Err(FormatError::Inconsistent(format!(
+                "panel_rows must be a positive multiple of 8, got \
+                 {panel_rows}"
+            )));
+        }
+        let rows = csr.rows;
+        let n_panels = crate::util::ceil_div(rows, panel_rows);
+        let mut segments: Vec<HybridSegment<T>> =
+            Vec::with_capacity(schedule.len());
+        let mut choices: Vec<PanelKernel> = Vec::with_capacity(n_panels);
+        for entry in schedule {
+            if entry.row_end <= entry.row_begin || entry.row_end > rows {
+                return Err(FormatError::Inconsistent(format!(
+                    "schedule entry rows {}..{} out of range",
+                    entry.row_begin, entry.row_end
+                )));
+            }
+            let sub = csr.row_slice(entry.row_begin, entry.row_end);
+            let nnz = sub.nnz();
+            let storage = match entry.kernel {
+                PanelKernel::Beta(bs) => {
+                    SegmentStorage::Block(csr_to_block(&sub, bs)?)
+                }
+                PanelKernel::Csr => SegmentStorage::Csr(sub),
+            };
+            // The per-panel choice is the kernel of the segment
+            // covering it (identical to the phase-1 decisions:
+            // segments are runs of equal-choice panels).
+            while choices.len() * panel_rows < entry.row_end {
+                choices.push(entry.kernel);
+            }
+            segments.push(HybridSegment {
+                row_begin: entry.row_begin,
+                row_end: entry.row_end,
+                nnz,
+                kernel: entry.kernel,
+                storage,
+            });
+        }
+        Ok(HybridMatrix {
+            rows,
+            cols: csr.cols,
+            panel_rows,
+            choices,
+            segments,
+        })
     }
 
     /// Total stored nonzeros.

@@ -18,15 +18,20 @@ pub mod convert;
 pub mod hybrid;
 pub mod occupancy;
 pub mod stats;
+pub mod storage;
 pub mod tiled;
 
 pub use block::{BlockMatrix, HEADER_COLIDX_BYTES};
 pub use convert::{block_to_csr, csr_to_block};
 pub use hybrid::{
-    HybridConfig, HybridMatrix, HybridSegment, PanelKernel, SegmentStorage,
+    HybridConfig, HybridMatrix, HybridSegment, PanelKernel, ScheduleEntry,
+    SegmentStorage,
 };
 pub use occupancy::{beta_occupancy_bytes, csr_occupancy_bytes, fill_crossover};
 pub use stats::BlockStats;
+pub use storage::{
+    BetaTestStorage, Csr5Storage, CsrStorage, PoolExec, SparseStorage,
+};
 pub use tiled::{
     auto_tile_cols, TileCols, TiledConfig, TiledCsr, TiledHybrid,
     TiledMatrix,

@@ -1,0 +1,751 @@
+//! The unified executor surface: every compiled sparse storage behind
+//! one object-safe [`SparseStorage`] trait.
+//!
+//! Before this module the engine kept a closed enum of storages and
+//! three parallel match ladders (`spmv`, `spmm`, accessors) that had to
+//! grow a new arm for every format. The trait collapses them: a built
+//! [`crate::SpmvEngine`] holds exactly one `Box<dyn SparseStorage<T>>`
+//! and dispatches products without ever inspecting the kernel kind.
+//!
+//! Implementors:
+//!
+//! - [`BlockMatrix`] — the sequential `β(r,c)` kernel (the parallel β
+//!   runtime is [`ParallelSpmv`], which also implements the trait and
+//!   self-schedules on its own pool attachment).
+//! - [`HybridMatrix`] / [`TiledHybrid`] — the row-panel schedule, flat
+//!   and cache-blocked; pooled execution splits *segments* by nnz.
+//! - [`TiledMatrix`] — cache-blocked β spans; pooled execution splits
+//!   row *panels* by nnz, tiles stay the inner sequential loop.
+//! - [`BetaTestStorage`] — the Algorithm-2 `test` execution of a flat
+//!   or tiled β storage.
+//! - [`CsrStorage`] / [`Csr5Storage`] — the paper's comparators. CSR
+//!   runs row-chunked on the pool; CSR5 is sequential by construction.
+//!   Neither has a native multi-RHS kernel, so their `spmm` is the
+//!   de-interleaved per-vector fallback through storage-owned scratch
+//!   (no per-batch allocation on the serving path).
+//!
+//! Pooled entry points receive a [`PoolExec`]: the engine's persistent
+//! [`WorkerPool`], the **precomputed** nnz-balanced chunk split (from
+//! [`SparseStorage::par_split`], computed once at build so the hot
+//! path never re-balances), and the attach id for per-worker scratch.
+
+use super::hybrid::HybridMatrix;
+use super::tiled::{TiledHybrid, TiledMatrix};
+use super::{BlockMatrix, FormatError};
+use crate::kernels::csr5::Csr5Matrix;
+use crate::kernels::{csr as csr_kernel, spmm, spmv_block, KernelKind};
+use crate::matrix::Csr;
+use crate::parallel::{
+    balanced_prefix_split, ParallelSpmv, SendSlice, WorkerCtx, WorkerPool,
+};
+use crate::scalar::Scalar;
+use std::any::Any;
+use std::sync::{Arc, Mutex};
+
+/// Execution context for a pooled product: the engine's persistent
+/// worker pool, the prebalanced chunk split (one `(begin, end)` work
+/// range per worker, in the storage's own work units — rows, panels or
+/// segments), and the attach id for per-worker scratch vectors.
+#[derive(Clone, Copy)]
+pub struct PoolExec<'a> {
+    pub pool: &'a WorkerPool,
+    pub chunks: &'a [(usize, usize)],
+    pub scratch_attach: u64,
+}
+
+/// A compiled sparse storage ready to serve products — the executor
+/// half of the inspector–executor split. Object-safe: the engine holds
+/// one `Box<dyn SparseStorage<T>>` and never matches on the kind.
+pub trait SparseStorage<T: Scalar>: Send + Sync {
+    /// The kernel class this storage executes (what a
+    /// [`crate::coordinator::SpmvPlan`] records).
+    fn kernel_kind(&self) -> KernelKind;
+
+    /// Sequential `y += A·x`.
+    fn spmv_seq(&self, x: &[T], y: &mut [T]);
+
+    /// Parallel `y += A·x` on the engine's pool. `exec.chunks` must be
+    /// this storage's own [`SparseStorage::par_split`] for the pool's
+    /// worker count.
+    fn spmv_pooled(&self, exec: PoolExec<'_>, x: &[T], y: &mut [T]);
+
+    /// Multi-RHS `Y += A·X` (`x` row-major `[cols × k]`, `y`
+    /// `[rows × k]`), pooled when `exec` is supplied.
+    fn spmm(&self, exec: Option<PoolExec<'_>>, x: &[T], y: &mut [T], k: usize);
+
+    /// Structural invariants of the compiled storage.
+    fn validate(&self) -> Result<(), FormatError>;
+
+    /// The nnz-balanced split of this storage's parallel work units
+    /// for `n` workers. Empty = no chunked pooled path (the storage
+    /// either runs sequentially or, like [`ParallelSpmv`], schedules
+    /// itself). Called once at engine build; the result is what
+    /// [`PoolExec::chunks`] carries on every call.
+    fn par_split(&self, n: usize) -> Vec<(usize, usize)> {
+        let _ = n;
+        Vec::new()
+    }
+
+    /// Resolved column tile width when the storage executes
+    /// cache-blocked (`None` = flat schedule).
+    fn tile_cols(&self) -> Option<usize> {
+        None
+    }
+
+    /// Downcast support for the per-kind convenience accessors
+    /// (`engine.hybrid()`, `engine.tiled()`, ...).
+    fn as_any(&self) -> &dyn Any;
+}
+
+/// Splits an ordered work list into `n` contiguous runs of
+/// approximately equal weight via the paper's prefix rule — the one
+/// balancing routine behind every `par_split` here.
+pub fn nnz_chunks(
+    nnzs: impl Iterator<Item = usize>,
+    n: usize,
+) -> Vec<(usize, usize)> {
+    let mut prefix = vec![0u32];
+    let mut acc = 0u64;
+    for w in nnzs {
+        acc += w as u64;
+        prefix.push(u32::try_from(acc).expect("nnz fits the u32 prefix"));
+    }
+    balanced_prefix_split(&prefix, n)
+}
+
+// ---------------------------------------------------------------- β --
+
+impl<T: Scalar> SparseStorage<T> for BlockMatrix<T> {
+    fn kernel_kind(&self) -> KernelKind {
+        KernelKind::Beta(self.bs.r as u8, self.bs.c as u8)
+    }
+
+    fn spmv_seq(&self, x: &[T], y: &mut [T]) {
+        spmv_block(self, x, y, false);
+    }
+
+    /// The flat block matrix has no chunked pooled path — parallel β
+    /// execution is [`ParallelSpmv`] (per-worker working vectors, NUMA
+    /// strategies). `par_split` stays empty so this is never reached
+    /// through the engine; a direct call degrades to sequential.
+    fn spmv_pooled(&self, _exec: PoolExec<'_>, x: &[T], y: &mut [T]) {
+        self.spmv_seq(x, y);
+    }
+
+    fn spmm(
+        &self,
+        _exec: Option<PoolExec<'_>>,
+        x: &[T],
+        y: &mut [T],
+        k: usize,
+    ) {
+        spmm::spmm_auto(self, x, y, k);
+    }
+
+    fn validate(&self) -> Result<(), FormatError> {
+        BlockMatrix::validate(self)
+    }
+
+    fn as_any(&self) -> &dyn Any {
+        self
+    }
+}
+
+/// Algorithm-2 `test` execution of a β storage, flat or cache-blocked.
+/// A thin marker wrapper: the underlying formats are identical, only
+/// the kernel's single-value fast path differs, and multi-RHS products
+/// use the standard SpMM traversal (Algorithm 2 has no `k > 1` form).
+pub enum BetaTestStorage<T: Scalar> {
+    Flat(BlockMatrix<T>),
+    Tiled(TiledMatrix<T>),
+}
+
+impl<T: Scalar> BetaTestStorage<T> {
+    fn bs(&self) -> super::BlockSize {
+        match self {
+            BetaTestStorage::Flat(bm) => bm.bs,
+            BetaTestStorage::Tiled(tm) => tm.bs,
+        }
+    }
+}
+
+impl<T: Scalar> SparseStorage<T> for BetaTestStorage<T> {
+    fn kernel_kind(&self) -> KernelKind {
+        let bs = self.bs();
+        KernelKind::BetaTest(bs.r as u8, bs.c as u8)
+    }
+
+    fn spmv_seq(&self, x: &[T], y: &mut [T]) {
+        match self {
+            BetaTestStorage::Flat(bm) => spmv_block(bm, x, y, true),
+            BetaTestStorage::Tiled(tm) => tm.spmv(x, y, true),
+        }
+    }
+
+    fn spmv_pooled(&self, exec: PoolExec<'_>, x: &[T], y: &mut [T]) {
+        match self {
+            // Flat parallel test kernels run through ParallelSpmv.
+            BetaTestStorage::Flat(bm) => spmv_block(bm, x, y, true),
+            BetaTestStorage::Tiled(tm) => {
+                tiled_block_pooled(tm, exec, x, y, 1, true)
+            }
+        }
+    }
+
+    fn spmm(
+        &self,
+        exec: Option<PoolExec<'_>>,
+        x: &[T],
+        y: &mut [T],
+        k: usize,
+    ) {
+        match (self, exec) {
+            (BetaTestStorage::Flat(bm), _) => spmm::spmm_auto(bm, x, y, k),
+            (BetaTestStorage::Tiled(tm), None) => tm.spmm(x, y, k),
+            (BetaTestStorage::Tiled(tm), Some(exec)) => {
+                tiled_block_pooled(tm, exec, x, y, k, true)
+            }
+        }
+    }
+
+    fn validate(&self) -> Result<(), FormatError> {
+        match self {
+            BetaTestStorage::Flat(bm) => bm.validate(),
+            BetaTestStorage::Tiled(tm) => tm.validate(),
+        }
+    }
+
+    fn par_split(&self, n: usize) -> Vec<(usize, usize)> {
+        match self {
+            BetaTestStorage::Flat(_) => Vec::new(),
+            BetaTestStorage::Tiled(tm) => {
+                nnz_chunks(tm.panels.iter().map(|p| p.nnz), n)
+            }
+        }
+    }
+
+    fn tile_cols(&self) -> Option<usize> {
+        match self {
+            BetaTestStorage::Flat(_) => None,
+            BetaTestStorage::Tiled(tm) => Some(tm.tile_cols),
+        }
+    }
+
+    fn as_any(&self) -> &dyn Any {
+        self
+    }
+}
+
+/// The parallel β runtime is its own scheduler: it attached to the
+/// engine's pool at construction, owns per-worker working vectors and
+/// the NUMA array-split strategies, so both entry points run the same
+/// epoch handoff and `par_split` stays empty.
+impl<T: Scalar> SparseStorage<T> for ParallelSpmv<T> {
+    fn kernel_kind(&self) -> KernelKind {
+        let bs = self.matrix().bs;
+        if self.algo2_test() {
+            KernelKind::BetaTest(bs.r as u8, bs.c as u8)
+        } else {
+            KernelKind::Beta(bs.r as u8, bs.c as u8)
+        }
+    }
+
+    fn spmv_seq(&self, x: &[T], y: &mut [T]) {
+        self.spmv(x, y);
+    }
+
+    fn spmv_pooled(&self, _exec: PoolExec<'_>, x: &[T], y: &mut [T]) {
+        self.spmv(x, y);
+    }
+
+    fn spmm(
+        &self,
+        _exec: Option<PoolExec<'_>>,
+        x: &[T],
+        y: &mut [T],
+        k: usize,
+    ) {
+        ParallelSpmv::spmm(self, x, y, k);
+    }
+
+    fn validate(&self) -> Result<(), FormatError> {
+        self.matrix().validate()
+    }
+
+    fn as_any(&self) -> &dyn Any {
+        self
+    }
+}
+
+// ----------------------------------------------------------- hybrid --
+
+impl<T: Scalar> SparseStorage<T> for HybridMatrix<T> {
+    fn kernel_kind(&self) -> KernelKind {
+        KernelKind::Hybrid
+    }
+
+    fn spmv_seq(&self, x: &[T], y: &mut [T]) {
+        HybridMatrix::spmv(self, x, y);
+    }
+
+    fn spmv_pooled(&self, exec: PoolExec<'_>, x: &[T], y: &mut [T]) {
+        hybrid_pooled(self, exec, x, y, 1);
+    }
+
+    fn spmm(
+        &self,
+        exec: Option<PoolExec<'_>>,
+        x: &[T],
+        y: &mut [T],
+        k: usize,
+    ) {
+        match exec {
+            None => HybridMatrix::spmm(self, x, y, k),
+            Some(exec) => hybrid_pooled(self, exec, x, y, k),
+        }
+    }
+
+    fn validate(&self) -> Result<(), FormatError> {
+        HybridMatrix::validate(self)
+    }
+
+    fn par_split(&self, n: usize) -> Vec<(usize, usize)> {
+        nnz_chunks(self.segments.iter().map(|s| s.nnz), n)
+    }
+
+    fn as_any(&self) -> &dyn Any {
+        self
+    }
+}
+
+impl<T: Scalar> SparseStorage<T> for TiledMatrix<T> {
+    fn kernel_kind(&self) -> KernelKind {
+        KernelKind::Beta(self.bs.r as u8, self.bs.c as u8)
+    }
+
+    fn spmv_seq(&self, x: &[T], y: &mut [T]) {
+        TiledMatrix::spmv(self, x, y, false);
+    }
+
+    fn spmv_pooled(&self, exec: PoolExec<'_>, x: &[T], y: &mut [T]) {
+        tiled_block_pooled(self, exec, x, y, 1, false);
+    }
+
+    fn spmm(
+        &self,
+        exec: Option<PoolExec<'_>>,
+        x: &[T],
+        y: &mut [T],
+        k: usize,
+    ) {
+        match exec {
+            None => TiledMatrix::spmm(self, x, y, k),
+            Some(exec) => tiled_block_pooled(self, exec, x, y, k, false),
+        }
+    }
+
+    fn validate(&self) -> Result<(), FormatError> {
+        TiledMatrix::validate(self)
+    }
+
+    fn par_split(&self, n: usize) -> Vec<(usize, usize)> {
+        nnz_chunks(self.panels.iter().map(|p| p.nnz), n)
+    }
+
+    fn tile_cols(&self) -> Option<usize> {
+        Some(self.tile_cols)
+    }
+
+    fn as_any(&self) -> &dyn Any {
+        self
+    }
+}
+
+impl<T: Scalar> SparseStorage<T> for TiledHybrid<T> {
+    fn kernel_kind(&self) -> KernelKind {
+        KernelKind::Tiled(self.tile_cols as u32)
+    }
+
+    fn spmv_seq(&self, x: &[T], y: &mut [T]) {
+        TiledHybrid::spmv(self, x, y);
+    }
+
+    fn spmv_pooled(&self, exec: PoolExec<'_>, x: &[T], y: &mut [T]) {
+        tiled_hybrid_pooled(self, exec, x, y, 1);
+    }
+
+    fn spmm(
+        &self,
+        exec: Option<PoolExec<'_>>,
+        x: &[T],
+        y: &mut [T],
+        k: usize,
+    ) {
+        match exec {
+            None => TiledHybrid::spmm(self, x, y, k),
+            Some(exec) => tiled_hybrid_pooled(self, exec, x, y, k),
+        }
+    }
+
+    fn validate(&self) -> Result<(), FormatError> {
+        TiledHybrid::validate(self)
+    }
+
+    fn par_split(&self, n: usize) -> Vec<(usize, usize)> {
+        nnz_chunks(self.segments.iter().map(|s| s.nnz), n)
+    }
+
+    fn tile_cols(&self) -> Option<usize> {
+        Some(self.tile_cols)
+    }
+
+    fn as_any(&self) -> &dyn Any {
+        self
+    }
+}
+
+// -------------------------------------------------------- baselines --
+
+/// The CSR baseline storage: the matrix itself (shared with the engine
+/// — no second copy) plus the de-interleave scratch its multi-RHS
+/// fallback reuses across batches.
+pub struct CsrStorage<T: Scalar> {
+    csr: Arc<Csr<T>>,
+    /// Reusable `(xj, yj)` buffers for the per-vector SpMM fallback —
+    /// storage-owned so the micro-batching service does not allocate
+    /// two fresh vectors per batch. Uncontended in practice (products
+    /// on one engine are serialized by their callers); the lock only
+    /// keeps `spmm(&self, ..)` shareable.
+    spmm_scratch: Mutex<(Vec<T>, Vec<T>)>,
+}
+
+impl<T: Scalar> CsrStorage<T> {
+    pub fn new(csr: Arc<Csr<T>>) -> Self {
+        CsrStorage { csr, spmm_scratch: Mutex::new((Vec::new(), Vec::new())) }
+    }
+}
+
+impl<T: Scalar> SparseStorage<T> for CsrStorage<T> {
+    fn kernel_kind(&self) -> KernelKind {
+        KernelKind::Csr
+    }
+
+    fn spmv_seq(&self, x: &[T], y: &mut [T]) {
+        csr_kernel::spmv(&self.csr, x, y);
+    }
+
+    /// Row-chunked parallel CSR: each pool worker owns a disjoint
+    /// contiguous row range (balanced by nnz at build time) and writes
+    /// its own `y` slice — same syncless-merge shape as the β runtime,
+    /// on the same persistent workers.
+    fn spmv_pooled(&self, exec: PoolExec<'_>, x: &[T], y: &mut [T]) {
+        assert_eq!(x.len(), self.csr.cols);
+        assert_eq!(y.len(), self.csr.rows);
+        debug_assert_eq!(exec.chunks.len(), exec.pool.n_threads());
+        let y_all = SendSlice::new(y);
+        let csr = &*self.csr;
+        exec.pool.run(|ctx: WorkerCtx<'_>| {
+            let (r0, r1) = exec.chunks[ctx.tid];
+            if r0 == r1 {
+                return;
+            }
+            // SAFETY: chunks are contiguous and disjoint across
+            // workers; the borrow outlives the blocked `run` call.
+            let part = unsafe { y_all.subslice_mut(r0, r1) };
+            csr_kernel::spmv_rows(csr, r0, r1, x, part);
+        });
+    }
+
+    fn spmm(
+        &self,
+        exec: Option<PoolExec<'_>>,
+        x: &[T],
+        y: &mut [T],
+        k: usize,
+    ) {
+        baseline_spmm(
+            &self.spmm_scratch,
+            self.csr.rows,
+            self.csr.cols,
+            x,
+            y,
+            k,
+            |xj, yj| match exec {
+                Some(exec) => self.spmv_pooled(exec, xj, yj),
+                None => self.spmv_seq(xj, yj),
+            },
+        );
+    }
+
+    fn validate(&self) -> Result<(), FormatError> {
+        let c = &self.csr;
+        if c.rowptr.len() != c.rows + 1
+            || c.colidx.len() != c.values.len()
+            || *c.rowptr.last().unwrap_or(&0) as usize != c.values.len()
+        {
+            return Err(FormatError::Inconsistent(
+                "csr rowptr/colidx/values lengths disagree".into(),
+            ));
+        }
+        Ok(())
+    }
+
+    fn par_split(&self, n: usize) -> Vec<(usize, usize)> {
+        balanced_prefix_split(&self.csr.rowptr, n)
+    }
+
+    fn as_any(&self) -> &dyn Any {
+        self
+    }
+}
+
+/// The CSR5 comparator storage — sequential by construction (the
+/// reference kernel carries open-row state across tiles), so
+/// `par_split` stays empty and the pooled entry degrades to the
+/// sequential kernel.
+pub struct Csr5Storage<T: Scalar> {
+    m: Csr5Matrix<T>,
+    spmm_scratch: Mutex<(Vec<T>, Vec<T>)>,
+}
+
+impl<T: Scalar> Csr5Storage<T> {
+    pub fn new(m: Csr5Matrix<T>) -> Self {
+        Csr5Storage { m, spmm_scratch: Mutex::new((Vec::new(), Vec::new())) }
+    }
+
+    /// The wrapped CSR5 matrix.
+    pub fn matrix(&self) -> &Csr5Matrix<T> {
+        &self.m
+    }
+}
+
+impl<T: Scalar> SparseStorage<T> for Csr5Storage<T> {
+    fn kernel_kind(&self) -> KernelKind {
+        KernelKind::Csr5
+    }
+
+    fn spmv_seq(&self, x: &[T], y: &mut [T]) {
+        self.m.spmv(x, y);
+    }
+
+    fn spmv_pooled(&self, _exec: PoolExec<'_>, x: &[T], y: &mut [T]) {
+        self.m.spmv(x, y);
+    }
+
+    fn spmm(
+        &self,
+        _exec: Option<PoolExec<'_>>,
+        x: &[T],
+        y: &mut [T],
+        k: usize,
+    ) {
+        baseline_spmm(
+            &self.spmm_scratch,
+            self.m.rows,
+            self.m.cols,
+            x,
+            y,
+            k,
+            |xj, yj| self.m.spmv(xj, yj),
+        );
+    }
+
+    fn validate(&self) -> Result<(), FormatError> {
+        // CSR5 conversion is validated by construction (the tiled part
+        // and CSR tail partition the nnz exactly); nothing structural
+        // is exposed to re-check here.
+        Ok(())
+    }
+
+    fn as_any(&self) -> &dyn Any {
+        self
+    }
+}
+
+// ------------------------------------------------ shared exec bodies --
+
+/// Parallel hybrid pass: each pool worker owns a contiguous run of
+/// schedule segments (balanced by nnz at build time) and writes the
+/// disjoint `y` rows those segments cover — the same syncless-merge
+/// shape as the other parallel paths. Serves both SpMV (`k == 1`) and
+/// SpMM (`k > 1`) epochs.
+fn hybrid_pooled<T: Scalar>(
+    hm: &HybridMatrix<T>,
+    exec: PoolExec<'_>,
+    x: &[T],
+    y: &mut [T],
+    k: usize,
+) {
+    debug_assert_eq!(exec.chunks.len(), exec.pool.n_threads());
+    let y_all = SendSlice::new(y);
+    exec.pool.run(|ctx: WorkerCtx<'_>| {
+        let (s0, s1) = exec.chunks[ctx.tid];
+        for seg in &hm.segments[s0..s1] {
+            // SAFETY: segments are ordered and disjoint in rows, and
+            // chunks are contiguous disjoint segment ranges, so no two
+            // workers touch the same `y` rows; the borrow outlives the
+            // blocked `run` call.
+            let part = unsafe {
+                y_all.subslice_mut(seg.row_begin * k, seg.row_end * k)
+            };
+            if k == 1 {
+                seg.spmv(x, part);
+            } else {
+                seg.spmm(x, part, k);
+            }
+        }
+    });
+}
+
+/// Parallel tiled-β pass: the 2-D `(panel, tile)` schedule on the
+/// pool. Workers own disjoint contiguous **row-panel** ranges
+/// (balanced by nnz at build time) so no two workers touch the same
+/// `y` rows and no atomics are needed; each worker walks its panels'
+/// column tiles as an inner sequential loop, which is what keeps its
+/// `x` window cache-resident.
+fn tiled_block_pooled<T: Scalar>(
+    tm: &TiledMatrix<T>,
+    exec: PoolExec<'_>,
+    x: &[T],
+    y: &mut [T],
+    k: usize,
+    test: bool,
+) {
+    debug_assert_eq!(exec.chunks.len(), exec.pool.n_threads());
+    let y_all = SendSlice::new(y);
+    let attach = exec.scratch_attach;
+    exec.pool.run(|ctx: WorkerCtx<'_>| {
+        let (p0, p1) = exec.chunks[ctx.tid];
+        if p0 == p1 {
+            return;
+        }
+        let row_begin = tm.panels[p0].row_begin;
+        let row_end = tm.panels[p1 - 1].row_end;
+        // SAFETY: panels are ordered and disjoint in rows and chunks
+        // are contiguous disjoint panel ranges, so no two workers touch
+        // the same `y` rows; the borrow outlives the blocked `run`
+        // call.
+        let part = unsafe { y_all.subslice_mut(row_begin * k, row_end * k) };
+        if k == 1 {
+            tm.spmv_panels(p0, p1, x, part, test);
+        } else {
+            let sums = ctx.locals.get_or_insert_with(attach, Vec::<T>::new);
+            tm.spmm_panels(p0, p1, x, part, k, sums);
+        }
+    });
+}
+
+/// Parallel tiled-hybrid pass: workers own disjoint contiguous runs of
+/// tiled segments (the same nnz-balanced split as the flat hybrid
+/// path); within a segment the `(panel, tile)` walk is sequential for
+/// locality.
+fn tiled_hybrid_pooled<T: Scalar>(
+    th: &TiledHybrid<T>,
+    exec: PoolExec<'_>,
+    x: &[T],
+    y: &mut [T],
+    k: usize,
+) {
+    debug_assert_eq!(exec.chunks.len(), exec.pool.n_threads());
+    let y_all = SendSlice::new(y);
+    let attach = exec.scratch_attach;
+    exec.pool.run(|ctx: WorkerCtx<'_>| {
+        let (s0, s1) = exec.chunks[ctx.tid];
+        let sums = ctx.locals.get_or_insert_with(attach, Vec::<T>::new);
+        for seg in &th.segments[s0..s1] {
+            // SAFETY: segments are ordered and disjoint in rows and
+            // chunks are contiguous disjoint segment ranges; the borrow
+            // outlives the blocked `run` call.
+            let part = unsafe {
+                y_all.subslice_mut(seg.row_begin * k, seg.row_end * k)
+            };
+            if k == 1 {
+                seg.spmv(x, part);
+            } else {
+                seg.spmm(x, part, k, sums);
+            }
+        }
+    });
+}
+
+/// The baselines' multi-RHS fallback: no native SpMM kernel, so run
+/// `k` de-interleaved single-vector products through storage-owned
+/// scratch (allocating two vectors per batch here used to be the
+/// serving layer's hot-path allocation).
+fn baseline_spmm<T: Scalar>(
+    scratch: &Mutex<(Vec<T>, Vec<T>)>,
+    rows: usize,
+    cols: usize,
+    x: &[T],
+    y: &mut [T],
+    k: usize,
+    mut spmv: impl FnMut(&[T], &mut [T]),
+) {
+    let mut guard = scratch.lock().expect("spmm scratch poisoned");
+    let (xj, yj) = &mut *guard;
+    xj.clear();
+    xj.resize(cols, T::ZERO);
+    yj.clear();
+    yj.resize(rows, T::ZERO);
+    for j in 0..k {
+        for c in 0..cols {
+            xj[c] = x[c * k + j];
+        }
+        yj.iter_mut().for_each(|v| *v = T::ZERO);
+        spmv(xj, yj);
+        for r in 0..rows {
+            y[r * k + j] += yj[r];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::suite;
+
+    #[test]
+    fn csr_par_split_covers_disjointly() {
+        let csr = Arc::new(suite::circuit(3_000, 3, 4, 11));
+        let st = CsrStorage::new(csr.clone());
+        for n in [1usize, 2, 5, 16] {
+            let chunks = SparseStorage::<f64>::par_split(&st, n);
+            assert_eq!(chunks.len(), n);
+            assert_eq!(chunks[0].0, 0);
+            assert_eq!(chunks.last().unwrap().1, csr.rows);
+            for w in chunks.windows(2) {
+                assert_eq!(w[0].1, w[1].0);
+            }
+        }
+    }
+
+    #[test]
+    fn kernel_kinds_reported() {
+        let csr = suite::poisson2d(12);
+        let bm = crate::formats::csr_to_block(
+            &csr,
+            crate::formats::BlockSize::new(2, 4),
+        )
+        .unwrap();
+        assert_eq!(
+            SparseStorage::<f64>::kernel_kind(&bm),
+            KernelKind::Beta(2, 4)
+        );
+        let test = BetaTestStorage::Flat(bm);
+        assert_eq!(test.kernel_kind(), KernelKind::BetaTest(2, 4));
+        let st = CsrStorage::new(Arc::new(csr.clone()));
+        assert_eq!(st.kernel_kind(), KernelKind::Csr);
+        st.validate().unwrap();
+        let hm = HybridMatrix::from_csr(
+            &csr,
+            &crate::formats::HybridConfig::for_scalar::<f64>(),
+            None,
+        )
+        .unwrap();
+        assert_eq!(
+            SparseStorage::<f64>::kernel_kind(&hm),
+            KernelKind::Hybrid
+        );
+        assert_eq!(SparseStorage::<f64>::tile_cols(&hm), None);
+    }
+}

@@ -34,6 +34,52 @@
 //! # Ok(()) }
 //! ```
 //!
+//! ## Plan architecture (inspector–executor)
+//!
+//! Engine construction is split into an **inspection** phase that
+//! decides and a separate **instantiation** phase that converts — with
+//! a first-class, serializable [`SpmvPlan`] between them (the same
+//! split as MKL's inspector–executor API, the paper's comparison
+//! target):
+//!
+//! ```text
+//!             inspect                    serialize
+//!   Csr ──► builder.plan() ──► SpmvPlan ──► JSON ──► (disk / wire)
+//!             │  cheap Avg(r,c) scans        │
+//!             │  predictor ranking           ▼
+//!             │  hybrid panel schedule   SpmvPlan::from_json
+//!             │  tile-width resolution       │
+//!             ▼         instantiate          ▼
+//!   builder.build() ═══ SpmvEngine::from_plan(csr, &plan)
+//!                            │  fingerprint check, conversion only
+//!                            ▼         execute
+//!                        SpmvEngine ──► spmv / spmm
+//! ```
+//!
+//! - [`SpmvEngineBuilder::plan`] records **every** decision — kernel
+//!   kind with resolved block size, resolved column tile width, the
+//!   compiled hybrid row-panel schedule (per-segment row range +
+//!   kernel), reorder kind, threads, NUMA split, predicted GFlop/s —
+//!   plus a [`MatrixFingerprint`] (dims, nnz, occupancy-stats hash).
+//! - [`SpmvEngine::from_plan`] instantiates with **no selection**: the
+//!   predictor, the record store and the fitted surfaces are not
+//!   consulted. `build()` is exactly `plan()` + instantiation, so a
+//!   plan round-tripped through JSON reproduces the built engine
+//!   bit-for-bit; a plan applied to a matrix with a different
+//!   fingerprint is refused.
+//! - [`PlanCache`] persists `{fingerprint → plan}` as JSON
+//!   ([`SpmvEngineBuilder::plan_cache`]): a server plans once per
+//!   matrix shape and instantiates from cache on every repeat build —
+//!   the "previous executions" of the paper's prediction system made
+//!   executable. CLI: `spc5 plan --save plan.json` then
+//!   `spc5 spmv --plan plan.json`.
+//!
+//! Every storage behind the engine implements the object-safe
+//! [`formats::SparseStorage`] trait (`spmv_seq` / `spmv_pooled` /
+//! `spmm` / `kernel_kind` / `validate`); a built engine holds exactly
+//! one `Box<dyn SparseStorage<T>>` and dispatches products without
+//! matching on the kernel kind.
+//!
 //! ## Runtime architecture
 //!
 //! Every parallel path runs on **one persistent
@@ -184,8 +230,10 @@ pub mod util;
 /// The generic form is [`Scalar::LANES`] (8 for f64, 16 for f32).
 pub const VEC_SIZE: usize = 8;
 
-pub use coordinator::SpmvEngine;
-pub use formats::{BlockMatrix, BlockSize};
+pub use coordinator::{
+    MatrixFingerprint, PlanCache, SpmvEngine, SpmvEngineBuilder, SpmvPlan,
+};
+pub use formats::{BlockMatrix, BlockSize, SparseStorage};
 pub use kernels::KernelKind;
 pub use matrix::{Coo, Csr};
 pub use scalar::Scalar;

@@ -3,7 +3,11 @@
 //! Subcommands:
 //! - `stats   --set A|B | --matrix NAME | --mtx FILE` — Table 1/2 rows.
 //! - `spmv    --matrix NAME [--kernel K] [--threads N] [--numa]` —
-//!   one measured SpMV (16-run mean, like the paper).
+//!   one measured SpMV (16-run mean, like the paper); `--plan FILE`
+//!   instantiates from a saved plan instead of selecting.
+//! - `plan    --matrix NAME [--kernel K] [--threads N] [--save FILE]`
+//!   — the inspection phase alone: print (and optionally save) the
+//!   chosen `SpmvPlan` as JSON, converting nothing.
 //! - `predict --matrix NAME [--threads N] [--records FILE]` — kernel
 //!   selection from recorded performance.
 //! - `cg      [--n N] [--iters K] [--engine native|xla]` — conjugate
@@ -13,7 +17,7 @@
 //! - `kernels` — list kernels and CPU feature support.
 
 use spc5::bench;
-use spc5::coordinator::{cg_solve, SpmvEngine};
+use spc5::coordinator::{cg_solve, SpmvEngine, SpmvPlan};
 use spc5::formats::stats::paper_profile;
 use spc5::kernels::KernelKind;
 use spc5::matrix::{market, suite, Csr};
@@ -100,6 +104,7 @@ fn run(args: &[String]) -> anyhow::Result<()> {
     match cmd.as_str() {
         "stats" => cmd_stats(&a),
         "spmv" => cmd_spmv(&a),
+        "plan" => cmd_plan(&a),
         "predict" => cmd_predict(&a),
         "cg" => cmd_cg(&a),
         "gen" => cmd_gen(&a),
@@ -124,6 +129,11 @@ fn print_help() {
          \x20          [--reorder rcm|colpack] [--panel-rows N]   (kernel `hybrid` = per-panel schedule)\n\
          \x20          [--tile-cols N | --tile-auto]   (cache-blocked column tiling; kernel\n\
          \x20          `tiled` / `tiled(N)` = tiled hybrid schedule)\n\
+         \x20          [--plan FILE]        instantiate from a saved plan (skips selection)\n\
+         \x20          [--plan-cache FILE]  plan once per fingerprint, reuse afterwards\n\
+         \x20 plan     --matrix NAME [--kernel K] [--threads N] [--numa] [--reorder ..]\n\
+         \x20          [--panel-rows N] [--tile-cols N | --tile-auto] [--records FILE]\n\
+         \x20          [--save FILE]        inspection only: print/save the SpmvPlan JSON\n\
          \x20 predict  --matrix NAME [--threads N] [--records FILE]\n\
          \x20 cg       [--n N] [--iters K] [--engine native|xla] [--threads N]\n\
          \x20 gen      --class CLASS --out FILE.mtx [--dim D] [--seed S]\n\
@@ -172,63 +182,88 @@ fn cmd_stats(a: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_spmv(a: &Args) -> anyhow::Result<()> {
-    let (name, csr) = load_matrix(a)?;
-    let kernel = match a.get("kernel") {
-        None => KernelKind::Beta(1, 8),
-        Some(k) => KernelKind::parse(k).ok_or_else(|| {
+/// Applies the shared engine-configuration flags (`--threads`,
+/// `--numa`, `--panel-rows`, `--reorder`, `--tile-cols`/`--tile-auto`,
+/// `--plan-cache`) to a builder at either precision.
+fn apply_engine_flags<T: spc5::Scalar>(
+    mut b: spc5::SpmvEngineBuilder<'static, T>,
+    a: &Args,
+    kernel: Option<KernelKind>,
+) -> anyhow::Result<spc5::SpmvEngineBuilder<'static, T>> {
+    b = b
+        .threads(a.get_usize("threads", 1)?)
+        .numa_split(a.has("numa"))
+        .panel_rows(a.get_usize(
+            "panel-rows",
+            spc5::formats::hybrid::DEFAULT_PANEL_ROWS,
+        )?);
+    if let Some(k) = kernel {
+        b = b.kernel(k);
+    }
+    if let Some(r) = a.get("reorder") {
+        let kind = spc5::matrix::ReorderKind::parse(r).ok_or_else(|| {
+            anyhow::anyhow!("bad --reorder '{r}' (expects rcm|colpack)")
+        })?;
+        b = b.reorder(kind);
+    }
+    if a.has("tile-auto") {
+        b = b.tile_auto();
+    }
+    if let Some(v) = a.get("tile-cols") {
+        // An explicit width wins over --tile-auto when both given.
+        let n: usize = v.parse().map_err(|_| {
+            anyhow::anyhow!("--tile-cols expects a number, got '{v}'")
+        })?;
+        b = b.tile_cols(n);
+    }
+    if let Some(path) = a.get("plan-cache") {
+        b = b.plan_cache(path);
+    }
+    Ok(b)
+}
+
+fn parse_kernel_flag(a: &Args) -> anyhow::Result<Option<KernelKind>> {
+    match a.get("kernel") {
+        None => Ok(None),
+        Some(k) => KernelKind::parse(k).map(Some).ok_or_else(|| {
             anyhow::anyhow!(
                 "bad kernel '{k}' (try b(4,8), b32(1,16), csr, csr5, hybrid, \
                  tiled, tiled(4096))"
             )
-        })?,
-    };
+        }),
+    }
+}
+
+fn cmd_spmv(a: &Args) -> anyhow::Result<()> {
+    let (name, csr) = load_matrix(a)?;
+    let kernel_flag = parse_kernel_flag(a)?;
     let threads = a.get_usize("threads", 1)?;
     let numa = a.has("numa");
-    let panel_rows =
-        a.get_usize("panel-rows", spc5::formats::hybrid::DEFAULT_PANEL_ROWS)?;
-    let tile_cols = match a.get("tile-cols") {
-        None => None,
-        Some(v) => Some(v.parse::<usize>().map_err(|_| {
-            anyhow::anyhow!("--tile-cols expects a number, got '{v}'")
-        })?),
-    };
-    let tile_auto = a.has("tile-auto");
-    let reorder = match a.get("reorder") {
-        None => None,
-        Some(r) => Some(spc5::matrix::ReorderKind::parse(r).ok_or_else(
-            || anyhow::anyhow!("bad --reorder '{r}' (expects rcm|colpack)"),
-        )?),
-    };
     let nnz = csr.nnz();
 
     let precision = a.get("precision").unwrap_or("f64");
     if precision != "f32" && precision != "f64" {
         anyhow::bail!("--precision expects f32 or f64, got '{precision}'");
     }
-    let reorder_note = reorder
-        .map(|r| format!(" reorder={r}"))
-        .unwrap_or_default();
 
     // One engine serves every KernelKind — β kernels, CSR, CSR5 and
     // the hybrid panel schedule — at either precision.
     if precision == "f32" {
-        let mut b = SpmvEngine::builder(csr.to_precision::<f32>())
-            .threads(threads)
-            .numa_split(numa)
-            .kernel(kernel)
-            .panel_rows(panel_rows);
-        if let Some(r) = reorder {
-            b = b.reorder(r);
-        }
-        if tile_auto {
-            b = b.tile_auto();
-        }
-        if let Some(n) = tile_cols {
-            // An explicit width wins over --tile-auto when both given.
-            b = b.tile_cols(n);
-        }
+        anyhow::ensure!(
+            !a.has("plan"),
+            "--plan drives the f64 engine; drop --precision f32"
+        );
+        let b = apply_engine_flags(
+            SpmvEngine::builder(csr.to_precision::<f32>()),
+            a,
+            Some(kernel_flag.unwrap_or(KernelKind::Beta(1, 8))),
+        )?;
         let engine = b.build()?;
+        let kernel = engine.kernel();
+        let reorder_note = engine
+            .reorder_kind()
+            .map(|r| format!(" reorder={r}"))
+            .unwrap_or_default();
         let tile_note = engine
             .tile_cols()
             .map(|t| format!(" tile={t}"))
@@ -247,22 +282,46 @@ fn cmd_spmv(a: &Args) -> anyhow::Result<()> {
             spmv_gflops(nnz, seconds)
         );
     } else {
-        let mut b = SpmvEngine::builder(csr)
-            .threads(threads)
-            .numa_split(numa)
-            .kernel(kernel)
-            .panel_rows(panel_rows);
-        if let Some(r) = reorder {
-            b = b.reorder(r);
-        }
-        if tile_auto {
-            b = b.tile_auto();
-        }
-        if let Some(n) = tile_cols {
-            // An explicit width wins over --tile-auto when both given.
-            b = b.tile_cols(n);
-        }
-        let engine = b.build()?;
+        // `--plan FILE` instantiates the executor from a saved plan —
+        // no selection, no re-inspection, fingerprint-checked.
+        let engine = match a.get("plan") {
+            Some(path) => {
+                // The plan fixes the whole configuration; a flag that
+                // would silently be overridden is an error, not a
+                // no-op.
+                for flag in [
+                    "kernel",
+                    "threads",
+                    "numa",
+                    "reorder",
+                    "panel-rows",
+                    "tile-cols",
+                    "tile-auto",
+                    "plan-cache",
+                ] {
+                    anyhow::ensure!(
+                        !a.has(flag),
+                        "--plan fixes the whole engine configuration; \
+                         drop --{flag}"
+                    );
+                }
+                let plan = SpmvPlan::load(path)?;
+                SpmvEngine::from_plan(csr, &plan)?
+            }
+            None => {
+                let b = apply_engine_flags(
+                    SpmvEngine::builder(csr),
+                    a,
+                    Some(kernel_flag.unwrap_or(KernelKind::Beta(1, 8))),
+                )?;
+                b.build()?
+            }
+        };
+        let kernel = engine.kernel();
+        let reorder_note = engine
+            .reorder_kind()
+            .map(|r| format!(" reorder={r}"))
+            .unwrap_or_default();
         let tile_note = engine
             .tile_cols()
             .map(|t| format!(" tile={t}"))
@@ -296,11 +355,46 @@ fn cmd_spmv(a: &Args) -> anyhow::Result<()> {
             );
         }
         println!(
-            "{name}: kernel={kernel} precision=f64 threads={threads} \
-             numa={numa}{reorder_note}{tile_note} nnz={nnz} time={seconds:.6}s \
+            "{name}: kernel={kernel} precision=f64 threads={} \
+             numa={}{reorder_note}{tile_note} nnz={nnz} time={seconds:.6}s \
              gflops={:.3}",
+            engine.threads(),
+            engine.plan().numa_split,
             spmv_gflops(nnz, seconds)
         );
+    }
+    Ok(())
+}
+
+/// The inspection phase alone: select, rank and resolve — print the
+/// resulting `SpmvPlan` as JSON, converting nothing. `--save FILE`
+/// persists it for a later `spmv --plan FILE` (possibly on another
+/// machine: the tile width is resolved at plan time).
+fn cmd_plan(a: &Args) -> anyhow::Result<()> {
+    let (name, csr) = load_matrix(a)?;
+    let kernel_flag = parse_kernel_flag(a)?;
+    let store = match a.get("records") {
+        Some(path) => Some(RecordStore::load(path)?),
+        None => None,
+    };
+    let b = apply_engine_flags(SpmvEngine::builder(csr), a, kernel_flag)?;
+    let plan = match &store {
+        Some(s) => b.records(s).plan()?,
+        None => b.plan()?,
+    };
+    eprintln!(
+        "plan for {name}: kernel={} threads={} tile={:?} segments={} \
+         fingerprint={}",
+        plan.kernel,
+        plan.threads,
+        plan.tile_cols,
+        plan.schedule.len(),
+        plan.fingerprint.key()
+    );
+    println!("{}", plan.to_json());
+    if let Some(out) = a.get("save") {
+        plan.save(out)?;
+        eprintln!("saved plan to {out}");
     }
     Ok(())
 }

@@ -167,6 +167,12 @@ impl<T: Scalar> ParallelSpmv<T> {
         &self.pool
     }
 
+    /// Whether this executor runs the Algorithm-2 `test` kernel
+    /// variant.
+    pub fn algo2_test(&self) -> bool {
+        self.test
+    }
+
     /// Builds one worker's persistent state. Called on the worker's own
     /// thread (attach time, or lazily if the slot was evicted), so the
     /// copies land on the local memory node by first touch.

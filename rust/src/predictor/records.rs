@@ -38,8 +38,23 @@ impl RecordStore {
         Self::default()
     }
 
+    /// Adds a measurement, deduplicating by
+    /// `(matrix, kernel, threads, tile_cols)`: a re-measurement of the
+    /// same configuration replaces the old record (latest wins), so a
+    /// store fed by repeated bench runs stays bounded instead of
+    /// growing without limit — and the fitted surfaces see current
+    /// hardware behavior, not a mixture of stale and fresh samples.
     pub fn push(&mut self, r: PerfRecord) {
-        self.records.push(r);
+        let key = self.records.iter().position(|p| {
+            p.matrix == r.matrix
+                && p.kernel == r.kernel
+                && p.threads == r.threads
+                && p.tile_cols == r.tile_cols
+        });
+        match key {
+            Some(i) => self.records[i] = r,
+            None => self.records.push(r),
+        }
     }
 
     /// All records of one kernel at a given thread count.
@@ -208,6 +223,39 @@ mod tests {
         .unwrap();
         assert_eq!(s.records[0].kernel, KernelKind::Tiled(4096));
         assert_eq!(s.records[0].tile_cols, 4096);
+    }
+
+    #[test]
+    fn push_dedupes_by_configuration() {
+        // Re-measuring the same (matrix, kernel, threads, tile_cols)
+        // must replace, not append — bench runs used to grow the store
+        // without bound.
+        let mut s = RecordStore::new();
+        let rec = |gflops: f64| PerfRecord {
+            matrix: "m".to_string(),
+            kernel: KernelKind::Beta(2, 8),
+            avg_nnz_per_block: 3.0,
+            threads: 2,
+            tile_cols: 0,
+            gflops,
+        };
+        s.push(rec(1.0));
+        s.push(rec(2.5)); // same key: replaces
+        assert_eq!(s.records.len(), 1);
+        assert_eq!(s.records[0].gflops, 2.5, "latest record wins");
+        // Any key component differing appends a separate record.
+        s.push(PerfRecord { threads: 4, ..rec(3.0) });
+        s.push(PerfRecord { tile_cols: 4096, ..rec(3.1) });
+        s.push(PerfRecord { kernel: KernelKind::Csr, ..rec(3.2) });
+        s.push(PerfRecord { matrix: "other".into(), ..rec(3.3) });
+        assert_eq!(s.records.len(), 5);
+        // Saturation: pushing the whole set again leaves it unchanged
+        // in size (the "repeated bench run" scenario).
+        let before = s.records.len();
+        for r in s.records.clone() {
+            s.push(r);
+        }
+        assert_eq!(s.records.len(), before);
     }
 
     #[test]

@@ -1,0 +1,313 @@
+//! Inspector–executor integration tests: `plan()` → JSON →
+//! `from_plan()` must reproduce `build()` bit-for-bit, fingerprints
+//! must fence plans to their matrix, and the plan cache must serve
+//! repeat builds without re-inspection.
+
+use spc5::matrix::suite;
+use spc5::predictor::{PerfRecord, RecordStore};
+use spc5::{Csr, KernelKind, MatrixFingerprint, PlanCache, SpmvEngine, SpmvPlan};
+
+fn spmv_out(e: &SpmvEngine, x: &[f64]) -> Vec<f64> {
+    let mut y = vec![0.0; e.csr().rows];
+    e.spmv_into(x, &mut y);
+    y
+}
+
+/// A store that plants β(4,8) as the high-fill winner so the
+/// predictor (and the hybrid panel ranking) has fitted surfaces.
+fn planted_store() -> RecordStore {
+    let mut store = RecordStore::new();
+    for i in 0..16 {
+        let avg = 1.0 + i as f64 * 2.0;
+        for (kernel, gflops) in [
+            (KernelKind::Csr, 1.4),
+            (KernelKind::Beta(1, 8), 0.9 + 0.08 * avg),
+            (KernelKind::Beta(4, 8), 0.4 + 0.12 * avg),
+        ] {
+            store.push(PerfRecord {
+                matrix: format!("m{i}"),
+                kernel,
+                avg_nnz_per_block: avg,
+                threads: 1,
+                tile_cols: 0,
+                gflops,
+            });
+        }
+    }
+    store
+}
+
+/// The acceptance matrix: plan → serialize → deserialize → from_plan
+/// equals build() exactly, across kernel classes, thread counts and
+/// tiling.
+#[test]
+fn plan_json_from_plan_reproduces_build() {
+    let csr = suite::mixed_band_scatter(1_536, 9);
+    let x: Vec<f64> = (0..csr.cols).map(|i| (i % 11) as f64 - 5.0).collect();
+    let store = planted_store();
+
+    type Cfg = (
+        &'static str,
+        Box<dyn Fn(Csr) -> spc5::SpmvEngineBuilder<'static, f64>>,
+    );
+    let configs: Vec<Cfg> = vec![
+        ("predictor-driven", Box::new(SpmvEngine::builder)),
+        (
+            "beta-2x8-par",
+            Box::new(|m: Csr| {
+                SpmvEngine::builder(m)
+                    .kernel(KernelKind::Beta(2, 8))
+                    .threads(3)
+            }),
+        ),
+        (
+            "beta-test-tiled",
+            Box::new(|m: Csr| {
+                SpmvEngine::builder(m)
+                    .kernel(KernelKind::BetaTest(2, 4))
+                    .tile_cols(192)
+                    .panel_rows(64)
+            }),
+        ),
+        (
+            "hybrid-par",
+            Box::new(|m: Csr| {
+                SpmvEngine::builder(m)
+                    .kernel(KernelKind::Hybrid)
+                    .panel_rows(128)
+                    .threads(3)
+            }),
+        ),
+        (
+            "tiled-kernel",
+            Box::new(|m: Csr| {
+                SpmvEngine::builder(m)
+                    .kernel(KernelKind::Tiled(256))
+                    .panel_rows(64)
+            }),
+        ),
+        (
+            "csr-par",
+            Box::new(|m: Csr| {
+                SpmvEngine::builder(m).kernel(KernelKind::Csr).threads(2)
+            }),
+        ),
+        (
+            "csr5",
+            Box::new(|m: Csr| SpmvEngine::builder(m).kernel(KernelKind::Csr5)),
+        ),
+    ];
+
+    for (label, make) in &configs {
+        // The built engine (inspection + instantiation fused).
+        let built = make(csr.clone()).records(&store).build().unwrap();
+        // The same decisions through the serialized plan.
+        let plan = make(csr.clone()).records(&store).plan().unwrap();
+        let text = plan.to_json();
+        let parsed = SpmvPlan::from_json(&text).unwrap();
+        assert_eq!(plan, parsed, "{label}: JSON round trip");
+        let from_plan = SpmvEngine::from_plan(csr.clone(), &parsed).unwrap();
+
+        assert_eq!(built.kernel(), from_plan.kernel(), "{label}: kernel");
+        assert_eq!(
+            built.tile_cols(),
+            from_plan.tile_cols(),
+            "{label}: resolved tile width"
+        );
+        assert_eq!(built.threads(), from_plan.threads(), "{label}: threads");
+        assert_eq!(built.plan(), from_plan.plan(), "{label}: stored plan");
+        // Bit-for-bit: identical storage ⇒ identical summation order.
+        let y_built = spmv_out(&built, &x);
+        let y_plan = spmv_out(&from_plan, &x);
+        assert_eq!(y_built, y_plan, "{label}: spmv output must be bit-equal");
+    }
+}
+
+#[test]
+fn hybrid_plan_records_schedule_and_reproduces_it() {
+    let csr = suite::mixed_band_scatter(2_048, 5);
+    let store = planted_store();
+    let plan = SpmvEngine::builder(csr.clone())
+        .kernel(KernelKind::Hybrid)
+        .panel_rows(128)
+        .records(&store)
+        .plan()
+        .unwrap();
+    assert!(
+        !plan.schedule.is_empty(),
+        "hybrid plan must carry the compiled schedule"
+    );
+    // The schedule covers all rows contiguously.
+    assert_eq!(plan.schedule.first().unwrap().row_begin, 0);
+    assert_eq!(plan.schedule.last().unwrap().row_end, csr.rows);
+
+    // Instantiation without the record store reproduces the exact
+    // segment choices (the decisions live in the plan, not the
+    // predictor).
+    let e = SpmvEngine::from_plan(csr.clone(), &plan).unwrap();
+    let hm = e.hybrid().expect("hybrid storage");
+    assert_eq!(hm.n_segments(), plan.schedule.len());
+    for (seg, entry) in hm.segments.iter().zip(&plan.schedule) {
+        assert_eq!(seg.row_begin, entry.row_begin);
+        assert_eq!(seg.row_end, entry.row_end);
+        assert_eq!(seg.kernel, entry.kernel);
+    }
+}
+
+#[test]
+fn from_plan_rejects_wrong_matrix() {
+    let a = suite::poisson2d(20);
+    let b = suite::poisson2d(21); // different dims
+    let c = suite::uniform_scatter(a.rows, 5, 7); // same rows, other shape
+    let plan = SpmvEngine::builder(a.clone()).plan().unwrap();
+    assert_eq!(plan.fingerprint, MatrixFingerprint::of(&a));
+
+    let err = match SpmvEngine::from_plan(b, &plan) {
+        Err(e) => e,
+        Ok(_) => panic!("plan must refuse a different matrix"),
+    };
+    assert!(
+        err.to_string().contains("fingerprint"),
+        "error should name the fingerprint: {err}"
+    );
+    assert!(SpmvEngine::from_plan(c, &plan).is_err());
+    // The right matrix still instantiates.
+    SpmvEngine::from_plan(a, &plan).unwrap();
+}
+
+#[test]
+fn plan_cache_persists_and_serves_repeat_builds() {
+    let dir = std::env::temp_dir().join("spc5_plan_cache_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("plans.json");
+    std::fs::remove_file(&path).ok();
+
+    let csr = suite::fem_blocked(400, 3, 6, 21);
+    let store = planted_store();
+
+    // Miss: plans, stores, saves.
+    let e1 = SpmvEngine::builder(csr.clone())
+        .records(&store)
+        .plan_cache(&path)
+        .build()
+        .unwrap();
+    let cache = PlanCache::load(&path).unwrap();
+    assert_eq!(cache.len(), 1, "first build must persist its plan");
+    let fp = MatrixFingerprint::of(&csr);
+    assert_eq!(cache.find(&fp, 1).unwrap().kernel, e1.kernel());
+
+    // Hit: even with records that would now select differently, the
+    // cached plan wins — proof the inspection phase was skipped.
+    let mut contrarian = RecordStore::new();
+    for i in 0..16 {
+        contrarian.push(PerfRecord {
+            matrix: format!("m{i}"),
+            kernel: KernelKind::Csr,
+            avg_nnz_per_block: 1.0 + i as f64,
+            threads: 1,
+            tile_cols: 0,
+            gflops: 99.0,
+        });
+        contrarian.push(PerfRecord {
+            matrix: format!("m{i}"),
+            kernel: KernelKind::Beta(1, 8),
+            avg_nnz_per_block: 1.0 + i as f64,
+            threads: 1,
+            tile_cols: 0,
+            gflops: 0.01,
+        });
+    }
+    let e2 = SpmvEngine::builder(csr.clone())
+        .records(&contrarian)
+        .plan_cache(&path)
+        .build()
+        .unwrap();
+    assert_eq!(e2.kernel(), e1.kernel(), "cache hit must skip selection");
+    assert_eq!(e2.plan(), e1.plan());
+
+    // A different thread count is a different cache key.
+    let e3 = SpmvEngine::builder(csr.clone())
+        .records(&store)
+        .threads(3)
+        .plan_cache(&path)
+        .build()
+        .unwrap();
+    assert_eq!(e3.threads(), 3);
+    let cache = PlanCache::load(&path).unwrap();
+    assert_eq!(cache.len(), 2);
+
+    // An incompatible builder config (explicit conflicting kernel)
+    // bypasses the cached entry and replans.
+    let e4 = SpmvEngine::builder(csr.clone())
+        .kernel(KernelKind::Csr)
+        .plan_cache(&path)
+        .build()
+        .unwrap();
+    assert_eq!(e4.kernel(), KernelKind::Csr);
+
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn plan_outputs_match_engine_outputs_under_reorder() {
+    // Reordering is part of the plan: a reordered plan instantiates a
+    // reordered engine with caller-index-space products.
+    let csr = suite::quantum_clusters(400, 3, 8, 6, 5);
+    let x: Vec<f64> = (0..csr.cols).map(|i| (i % 7) as f64 - 3.0).collect();
+    let built = SpmvEngine::builder(csr.clone())
+        .kernel(KernelKind::Beta(2, 4))
+        .reorder(spc5::matrix::ReorderKind::Rcm)
+        .build()
+        .unwrap();
+    let plan = SpmvEngine::builder(csr.clone())
+        .kernel(KernelKind::Beta(2, 4))
+        .reorder(spc5::matrix::ReorderKind::Rcm)
+        .plan()
+        .unwrap();
+    let restored =
+        SpmvEngine::from_plan(csr, &SpmvPlan::from_json(&plan.to_json()).unwrap())
+            .unwrap();
+    assert_eq!(restored.reorder_kind(), built.reorder_kind());
+    assert_eq!(spmv_out(&built, &x), spmv_out(&restored, &x));
+}
+
+#[test]
+fn f32_plans_roundtrip() {
+    let csr32: spc5::Csr<f32> = suite::poisson2d(24).to_precision();
+    let built = SpmvEngine::builder(csr32.clone())
+        .kernel(KernelKind::Beta(1, 16))
+        .build()
+        .unwrap();
+    let plan = SpmvEngine::builder(csr32.clone())
+        .kernel(KernelKind::Beta(1, 16))
+        .plan()
+        .unwrap();
+    let plan = SpmvPlan::from_json(&plan.to_json()).unwrap();
+    let restored = SpmvEngine::from_plan(csr32.clone(), &plan).unwrap();
+    assert_eq!(restored.kernel(), KernelKind::Beta(1, 16));
+    let x: Vec<f32> = (0..csr32.cols).map(|i| (i % 5) as f32 * 0.5).collect();
+    let mut y_b = vec![0.0f32; csr32.rows];
+    let mut y_p = vec![0.0f32; csr32.rows];
+    built.spmv_into(&x, &mut y_b);
+    restored.spmv_into(&x, &mut y_p);
+    assert_eq!(y_b, y_p, "f32 plan instantiation must be bit-equal");
+}
+
+#[test]
+fn malformed_plans_refuse_instantiation() {
+    let csr = suite::poisson2d(16);
+    let good = SpmvEngine::builder(csr.clone())
+        .kernel(KernelKind::Hybrid)
+        .panel_rows(64)
+        .plan()
+        .unwrap()
+        .to_json();
+    // Corrupt the schedule's row coverage: instantiation re-validates.
+    let bad = good.replace("\"row_begin\":0", "\"row_begin\":8");
+    let plan = SpmvPlan::from_json(&bad).unwrap();
+    assert!(SpmvEngine::from_plan(csr.clone(), &plan).is_err());
+    // A hybrid plan stripped of its schedule cannot instantiate.
+    let mut no_sched = SpmvPlan::from_json(&good).unwrap();
+    no_sched.schedule.clear();
+    assert!(SpmvEngine::from_plan(csr, &no_sched).is_err());
+}

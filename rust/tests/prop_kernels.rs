@@ -178,3 +178,56 @@ fn prop_partitioner_covers_disjointly() {
         }
     });
 }
+
+#[test]
+fn prop_kernel_kind_display_parse_roundtrip() {
+    // Plans serialize kernels as their Display strings, so the
+    // spelling must survive `Display → parse` exactly — for every
+    // variant, including the f32-wide β sizes, the test variants, and
+    // tiled widths (0 spells auto).
+    let fixed: Vec<KernelKind> = KernelKind::ALL
+        .into_iter()
+        .chain(KernelKind::F32_WIDE_KERNELS)
+        .chain([
+            KernelKind::Hybrid,
+            KernelKind::Tiled(0),
+            KernelKind::Tiled(1),
+            KernelKind::Tiled(4096),
+            KernelKind::Tiled(u32::MAX),
+            KernelKind::BetaTest(1, 16),
+            KernelKind::BetaTest(4, 16),
+        ])
+        .collect();
+    for k in fixed {
+        assert_eq!(
+            KernelKind::parse(&k.to_string()),
+            Some(k),
+            "round trip failed for {k}"
+        );
+    }
+    // Randomized sweep over the payload space.
+    for_each_seed(200, 0xA009, |seed| {
+        let mut rng = spc5::util::Rng::new(seed);
+        let r = 1 + rng.next_below(16) as u8;
+        let c = 1 + rng.next_below(16) as u8;
+        let w = rng.next_u64() as u32;
+        for k in [
+            KernelKind::Beta(r, c),
+            KernelKind::BetaTest(r, c),
+            KernelKind::Tiled(w),
+        ] {
+            let spelled = k.to_string();
+            assert_eq!(
+                KernelKind::parse(&spelled),
+                Some(k),
+                "round trip failed for {k} ({spelled}) seed={seed:#x}"
+            );
+            // Case-insensitivity is part of the contract.
+            assert_eq!(
+                KernelKind::parse(&spelled.to_ascii_uppercase()),
+                Some(k),
+                "case-insensitive parse failed for {spelled}"
+            );
+        }
+    });
+}
