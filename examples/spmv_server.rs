@@ -94,6 +94,18 @@ fn main() -> anyhow::Result<()> {
     println!("latency p50   : {:.2} ms", stats.p50_s * 1e3);
     println!("latency p95   : {:.2} ms", stats.p95_s * 1e3);
     println!("latency p99   : {:.2} ms", stats.p99_s * 1e3);
+    println!(
+        "  queued p50/p95  : {:.2}/{:.2} ms (time before dispatch)",
+        stats.queue.p50_s * 1e3,
+        stats.queue.p95_s * 1e3
+    );
+    println!(
+        "  compute p50/p95 : {:.2}/{:.2} ms (batched kernel time)",
+        stats.compute.p50_s * 1e3,
+        stats.compute.p95_s * 1e3
+    );
+    println!("rejected      : {}", stats.rejected);
+    println!("queue depth hw: {}", stats.queue_depth_high_water);
     println!("batches       : {}", stats.batches);
     print!("batch sizes   :");
     for (i, &count) in stats.batch_hist.iter().enumerate() {

@@ -7,7 +7,10 @@
 //! so `Avg(r,c)` moves while dims and nnz structure stay comparable.
 
 use spc5::bench::{bench_vector, runner, to_record, Measurement, Table, RUNS};
-use spc5::coordinator::SpmvEngine;
+use spc5::coordinator::{
+    QueuePolicy, Request, ServiceError, ShardConfig, ShardedService,
+    SpmvEngine,
+};
 use spc5::formats::{csr_to_block, BlockSize};
 use spc5::kernels::{avx512, scalar, spmm, spmv_block, KernelKind, KernelSet};
 use spc5::matrix::{reorder, suite, Csr};
@@ -25,6 +28,7 @@ fn main() {
             "prefetch" => return prefetch_ablation(),
             "tile" => return tile_ablation(),
             "plan" => return plan_ablation(),
+            "serve" => return serve_ablation(),
             other => {
                 eprintln!("unknown SPC5_ABLATION='{other}', running all")
             }
@@ -43,6 +47,7 @@ fn main() {
     hybrid_ablation();
     tile_ablation();
     plan_ablation();
+    serve_ablation();
 }
 
 /// GFlop/s vs block fill for every kernel.
@@ -485,6 +490,119 @@ fn plan_ablation() {
     match runner::write_bench_json(
         std::path::Path::new(&out),
         "kernel_micro/plan",
+        &all,
+    ) {
+        Ok(()) => eprintln!("  wrote {out}"),
+        Err(e) => eprintln!("warning: {e}"),
+    }
+}
+
+/// Serving-tier ablation: offered load through the sharded,
+/// admission-controlled front-end, sweeping shards × queue policy ×
+/// burst size on one blocked FEM matrix. Bursts larger than the
+/// admission capacity are where the policies diverge: `reject` sheds
+/// the overflow (counted), `block` applies backpressure (the driver
+/// clamps its burst to capacity — a blocking submit with no concurrent
+/// consumer would deadlock). Served throughput per configuration is
+/// persisted to `BENCH_6.json` (CI artifact next to BENCH_3/4/5).
+fn serve_ablation() {
+    let csr = suite::fem_blocked(8_000, 3, 8, 9);
+    let nnz = csr.nnz();
+    let requests = 160usize;
+    let capacity = 8usize;
+
+    let mut all: Vec<Measurement> = Vec::new();
+    let mut t = Table::new(
+        "Ablation M: sharded serving — shards × admission policy × burst \
+         (fem-8k, b(1,8), capacity 8, 160 offered requests)",
+        &["shards", "policy", "burst", "served", "rejected", "in-flight hw",
+          "GF/s"],
+    );
+    for shards in [1usize, 2, 4] {
+        for (policy_name, policy) in [
+            ("block(8)", QueuePolicy::Block { capacity }),
+            ("reject(8)", QueuePolicy::Reject { capacity }),
+        ] {
+            for burst in [4usize, 16] {
+                let service = ShardedService::start(
+                    csr.clone(),
+                    ShardConfig {
+                        shards,
+                        kernel: Some(KernelKind::Beta(1, 8)),
+                        max_batch: 8,
+                        queue: policy,
+                        ..ShardConfig::default()
+                    },
+                )
+                .expect("sharded service starts");
+                let eff_burst = match policy {
+                    QueuePolicy::Block { .. } => burst.min(capacity),
+                    _ => burst,
+                };
+                let timer = spc5::util::Timer::start();
+                let mut rejected = 0usize;
+                let mut id = 0u64;
+                while (id as usize) < requests {
+                    let mut outstanding = 0usize;
+                    for _ in 0..eff_burst {
+                        if id as usize >= requests {
+                            break;
+                        }
+                        let x = bench_vector(csr.cols, 0xBE7C ^ id);
+                        match service.submit(Request { id, x }) {
+                            Ok(()) => outstanding += 1,
+                            Err(ServiceError::Overloaded { .. }) => {
+                                rejected += 1
+                            }
+                            Err(e) => panic!("submit failed: {e}"),
+                        }
+                        id += 1;
+                    }
+                    for _ in 0..outstanding {
+                        service.recv().expect("response");
+                    }
+                }
+                let wall = timer.elapsed_s();
+                let stats = service.stats();
+                let served = stats.served;
+                let hw = stats.in_flight_high_water;
+                service.shutdown();
+                let gflops = 2.0 * nnz as f64 * served as f64 / wall / 1e9;
+                all.push(Measurement {
+                    matrix: format!(
+                        "fem-8k/shards={shards}/queue={policy_name}\
+                         /burst={burst}"
+                    ),
+                    kernel: KernelKind::Beta(1, 8),
+                    threads: shards,
+                    numa: false,
+                    tile_cols: 0,
+                    gflops,
+                    seconds: wall,
+                });
+                t.row(vec![
+                    format!("{shards}"),
+                    policy_name.to_string(),
+                    format!("{burst}"),
+                    format!("{served}"),
+                    format!("{rejected}"),
+                    format!("{hw}"),
+                    format!("{gflops:.2}"),
+                ]);
+                eprintln!(
+                    "  serve ablation: shards={shards} {policy_name} \
+                     burst={burst} served={served} rejected={rejected}"
+                );
+            }
+        }
+    }
+    t.emit("ablation_serve");
+
+    let out = std::env::var("SPC5_BENCH6_JSON")
+        .unwrap_or_else(|_| "BENCH_6.json".to_string());
+    match runner::write_bench_json(
+        std::path::Path::new(&out),
+        "kernel_micro/serve",
         &all,
     ) {
         Ok(()) => eprintln!("  wrote {out}"),

@@ -1,0 +1,515 @@
+//! Sharded serving front-end: one matrix, many engines.
+//!
+//! [`ShardedService`] row-partitions a matrix into nnz-balanced
+//! shards (via [`crate::parallel::balanced_row_ranges`] over the CSR
+//! row pointer), builds an independent [`SpmvEngine`] — its own
+//! kernel storage, worker pool and optional NUMA-local arrays — per
+//! shard, and runs one [`SpmvService`] dispatcher per shard. A
+//! request is admitted **once** at the front-end's [`AdmissionGate`],
+//! fanned out to every shard, and the per-shard `y` slices are
+//! concatenated back into one response on receive.
+//!
+//! ```text
+//!            submit(x)                 recv() → y
+//!               │                          ▲
+//!        AdmissionGate (capacity,      fan-in: concat
+//!        Block/Reject/Timeout)         y₀ ‖ y₁ ‖ … ‖ yₙ
+//!               │                          │
+//!       ┌───────┼──────────┐       ┌───────┼──────────┐
+//!       ▼       ▼          ▼       │       │          │
+//!   shard 0  shard 1 …  shard n    │       │          │
+//!   rows     rows          rows    │       │          │
+//!   [0,r₁)   [r₁,r₂)    [rₙ,rows)  │       │          │
+//!   engine₀  engine₁    engineₙ ───┴───────┴──────────┘
+//! ```
+//!
+//! Shard boundaries are aligned to the 8-row β interval, so each
+//! shard's block structure is exactly the full matrix's restricted to
+//! its rows — the sharded product is **bit-identical** to the
+//! single-engine one for the same kernel configuration.
+//!
+//! Per-shard queues use `Block` at the gate's capacity: because the
+//! gate already bounds cluster-wide in-flight requests to that same
+//! capacity, shard queues can never fill, so the fan-out never blocks
+//! or rejects mid-request (no partially-admitted requests).
+
+use super::engine::SpmvEngine;
+use super::service::{
+    LatencyPercentiles, RecvTimeoutError, Request, Response, ServiceError,
+    ServiceStats, SpmvService,
+};
+use super::serving::{AdmissionGate, PushError, QueuePolicy};
+use crate::kernels::KernelKind;
+use crate::matrix::Csr;
+use crate::parallel::balanced_row_ranges;
+use crate::scalar::Scalar;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Shard-boundary alignment: the β formats group rows into 8-row
+/// intervals and form blocks jointly across an interval, so cuts on
+/// this boundary preserve the full matrix's block partitioning.
+pub const SHARD_ROW_ALIGN: usize = 8;
+
+/// How to cut and drive the shards.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardConfig {
+    /// Requested shard count (the effective count can be lower for
+    /// tiny matrices; see [`ShardedService::n_shards`]).
+    pub shards: usize,
+    /// Worker threads per shard engine (1 = sequential shard).
+    pub threads_per_shard: usize,
+    /// First-touch NUMA placement inside each shard's pool.
+    pub numa_split: bool,
+    /// Kernel for every shard; `None` lets each shard's inspector
+    /// choose (may differ per shard — pin a kernel when bit-identical
+    /// results against a single engine are required).
+    pub kernel: Option<KernelKind>,
+    /// Per-shard micro-batching limit (as [`SpmvService::start`]).
+    pub max_batch: usize,
+    /// Front-end admission policy (capacity + overflow behavior).
+    pub queue: QueuePolicy,
+}
+
+impl Default for ShardConfig {
+    fn default() -> Self {
+        ShardConfig {
+            shards: 2,
+            threads_per_shard: 1,
+            numa_split: false,
+            kernel: None,
+            max_batch: 8,
+            queue: QueuePolicy::default(),
+        }
+    }
+}
+
+/// Cluster-level statistics: per-shard snapshots plus front-end
+/// admission counters.
+#[derive(Clone, Debug)]
+pub struct ClusterStats {
+    /// Fully assembled responses handed to clients.
+    pub served: usize,
+    /// Requests refused at the admission gate.
+    pub rejected: usize,
+    /// Highest cluster-wide in-flight count (≤ capacity).
+    pub in_flight_high_water: usize,
+    /// One [`ServiceStats`] per shard, in row order.
+    pub shards: Vec<ServiceStats>,
+}
+
+impl ClusterStats {
+    /// Collapses the per-shard stats into one service-shaped view:
+    /// counters are summed, latency percentiles take the **max**
+    /// across shards (a request completes when its slowest shard
+    /// does, so the max is the conservative critical-path estimate),
+    /// and the queue-depth high-water is the front-end gate's.
+    pub fn rollup(&self) -> ServiceStats {
+        let mut batches = 0usize;
+        let mut batch_hist: Vec<usize> = Vec::new();
+        let mut total = LatencyPercentiles::default();
+        let mut queue = LatencyPercentiles::default();
+        let mut compute = LatencyPercentiles::default();
+        for s in &self.shards {
+            batches += s.batches;
+            for (i, &c) in s.batch_hist.iter().enumerate() {
+                if batch_hist.len() <= i {
+                    batch_hist.resize(i + 1, 0);
+                }
+                batch_hist[i] += c;
+            }
+            total = max_pct(
+                total,
+                LatencyPercentiles {
+                    p50_s: s.p50_s,
+                    p95_s: s.p95_s,
+                    p99_s: s.p99_s,
+                },
+            );
+            queue = max_pct(queue, s.queue);
+            compute = max_pct(compute, s.compute);
+        }
+        ServiceStats {
+            served: self.served,
+            rejected: self.rejected,
+            batches,
+            p50_s: total.p50_s,
+            p95_s: total.p95_s,
+            p99_s: total.p99_s,
+            queue,
+            compute,
+            queue_depth_high_water: self.in_flight_high_water,
+            batch_hist,
+        }
+    }
+}
+
+fn max_pct(a: LatencyPercentiles, b: LatencyPercentiles) -> LatencyPercentiles {
+    LatencyPercentiles {
+        p50_s: a.p50_s.max(b.p50_s),
+        p95_s: a.p95_s.max(b.p95_s),
+        p99_s: a.p99_s.max(b.p99_s),
+    }
+}
+
+/// A partially assembled fan-in: per-shard responses collected so far
+/// for the oldest outstanding request. Survives a `recv_timeout`
+/// deadline so a later receive resumes where it stopped.
+struct PartialFanIn<T: Scalar> {
+    parts: Vec<Option<Response<T>>>,
+}
+
+/// The sharded front-end (see module docs). `Sync`: submissions and
+/// receives may come from different threads; concurrent receivers
+/// serialize on the fan-in state.
+pub struct ShardedService<T: Scalar = f64> {
+    shards: Vec<SpmvService<T>>,
+    /// `row_bounds[i]..row_bounds[i+1]` = shard `i`'s rows.
+    row_bounds: Vec<usize>,
+    gate: AdmissionGate,
+    rows: usize,
+    cols: usize,
+    partial: Mutex<PartialFanIn<T>>,
+    assembled: AtomicUsize,
+    rejected: AtomicUsize,
+}
+
+impl<T: Scalar> ShardedService<T> {
+    /// Cuts `csr` into at most `cfg.shards` row shards (8-row-aligned,
+    /// nnz-balanced, empty shards dropped), builds one engine and one
+    /// dispatcher per shard, and opens the admission gate.
+    pub fn start(
+        csr: Csr<T>,
+        cfg: ShardConfig,
+    ) -> anyhow::Result<ShardedService<T>> {
+        anyhow::ensure!(cfg.shards >= 1, "shard count must be >= 1");
+        anyhow::ensure!(cfg.max_batch >= 1, "max_batch must be >= 1");
+        anyhow::ensure!(csr.rows > 0, "cannot shard an empty matrix");
+        let (rows, cols) = (csr.rows, csr.cols);
+
+        let ranges =
+            balanced_row_ranges(&csr.rowptr, cfg.shards, SHARD_ROW_ALIGN);
+        let mut shards = Vec::with_capacity(ranges.len());
+        let mut row_bounds = Vec::with_capacity(ranges.len() + 1);
+        row_bounds.push(0usize);
+        for &(r0, r1) in &ranges {
+            let sub = csr.row_slice(r0, r1);
+            let mut builder = SpmvEngine::builder(sub)
+                .threads(cfg.threads_per_shard)
+                .numa_split(cfg.numa_split);
+            if let Some(kernel) = cfg.kernel {
+                builder = builder.kernel(kernel);
+            }
+            let engine = builder.build()?;
+            // Block at the gate's capacity: the gate admits at most
+            // `capacity` cluster-wide, so these queues never fill and
+            // a fan-out submit can never block or reject.
+            shards.push(SpmvService::start_with_policy(
+                engine,
+                cfg.max_batch,
+                QueuePolicy::Block { capacity: cfg.queue.capacity() },
+            ));
+            row_bounds.push(r1);
+        }
+        let n = shards.len();
+        Ok(ShardedService {
+            shards,
+            row_bounds,
+            gate: AdmissionGate::new(cfg.queue),
+            rows,
+            cols,
+            partial: Mutex::new(PartialFanIn { parts: (0..n).map(|_| None).collect() }),
+            assembled: AtomicUsize::new(0),
+            rejected: AtomicUsize::new(0),
+        })
+    }
+
+    /// Effective shard count (≤ the configured one for tiny matrices).
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Row boundaries: shard `i` serves rows
+    /// `row_bounds()[i]..row_bounds()[i+1]`.
+    pub fn row_bounds(&self) -> &[usize] {
+        &self.row_bounds
+    }
+
+    /// Rows of the full served matrix.
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Columns of the full served matrix.
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// The front-end admission policy.
+    pub fn policy(&self) -> QueuePolicy {
+        self.gate.policy()
+    }
+
+    /// Fully assembled responses handed to clients so far.
+    pub fn served(&self) -> usize {
+        self.assembled.load(Ordering::Relaxed)
+    }
+
+    /// Requests refused at the admission gate so far.
+    pub fn rejected(&self) -> usize {
+        self.rejected.load(Ordering::Relaxed)
+    }
+
+    /// Admits the request at the front-end gate, then fans it out to
+    /// every shard. Exactly one admission decision per request: by the
+    /// time the gate says yes, no shard queue can be full.
+    pub fn submit(&self, req: Request<T>) -> Result<(), ServiceError> {
+        if req.x.len() != self.cols {
+            return Err(ServiceError::ShapeMismatch {
+                expected: self.cols,
+                got: req.x.len(),
+            });
+        }
+        match self.gate.acquire() {
+            Ok(()) => {}
+            Err(PushError::Full) => {
+                self.rejected.fetch_add(1, Ordering::Relaxed);
+                return Err(ServiceError::Overloaded {
+                    capacity: self.gate.capacity(),
+                });
+            }
+            Err(PushError::Closed) => return Err(ServiceError::Stopped),
+        }
+        let Request { id, mut x } = req;
+        let n = self.shards.len();
+        let mut failed: Option<ServiceError> = None;
+        for (i, shard) in self.shards.iter().enumerate() {
+            // The last shard takes ownership; earlier ones clone.
+            let part =
+                if i + 1 == n { std::mem::take(&mut x) } else { x.clone() };
+            if let Err(e) = shard.submit(Request { id, x: part }) {
+                failed = Some(e);
+                break;
+            }
+        }
+        match failed {
+            None => Ok(()),
+            Some(e) => {
+                // A shard dispatcher died (kernel panic): the service
+                // is unusable; surface the shard's error and free the
+                // gate slot so shutdown isn't blocked.
+                self.gate.release();
+                Err(e)
+            }
+        }
+    }
+
+    /// Blocks for the next fully assembled response.
+    pub fn recv(&self) -> Option<Response<T>> {
+        self.recv_deadline(None).ok()
+    }
+
+    /// Waits up to `wait` for the next fully assembled response. On
+    /// timeout the per-shard responses gathered so far are kept; a
+    /// later receive resumes the assembly — nothing is lost.
+    pub fn recv_timeout(
+        &self,
+        wait: Duration,
+    ) -> Result<Response<T>, RecvTimeoutError> {
+        self.recv_deadline(Instant::now().checked_add(wait))
+    }
+
+    /// Fan-in: one response per shard, in shard order, assembled into
+    /// the full-length `y`. Per-shard dispatchers answer in submission
+    /// order, so the next response of every shard belongs to the
+    /// oldest unassembled request.
+    fn recv_deadline(
+        &self,
+        deadline: Option<Instant>,
+    ) -> Result<Response<T>, RecvTimeoutError> {
+        let mut partial =
+            self.partial.lock().unwrap_or_else(|e| e.into_inner());
+        for (i, shard) in self.shards.iter().enumerate() {
+            if partial.parts[i].is_some() {
+                continue;
+            }
+            let resp = match deadline {
+                None => shard.recv().ok_or(RecvTimeoutError::Stopped)?,
+                Some(dl) => {
+                    let left = dl.saturating_duration_since(Instant::now());
+                    // A zero budget degrades to a try-recv; collected
+                    // parts stay in `partial` when this errs out.
+                    shard.recv_timeout(left)?
+                }
+            };
+            partial.parts[i] = Some(resp);
+        }
+        let parts: Vec<Response<T>> = partial
+            .parts
+            .iter_mut()
+            .map(|p| p.take().expect("all shards answered"))
+            .collect();
+        drop(partial);
+
+        let id = parts[0].id;
+        debug_assert!(
+            parts.iter().all(|p| p.id == id),
+            "shard fan-in desynchronized"
+        );
+        let mut y = Vec::with_capacity(self.rows);
+        let mut queue_s = 0.0f64;
+        let mut compute_s = 0.0f64;
+        for p in parts {
+            y.extend_from_slice(&p.y);
+            // A request is as slow as its slowest shard.
+            queue_s = queue_s.max(p.queue_s);
+            compute_s = compute_s.max(p.compute_s);
+        }
+        self.gate.release();
+        self.assembled.fetch_add(1, Ordering::Relaxed);
+        Ok(Response { id, y, latency_s: queue_s + compute_s, queue_s, compute_s })
+    }
+
+    /// Cluster-level snapshot: admission counters plus one
+    /// [`ServiceStats`] per shard (see [`ClusterStats::rollup`]).
+    pub fn stats(&self) -> ClusterStats {
+        ClusterStats {
+            served: self.served(),
+            rejected: self.rejected(),
+            in_flight_high_water: self.gate.high_water(),
+            shards: self.shards.iter().map(|s| s.stats()).collect(),
+        }
+    }
+
+    /// Graceful shutdown: closes the gate (blocked submitters wake
+    /// with [`ServiceError::Stopped`]), drains every shard and returns
+    /// the number of requests every shard completed.
+    pub fn shutdown(self) -> usize {
+        let ShardedService { shards, gate, .. } = self;
+        gate.close();
+        let mut served = 0usize;
+        for (i, shard) in shards.into_iter().enumerate() {
+            let n = shard.shutdown();
+            // Every admitted request reached every shard, so the
+            // per-shard counts agree; report shard 0's.
+            if i == 0 {
+                served = n;
+            }
+        }
+        served
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::suite;
+
+    fn small_cfg(shards: usize) -> ShardConfig {
+        ShardConfig {
+            shards,
+            kernel: Some(KernelKind::Beta(1, 8)),
+            queue: QueuePolicy::Block { capacity: 64 },
+            ..ShardConfig::default()
+        }
+    }
+
+    #[test]
+    fn sharded_service_serves_correct_results() {
+        let csr = suite::fem_blocked(400, 3, 5, 3);
+        let service =
+            ShardedService::start(csr.clone(), small_cfg(3)).unwrap();
+        assert!(service.n_shards() >= 2, "matrix large enough to shard");
+        assert_eq!(service.row_bounds()[0], 0);
+        assert_eq!(*service.row_bounds().last().unwrap(), csr.rows);
+
+        for id in 0..12u64 {
+            let x: Vec<f64> = (0..csr.cols)
+                .map(|i| ((i as u64 + 3 * id) % 17) as f64 * 0.25)
+                .collect();
+            service.submit(Request { id, x }).unwrap();
+        }
+        for _ in 0..12 {
+            let resp = service.recv().expect("assembled response");
+            assert_eq!(resp.y.len(), csr.rows);
+            let x: Vec<f64> = (0..csr.cols)
+                .map(|i| ((i as u64 + 3 * resp.id) % 17) as f64 * 0.25)
+                .collect();
+            let mut want = vec![0.0; csr.rows];
+            csr.spmv_ref(&x, &mut want);
+            crate::testkit::assert_close(&resp.y, &want, 1e-9, "sharded");
+        }
+        let stats = service.stats();
+        assert_eq!(stats.served, 12);
+        assert_eq!(stats.rejected, 0);
+        assert_eq!(stats.shards.len(), service.n_shards());
+        let rollup = stats.rollup();
+        assert_eq!(rollup.served, 12);
+        assert_eq!(service.shutdown(), 12);
+    }
+
+    #[test]
+    fn sharded_gate_rejects_when_full() {
+        let csr = suite::fem_blocked(200, 3, 5, 3);
+        let cfg = ShardConfig {
+            shards: 2,
+            queue: QueuePolicy::Reject { capacity: 2 },
+            ..small_cfg(2)
+        };
+        let service = ShardedService::start(csr.clone(), cfg).unwrap();
+        let x = vec![1.0; csr.cols];
+        service.submit(Request { id: 0, x: x.clone() }).unwrap();
+        service.submit(Request { id: 1, x: x.clone() }).unwrap();
+        assert_eq!(
+            service.submit(Request { id: 2, x: x.clone() }),
+            Err(ServiceError::Overloaded { capacity: 2 })
+        );
+        assert_eq!(service.rejected(), 1);
+        // Receiving frees the cluster-wide slot.
+        service.recv().unwrap();
+        service.submit(Request { id: 3, x }).unwrap();
+        service.recv().unwrap();
+        service.recv().unwrap();
+        let stats = service.stats();
+        assert!(stats.in_flight_high_water <= 2);
+        assert_eq!(service.shutdown(), 3);
+    }
+
+    #[test]
+    fn sharded_recv_timeout_resumes_partial_fan_in() {
+        let csr = suite::fem_blocked(200, 3, 5, 3);
+        let service =
+            ShardedService::start(csr.clone(), small_cfg(2)).unwrap();
+        // Nothing outstanding: the deadline elapses empty-handed.
+        assert_eq!(
+            service.recv_timeout(Duration::from_millis(20)).unwrap_err(),
+            RecvTimeoutError::Timeout
+        );
+        let x = vec![0.5; csr.cols];
+        service.submit(Request { id: 5, x }).unwrap();
+        // A generous deadline assembles the full response.
+        let resp = service.recv_timeout(Duration::from_secs(30)).unwrap();
+        assert_eq!(resp.id, 5);
+        assert_eq!(resp.y.len(), csr.rows);
+        assert_eq!(service.shutdown(), 1);
+    }
+
+    #[test]
+    fn sharded_shape_mismatch_rejected_before_admission() {
+        let csr = suite::fem_blocked(200, 3, 5, 3);
+        let cols = csr.cols;
+        let service = ShardedService::start(csr, small_cfg(2)).unwrap();
+        let err = service
+            .submit(Request { id: 0, x: vec![1.0; cols + 1] })
+            .unwrap_err();
+        assert_eq!(
+            err,
+            ServiceError::ShapeMismatch { expected: cols, got: cols + 1 }
+        );
+        // The bad request never claimed a slot.
+        let stats = service.stats();
+        assert_eq!(stats.in_flight_high_water, 0);
+        assert_eq!(service.shutdown(), 0);
+    }
+}

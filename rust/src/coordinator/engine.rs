@@ -826,42 +826,62 @@ impl<'r, T: Scalar> SpmvEngineBuilder<'r, T> {
             && tile_ok
     }
 
+    /// The plan `cache` would serve this builder, if any. Scans every
+    /// entry for this matrix's fingerprint and thread count — distinct
+    /// builder configurations coexist in one cache, so the first
+    /// *compatible* plan wins, not the first fingerprint match.
+    pub fn cached_plan(&self, cache: &PlanCache) -> Option<SpmvPlan> {
+        let fp = MatrixFingerprint::of(&self.csr);
+        cache
+            .plans
+            .iter()
+            .find(|p| {
+                p.fingerprint == fp
+                    && p.threads == self.threads
+                    && self.plan_compatible(p)
+            })
+            .cloned()
+    }
+
+    /// [`build`](Self::build) against an **in-memory** [`PlanCache`]:
+    /// a hit skips inspection entirely, a miss plans and inserts the
+    /// new plan into `cache` — the caller decides when (and whether)
+    /// to persist. This is the multi-tenant registry's cold-start
+    /// path, where one shared cache serves many matrices without a
+    /// load/save round-trip per tenant.
+    pub fn build_with_cache(
+        self,
+        cache: &mut PlanCache,
+    ) -> anyhow::Result<SpmvEngine<T>> {
+        match self.cached_plan(cache) {
+            // External data: the schedule gets re-validated.
+            Some(plan) => SpmvEngine::instantiate(self.csr, plan, None, false),
+            None => {
+                let (plan, pre) = self.inspect()?;
+                cache.insert(plan.clone());
+                SpmvEngine::instantiate(self.csr, plan, pre, true)
+            }
+        }
+    }
+
     /// Inspect + instantiate: plans (or loads a cached plan) and
     /// converts the storage once, returning the ready engine.
-    pub fn build(self) -> anyhow::Result<SpmvEngine<T>> {
-        let (plan, pre, trusted) = match &self.plan_cache {
+    pub fn build(mut self) -> anyhow::Result<SpmvEngine<T>> {
+        match self.plan_cache.take() {
             Some(path) => {
-                let mut cache = PlanCache::load(path)?;
-                let fp = MatrixFingerprint::of(&self.csr);
-                // Scan every entry for this matrix: distinct builder
-                // configurations coexist in one cache file, so the
-                // first *compatible* plan wins, not the first match.
-                let hit = cache
-                    .plans
-                    .iter()
-                    .find(|p| {
-                        p.fingerprint == fp
-                            && p.threads == self.threads
-                            && self.plan_compatible(p)
-                    })
-                    .cloned();
-                match hit {
-                    // Disk data: the schedule gets re-validated.
-                    Some(plan) => (plan, None, false),
-                    None => {
-                        let (plan, pre) = self.inspect()?;
-                        cache.insert(plan.clone());
-                        cache.save(path)?;
-                        (plan, pre, true)
-                    }
+                let mut cache = PlanCache::load(&path)?;
+                let hit = self.cached_plan(&cache).is_some();
+                let engine = self.build_with_cache(&mut cache)?;
+                if !hit {
+                    cache.save(&path)?;
                 }
+                Ok(engine)
             }
             None => {
                 let (plan, pre) = self.inspect()?;
-                (plan, pre, true)
+                SpmvEngine::instantiate(self.csr, plan, pre, true)
             }
-        };
-        SpmvEngine::instantiate(self.csr, plan, pre, trusted)
+        }
     }
 }
 

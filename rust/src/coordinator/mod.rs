@@ -2,20 +2,34 @@
 //! instantiate → execute, built through the fluent
 //! [`SpmvEngine::builder`] and serving every [`crate::KernelKind`]),
 //! the serializable [`SpmvPlan`] / [`PlanCache`] inspector–executor
-//! artifacts, the native Krylov solvers, and the request-loop service
-//! used by the `spmv_server` example. All of it generic over the
-//! precision ([`crate::scalar::Scalar`], `f64` by default).
+//! artifacts, the native Krylov solvers, and the serving tier: the
+//! micro-batching [`SpmvService`], the admission-control primitives
+//! ([`QueuePolicy`] and friends in [`serving`]), the row-sharded
+//! [`ShardedService`] front-end, and the fingerprint-keyed
+//! [`TenantRegistry`] that hosts many matrices in one process. All of
+//! it generic over the precision ([`crate::scalar::Scalar`], `f64` by
+//! default).
 
 pub mod cg;
+pub mod cluster;
 pub mod engine;
 pub mod plan;
 pub mod service;
+pub mod serving;
 pub mod solvers;
+pub mod tenant;
 
 pub use cg::{cg_solve, CgReport};
+pub use cluster::{ClusterStats, ShardConfig, ShardedService, SHARD_ROW_ALIGN};
 pub use engine::{SpmvEngine, SpmvEngineBuilder};
 pub use plan::{MatrixFingerprint, PlanCache, SpmvPlan};
 pub use service::{
-    Request, Response, ServiceError, ServiceStats, SpmvService,
+    LatencyPercentiles, RecvTimeoutError, Request, Response, ServiceError,
+    ServiceStats, SpmvService, LATENCY_WINDOW,
+};
+pub use serving::{
+    AdmissionGate, BoundedQueue, PushError, QueuePolicy,
+    DEFAULT_QUEUE_CAPACITY,
 };
 pub use solvers::{bicgstab, pcg_jacobi};
+pub use tenant::{RegistryStats, TenantConfig, TenantRegistry, TenantStats};

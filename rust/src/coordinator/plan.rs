@@ -51,7 +51,7 @@ pub const PLAN_VERSION: u32 = 1;
 /// precisions (resolved tile widths and valid β sizes differ between
 /// f32 and f64, so an f32 plan must refuse an f64 build rather than
 /// fail inside conversion).
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct MatrixFingerprint {
     pub rows: usize,
     pub cols: usize,

@@ -16,15 +16,30 @@
 //! when the engine is parallel — the service spawns no per-request
 //! threads and shares the same runtime as the solvers.
 //!
-//! Per-request latency (queue + compute) and per-batch size are
-//! recorded; [`SpmvService::stats`] exposes p50/p95/p99 and the
-//! batch-size histogram.
+//! ## Admission control
+//!
+//! Requests flow through a [`BoundedQueue`] instead of an unbounded
+//! channel: at most `capacity` requests are in flight (accepted but
+//! not yet received back by the client), and [`SpmvService::submit`]
+//! applies the service's [`QueuePolicy`] when full — block, reject
+//! with [`ServiceError::Overloaded`], or wait up to a deadline. The
+//! slot is freed when the client `recv`s the response, so the cap
+//! bounds total resident request/response memory, not just the input
+//! side.
+//!
+//! Per-request latency is recorded split into **queue** (admission →
+//! dispatch) and **compute** (dispatch → response built) components;
+//! [`SpmvService::stats`] exposes p50/p95/p99 for the total and for
+//! each component, plus the batch-size histogram, rejection count and
+//! the queue-depth high-water mark.
 
 use super::engine::SpmvEngine;
+use super::serving::{BoundedQueue, PushError, QueuePolicy};
 use crate::scalar::Scalar;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
 /// One SpMV request.
 pub struct Request<T: Scalar = f64> {
@@ -36,8 +51,13 @@ pub struct Request<T: Scalar = f64> {
 pub struct Response<T: Scalar = f64> {
     pub id: u64,
     pub y: Vec<T>,
-    /// Service-side latency in seconds (queue + compute).
+    /// Total service-side latency in seconds (`queue_s + compute_s`).
     pub latency_s: f64,
+    /// Time spent queued before the dispatcher picked the request up.
+    pub queue_s: f64,
+    /// Time from dispatch to the response being built (batch compute
+    /// plus unpacking; shared by every member of one batch).
+    pub compute_s: f64,
 }
 
 /// Why a [`SpmvService::submit`] was rejected.
@@ -49,6 +69,13 @@ pub enum ServiceError {
     /// `x` does not match the served matrix's column count; accepting
     /// it would poison the whole batch it lands in.
     ShapeMismatch { expected: usize, got: usize },
+    /// The bounded queue was full and the admission policy gave up
+    /// (`Reject` immediately, `Timeout` after its deadline). The
+    /// request was not enqueued; retry later or shed load.
+    Overloaded { capacity: usize },
+    /// The addressed tenant is not registered (registry-level routing;
+    /// never returned by a single service).
+    UnknownTenant,
 }
 
 impl std::fmt::Display for ServiceError {
@@ -61,24 +88,69 @@ impl std::fmt::Display for ServiceError {
                 f,
                 "request x has {got} entries, matrix expects {expected}"
             ),
+            ServiceError::Overloaded { capacity } => write!(
+                f,
+                "service overloaded: {capacity} requests in flight"
+            ),
+            ServiceError::UnknownTenant => {
+                write!(f, "no tenant registered under that fingerprint")
+            }
         }
     }
 }
 
 impl std::error::Error for ServiceError {}
 
+/// Why a bounded-wait receive returned without a response.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RecvTimeoutError {
+    /// No response arrived within the deadline; the request (if any)
+    /// is still in flight and a later receive can pick it up.
+    Timeout,
+    /// The dispatcher is gone and no responses remain.
+    Stopped,
+}
+
+impl std::fmt::Display for RecvTimeoutError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RecvTimeoutError::Timeout => write!(f, "receive timed out"),
+            RecvTimeoutError::Stopped => write!(f, "service stopped"),
+        }
+    }
+}
+
+impl std::error::Error for RecvTimeoutError {}
+
+/// One p50/p95/p99 set, in seconds (0.0 before anything is served).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct LatencyPercentiles {
+    pub p50_s: f64,
+    pub p95_s: f64,
+    pub p99_s: f64,
+}
+
 /// Service-level latency / batching statistics snapshot.
 #[derive(Clone, Debug)]
 pub struct ServiceStats {
     /// Requests completed.
     pub served: usize,
+    /// Submissions refused with [`ServiceError::Overloaded`].
+    pub rejected: usize,
     /// Dispatched batches (≤ served; smaller when coalescing happens).
     pub batches: usize,
-    /// Latency percentiles in seconds over the most recent
+    /// Total-latency percentiles in seconds over the most recent
     /// [`LATENCY_WINDOW`] requests (0.0 when nothing served yet).
     pub p50_s: f64,
     pub p95_s: f64,
     pub p99_s: f64,
+    /// Queue-time (admission → dispatch) percentiles.
+    pub queue: LatencyPercentiles,
+    /// Compute-time (dispatch → response built) percentiles.
+    pub compute: LatencyPercentiles,
+    /// Highest in-flight count the bounded queue ever reached
+    /// (≤ the policy's capacity — the bounded-memory witness).
+    pub queue_depth_high_water: usize,
     /// `batch_hist[i]` = number of batches of size `i + 1`.
     pub batch_hist: Vec<usize>,
 }
@@ -88,12 +160,43 @@ pub struct ServiceStats {
 /// than an O(window log window) sort per stats snapshot.
 pub const LATENCY_WINDOW: usize = 4096;
 
+/// Ring of the last [`LATENCY_WINDOW`] samples.
+#[derive(Default)]
+struct Ring {
+    samples: Vec<f64>,
+    /// Next slot to overwrite once the window is full.
+    next: usize,
+}
+
+impl Ring {
+    fn record(&mut self, v: f64) {
+        if self.samples.len() < LATENCY_WINDOW {
+            self.samples.push(v);
+        } else {
+            self.samples[self.next] = v;
+            self.next = (self.next + 1) % LATENCY_WINDOW;
+        }
+    }
+}
+
+/// Sorts a sample clone and reads the three percentiles.
+fn percentiles_of(mut samples: Vec<f64>) -> LatencyPercentiles {
+    samples.sort_by(|a, b| a.partial_cmp(b).expect("finite latencies"));
+    let pct = |p: f64| -> f64 {
+        if samples.is_empty() {
+            0.0
+        } else {
+            samples[((p * (samples.len() - 1) as f64).round()) as usize]
+        }
+    };
+    LatencyPercentiles { p50_s: pct(0.50), p95_s: pct(0.95), p99_s: pct(0.99) }
+}
+
 #[derive(Default)]
 struct StatsInner {
-    /// Ring of the last [`LATENCY_WINDOW`] per-request latencies.
-    latencies_s: Vec<f64>,
-    /// Next ring slot to overwrite once the window is full.
-    next: usize,
+    total: Ring,
+    queue: Ring,
+    compute: Ring,
     batch_hist: Vec<usize>,
     batches: usize,
 }
@@ -107,64 +210,84 @@ impl StatsInner {
         self.batches += 1;
     }
 
-    fn record_latency(&mut self, latency_s: f64) {
-        if self.latencies_s.len() < LATENCY_WINDOW {
-            self.latencies_s.push(latency_s);
-        } else {
-            self.latencies_s[self.next] = latency_s;
-            self.next = (self.next + 1) % LATENCY_WINDOW;
-        }
+    fn record_latency(&mut self, queue_s: f64, compute_s: f64) {
+        self.total.record(queue_s + compute_s);
+        self.queue.record(queue_s);
+        self.compute.record(compute_s);
     }
 }
 
-/// A running service instance (see module docs).
+/// A running service instance (see module docs). `Sync`: the response
+/// channel sits behind a mutex, so submissions and receives may come
+/// from different threads (concurrent receivers serialize).
 pub struct SpmvService<T: Scalar = f64> {
-    tx: Option<mpsc::Sender<(Request<T>, std::time::Instant)>>,
-    rx_out: mpsc::Receiver<Response<T>>,
+    queue: Arc<BoundedQueue<(Request<T>, Instant)>>,
+    rx_out: Mutex<mpsc::Receiver<Response<T>>>,
     dispatcher: Option<std::thread::JoinHandle<()>>,
     served: Arc<AtomicUsize>,
+    rejected: AtomicUsize,
     stats: Arc<Mutex<StatsInner>>,
     cols: usize,
     max_batch: usize,
 }
 
 impl<T: Scalar> SpmvService<T> {
-    /// Starts the dispatcher over `engine`, coalescing up to
-    /// `max_batch` pending requests into one multi-RHS product. The
-    /// parallel compute runs on the engine's own persistent pool; the
-    /// service adds exactly one dispatcher thread.
+    /// Starts the dispatcher over `engine` with the default admission
+    /// policy ([`QueuePolicy::default`]: block at a generous cap),
+    /// coalescing up to `max_batch` pending requests into one
+    /// multi-RHS product. The parallel compute runs on the engine's
+    /// own persistent pool; the service adds exactly one dispatcher
+    /// thread.
     pub fn start(engine: SpmvEngine<T>, max_batch: usize) -> SpmvService<T> {
+        Self::start_with_policy(engine, max_batch, QueuePolicy::default())
+    }
+
+    /// [`start`](Self::start) with an explicit admission policy.
+    pub fn start_with_policy(
+        engine: SpmvEngine<T>,
+        max_batch: usize,
+        policy: QueuePolicy,
+    ) -> SpmvService<T> {
         assert!(max_batch > 0);
         let (cols, rows) = (engine.csr().cols, engine.csr().rows);
-        let (tx, rx) = mpsc::channel::<(Request<T>, std::time::Instant)>();
+        let queue =
+            Arc::new(BoundedQueue::<(Request<T>, Instant)>::new(policy));
+        // Responses still ride an unbounded channel: its population is
+        // bounded by the queue's in-flight cap (slots are only freed
+        // on client receive), and an unbounded send means the
+        // dispatcher can never deadlock against a slow client.
         let (tx_out, rx_out) = mpsc::channel::<Response<T>>();
         let served = Arc::new(AtomicUsize::new(0));
         let stats = Arc::new(Mutex::new(StatsInner::default()));
 
+        let queue_d = Arc::clone(&queue);
         let served_d = Arc::clone(&served);
         let stats_d = Arc::clone(&stats);
         let dispatcher = std::thread::Builder::new()
             .name("spc5-dispatch".into())
             .spawn(move || {
                 dispatch_loop(
-                    engine, rx, tx_out, served_d, stats_d, rows, max_batch,
+                    engine, queue_d, tx_out, served_d, stats_d, rows,
+                    max_batch,
                 )
             })
             .expect("spawn dispatcher");
 
         SpmvService {
-            tx: Some(tx),
-            rx_out,
+            queue,
+            rx_out: Mutex::new(rx_out),
             dispatcher: Some(dispatcher),
             served,
+            rejected: AtomicUsize::new(0),
             stats,
             cols,
             max_batch,
         }
     }
 
-    /// Enqueues a request. Fails instead of panicking when the
-    /// dispatcher is gone or the vector has the wrong length.
+    /// Submits a request under the admission policy. Fails instead of
+    /// panicking when the vector has the wrong length, the service is
+    /// full ([`ServiceError::Overloaded`]) or shut down.
     pub fn submit(&self, req: Request<T>) -> Result<(), ServiceError> {
         if req.x.len() != self.cols {
             return Err(ServiceError::ShapeMismatch {
@@ -172,16 +295,54 @@ impl<T: Scalar> SpmvService<T> {
                 got: req.x.len(),
             });
         }
-        self.tx
-            .as_ref()
-            .ok_or(ServiceError::Stopped)?
-            .send((req, std::time::Instant::now()))
-            .map_err(|_| ServiceError::Stopped)
+        match self.queue.push((req, Instant::now())) {
+            Ok(()) => Ok(()),
+            Err(PushError::Full) => {
+                self.rejected.fetch_add(1, Ordering::Relaxed);
+                Err(ServiceError::Overloaded {
+                    capacity: self.queue.capacity(),
+                })
+            }
+            Err(PushError::Closed) => Err(ServiceError::Stopped),
+        }
     }
 
-    /// Blocks for the next response.
+    /// Blocks for the next response and frees its admission slot.
     pub fn recv(&self) -> Option<Response<T>> {
-        self.rx_out.recv().ok()
+        let resp = {
+            let rx = self.rx_out.lock().unwrap_or_else(|e| e.into_inner());
+            rx.recv().ok()
+        };
+        if resp.is_some() {
+            self.queue.release();
+        }
+        resp
+    }
+
+    /// Waits up to `wait` for the next response. On success the
+    /// admission slot is freed exactly as in [`recv`](Self::recv); on
+    /// timeout nothing is lost — the response arrives to a later
+    /// receive call.
+    pub fn recv_timeout(
+        &self,
+        wait: Duration,
+    ) -> Result<Response<T>, RecvTimeoutError> {
+        let got = {
+            let rx = self.rx_out.lock().unwrap_or_else(|e| e.into_inner());
+            rx.recv_timeout(wait)
+        };
+        match got {
+            Ok(resp) => {
+                self.queue.release();
+                Ok(resp)
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                Err(RecvTimeoutError::Timeout)
+            }
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                Err(RecvTimeoutError::Stopped)
+            }
+        }
     }
 
     /// Requests served so far.
@@ -189,9 +350,19 @@ impl<T: Scalar> SpmvService<T> {
         self.served.load(Ordering::Relaxed)
     }
 
+    /// Submissions refused with [`ServiceError::Overloaded`] so far.
+    pub fn rejected(&self) -> usize {
+        self.rejected.load(Ordering::Relaxed)
+    }
+
     /// The coalescing limit this service was started with.
     pub fn max_batch(&self) -> usize {
         self.max_batch
+    }
+
+    /// The admission policy this service was started with.
+    pub fn policy(&self) -> QueuePolicy {
+        self.queue.policy()
     }
 
     /// Snapshot of the latency percentiles and batch-size histogram.
@@ -199,36 +370,38 @@ impl<T: Scalar> SpmvService<T> {
         // Hold the dispatcher-shared lock only for the cheap clones;
         // sort after releasing it so monitoring polls cannot stall the
         // dispatch hot path.
-        let (mut sorted, batches, batch_hist) = {
+        let (total, queue, compute, batches, batch_hist) = {
             let inner =
                 self.stats.lock().unwrap_or_else(|e| e.into_inner());
             (
-                inner.latencies_s.clone(),
+                inner.total.samples.clone(),
+                inner.queue.samples.clone(),
+                inner.compute.samples.clone(),
                 inner.batches,
                 inner.batch_hist.clone(),
             )
         };
-        sorted.sort_by(|a, b| a.partial_cmp(b).expect("finite latencies"));
-        let pct = |p: f64| -> f64 {
-            if sorted.is_empty() {
-                0.0
-            } else {
-                sorted[((p * (sorted.len() - 1) as f64).round()) as usize]
-            }
-        };
+        let total = percentiles_of(total);
         ServiceStats {
             served: self.served(),
+            rejected: self.rejected(),
             batches,
-            p50_s: pct(0.50),
-            p95_s: pct(0.95),
-            p99_s: pct(0.99),
+            p50_s: total.p50_s,
+            p95_s: total.p95_s,
+            p99_s: total.p99_s,
+            queue: percentiles_of(queue),
+            compute: percentiles_of(compute),
+            queue_depth_high_water: self.queue.high_water(),
             batch_hist,
         }
     }
 
-    /// Graceful shutdown: waits for queued work, joins the dispatcher.
+    /// Graceful shutdown: closes admission (blocked submitters wake
+    /// with [`ServiceError::Stopped`]), serves every already-accepted
+    /// request, joins the dispatcher and returns the served count.
+    /// Undelivered responses are dropped with the service.
     pub fn shutdown(mut self) -> usize {
-        drop(self.tx.take());
+        self.queue.close();
         if let Some(h) = self.dispatcher.take() {
             let _ = h.join();
         }
@@ -238,20 +411,20 @@ impl<T: Scalar> SpmvService<T> {
 
 impl<T: Scalar> Drop for SpmvService<T> {
     fn drop(&mut self) {
-        drop(self.tx.take());
+        self.queue.close();
         if let Some(h) = self.dispatcher.take() {
             let _ = h.join();
         }
     }
 }
 
-/// The dispatcher: blocking-recv one request, greedily drain whatever
+/// The dispatcher: blocking-pop one request, greedily drain whatever
 /// else is already queued (up to `max_batch`), serve the batch through
 /// one engine call, answer every member.
 #[allow(clippy::too_many_arguments)]
 fn dispatch_loop<T: Scalar>(
     engine: SpmvEngine<T>,
-    rx: mpsc::Receiver<(Request<T>, std::time::Instant)>,
+    queue: Arc<BoundedQueue<(Request<T>, Instant)>>,
     tx_out: mpsc::Sender<Response<T>>,
     served: Arc<AtomicUsize>,
     stats: Arc<Mutex<StatsInner>>,
@@ -261,28 +434,38 @@ fn dispatch_loop<T: Scalar>(
     // Reused across batches: the packed X/Y panels.
     let mut xb: Vec<T> = Vec::new();
     let mut yb: Vec<T> = Vec::new();
-    let mut batch: Vec<(Request<T>, std::time::Instant)> = Vec::new();
+    let mut batch: Vec<(Request<T>, Instant)> = Vec::new();
 
     loop {
         batch.clear();
-        match rx.recv() {
-            Ok(first) => batch.push(first),
-            Err(_) => return, // channel closed → drain done, shut down
+        match queue.pop() {
+            Some(first) => batch.push(first),
+            None => return, // closed and drained → shut down
         }
         while batch.len() < max_batch {
-            match rx.try_recv() {
-                Ok(next) => batch.push(next),
-                Err(_) => break,
+            match queue.try_pop() {
+                Some(next) => batch.push(next),
+                None => break,
             }
         }
 
+        // Queue time ends for the whole batch at this instant; what
+        // follows is compute.
+        let dispatched = Instant::now();
         let k = batch.len();
         if k == 1 {
             // Single pending request: plain SpMV, no packing cost.
             let (req, enqueued) = &batch[0];
             let mut y = vec![T::ZERO; rows];
             engine.spmv_into(&req.x, &mut y);
-            finish(&tx_out, &served, &stats, 1, [(req.id, y, enqueued)]);
+            finish(
+                &tx_out,
+                &served,
+                &stats,
+                1,
+                dispatched,
+                [(req.id, y, enqueued)],
+            );
         } else {
             // Coalesce: one [cols × k] panel, one matrix traversal.
             // Packed c-major/j-minor so every slot is written exactly
@@ -303,7 +486,7 @@ fn dispatch_loop<T: Scalar>(
                 let y: Vec<T> = (0..rows).map(|r| yb[r * k + j]).collect();
                 (req.id, y, enq)
             });
-            finish(&tx_out, &served, &stats, k, members);
+            finish(&tx_out, &served, &stats, k, dispatched, members);
         }
     }
 }
@@ -316,21 +499,26 @@ fn finish<'a, T: Scalar>(
     served: &AtomicUsize,
     stats: &Mutex<StatsInner>,
     batch_size: usize,
-    members: impl IntoIterator<Item = (u64, Vec<T>, &'a std::time::Instant)>,
+    dispatched: Instant,
+    members: impl IntoIterator<Item = (u64, Vec<T>, &'a Instant)>,
 ) {
+    // One compute stamp for the batch: the engine call plus unpacking
+    // are shared work, indivisible per member.
+    let compute_s = dispatched.elapsed().as_secs_f64();
     let responses: Vec<Response<T>> = members
         .into_iter()
-        .map(|(id, y, enqueued)| Response {
-            id,
-            y,
-            latency_s: enqueued.elapsed().as_secs_f64(),
+        .map(|(id, y, enqueued)| {
+            // Saturates to zero if clocks place enqueue after dispatch.
+            let queue_s =
+                dispatched.duration_since(*enqueued).as_secs_f64();
+            Response { id, y, latency_s: queue_s + compute_s, queue_s, compute_s }
         })
         .collect();
     {
         let mut st = stats.lock().unwrap_or_else(|e| e.into_inner());
         st.record_batch(batch_size);
         for r in &responses {
-            st.record_latency(r.latency_s);
+            st.record_latency(r.queue_s, r.compute_s);
         }
     }
     for r in responses {
@@ -367,6 +555,11 @@ mod tests {
             csr.spmv_ref(&x, &mut want);
             crate::testkit::assert_close(&resp.y, &want, 1e-9, "service");
             assert!(resp.latency_s >= 0.0);
+            assert!(
+                (resp.latency_s - (resp.queue_s + resp.compute_s)).abs()
+                    < 1e-15,
+                "latency must be the sum of its components"
+            );
             got += 1;
         }
         assert_eq!(service.shutdown(), n_req);
@@ -473,6 +666,7 @@ mod tests {
         }
         let stats = service.stats();
         assert_eq!(stats.served, n as usize);
+        assert_eq!(stats.rejected, 0);
         assert!(stats.batches <= stats.served);
         let hist_total: usize = stats
             .batch_hist
@@ -482,6 +676,12 @@ mod tests {
             .sum();
         assert_eq!(hist_total, n as usize, "histogram covers all requests");
         assert!(stats.p50_s <= stats.p95_s && stats.p95_s <= stats.p99_s);
+        assert!(stats.queue.p50_s <= stats.queue.p99_s);
+        assert!(stats.compute.p50_s <= stats.compute.p99_s);
+        // Default policy: bounded at DEFAULT_QUEUE_CAPACITY, and 40
+        // outstanding requests can never exceed that.
+        assert!(stats.queue_depth_high_water <= service.policy().capacity());
+        assert!(stats.queue_depth_high_water >= 1);
         assert_eq!(service.shutdown(), n as usize);
     }
 
@@ -501,5 +701,140 @@ mod tests {
         assert_eq!(stats.batches, 10);
         assert_eq!(stats.batch_hist, vec![10]);
         assert_eq!(service.shutdown(), 10);
+    }
+
+    #[test]
+    fn recv_timeout_times_out_and_then_delivers() {
+        let csr = suite::poisson2d(6);
+        let engine = SpmvEngine::builder(csr.clone()).build().unwrap();
+        let service = SpmvService::start(engine, 2);
+        // Nothing submitted: the wait must elapse fully.
+        let wait = Duration::from_millis(30);
+        let t0 = Instant::now();
+        assert_eq!(
+            service.recv_timeout(wait).unwrap_err(),
+            RecvTimeoutError::Timeout
+        );
+        assert!(t0.elapsed() >= wait);
+        // Now a submitted request arrives well within a generous wait.
+        service.submit(Request { id: 7, x: vec![1.0; csr.cols] }).unwrap();
+        let resp = service.recv_timeout(Duration::from_secs(30)).unwrap();
+        assert_eq!(resp.id, 7);
+        assert_eq!(service.shutdown(), 1);
+    }
+
+    #[test]
+    fn reject_policy_bounds_in_flight_exactly() {
+        let csr = suite::poisson2d(8);
+        let cols = csr.cols;
+        let engine = SpmvEngine::builder(csr).build().unwrap();
+        let cap = 3usize;
+        let service = SpmvService::start_with_policy(
+            engine,
+            2,
+            QueuePolicy::Reject { capacity: cap },
+        );
+        // Exactly `cap` submissions are admitted …
+        for id in 0..cap as u64 {
+            service.submit(Request { id, x: vec![1.0; cols] }).unwrap();
+        }
+        // … and the next is refused even though the dispatcher may
+        // already have computed responses: the slot frees on receive.
+        assert_eq!(
+            service.submit(Request { id: 99, x: vec![1.0; cols] }),
+            Err(ServiceError::Overloaded { capacity: cap })
+        );
+        assert_eq!(service.rejected(), 1);
+        // Receiving one response admits one more.
+        service.recv().unwrap();
+        service.submit(Request { id: 100, x: vec![1.0; cols] }).unwrap();
+        for _ in 0..cap {
+            service.recv().unwrap();
+        }
+        let stats = service.stats();
+        assert_eq!(stats.rejected, 1);
+        assert!(
+            stats.queue_depth_high_water <= cap,
+            "in-flight {} exceeded capacity {cap}",
+            stats.queue_depth_high_water
+        );
+        // Every submission got a Response or an Overloaded: cap + 1
+        // accepted (all received), 1 rejected.
+        assert_eq!(service.shutdown(), cap + 1);
+    }
+
+    #[test]
+    fn block_policy_never_drops() {
+        let csr = suite::poisson2d(8);
+        let cols = csr.cols;
+        let engine = SpmvEngine::builder(csr).build().unwrap();
+        let service = SpmvService::start_with_policy(
+            engine,
+            4,
+            QueuePolicy::Block { capacity: 2 },
+        );
+        let n = 50usize;
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                for _ in 0..n {
+                    service.recv().expect("blocked submitter's response");
+                }
+            });
+            // Far more submissions than capacity: each blocks until
+            // the consumer frees a slot; none may fail or drop.
+            for id in 0..n as u64 {
+                service.submit(Request { id, x: vec![0.5; cols] }).unwrap();
+            }
+        });
+        assert_eq!(service.rejected(), 0);
+        let stats = service.stats();
+        assert!(stats.queue_depth_high_water <= 2);
+        assert_eq!(service.shutdown(), n);
+    }
+
+    #[test]
+    fn timeout_policy_respects_deadline() {
+        let csr = suite::poisson2d(8);
+        let cols = csr.cols;
+        let engine = SpmvEngine::builder(csr).build().unwrap();
+        let wait = Duration::from_millis(40);
+        let service = SpmvService::start_with_policy(
+            engine,
+            2,
+            QueuePolicy::Timeout { capacity: 1, wait },
+        );
+        service.submit(Request { id: 0, x: vec![1.0; cols] }).unwrap();
+        // The slot stays held until recv, so this submission waits the
+        // full deadline and then comes back Overloaded.
+        let t0 = Instant::now();
+        assert_eq!(
+            service.submit(Request { id: 1, x: vec![1.0; cols] }),
+            Err(ServiceError::Overloaded { capacity: 1 })
+        );
+        assert!(t0.elapsed() >= wait, "rejected before the deadline");
+        service.recv().unwrap();
+        // Slot freed: admitted immediately.
+        service.submit(Request { id: 2, x: vec![1.0; cols] }).unwrap();
+        service.recv().unwrap();
+        assert_eq!(service.shutdown(), 2);
+    }
+
+    #[test]
+    fn shutdown_with_full_queue_serves_accepted_requests() {
+        let csr = suite::poisson2d(8);
+        let cols = csr.cols;
+        let engine = SpmvEngine::builder(csr).build().unwrap();
+        let cap = 4usize;
+        let service = SpmvService::start_with_policy(
+            engine,
+            2,
+            QueuePolicy::Reject { capacity: cap },
+        );
+        // Fill to capacity and shut down without receiving anything:
+        // shutdown must neither hang nor lose the accepted requests.
+        for id in 0..cap as u64 {
+            service.submit(Request { id, x: vec![1.0; cols] }).unwrap();
+        }
+        assert_eq!(service.shutdown(), cap);
     }
 }

@@ -1,0 +1,490 @@
+//! Admission control primitives for the serving tier.
+//!
+//! The original `SpmvService` fed its dispatcher through an unbounded
+//! `mpsc::channel`: a client faster than the engine would grow the
+//! queue (and resident memory) without limit, and `submit` could never
+//! say "no". This module replaces that with explicit admission
+//! control:
+//!
+//! - [`QueuePolicy`] — what happens when the service already holds
+//!   `capacity` in-flight requests: `Block` the submitter, `Reject`
+//!   immediately, or wait up to a `Timeout` then reject.
+//! - [`BoundedQueue`] — a Mutex+Condvar MPMC queue whose *in-flight*
+//!   count (accepted but not yet delivered back to the client) is
+//!   capped at `capacity`. The dispatcher `pop`s work; the slot is
+//!   only freed by [`BoundedQueue::release`] when the client receives
+//!   the response, so `capacity` bounds end-to-end outstanding work —
+//!   including computed-but-undelivered responses.
+//! - [`AdmissionGate`] — the same policy logic without a queue; the
+//!   sharded front-end admits once at the cluster edge and then fans
+//!   out to per-shard queues that are guaranteed never to fill.
+//!
+//! Closing either primitive wakes every blocked submitter with
+//! [`PushError::Closed`] (the caller gets an error, nothing is
+//! silently dropped) while already-accepted items continue to drain
+//! through `pop` until empty.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+/// Default in-flight cap when callers do not choose one.
+pub const DEFAULT_QUEUE_CAPACITY: usize = 1024;
+
+/// What `submit` does once `capacity` requests are in flight.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum QueuePolicy {
+    /// Wait until a slot frees (backpressure; never drops). A single
+    /// thread that submits past `capacity` without receiving responses
+    /// will wait forever — pair blocking submission with a consumer.
+    Block {
+        /// Maximum in-flight requests.
+        capacity: usize,
+    },
+    /// Fail fast with `Overloaded` while full (load shedding).
+    Reject {
+        /// Maximum in-flight requests.
+        capacity: usize,
+    },
+    /// Wait up to `wait` for a slot, then fail with `Overloaded`.
+    Timeout {
+        /// Maximum in-flight requests.
+        capacity: usize,
+        /// Longest time a submitter may wait for admission.
+        wait: Duration,
+    },
+}
+
+impl QueuePolicy {
+    /// The in-flight cap, regardless of the overflow behavior.
+    pub fn capacity(&self) -> usize {
+        match *self {
+            QueuePolicy::Block { capacity }
+            | QueuePolicy::Reject { capacity }
+            | QueuePolicy::Timeout { capacity, .. } => capacity,
+        }
+    }
+}
+
+impl Default for QueuePolicy {
+    /// Backpressure with a generous cap — the closest behavior to the
+    /// old unbounded channel that still bounds memory.
+    fn default() -> Self {
+        QueuePolicy::Block { capacity: DEFAULT_QUEUE_CAPACITY }
+    }
+}
+
+/// Why an admission attempt failed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PushError {
+    /// The policy gave up while `capacity` requests were in flight
+    /// (`Reject` immediately, `Timeout` after its deadline).
+    Full,
+    /// The queue was closed (service shut down).
+    Closed,
+}
+
+struct QueueInner<M> {
+    items: VecDeque<M>,
+    in_flight: usize,
+    high_water: usize,
+    closed: bool,
+}
+
+/// Bounded MPMC queue with policy-controlled admission.
+///
+/// A slot is held from successful [`push`](Self::push) until
+/// [`release`](Self::release) — *not* until `pop` — so the capacity
+/// bounds everything the service still owes a response for.
+pub struct BoundedQueue<M> {
+    policy: QueuePolicy,
+    inner: Mutex<QueueInner<M>>,
+    /// Signalled by `release` / `close`; awaited by blocked pushers.
+    not_full: Condvar,
+    /// Signalled by `push` / `close`; awaited by `pop`.
+    not_empty: Condvar,
+}
+
+fn relock<G>(r: Result<G, std::sync::PoisonError<G>>) -> G {
+    r.unwrap_or_else(|e| e.into_inner())
+}
+
+impl<M> BoundedQueue<M> {
+    /// Creates an empty queue. Panics on a zero capacity, which could
+    /// never admit anything.
+    pub fn new(policy: QueuePolicy) -> Self {
+        assert!(policy.capacity() > 0, "queue capacity must be >= 1");
+        BoundedQueue {
+            policy,
+            inner: Mutex::new(QueueInner {
+                items: VecDeque::new(),
+                in_flight: 0,
+                high_water: 0,
+                closed: false,
+            }),
+            not_full: Condvar::new(),
+            not_empty: Condvar::new(),
+        }
+    }
+
+    fn lock(&self) -> MutexGuard<'_, QueueInner<M>> {
+        relock(self.inner.lock())
+    }
+
+    /// Tries to admit `item` under the queue's policy. On success the
+    /// in-flight count has been incremented and the dispatcher has
+    /// been woken.
+    pub fn push(&self, item: M) -> Result<(), PushError> {
+        let cap = self.policy.capacity();
+        // Deadline is fixed at entry so repeated wakeups cannot extend
+        // the wait. `None` for non-timeout policies (or an unbounded
+        // `wait` overflowing `Instant`), meaning "wait forever".
+        let deadline = match self.policy {
+            QueuePolicy::Timeout { wait, .. } => Instant::now().checked_add(wait),
+            _ => None,
+        };
+        let mut g = self.lock();
+        loop {
+            if g.closed {
+                return Err(PushError::Closed);
+            }
+            if g.in_flight < cap {
+                break;
+            }
+            g = match self.policy {
+                QueuePolicy::Reject { .. } => return Err(PushError::Full),
+                QueuePolicy::Block { .. } => relock(self.not_full.wait(g)),
+                QueuePolicy::Timeout { .. } => match deadline {
+                    None => relock(self.not_full.wait(g)),
+                    Some(dl) => {
+                        let now = Instant::now();
+                        if now >= dl {
+                            return Err(PushError::Full);
+                        }
+                        relock(self.not_full.wait_timeout(g, dl - now)).0
+                    }
+                },
+            };
+        }
+        g.in_flight += 1;
+        if g.in_flight > g.high_water {
+            g.high_water = g.in_flight;
+        }
+        g.items.push_back(item);
+        drop(g);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Blocks for the next item. Returns `None` only once the queue is
+    /// closed **and** drained, so accepted work always reaches the
+    /// dispatcher even during shutdown.
+    pub fn pop(&self) -> Option<M> {
+        let mut g = self.lock();
+        loop {
+            if let Some(m) = g.items.pop_front() {
+                return Some(m);
+            }
+            if g.closed {
+                return None;
+            }
+            g = relock(self.not_empty.wait(g));
+        }
+    }
+
+    /// Non-blocking pop (batch coalescing).
+    pub fn try_pop(&self) -> Option<M> {
+        self.lock().items.pop_front()
+    }
+
+    /// Frees one in-flight slot (the client received its response) and
+    /// wakes one blocked pusher.
+    pub fn release(&self) {
+        let mut g = self.lock();
+        g.in_flight = g.in_flight.saturating_sub(1);
+        drop(g);
+        self.not_full.notify_one();
+    }
+
+    /// Closes the queue: every blocked pusher wakes with
+    /// [`PushError::Closed`]; `pop` keeps draining accepted items.
+    pub fn close(&self) {
+        let mut g = self.lock();
+        g.closed = true;
+        drop(g);
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+
+    /// Queued (not yet popped) items.
+    pub fn len(&self) -> usize {
+        self.lock().items.len()
+    }
+
+    /// Whether no items are waiting for the dispatcher.
+    pub fn is_empty(&self) -> bool {
+        self.lock().items.is_empty()
+    }
+
+    /// Accepted-but-unreleased requests.
+    pub fn in_flight(&self) -> usize {
+        self.lock().in_flight
+    }
+
+    /// Highest in-flight count ever observed (≤ capacity).
+    pub fn high_water(&self) -> usize {
+        self.lock().high_water
+    }
+
+    /// The admission cap.
+    pub fn capacity(&self) -> usize {
+        self.policy.capacity()
+    }
+
+    /// The admission policy.
+    pub fn policy(&self) -> QueuePolicy {
+        self.policy
+    }
+}
+
+struct GateInner {
+    in_flight: usize,
+    high_water: usize,
+    closed: bool,
+}
+
+/// Counter-only admission control: the same policy semantics as
+/// [`BoundedQueue`] without carrying items. The sharded front-end
+/// acquires here once per request before fanning out, and releases
+/// when the assembled response is handed to the client.
+pub struct AdmissionGate {
+    policy: QueuePolicy,
+    inner: Mutex<GateInner>,
+    freed: Condvar,
+}
+
+impl AdmissionGate {
+    /// Creates an open gate. Panics on a zero capacity.
+    pub fn new(policy: QueuePolicy) -> Self {
+        assert!(policy.capacity() > 0, "gate capacity must be >= 1");
+        AdmissionGate {
+            policy,
+            inner: Mutex::new(GateInner {
+                in_flight: 0,
+                high_water: 0,
+                closed: false,
+            }),
+            freed: Condvar::new(),
+        }
+    }
+
+    fn lock(&self) -> MutexGuard<'_, GateInner> {
+        relock(self.inner.lock())
+    }
+
+    /// Claims one in-flight slot under the gate's policy.
+    pub fn acquire(&self) -> Result<(), PushError> {
+        let cap = self.policy.capacity();
+        let deadline = match self.policy {
+            QueuePolicy::Timeout { wait, .. } => Instant::now().checked_add(wait),
+            _ => None,
+        };
+        let mut g = self.lock();
+        loop {
+            if g.closed {
+                return Err(PushError::Closed);
+            }
+            if g.in_flight < cap {
+                break;
+            }
+            g = match self.policy {
+                QueuePolicy::Reject { .. } => return Err(PushError::Full),
+                QueuePolicy::Block { .. } => relock(self.freed.wait(g)),
+                QueuePolicy::Timeout { .. } => match deadline {
+                    None => relock(self.freed.wait(g)),
+                    Some(dl) => {
+                        let now = Instant::now();
+                        if now >= dl {
+                            return Err(PushError::Full);
+                        }
+                        relock(self.freed.wait_timeout(g, dl - now)).0
+                    }
+                },
+            };
+        }
+        g.in_flight += 1;
+        if g.in_flight > g.high_water {
+            g.high_water = g.in_flight;
+        }
+        Ok(())
+    }
+
+    /// Returns one slot and wakes one blocked acquirer.
+    pub fn release(&self) {
+        let mut g = self.lock();
+        g.in_flight = g.in_flight.saturating_sub(1);
+        drop(g);
+        self.freed.notify_one();
+    }
+
+    /// Closes the gate; every blocked acquirer wakes with
+    /// [`PushError::Closed`].
+    pub fn close(&self) {
+        let mut g = self.lock();
+        g.closed = true;
+        drop(g);
+        self.freed.notify_all();
+    }
+
+    /// Currently claimed slots.
+    pub fn in_flight(&self) -> usize {
+        self.lock().in_flight
+    }
+
+    /// Highest claimed count ever observed (≤ capacity).
+    pub fn high_water(&self) -> usize {
+        self.lock().high_water
+    }
+
+    /// The admission cap.
+    pub fn capacity(&self) -> usize {
+        self.policy.capacity()
+    }
+
+    /// The admission policy.
+    pub fn policy(&self) -> QueuePolicy {
+        self.policy
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    #[test]
+    fn reject_is_exact_at_capacity() {
+        let q = BoundedQueue::new(QueuePolicy::Reject { capacity: 3 });
+        for i in 0..3 {
+            assert_eq!(q.push(i), Ok(()));
+        }
+        assert_eq!(q.push(99), Err(PushError::Full));
+        assert_eq!(q.in_flight(), 3);
+        assert_eq!(q.high_water(), 3);
+        // Popping does NOT free the slot …
+        assert_eq!(q.pop(), Some(0));
+        assert_eq!(q.push(99), Err(PushError::Full));
+        // … releasing does.
+        q.release();
+        assert_eq!(q.push(99), Ok(()));
+        assert_eq!(q.high_water(), 3);
+    }
+
+    #[test]
+    fn timeout_waits_full_deadline_then_rejects() {
+        let wait = Duration::from_millis(40);
+        let q = BoundedQueue::new(QueuePolicy::Timeout { capacity: 1, wait });
+        q.push(1u32).unwrap();
+        let t0 = Instant::now();
+        assert_eq!(q.push(2), Err(PushError::Full));
+        assert!(
+            t0.elapsed() >= wait,
+            "rejected after {:?}, before the {wait:?} deadline",
+            t0.elapsed()
+        );
+        q.release();
+        assert_eq!(q.push(2), Ok(()));
+    }
+
+    #[test]
+    fn timeout_admits_when_slot_frees_in_time() {
+        let q = std::sync::Arc::new(BoundedQueue::new(QueuePolicy::Timeout {
+            capacity: 1,
+            wait: Duration::from_secs(10),
+        }));
+        q.push(1u32).unwrap();
+        let q2 = q.clone();
+        let freer = thread::spawn(move || {
+            thread::sleep(Duration::from_millis(20));
+            q2.release();
+        });
+        // Admitted long before the 10 s deadline.
+        assert_eq!(q.push(2), Ok(()));
+        freer.join().unwrap();
+    }
+
+    #[test]
+    fn block_waits_until_released() {
+        let q = BoundedQueue::new(QueuePolicy::Block { capacity: 1 });
+        q.push(10u32).unwrap();
+        thread::scope(|s| {
+            s.spawn(|| {
+                // Blocks until the main thread releases, then succeeds.
+                assert_eq!(q.push(11), Ok(()));
+            });
+            thread::sleep(Duration::from_millis(20));
+            q.release();
+        });
+        assert_eq!(q.in_flight(), 1);
+        assert_eq!(q.pop(), Some(10));
+        assert_eq!(q.pop().or_else(|| q.try_pop()), Some(11));
+    }
+
+    #[test]
+    fn close_unblocks_pushers_and_drains_accepted_items() {
+        let q = BoundedQueue::new(QueuePolicy::Block { capacity: 1 });
+        q.push(1u32).unwrap();
+        thread::scope(|s| {
+            s.spawn(|| {
+                // Either blocked at close time or sees `closed` on
+                // entry — both must yield Closed, never a hang or a
+                // silent drop.
+                assert_eq!(q.push(2), Err(PushError::Closed));
+            });
+            thread::sleep(Duration::from_millis(20));
+            q.close();
+        });
+        // The accepted item still drains after close …
+        assert_eq!(q.pop(), Some(1));
+        // … and then pop reports exhaustion instead of blocking.
+        assert_eq!(q.pop(), None);
+        assert_eq!(q.push(3), Err(PushError::Closed));
+    }
+
+    #[test]
+    fn gate_mirrors_queue_semantics() {
+        let gate = AdmissionGate::new(QueuePolicy::Reject { capacity: 2 });
+        assert_eq!(gate.acquire(), Ok(()));
+        assert_eq!(gate.acquire(), Ok(()));
+        assert_eq!(gate.acquire(), Err(PushError::Full));
+        assert_eq!(gate.high_water(), 2);
+        gate.release();
+        assert_eq!(gate.acquire(), Ok(()));
+        gate.close();
+        assert_eq!(gate.acquire(), Err(PushError::Closed));
+        assert_eq!(gate.high_water(), 2);
+    }
+
+    #[test]
+    fn gate_block_wakes_on_release_and_close() {
+        let gate = AdmissionGate::new(QueuePolicy::Block { capacity: 1 });
+        gate.acquire().unwrap();
+        thread::scope(|s| {
+            s.spawn(|| assert_eq!(gate.acquire(), Ok(())));
+            thread::sleep(Duration::from_millis(20));
+            gate.release();
+        });
+        thread::scope(|s| {
+            s.spawn(|| assert_eq!(gate.acquire(), Err(PushError::Closed)));
+            thread::sleep(Duration::from_millis(20));
+            gate.close();
+        });
+    }
+
+    #[test]
+    fn default_policy_is_bounded_block() {
+        let p = QueuePolicy::default();
+        assert_eq!(p, QueuePolicy::Block { capacity: DEFAULT_QUEUE_CAPACITY });
+        assert_eq!(p.capacity(), DEFAULT_QUEUE_CAPACITY);
+    }
+}

@@ -1,0 +1,585 @@
+//! Multi-tenant hosting: many matrices served from one process.
+//!
+//! A [`TenantRegistry`] keys running services by
+//! [`MatrixFingerprint`] — the same structural identity the plan
+//! cache uses — so a server can host thousands of matrices and route
+//! each request to its tenant by fingerprint. Registration cold-starts
+//! through the shared in-memory [`PlanCache`]: a tenant whose
+//! structure was planned before (by any earlier tenant, or persisted
+//! in an earlier process) instantiates straight from the cached plan
+//! and skips inspection entirely; a miss plans once and feeds the
+//! cache for the next arrival. [`TenantStats::from_cache`] and
+//! [`TenantStats::cold_start_s`] make the difference observable.
+//!
+//! Tenants choose their serving shape at registration: a single
+//! micro-batching [`SpmvService`] (default) or a row-sharded
+//! [`ShardedService`] for `shards > 1`, each with its own admission
+//! [`QueuePolicy`]. Per-tenant operations are independent; operations
+//! on one tenant never block another's.
+//!
+//! The fingerprint is value-blind (structure + precision): two
+//! matrices with identical sparsity patterns are the *same* tenant.
+//! Registering the second is reported as an error rather than
+//! silently replacing the first.
+
+use super::cluster::{ShardConfig, ShardedService};
+use super::engine::SpmvEngine;
+use super::plan::{MatrixFingerprint, PlanCache, SpmvPlan};
+use super::service::{
+    RecvTimeoutError, Request, Response, ServiceError, ServiceStats,
+    SpmvService,
+};
+use super::serving::QueuePolicy;
+use crate::kernels::KernelKind;
+use crate::matrix::Csr;
+use crate::scalar::Scalar;
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::{Mutex, RwLock};
+use std::time::{Duration, Instant};
+
+/// Per-tenant serving shape, chosen at registration.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TenantConfig {
+    /// Worker threads (per shard when `shards > 1`).
+    pub threads: usize,
+    /// Kernel override; `None` = inspector's choice.
+    pub kernel: Option<KernelKind>,
+    /// Micro-batching limit (as [`SpmvService::start`]).
+    pub max_batch: usize,
+    /// Admission policy for this tenant's queue.
+    pub queue: QueuePolicy,
+    /// `> 1` serves through a [`ShardedService`] with this many
+    /// row shards (plan cache unused there: shard sub-matrices have
+    /// their own fingerprints).
+    pub shards: usize,
+    /// First-touch NUMA placement (per shard when sharded).
+    pub numa_split: bool,
+}
+
+impl Default for TenantConfig {
+    fn default() -> Self {
+        TenantConfig {
+            threads: 1,
+            kernel: None,
+            max_batch: 8,
+            queue: QueuePolicy::default(),
+            shards: 1,
+            numa_split: false,
+        }
+    }
+}
+
+/// Either serving shape behind one dispatch surface.
+enum Serving<T: Scalar> {
+    Single(SpmvService<T>),
+    Sharded(ShardedService<T>),
+}
+
+impl<T: Scalar> Serving<T> {
+    fn submit(&self, req: Request<T>) -> Result<(), ServiceError> {
+        match self {
+            Serving::Single(s) => s.submit(req),
+            Serving::Sharded(s) => s.submit(req),
+        }
+    }
+
+    fn recv(&self) -> Option<Response<T>> {
+        match self {
+            Serving::Single(s) => s.recv(),
+            Serving::Sharded(s) => s.recv(),
+        }
+    }
+
+    fn recv_timeout(
+        &self,
+        wait: Duration,
+    ) -> Result<Response<T>, RecvTimeoutError> {
+        match self {
+            Serving::Single(s) => s.recv_timeout(wait),
+            Serving::Sharded(s) => s.recv_timeout(wait),
+        }
+    }
+
+    fn stats(&self) -> ServiceStats {
+        match self {
+            Serving::Single(s) => s.stats(),
+            Serving::Sharded(s) => s.stats().rollup(),
+        }
+    }
+
+    fn shutdown(self) -> usize {
+        match self {
+            Serving::Single(s) => s.shutdown(),
+            Serving::Sharded(s) => s.shutdown(),
+        }
+    }
+}
+
+struct Tenant<T: Scalar> {
+    name: String,
+    fingerprint: MatrixFingerprint,
+    serving: Serving<T>,
+    /// Whether registration instantiated from a cached plan.
+    from_cache: bool,
+    /// Wall time of engine construction (plan or cache hit +
+    /// conversion + pool spawn), the cold-start the plan cache cuts.
+    cold_start_s: f64,
+}
+
+/// One tenant's public snapshot.
+#[derive(Clone, Debug)]
+pub struct TenantStats {
+    pub name: String,
+    pub fingerprint: MatrixFingerprint,
+    /// Whether this tenant cold-started from a cached plan.
+    pub from_cache: bool,
+    /// Registration wall time in seconds.
+    pub cold_start_s: f64,
+    pub stats: ServiceStats,
+}
+
+/// Registry-wide rollup: every tenant plus summed counters.
+#[derive(Clone, Debug)]
+pub struct RegistryStats {
+    /// Per-tenant snapshots, sorted by tenant name.
+    pub tenants: Vec<TenantStats>,
+    /// Total requests served across tenants.
+    pub served: usize,
+    /// Total submissions refused across tenants.
+    pub rejected: usize,
+}
+
+/// The multi-tenant host (see module docs). `Sync`: registration and
+/// routing may come from any thread.
+pub struct TenantRegistry<T: Scalar = f64> {
+    tenants: RwLock<HashMap<MatrixFingerprint, Tenant<T>>>,
+    cache: Mutex<PlanCache>,
+    /// When set, the shared cache is persisted here after every plan
+    /// miss (so future *processes* cold-start warm too).
+    cache_path: Option<PathBuf>,
+}
+
+impl<T: Scalar> TenantRegistry<T> {
+    /// An empty registry with a process-local plan cache.
+    pub fn new() -> TenantRegistry<T> {
+        TenantRegistry {
+            tenants: RwLock::new(HashMap::new()),
+            cache: Mutex::new(PlanCache::new()),
+            cache_path: None,
+        }
+    }
+
+    /// An empty registry whose plan cache is loaded from — and
+    /// persisted back to — the JSON store at `path` (a missing file is
+    /// an empty cache).
+    pub fn with_cache(
+        path: impl Into<PathBuf>,
+    ) -> anyhow::Result<TenantRegistry<T>> {
+        let path = path.into();
+        let cache = PlanCache::load(&path)?;
+        Ok(TenantRegistry {
+            tenants: RwLock::new(HashMap::new()),
+            cache: Mutex::new(cache),
+            cache_path: Some(path),
+        })
+    }
+
+    fn tenants_read(
+        &self,
+    ) -> std::sync::RwLockReadGuard<'_, HashMap<MatrixFingerprint, Tenant<T>>>
+    {
+        self.tenants.read().unwrap_or_else(|e| e.into_inner())
+    }
+
+    fn tenants_write(
+        &self,
+    ) -> std::sync::RwLockWriteGuard<'_, HashMap<MatrixFingerprint, Tenant<T>>>
+    {
+        self.tenants.write().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Registers `csr` under `name` and starts its service, returning
+    /// the fingerprint requests must be routed with. Single-service
+    /// tenants cold-start through the shared plan cache; sharded
+    /// tenants build per-shard engines directly. Fails if a tenant
+    /// with the same structural fingerprint is already registered.
+    pub fn register(
+        &self,
+        name: impl Into<String>,
+        csr: Csr<T>,
+        cfg: TenantConfig,
+    ) -> anyhow::Result<MatrixFingerprint> {
+        let name = name.into();
+        let fingerprint = MatrixFingerprint::of(&csr);
+        anyhow::ensure!(
+            !self.tenants_read().contains_key(&fingerprint),
+            "a tenant with this matrix structure is already registered \
+             ({}x{}, {} nnz)",
+            csr.rows,
+            csr.cols,
+            csr.nnz()
+        );
+
+        let t0 = Instant::now();
+        let (serving, from_cache) = if cfg.shards > 1 {
+            let shard_cfg = ShardConfig {
+                shards: cfg.shards,
+                threads_per_shard: cfg.threads,
+                numa_split: cfg.numa_split,
+                kernel: cfg.kernel,
+                max_batch: cfg.max_batch,
+                queue: cfg.queue,
+            };
+            (Serving::Sharded(ShardedService::start(csr, shard_cfg)?), false)
+        } else {
+            let mut builder = SpmvEngine::builder(csr)
+                .threads(cfg.threads)
+                .numa_split(cfg.numa_split);
+            if let Some(kernel) = cfg.kernel {
+                builder = builder.kernel(kernel);
+            }
+            let mut cache = self.cache.lock().unwrap_or_else(|e| e.into_inner());
+            let hit = builder.cached_plan(&cache).is_some();
+            let engine = builder.build_with_cache(&mut cache)?;
+            if !hit {
+                if let Some(path) = &self.cache_path {
+                    cache.save(path)?;
+                }
+            }
+            drop(cache);
+            let service = SpmvService::start_with_policy(
+                engine,
+                cfg.max_batch,
+                cfg.queue,
+            );
+            (Serving::Single(service), hit)
+        };
+        let cold_start_s = t0.elapsed().as_secs_f64();
+
+        let mut tenants = self.tenants_write();
+        // Registration raced another thread for the same structure:
+        // the loser shuts its freshly started service down.
+        if tenants.contains_key(&fingerprint) {
+            drop(tenants);
+            serving.shutdown();
+            anyhow::bail!(
+                "a tenant with this matrix structure was registered \
+                 concurrently"
+            );
+        }
+        tenants.insert(
+            fingerprint,
+            Tenant { name, fingerprint, serving, from_cache, cold_start_s },
+        );
+        Ok(fingerprint)
+    }
+
+    /// Registers `csr` served straight from a saved [`SpmvPlan`] —
+    /// the fastest cold-start, no inspection and no cache lookup. The
+    /// plan's fingerprint guard still applies: a plan for a different
+    /// structure (e.g. another shard's sub-matrix) is refused. The
+    /// plan fixes threads/kernel; `cfg.threads`, `cfg.kernel` and
+    /// `cfg.numa_split` are ignored, and `cfg.shards > 1` is an error.
+    pub fn register_plan(
+        &self,
+        name: impl Into<String>,
+        csr: Csr<T>,
+        plan: &SpmvPlan,
+        cfg: TenantConfig,
+    ) -> anyhow::Result<MatrixFingerprint> {
+        anyhow::ensure!(
+            cfg.shards <= 1,
+            "register_plan serves a single engine; a plan cannot drive \
+             {} shards (their sub-matrices have different fingerprints)",
+            cfg.shards
+        );
+        let name = name.into();
+        let fingerprint = MatrixFingerprint::of(&csr);
+        anyhow::ensure!(
+            !self.tenants_read().contains_key(&fingerprint),
+            "a tenant with this matrix structure is already registered"
+        );
+        let t0 = Instant::now();
+        let engine = SpmvEngine::from_plan(csr, plan)?;
+        let service =
+            SpmvService::start_with_policy(engine, cfg.max_batch, cfg.queue);
+        let cold_start_s = t0.elapsed().as_secs_f64();
+        let mut tenants = self.tenants_write();
+        if tenants.contains_key(&fingerprint) {
+            drop(tenants);
+            service.shutdown();
+            anyhow::bail!(
+                "a tenant with this matrix structure was registered \
+                 concurrently"
+            );
+        }
+        tenants.insert(
+            fingerprint,
+            Tenant {
+                name,
+                fingerprint,
+                serving: Serving::Single(service),
+                from_cache: true,
+                cold_start_s,
+            },
+        );
+        Ok(fingerprint)
+    }
+
+    /// Routes a request to the tenant registered under `fp`.
+    pub fn submit(
+        &self,
+        fp: &MatrixFingerprint,
+        req: Request<T>,
+    ) -> Result<(), ServiceError> {
+        let tenants = self.tenants_read();
+        let tenant = tenants.get(fp).ok_or(ServiceError::UnknownTenant)?;
+        tenant.serving.submit(req)
+    }
+
+    /// Blocks for the tenant's next response. `None` when the tenant
+    /// is unknown or its service stopped.
+    pub fn recv(&self, fp: &MatrixFingerprint) -> Option<Response<T>> {
+        let tenants = self.tenants_read();
+        tenants.get(fp)?.serving.recv()
+    }
+
+    /// Waits up to `wait` for the tenant's next response. An unknown
+    /// fingerprint reports [`RecvTimeoutError::Stopped`].
+    pub fn recv_timeout(
+        &self,
+        fp: &MatrixFingerprint,
+        wait: Duration,
+    ) -> Result<Response<T>, RecvTimeoutError> {
+        let tenants = self.tenants_read();
+        let tenant =
+            tenants.get(fp).ok_or(RecvTimeoutError::Stopped)?;
+        tenant.serving.recv_timeout(wait)
+    }
+
+    /// One tenant's snapshot, or `None` when unknown.
+    pub fn tenant_stats(
+        &self,
+        fp: &MatrixFingerprint,
+    ) -> Option<TenantStats> {
+        let tenants = self.tenants_read();
+        let t = tenants.get(fp)?;
+        Some(TenantStats {
+            name: t.name.clone(),
+            fingerprint: t.fingerprint,
+            from_cache: t.from_cache,
+            cold_start_s: t.cold_start_s,
+            stats: t.serving.stats(),
+        })
+    }
+
+    /// Registry-wide rollup across every tenant.
+    pub fn stats(&self) -> RegistryStats {
+        let tenants = self.tenants_read();
+        let mut per: Vec<TenantStats> = tenants
+            .values()
+            .map(|t| TenantStats {
+                name: t.name.clone(),
+                fingerprint: t.fingerprint,
+                from_cache: t.from_cache,
+                cold_start_s: t.cold_start_s,
+                stats: t.serving.stats(),
+            })
+            .collect();
+        per.sort_by(|a, b| a.name.cmp(&b.name));
+        let served = per.iter().map(|t| t.stats.served).sum();
+        let rejected = per.iter().map(|t| t.stats.rejected).sum();
+        RegistryStats { tenants: per, served, rejected }
+    }
+
+    /// Shuts the tenant down (draining accepted requests) and removes
+    /// it; returns its served count, or `None` when unknown.
+    pub fn deregister(&self, fp: &MatrixFingerprint) -> Option<usize> {
+        let tenant = self.tenants_write().remove(fp)?;
+        Some(tenant.serving.shutdown())
+    }
+
+    /// Registered tenant count.
+    pub fn len(&self) -> usize {
+        self.tenants_read().len()
+    }
+
+    /// Whether no tenants are registered.
+    pub fn is_empty(&self) -> bool {
+        self.tenants_read().is_empty()
+    }
+
+    /// Whether a tenant is registered under `fp`.
+    pub fn contains(&self, fp: &MatrixFingerprint) -> bool {
+        self.tenants_read().contains_key(fp)
+    }
+
+    /// Plans currently held by the shared cold-start cache.
+    pub fn plan_cache_len(&self) -> usize {
+        self.cache.lock().unwrap_or_else(|e| e.into_inner()).len()
+    }
+}
+
+impl<T: Scalar> Default for TenantRegistry<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::suite;
+
+    #[test]
+    fn registry_routes_by_fingerprint() {
+        let registry: TenantRegistry = TenantRegistry::new();
+        let a = suite::poisson2d(10);
+        let b = suite::fem_blocked(120, 3, 5, 3);
+        let fa = registry
+            .register("poisson", a.clone(), TenantConfig::default())
+            .unwrap();
+        let fb = registry
+            .register("fem", b.clone(), TenantConfig::default())
+            .unwrap();
+        assert_ne!(fa, fb);
+        assert_eq!(registry.len(), 2);
+
+        let xa = vec![1.0; a.cols];
+        let xb = vec![0.5; b.cols];
+        registry.submit(&fa, Request { id: 1, x: xa.clone() }).unwrap();
+        registry.submit(&fb, Request { id: 2, x: xb.clone() }).unwrap();
+
+        let ra = registry.recv(&fa).expect("poisson response");
+        assert_eq!(ra.id, 1);
+        let mut want = vec![0.0; a.rows];
+        a.spmv_ref(&xa, &mut want);
+        crate::testkit::assert_close(&ra.y, &want, 1e-9, "tenant a");
+
+        let rb = registry.recv(&fb).expect("fem response");
+        assert_eq!(rb.id, 2);
+        let mut want = vec![0.0; b.rows];
+        b.spmv_ref(&xb, &mut want);
+        crate::testkit::assert_close(&rb.y, &want, 1e-9, "tenant b");
+
+        let stats = registry.stats();
+        assert_eq!(stats.served, 2);
+        assert_eq!(stats.rejected, 0);
+        assert_eq!(stats.tenants.len(), 2);
+        // Sorted by name: fem before poisson.
+        assert_eq!(stats.tenants[0].name, "fem");
+        assert_eq!(stats.tenants[1].name, "poisson");
+
+        assert_eq!(registry.deregister(&fa), Some(1));
+        assert_eq!(registry.deregister(&fa), None);
+        assert_eq!(registry.len(), 1);
+        assert_eq!(registry.deregister(&fb), Some(1));
+        assert!(registry.is_empty());
+    }
+
+    #[test]
+    fn unknown_tenant_is_an_error_not_a_panic() {
+        let registry: TenantRegistry = TenantRegistry::new();
+        let ghost = MatrixFingerprint::of(&suite::poisson2d(4));
+        assert_eq!(
+            registry.submit(&ghost, Request { id: 0, x: vec![1.0; 16] }),
+            Err(ServiceError::UnknownTenant)
+        );
+        assert!(registry.recv(&ghost).is_none());
+        assert_eq!(
+            registry.recv_timeout(&ghost, Duration::from_millis(1)),
+            Err(RecvTimeoutError::Stopped)
+        );
+        assert!(registry.tenant_stats(&ghost).is_none());
+        assert!(!registry.contains(&ghost));
+    }
+
+    #[test]
+    fn duplicate_structure_is_rejected() {
+        let registry: TenantRegistry = TenantRegistry::new();
+        let csr = suite::poisson2d(8);
+        registry
+            .register("first", csr.clone(), TenantConfig::default())
+            .unwrap();
+        // Identical structure (even with different values) is the
+        // same fingerprint, hence the same tenant.
+        let mut same_structure = csr;
+        for v in same_structure.values.iter_mut() {
+            *v *= 2.0;
+        }
+        assert!(registry
+            .register("second", same_structure, TenantConfig::default())
+            .is_err());
+        assert_eq!(registry.len(), 1);
+    }
+
+    #[test]
+    fn second_tenant_with_same_plan_shape_hits_shared_cache() {
+        let registry: TenantRegistry = TenantRegistry::new();
+        let a = suite::poisson2d(9);
+        let fa = registry
+            .register("a", a, TenantConfig::default())
+            .unwrap();
+        assert!(!registry.tenant_stats(&fa).unwrap().from_cache);
+        assert_eq!(registry.plan_cache_len(), 1);
+        // Same structure re-registered after deregistration: the plan
+        // survives in the shared cache, so the restart is warm.
+        assert_eq!(registry.deregister(&fa), Some(0));
+        let fa2 = registry
+            .register("a-restarted", suite::poisson2d(9), TenantConfig::default())
+            .unwrap();
+        assert_eq!(fa, fa2);
+        assert!(registry.tenant_stats(&fa2).unwrap().from_cache);
+        assert_eq!(registry.plan_cache_len(), 1);
+    }
+
+    #[test]
+    fn sharded_tenant_serves_through_registry() {
+        let registry: TenantRegistry = TenantRegistry::new();
+        let csr = suite::fem_blocked(300, 3, 5, 3);
+        let cfg = TenantConfig {
+            shards: 2,
+            kernel: Some(KernelKind::Beta(1, 8)),
+            ..TenantConfig::default()
+        };
+        let fp = registry.register("wide", csr.clone(), cfg).unwrap();
+        let x = vec![0.25; csr.cols];
+        registry.submit(&fp, Request { id: 9, x: x.clone() }).unwrap();
+        let resp = registry
+            .recv_timeout(&fp, Duration::from_secs(30))
+            .expect("sharded tenant response");
+        assert_eq!(resp.id, 9);
+        let mut want = vec![0.0; csr.rows];
+        csr.spmv_ref(&x, &mut want);
+        crate::testkit::assert_close(&resp.y, &want, 1e-9, "sharded tenant");
+        assert_eq!(registry.deregister(&fp), Some(1));
+    }
+
+    #[test]
+    fn register_plan_cold_starts_without_inspection() {
+        let registry: TenantRegistry = TenantRegistry::new();
+        let csr = suite::poisson2d(10);
+        let plan = SpmvEngine::builder(csr.clone())
+            .kernel(KernelKind::Beta(2, 8))
+            .plan()
+            .unwrap();
+        let fp = registry
+            .register_plan("planned", csr.clone(), &plan, TenantConfig::default())
+            .unwrap();
+        let snap = registry.tenant_stats(&fp).unwrap();
+        assert!(snap.from_cache);
+        let x = vec![1.5; csr.cols];
+        registry.submit(&fp, Request { id: 3, x: x.clone() }).unwrap();
+        let resp = registry.recv(&fp).unwrap();
+        let mut want = vec![0.0; csr.rows];
+        csr.spmv_ref(&x, &mut want);
+        crate::testkit::assert_close(&resp.y, &want, 1e-9, "planned tenant");
+        // The fingerprint guard: the same plan refuses a different
+        // structure.
+        let other = suite::poisson2d(12);
+        assert!(registry
+            .register_plan("mismatch", other, &plan, TenantConfig::default())
+            .is_err());
+    }
+}

@@ -110,6 +110,59 @@
 //!   traverse the matrix once for all `k` right-hand sides), falling
 //!   back to single-vector SpMV for a batch of one.
 //!
+//! ## Serving architecture
+//!
+//! The serving tier scales the dispatcher out and puts every queue
+//! under admission control
+//! ([`coordinator::cluster`] / [`coordinator::serving`] /
+//! [`coordinator::tenant`]):
+//!
+//! ```text
+//!                         submit(x)          recv() → y = y₀ ‖ y₁ ‖ y₂
+//!                            │                        ▲
+//!                   ┌────────▼─────────┐     ┌────────┴────────┐
+//!                   │  AdmissionGate   │     │     fan-in      │
+//!                   │ capacity + policy│     │ concat y slices │
+//!                   └────────┬─────────┘     └────────▲────────┘
+//!              fan-out: x to every shard              │
+//!         ┌──────────────────┼──────────────────┐     │
+//!         ▼                  ▼                  ▼     │
+//!   ┌───────────┐      ┌───────────┐      ┌───────────┐
+//!   │  shard 0  │      │  shard 1  │      │  shard 2  │  SpmvService
+//!   │ rows 0..a │      │ rows a..b │      │ rows b..n │  + SpmvEngine
+//!   │ pool+NUMA │      │ pool+NUMA │      │ pool+NUMA │  per shard
+//!   └───────────┘      └───────────┘      └───────────┘
+//! ```
+//!
+//! - **Shard cut** — [`coordinator::ShardedService`] splits the rows
+//!   with [`parallel::balanced_row_ranges`]: nnz-balanced over the CSR
+//!   row pointer and aligned to the 8-row β interval, so each shard's
+//!   block structure is exactly the full matrix's restricted to its
+//!   rows and the sharded product is **bit-identical** to the
+//!   single-engine one. Each shard owns an engine (own kernel storage,
+//!   own `WorkerPool`, optional first-touch NUMA arrays) and a
+//!   dispatcher.
+//! - **Admission policies** — every queue is bounded
+//!   ([`coordinator::QueuePolicy`]): `Block { capacity }` applies
+//!   backpressure, `Reject { capacity }` sheds load with
+//!   `ServiceError::Overloaded`, `Timeout { capacity, wait }` waits up
+//!   to a deadline. A slot is held from `submit` until the client
+//!   `recv`s the response, so `capacity` bounds total resident
+//!   request/response memory. The sharded front-end admits **once**
+//!   per request at its gate; shard queues then provably never fill.
+//! - **Latency accounting** — responses and stats split latency into
+//!   queue vs compute components with separate p50/p95/p99 sets, plus
+//!   rejection counts and the queue-depth high-water mark.
+//! - **Tenant registry** — [`coordinator::TenantRegistry`] keys
+//!   running services by [`MatrixFingerprint`] to host many matrices
+//!   in one process. Registration cold-starts through the shared
+//!   [`PlanCache`] (`plan → from_plan`, no re-inspection when any
+//!   earlier tenant planned the same structure) or directly from a
+//!   saved [`SpmvPlan`]; per-tenant and registry-wide stats expose
+//!   served/rejected counts and the cold-start cost. CLI:
+//!   `spc5 serve --matrix fem-large --shards 4 --queue reject
+//!   --capacity 64`.
+//!
 //! ## Panel scheduling (the hybrid kernel)
 //!
 //! The predictor picks *one* kernel per matrix, but real matrices are
@@ -210,7 +263,9 @@
 //!   serving **every** [`KernelKind`] including the CSR/CSR5
 //!   baselines, owning one pool for all its parallel paths), the
 //!   Krylov solvers (each iteration reuses the engine's pool), and the
-//!   micro-batching `SpmvService<T>`.
+//!   serving tier: micro-batching `SpmvService<T>`, bounded admission
+//!   queues, the sharded `ShardedService<T>` front-end and the
+//!   multi-tenant `TenantRegistry<T>`.
 //! - [`bench`] — the measurement harness used by `cargo bench` targets
 //!   that regenerate every table and figure of the paper.
 
@@ -231,7 +286,9 @@ pub mod util;
 pub const VEC_SIZE: usize = 8;
 
 pub use coordinator::{
-    MatrixFingerprint, PlanCache, SpmvEngine, SpmvEngineBuilder, SpmvPlan,
+    MatrixFingerprint, PlanCache, QueuePolicy, ShardConfig, ShardedService,
+    SpmvEngine, SpmvEngineBuilder, SpmvPlan, SpmvService, TenantConfig,
+    TenantRegistry,
 };
 pub use formats::{BlockMatrix, BlockSize, SparseStorage};
 pub use kernels::KernelKind;

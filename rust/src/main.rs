@@ -14,10 +14,16 @@
 //!   gradient on the 2D Poisson system; `xla` runs the AOT artifact.
 //! - `gen     --class CLASS --out FILE.mtx [--dim D]` — write a
 //!   synthetic matrix in MatrixMarket format.
+//! - `serve   --matrix NAME [--shards N] [--queue block|reject|timeout]`
+//!   — drive synthetic load through the sharded, admission-controlled
+//!   serving tier and report per-shard + rollup statistics.
 //! - `kernels` — list kernels and CPU feature support.
 
 use spc5::bench;
-use spc5::coordinator::{cg_solve, SpmvEngine, SpmvPlan};
+use spc5::coordinator::{
+    cg_solve, QueuePolicy, Request, ServiceError, ServiceStats, ShardConfig,
+    ShardedService, SpmvEngine, SpmvPlan, DEFAULT_QUEUE_CAPACITY,
+};
 use spc5::formats::stats::paper_profile;
 use spc5::kernels::KernelKind;
 use spc5::matrix::{market, suite, Csr};
@@ -108,6 +114,7 @@ fn run(args: &[String]) -> anyhow::Result<()> {
         "predict" => cmd_predict(&a),
         "cg" => cmd_cg(&a),
         "gen" => cmd_gen(&a),
+        "serve" => cmd_serve(&a),
         "kernels" => cmd_kernels(),
         "help" | "--help" | "-h" => {
             print_help();
@@ -137,6 +144,10 @@ fn print_help() {
          \x20 predict  --matrix NAME [--threads N] [--records FILE]\n\
          \x20 cg       [--n N] [--iters K] [--engine native|xla] [--threads N]\n\
          \x20 gen      --class CLASS --out FILE.mtx [--dim D] [--seed S]\n\
+         \x20 serve    --matrix NAME [--shards N] [--threads N (per shard)] [--kernel K]\n\
+         \x20          [--queue block|reject|timeout] [--capacity C] [--timeout-ms D]\n\
+         \x20          [--max-batch B] [--requests R] [--burst K] [--numa]\n\
+         \x20          drive synthetic load through the sharded serving tier\n\
          \x20 kernels  list kernels + CPU support\n"
     );
 }
@@ -538,6 +549,108 @@ fn cmd_gen(a: &Args) -> anyhow::Result<()> {
         csr.cols,
         csr.nnz()
     );
+    Ok(())
+}
+
+/// One formatted statistics row for `spc5 serve` output.
+fn serve_stats_row(label: &str, s: &ServiceStats) {
+    println!(
+        "  {label:<10} served={:<6} batches={:<5} total p50/p95/p99 = \
+         {:.3}/{:.3}/{:.3} ms  queue p95={:.3} ms  compute p95={:.3} ms  \
+         depth hw={}",
+        s.served,
+        s.batches,
+        s.p50_s * 1e3,
+        s.p95_s * 1e3,
+        s.p99_s * 1e3,
+        s.queue.p95_s * 1e3,
+        s.compute.p95_s * 1e3,
+        s.queue_depth_high_water
+    );
+}
+
+/// Drives synthetic offered load through the sharded serving tier:
+/// bursts of `--burst` requests (clamped below `--capacity` so a
+/// `block` queue cannot deadlock the single driver thread), drained
+/// between bursts, with per-shard and cluster-rollup statistics at
+/// the end.
+fn cmd_serve(a: &Args) -> anyhow::Result<()> {
+    let (name, csr) = load_matrix(a)?;
+    let kernel_flag = parse_kernel_flag(a)?;
+    let shards = a.get_usize("shards", 2)?;
+    let capacity = a.get_usize("capacity", DEFAULT_QUEUE_CAPACITY)?;
+    let requests = a.get_usize("requests", 256)?;
+    let burst = a.get_usize("burst", 16)?;
+    let queue = match a.get("queue").unwrap_or("block") {
+        "block" => QueuePolicy::Block { capacity },
+        "reject" => QueuePolicy::Reject { capacity },
+        "timeout" => QueuePolicy::Timeout {
+            capacity,
+            wait: std::time::Duration::from_millis(
+                a.get_usize("timeout-ms", 100)? as u64,
+            ),
+        },
+        other => {
+            anyhow::bail!("--queue expects block|reject|timeout, got '{other}'")
+        }
+    };
+    let cfg = ShardConfig {
+        shards,
+        threads_per_shard: a.get_usize("threads", 1)?,
+        numa_split: a.has("numa"),
+        kernel: kernel_flag,
+        max_batch: a.get_usize("max-batch", 8)?,
+        queue,
+    };
+    let (rows, cols, nnz) = (csr.rows, csr.cols, csr.nnz());
+    let service = ShardedService::start(csr, cfg)?;
+    println!(
+        "serving {name}: {rows}x{cols} nnz={nnz} shards={} policy={:?}",
+        service.n_shards(),
+        service.policy()
+    );
+
+    let window = burst.clamp(1, capacity);
+    let t = spc5::util::Timer::start();
+    let mut rejected = 0usize;
+    let mut outstanding = 0usize;
+    for id in 0..requests as u64 {
+        let x = bench::bench_vector(cols, 0xBE7C ^ id);
+        match service.submit(Request { id, x }) {
+            Ok(()) => outstanding += 1,
+            Err(ServiceError::Overloaded { .. }) => rejected += 1,
+            Err(e) => return Err(e.into()),
+        }
+        if outstanding >= window {
+            while outstanding > 0 {
+                service
+                    .recv()
+                    .ok_or_else(|| anyhow::anyhow!("service stopped early"))?;
+                outstanding -= 1;
+            }
+        }
+    }
+    while outstanding > 0 {
+        service
+            .recv()
+            .ok_or_else(|| anyhow::anyhow!("service stopped early"))?;
+        outstanding -= 1;
+    }
+    let wall = t.elapsed_s();
+
+    let stats = service.stats();
+    for (i, s) in stats.shards.iter().enumerate() {
+        serve_stats_row(&format!("shard {i}"), s);
+    }
+    serve_stats_row("rollup", &stats.rollup());
+    println!(
+        "  offered={requests} served={} rejected={rejected} in-flight hw={} \
+         wall={wall:.3}s throughput={:.3} gflops",
+        stats.served,
+        stats.in_flight_high_water,
+        2.0 * nnz as f64 * stats.served as f64 / wall / 1e9
+    );
+    service.shutdown();
     Ok(())
 }
 

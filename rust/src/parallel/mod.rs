@@ -24,5 +24,8 @@ pub mod partition;
 pub mod pool;
 
 pub use exec::{ParallelSpmv, ParallelStrategy};
-pub use partition::{balanced_prefix_split, partition_intervals, ThreadSpan};
+pub use partition::{
+    balanced_prefix_split, balanced_row_ranges, partition_intervals,
+    ThreadSpan,
+};
 pub use pool::{LocalStore, SendSlice, WorkerCtx, WorkerPool};

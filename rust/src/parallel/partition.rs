@@ -62,6 +62,46 @@ pub fn balanced_prefix_split(prefix: &[u32], n: usize) -> Vec<(usize, usize)> {
     chunks
 }
 
+/// Cuts the rows of an nnz prefix (`rowptr`) into at most `n`
+/// contiguous, non-empty, nnz-balanced row ranges — the serving
+/// tier's shard cut. Interior boundaries are rounded to the nearest
+/// multiple of `align` (pass 1 for the raw prefix split): aligning to
+/// the 8-row β interval makes each shard's block conversion reproduce
+/// exactly the full matrix's blocks restricted to the shard's rows —
+/// blocks are formed jointly across an interval's rows, so an
+/// unaligned cut would re-partition the boundary blocks and change
+/// the in-block reduction order. Alignment is what lets a sharded
+/// product be bit-identical to the unsharded one.
+///
+/// Empty ranges (more shards than rows, rounding collisions) are
+/// dropped, so fewer than `n` ranges can come back; the returned
+/// ranges always cover `0..rows` contiguously, and at least one range
+/// is returned whenever `rows > 0`.
+pub fn balanced_row_ranges(
+    rowptr: &[u32],
+    n: usize,
+    align: usize,
+) -> Vec<(usize, usize)> {
+    assert!(align > 0, "alignment must be >= 1");
+    let rows = rowptr.len().saturating_sub(1);
+    let raw = balanced_prefix_split(rowptr, n);
+    let mut cuts: Vec<usize> = Vec::with_capacity(raw.len() + 1);
+    cuts.push(0);
+    for span in raw.iter().skip(1) {
+        let rounded = ((span.0 + align / 2) / align * align).min(rows);
+        let prev = *cuts.last().expect("cuts starts non-empty");
+        cuts.push(rounded.max(prev));
+    }
+    cuts.push(rows);
+    let mut ranges = Vec::with_capacity(cuts.len() - 1);
+    for w in cuts.windows(2) {
+        if w[1] > w[0] {
+            ranges.push((w[0], w[1]));
+        }
+    }
+    ranges
+}
+
 /// Splits the matrix's row intervals into `n_threads` spans using the
 /// paper's balancing rule. Every interval is assigned to exactly one
 /// thread; spans are contiguous and ordered; empty spans are possible
@@ -179,6 +219,57 @@ mod tests {
             bm.n_blocks(),
             "last span must end at the last block"
         );
+    }
+
+    #[test]
+    fn row_ranges_cover_rows_contiguously_and_aligned() {
+        let csr = suite::fem_blocked(500, 3, 5, 3);
+        for n in [1usize, 2, 3, 4, 8] {
+            let ranges = balanced_row_ranges(&csr.rowptr, n, 8);
+            assert!(!ranges.is_empty());
+            assert_eq!(ranges[0].0, 0);
+            assert_eq!(ranges.last().unwrap().1, csr.rows);
+            for w in ranges.windows(2) {
+                assert_eq!(w[0].1, w[1].0, "ranges must be contiguous");
+            }
+            for &(r0, r1) in &ranges {
+                assert!(r1 > r0, "no empty ranges");
+                // Every interior boundary sits on an 8-row interval.
+                if r1 != csr.rows {
+                    assert_eq!(r1 % 8, 0, "unaligned cut at {r1}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn row_ranges_balance_nnz() {
+        let csr = suite::fem_blocked(1_000, 3, 6, 4);
+        let ranges = balanced_row_ranges(&csr.rowptr, 4, 8);
+        assert_eq!(ranges.len(), 4);
+        let ideal = csr.nnz() as f64 / 4.0;
+        for &(r0, r1) in &ranges {
+            let nnz = (csr.rowptr[r1] - csr.rowptr[r0]) as f64;
+            // Rounding to 8-row boundaries costs at most a few rows'
+            // worth of nonzeros per cut.
+            assert!(
+                (nnz - ideal).abs() <= ideal * 0.25 + 8.0 * 16.0,
+                "shard [{r0},{r1}) nnz {nnz} far from ideal {ideal}"
+            );
+        }
+    }
+
+    #[test]
+    fn row_ranges_more_shards_than_rows() {
+        let csr = suite::poisson2d(3); // 9 rows
+        let ranges = balanced_row_ranges(&csr.rowptr, 16, 8);
+        assert!(!ranges.is_empty());
+        assert!(ranges.len() <= 16);
+        assert_eq!(ranges[0].0, 0);
+        assert_eq!(ranges.last().unwrap().1, csr.rows);
+        for w in ranges.windows(2) {
+            assert_eq!(w[0].1, w[1].0);
+        }
     }
 
     #[test]

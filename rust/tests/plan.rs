@@ -294,6 +294,138 @@ fn f32_plans_roundtrip() {
 }
 
 #[test]
+fn plan_cache_hosts_many_matrices_and_configs() {
+    // Multi-tenant shape: one cache file holding plans for several
+    // matrices × several configurations, each retrievable by its own
+    // (fingerprint, threads) key after a disk round trip.
+    let dir = std::env::temp_dir().join("spc5_multi_tenant_cache_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("plans.json");
+    std::fs::remove_file(&path).ok();
+
+    let matrices: Vec<Csr> = vec![
+        suite::poisson2d(12),
+        suite::fem_blocked(150, 3, 5, 3),
+        suite::uniform_scatter(300, 6, 9),
+        suite::mixed_band_scatter(512, 11),
+    ];
+    let mut cache = PlanCache::new();
+    for csr in &matrices {
+        for threads in [1usize, 3] {
+            let plan = SpmvEngine::builder(csr.clone())
+                .kernel(KernelKind::Beta(1, 8))
+                .threads(threads)
+                .plan()
+                .unwrap();
+            cache.insert(plan);
+        }
+    }
+    assert_eq!(cache.len(), matrices.len() * 2);
+    cache.save(&path).unwrap();
+
+    let loaded = PlanCache::load(&path).unwrap();
+    assert_eq!(loaded.len(), matrices.len() * 2);
+    for csr in &matrices {
+        let fp = MatrixFingerprint::of(csr);
+        for threads in [1usize, 3] {
+            let plan = loaded
+                .find(&fp, threads)
+                .unwrap_or_else(|| panic!("missing plan ({fp:?}, {threads})"));
+            assert_eq!(plan.threads, threads);
+            assert_eq!(plan.kernel, KernelKind::Beta(1, 8));
+            // The found plan really serves its matrix.
+            SpmvEngine::from_plan(csr.clone(), plan).unwrap();
+        }
+    }
+    // Distinct structures never alias to one fingerprint here.
+    let fps: std::collections::HashSet<_> = matrices
+        .iter()
+        .map(|m| MatrixFingerprint::of(m).key())
+        .collect();
+    assert_eq!(fps.len(), matrices.len());
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn plan_cache_serves_concurrent_readers() {
+    // A registry shares one immutable cache across threads: every
+    // reader must find its plan and instantiate from it concurrently.
+    let matrices: Vec<Csr> = vec![
+        suite::poisson2d(10),
+        suite::fem_blocked(120, 3, 5, 5),
+        suite::uniform_scatter(240, 5, 2),
+    ];
+    let mut cache = PlanCache::new();
+    for csr in &matrices {
+        let plan = SpmvEngine::builder(csr.clone())
+            .kernel(KernelKind::Beta(1, 8))
+            .plan()
+            .unwrap();
+        cache.insert(plan);
+    }
+    let cache = std::sync::Arc::new(cache);
+    std::thread::scope(|s| {
+        for csr in &matrices {
+            for _ in 0..3 {
+                let cache = std::sync::Arc::clone(&cache);
+                s.spawn(move || {
+                    let fp = MatrixFingerprint::of(csr);
+                    let plan =
+                        cache.find(&fp, 1).expect("plan under concurrency");
+                    let e = SpmvEngine::from_plan(csr.clone(), plan).unwrap();
+                    let x = vec![1.0; csr.cols];
+                    let mut y = vec![0.0; csr.rows];
+                    e.spmv_into(&x, &mut y);
+                    let mut want = vec![0.0; csr.rows];
+                    csr.spmv_ref(&x, &mut want);
+                    for (a, b) in y.iter().zip(&want) {
+                        assert!(
+                            (a - b).abs() <= 1e-10 * b.abs().max(1.0),
+                            "concurrent reader produced wrong product"
+                        );
+                    }
+                });
+            }
+        }
+    });
+}
+
+#[test]
+fn shard_local_plan_refuses_other_shards_submatrix() {
+    // The sharded serving tier plans per shard sub-matrix: a plan for
+    // shard 0's rows must refuse shard 1's (the fingerprint guard that
+    // keeps one shard's schedule off another shard's data).
+    let csr = suite::fem_blocked(400, 3, 5, 3);
+    let ranges = spc5::parallel::balanced_row_ranges(&csr.rowptr, 2, 8);
+    assert_eq!(ranges.len(), 2, "matrix large enough for two shards");
+    let shard0 = csr.row_slice(ranges[0].0, ranges[0].1);
+    let shard1 = csr.row_slice(ranges[1].0, ranges[1].1);
+
+    let plan0 = SpmvEngine::builder(shard0.clone())
+        .kernel(KernelKind::Beta(1, 8))
+        .plan()
+        .unwrap();
+    assert_ne!(
+        MatrixFingerprint::of(&shard0),
+        MatrixFingerprint::of(&shard1),
+        "shard sub-matrices must fingerprint differently"
+    );
+    // Its own shard instantiates …
+    SpmvEngine::from_plan(shard0, &plan0).unwrap();
+    // … the other shard is refused.
+    let err = match SpmvEngine::from_plan(shard1, &plan0) {
+        Err(e) => e,
+        Ok(_) => panic!("shard 1 must not accept shard 0's plan"),
+    };
+    assert!(
+        err.to_string().contains("fingerprint"),
+        "error should name the fingerprint: {err}"
+    );
+    // Nor the full matrix.
+    assert!(SpmvEngine::from_plan(csr, &plan0).is_err());
+}
+
+#[test]
 fn malformed_plans_refuse_instantiation() {
     let csr = suite::poisson2d(16);
     let good = SpmvEngine::builder(csr.clone())

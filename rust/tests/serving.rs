@@ -1,0 +1,279 @@
+//! Serving-tier acceptance tests: the sharded front-end must return
+//! **bit-identical** results to a single-engine service, admission
+//! control must bound in-flight memory exactly, and no submission may
+//! ever be silently dropped.
+
+use spc5::coordinator::{
+    QueuePolicy, Request, ServiceError, ShardConfig, ShardedService,
+    SpmvService,
+};
+use spc5::matrix::suite;
+use spc5::{Csr, KernelKind, Scalar, SpmvEngine};
+use std::collections::BTreeMap;
+
+/// Replaces the values with small integers so every summation order
+/// produces the same bits: per-row sums stay far below 2^24, exact in
+/// f32 and f64 alike. This makes the spmv-vs-spmm differential
+/// deterministic even though batch composition is timing-dependent.
+fn integerize<T: Scalar>(csr: &mut Csr<T>) {
+    for (i, v) in csr.values.iter_mut().enumerate() {
+        *v = T::from_f64(((i % 7) as f64) - 3.0);
+    }
+}
+
+/// Deterministic small-integer request vector.
+fn int_x<T: Scalar>(cols: usize, id: u64) -> Vec<T> {
+    (0..cols)
+        .map(|i| T::from_f64((((i as u64 + 3 * id) % 9) as f64) - 4.0))
+        .collect()
+}
+
+/// Runs `n_req` requests through both a single-engine service and a
+/// sharded one (same kernel, same integerized matrix), in burst mode
+/// (exercising the batched spmm path) or one-at-a-time (the spmv
+/// path), and asserts exact equality of every response.
+fn differential<T: Scalar>(
+    csr: &Csr<T>,
+    shards: usize,
+    max_batch: usize,
+    n_req: u64,
+    burst: bool,
+) {
+    let kernel = KernelKind::Beta(1, 8);
+    let engine =
+        SpmvEngine::builder(csr.clone()).kernel(kernel).build().unwrap();
+    let single = SpmvService::start(engine, max_batch);
+    let sharded = ShardedService::start(
+        csr.clone(),
+        ShardConfig {
+            shards,
+            kernel: Some(kernel),
+            max_batch,
+            queue: QueuePolicy::Block { capacity: 256 },
+            ..ShardConfig::default()
+        },
+    )
+    .unwrap();
+    assert!(
+        sharded.n_shards() >= 2,
+        "differential needs a real shard split, got {}",
+        sharded.n_shards()
+    );
+
+    let mut single_y: BTreeMap<u64, Vec<T>> = BTreeMap::new();
+    let mut sharded_y: BTreeMap<u64, Vec<T>> = BTreeMap::new();
+    if burst {
+        for id in 0..n_req {
+            single.submit(Request { id, x: int_x(csr.cols, id) }).unwrap();
+            sharded.submit(Request { id, x: int_x(csr.cols, id) }).unwrap();
+        }
+        for _ in 0..n_req {
+            let r = single.recv().unwrap();
+            single_y.insert(r.id, r.y);
+            let r = sharded.recv().unwrap();
+            sharded_y.insert(r.id, r.y);
+        }
+    } else {
+        for id in 0..n_req {
+            single.submit(Request { id, x: int_x(csr.cols, id) }).unwrap();
+            let r = single.recv().unwrap();
+            single_y.insert(r.id, r.y);
+            sharded.submit(Request { id, x: int_x(csr.cols, id) }).unwrap();
+            let r = sharded.recv().unwrap();
+            sharded_y.insert(r.id, r.y);
+        }
+    }
+
+    assert_eq!(single_y.len(), n_req as usize);
+    for (id, y) in &single_y {
+        let ys = &sharded_y[id];
+        assert_eq!(y.len(), ys.len());
+        assert!(
+            y == ys,
+            "request {id}: sharded y differs from single-engine y"
+        );
+        // Both must also equal the reference product exactly
+        // (integer data ⇒ order-independent).
+        let x: Vec<T> = int_x(csr.cols, *id);
+        let mut want = vec![T::ZERO; csr.rows];
+        csr.spmv_ref(&x, &mut want);
+        assert!(y == &want, "request {id}: y differs from reference");
+    }
+    assert_eq!(single.shutdown(), n_req as usize);
+    assert_eq!(sharded.shutdown(), n_req as usize);
+}
+
+#[test]
+fn sharded_bit_identical_f64_spmv_path() {
+    let mut csr = suite::fem_blocked(400, 3, 5, 3);
+    integerize(&mut csr);
+    // max_batch = 1 pins every request to the single-vector kernel.
+    differential::<f64>(&csr, 3, 1, 10, false);
+}
+
+#[test]
+fn sharded_bit_identical_f64_spmm_path() {
+    let mut csr = suite::fem_blocked(400, 3, 5, 3);
+    integerize(&mut csr);
+    // Burst submission with coalescing: the batched spmm path.
+    differential::<f64>(&csr, 3, 8, 24, true);
+}
+
+#[test]
+fn sharded_bit_identical_f32_both_paths() {
+    let mut csr64 = suite::fem_blocked(320, 3, 5, 7);
+    integerize(&mut csr64);
+    let csr: Csr<f32> = csr64.to_precision();
+    differential::<f32>(&csr, 2, 1, 8, false);
+    differential::<f32>(&csr, 2, 6, 18, true);
+}
+
+#[test]
+fn sharded_matches_single_engine_real_values() {
+    // Real-valued matrix: the aligned shard cut keeps the block
+    // structure identical, and with max_batch = 1 both services run
+    // the same sequential β kernel over the same blocks — so even
+    // floating-point results must agree bit-for-bit.
+    let csr = suite::mixed_band_scatter(1_024, 5);
+    let kernel = KernelKind::Beta(1, 8);
+    let engine =
+        SpmvEngine::builder(csr.clone()).kernel(kernel).build().unwrap();
+    let single = SpmvService::start(engine, 1);
+    let sharded = ShardedService::start(
+        csr.clone(),
+        ShardConfig {
+            shards: 2,
+            kernel: Some(kernel),
+            max_batch: 1,
+            ..ShardConfig::default()
+        },
+    )
+    .unwrap();
+    for id in 0..6u64 {
+        let x: Vec<f64> = (0..csr.cols)
+            .map(|i| ((i as u64 * 7 + id) % 23) as f64 * 0.037 - 0.4)
+            .collect();
+        single.submit(Request { id, x: x.clone() }).unwrap();
+        let ys = single.recv().unwrap().y;
+        sharded.submit(Request { id, x }).unwrap();
+        let yc = sharded.recv().unwrap().y;
+        assert!(ys == yc, "request {id}: real-valued results differ");
+    }
+    single.shutdown();
+    sharded.shutdown();
+}
+
+#[test]
+fn reject_policy_every_submission_answered_or_overloaded() {
+    // The acceptance criterion: with Reject { capacity }, in-flight
+    // never exceeds capacity and every submission ends in a Response
+    // or an Overloaded error — none vanish.
+    let csr = suite::fem_blocked(200, 3, 5, 3);
+    let cap = 4usize;
+    let service = ShardedService::start(
+        csr.clone(),
+        ShardConfig {
+            shards: 2,
+            kernel: Some(KernelKind::Beta(1, 8)),
+            max_batch: 4,
+            queue: QueuePolicy::Reject { capacity: cap },
+            ..ShardConfig::default()
+        },
+    )
+    .unwrap();
+    let n_sub = 64u64;
+    let mut accepted: Vec<u64> = Vec::new();
+    let mut rejected = 0usize;
+    let mut received: Vec<u64> = Vec::new();
+    for id in 0..n_sub {
+        let x = vec![0.5; csr.cols];
+        match service.submit(Request { id, x }) {
+            Ok(()) => accepted.push(id),
+            Err(ServiceError::Overloaded { capacity }) => {
+                assert_eq!(capacity, cap);
+                rejected += 1;
+            }
+            Err(e) => panic!("unexpected submit error: {e}"),
+        }
+        // Drain whenever the window fills so the run makes progress.
+        while accepted.len() - received.len() >= cap {
+            received.push(service.recv().unwrap().id);
+        }
+    }
+    while received.len() < accepted.len() {
+        received.push(service.recv().unwrap().id);
+    }
+    // Complete accounting: every submission is in exactly one bucket.
+    assert_eq!(accepted.len() + rejected, n_sub as usize);
+    received.sort_unstable();
+    assert_eq!(received, accepted, "every accepted request was answered");
+    let stats = service.stats();
+    assert!(
+        stats.in_flight_high_water <= cap,
+        "in-flight {} exceeded capacity {cap}",
+        stats.in_flight_high_water
+    );
+    assert_eq!(stats.rejected, rejected);
+    assert_eq!(service.shutdown(), accepted.len());
+}
+
+#[test]
+fn sharded_block_policy_under_concurrency_never_drops() {
+    let csr = suite::fem_blocked(160, 3, 5, 3);
+    let service = ShardedService::start(
+        csr.clone(),
+        ShardConfig {
+            shards: 2,
+            kernel: Some(KernelKind::Beta(1, 8)),
+            max_batch: 4,
+            queue: QueuePolicy::Block { capacity: 3 },
+            ..ShardConfig::default()
+        },
+    )
+    .unwrap();
+    let n = 40usize;
+    std::thread::scope(|s| {
+        s.spawn(|| {
+            for _ in 0..n {
+                service.recv().expect("response under backpressure");
+            }
+        });
+        for id in 0..n as u64 {
+            let x = vec![1.0; csr.cols];
+            service.submit(Request { id, x }).unwrap();
+        }
+    });
+    let stats = service.stats();
+    assert_eq!(stats.served, n);
+    assert_eq!(stats.rejected, 0);
+    assert!(stats.in_flight_high_water <= 3);
+    assert_eq!(service.shutdown(), n);
+}
+
+#[test]
+fn response_latency_components_are_consistent() {
+    let csr = suite::fem_blocked(200, 3, 5, 3);
+    let service = ShardedService::start(
+        csr.clone(),
+        ShardConfig {
+            shards: 2,
+            kernel: Some(KernelKind::Beta(1, 8)),
+            ..ShardConfig::default()
+        },
+    )
+    .unwrap();
+    for id in 0..10u64 {
+        service.submit(Request { id, x: vec![1.0; csr.cols] }).unwrap();
+    }
+    for _ in 0..10 {
+        let r = service.recv().unwrap();
+        assert!(r.queue_s >= 0.0 && r.compute_s >= 0.0);
+        assert!((r.latency_s - (r.queue_s + r.compute_s)).abs() < 1e-15);
+    }
+    let rollup = service.stats().rollup();
+    assert_eq!(rollup.served, 10);
+    assert!(rollup.queue.p50_s <= rollup.queue.p99_s);
+    assert!(rollup.compute.p50_s <= rollup.compute.p99_s);
+    assert!(rollup.p99_s >= rollup.compute.p50_s);
+    service.shutdown();
+}
