@@ -31,7 +31,13 @@
 //! Per-shard queues use `Block` at the gate's capacity: because the
 //! gate already bounds cluster-wide in-flight requests to that same
 //! capacity, shard queues can never fill, so the fan-out never blocks
-//! or rejects mid-request (no partially-admitted requests).
+//! or rejects mid-request (no partially-admitted requests). The
+//! fan-out loop itself is serialized by a mutex so concurrent
+//! submitters cannot interleave differently across shards — the
+//! in-order fan-in depends on every shard seeing the same request
+//! order. A shard failure mid-fan-out poisons the whole service
+//! (gate and every shard close), so later calls report `Stopped`
+//! rather than assembling responses from different requests.
 
 use super::engine::SpmvEngine;
 use super::service::{
@@ -170,6 +176,13 @@ pub struct ShardedService<T: Scalar = f64> {
     gate: AdmissionGate,
     rows: usize,
     cols: usize,
+    /// Serializes the fan-out loop: every shard queue must see
+    /// requests in the same order, because the in-order fan-in pairs
+    /// each shard's next response with the oldest request. Without
+    /// this, two concurrent submitters could interleave differently
+    /// across shards and `recv` would concatenate `y` slices from
+    /// different requests.
+    fan_out: Mutex<()>,
     partial: Mutex<PartialFanIn<T>>,
     assembled: AtomicUsize,
     rejected: AtomicUsize,
@@ -219,6 +232,7 @@ impl<T: Scalar> ShardedService<T> {
             gate: AdmissionGate::new(cfg.queue),
             rows,
             cols,
+            fan_out: Mutex::new(()),
             partial: Mutex::new(PartialFanIn { parts: (0..n).map(|_| None).collect() }),
             assembled: AtomicUsize::new(0),
             rejected: AtomicUsize::new(0),
@@ -283,26 +297,34 @@ impl<T: Scalar> ShardedService<T> {
         }
         let Request { id, mut x } = req;
         let n = self.shards.len();
-        let mut failed: Option<ServiceError> = None;
+        // One submitter fans out at a time (see the `fan_out` field
+        // docs). The critical section is short: shard queues run
+        // `Block` at the gate's capacity and the gate already bounds
+        // in-flight to that capacity, so no shard submit can block.
+        let serialized =
+            self.fan_out.lock().unwrap_or_else(|e| e.into_inner());
         for (i, shard) in self.shards.iter().enumerate() {
             // The last shard takes ownership; earlier ones clone.
             let part =
                 if i + 1 == n { std::mem::take(&mut x) } else { x.clone() };
             if let Err(e) = shard.submit(Request { id, x: part }) {
-                failed = Some(e);
-                break;
+                // A shard dispatcher died (kernel panic) mid-fan-out:
+                // earlier shards hold this request while later ones
+                // never saw it, so the per-shard response streams can
+                // never agree again. Poison the whole service — close
+                // the gate and every shard — so subsequent submits
+                // and receives report `Stopped` instead of assembling
+                // responses that belong to different requests.
+                self.gate.close();
+                for s in &self.shards {
+                    s.close();
+                }
+                drop(serialized);
+                return Err(e);
             }
         }
-        match failed {
-            None => Ok(()),
-            Some(e) => {
-                // A shard dispatcher died (kernel panic): the service
-                // is unusable; surface the shard's error and free the
-                // gate slot so shutdown isn't blocked.
-                self.gate.release();
-                Err(e)
-            }
-        }
+        drop(serialized);
+        Ok(())
     }
 
     /// Blocks for the next fully assembled response.
@@ -353,7 +375,11 @@ impl<T: Scalar> ShardedService<T> {
         drop(partial);
 
         let id = parts[0].id;
-        debug_assert!(
+        // Release-build check, not a debug_assert: a desynchronized
+        // fan-in must fail loudly rather than silently hand back a `y`
+        // stitched from different requests. Unreachable with the
+        // serialized fan-out and the poison-on-partial-fan-out path.
+        assert!(
             parts.iter().all(|p| p.id == id),
             "shard fan-in desynchronized"
         );
@@ -386,13 +412,20 @@ impl<T: Scalar> ShardedService<T> {
     /// with [`ServiceError::Stopped`]), drains every shard and returns
     /// the number of requests every shard completed.
     pub fn shutdown(self) -> usize {
-        let ShardedService { shards, gate, .. } = self;
-        gate.close();
+        self.shutdown_ref()
+    }
+
+    /// [`shutdown`](Self::shutdown) through a shared reference — for
+    /// services shared via `Arc` (the tenant registry). Idempotent.
+    pub fn shutdown_ref(&self) -> usize {
+        self.gate.close();
         let mut served = 0usize;
-        for (i, shard) in shards.into_iter().enumerate() {
-            let n = shard.shutdown();
-            // Every admitted request reached every shard, so the
-            // per-shard counts agree; report shard 0's.
+        for (i, shard) in self.shards.iter().enumerate() {
+            let n = shard.shutdown_ref();
+            // Every fully fanned-out request reached every shard, so
+            // the per-shard counts agree (barring a poisoned partial
+            // fan-out, where shard 0's count is the upper bound);
+            // report shard 0's.
             if i == 0 {
                 served = n;
             }
@@ -447,6 +480,52 @@ mod tests {
         let rollup = stats.rollup();
         assert_eq!(rollup.served, 12);
         assert_eq!(service.shutdown(), 12);
+    }
+
+    #[test]
+    fn concurrent_submitters_fan_out_consistently() {
+        // Several threads submit through the shared front-end at once:
+        // the serialized fan-out must keep every shard's queue in the
+        // same order, so each assembled response matches its own
+        // request's reference product (this test raced and assembled
+        // mismatched y slices before the fan-out lock existed).
+        let csr = suite::fem_blocked(400, 3, 5, 3);
+        let service =
+            ShardedService::start(csr.clone(), small_cfg(3)).unwrap();
+        let n_threads = 4usize;
+        let per = 8usize;
+        std::thread::scope(|s| {
+            for t in 0..n_threads {
+                let service = &service;
+                let csr = &csr;
+                s.spawn(move || {
+                    for k in 0..per {
+                        let id = (t * per + k) as u64;
+                        let x: Vec<f64> = (0..csr.cols)
+                            .map(|i| {
+                                ((i as u64 + 7 * id) % 23) as f64 * 0.125
+                            })
+                            .collect();
+                        service.submit(Request { id, x }).unwrap();
+                    }
+                });
+            }
+        });
+        for _ in 0..n_threads * per {
+            let resp = service.recv().expect("assembled response");
+            let x: Vec<f64> = (0..csr.cols)
+                .map(|i| ((i as u64 + 7 * resp.id) % 23) as f64 * 0.125)
+                .collect();
+            let mut want = vec![0.0; csr.rows];
+            csr.spmv_ref(&x, &mut want);
+            crate::testkit::assert_close(
+                &resp.y,
+                &want,
+                1e-9,
+                "concurrent fan-out",
+            );
+        }
+        assert_eq!(service.shutdown(), n_threads * per);
     }
 
     #[test]

@@ -843,6 +843,18 @@ impl<'r, T: Scalar> SpmvEngineBuilder<'r, T> {
             .cloned()
     }
 
+    /// The executor half against an already-resolved plan: equivalent
+    /// to [`SpmvEngine::from_plan`] with this builder's matrix (the
+    /// plan's fingerprint guard applies). Lets callers snapshot a
+    /// compatible plan out of a shared cache, drop the cache lock,
+    /// and pay conversion and pool spawn outside it.
+    pub fn build_from_plan(
+        self,
+        plan: &SpmvPlan,
+    ) -> anyhow::Result<SpmvEngine<T>> {
+        SpmvEngine::from_plan(self.csr, plan)
+    }
+
     /// [`build`](Self::build) against an **in-memory** [`PlanCache`]:
     /// a hit skips inspection entirely, a miss plans and inserts the
     /// new plan into `cache` — the caller decides when (and whether)

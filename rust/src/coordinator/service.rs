@@ -223,7 +223,10 @@ impl StatsInner {
 pub struct SpmvService<T: Scalar = f64> {
     queue: Arc<BoundedQueue<(Request<T>, Instant)>>,
     rx_out: Mutex<mpsc::Receiver<Response<T>>>,
-    dispatcher: Option<std::thread::JoinHandle<()>>,
+    /// Behind a mutex so close/join works through `&self` — services
+    /// shared via `Arc` (tenant registry) and the sharded front-end's
+    /// poison path shut shards down without owning them.
+    dispatcher: Mutex<Option<std::thread::JoinHandle<()>>>,
     served: Arc<AtomicUsize>,
     rejected: AtomicUsize,
     stats: Arc<Mutex<StatsInner>>,
@@ -276,7 +279,7 @@ impl<T: Scalar> SpmvService<T> {
         SpmvService {
             queue,
             rx_out: Mutex::new(rx_out),
-            dispatcher: Some(dispatcher),
+            dispatcher: Mutex::new(Some(dispatcher)),
             served,
             rejected: AtomicUsize::new(0),
             stats,
@@ -396,13 +399,36 @@ impl<T: Scalar> SpmvService<T> {
         }
     }
 
+    /// Closes admission without joining the dispatcher: blocked and
+    /// later submitters fail with [`ServiceError::Stopped`] while
+    /// already-accepted requests keep draining. Once drained the
+    /// dispatcher exits and pending receives report stopped. Used by
+    /// the sharded front-end to poison every shard after a partial
+    /// fan-out; idempotent.
+    pub fn close(&self) {
+        self.queue.close();
+    }
+
     /// Graceful shutdown: closes admission (blocked submitters wake
     /// with [`ServiceError::Stopped`]), serves every already-accepted
     /// request, joins the dispatcher and returns the served count.
     /// Undelivered responses are dropped with the service.
-    pub fn shutdown(mut self) -> usize {
+    pub fn shutdown(self) -> usize {
+        self.shutdown_ref()
+    }
+
+    /// [`shutdown`](Self::shutdown) through a shared reference — for
+    /// services shared via `Arc` (the tenant registry), where no
+    /// caller can take the service by value. Idempotent: later calls
+    /// just report the served count.
+    pub fn shutdown_ref(&self) -> usize {
         self.queue.close();
-        if let Some(h) = self.dispatcher.take() {
+        let handle = {
+            let mut d =
+                self.dispatcher.lock().unwrap_or_else(|e| e.into_inner());
+            d.take()
+        };
+        if let Some(h) = handle {
             let _ = h.join();
         }
         self.served()
@@ -412,7 +438,12 @@ impl<T: Scalar> SpmvService<T> {
 impl<T: Scalar> Drop for SpmvService<T> {
     fn drop(&mut self) {
         self.queue.close();
-        if let Some(h) = self.dispatcher.take() {
+        let taken = self
+            .dispatcher
+            .get_mut()
+            .unwrap_or_else(|e| e.into_inner())
+            .take();
+        if let Some(h) = taken {
             let _ = h.join();
         }
     }

@@ -15,7 +15,12 @@
 //! micro-batching [`SpmvService`] (default) or a row-sharded
 //! [`ShardedService`] for `shards > 1`, each with its own admission
 //! [`QueuePolicy`]. Per-tenant operations are independent; operations
-//! on one tenant never block another's.
+//! on one tenant never block another's. Blocking calls (`recv`,
+//! `recv_timeout`, a `Block`-policy `submit`) clone the tenant's
+//! `Arc`'d service handle and release the registry lock *before*
+//! waiting, so a stalled receiver never wedges registration,
+//! deregistration or another tenant's traffic — deregistering a
+//! tenant wakes its blocked receivers with "stopped".
 //!
 //! The fingerprint is value-blind (structure + precision): two
 //! matrices with identical sparsity patterns are the *same* tenant.
@@ -35,7 +40,7 @@ use crate::matrix::Csr;
 use crate::scalar::Scalar;
 use std::collections::HashMap;
 use std::path::PathBuf;
-use std::sync::{Mutex, RwLock};
+use std::sync::{Arc, Mutex, RwLock};
 use std::time::{Duration, Instant};
 
 /// Per-tenant serving shape, chosen at registration.
@@ -108,10 +113,14 @@ impl<T: Scalar> Serving<T> {
         }
     }
 
-    fn shutdown(self) -> usize {
+    /// Shared-reference shutdown: the handle lives in an `Arc` that
+    /// blocked receivers may still hold clones of, so it can never be
+    /// taken by value. Closing + joining wakes those receivers with
+    /// "stopped".
+    fn shutdown(&self) -> usize {
         match self {
-            Serving::Single(s) => s.shutdown(),
-            Serving::Sharded(s) => s.shutdown(),
+            Serving::Single(s) => s.shutdown_ref(),
+            Serving::Sharded(s) => s.shutdown_ref(),
         }
     }
 }
@@ -119,7 +128,9 @@ impl<T: Scalar> Serving<T> {
 struct Tenant<T: Scalar> {
     name: String,
     fingerprint: MatrixFingerprint,
-    serving: Serving<T>,
+    /// `Arc` so blocking calls can clone the handle and drop the
+    /// registry lock before waiting (see the module docs).
+    serving: Arc<Serving<T>>,
     /// Whether registration instantiated from a cached plan.
     from_cache: bool,
     /// Wall time of engine construction (plan or cache hit +
@@ -239,15 +250,33 @@ impl<T: Scalar> TenantRegistry<T> {
             if let Some(kernel) = cfg.kernel {
                 builder = builder.kernel(kernel);
             }
-            let mut cache = self.cache.lock().unwrap_or_else(|e| e.into_inner());
-            let hit = builder.cached_plan(&cache).is_some();
-            let engine = builder.build_with_cache(&mut cache)?;
-            if !hit {
-                if let Some(path) = &self.cache_path {
-                    cache.save(path)?;
+            // Hold the shared cache lock only for the cheap plan
+            // lookup; the expensive cold start (inspection,
+            // conversion, worker-pool spawn) runs outside it so
+            // concurrent registrations do not serialize. A miss
+            // re-locks to publish the freshly inspected plan (and
+            // persist it) — `insert` replaces same-config entries, so
+            // two racing misses for one structure converge on a
+            // single cache slot.
+            let cached = {
+                let cache =
+                    self.cache.lock().unwrap_or_else(|e| e.into_inner());
+                builder.cached_plan(&cache)
+            };
+            let hit = cached.is_some();
+            let engine = match cached {
+                Some(plan) => builder.build_from_plan(&plan)?,
+                None => {
+                    let engine = builder.build()?;
+                    let mut cache =
+                        self.cache.lock().unwrap_or_else(|e| e.into_inner());
+                    cache.insert(engine.plan().clone());
+                    if let Some(path) = &self.cache_path {
+                        cache.save(path)?;
+                    }
+                    engine
                 }
-            }
-            drop(cache);
+            };
             let service = SpmvService::start_with_policy(
                 engine,
                 cfg.max_batch,
@@ -257,6 +286,7 @@ impl<T: Scalar> TenantRegistry<T> {
         };
         let cold_start_s = t0.elapsed().as_secs_f64();
 
+        let serving = Arc::new(serving);
         let mut tenants = self.tenants_write();
         // Registration raced another thread for the same structure:
         // the loser shuts its freshly started service down.
@@ -319,12 +349,21 @@ impl<T: Scalar> TenantRegistry<T> {
             Tenant {
                 name,
                 fingerprint,
-                serving: Serving::Single(service),
+                serving: Arc::new(Serving::Single(service)),
                 from_cache: true,
                 cold_start_s,
             },
         );
         Ok(fingerprint)
+    }
+
+    /// Clones the tenant's serving handle under a *short* read lock.
+    /// Every potentially blocking operation goes through this so the
+    /// registry lock is never held across a wait — a stalled receiver
+    /// must not block `register`/`deregister` (which need the write
+    /// lock) or any other tenant's traffic.
+    fn serving(&self, fp: &MatrixFingerprint) -> Option<Arc<Serving<T>>> {
+        self.tenants_read().get(fp).map(|t| Arc::clone(&t.serving))
     }
 
     /// Routes a request to the tenant registered under `fp`.
@@ -333,16 +372,16 @@ impl<T: Scalar> TenantRegistry<T> {
         fp: &MatrixFingerprint,
         req: Request<T>,
     ) -> Result<(), ServiceError> {
-        let tenants = self.tenants_read();
-        let tenant = tenants.get(fp).ok_or(ServiceError::UnknownTenant)?;
-        tenant.serving.submit(req)
+        let serving =
+            self.serving(fp).ok_or(ServiceError::UnknownTenant)?;
+        serving.submit(req)
     }
 
     /// Blocks for the tenant's next response. `None` when the tenant
-    /// is unknown or its service stopped.
+    /// is unknown or its service stopped (a blocked receiver wakes
+    /// with `None` when its tenant is deregistered).
     pub fn recv(&self, fp: &MatrixFingerprint) -> Option<Response<T>> {
-        let tenants = self.tenants_read();
-        tenants.get(fp)?.serving.recv()
+        self.serving(fp)?.recv()
     }
 
     /// Waits up to `wait` for the tenant's next response. An unknown
@@ -352,10 +391,8 @@ impl<T: Scalar> TenantRegistry<T> {
         fp: &MatrixFingerprint,
         wait: Duration,
     ) -> Result<Response<T>, RecvTimeoutError> {
-        let tenants = self.tenants_read();
-        let tenant =
-            tenants.get(fp).ok_or(RecvTimeoutError::Stopped)?;
-        tenant.serving.recv_timeout(wait)
+        let serving = self.serving(fp).ok_or(RecvTimeoutError::Stopped)?;
+        serving.recv_timeout(wait)
     }
 
     /// One tenant's snapshot, or `None` when unknown.
@@ -394,7 +431,10 @@ impl<T: Scalar> TenantRegistry<T> {
     }
 
     /// Shuts the tenant down (draining accepted requests) and removes
-    /// it; returns its served count, or `None` when unknown.
+    /// it; returns its served count, or `None` when unknown. The
+    /// write lock is held only for the map removal — the drain runs
+    /// after it is released, and wakes any of the tenant's blocked
+    /// receivers with "stopped".
     pub fn deregister(&self, fp: &MatrixFingerprint) -> Option<usize> {
         let tenant = self.tenants_write().remove(fp)?;
         Some(tenant.serving.shutdown())
@@ -532,6 +572,32 @@ mod tests {
         assert_eq!(fa, fa2);
         assert!(registry.tenant_stats(&fa2).unwrap().from_cache);
         assert_eq!(registry.plan_cache_len(), 1);
+    }
+
+    #[test]
+    fn blocked_receiver_does_not_wedge_the_registry() {
+        // A receiver blocked with nothing outstanding used to hold the
+        // registry read lock forever: register/deregister (write lock)
+        // queued behind it and the whole registry wedged. The handle
+        // clone must keep writes responsive, and deregistering the
+        // stalled tenant must wake its receiver with "stopped".
+        let registry: TenantRegistry = TenantRegistry::new();
+        let fa = registry
+            .register("a", suite::poisson2d(8), TenantConfig::default())
+            .unwrap();
+        std::thread::scope(|s| {
+            let blocked = s.spawn(|| registry.recv(&fa));
+            std::thread::sleep(Duration::from_millis(30));
+            // Write-lock operations proceed while the receiver waits.
+            let fb = registry
+                .register("b", suite::poisson2d(6), TenantConfig::default())
+                .unwrap();
+            assert_eq!(registry.len(), 2);
+            assert_eq!(registry.deregister(&fa), Some(0));
+            // The stalled receiver observed the shutdown, not a hang.
+            assert_eq!(blocked.join().unwrap().map(|r| r.id), None);
+            assert_eq!(registry.deregister(&fb), Some(0));
+        });
     }
 
     #[test]
