@@ -29,6 +29,7 @@ fn main() {
             "tile" => return tile_ablation(),
             "plan" => return plan_ablation(),
             "serve" => return serve_ablation(),
+            "tune" => return tune_ablation(),
             other => {
                 eprintln!("unknown SPC5_ABLATION='{other}', running all")
             }
@@ -48,6 +49,7 @@ fn main() {
     tile_ablation();
     plan_ablation();
     serve_ablation();
+    tune_ablation();
 }
 
 /// GFlop/s vs block fill for every kernel.
@@ -88,10 +90,12 @@ fn fill_sweep() {
 }
 
 /// Software-prefetch ablation: the β hot loops issue `_mm_prefetch`
-/// for the next blocks' header/value cache lines (on by default); this
-/// measures both sides on a streaming-bound and a cache-resident
-/// matrix to prove the hint is not a regression.
+/// for upcoming header/value cache lines (on by default); this builds
+/// one tuned engine per side — `TuneParams::BASELINE` vs
+/// `TuneParams::NO_PREFETCH` — on a streaming-bound and a
+/// cache-resident matrix to prove the hint is not a regression.
 fn prefetch_ablation() {
+    use spc5::TuneParams;
     let mut t = Table::new(
         "Ablation P: software prefetch in the β hot loops (on vs off)",
         &["matrix", "kernel", "pf on GF/s", "pf off GF/s", "on/off"],
@@ -108,13 +112,21 @@ fn prefetch_ablation() {
         KernelKind::Beta(8, 4),
     ];
     for (name, csr) in &mats {
-        let set = KernelSet::prepare(csr.clone(), &kernels);
+        let x = bench_vector(csr.cols, 0xBE7C);
+        let mut y = vec![0.0f64; csr.rows];
         for &k in &kernels {
-            avx512::set_prefetch(true);
-            let g_on = spc5::bench::measure_sequential(&set, name, k).gflops;
-            avx512::set_prefetch(false);
-            let g_off = spc5::bench::measure_sequential(&set, name, k).gflops;
-            avx512::set_prefetch(true);
+            let mut run = |tune: TuneParams| {
+                let engine = SpmvEngine::builder(csr.clone())
+                    .kernel(k)
+                    .tune(tune)
+                    .build()
+                    .expect("β engine builds");
+                let s = mean_of_runs(RUNS, || engine.spmv(&x, &mut y));
+                std::hint::black_box(&y);
+                spmv_gflops(csr.nnz(), s)
+            };
+            let g_on = run(TuneParams::BASELINE);
+            let g_off = run(TuneParams::NO_PREFETCH);
             t.row(vec![
                 name.to_string(),
                 k.to_string(),
@@ -126,6 +138,67 @@ fn prefetch_ablation() {
         eprintln!("  prefetch ablation: {name}");
     }
     t.emit("ablation_prefetch");
+}
+
+/// Machine-level tune sweep: every `VARIANT_TABLE` entry × β kernel on
+/// the tuner's representative generators, via the same
+/// `tuner::sweep` the `spc5 tune` subcommand runs offline. The table
+/// shows each kernel's winning variant against the baseline; every
+/// individual (matrix, kernel, variant) measurement is persisted to
+/// `BENCH_7.json` (CI artifact next to BENCH_3..6), the `variant`
+/// field carrying the tune label. `SPC5_QUICK=1` switches to the
+/// smoke-sized sweep.
+fn tune_ablation() {
+    use spc5::tuner::{sweep, SweepConfig};
+    let cfg = if std::env::var("SPC5_QUICK").is_ok() {
+        SweepConfig::quick()
+    } else {
+        SweepConfig::full()
+    };
+    let (profile, records) = sweep(&cfg).expect("tune sweep");
+    let mut t = Table::new(
+        "Ablation N: kernel tune sweep (winning variant per β kernel)",
+        &["kernel", "variant", "GF/s", "baseline GF/s", "vs baseline"],
+    );
+    for e in &profile.entries {
+        let kernel = e.kernel.to_string();
+        let variant = e.tune.label();
+        t.row(vec![
+            kernel,
+            variant,
+            format!("{:.2}", e.gflops),
+            format!("{:.2}", e.baseline_gflops),
+            format!("{:.3}x", e.gflops / e.baseline_gflops),
+        ]);
+    }
+    t.emit("ablation_tune");
+    eprintln!("  tune ablation: machine {}", profile.machine);
+
+    // `seconds` is not part of a sweep record; 0 marks it unmeasured
+    // (the per-variant GFlop/s is the quantity of interest).
+    let all: Vec<Measurement> = records
+        .iter()
+        .map(|r| Measurement {
+            matrix: r.matrix.clone(),
+            kernel: r.kernel,
+            threads: r.threads,
+            numa: false,
+            tile_cols: r.tile_cols,
+            tune: r.tune,
+            gflops: r.gflops,
+            seconds: 0.0,
+        })
+        .collect();
+    let out = std::env::var("SPC5_BENCH7_JSON")
+        .unwrap_or_else(|_| "BENCH_7.json".to_string());
+    match runner::write_bench_json(
+        std::path::Path::new(&out),
+        "kernel_micro/tune",
+        &all,
+    ) {
+        Ok(()) => eprintln!("  wrote {out}"),
+        Err(e) => eprintln!("warning: {e}"),
+    }
 }
 
 /// Hybrid row-panel schedule vs every fixed kernel, on homogeneous
@@ -199,6 +272,7 @@ fn hybrid_ablation() {
             threads: 1,
             numa: false,
             tile_cols: 0,
+            tune: Default::default(),
             gflops,
             seconds,
         });
@@ -278,6 +352,7 @@ fn tile_ablation() {
                 threads: 1,
                 numa: false,
                 tile_cols: engine.tile_cols().unwrap_or(0),
+                tune: Default::default(),
                 gflops: spmv_gflops(nnz, seconds),
                 seconds,
             };
@@ -397,6 +472,7 @@ fn plan_ablation() {
                 avg_nnz_per_block: avg,
                 threads: 1,
                 tile_cols: 0,
+                tune: Default::default(),
                 gflops,
             });
         }
@@ -424,6 +500,7 @@ fn plan_ablation() {
                 threads: 1,
                 numa: false,
                 tile_cols: 0,
+                tune: Default::default(),
                 gflops: 0.0,
                 seconds,
             });
@@ -577,6 +654,7 @@ fn serve_ablation() {
                     threads: shards,
                     numa: false,
                     tile_cols: 0,
+                    tune: Default::default(),
                     gflops,
                     seconds: wall,
                 });

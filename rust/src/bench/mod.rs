@@ -10,7 +10,7 @@
 pub mod paper_ref;
 pub mod runner;
 
-use crate::kernels::{KernelKind, KernelSet};
+use crate::kernels::{KernelKind, KernelSet, TuneParams};
 use crate::parallel::{ParallelSpmv, ParallelStrategy};
 use crate::predictor::{PerfRecord, RecordStore};
 use crate::scalar::Scalar;
@@ -29,6 +29,9 @@ pub struct Measurement {
     pub numa: bool,
     /// Column tile width the run used (`0` = flat execution).
     pub tile_cols: usize,
+    /// Kernel variant the run executed (baseline unless the producer
+    /// swept variants — the `tune` ablation and `spc5 tune` do).
+    pub tune: TuneParams,
     pub gflops: f64,
     pub seconds: f64,
 }
@@ -58,6 +61,7 @@ pub fn measure_sequential<T: Scalar>(
         // The *resolved* width, so an auto-sized `tiled` run is not
         // mistaken for flat execution (`tile = 0`) in reports/records.
         tile_cols: set.tile_cols(kernel),
+        tune: crate::kernels::default_tune(),
         gflops: spmv_gflops(nnz, seconds),
         seconds,
     }
@@ -86,6 +90,7 @@ pub fn measure_parallel<T: Scalar>(
         threads: p.n_threads(),
         numa: p.strategy() == ParallelStrategy::NumaSplit,
         tile_cols: kernel.tile_width(),
+        tune: bm.tune,
         gflops: spmv_gflops(nnz, seconds),
         seconds,
     }
@@ -117,6 +122,7 @@ pub fn measure_spmm<T: Scalar>(
         threads: p.n_threads(),
         numa: p.strategy() == ParallelStrategy::NumaSplit,
         tile_cols: kernel.tile_width(),
+        tune: bm.tune,
         gflops: k as f64 * spmv_gflops(nnz, seconds),
         seconds,
     }
@@ -137,6 +143,7 @@ pub fn to_record(m: &Measurement, avg: f64) -> PerfRecord {
         avg_nnz_per_block: avg,
         threads: m.threads,
         tile_cols: m.tile_cols,
+        tune: m.tune,
         gflops: m.gflops,
     }
 }

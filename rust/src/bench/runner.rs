@@ -148,9 +148,11 @@ pub fn ensure_records(
 /// repo is tracked across commits (`BENCH_3.json` for the hybrid
 /// ablation, `BENCH_4.json` for the tile-width ablation). Schema:
 /// `{schema, suite, avx512, results: [{matrix, kernel, threads, numa,
-/// tile, gflops, seconds}]}` — `tile` is the column tile width, `0`
-/// meaning flat (untiled) execution, so tiled-vs-flat comparisons are
-/// machine-readable.
+/// tile, variant, gflops, seconds}]}` — `tile` is the column tile
+/// width, `0` meaning flat (untiled) execution, so tiled-vs-flat
+/// comparisons are machine-readable; `variant` is the kernel-variant
+/// label (see [`crate::kernels::TuneParams::label`]), so per-variant
+/// GFlop/s deltas (the `tune` ablation, `BENCH_7.json`) are too.
 pub fn write_bench_json(
     path: &std::path::Path,
     suite_label: &str,
@@ -166,6 +168,7 @@ pub fn write_bench_json(
                 ("threads", Json::Num(m.threads as f64)),
                 ("numa", Json::Bool(m.numa)),
                 ("tile", Json::Num(m.tile_cols as f64)),
+                ("variant", Json::Str(m.tune.label())),
                 ("gflops", Json::Num(m.gflops)),
                 ("seconds", Json::Num(m.seconds)),
             ])
@@ -223,6 +226,7 @@ mod tests {
             threads: 1,
             numa: false,
             tile_cols: 0,
+            tune: Default::default(),
             gflops: g,
             seconds: 1.0,
         };

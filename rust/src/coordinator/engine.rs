@@ -62,7 +62,7 @@ use crate::formats::{
     HybridConfig, HybridMatrix, PoolExec, SparseStorage, TileCols,
     TiledHybrid, TiledMatrix,
 };
-use crate::kernels::{csr5, KernelKind};
+use crate::kernels::{csr5, KernelKind, TuneParams};
 use crate::matrix::reorder::{self, Permutation, ReorderKind};
 use crate::matrix::Csr;
 use crate::parallel::{ParallelSpmv, ParallelStrategy, WorkerPool};
@@ -134,6 +134,8 @@ pub struct SpmvEngineBuilder<'r, T: Scalar = f64> {
     reorder: Option<ReorderKind>,
     tiling: Option<TileCols>,
     plan_cache: Option<PathBuf>,
+    tune: Option<TuneParams>,
+    tune_profile: Option<PathBuf>,
 }
 
 impl<T: Scalar> SpmvEngine<T> {
@@ -155,6 +157,8 @@ impl<T: Scalar> SpmvEngine<T> {
             reorder: None,
             tiling: None,
             plan_cache: None,
+            tune: None,
+            tune_profile: None,
         }
     }
 
@@ -368,10 +372,18 @@ impl<T: Scalar> SpmvEngine<T> {
     /// that crossed a serialization boundary is re-validated.
     fn instantiate(
         csr: Csr<T>,
-        plan: SpmvPlan,
+        mut plan: SpmvPlan,
         pre: Option<(Csr<T>, ReorderState<T>)>,
         trusted_schedule: bool,
     ) -> anyhow::Result<Self> {
+        // A plan-level variant fans out to every hybrid segment that
+        // has no override of its own, so the assembled schedule (and
+        // the plan this engine reports) is explicit about what it runs.
+        if let Some(t) = plan.tune {
+            for e in &mut plan.schedule {
+                e.tune.get_or_insert(t);
+            }
+        }
         // Build-time reordering: permute first so conversion sees the
         // same improved shape the inspection ranked.
         let (csr, reorder_state) = match pre {
@@ -458,7 +470,12 @@ impl<T: Scalar> SpmvEngine<T> {
             KernelKind::Beta(..) | KernelKind::BetaTest(..) => {
                 let bs = plan.kernel.block_size().expect("β kernel has a size");
                 let test = matches!(plan.kernel, KernelKind::BetaTest(..));
-                let block = csr_to_block(&csr, bs)?;
+                let mut block = csr_to_block(&csr, bs)?;
+                // The planned variant rides on the storage: every span
+                // call afterwards dispatches it without re-resolution.
+                if let Some(t) = plan.tune {
+                    block.tune = t;
+                }
                 match plan.tile_cols {
                     // Cache-blocked β: `(panel, tile)` spans over one
                     // converted block matrix. Parallelism is the 2-D
@@ -598,6 +615,26 @@ impl<'r, T: Scalar> SpmvEngineBuilder<'r, T> {
         self
     }
 
+    /// Explicit kernel-variant override for the β hot loops (prefetch
+    /// distances, x-prefetch, unrolling — see
+    /// [`crate::kernels::TuneParams`]). Skips the machine profile; the
+    /// plan carries the variant so `from_plan` reproduces it exactly.
+    /// Without this (or a profile hit) the plan stores `None` and
+    /// instantiation runs the process default.
+    pub fn tune(mut self, t: TuneParams) -> Self {
+        self.tune = Some(t);
+        self
+    }
+
+    /// Machine tune profile (written by `spc5 tune`) consulted at plan
+    /// time: the planned kernel — and, for hybrid schedules, each β
+    /// segment — gets the profile's winning variant. An explicit
+    /// [`SpmvEngineBuilder::tune`] override takes precedence.
+    pub fn tune_profile(mut self, path: impl Into<PathBuf>) -> Self {
+        self.tune_profile = Some(path.into());
+        self
+    }
+
     /// Performance records the predictor selects from.
     pub fn records<'b>(self, store: &'b RecordStore) -> SpmvEngineBuilder<'b, T> {
         SpmvEngineBuilder {
@@ -612,6 +649,8 @@ impl<'r, T: Scalar> SpmvEngineBuilder<'r, T> {
             reorder: self.reorder,
             tiling: self.tiling,
             plan_cache: self.plan_cache,
+            tune: self.tune,
+            tune_profile: self.tune_profile,
         }
     }
 
@@ -757,9 +796,24 @@ impl<'r, T: Scalar> SpmvEngineBuilder<'r, T> {
             KernelKind::Csr | KernelKind::Csr5 => None,
         };
 
+        // Kernel-variant resolution: explicit override > machine tune
+        // profile > none (instantiation then runs the process default).
+        // Resolved here so the serialized plan pins the exact variant —
+        // a tuned plan replayed by `from_plan` is bit-for-bit the same
+        // build, profile file or not.
+        let profile = match (&self.tune, &self.tune_profile) {
+            (None, Some(path)) => {
+                Some(crate::tuner::TuneProfile::load(path)?)
+            }
+            _ => None,
+        };
+        let tune = self.tune.or_else(|| {
+            profile.as_ref().and_then(|p| p.lookup(kernel, self.threads))
+        });
+
         // Rank the hybrid panels and record the compiled schedule, so
         // instantiation needs neither records nor fitted surfaces.
-        let schedule = match kernel {
+        let mut schedule = match kernel {
             KernelKind::Hybrid | KernelKind::Tiled(_) => {
                 let cfg = HybridConfig {
                     panel_rows: self.panel_rows,
@@ -787,6 +841,24 @@ impl<'r, T: Scalar> SpmvEngineBuilder<'r, T> {
             _ => Vec::new(),
         };
 
+        // Per-segment variants: a profile-planned hybrid schedule gives
+        // each β segment the winner swept for *its* block size, not one
+        // compromise variant for the whole matrix. (An explicit builder
+        // override instead becomes the plan-level tune, which
+        // instantiation fans out to every segment.)
+        if let Some(prof) = &profile {
+            for e in &mut schedule {
+                if let crate::formats::hybrid::PanelKernel::Beta(bs) =
+                    e.kernel
+                {
+                    e.tune = prof.lookup(
+                        KernelKind::Beta(bs.r as u8, bs.c as u8),
+                        self.threads,
+                    );
+                }
+            }
+        }
+
         Ok((
             SpmvPlan {
                 version: PLAN_VERSION,
@@ -798,6 +870,7 @@ impl<'r, T: Scalar> SpmvEngineBuilder<'r, T> {
                 panel_rows: self.panel_rows,
                 tile_cols,
                 predicted_gflops: predicted,
+                tune,
                 schedule,
             },
             pre,
@@ -819,11 +892,18 @@ impl<'r, T: Scalar> SpmvEngineBuilder<'r, T> {
             None => true,
             Some(k) => k == p.kernel,
         };
+        // An explicit variant override must match exactly; otherwise
+        // any cached tuning decision (profile-planned or none) serves.
+        let tune_ok = match self.tune {
+            None => true,
+            Some(t) => p.tune == Some(t),
+        };
         p.numa_split == self.numa_split
             && p.reorder == self.reorder
             && p.panel_rows == self.panel_rows
             && kernel_ok
             && tile_ok
+            && tune_ok
     }
 
     /// The plan `cache` would serve this builder, if any. Scans every
@@ -1011,6 +1091,7 @@ mod tests {
                 avg_nnz_per_block: avg,
                 threads: 1,
                 tile_cols: 0,
+                tune: Default::default(),
                 gflops: 0.5 + 0.1 * avg,
             });
             store.push(PerfRecord {
@@ -1019,6 +1100,7 @@ mod tests {
                 avg_nnz_per_block: (1.0 + i as f64 * 0.6).min(8.0),
                 threads: 1,
                 tile_cols: 0,
+                tune: Default::default(),
                 gflops: 1.0,
             });
         }
@@ -1485,5 +1567,75 @@ mod tests {
             assert_eq!(e.storage().kernel_kind(), kernel, "{kernel}");
             e.storage().validate().unwrap();
         }
+    }
+
+    #[test]
+    fn tuned_build_is_bit_identical_to_default() {
+        // Every variant reorders only *when* streams are touched, never
+        // the FMA order — tuned engines must agree with the default
+        // build to the last bit, across kernel classes and runtimes.
+        let csr = suite::mixed_band_scatter(1_024, 7);
+        let x: Vec<f64> = (0..csr.cols).map(|i| (i % 9) as f64 - 4.0).collect();
+        for kernel in [
+            KernelKind::Beta(2, 8),
+            KernelKind::Hybrid,
+            KernelKind::Tiled(192),
+        ] {
+            for threads in [1usize, 3] {
+                let base = SpmvEngine::builder(csr.clone())
+                    .kernel(kernel)
+                    .panel_rows(64)
+                    .threads(threads)
+                    .build()
+                    .unwrap();
+                let mut want = vec![0.0; csr.rows];
+                base.spmv_into(&x, &mut want);
+                for &t in &crate::kernels::VARIANT_TABLE {
+                    let e = SpmvEngine::builder(csr.clone())
+                        .kernel(kernel)
+                        .panel_rows(64)
+                        .threads(threads)
+                        .tune(t)
+                        .build()
+                        .unwrap();
+                    assert_eq!(e.plan().tune, Some(t));
+                    let mut y = vec![0.0; csr.rows];
+                    e.spmv_into(&x, &mut y);
+                    assert_eq!(
+                        y,
+                        want,
+                        "variant {} {kernel} t={threads} diverged",
+                        t.label()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tuned_plan_round_trips_through_from_plan() {
+        // plan() → JSON → from_plan must reproduce the tuned build
+        // exactly: plan-level tune, fanned-out segment tunes and all.
+        let csr = suite::mixed_band_scatter(1_024, 7);
+        let t = crate::kernels::VARIANT_TABLE[3];
+        let b = SpmvEngine::builder(csr.clone())
+            .kernel(KernelKind::Hybrid)
+            .panel_rows(64)
+            .tune(t);
+        let plan = b.plan().unwrap();
+        assert_eq!(plan.tune, Some(t));
+        let text = plan.to_json();
+        let back = SpmvPlan::from_json(&text).unwrap();
+        let e = SpmvEngine::from_plan(csr.clone(), &back).unwrap();
+        assert_eq!(e.plan().tune, Some(t));
+        // Instantiation fans the plan-level variant out to every
+        // segment, so the engine's reported schedule is explicit.
+        assert!(e.plan().schedule.iter().all(|s| s.tune == Some(t)));
+        let x: Vec<f64> = (0..csr.cols).map(|i| (i % 5) as f64 - 2.0).collect();
+        let mut want = vec![0.0; csr.rows];
+        csr.spmv_ref(&x, &mut want);
+        let mut y = vec![0.0; csr.rows];
+        e.spmv_into(&x, &mut y);
+        crate::testkit::assert_close(&y, &want, 1e-9, "tuned from_plan");
     }
 }

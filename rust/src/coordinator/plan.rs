@@ -32,7 +32,7 @@
 
 use crate::formats::stats::count_blocks;
 use crate::formats::{BlockSize, PanelKernel, ScheduleEntry};
-use crate::kernels::KernelKind;
+use crate::kernels::{KernelKind, TuneParams};
 use crate::matrix::reorder::ReorderKind;
 use crate::matrix::Csr;
 use crate::scalar::Scalar;
@@ -159,10 +159,59 @@ pub struct SpmvPlan {
     pub tile_cols: Option<usize>,
     /// Predicted GFlop/s when the predictor made the choice.
     pub predicted_gflops: Option<f64>,
+    /// Resolved kernel variant for the β hot loops (`None` = the
+    /// process default, i.e. the baseline variant). Like `tile_cols`,
+    /// this is a machine-dependent choice resolved at *plan* time —
+    /// `plan()` consults the machine's [`crate::tuner::TuneProfile`] —
+    /// so a serialized plan reproduces the tuned variant bit-for-bit
+    /// on instantiation.
+    pub tune: Option<TuneParams>,
     /// The compiled hybrid row-panel schedule (empty for non-hybrid
-    /// kernels): per-segment row range and panel kernel, so
-    /// instantiation reproduces the exact segments without records.
+    /// kernels): per-segment row range, panel kernel and optional
+    /// per-segment variant override, so instantiation reproduces the
+    /// exact segments without records.
     pub schedule: Vec<ScheduleEntry>,
+}
+
+/// Serializes a kernel variant as a plan/cache JSON object.
+fn tune_to_json(t: TuneParams) -> Json {
+    Json::obj(vec![
+        ("hpd", Json::Num(t.header_prefetch_dist as f64)),
+        ("vpd", Json::Num(t.value_prefetch_dist as f64)),
+        ("pfx", Json::Bool(t.prefetch_x)),
+        ("unroll", Json::Num(t.unroll as f64)),
+    ])
+}
+
+/// Parses a kernel variant object; every field is required so a tuned
+/// plan either reproduces its variant exactly or fails loudly.
+fn tune_from_json(v: &Json) -> anyhow::Result<TuneParams> {
+    let num = |k: &str| -> anyhow::Result<u8> {
+        let n = v
+            .get(k)
+            .and_then(|n| n.as_f64())
+            .ok_or_else(|| anyhow::anyhow!("tune: missing {k}"))?;
+        anyhow::ensure!(
+            n >= 0.0 && n <= u8::MAX as f64 && n.fract() == 0.0,
+            "tune: {k} must be an integer in 0..=255, got {n}"
+        );
+        Ok(n as u8)
+    };
+    let t = TuneParams {
+        header_prefetch_dist: num("hpd")?,
+        value_prefetch_dist: num("vpd")?,
+        prefetch_x: v
+            .get("pfx")
+            .and_then(|b| b.as_bool())
+            .ok_or_else(|| anyhow::anyhow!("tune: missing pfx"))?,
+        unroll: num("unroll")?,
+    };
+    anyhow::ensure!(
+        t.unroll == 1 || t.unroll == 2,
+        "tune: unroll must be 1 or 2, got {}",
+        t.unroll
+    );
+    Ok(t)
 }
 
 impl SpmvPlan {
@@ -185,16 +234,23 @@ impl SpmvPlan {
         if let Some(g) = self.predicted_gflops {
             fields.push(("predicted_gflops", Json::Num(g)));
         }
+        if let Some(t) = self.tune {
+            fields.push(("tune", tune_to_json(t)));
+        }
         if !self.schedule.is_empty() {
             let segs: Vec<Json> = self
                 .schedule
                 .iter()
                 .map(|s| {
-                    Json::obj(vec![
+                    let mut seg = vec![
                         ("row_begin", Json::Num(s.row_begin as f64)),
                         ("row_end", Json::Num(s.row_end as f64)),
                         ("kernel", Json::Str(s.kernel.to_string())),
-                    ])
+                    ];
+                    if let Some(t) = s.tune {
+                        seg.push(("tune", tune_to_json(t)));
+                    }
+                    Json::obj(seg)
                 })
                 .collect();
             fields.push(("schedule", Json::Arr(segs)));
@@ -260,6 +316,12 @@ impl SpmvPlan {
         };
         let predicted_gflops =
             v.get("predicted_gflops").and_then(|g| g.as_f64());
+        // Pre-autotuner plans have no "tune": None instantiates the
+        // process default (baseline) variant, exactly what they ran.
+        let tune = match v.get("tune") {
+            None => None,
+            Some(t) => Some(tune_from_json(t)?),
+        };
         let mut schedule = Vec::new();
         if let Some(arr) = v.get("schedule").and_then(|a| a.as_arr()) {
             for (i, seg) in arr.iter().enumerate() {
@@ -285,10 +347,17 @@ impl SpmvPlan {
                         "plan: segment {i}: unknown panel kernel '{ks}'"
                     )
                 })?;
+                let seg_tune = match seg.get("tune") {
+                    None => None,
+                    Some(t) => Some(tune_from_json(t).map_err(|e| {
+                        anyhow::anyhow!("plan: segment {i}: {e}")
+                    })?),
+                };
                 schedule.push(ScheduleEntry {
                     row_begin: sdim("row_begin")?,
                     row_end: sdim("row_end")?,
                     kernel,
+                    tune: seg_tune,
                 });
             }
         }
@@ -302,6 +371,7 @@ impl SpmvPlan {
             panel_rows,
             tile_cols,
             predicted_gflops,
+            tune,
             schedule,
         })
     }
@@ -340,6 +410,7 @@ fn same_config(a: &SpmvPlan, b: &SpmvPlan) -> bool {
         && a.panel_rows == b.panel_rows
         && a.tile_cols == b.tile_cols
         && a.kernel == b.kernel
+        && a.tune == b.tune
 }
 
 impl PlanCache {
@@ -455,16 +526,19 @@ mod tests {
             panel_rows: 64,
             tile_cols: Some(4096),
             predicted_gflops: Some(2.75),
+            tune: Some(crate::kernels::VARIANT_TABLE[3]),
             schedule: vec![
                 ScheduleEntry {
                     row_begin: 0,
                     row_end: 64,
                     kernel: PanelKernel::Beta(BlockSize::new(2, 8)),
+                    tune: Some(crate::kernels::VARIANT_TABLE[1]),
                 },
                 ScheduleEntry {
                     row_begin: 64,
                     row_end: 100,
                     kernel: PanelKernel::Csr,
+                    tune: None,
                 },
             ],
         }
@@ -480,9 +554,41 @@ mod tests {
         q.reorder = None;
         q.tile_cols = None;
         q.predicted_gflops = None;
+        q.tune = None;
         q.schedule.clear();
         let back = SpmvPlan::from_json(&q.to_json()).unwrap();
         assert_eq!(q, back);
+    }
+
+    #[test]
+    fn pre_tuning_plan_json_still_loads() {
+        // A plan serialized before the autotuner existed has no "tune"
+        // keys anywhere: it must load with `tune: None` (plan and
+        // segments), which instantiates the baseline variant.
+        let text = r#"{"version":1,
+            "fingerprint":{"rows":100,"cols":120,"nnz":999,
+                           "stats_hash":"deadbeefcafef00d"},
+            "kernel":"hybrid","threads":4,"numa_split":false,
+            "panel_rows":64,
+            "schedule":[{"row_begin":0,"row_end":100,"kernel":"b(2,8)"}]}"#;
+        let p = SpmvPlan::from_json(text).unwrap();
+        assert_eq!(p.tune, None);
+        assert_eq!(p.schedule[0].tune, None);
+        // And it re-serializes without inventing tuning fields.
+        assert!(!p.to_json().contains("tune"));
+    }
+
+    #[test]
+    fn tuned_plan_rejects_partial_tune_object() {
+        // A "tune" object missing a field must fail loudly, not
+        // silently fall back to a different variant than was measured.
+        let mut good = sample_plan();
+        good.schedule.clear();
+        let text = good
+            .to_json()
+            .replace(r#""pfx":false,"#, "")
+            .replace(r#""pfx":true,"#, "");
+        assert!(SpmvPlan::from_json(&text).is_err());
     }
 
     #[test]

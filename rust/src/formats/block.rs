@@ -7,6 +7,7 @@
 //! mentions ("16 single precision values") but never ships.
 
 use super::{BlockSize, FormatError};
+use crate::kernels::avx512::TuneParams;
 use crate::scalar::{MaskWord, Scalar};
 
 /// Bytes used for the column index inside an interleaved block header.
@@ -40,6 +41,10 @@ pub struct BlockMatrix<T: Scalar = f64> {
     /// Interleaved per-block header stream: for each block, 4 bytes of
     /// little-endian `colidx` followed by `r` little-endian mask words.
     pub headers: Vec<u8>,
+    /// Kernel variant the SIMD span kernels run for this matrix —
+    /// resolved once (at conversion or plan instantiation), read per
+    /// span call, never per block.
+    pub tune: TuneParams,
 }
 
 impl<T: Scalar> BlockMatrix<T> {

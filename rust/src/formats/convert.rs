@@ -101,6 +101,7 @@ pub fn csr_to_block<T: Scalar>(
         block_rowptr,
         block_masks,
         headers: Vec::new(),
+        tune: crate::kernels::avx512::default_tune(),
     };
     bm.rebuild_headers();
     debug_assert!(bm.validate().is_ok(), "{:?}", bm.validate());
@@ -149,6 +150,7 @@ fn csr_to_block_r1<T: Scalar>(csr: &Csr<T>, bs: BlockSize) -> BlockMatrix<T> {
         block_rowptr,
         block_masks,
         headers,
+        tune: crate::kernels::avx512::default_tune(),
     };
     debug_assert!(bm.validate().is_ok(), "{:?}", bm.validate());
     bm

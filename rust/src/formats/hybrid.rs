@@ -150,6 +150,11 @@ pub struct ScheduleEntry {
     pub row_end: usize,
     /// The merged panel decision for this row range.
     pub kernel: PanelKernel,
+    /// Kernel variant override for this segment's β storage; `None`
+    /// inherits the plan-level (or process-default) tune. The engine
+    /// resolves this before instantiation so a serialized schedule
+    /// reproduces the exact variant.
+    pub tune: Option<crate::kernels::avx512::TuneParams>,
 }
 
 /// Storage of one compiled segment (a run of same-choice panels).
@@ -298,6 +303,7 @@ impl<T: Scalar> HybridMatrix<T> {
                     row_begin: (begin + p0) * cfg.panel_rows,
                     row_end: ((begin + p1) * cfg.panel_rows).min(rows),
                     kernel: choice,
+                    tune: None,
                 });
             }
             begin = end;
@@ -360,7 +366,11 @@ impl<T: Scalar> HybridMatrix<T> {
             let nnz = sub.nnz();
             let storage = match entry.kernel {
                 PanelKernel::Beta(bs) => {
-                    SegmentStorage::Block(csr_to_block(&sub, bs)?)
+                    let mut bm = csr_to_block(&sub, bs)?;
+                    if let Some(t) = entry.tune {
+                        bm.tune = t;
+                    }
+                    SegmentStorage::Block(bm)
                 }
                 PanelKernel::Csr => SegmentStorage::Csr(sub),
             };
@@ -713,6 +723,7 @@ mod tests {
                 avg_nnz_per_block: avg,
                 threads: 1,
                 tile_cols: 0,
+                tune: Default::default(),
                 gflops: 50.0,
             });
             for bs in BlockSize::PAPER_SIZES {
@@ -722,6 +733,7 @@ mod tests {
                     avg_nnz_per_block: avg * (bs.bits() as f64 / 8.0),
                     threads: 1,
                     tile_cols: 0,
+                    tune: Default::default(),
                     gflops: 0.1,
                 });
             }

@@ -48,7 +48,7 @@ use super::{
     csr_to_block, BlockMatrix, BlockSize, FormatError, HybridMatrix,
     PanelKernel, SegmentStorage,
 };
-use crate::kernels::avx512::Span;
+use crate::kernels::avx512::{Span, TuneParams};
 use crate::matrix::Csr;
 use crate::scalar::{MaskWord, Scalar};
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -262,6 +262,9 @@ pub struct TiledMatrix<T: Scalar = f64> {
     /// [`TiledMatrix::validate`] can prove every source block landed in
     /// exactly one span.
     pub source_blocks_per_interval: Vec<u32>,
+    /// Kernel variant the span kernels run (inherited from the source
+    /// block matrix; resolved once, dispatched per span).
+    pub tune: TuneParams,
 }
 
 impl<T: Scalar> TiledMatrix<T> {
@@ -429,6 +432,7 @@ impl<T: Scalar> TiledMatrix<T> {
             headers,
             values,
             source_blocks_per_interval,
+            tune: bm.tune,
         };
         debug_assert!(tm.validate().is_ok(), "{:?}", tm.validate().err());
         Ok(tm)
@@ -508,13 +512,14 @@ impl<T: Scalar> TiledMatrix<T> {
                 let span = self.span(panel, s);
                 let w0 = y0 + s.it_begin * self.bs.r;
                 let yp = &mut y[w0..w0 + span.rows];
-                if !crate::kernels::avx512::spmv_span_at(
+                if !crate::kernels::avx512::spmv_span_at_tuned(
                     span,
                     self.bs,
                     s.col_begin,
                     x,
                     yp,
                     test,
+                    self.tune,
                 ) {
                     crate::kernels::scalar::spmv_generic_span(
                         span,
@@ -559,7 +564,7 @@ impl<T: Scalar> TiledMatrix<T> {
                 let span = self.span(panel, s);
                 let w0 = (y0 + s.it_begin * self.bs.r) * k;
                 let yp = &mut y[w0..w0 + span.rows * k];
-                crate::kernels::spmm::spmm_span_at(
+                crate::kernels::spmm::spmm_span_at_tuned(
                     span,
                     self.bs,
                     s.col_begin,
@@ -567,6 +572,7 @@ impl<T: Scalar> TiledMatrix<T> {
                     yp,
                     k,
                     sums,
+                    self.tune,
                 );
             }
         }

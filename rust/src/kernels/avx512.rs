@@ -44,62 +44,244 @@
 
 use crate::formats::{BlockMatrix, BlockSize};
 use crate::scalar::Scalar;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicU8, Ordering};
 
 #[cfg(target_arch = "x86_64")]
 use std::arch::x86_64::*;
 
-/// Software prefetch toggle for the β hot loops (on by default; the
-/// `SPC5_NO_PREFETCH` environment variable or [`set_prefetch`] turn it
-/// off — the `kernel_micro` ablation uses the latter to measure both
-/// sides). Read once per span call, then baked into the kernel via a
-/// const generic so the per-block path carries no branch.
-static PREFETCH_ON: AtomicBool = AtomicBool::new(true);
-static PREFETCH_ENV: std::sync::Once = std::sync::Once::new();
-
-/// Enables/disables software prefetch in the AVX-512 β kernels
-/// (overrides the `SPC5_NO_PREFETCH` environment default).
-pub fn set_prefetch(enabled: bool) {
-    // Consume the env hook first so it cannot override this later.
-    PREFETCH_ENV.call_once(|| {});
-    PREFETCH_ON.store(enabled, Ordering::Relaxed);
+/// Machine-level tuning knobs for one β kernel invocation — the
+/// parameter space the `spc5 tune` sweep searches (ROADMAP open
+/// item 2). The knobs are pure *scheduling* hints: every combination
+/// computes bit-identical results (unrolling keeps the single
+/// accumulator chain, prefetches never change data), so the tuner can
+/// pick freely on throughput alone.
+///
+/// Kernels are monomorphized per [`VARIANT_TABLE`] entry and dispatched
+/// **once per span call** — the per-block hot path carries no branch
+/// and reads no global state. Parameters outside the table fall back
+/// to the baseline variant.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct TuneParams {
+    /// Header-stream prefetch distance in *blocks* ahead of the walk
+    /// (`0` = no header prefetch).
+    pub header_prefetch_dist: u8,
+    /// Values-stream prefetch distance in 64-byte cache lines
+    /// (`0` = no values prefetch).
+    pub value_prefetch_dist: u8,
+    /// Also prefetch the block's `x` window as soon as its column is
+    /// decoded (helps scatter-heavy matrices, wasted on banded ones).
+    pub prefetch_x: bool,
+    /// Block-loop unroll depth (1 or 2).
+    pub unroll: u8,
 }
 
-/// Whether the β kernels issue software prefetches.
-pub fn prefetch_enabled() -> bool {
-    PREFETCH_ENV.call_once(|| {
+impl TuneParams {
+    /// The hand-tuned defaults the kernels shipped with (8 blocks of
+    /// headers, two cache lines of values ahead) — variant 0.
+    pub const BASELINE: TuneParams = TuneParams {
+        header_prefetch_dist: 8,
+        value_prefetch_dist: 2,
+        prefetch_x: false,
+        unroll: 1,
+    };
+    /// All software prefetch off — variant 1, what the deprecated
+    /// `SPC5_NO_PREFETCH` spelled.
+    pub const NO_PREFETCH: TuneParams = TuneParams {
+        header_prefetch_dist: 0,
+        value_prefetch_dist: 0,
+        prefetch_x: false,
+        unroll: 1,
+    };
+
+    /// Index of this exact parameter set in [`VARIANT_TABLE`], when it
+    /// is one of the monomorphized variants.
+    pub fn variant_index(&self) -> Option<usize> {
+        VARIANT_TABLE.iter().position(|t| t == self)
+    }
+
+    /// The variant the dispatcher will actually run: the table index,
+    /// or the baseline for out-of-table parameters.
+    pub fn resolved_variant(&self) -> usize {
+        self.variant_index().unwrap_or(0)
+    }
+
+    /// Compact display form `h<dist>v<dist><x><u2>` (e.g. `h8v2`,
+    /// `h16v4x`, `h0v0u2`) — used in bench labels and profiles.
+    pub fn label(&self) -> String {
+        let mut s = format!(
+            "h{}v{}",
+            self.header_prefetch_dist, self.value_prefetch_dist
+        );
+        if self.prefetch_x {
+            s.push('x');
+        }
+        if self.unroll > 1 {
+            s.push_str(&format!("u{}", self.unroll));
+        }
+        s
+    }
+}
+
+impl Default for TuneParams {
+    fn default() -> Self {
+        TuneParams::BASELINE
+    }
+}
+
+/// The monomorphized kernel variants: every β kernel is compiled once
+/// per entry, and a span call dispatches by table index. Kept small on
+/// purpose — 8 variants × ~10 kernels is already ~80 instantiations.
+pub const VARIANT_TABLE: [TuneParams; 8] = [
+    // 0: baseline — the distances the kernels always shipped with.
+    TuneParams::BASELINE,
+    // 1: no prefetch (the old SPC5_NO_PREFETCH ablation point).
+    TuneParams::NO_PREFETCH,
+    // 2: near prefetch — half the baseline distances.
+    TuneParams {
+        header_prefetch_dist: 4,
+        value_prefetch_dist: 1,
+        prefetch_x: false,
+        unroll: 1,
+    },
+    // 3: far prefetch — double the baseline distances.
+    TuneParams {
+        header_prefetch_dist: 16,
+        value_prefetch_dist: 4,
+        prefetch_x: false,
+        unroll: 1,
+    },
+    // 4: baseline + x-window prefetch.
+    TuneParams {
+        header_prefetch_dist: 8,
+        value_prefetch_dist: 2,
+        prefetch_x: true,
+        unroll: 1,
+    },
+    // 5: far + x-window prefetch.
+    TuneParams {
+        header_prefetch_dist: 16,
+        value_prefetch_dist: 4,
+        prefetch_x: true,
+        unroll: 1,
+    },
+    // 6: baseline, block loop unrolled ×2.
+    TuneParams {
+        header_prefetch_dist: 8,
+        value_prefetch_dist: 2,
+        prefetch_x: false,
+        unroll: 2,
+    },
+    // 7: no prefetch, unrolled ×2 (pure pipelining effect).
+    TuneParams {
+        header_prefetch_dist: 0,
+        value_prefetch_dist: 0,
+        prefetch_x: false,
+        unroll: 2,
+    },
+];
+
+/// Process-default variant index: 0 (baseline) unless the deprecated
+/// `SPC5_NO_PREFETCH` env hook or [`set_prefetch`] shim changed it.
+/// Read once per *span dispatch* on the untuned compatibility entries,
+/// never inside a block loop.
+static DEFAULT_VARIANT: AtomicU8 = AtomicU8::new(0);
+static DEFAULT_ENV: std::sync::Once = std::sync::Once::new();
+
+/// The process-default [`TuneParams`] — what untuned call sites and
+/// freshly converted matrices run with. Honors the deprecated
+/// `SPC5_NO_PREFETCH` environment variable (mapped to the no-prefetch
+/// variant) for backward compatibility.
+pub fn default_tune() -> TuneParams {
+    DEFAULT_ENV.call_once(|| {
         if std::env::var_os("SPC5_NO_PREFETCH").is_some() {
-            PREFETCH_ON.store(false, Ordering::Relaxed);
+            DEFAULT_VARIANT.store(1, Ordering::Relaxed);
         }
     });
-    PREFETCH_ON.load(Ordering::Relaxed)
+    VARIANT_TABLE[DEFAULT_VARIANT.load(Ordering::Relaxed) as usize]
 }
 
-/// Header-stream prefetch distance in blocks (~1–2 cache lines of
-/// interleaved headers ahead of the walk).
-#[cfg(target_arch = "x86_64")]
-const PF_BLOCKS_AHEAD: usize = 8;
-/// Values-stream prefetch distance in bytes (two cache lines).
-#[cfg(target_arch = "x86_64")]
-const PF_VALUE_BYTES_AHEAD: usize = 128;
+/// Deprecated shim over the process-default [`TuneParams`]: `true`
+/// restores the baseline variant, `false` the no-prefetch variant.
+/// Only affects call sites that never resolved an explicit tune — the
+/// kernels themselves no longer read any global in the hot loop.
+#[deprecated(
+    since = "0.2.0",
+    note = "prefetch is a per-call TuneParams now; pass an explicit \
+            tune (SpmvEngineBuilder::tune / spmv_span_tuned) instead"
+)]
+pub fn set_prefetch(enabled: bool) {
+    // Consume the env hook first so it cannot override this later.
+    DEFAULT_ENV.call_once(|| {});
+    DEFAULT_VARIANT.store(if enabled { 0 } else { 1 }, Ordering::Relaxed);
+}
 
-/// Issues T0 prefetches for the two streams a β kernel walks linearly:
-/// the interleaved header stream and the unpadded values stream. The
-/// `x` window is *not* prefetched — its address depends on the block's
-/// colidx, which is exactly what the header prefetch makes available
-/// early. Near the span tail the computed addresses run past the end
-/// of the streams: `wrapping_add` keeps the pointer arithmetic defined
-/// (plain `add` would be UB out of bounds even without a dereference),
-/// and the prefetch instruction itself never faults on any address.
+/// Deprecated: whether the *process-default* variant prefetches. Per
+/// call sites may run any [`TuneParams`] regardless of this value.
+#[deprecated(
+    since = "0.2.0",
+    note = "prefetch is a per-call TuneParams now; inspect \
+            default_tune() / a plan's tune field instead"
+)]
+pub fn prefetch_enabled() -> bool {
+    default_tune().header_prefetch_dist != 0
+}
+
+/// Const-folded view of one [`VARIANT_TABLE`] entry: the kernels read
+/// their knobs through these associated consts so every `if` on them
+/// disappears at monomorphization.
+#[cfg(target_arch = "x86_64")]
+pub(crate) struct Var<const V: usize>;
+
+#[cfg(target_arch = "x86_64")]
+impl<const V: usize> Var<V> {
+    const P: TuneParams = VARIANT_TABLE[V];
+    /// Header prefetch distance in blocks (0 = off).
+    pub(crate) const HPD: usize = Self::P.header_prefetch_dist as usize;
+    /// Values prefetch distance in bytes (0 = off).
+    pub(crate) const VPD: usize = Self::P.value_prefetch_dist as usize * 64;
+    /// Prefetch the current block's x window.
+    pub(crate) const PX: bool = Self::P.prefetch_x;
+    /// Unroll the block loop ×2.
+    pub(crate) const UNROLL2: bool = Self::P.unroll == 2;
+}
+
+/// Issues T0 prefetches for the streams a β kernel walks linearly: the
+/// interleaved header stream and the unpadded values stream, at the
+/// variant's distances (a zero distance compiles the prefetch away).
+/// The `x` window is handled separately ([`TuneParams::prefetch_x`])
+/// because its address depends on the block's colidx. Near the span
+/// tail the computed addresses run past the end of the streams:
+/// `wrapping_add` keeps the pointer arithmetic defined (plain `add`
+/// would be UB out of bounds even without a dereference), and the
+/// prefetch instruction itself never faults on any address.
 #[cfg(target_arch = "x86_64")]
 #[inline(always)]
-unsafe fn prefetch_streams<T>(h: *const u8, stride: usize, vals: *const T) {
-    _mm_prefetch::<_MM_HINT_T0>(
-        h.wrapping_add(PF_BLOCKS_AHEAD * stride) as *const i8
-    );
-    _mm_prefetch::<_MM_HINT_T0>(
-        (vals as *const i8).wrapping_add(PF_VALUE_BYTES_AHEAD),
-    );
+pub(crate) unsafe fn prefetch_streams<T, const V: usize>(
+    h: *const u8,
+    stride: usize,
+    vals: *const T,
+) {
+    if Var::<V>::HPD != 0 {
+        _mm_prefetch::<_MM_HINT_T0>(
+            h.wrapping_add(Var::<V>::HPD * stride) as *const i8
+        );
+    }
+    if Var::<V>::VPD != 0 {
+        _mm_prefetch::<_MM_HINT_T0>(
+            (vals as *const i8).wrapping_add(Var::<V>::VPD),
+        );
+    }
+}
+
+/// Prefetches the current block's `x` window when the variant asks for
+/// it (compiled away otherwise). `wrapping_add` for the same reason as
+/// [`prefetch_streams`].
+#[cfg(target_arch = "x86_64")]
+#[inline(always)]
+pub(crate) unsafe fn prefetch_x<T, const V: usize>(xp: *const T, col: usize) {
+    if Var::<V>::PX {
+        _mm_prefetch::<_MM_HINT_T0>(xp.wrapping_add(col) as *const i8);
+    }
 }
 
 /// A contiguous run of row intervals plus the sub-streams that cover
@@ -165,21 +347,22 @@ impl<'a, T: Scalar> Span<'a, T> {
 }
 
 /// Dispatches the whole-matrix SpMV to the specialized kernel for
-/// `bm.bs` through the scalar's dispatch hook. Returns `false` when
-/// the block size has no AVX-512 specialization for `T` or the host
-/// lacks AVX-512 (caller falls back to the scalar kernel).
+/// `bm.bs` through the scalar's dispatch hook, running the matrix's
+/// resolved [`TuneParams`] (`bm.tune`). Returns `false` when the block
+/// size has no AVX-512 specialization for `T` or the host lacks
+/// AVX-512 (caller falls back to the scalar kernel).
 pub fn spmv<T: Scalar>(
     bm: &BlockMatrix<T>,
     x: &[T],
     y: &mut [T],
     test: bool,
 ) -> bool {
-    T::spmv_span_simd(Span::full(bm), bm.bs, x, y, test)
+    T::spmv_span_simd(Span::full(bm), bm.bs, x, y, test, bm.tune)
 }
 
-/// Runs one span through the scalar's AVX-512 dispatch. `bs` must
-/// match the span's underlying format; `y` is span-local. Returns
-/// `false` if no specialization exists.
+/// Runs one span through the scalar's AVX-512 dispatch with the
+/// process-default tune. `bs` must match the span's underlying format;
+/// `y` is span-local. Returns `false` if no specialization exists.
 pub fn spmv_span<T: Scalar>(
     span: Span<'_, T>,
     bs: BlockSize,
@@ -187,7 +370,21 @@ pub fn spmv_span<T: Scalar>(
     y: &mut [T],
     test: bool,
 ) -> bool {
-    T::spmv_span_simd(span, bs, x, y, test)
+    T::spmv_span_simd(span, bs, x, y, test, default_tune())
+}
+
+/// [`spmv_span`] with an explicit kernel variant — the tuned span
+/// entry the schedules dispatch through (resolved once per span, never
+/// per block).
+pub fn spmv_span_tuned<T: Scalar>(
+    span: Span<'_, T>,
+    bs: BlockSize,
+    x: &[T],
+    y: &mut [T],
+    test: bool,
+    tune: TuneParams,
+) -> bool {
+    T::spmv_span_simd(span, bs, x, y, test, tune)
 }
 
 /// [`spmv_span`] with a column-base offset — the column-tiled
@@ -205,17 +402,54 @@ pub fn spmv_span_at<T: Scalar>(
     y: &mut [T],
     test: bool,
 ) -> bool {
-    T::spmv_span_simd(span, bs, &x[col_base..], y, test)
+    T::spmv_span_simd(span, bs, &x[col_base..], y, test, default_tune())
 }
 
+/// [`spmv_span_at`] with an explicit kernel variant.
+pub fn spmv_span_at_tuned<T: Scalar>(
+    span: Span<'_, T>,
+    bs: BlockSize,
+    col_base: usize,
+    x: &[T],
+    y: &mut [T],
+    test: bool,
+    tune: TuneParams,
+) -> bool {
+    T::spmv_span_simd(span, bs, &x[col_base..], y, test, tune)
+}
+
+/// Expands one `$f::<V>(..)` call per [`VARIANT_TABLE`] entry —
+/// the once-per-span variant dispatch (out-of-table parameters run
+/// the baseline).
+#[cfg(target_arch = "x86_64")]
+macro_rules! dispatch_variant {
+    ($v:expr, $f:ident($($args:expr),* $(,)?)) => {
+        match $v {
+            1 => $f::<1>($($args),*),
+            2 => $f::<2>($($args),*),
+            3 => $f::<3>($($args),*),
+            4 => $f::<4>($($args),*),
+            5 => $f::<5>($($args),*),
+            6 => $f::<6>($($args),*),
+            7 => $f::<7>($($args),*),
+            _ => $f::<0>($($args),*),
+        }
+    };
+}
+
+#[cfg(target_arch = "x86_64")]
+pub(crate) use dispatch_variant;
+
 /// Double-precision dispatch: the paper's six `vexpandpd` kernels plus
-/// the two Algorithm-2 `test` variants.
+/// the two Algorithm-2 `test` variants, each monomorphized per
+/// [`VARIANT_TABLE`] entry and selected here, once per span.
 pub fn spmv_span_f64(
     span: Span<'_, f64>,
     bs: BlockSize,
     x: &[f64],
     y: &mut [f64],
     test: bool,
+    tune: TuneParams,
 ) -> bool {
     #[cfg(target_arch = "x86_64")]
     {
@@ -223,26 +457,20 @@ pub fn spmv_span_f64(
             return false;
         }
         assert!(y.len() >= span.rows);
-        let pf = prefetch_enabled();
+        let v = tune.resolved_variant();
         // SAFETY: format invariants (validated at conversion) guarantee
         // every masked lane maps inside `x`, every expand stays inside
         // `values`, and every interval row written exists in `y`.
         unsafe {
-            match (bs.r, bs.c, test, pf) {
-                (1, 8, false, true) => spmv_1x8::<true>(span, x, y),
-                (1, 8, false, false) => spmv_1x8::<false>(span, x, y),
-                (1, 8, true, _) => spmv_1x8_test(span, x, y),
-                (2, 8, false, true) => spmv_2x8::<true>(span, x, y),
-                (2, 8, false, false) => spmv_2x8::<false>(span, x, y),
-                (4, 8, false, true) => spmv_4x8::<true>(span, x, y),
-                (4, 8, false, false) => spmv_4x8::<false>(span, x, y),
-                (2, 4, false, true) => spmv_2x4::<true>(span, x, y),
-                (2, 4, false, false) => spmv_2x4::<false>(span, x, y),
-                (2, 4, true, _) => spmv_2x4_test(span, x, y),
-                (4, 4, false, true) => spmv_4x4::<true>(span, x, y),
-                (4, 4, false, false) => spmv_4x4::<false>(span, x, y),
-                (8, 4, false, true) => spmv_8x4::<true>(span, x, y),
-                (8, 4, false, false) => spmv_8x4::<false>(span, x, y),
+            match (bs.r, bs.c, test) {
+                (1, 8, false) => dispatch_variant!(v, spmv_1x8(span, x, y)),
+                (1, 8, true) => spmv_1x8_test(span, x, y),
+                (2, 8, false) => dispatch_variant!(v, spmv_2x8(span, x, y)),
+                (4, 8, false) => dispatch_variant!(v, spmv_4x8(span, x, y)),
+                (2, 4, false) => dispatch_variant!(v, spmv_2x4(span, x, y)),
+                (2, 4, true) => spmv_2x4_test(span, x, y),
+                (4, 4, false) => dispatch_variant!(v, spmv_4x4(span, x, y)),
+                (8, 4, false) => dispatch_variant!(v, spmv_8x4(span, x, y)),
                 _ => return false,
             }
         }
@@ -250,7 +478,7 @@ pub fn spmv_span_f64(
     }
     #[cfg(not(target_arch = "x86_64"))]
     {
-        let _ = (span, bs, x, y, test);
+        let _ = (span, bs, x, y, test, tune);
         false
     }
 }
@@ -265,6 +493,7 @@ pub fn spmv_span_f32(
     x: &[f32],
     y: &mut [f32],
     test: bool,
+    tune: TuneParams,
 ) -> bool {
     #[cfg(target_arch = "x86_64")]
     {
@@ -275,17 +504,14 @@ pub fn spmv_span_f32(
             return false;
         }
         assert!(y.len() >= span.rows);
-        let pf = prefetch_enabled();
+        let v = tune.resolved_variant();
         // SAFETY: same format invariants as the f64 path, with u16
         // masks (validated at conversion: c = 16 lanes, in-bounds).
         unsafe {
-            match (bs.r, pf) {
-                (1, true) => spmv_f32_1x16::<true>(span, x, y),
-                (1, false) => spmv_f32_1x16::<false>(span, x, y),
-                (2, true) => spmv_f32_rx16::<2, true>(span, x, y),
-                (2, false) => spmv_f32_rx16::<2, false>(span, x, y),
-                (4, true) => spmv_f32_rx16::<4, true>(span, x, y),
-                (4, false) => spmv_f32_rx16::<4, false>(span, x, y),
+            match bs.r {
+                1 => dispatch_variant!(v, spmv_f32_1x16(span, x, y)),
+                2 => dispatch_variant!(v, spmv_f32_2x16(span, x, y)),
+                4 => dispatch_variant!(v, spmv_f32_4x16(span, x, y)),
                 _ => return false,
             }
         }
@@ -293,7 +519,7 @@ pub fn spmv_span_f32(
     }
     #[cfg(not(target_arch = "x86_64"))]
     {
-        let _ = (span, bs, x, y, test);
+        let _ = (span, bs, x, y, test, tune);
         false
     }
 }
@@ -310,9 +536,34 @@ unsafe fn header_mask16(h: *const u8, i: usize) -> u16 {
     u16::from_le_bytes([*h.add(4 + 2 * i), *h.add(5 + 2 * i)])
 }
 
+/// Runs a kernel's block loop at the variant's unroll depth. The
+/// unrolled pass repeats the *same* body, so the accumulator chain and
+/// FMA order are untouched — results stay bit-identical; only the loop
+/// control amortizes.
+#[cfg(target_arch = "x86_64")]
+macro_rules! block_loop {
+    ($v:ty, $nb:expr, $body:block) => {{
+        let mut b = $nb;
+        if <$v>::UNROLL2 {
+            while b >= 2 {
+                $body
+                $body
+                b -= 2;
+            }
+        }
+        while b > 0 {
+            $body
+            b -= 1;
+        }
+    }};
+}
+
+#[cfg(target_arch = "x86_64")]
+pub(crate) use block_loop;
+
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx512f,avx512vl,avx512bw,avx512dq")]
-unsafe fn spmv_1x8<const PF: bool>(span: Span<'_>, x: &[f64], y: &mut [f64]) {
+unsafe fn spmv_1x8<const V: usize>(span: Span<'_>, x: &[f64], y: &mut [f64]) {
     let stride = 5;
     let mut h = span.headers.as_ptr();
     let mut vals = span.values.as_ptr();
@@ -323,18 +574,17 @@ unsafe fn spmv_1x8<const PF: bool>(span: Span<'_>, x: &[f64], y: &mut [f64]) {
             continue;
         }
         let mut acc = _mm512_setzero_pd();
-        for _ in 0..nb {
-            if PF {
-                prefetch_streams(h, stride, vals);
-            }
+        block_loop!(Var::<V>, nb, {
+            prefetch_streams::<_, V>(h, stride, vals);
             let col = header_col(h);
+            prefetch_x::<_, V>(xp, col);
             let mask = *h.add(4);
             let v = _mm512_maskz_expandloadu_pd(mask, vals);
             let xv = _mm512_maskz_loadu_pd(mask, xp.add(col));
             acc = _mm512_fmadd_pd(v, xv, acc);
             vals = vals.add(mask.count_ones() as usize);
             h = h.add(stride);
-        }
+        });
         y[row] += _mm512_reduce_add_pd(acc);
     }
 }
@@ -396,7 +646,7 @@ unsafe fn spmv_1x8_test(span: Span<'_>, x: &[f64], y: &mut [f64]) {
 
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx512f,avx512vl,avx512bw,avx512dq")]
-unsafe fn spmv_2x8<const PF: bool>(span: Span<'_>, x: &[f64], y: &mut [f64]) {
+unsafe fn spmv_2x8<const V: usize>(span: Span<'_>, x: &[f64], y: &mut [f64]) {
     let stride = 6;
     let mut h = span.headers.as_ptr();
     let mut vals = span.values.as_ptr();
@@ -408,11 +658,10 @@ unsafe fn spmv_2x8<const PF: bool>(span: Span<'_>, x: &[f64], y: &mut [f64]) {
         }
         let mut acc0 = _mm512_setzero_pd();
         let mut acc1 = _mm512_setzero_pd();
-        for _ in 0..nb {
-            if PF {
-                prefetch_streams(h, stride, vals);
-            }
+        block_loop!(Var::<V>, nb, {
+            prefetch_streams::<_, V>(h, stride, vals);
             let col = header_col(h);
+            prefetch_x::<_, V>(xp, col);
             let m0 = *h.add(4);
             let m1 = *h.add(5);
             let xv = _mm512_maskz_loadu_pd(m0 | m1, xp.add(col));
@@ -423,7 +672,7 @@ unsafe fn spmv_2x8<const PF: bool>(span: Span<'_>, x: &[f64], y: &mut [f64]) {
             acc1 = _mm512_fmadd_pd(v1, xv, acc1);
             vals = vals.add(m1.count_ones() as usize);
             h = h.add(stride);
-        }
+        });
         let row0 = it * 2;
         let q = _mm256_hadd_pd(fold256(acc0), fold256(acc1));
         let r01 = _mm_add_pd(
@@ -443,7 +692,7 @@ unsafe fn spmv_2x8<const PF: bool>(span: Span<'_>, x: &[f64], y: &mut [f64]) {
 
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx512f,avx512vl,avx512bw,avx512dq")]
-unsafe fn spmv_4x8<const PF: bool>(span: Span<'_>, x: &[f64], y: &mut [f64]) {
+unsafe fn spmv_4x8<const V: usize>(span: Span<'_>, x: &[f64], y: &mut [f64]) {
     let stride = 8;
     let mut h = span.headers.as_ptr();
     let mut vals = span.values.as_ptr();
@@ -454,11 +703,10 @@ unsafe fn spmv_4x8<const PF: bool>(span: Span<'_>, x: &[f64], y: &mut [f64]) {
             continue;
         }
         let mut acc = [_mm512_setzero_pd(); 4];
-        for _ in 0..nb {
-            if PF {
-                prefetch_streams(h, stride, vals);
-            }
+        block_loop!(Var::<V>, nb, {
+            prefetch_streams::<_, V>(h, stride, vals);
             let col = header_col(h);
+            prefetch_x::<_, V>(xp, col);
             let m = [*h.add(4), *h.add(5), *h.add(6), *h.add(7)];
             let xv =
                 _mm512_maskz_loadu_pd(m[0] | m[1] | m[2] | m[3], xp.add(col));
@@ -470,7 +718,7 @@ unsafe fn spmv_4x8<const PF: bool>(span: Span<'_>, x: &[f64], y: &mut [f64]) {
                 }
             }
             h = h.add(stride);
-        }
+        });
         let row0 = it * 4;
         let rows_here = 4.min(span.rows - row0);
         let sums = hsum4_256(
@@ -579,7 +827,7 @@ unsafe fn fma_pair_4(
 
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx512f,avx512vl,avx512bw,avx512dq")]
-unsafe fn spmv_2x4<const PF: bool>(span: Span<'_>, x: &[f64], y: &mut [f64]) {
+unsafe fn spmv_2x4<const V: usize>(span: Span<'_>, x: &[f64], y: &mut [f64]) {
     let stride = 6;
     let mut h = span.headers.as_ptr();
     let mut vals = span.values.as_ptr();
@@ -590,16 +838,15 @@ unsafe fn spmv_2x4<const PF: bool>(span: Span<'_>, x: &[f64], y: &mut [f64]) {
             continue;
         }
         let mut acc = _mm512_setzero_pd();
-        for _ in 0..nb {
-            if PF {
-                prefetch_streams(h, stride, vals);
-            }
+        block_loop!(Var::<V>, nb, {
+            prefetch_streams::<_, V>(h, stride, vals);
             let col = header_col(h);
+            prefetch_x::<_, V>(xp, col);
             let (m0, m1) = (*h.add(4), *h.add(5));
             let xv = x_window_4(m0 | m1, xp, col);
             acc = fma_pair_4(m0, m1, xv, &mut vals, acc);
             h = h.add(stride);
-        }
+        });
         let row0 = it * 2;
         let q = _mm256_hadd_pd(
             _mm512_castpd512_pd256(acc),
@@ -684,7 +931,7 @@ unsafe fn spmv_2x4_test(span: Span<'_>, x: &[f64], y: &mut [f64]) {
 
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx512f,avx512vl,avx512bw,avx512dq")]
-unsafe fn spmv_4x4<const PF: bool>(span: Span<'_>, x: &[f64], y: &mut [f64]) {
+unsafe fn spmv_4x4<const V: usize>(span: Span<'_>, x: &[f64], y: &mut [f64]) {
     let stride = 8;
     let mut h = span.headers.as_ptr();
     let mut vals = span.values.as_ptr();
@@ -696,17 +943,16 @@ unsafe fn spmv_4x4<const PF: bool>(span: Span<'_>, x: &[f64], y: &mut [f64]) {
         }
         let mut acc01 = _mm512_setzero_pd();
         let mut acc23 = _mm512_setzero_pd();
-        for _ in 0..nb {
-            if PF {
-                prefetch_streams(h, stride, vals);
-            }
+        block_loop!(Var::<V>, nb, {
+            prefetch_streams::<_, V>(h, stride, vals);
             let col = header_col(h);
+            prefetch_x::<_, V>(xp, col);
             let m = [*h.add(4), *h.add(5), *h.add(6), *h.add(7)];
             let xv = x_window_4(m[0] | m[1] | m[2] | m[3], xp, col);
             acc01 = fma_pair_4(m[0], m[1], xv, &mut vals, acc01);
             acc23 = fma_pair_4(m[2], m[3], xv, &mut vals, acc23);
             h = h.add(stride);
-        }
+        });
         let row0 = it * 4;
         let rows_here = 4.min(span.rows - row0);
         let sums = hsum4_rows(acc01, acc23);
@@ -727,7 +973,7 @@ unsafe fn spmv_4x4<const PF: bool>(span: Span<'_>, x: &[f64], y: &mut [f64]) {
 
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx512f,avx512vl,avx512bw,avx512dq")]
-unsafe fn spmv_8x4<const PF: bool>(span: Span<'_>, x: &[f64], y: &mut [f64]) {
+unsafe fn spmv_8x4<const V: usize>(span: Span<'_>, x: &[f64], y: &mut [f64]) {
     let stride = 12;
     let mut h = span.headers.as_ptr();
     let mut vals = span.values.as_ptr();
@@ -738,11 +984,10 @@ unsafe fn spmv_8x4<const PF: bool>(span: Span<'_>, x: &[f64], y: &mut [f64]) {
             continue;
         }
         let mut acc = [_mm512_setzero_pd(); 4];
-        for _ in 0..nb {
-            if PF {
-                prefetch_streams(h, stride, vals);
-            }
+        block_loop!(Var::<V>, nb, {
+            prefetch_streams::<_, V>(h, stride, vals);
             let col = header_col(h);
+            prefetch_x::<_, V>(xp, col);
             let m: [u8; 8] = [
                 *h.add(4),
                 *h.add(5),
@@ -759,7 +1004,7 @@ unsafe fn spmv_8x4<const PF: bool>(span: Span<'_>, x: &[f64], y: &mut [f64]) {
                 acc[p] = fma_pair_4(m[2 * p], m[2 * p + 1], xv, &mut vals, acc[p]);
             }
             h = h.add(stride);
-        }
+        });
         let row0 = it * 8;
         let rows_here = 8.min(span.rows - row0);
         let sums0 = hsum4_rows(acc[0], acc[1]);
@@ -786,7 +1031,7 @@ unsafe fn spmv_8x4<const PF: bool>(span: Span<'_>, x: &[f64], y: &mut [f64]) {
 
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx512f,avx512vl,avx512bw,avx512dq")]
-unsafe fn spmv_f32_1x16<const PF: bool>(
+unsafe fn spmv_f32_1x16<const V: usize>(
     span: Span<'_, f32>,
     x: &[f32],
     y: &mut [f32],
@@ -801,18 +1046,17 @@ unsafe fn spmv_f32_1x16<const PF: bool>(
             continue;
         }
         let mut acc = _mm512_setzero_ps();
-        for _ in 0..nb {
-            if PF {
-                prefetch_streams(h, stride, vals);
-            }
+        block_loop!(Var::<V>, nb, {
+            prefetch_streams::<_, V>(h, stride, vals);
             let col = header_col(h);
+            prefetch_x::<_, V>(xp, col);
             let mask = header_mask16(h, 0);
             let v = _mm512_maskz_expandloadu_ps(mask, vals);
             let xv = _mm512_maskz_loadu_ps(mask, xp.add(col));
             acc = _mm512_fmadd_ps(v, xv, acc);
             vals = vals.add(mask.count_ones() as usize);
             h = h.add(stride);
-        }
+        });
         y[row] += _mm512_reduce_add_ps(acc);
     }
 }
@@ -820,7 +1064,7 @@ unsafe fn spmv_f32_1x16<const PF: bool>(
 /// Shared r×16 kernel body for r ∈ {2, 4} (const-generic unrolled).
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx512f,avx512vl,avx512bw,avx512dq")]
-unsafe fn spmv_f32_rx16<const R: usize, const PF: bool>(
+unsafe fn spmv_f32_rx16<const R: usize, const V: usize>(
     span: Span<'_, f32>,
     x: &[f32],
     y: &mut [f32],
@@ -835,11 +1079,10 @@ unsafe fn spmv_f32_rx16<const R: usize, const PF: bool>(
             continue;
         }
         let mut acc = [_mm512_setzero_ps(); R];
-        for _ in 0..nb {
-            if PF {
-                prefetch_streams(h, stride, vals);
-            }
+        block_loop!(Var::<V>, nb, {
+            prefetch_streams::<_, V>(h, stride, vals);
             let col = header_col(h);
+            prefetch_x::<_, V>(xp, col);
             let mut union = 0u16;
             let mut masks = [0u16; R];
             for i in 0..R {
@@ -855,13 +1098,36 @@ unsafe fn spmv_f32_rx16<const R: usize, const PF: bool>(
                 }
             }
             h = h.add(stride);
-        }
+        });
         let row0 = it * R;
         let rows_here = R.min(span.rows - row0);
         for i in 0..rows_here {
             y[row0 + i] += _mm512_reduce_add_ps(acc[i]);
         }
     }
+}
+
+/// [`spmv_f32_rx16`] at `R = 2` — a named alias so the variant
+/// dispatch macro can instantiate it per table entry.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx512f,avx512vl,avx512bw,avx512dq")]
+unsafe fn spmv_f32_2x16<const V: usize>(
+    span: Span<'_, f32>,
+    x: &[f32],
+    y: &mut [f32],
+) {
+    spmv_f32_rx16::<2, V>(span, x, y)
+}
+
+/// [`spmv_f32_rx16`] at `R = 4`.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx512f,avx512vl,avx512bw,avx512dq")]
+unsafe fn spmv_f32_4x16<const V: usize>(
+    span: Span<'_, f32>,
+    x: &[f32],
+    y: &mut [f32],
+) {
+    spmv_f32_rx16::<4, V>(span, x, y)
 }
 
 #[cfg(test)]
@@ -926,25 +1192,62 @@ mod tests {
     }
 
     #[test]
-    fn prefetch_toggle_does_not_change_results() {
-        // Prefetch is a pure hint: both kernel instantiations must
-        // produce bit-identical sums on every block size.
+    fn every_variant_is_bit_identical() {
+        // Tuning knobs are pure scheduling hints: every monomorphized
+        // variant must produce bit-identical sums on every block size
+        // (prefetches touch no data; unroll ×2 repeats the same body so
+        // the accumulator chain — and FP rounding — is unchanged).
         let csr = suite::fem_blocked(400, 3, 6, 21);
         let x: Vec<f64> = (0..csr.cols).map(|i| (i % 11) as f64 - 5.0).collect();
         for bs in BlockSize::PAPER_SIZES {
             let bm = csr_to_block(&csr, bs).unwrap();
-            let mut y_on = vec![0.0; csr.rows];
-            let mut y_off = vec![0.0; csr.rows];
-            set_prefetch(true);
-            let ran_on = spmv(&bm, &x, &mut y_on, false);
-            set_prefetch(false);
-            let ran_off = spmv(&bm, &x, &mut y_off, false);
-            set_prefetch(true);
-            assert_eq!(ran_on, ran_off, "{bs}");
-            if ran_on {
-                assert_eq!(y_on, y_off, "{bs}");
+            let mut y0 = vec![0.0; csr.rows];
+            let ran0 = spmv_span_tuned(
+                Span::full(&bm),
+                bs,
+                &x,
+                &mut y0,
+                false,
+                VARIANT_TABLE[0],
+            );
+            for (v, &tune) in VARIANT_TABLE.iter().enumerate().skip(1) {
+                let mut y = vec![0.0; csr.rows];
+                let ran = spmv_span_tuned(
+                    Span::full(&bm),
+                    bs,
+                    &x,
+                    &mut y,
+                    false,
+                    tune,
+                );
+                assert_eq!(ran0, ran, "{bs} variant {v}");
+                if ran0 {
+                    assert_eq!(y0, y, "{bs} variant {v} ({})", tune.label());
+                }
             }
         }
+    }
+
+    #[test]
+    fn variant_table_roundtrips_and_is_distinct() {
+        for (i, t) in VARIANT_TABLE.iter().enumerate() {
+            assert_eq!(t.variant_index(), Some(i));
+            assert_eq!(t.resolved_variant(), i);
+        }
+        // Out-of-table parameters run the baseline variant.
+        let odd = TuneParams {
+            header_prefetch_dist: 3,
+            value_prefetch_dist: 7,
+            prefetch_x: true,
+            unroll: 2,
+        };
+        assert_eq!(odd.variant_index(), None);
+        assert_eq!(odd.resolved_variant(), 0);
+        assert_eq!(TuneParams::default(), VARIANT_TABLE[0]);
+        assert_eq!(TuneParams::NO_PREFETCH, VARIANT_TABLE[1]);
+        assert_eq!(VARIANT_TABLE[0].label(), "h8v2");
+        assert_eq!(VARIANT_TABLE[5].label(), "h16v4x");
+        assert_eq!(VARIANT_TABLE[7].label(), "h0v0u2");
     }
 
     #[test]

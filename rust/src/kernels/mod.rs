@@ -20,6 +20,8 @@ pub mod csr5;
 pub mod scalar;
 pub mod spmm;
 
+pub use avx512::{default_tune, TuneParams, VARIANT_TABLE};
+
 use crate::formats::{BlockMatrix, BlockSize};
 use crate::matrix::Csr;
 use crate::scalar::Scalar;

@@ -23,10 +23,14 @@
 //!   the scalar has a specialization for this `k`, portable
 //!   otherwise), span-wise and whole-matrix.
 
-use super::avx512::Span;
+use super::avx512::{default_tune, Span, TuneParams};
 use crate::formats::{BlockMatrix, BlockSize};
 use crate::scalar::{MaskWord, Scalar};
 
+#[cfg(target_arch = "x86_64")]
+use super::avx512::{
+    block_loop, dispatch_variant, prefetch_streams, prefetch_x, Var,
+};
 #[cfg(target_arch = "x86_64")]
 use std::arch::x86_64::*;
 
@@ -156,7 +160,7 @@ pub fn spmm_generic_span_scratch<T: Scalar>(
 
 /// Span-wise SpMM dispatch: the scalar's SIMD specialization when one
 /// exists for this `k` (AVX-512 `k = 8` at f64), the portable span
-/// kernel otherwise.
+/// kernel otherwise. Runs the process-default tune.
 pub fn spmm_span<T: Scalar>(
     span: Span<'_, T>,
     bs: BlockSize,
@@ -165,7 +169,7 @@ pub fn spmm_span<T: Scalar>(
     k: usize,
 ) {
     let mut sums = Vec::new();
-    spmm_span_scratch(span, bs, x, y, k, &mut sums);
+    spmm_span_scratch_tuned(span, bs, x, y, k, &mut sums, default_tune());
 }
 
 /// [`spmm_span`] with a caller-owned accumulator for the portable
@@ -179,10 +183,24 @@ pub fn spmm_span_scratch<T: Scalar>(
     k: usize,
     sums: &mut Vec<T>,
 ) {
+    spmm_span_scratch_tuned(span, bs, x, y, k, sums, default_tune())
+}
+
+/// [`spmm_span_scratch`] with an explicit kernel variant — resolved
+/// once per span call, like the SpMV side.
+pub fn spmm_span_scratch_tuned<T: Scalar>(
+    span: Span<'_, T>,
+    bs: BlockSize,
+    x: &[T],
+    y: &mut [T],
+    k: usize,
+    sums: &mut Vec<T>,
+    tune: TuneParams,
+) {
     if span.rowptr.len() < 2 {
         return;
     }
-    if T::spmm_span_simd(span, bs, x, y, k) {
+    if T::spmm_span_simd(span, bs, x, y, k, tune) {
         return;
     }
     spmm_generic_span_scratch(span, bs, x, y, k, sums);
@@ -206,8 +224,24 @@ pub fn spmm_span_at<T: Scalar>(
     spmm_span_scratch(span, bs, &x[col_base * k..], y, k, sums)
 }
 
+/// [`spmm_span_at`] with an explicit kernel variant.
+#[allow(clippy::too_many_arguments)]
+pub fn spmm_span_at_tuned<T: Scalar>(
+    span: Span<'_, T>,
+    bs: BlockSize,
+    col_base: usize,
+    x: &[T],
+    y: &mut [T],
+    k: usize,
+    sums: &mut Vec<T>,
+    tune: TuneParams,
+) {
+    spmm_span_scratch_tuned(span, bs, &x[col_base * k..], y, k, sums, tune)
+}
+
 /// Whole-matrix SpMM dispatch (`Y += A·X`, `X`/`Y` row-major): SIMD
-/// when available for this `(T, k)`, portable otherwise.
+/// when available for this `(T, k)`, portable otherwise. Runs the
+/// matrix's resolved tune (`bm.tune`).
 pub fn spmm_auto<T: Scalar>(
     bm: &BlockMatrix<T>,
     x: &[T],
@@ -216,7 +250,16 @@ pub fn spmm_auto<T: Scalar>(
 ) {
     assert_eq!(x.len(), bm.cols * k, "x must be cols*k");
     assert_eq!(y.len(), bm.rows * k, "y must be rows*k");
-    spmm_span(Span::full(bm), bm.bs, x, y, k);
+    let mut sums = Vec::new();
+    spmm_span_scratch_tuned(
+        Span::full(bm),
+        bm.bs,
+        x,
+        y,
+        k,
+        &mut sums,
+        bm.tune,
+    );
 }
 
 /// AVX-512 SpMM for `k = 8`: one zmm accumulator per block row, one
@@ -225,35 +268,44 @@ pub fn spmm_auto<T: Scalar>(
 pub fn spmm_k8(bm: &BlockMatrix, x: &[f64], y: &mut [f64]) {
     assert_eq!(x.len(), bm.cols * 8);
     assert_eq!(y.len(), bm.rows * 8);
-    spmm_span(Span::full(bm), bm.bs, x, y, 8);
+    spmm_auto(bm, x, y, 8);
 }
 
 /// The f64 SIMD hook behind [`crate::scalar::Scalar::spmm_span_simd`]:
-/// handles `k = 8` on AVX-512 hosts, declines everything else.
+/// handles `k = 8` on AVX-512 hosts at the resolved kernel variant,
+/// declines everything else.
 pub fn spmm_span_simd_f64(
     span: Span<'_, f64>,
     bs: BlockSize,
     x: &[f64],
     y: &mut [f64],
     k: usize,
+    tune: TuneParams,
 ) -> bool {
     let _ = bs;
     #[cfg(target_arch = "x86_64")]
     {
         if k == 8 && crate::util::avx512_available() {
+            let v = tune.resolved_variant();
             // SAFETY: same format invariants as the SpMV span kernels;
             // the span's sub-streams cover exactly its blocks.
-            unsafe { spmm_k8_span_avx512(span, x, y) };
+            unsafe {
+                dispatch_variant!(v, spmm_k8_span_avx512(span, x, y));
+            }
             return true;
         }
     }
-    let _ = (span, x, y, k);
+    let _ = (span, x, y, k, tune);
     false
 }
 
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx512f,avx512vl,avx512bw,avx512dq")]
-unsafe fn spmm_k8_span_avx512(span: Span<'_, f64>, x: &[f64], y: &mut [f64]) {
+unsafe fn spmm_k8_span_avx512<const V: usize>(
+    span: Span<'_, f64>,
+    x: &[f64],
+    y: &mut [f64],
+) {
     const K: usize = 8;
     let r = span.r;
     let stride = 4 + r; // f64 header: colidx:4B | r × u8 masks
@@ -272,9 +324,12 @@ unsafe fn spmm_k8_span_avx512(span: Span<'_, f64>, x: &[f64], y: &mut [f64]) {
         for a in acc.iter_mut().take(r) {
             *a = _mm512_setzero_pd();
         }
-        for _ in 0..nb {
+        block_loop!(Var::<V>, nb, {
+            prefetch_streams::<_, V>(h, stride, vals);
             let col0 = u32::from_le_bytes([*h, *h.add(1), *h.add(2), *h.add(3)])
                 as usize;
+            // The x "window" here is the k-wide row panel at col0.
+            prefetch_x::<_, V>(xp, col0 * K);
             for i in 0..r {
                 let mut mask = *h.add(4 + i) as u32;
                 while mask != 0 {
@@ -287,7 +342,7 @@ unsafe fn spmm_k8_span_avx512(span: Span<'_, f64>, x: &[f64], y: &mut [f64]) {
                 }
             }
             h = h.add(stride);
-        }
+        });
         let rows_here = r.min(span.rows - row0);
         for i in 0..rows_here {
             let yp = y.as_mut_ptr().add((row0 + i) * K);

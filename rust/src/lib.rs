@@ -181,14 +181,59 @@
 //! runs the chunks on the engine's `WorkerPool`; `spmm` batches all
 //! right-hand sides through the same schedule.
 //!
-//! Related levers shipped alongside: the β hot loops software-prefetch
-//! the upcoming header/value cache lines
-//! ([`kernels::avx512::set_prefetch`] toggles the hint for ablation),
-//! and `SpmvEngine::builder(..).reorder(..)` applies RCM or
+//! A related lever ships alongside:
+//! `SpmvEngine::builder(..).reorder(..)` applies RCM or
 //! column-packing at build time — the engine stores the permuted
 //! matrix and transparently permutes `x`/`y` on every product, so
 //! callers keep their original index space while conversion sees the
 //! improved block fill.
+//!
+//! ## Autotuning (machine-level kernel variants)
+//!
+//! The β hot loops are compiled as a small table of monomorphized
+//! **variants** ([`kernels::VARIANT_TABLE`]) differing in header/value
+//! prefetch distances, `x`-prefetch and 2× block unrolling
+//! ([`kernels::TuneParams`]) — knobs whose best setting depends on the
+//! executing machine. The variant is resolved **once per storage** and
+//! dispatched per kernel span; the block loops themselves contain no
+//! per-block branching and no global atomic reads:
+//!
+//! ```text
+//!   spc5 tune ──► sweep: every variant × β kernel   (offline, 16-run
+//!        │               on representative matrices    paper protocol)
+//!        ├──► RecordStore      records carry the variant
+//!        ▼
+//!   TuneProfile JSON (machine-keyed per-kernel winners)
+//!        │  builder.tune_profile(path)      builder.tune(params)
+//!        ▼                                  (explicit override)
+//!   plan(): SpmvPlan.tune + per-segment ScheduleEntry.tune
+//!        ▼
+//!   from_plan(): BlockMatrix.tune → dispatch_variant! → Var<V> loop
+//! ```
+//!
+//! - **Sweep** — `spc5 tune [--quick]` ([`tuner::sweep`]) benchmarks
+//!   every variant on structurally distinct generators (or a user
+//!   matrix), persists per-measurement [`predictor::PerfRecord`]s
+//!   (keyed on the variant, so tuned and baseline records coexist)
+//!   and writes the machine-keyed [`tuner::TuneProfile`].
+//! - **Plan** — `SpmvEngine::builder(..).tune_profile(path)` consults
+//!   the profile at inspection: the planned kernel gets its winner,
+//!   and each β segment of a hybrid schedule gets the winner swept for
+//!   *its* block size. The choice is pinned into the serializable
+//!   [`SpmvPlan`], so a tuned plan replayed by
+//!   [`SpmvEngine::from_plan`] reproduces the build bit-for-bit with
+//!   no profile file present.
+//! - **Dispatch** — instantiation stamps the variant into the storage
+//!   (`BlockMatrix::tune`); every span call dispatches the
+//!   monomorphized variant once per segment. Variants only reorder
+//!   *when* streams are prefetched, never the FMA order, so every
+//!   variant is bit-identical to the baseline (differential tests pin
+//!   this down across precisions, runtimes and kernel classes).
+//!
+//! The process-wide default ([`kernels::default_tune`]) honors the
+//! `SPC5_NO_PREFETCH` ablation variable; the old
+//! [`kernels::avx512::set_prefetch`] toggle survives as a deprecated
+//! shim mapping onto it.
 //!
 //! ## Cache blocking (column tiling)
 //!
@@ -255,6 +300,9 @@
 //! - [`predictor`] — the record-based kernel-selection system:
 //!   polynomial interpolation (sequential, Fig. 5) and 2D regression
 //!   (parallel, Fig. 6) over performance records.
+//! - [`tuner`] — the machine-level kernel autotuner: offline sweep of
+//!   the β kernel-variant table, machine-keyed `TuneProfile`
+//!   persistence, and the plan-time lookup the engine consults.
 //! - [`runtime`] — PJRT/XLA executor loading AOT artifacts produced by
 //!   the Python (JAX + Pallas) compile path (behind the `xla` feature;
 //!   a stub with the same API otherwise).
@@ -279,6 +327,7 @@ pub mod predictor;
 pub mod runtime;
 pub mod scalar;
 pub mod testkit;
+pub mod tuner;
 pub mod util;
 
 /// Number of f64 lanes in a 512-bit vector — the paper's `VEC_SIZE`.
@@ -291,6 +340,7 @@ pub use coordinator::{
     TenantRegistry,
 };
 pub use formats::{BlockMatrix, BlockSize, SparseStorage};
-pub use kernels::KernelKind;
+pub use kernels::{default_tune, KernelKind, TuneParams, VARIANT_TABLE};
 pub use matrix::{Coo, Csr};
 pub use scalar::Scalar;
+pub use tuner::TuneProfile;

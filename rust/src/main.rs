@@ -17,6 +17,11 @@
 //! - `serve   --matrix NAME [--shards N] [--queue block|reject|timeout]`
 //!   — drive synthetic load through the sharded, admission-controlled
 //!   serving tier and report per-shard + rollup statistics.
+//! - `tune    [--quick] [--out FILE] [--records FILE]` — offline
+//!   machine-level autotuning: sweep every β kernel variant, persist
+//!   the per-kernel winners as a machine-keyed tune profile (consulted
+//!   by `plan`/`spmv` via `--tune-profile FILE`) and feed the record
+//!   store.
 //! - `kernels` — list kernels and CPU feature support.
 
 use spc5::bench;
@@ -115,6 +120,7 @@ fn run(args: &[String]) -> anyhow::Result<()> {
         "cg" => cmd_cg(&a),
         "gen" => cmd_gen(&a),
         "serve" => cmd_serve(&a),
+        "tune" => cmd_tune(&a),
         "kernels" => cmd_kernels(),
         "help" | "--help" | "-h" => {
             print_help();
@@ -138,8 +144,10 @@ fn print_help() {
          \x20          `tiled` / `tiled(N)` = tiled hybrid schedule)\n\
          \x20          [--plan FILE]        instantiate from a saved plan (skips selection)\n\
          \x20          [--plan-cache FILE]  plan once per fingerprint, reuse afterwards\n\
+         \x20          [--tune-profile FILE] pin machine-tuned kernel variants at plan time\n\
          \x20 plan     --matrix NAME [--kernel K] [--threads N] [--numa] [--reorder ..]\n\
          \x20          [--panel-rows N] [--tile-cols N | --tile-auto] [--records FILE]\n\
+         \x20          [--tune-profile FILE]\n\
          \x20          [--save FILE]        inspection only: print/save the SpmvPlan JSON\n\
          \x20 predict  --matrix NAME [--threads N] [--records FILE]\n\
          \x20 cg       [--n N] [--iters K] [--engine native|xla] [--threads N]\n\
@@ -148,6 +156,9 @@ fn print_help() {
          \x20          [--queue block|reject|timeout] [--capacity C] [--timeout-ms D]\n\
          \x20          [--max-batch B] [--requests R] [--burst K] [--numa]\n\
          \x20          drive synthetic load through the sharded serving tier\n\
+         \x20 tune     [--quick] [--threads N] [--out FILE] [--records FILE]\n\
+         \x20          [--matrix NAME | --mtx FILE]   sweep every β kernel variant and\n\
+         \x20          save the machine-keyed tune profile (default tune.json)\n\
          \x20 kernels  list kernels + CPU support\n"
     );
 }
@@ -230,6 +241,9 @@ fn apply_engine_flags<T: spc5::Scalar>(
     if let Some(path) = a.get("plan-cache") {
         b = b.plan_cache(path);
     }
+    if let Some(path) = a.get("tune-profile") {
+        b = b.tune_profile(path);
+    }
     Ok(b)
 }
 
@@ -309,6 +323,7 @@ fn cmd_spmv(a: &Args) -> anyhow::Result<()> {
                     "tile-cols",
                     "tile-auto",
                     "plan-cache",
+                    "tune-profile",
                 ] {
                     anyhow::ensure!(
                         !a.has(flag),
@@ -651,6 +666,67 @@ fn cmd_serve(a: &Args) -> anyhow::Result<()> {
         2.0 * nnz as f64 * stats.served as f64 / wall / 1e9
     );
     service.shutdown();
+    Ok(())
+}
+
+/// Offline machine-level autotuning: sweep the β kernel-variant table
+/// on representative generators (or one user matrix), print per-kernel
+/// winners, save the machine-keyed profile and feed the record store.
+fn cmd_tune(a: &Args) -> anyhow::Result<()> {
+    use spc5::tuner::{sweep, SweepConfig};
+    let mut cfg =
+        if a.has("quick") { SweepConfig::quick() } else { SweepConfig::full() };
+    cfg.threads = a.get_usize("threads", cfg.threads)?;
+    if a.has("matrix") || a.has("mtx") {
+        let (name, csr) = load_matrix(a)?;
+        cfg.matrices = vec![(name, csr)];
+    }
+    eprintln!(
+        "tune sweep: {} kernels x {} variants on {} matrices (threads={}, \
+         {} runs/measurement)",
+        cfg.kernels.len(),
+        cfg.variants.len(),
+        cfg.matrices.len(),
+        cfg.threads,
+        cfg.runs
+    );
+    let (profile, records) = sweep(&cfg)?;
+    println!("machine: {}", profile.machine);
+    println!(
+        "{:<10} {:<10} {:>9} {:>12} {:>8}",
+        "kernel", "variant", "gflops", "baseline", "speedup"
+    );
+    for e in &profile.entries {
+        // Pre-render: width specs only pad types that honor `f.pad`.
+        let kernel = e.kernel.to_string();
+        let variant = e.tune.label();
+        println!(
+            "{kernel:<10} {variant:<10} {:>9.3} {:>12.3} {:>7.2}x",
+            e.gflops,
+            e.baseline_gflops,
+            e.gflops / e.baseline_gflops.max(1e-12)
+        );
+    }
+    let out = a.get("out").unwrap_or("tune.json");
+    profile.save(out)?;
+    eprintln!("saved tune profile to {out}");
+    // Every individual measurement feeds the predictor store — the
+    // records carry the variant, so they coexist with baseline runs.
+    let rec_path = a
+        .get("records")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(bench::records_path);
+    let n = records.len();
+    let mut store = if rec_path.exists() {
+        RecordStore::load(&rec_path)?
+    } else {
+        RecordStore::new()
+    };
+    for r in records {
+        store.push(r);
+    }
+    store.save(&rec_path)?;
+    eprintln!("merged {n} sweep records into {}", rec_path.display());
     Ok(())
 }
 

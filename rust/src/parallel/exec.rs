@@ -297,9 +297,17 @@ impl<T: Scalar> ParallelSpmv<T> {
         };
 
         if k == 1 {
-            run_span(span, self.bs, xs, work, self.test);
+            run_span(span, self.bs, xs, work, self.test, self.matrix.tune);
         } else {
-            spmm::spmm_span_scratch(span, self.bs, xs, work, k, mrhs);
+            spmm::spmm_span_scratch_tuned(
+                span,
+                self.bs,
+                xs,
+                work,
+                k,
+                mrhs,
+                self.matrix.tune,
+            );
         }
         // Syncless merge: this thread's rows are disjoint.
         for (dst, w) in y_part.iter_mut().zip(work.iter()) {
@@ -325,12 +333,13 @@ fn run_span<T: Scalar>(
     x: &[T],
     y: &mut [T],
     test: bool,
+    tune: crate::kernels::avx512::TuneParams,
 ) {
     if span.rowptr.len() < 2 {
         return;
     }
     if crate::util::avx512_available()
-        && T::spmv_span_simd(span, bs, x, y, test)
+        && T::spmv_span_simd(span, bs, x, y, test, tune)
     {
         return;
     }

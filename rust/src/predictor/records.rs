@@ -5,7 +5,7 @@
 //! persisted as JSON so the CLI's `bench` runs feed later `predict`
 //! invocations.
 
-use crate::kernels::KernelKind;
+use crate::kernels::{KernelKind, TuneParams};
 use crate::util::json::Json;
 use std::path::Path;
 
@@ -24,6 +24,10 @@ pub struct PerfRecord {
     /// spelling this lets the fitted surfaces rank tiled vs. flat
     /// schedules per matrix.
     pub tile_cols: usize,
+    /// Kernel variant the measurement ran with (baseline for the CSR /
+    /// CSR5 comparators, which take no tuning). Pre-autotuner stores
+    /// have no tuning keys and load as the baseline variant.
+    pub tune: TuneParams,
     pub gflops: f64,
 }
 
@@ -39,17 +43,20 @@ impl RecordStore {
     }
 
     /// Adds a measurement, deduplicating by
-    /// `(matrix, kernel, threads, tile_cols)`: a re-measurement of the
-    /// same configuration replaces the old record (latest wins), so a
-    /// store fed by repeated bench runs stays bounded instead of
-    /// growing without limit — and the fitted surfaces see current
-    /// hardware behavior, not a mixture of stale and fresh samples.
+    /// `(matrix, kernel, threads, tile_cols, tune)`: a re-measurement
+    /// of the same configuration replaces the old record (latest
+    /// wins), so a store fed by repeated bench runs stays bounded
+    /// instead of growing without limit — and the fitted surfaces see
+    /// current hardware behavior, not a mixture of stale and fresh
+    /// samples. Distinct kernel variants are distinct configurations:
+    /// the tuner's per-variant sweeps coexist in one store.
     pub fn push(&mut self, r: PerfRecord) {
         let key = self.records.iter().position(|p| {
             p.matrix == r.matrix
                 && p.kernel == r.kernel
                 && p.threads == r.threads
                 && p.tile_cols == r.tile_cols
+                && p.tune == r.tune
         });
         match key {
             Some(i) => self.records[i] = r,
@@ -86,6 +93,10 @@ impl RecordStore {
                     ("avg", Json::Num(r.avg_nnz_per_block)),
                     ("threads", Json::Num(r.threads as f64)),
                     ("tile", Json::Num(r.tile_cols as f64)),
+                    ("hpd", Json::Num(r.tune.header_prefetch_dist as f64)),
+                    ("vpd", Json::Num(r.tune.value_prefetch_dist as f64)),
+                    ("pfx", Json::Bool(r.tune.prefetch_x)),
+                    ("unroll", Json::Num(r.tune.unroll as f64)),
                     ("gflops", Json::Num(r.gflops)),
                 ])
             })
@@ -125,6 +136,29 @@ impl RecordStore {
                 .get("tile")
                 .and_then(|t| t.as_f64())
                 .unwrap_or(0.0) as usize;
+            // Tuning keys are absent in pre-autotuner stores: default
+            // to the baseline variant (what those runs measured).
+            let base = TuneParams::BASELINE;
+            let tune = TuneParams {
+                header_prefetch_dist: item
+                    .get("hpd")
+                    .and_then(|t| t.as_f64())
+                    .unwrap_or(base.header_prefetch_dist as f64)
+                    as u8,
+                value_prefetch_dist: item
+                    .get("vpd")
+                    .and_then(|t| t.as_f64())
+                    .unwrap_or(base.value_prefetch_dist as f64)
+                    as u8,
+                prefetch_x: item
+                    .get("pfx")
+                    .and_then(|t| t.as_bool())
+                    .unwrap_or(base.prefetch_x),
+                unroll: item
+                    .get("unroll")
+                    .and_then(|t| t.as_f64())
+                    .unwrap_or(base.unroll as f64) as u8,
+            };
             store.push(PerfRecord {
                 matrix: field("matrix")?
                     .as_str()
@@ -134,6 +168,7 @@ impl RecordStore {
                 avg_nnz_per_block: num("avg")?,
                 threads: num("threads")? as usize,
                 tile_cols,
+                tune,
                 gflops: num("gflops")?,
             });
         }
@@ -171,9 +206,20 @@ mod tests {
                 avg_nnz_per_block: a,
                 threads: t,
                 tile_cols: tile,
+                tune: TuneParams::default(),
                 gflops: g,
             });
         }
+        // One tuned record: the variant fields must round-trip too.
+        s.push(PerfRecord {
+            matrix: "m1".to_string(),
+            kernel: KernelKind::Beta(1, 8),
+            avg_nnz_per_block: 2.4,
+            threads: 1,
+            tile_cols: 0,
+            tune: crate::kernels::VARIANT_TABLE[3],
+            gflops: 3.4,
+        });
         s
     }
 
@@ -217,6 +263,9 @@ mod tests {
         )
         .unwrap();
         assert_eq!(s.records[0].tile_cols, 0);
+        // Pre-autotuner stores have no tuning keys either: they must
+        // load as the baseline variant, which is what those runs ran.
+        assert_eq!(s.records[0].tune, TuneParams::BASELINE);
         let s = RecordStore::from_json(
             r#"{"records":[{"matrix":"m","kernel":"tiled(4096)","avg":1.5,"threads":1,"tile":4096,"gflops":2.5}]}"#,
         )
@@ -237,18 +286,31 @@ mod tests {
             avg_nnz_per_block: 3.0,
             threads: 2,
             tile_cols: 0,
+            tune: TuneParams::default(),
             gflops,
         };
         s.push(rec(1.0));
         s.push(rec(2.5)); // same key: replaces
         assert_eq!(s.records.len(), 1);
         assert_eq!(s.records[0].gflops, 2.5, "latest record wins");
-        // Any key component differing appends a separate record.
+        // Any key component differing appends a separate record —
+        // including the kernel variant, so the tuner's per-variant
+        // sweep records coexist.
         s.push(PerfRecord { threads: 4, ..rec(3.0) });
         s.push(PerfRecord { tile_cols: 4096, ..rec(3.1) });
         s.push(PerfRecord { kernel: KernelKind::Csr, ..rec(3.2) });
         s.push(PerfRecord { matrix: "other".into(), ..rec(3.3) });
-        assert_eq!(s.records.len(), 5);
+        s.push(PerfRecord {
+            tune: crate::kernels::VARIANT_TABLE[1],
+            ..rec(3.4)
+        });
+        assert_eq!(s.records.len(), 6);
+        // Re-measuring the tuned configuration replaces it in place.
+        s.push(PerfRecord {
+            tune: crate::kernels::VARIANT_TABLE[1],
+            ..rec(3.5)
+        });
+        assert_eq!(s.records.len(), 6);
         // Saturation: pushing the whole set again leaves it unchanged
         // in size (the "repeated bench run" scenario).
         let before = s.records.len();

@@ -182,6 +182,7 @@ mod tests {
                         avg_nnz_per_block: a,
                         threads: t,
                         tile_cols: 0,
+                        tune: Default::default(),
                         gflops: g * (t as f64).sqrt(),
                     });
                 }
@@ -270,6 +271,7 @@ mod tests {
                 avg_nnz_per_block: 1.0 + i as f64,
                 threads: 1,
                 tile_cols: 4096,
+                tune: Default::default(),
                 gflops: 99.0,
             });
         }
@@ -284,6 +286,7 @@ mod tests {
                 avg_nnz_per_block: 1.0 + i as f64,
                 threads: 1,
                 tile_cols: 65536,
+                tune: Default::default(),
                 gflops: 2.0 + i as f64 * 0.1,
             });
         }

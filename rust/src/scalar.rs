@@ -19,7 +19,7 @@
 //! and the header layout are only proven for these two instantiations.
 
 use crate::formats::BlockSize;
-use crate::kernels::avx512::{self, Span};
+use crate::kernels::avx512::{self, Span, TuneParams};
 
 mod private {
     pub trait Sealed {}
@@ -219,28 +219,32 @@ pub trait Scalar:
     /// Whether the value is neither infinite nor NaN.
     fn is_finite(self) -> bool;
 
-    /// Runs one `β(r,c)` span through this scalar's AVX-512 kernels.
-    /// Returns `false` when no specialization exists for `bs` (or the
-    /// host lacks AVX-512); the caller falls back to the portable
-    /// Algorithm-1 kernel.
+    /// Runs one `β(r,c)` span through this scalar's AVX-512 kernels,
+    /// at the resolved [`TuneParams`] kernel variant. Returns `false`
+    /// when no specialization exists for `bs` (or the host lacks
+    /// AVX-512); the caller falls back to the portable Algorithm-1
+    /// kernel.
     fn spmv_span_simd(
         span: Span<'_, Self>,
         bs: BlockSize,
         x: &[Self],
         y: &mut [Self],
         test: bool,
+        tune: TuneParams,
     ) -> bool;
 
     /// Runs one span of the multi-RHS product (`k` right-hand sides,
     /// row-major `X`/`Y` — see [`crate::kernels::spmm`]) through this
-    /// scalar's SIMD specialization, if one exists for `k`. Returns
-    /// `false` to fall back to the portable span SpMM.
+    /// scalar's SIMD specialization, if one exists for `k`, at the
+    /// resolved [`TuneParams`] variant. Returns `false` to fall back
+    /// to the portable span SpMM.
     fn spmm_span_simd(
         span: Span<'_, Self>,
         bs: BlockSize,
         x: &[Self],
         y: &mut [Self],
         k: usize,
+        tune: TuneParams,
     ) -> bool;
 }
 
@@ -277,8 +281,9 @@ impl Scalar for f64 {
         x: &[f64],
         y: &mut [f64],
         test: bool,
+        tune: TuneParams,
     ) -> bool {
-        avx512::spmv_span_f64(span, bs, x, y, test)
+        avx512::spmv_span_f64(span, bs, x, y, test, tune)
     }
 
     #[inline]
@@ -288,8 +293,9 @@ impl Scalar for f64 {
         x: &[f64],
         y: &mut [f64],
         k: usize,
+        tune: TuneParams,
     ) -> bool {
-        crate::kernels::spmm::spmm_span_simd_f64(span, bs, x, y, k)
+        crate::kernels::spmm::spmm_span_simd_f64(span, bs, x, y, k, tune)
     }
 }
 
@@ -326,8 +332,9 @@ impl Scalar for f32 {
         x: &[f32],
         y: &mut [f32],
         test: bool,
+        tune: TuneParams,
     ) -> bool {
-        avx512::spmv_span_f32(span, bs, x, y, test)
+        avx512::spmv_span_f32(span, bs, x, y, test, tune)
     }
 
     #[inline]
@@ -337,6 +344,7 @@ impl Scalar for f32 {
         _x: &[f32],
         _y: &mut [f32],
         _k: usize,
+        _tune: TuneParams,
     ) -> bool {
         // No f32 SpMM specialization yet; the generic span kernel
         // still gives the one-traversal multi-RHS batching win.

@@ -1,0 +1,526 @@
+//! Machine-level kernel autotuner.
+//!
+//! The β hot loops are compiled as a small table of monomorphized
+//! variants ([`crate::kernels::VARIANT_TABLE`]) differing in prefetch
+//! distances, `x`-prefetch and unrolling — knobs whose best setting
+//! depends on the executing machine, not the matrix alone. This module
+//! is the offline half of that machinery:
+//!
+//! 1. **sweep** — [`sweep`] benchmarks every variant × β kernel on a
+//!    set of representative generators (or a user matrix), using the
+//!    paper's 16-run-mean protocol;
+//! 2. **profile** — the per-kernel winners are persisted as a
+//!    machine-keyed [`TuneProfile`] JSON (`spc5 tune --out`), and every
+//!    individual measurement feeds the predictor's
+//!    [`crate::predictor::RecordStore`] (records carry the variant, so
+//!    tuned and baseline measurements coexist);
+//! 3. **plan** — `SpmvEngine::builder(..).tune_profile(path)` consults
+//!    the profile at plan time: the planned kernel (and each β segment
+//!    of a hybrid schedule) gets its winning variant pinned into the
+//!    serializable [`crate::SpmvPlan`], which instantiation dispatches
+//!    once per storage — never per block.
+//!
+//! The sweep is *safe to apply* by construction: every variant reorders
+//! only prefetch hints and loop control, never the FMA order, so a
+//! tuned engine is bit-identical to the baseline build (the
+//! `tune_variants` differential tests pin this down).
+
+use crate::formats::csr_to_block;
+use crate::kernels::{spmv_block, KernelKind, TuneParams, VARIANT_TABLE};
+use crate::matrix::{suite, Csr};
+use crate::parallel::{ParallelSpmv, ParallelStrategy};
+use crate::predictor::PerfRecord;
+use crate::util::json::Json;
+use crate::util::timer::{mean_of_runs, spmv_gflops};
+use std::path::Path;
+
+/// One per-kernel sweep winner.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TuneEntry {
+    /// The β kernel the sweep ran (spelled `b(r,c)`; engine lookups
+    /// for `bt(r,c)` fold onto the same entry — the test kernels run
+    /// the same loops).
+    pub kernel: KernelKind,
+    /// Thread count the sweep ran at (`1` = sequential).
+    pub threads: usize,
+    /// The winning variant.
+    pub tune: TuneParams,
+    /// Mean GFlop/s of the winner across the sweep matrices.
+    pub gflops: f64,
+    /// Mean GFlop/s of the baseline variant on the same matrices —
+    /// kept so the profile records the margin, not just the choice.
+    pub baseline_gflops: f64,
+}
+
+/// Per-machine sweep results: which kernel variant to run for each β
+/// kernel on *this* machine. Written by `spc5 tune`, consulted by
+/// `SpmvEngineBuilder::tune_profile` at plan time.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct TuneProfile {
+    /// The machine the sweep ran on (CPU model + AVX-512 availability
+    /// + core count) — a profile is only meaningful on the machine
+    /// that produced it, so the key travels with the data.
+    pub machine: String,
+    pub entries: Vec<TuneEntry>,
+}
+
+/// The machine key a sweep stamps into its profile: CPU model name
+/// (from `/proc/cpuinfo`, `unknown-cpu` elsewhere), AVX-512
+/// availability and logical core count.
+pub fn machine_key() -> String {
+    let model = std::fs::read_to_string("/proc/cpuinfo")
+        .ok()
+        .and_then(|s| {
+            s.lines()
+                .find(|l| l.starts_with("model name"))
+                .and_then(|l| l.split(':').nth(1))
+                .map(|v| v.trim().to_string())
+        })
+        .unwrap_or_else(|| "unknown-cpu".to_string());
+    let cores = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    format!(
+        "{model} | avx512={} | cores={cores}",
+        crate::util::avx512_available()
+    )
+}
+
+impl TuneProfile {
+    /// The variant to run for `kernel` at `threads`, if the sweep
+    /// covered it: an exact `(kernel, threads)` entry wins, else the
+    /// same kernel at any thread count (prefetch behavior is mostly
+    /// core-local), else `None`. `bt(r,c)` lookups fold onto the
+    /// `b(r,c)` entry — the test kernels run the same loops.
+    pub fn lookup(
+        &self,
+        kernel: KernelKind,
+        threads: usize,
+    ) -> Option<TuneParams> {
+        let key = match kernel {
+            KernelKind::BetaTest(r, c) => KernelKind::Beta(r, c),
+            k => k,
+        };
+        self.entries
+            .iter()
+            .find(|e| e.kernel == key && e.threads == threads)
+            .or_else(|| self.entries.iter().find(|e| e.kernel == key))
+            .map(|e| e.tune)
+    }
+
+    /// Serializes to JSON text.
+    pub fn to_json(&self) -> String {
+        let entries: Vec<Json> = self
+            .entries
+            .iter()
+            .map(|e| {
+                Json::obj(vec![
+                    ("kernel", Json::Str(e.kernel.to_string())),
+                    ("threads", Json::Num(e.threads as f64)),
+                    ("hpd", Json::Num(e.tune.header_prefetch_dist as f64)),
+                    ("vpd", Json::Num(e.tune.value_prefetch_dist as f64)),
+                    ("pfx", Json::Bool(e.tune.prefetch_x)),
+                    ("unroll", Json::Num(e.tune.unroll as f64)),
+                    ("gflops", Json::Num(e.gflops)),
+                    ("baseline_gflops", Json::Num(e.baseline_gflops)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("version", Json::Num(1.0)),
+            ("machine", Json::Str(self.machine.clone())),
+            ("entries", Json::Arr(entries)),
+        ])
+        .to_string()
+    }
+
+    /// Parses from JSON text. Unlike the record store, every tuning
+    /// field is **required** here: a partially specified profile would
+    /// silently pin a different variant than the sweep measured.
+    pub fn from_json(text: &str) -> anyhow::Result<Self> {
+        let v = Json::parse(text)?;
+        let machine = v
+            .get("machine")
+            .and_then(|m| m.as_str())
+            .ok_or_else(|| anyhow::anyhow!("profile: missing machine"))?
+            .to_string();
+        let arr = v
+            .get("entries")
+            .and_then(|e| e.as_arr())
+            .ok_or_else(|| anyhow::anyhow!("profile: missing entries"))?;
+        let mut entries = Vec::with_capacity(arr.len());
+        for (i, item) in arr.iter().enumerate() {
+            let field = |k: &str| {
+                item.get(k).ok_or_else(|| {
+                    anyhow::anyhow!("profile entry {i}: missing {k}")
+                })
+            };
+            let num = |k: &str| -> anyhow::Result<f64> {
+                field(k)?.as_f64().ok_or_else(|| {
+                    anyhow::anyhow!("profile entry {i}: {k} not a number")
+                })
+            };
+            let kernel_s = field("kernel")?.as_str().ok_or_else(|| {
+                anyhow::anyhow!("profile entry {i}: kernel not a string")
+            })?;
+            let kernel = KernelKind::parse(kernel_s).ok_or_else(|| {
+                anyhow::anyhow!("profile entry {i}: bad kernel '{kernel_s}'")
+            })?;
+            let u8_field = |k: &str| -> anyhow::Result<u8> {
+                let n = num(k)?;
+                anyhow::ensure!(
+                    n >= 0.0 && n <= 255.0 && n.fract() == 0.0,
+                    "profile entry {i}: {k} out of range"
+                );
+                Ok(n as u8)
+            };
+            let unroll = u8_field("unroll")?;
+            anyhow::ensure!(
+                unroll == 1 || unroll == 2,
+                "profile entry {i}: unroll must be 1 or 2"
+            );
+            entries.push(TuneEntry {
+                kernel,
+                threads: num("threads")? as usize,
+                tune: TuneParams {
+                    header_prefetch_dist: u8_field("hpd")?,
+                    value_prefetch_dist: u8_field("vpd")?,
+                    prefetch_x: field("pfx")?.as_bool().ok_or_else(|| {
+                        anyhow::anyhow!("profile entry {i}: pfx not a bool")
+                    })?,
+                    unroll,
+                },
+                gflops: num("gflops")?,
+                baseline_gflops: num("baseline_gflops")?,
+            });
+        }
+        Ok(TuneProfile { machine, entries })
+    }
+
+    /// Saves to a file.
+    pub fn save(&self, path: impl AsRef<Path>) -> anyhow::Result<()> {
+        let path = path.as_ref();
+        std::fs::write(path, self.to_json())
+            .map_err(|e| anyhow::anyhow!("write {}: {e}", path.display()))
+    }
+
+    /// Loads from a file.
+    pub fn load(path: impl AsRef<Path>) -> anyhow::Result<Self> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path).map_err(|e| {
+            anyhow::anyhow!("read tune profile {}: {e}", path.display())
+        })?;
+        Self::from_json(&text)
+    }
+}
+
+/// What [`sweep`] measures: which kernels, which variants, on which
+/// matrices, at what thread count and measurement length.
+pub struct SweepConfig {
+    /// β kernels to sweep (non-β entries are skipped).
+    pub kernels: Vec<KernelKind>,
+    /// Indices into [`VARIANT_TABLE`]. Index 0 (the baseline) is
+    /// always measured — it anchors `baseline_gflops`.
+    pub variants: Vec<usize>,
+    /// Thread count every measurement runs at (`1` = sequential).
+    pub threads: usize,
+    /// Runs per measurement (the paper uses 16; `quick` trims it).
+    pub runs: usize,
+    /// Named matrices the sweep averages over.
+    pub matrices: Vec<(String, Csr)>,
+}
+
+impl SweepConfig {
+    /// The full offline sweep: every distinct-β paper kernel × every
+    /// variant, averaged over five structurally distinct generators.
+    pub fn full() -> Self {
+        SweepConfig {
+            kernels: beta_kernels(),
+            variants: (0..VARIANT_TABLE.len()).collect(),
+            threads: 1,
+            runs: crate::bench::RUNS,
+            matrices: vec![
+                ("fem".into(), suite::fem_blocked(1_500, 3, 6, 7)),
+                ("poisson".into(), suite::poisson2d(64)),
+                ("banded".into(), suite::banded(4_096, 16, 1.0, 3)),
+                ("scatter".into(), suite::uniform_scatter(4_096, 20, 3)),
+                ("dense".into(), suite::dense(384, 1)),
+            ],
+        }
+    }
+
+    /// A smoke-test sweep (`spc5 tune --quick`): two kernels, three
+    /// variants, two small matrices, short runs — exercises the whole
+    /// sweep → profile → plan pipeline in CI-friendly time.
+    pub fn quick() -> Self {
+        SweepConfig {
+            kernels: vec![KernelKind::Beta(1, 8), KernelKind::Beta(2, 8)],
+            variants: vec![0, 1, 3],
+            threads: 1,
+            runs: 4,
+            matrices: vec![
+                ("poisson".into(), suite::poisson2d(32)),
+                ("fem".into(), suite::fem_blocked(400, 3, 5, 7)),
+            ],
+        }
+    }
+}
+
+/// The distinct β block sizes of the paper's kernel set (the `bt`
+/// spellings run the same loops and are not swept separately).
+fn beta_kernels() -> Vec<KernelKind> {
+    KernelKind::SPC5_KERNELS
+        .iter()
+        .copied()
+        .filter(|k| matches!(k, KernelKind::Beta(..)))
+        .collect()
+}
+
+/// One variant measurement: mean GFlop/s of `runs` products on `bm`'s
+/// variant (already stamped into `bm.tune`).
+fn measure_variant(
+    bm: &crate::formats::BlockMatrix,
+    threads: usize,
+    runs: usize,
+) -> f64 {
+    let nnz = bm.nnz();
+    let x = crate::bench::bench_vector(bm.cols, 0xBE7C);
+    let mut y = vec![0.0f64; bm.rows];
+    let seconds = if threads > 1 {
+        let p = ParallelSpmv::new(
+            bm.clone(),
+            threads,
+            ParallelStrategy::Shared,
+            false,
+        );
+        mean_of_runs(runs, || p.spmv(&x, &mut y))
+    } else {
+        mean_of_runs(runs, || spmv_block(bm, &x, &mut y, false))
+    };
+    std::hint::black_box(&y);
+    spmv_gflops(nnz, seconds)
+}
+
+/// Runs the sweep: for every β kernel in `cfg`, measures every
+/// requested variant on every matrix, returns the machine profile of
+/// per-kernel winners plus one [`PerfRecord`] per individual
+/// measurement (for [`crate::predictor::RecordStore::push`], which
+/// keys on the variant so tuned and baseline records coexist).
+pub fn sweep(
+    cfg: &SweepConfig,
+) -> anyhow::Result<(TuneProfile, Vec<PerfRecord>)> {
+    anyhow::ensure!(!cfg.matrices.is_empty(), "tune sweep: no matrices");
+    anyhow::ensure!(cfg.runs > 0, "tune sweep: runs must be positive");
+    // Baseline first, then the requested variants (deduplicated,
+    // order-preserving) — index 0 anchors `baseline_gflops`.
+    let mut variants: Vec<usize> = vec![0];
+    for &v in &cfg.variants {
+        anyhow::ensure!(
+            v < VARIANT_TABLE.len(),
+            "tune sweep: variant index {v} out of range"
+        );
+        if !variants.contains(&v) {
+            variants.push(v);
+        }
+    }
+
+    let mut profile = TuneProfile {
+        machine: machine_key(),
+        entries: Vec::new(),
+    };
+    let mut records = Vec::new();
+    for &kernel in &cfg.kernels {
+        let Some(bs) = kernel.block_size() else { continue };
+        // One conversion per (kernel, matrix); the variant is a field
+        // write, not a re-conversion.
+        let mut converted = Vec::with_capacity(cfg.matrices.len());
+        for (name, csr) in &cfg.matrices {
+            converted.push((name.clone(), csr_to_block(csr, bs)?));
+        }
+        let mut best: Option<(TuneParams, f64)> = None;
+        let mut baseline = 0.0f64;
+        for &v in &variants {
+            let tune = VARIANT_TABLE[v];
+            let mut sum = 0.0f64;
+            for (name, bm) in &mut converted {
+                bm.tune = tune;
+                let gflops = measure_variant(bm, cfg.threads, cfg.runs);
+                sum += gflops;
+                records.push(PerfRecord {
+                    matrix: name.clone(),
+                    kernel,
+                    avg_nnz_per_block: bm.avg_nnz_per_block(),
+                    threads: cfg.threads,
+                    tile_cols: 0,
+                    tune,
+                    gflops,
+                });
+            }
+            let mean = sum / converted.len() as f64;
+            if v == 0 {
+                baseline = mean;
+            }
+            // Strict >: ties keep the earlier (simpler) variant.
+            let better = match best {
+                None => true,
+                Some((_, g)) => mean > g,
+            };
+            if better {
+                best = Some((tune, mean));
+            }
+            eprintln!(
+                "  tune {kernel} {}: {mean:.3} GFlop/s",
+                tune.label()
+            );
+        }
+        let (tune, gflops) = best.expect("variants is never empty");
+        profile.entries.push(TuneEntry {
+            kernel,
+            threads: cfg.threads,
+            tune,
+            gflops,
+            baseline_gflops: baseline,
+        });
+    }
+    Ok((profile, records))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_config() -> SweepConfig {
+        SweepConfig {
+            kernels: vec![KernelKind::Beta(2, 4)],
+            variants: vec![1],
+            threads: 1,
+            runs: 2,
+            matrices: vec![("p".into(), suite::poisson2d(12))],
+        }
+    }
+
+    #[test]
+    fn profile_json_roundtrip() {
+        let p = TuneProfile {
+            machine: "test-machine | avx512=false | cores=2".into(),
+            entries: vec![
+                TuneEntry {
+                    kernel: KernelKind::Beta(2, 8),
+                    threads: 1,
+                    tune: VARIANT_TABLE[3],
+                    gflops: 3.4,
+                    baseline_gflops: 3.1,
+                },
+                TuneEntry {
+                    kernel: KernelKind::Beta(1, 8),
+                    threads: 4,
+                    tune: TuneParams::NO_PREFETCH,
+                    gflops: 2.0,
+                    baseline_gflops: 2.0,
+                },
+            ],
+        };
+        let back = TuneProfile::from_json(&p.to_json()).unwrap();
+        assert_eq!(p, back);
+    }
+
+    #[test]
+    fn profile_rejects_partial_tune() {
+        // Our own (new) format: every tuning field is required, so a
+        // hand-edited profile cannot silently pin a different variant.
+        let p = TuneProfile {
+            machine: "m".into(),
+            entries: vec![TuneEntry {
+                kernel: KernelKind::Beta(2, 8),
+                threads: 1,
+                tune: VARIANT_TABLE[0],
+                gflops: 1.0,
+                baseline_gflops: 1.0,
+            }],
+        };
+        let good = p.to_json();
+        // Keys serialize alphabetically; `vpd` is last in its object,
+        // so it is stripped with its *leading* comma.
+        for key in ["\"hpd\":8,", ",\"vpd\":2", "\"pfx\":false,", "\"unroll\":1,"] {
+            let bad = good.replace(key, "");
+            assert_ne!(bad, good, "pattern {key} not found in {good}");
+            assert!(
+                TuneProfile::from_json(&bad).is_err(),
+                "stripped {key} must fail"
+            );
+        }
+    }
+
+    #[test]
+    fn lookup_prefers_exact_threads_then_kernel() {
+        let mk = |kernel, threads, v: usize| TuneEntry {
+            kernel,
+            threads,
+            tune: VARIANT_TABLE[v],
+            gflops: 1.0,
+            baseline_gflops: 1.0,
+        };
+        let p = TuneProfile {
+            machine: "m".into(),
+            entries: vec![
+                mk(KernelKind::Beta(2, 8), 1, 2),
+                mk(KernelKind::Beta(2, 8), 4, 3),
+                mk(KernelKind::Beta(1, 8), 1, 1),
+            ],
+        };
+        assert_eq!(p.lookup(KernelKind::Beta(2, 8), 4), Some(VARIANT_TABLE[3]));
+        assert_eq!(p.lookup(KernelKind::Beta(2, 8), 1), Some(VARIANT_TABLE[2]));
+        // No entry at threads=2: same kernel at any thread count serves.
+        assert_eq!(p.lookup(KernelKind::Beta(2, 8), 2), Some(VARIANT_TABLE[2]));
+        // Test kernels fold onto the β entry (same loops).
+        assert_eq!(
+            p.lookup(KernelKind::BetaTest(1, 8), 1),
+            Some(VARIANT_TABLE[1])
+        );
+        // Unswept kernels resolve to nothing (process default applies).
+        assert_eq!(p.lookup(KernelKind::Beta(8, 4), 1), None);
+        assert_eq!(p.lookup(KernelKind::Csr, 1), None);
+    }
+
+    #[test]
+    fn sweep_produces_profile_and_records() {
+        let cfg = tiny_config();
+        let (profile, records) = sweep(&cfg).unwrap();
+        assert_eq!(profile.entries.len(), 1);
+        let e = &profile.entries[0];
+        assert_eq!(e.kernel, KernelKind::Beta(2, 4));
+        assert!(e.gflops > 0.0 && e.baseline_gflops > 0.0);
+        // The winner can only be at least as fast as the baseline.
+        assert!(e.gflops >= e.baseline_gflops);
+        assert!(!profile.machine.is_empty());
+        // One record per (matrix, variant): baseline + variant 1.
+        assert_eq!(records.len(), 2);
+        assert!(records.iter().any(|r| r.tune == VARIANT_TABLE[0]));
+        assert!(records.iter().any(|r| r.tune == VARIANT_TABLE[1]));
+        assert!(records.iter().all(|r| r.gflops > 0.0));
+        // The profile feeds plan-time lookups.
+        assert!(profile.lookup(KernelKind::Beta(2, 4), 1).is_some());
+    }
+
+    #[test]
+    fn sweep_rejects_bad_config() {
+        let mut cfg = tiny_config();
+        cfg.variants = vec![VARIANT_TABLE.len()];
+        assert!(sweep(&cfg).is_err(), "out-of-range variant index");
+        let mut cfg = tiny_config();
+        cfg.matrices.clear();
+        assert!(sweep(&cfg).is_err(), "empty matrix list");
+    }
+
+    #[test]
+    fn profile_file_roundtrip() {
+        let (profile, _) = sweep(&tiny_config()).unwrap();
+        let dir = std::env::temp_dir().join("spc5_test_tune");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("profile.json");
+        profile.save(&path).unwrap();
+        let back = TuneProfile::load(&path).unwrap();
+        assert_eq!(profile, back);
+        std::fs::remove_file(path).ok();
+    }
+}

@@ -52,6 +52,14 @@ impl Json {
         }
     }
 
+    /// Convenience accessor: boolean.
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
     /// Convenience accessor: string.
     pub fn as_str(&self) -> Option<&str> {
         match self {

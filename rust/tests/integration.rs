@@ -56,6 +56,7 @@ fn records_to_selection_pipeline() {
             avg_nnz_per_block: avg,
             threads: 1,
             tile_cols: 0,
+            tune: Default::default(),
             gflops: 1.0 + 0.2 * avg,
         });
         store.push(PerfRecord {
@@ -64,6 +65,7 @@ fn records_to_selection_pipeline() {
             avg_nnz_per_block: avg,
             threads: 1,
             tile_cols: 0,
+            tune: Default::default(),
             gflops: 1.8 - 0.05 * avg,
         });
     }

@@ -30,6 +30,7 @@ fn planted_store() -> RecordStore {
                 avg_nnz_per_block: avg,
                 threads: 1,
                 tile_cols: 0,
+                tune: Default::default(),
                 gflops,
             });
         }
@@ -206,6 +207,7 @@ fn plan_cache_persists_and_serves_repeat_builds() {
             avg_nnz_per_block: 1.0 + i as f64,
             threads: 1,
             tile_cols: 0,
+            tune: Default::default(),
             gflops: 99.0,
         });
         contrarian.push(PerfRecord {
@@ -214,6 +216,7 @@ fn plan_cache_persists_and_serves_repeat_builds() {
             avg_nnz_per_block: 1.0 + i as f64,
             threads: 1,
             tile_cols: 0,
+            tune: Default::default(),
             gflops: 0.01,
         });
     }

@@ -1,0 +1,231 @@
+//! Differential tests for the machine-level kernel autotuner.
+//!
+//! The safety contract of the variant table: every tuned variant only
+//! changes *when* streams are prefetched and how the block loop is
+//! stepped — never the FMA order — so a tuned engine must be
+//! **bit-identical** to the baseline build, across precisions
+//! (f64/f32), products (spmv/spmm), and runtimes (sequential/pooled).
+//! The baseline itself is checked against the dense reference product,
+//! so "all variants agree" can never mean "all variants share a bug".
+
+use spc5::matrix::suite;
+use spc5::{Csr, KernelKind, SpmvEngine, VARIANT_TABLE};
+
+/// k for the multi-RHS checks: 8 hits the specialized SpMM kernel.
+const K: usize = 8;
+
+fn check_variants_f64(kernel: KernelKind, threads: usize) {
+    let csr = suite::mixed_band_scatter(1_024, 9);
+    let x: Vec<f64> =
+        (0..csr.cols).map(|i| ((i * 7) % 11) as f64 * 0.25 - 1.0).collect();
+    let xk: Vec<f64> = (0..csr.cols * K)
+        .map(|i| ((i * 5) % 13) as f64 * 0.5 - 3.0)
+        .collect();
+
+    let base = SpmvEngine::builder(csr.clone())
+        .kernel(kernel)
+        .panel_rows(64)
+        .threads(threads)
+        .build()
+        .unwrap();
+    let mut want_v = vec![0.0; csr.rows];
+    base.spmv_into(&x, &mut want_v);
+    // Anchor the baseline on the dense oracle before comparing
+    // variants against it.
+    let mut oracle = vec![0.0; csr.rows];
+    csr.spmv_ref(&x, &mut oracle);
+    for r in 0..csr.rows {
+        assert!(
+            (want_v[r] - oracle[r]).abs() <= 1e-9 * oracle[r].abs().max(1.0),
+            "f64 {kernel} t={threads} baseline vs oracle, row {r}"
+        );
+    }
+    let mut want_m = vec![0.0; csr.rows * K];
+    base.spmm_into(&xk, &mut want_m, K);
+
+    for &t in &VARIANT_TABLE {
+        let e = SpmvEngine::builder(csr.clone())
+            .kernel(kernel)
+            .panel_rows(64)
+            .threads(threads)
+            .tune(t)
+            .build()
+            .unwrap();
+        assert_eq!(e.plan().tune, Some(t));
+        let mut y = vec![0.0; csr.rows];
+        e.spmv_into(&x, &mut y);
+        assert_eq!(
+            y,
+            want_v,
+            "f64 spmv {kernel} t={threads} variant {} diverged",
+            t.label()
+        );
+        let mut ym = vec![0.0; csr.rows * K];
+        e.spmm_into(&xk, &mut ym, K);
+        assert_eq!(
+            ym,
+            want_m,
+            "f64 spmm {kernel} t={threads} variant {} diverged",
+            t.label()
+        );
+    }
+}
+
+fn check_variants_f32(kernel: KernelKind, threads: usize) {
+    let csr: Csr<f32> = suite::mixed_band_scatter(1_024, 9).to_precision();
+    let x: Vec<f32> =
+        (0..csr.cols).map(|i| ((i * 7) % 11) as f32 * 0.25 - 1.0).collect();
+    let xk: Vec<f32> = (0..csr.cols * K)
+        .map(|i| ((i * 5) % 13) as f32 * 0.5 - 3.0)
+        .collect();
+
+    let base = SpmvEngine::builder(csr.clone())
+        .kernel(kernel)
+        .panel_rows(64)
+        .threads(threads)
+        .build()
+        .unwrap();
+    let mut want_v = vec![0.0f32; csr.rows];
+    base.spmv_into(&x, &mut want_v);
+    let mut oracle = vec![0.0f32; csr.rows];
+    csr.spmv_ref(&x, &mut oracle);
+    for r in 0..csr.rows {
+        assert!(
+            (want_v[r] - oracle[r]).abs()
+                <= 2e-4 * oracle[r].abs().max(1.0),
+            "f32 {kernel} t={threads} baseline vs oracle, row {r}"
+        );
+    }
+    let mut want_m = vec![0.0f32; csr.rows * K];
+    base.spmm_into(&xk, &mut want_m, K);
+
+    for &t in &VARIANT_TABLE {
+        let e = SpmvEngine::builder(csr.clone())
+            .kernel(kernel)
+            .panel_rows(64)
+            .threads(threads)
+            .tune(t)
+            .build()
+            .unwrap();
+        let mut y = vec![0.0f32; csr.rows];
+        e.spmv_into(&x, &mut y);
+        assert_eq!(
+            y,
+            want_v,
+            "f32 spmv {kernel} t={threads} variant {} diverged",
+            t.label()
+        );
+        let mut ym = vec![0.0f32; csr.rows * K];
+        e.spmm_into(&xk, &mut ym, K);
+        assert_eq!(
+            ym,
+            want_m,
+            "f32 spmm {kernel} t={threads} variant {} diverged",
+            t.label()
+        );
+    }
+}
+
+#[test]
+fn f64_beta_variants_bit_identical_seq() {
+    check_variants_f64(KernelKind::Beta(2, 8), 1);
+    check_variants_f64(KernelKind::Beta(1, 8), 1);
+}
+
+#[test]
+fn f64_beta_variants_bit_identical_pooled() {
+    check_variants_f64(KernelKind::Beta(2, 8), 3);
+}
+
+#[test]
+fn f64_hybrid_and_tiled_variants_bit_identical() {
+    check_variants_f64(KernelKind::Hybrid, 1);
+    check_variants_f64(KernelKind::Tiled(192), 3);
+}
+
+#[test]
+fn f32_beta_variants_bit_identical_seq_and_pooled() {
+    check_variants_f32(KernelKind::Beta(1, 16), 1);
+    check_variants_f32(KernelKind::Beta(2, 8), 3);
+}
+
+#[test]
+fn profile_sweep_plan_spmv_round_trip() {
+    // The full offline pipeline: sweep → machine profile file →
+    // tune_profile() plan → serialized plan → from_plan engine —
+    // with the result still bit-identical to the untuned build.
+    let (profile, records) =
+        spc5::tuner::sweep(&spc5::tuner::SweepConfig::quick()).unwrap();
+    assert!(!profile.entries.is_empty());
+    assert!(records.iter().all(|r| r.gflops > 0.0));
+    let dir = std::env::temp_dir().join("spc5_tune_variants_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("profile.json");
+    profile.save(&path).unwrap();
+
+    let kernel = KernelKind::Beta(2, 8);
+    let csr = suite::poisson2d(24);
+    let plan = SpmvEngine::builder(csr.clone())
+        .kernel(kernel)
+        .tune_profile(&path)
+        .plan()
+        .unwrap();
+    // The quick sweep covers b(2,8): the plan must pin its winner.
+    assert_eq!(plan.tune, profile.lookup(kernel, 1));
+    assert!(plan.tune.is_some());
+
+    // Across the serialization boundary, without the profile file.
+    let back = spc5::SpmvPlan::from_json(&plan.to_json()).unwrap();
+    assert_eq!(back.tune, plan.tune);
+    let tuned = SpmvEngine::from_plan(csr.clone(), &back).unwrap();
+    let base = SpmvEngine::builder(csr.clone()).kernel(kernel).build().unwrap();
+    let x: Vec<f64> = (0..csr.cols).map(|i| (i % 9) as f64 - 4.0).collect();
+    let mut want = vec![0.0; csr.rows];
+    base.spmv_into(&x, &mut want);
+    let mut y = vec![0.0; csr.rows];
+    tuned.spmv_into(&x, &mut y);
+    assert_eq!(y, want, "profile-tuned engine diverged from baseline");
+    std::fs::remove_file(path).ok();
+}
+
+#[test]
+fn hybrid_profile_lookup_is_per_segment() {
+    // A profile consulted for a hybrid plan resolves each β segment's
+    // own block size; the hybrid kernel itself has no profile entry,
+    // so the plan-level tune stays unset.
+    let (profile, _) =
+        spc5::tuner::sweep(&spc5::tuner::SweepConfig::quick()).unwrap();
+    let dir = std::env::temp_dir().join("spc5_tune_variants_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("hybrid_profile.json");
+    profile.save(&path).unwrap();
+
+    let csr = suite::mixed_band_scatter(2_048, 5);
+    let plan = SpmvEngine::builder(csr.clone())
+        .kernel(KernelKind::Hybrid)
+        .panel_rows(64)
+        .tune_profile(&path)
+        .plan()
+        .unwrap();
+    assert_eq!(plan.tune, None);
+    // Segments whose β size the sweep covered carry that winner;
+    // uncovered sizes and CSR segments stay on the default.
+    for s in &plan.schedule {
+        if let Some(t) = s.tune {
+            assert!(VARIANT_TABLE.contains(&t));
+        }
+    }
+    let e = SpmvEngine::from_plan(csr.clone(), &plan).unwrap();
+    let base = SpmvEngine::builder(csr.clone())
+        .kernel(KernelKind::Hybrid)
+        .panel_rows(64)
+        .build()
+        .unwrap();
+    let x: Vec<f64> = (0..csr.cols).map(|i| (i % 7) as f64 - 3.0).collect();
+    let mut want = vec![0.0; csr.rows];
+    base.spmv_into(&x, &mut want);
+    let mut y = vec![0.0; csr.rows];
+    e.spmv_into(&x, &mut y);
+    assert_eq!(y, want, "per-segment tuned hybrid diverged");
+    std::fs::remove_file(path).ok();
+}
