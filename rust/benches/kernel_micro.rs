@@ -8,8 +8,8 @@
 
 use spc5::bench::{bench_vector, runner, to_record, Measurement, Table, RUNS};
 use spc5::coordinator::{
-    QueuePolicy, Request, ServiceError, ShardConfig, ShardedService,
-    SpmvEngine,
+    QueuePolicy, RecvError, Request, ServiceError, ShardConfig,
+    ShardedService, SpmvEngine,
 };
 use spc5::formats::{csr_to_block, BlockSize};
 use spc5::kernels::{avx512, scalar, spmm, spmv_block, KernelKind, KernelSet};
@@ -30,6 +30,7 @@ fn main() {
             "plan" => return plan_ablation(),
             "serve" => return serve_ablation(),
             "tune" => return tune_ablation(),
+            "chaos" => return chaos_ablation(),
             other => {
                 eprintln!("unknown SPC5_ABLATION='{other}', running all")
             }
@@ -50,6 +51,7 @@ fn main() {
     plan_ablation();
     serve_ablation();
     tune_ablation();
+    chaos_ablation();
 }
 
 /// GFlop/s vs block fill for every kernel.
@@ -681,6 +683,173 @@ fn serve_ablation() {
     match runner::write_bench_json(
         std::path::Path::new(&out),
         "kernel_micro/serve",
+        &all,
+    ) {
+        Ok(()) => eprintln!("  wrote {out}"),
+        Err(e) => eprintln!("warning: {e}"),
+    }
+}
+
+/// Chaos ablation: (a) the cost of the always-compiled fault-check on
+/// the fault-free hot path — no plan vs an installed plan whose rules
+/// never match (the check still runs on every site hit); (b) client-
+/// observable recovery latency when a shard dispatcher is killed
+/// mid-stream — from the receive that detects the failure to the
+/// first good response off the restarted shard (`gflops = 0` for the
+/// latency row, like BENCH_5's plan-stage rows). Persisted to
+/// `BENCH_8.json` (CI artifact next to BENCH_3..7).
+fn chaos_ablation() {
+    use spc5::faults::{Action, FaultPlan, FaultRule, SiteKind};
+    use std::sync::Arc;
+    use std::time::Instant;
+
+    let csr = suite::fem_blocked(8_000, 3, 8, 9);
+    let nnz = csr.nnz();
+    let requests = 160usize;
+    let capacity = 8usize;
+
+    // Drives bursts through `service`, tolerating injected shard
+    // failures; reports (wall, served-this-run failures, recovery
+    // seconds) where recovery spans the failure-detecting receive to
+    // the first good response after it.
+    let drive = |service: &ShardedService, requests: usize| {
+        let timer = spc5::util::Timer::start();
+        let mut failed = 0usize;
+        let mut recovery_s = 0.0f64;
+        let mut fault_at: Option<Instant> = None;
+        let mut id = 0u64;
+        while (id as usize) < requests {
+            let mut outstanding = 0usize;
+            for _ in 0..capacity {
+                if id as usize >= requests {
+                    break;
+                }
+                let x = bench_vector(csr.cols, 0xBE7C ^ id);
+                match service.submit(Request { id, x }) {
+                    Ok(()) => outstanding += 1,
+                    Err(ServiceError::ShardFailed { .. }) => failed += 1,
+                    Err(e) => panic!("submit failed: {e}"),
+                }
+                id += 1;
+            }
+            for _ in 0..outstanding {
+                let call = Instant::now();
+                match service.recv() {
+                    Ok(_) => {
+                        if let Some(t0) = fault_at.take() {
+                            recovery_s = t0.elapsed().as_secs_f64();
+                        }
+                    }
+                    Err(RecvError::Failed { .. }) => {
+                        failed += 1;
+                        fault_at.get_or_insert(call);
+                    }
+                    Err(e) => panic!("recv failed: {e}"),
+                }
+            }
+        }
+        (timer.elapsed_s(), failed, recovery_s)
+    };
+
+    let start = |faults: Option<Arc<FaultPlan>>| {
+        ShardedService::start(
+            csr.clone(),
+            ShardConfig {
+                shards: 2,
+                kernel: Some(KernelKind::Beta(1, 8)),
+                max_batch: 8,
+                queue: QueuePolicy::Block { capacity },
+                faults,
+                ..ShardConfig::default()
+            },
+        )
+        .expect("sharded service starts")
+    };
+
+    // A plan that is installed (so every site pays the full matching
+    // walk) but can never fire: no shard index matches usize::MAX.
+    let idle_plan = Arc::new(FaultPlan::new(
+        vec![FaultRule::new(SiteKind::Compute, Action::Panic)
+            .shard(usize::MAX)],
+        0xC0FF,
+    ));
+    // Kills shard 0's 11th batch: with 160 requests in bursts of 8
+    // over 2 shards there are ~20 batches per shard, so the fault
+    // lands mid-stream and the run finishes on the restarted shard.
+    let kill_plan = Arc::new(FaultPlan::new(
+        vec![FaultRule::new(SiteKind::Compute, Action::Panic)
+            .shard(0)
+            .nth(10)],
+        0xC0FF,
+    ));
+
+    let mut all: Vec<Measurement> = Vec::new();
+    let mut t = Table::new(
+        "Ablation N: chaos — fault-check overhead + recovery latency \
+         (fem-8k, b(1,8), 2 shards, 160 offered requests)",
+        &["config", "served", "failed", "restarts", "GF/s",
+          "recovery ms"],
+    );
+    let configs: [(&str, Option<Arc<FaultPlan>>); 3] = [
+        ("off", None),
+        ("armed-idle", Some(Arc::clone(&idle_plan))),
+        ("kill-shard0", Some(Arc::clone(&kill_plan))),
+    ];
+    for (name, faults) in configs {
+        let service = start(faults);
+        let (wall, failed, recovery_s) = drive(&service, requests);
+        let stats = service.stats();
+        let served = stats.served;
+        let restarts = stats.restarts;
+        service.shutdown();
+        let gflops = 2.0 * nnz as f64 * served as f64 / wall / 1e9;
+        all.push(Measurement {
+            matrix: format!("fem-8k/chaos={name}"),
+            kernel: KernelKind::Beta(1, 8),
+            threads: 2,
+            numa: false,
+            tile_cols: 0,
+            tune: Default::default(),
+            gflops,
+            seconds: wall,
+        });
+        if recovery_s > 0.0 {
+            all.push(Measurement {
+                matrix: format!("fem-8k/chaos={name}/recovery"),
+                kernel: KernelKind::Beta(1, 8),
+                threads: 2,
+                numa: false,
+                tile_cols: 0,
+                tune: Default::default(),
+                gflops: 0.0,
+                seconds: recovery_s,
+            });
+        }
+        t.row(vec![
+            name.to_string(),
+            format!("{served}"),
+            format!("{failed}"),
+            format!("{restarts}"),
+            format!("{gflops:.2}"),
+            if recovery_s > 0.0 {
+                format!("{:.3}", recovery_s * 1e3)
+            } else {
+                "-".to_string()
+            },
+        ]);
+        eprintln!(
+            "  chaos ablation: {name} served={served} failed={failed} \
+             restarts={restarts} recovery={:.3}ms",
+            recovery_s * 1e3
+        );
+    }
+    t.emit("ablation_chaos");
+
+    let out = std::env::var("SPC5_BENCH8_JSON")
+        .unwrap_or_else(|_| "BENCH_8.json".to_string());
+    match runner::write_bench_json(
+        std::path::Path::new(&out),
+        "kernel_micro/chaos",
         &all,
     ) {
         Ok(()) => eprintln!("  wrote {out}"),

@@ -1,4 +1,4 @@
-//! Sharded serving front-end: one matrix, many engines.
+//! Sharded serving front-end: one matrix, many engines, supervised.
 //!
 //! [`ShardedService`] row-partitions a matrix into nnz-balanced
 //! shards (via [`crate::parallel::balanced_row_ranges`] over the CSR
@@ -35,22 +35,51 @@
 //! fan-out loop itself is serialized by a mutex so concurrent
 //! submitters cannot interleave differently across shards — the
 //! in-order fan-in depends on every shard seeing the same request
-//! order. A shard failure mid-fan-out poisons the whole service
-//! (gate and every shard close), so later calls report `Stopped`
-//! rather than assembling responses from different requests.
+//! order.
+//!
+//! ## Supervision
+//!
+//! Each shard slot retains the shard's sub-`Csr` and its serialized
+//! [`SpmvPlan`], so a dead dispatcher (kernel panic — injected
+//! through [`crate::faults`] or real) is **restarted**, not fatal:
+//!
+//! ```text
+//!   shard dispatcher panics (FailGuard sets `failed`)
+//!        │
+//!        ▼  first submit/recv that notices (under the fan-out lock)
+//!   recover():
+//!     1. fail the in-flight generation — every fully fanned-out
+//!        request becomes a failure token; blocked receivers wake
+//!        with RecvError::Failed { shard, generation }
+//!     2. drain the live shards' copies of those requests so their
+//!        response streams start clean for the next generation
+//!     3. consume restart budget; if exhausted → poison everything
+//!        (the old fail-stop behavior, now the circuit-breaker limit)
+//!     4. rebuild the dead shard's engine via SpmvEngine::from_plan
+//!        (bit-identical reconstruction), start a fresh dispatcher at
+//!        generation g+1, resume serving
+//! ```
+//!
+//! Requests are stamped with the serving generation at submit; a
+//! failure aborts exactly the stamped generation. Later submissions
+//! are served by the restarted shard and remain bit-identical to the
+//! single-engine oracle (the restart replays the retained plan).
 
 use super::engine::SpmvEngine;
+use super::plan::SpmvPlan;
 use super::service::{
-    LatencyPercentiles, RecvTimeoutError, Request, Response, ServiceError,
-    ServiceStats, SpmvService,
+    HealthReport, LatencyPercentiles, RecvError, Request, Response,
+    ServiceError, ServiceStats, ShardHealth, SpmvService,
 };
 use super::serving::{AdmissionGate, PushError, QueuePolicy};
+use crate::faults::{self, FaultPlan};
 use crate::kernels::KernelKind;
 use crate::matrix::Csr;
 use crate::parallel::balanced_row_ranges;
 use crate::scalar::Scalar;
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard, RwLock};
 use std::time::{Duration, Instant};
 
 /// Shard-boundary alignment: the β formats group rows into 8-row
@@ -58,8 +87,26 @@ use std::time::{Duration, Instant};
 /// this boundary preserve the full matrix's block partitioning.
 pub const SHARD_ROW_ALIGN: usize = 8;
 
-/// How to cut and drive the shards.
+/// Circuit breaker for supervised restarts: at most `max_restarts`
+/// shard restarts within any sliding `window`; exceeding it poisons
+/// the whole service (the pre-supervision fail-stop behavior).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RestartBudget {
+    pub max_restarts: usize,
+    pub window: Duration,
+}
+
+impl Default for RestartBudget {
+    fn default() -> Self {
+        RestartBudget {
+            max_restarts: 8,
+            window: Duration::from_secs(60),
+        }
+    }
+}
+
+/// How to cut and drive the shards.
+#[derive(Clone, Debug)]
 pub struct ShardConfig {
     /// Requested shard count (the effective count can be lower for
     /// tiny matrices; see [`ShardedService::n_shards`]).
@@ -76,6 +123,11 @@ pub struct ShardConfig {
     pub max_batch: usize,
     /// Front-end admission policy (capacity + overflow behavior).
     pub queue: QueuePolicy,
+    /// Restart circuit breaker (see [`RestartBudget`]).
+    pub budget: RestartBudget,
+    /// Fault plan checked at this cluster's injection sites; `None`
+    /// falls back to the process-global plan ([`faults::global`]).
+    pub faults: Option<Arc<FaultPlan>>,
 }
 
 impl Default for ShardConfig {
@@ -87,6 +139,8 @@ impl Default for ShardConfig {
             kernel: None,
             max_batch: 8,
             queue: QueuePolicy::default(),
+            budget: RestartBudget::default(),
+            faults: None,
         }
     }
 }
@@ -101,6 +155,8 @@ pub struct ClusterStats {
     pub rejected: usize,
     /// Highest cluster-wide in-flight count (≤ capacity).
     pub in_flight_high_water: usize,
+    /// Supervised shard restarts performed so far.
+    pub restarts: usize,
     /// One [`ServiceStats`] per shard, in row order.
     pub shards: Vec<ServiceStats>,
 }
@@ -159,31 +215,72 @@ fn max_pct(a: LatencyPercentiles, b: LatencyPercentiles) -> LatencyPercentiles {
     }
 }
 
-/// A partially assembled fan-in: per-shard responses collected so far
-/// for the oldest outstanding request. Survives a `recv_timeout`
-/// deadline so a later receive resumes where it stopped.
-struct PartialFanIn<T: Scalar> {
+/// One supervised shard: the running service plus everything needed
+/// to rebuild it bit-identically after a dispatcher death.
+struct ShardSlot<T: Scalar> {
+    /// `Arc` so blocking work (fan-in receives, drains) can run on a
+    /// clone without holding the slot lock.
+    service: Arc<SpmvService<T>>,
+    /// The shard's rows of the served matrix — `from_plan` input.
+    sub: Csr<T>,
+    /// The shard's inspected plan: restart replays it exactly.
+    plan: SpmvPlan,
+    health: ShardHealth,
+    restarts: usize,
+    generation: u64,
+    last_fault: Option<String>,
+}
+
+/// Fan-in bookkeeping: per-shard responses collected so far for the
+/// oldest outstanding request (survives a `recv_timeout` deadline)
+/// and failure tokens awaiting delivery.
+struct FanInState<T: Scalar> {
     parts: Vec<Option<Response<T>>>,
+    /// `(shard, generation)` failure tokens: one per request aborted
+    /// by a shard failure, delivered through `recv` as
+    /// [`RecvError::Failed`].
+    failed: VecDeque<(usize, u64)>,
 }
 
 /// The sharded front-end (see module docs). `Sync`: submissions and
 /// receives may come from different threads; concurrent receivers
 /// serialize on the fan-in state.
 pub struct ShardedService<T: Scalar = f64> {
-    shards: Vec<SpmvService<T>>,
+    shards: Vec<RwLock<ShardSlot<T>>>,
     /// `row_bounds[i]..row_bounds[i+1]` = shard `i`'s rows.
     row_bounds: Vec<usize>,
     gate: AdmissionGate,
     rows: usize,
     cols: usize,
+    max_batch: usize,
+    /// Per-shard queue capacity (the gate's, see module docs).
+    shard_capacity: usize,
+    faults: Option<Arc<FaultPlan>>,
+    budget: RestartBudget,
     /// Serializes the fan-out loop: every shard queue must see
     /// requests in the same order, because the in-order fan-in pairs
-    /// each shard's next response with the oldest request. Without
-    /// this, two concurrent submitters could interleave differently
-    /// across shards and `recv` would concatenate `y` slices from
-    /// different requests.
+    /// each shard's next response with the oldest request. Also the
+    /// recovery lock — lock order is always
+    /// `fan_out` → `fan_in` → `pending`.
     fan_out: Mutex<()>,
-    partial: Mutex<PartialFanIn<T>>,
+    /// Receivers may block in a shard `recv` while holding this lock;
+    /// `submit` must never need it, or a consumer waiting for work
+    /// would wedge the producer about to provide it. That is why the
+    /// pending queue lives in its own mutex below.
+    fan_in: Mutex<FanInState<T>>,
+    /// `(id, generation)` of every fully fanned-out, unassembled
+    /// request, oldest first. Pushed under `fan_out` (submit), popped
+    /// under `fan_in` (assembly) — a thread holding both (recovery)
+    /// sees it frozen.
+    pending: Mutex<VecDeque<(u64, u64)>>,
+    /// Serving generation; bumped on every recovery pass.
+    generation: AtomicU64,
+    /// Sliding-window log of restart instants (the budget).
+    restart_times: Mutex<VecDeque<Instant>>,
+    restarts: AtomicUsize,
+    poisoned: AtomicBool,
+    /// `(shard, generation)` of the failure that poisoned the service.
+    poison_cause: Mutex<Option<(usize, u64)>>,
     assembled: AtomicUsize,
     rejected: AtomicUsize,
 }
@@ -200,13 +297,15 @@ impl<T: Scalar> ShardedService<T> {
         anyhow::ensure!(cfg.max_batch >= 1, "max_batch must be >= 1");
         anyhow::ensure!(csr.rows > 0, "cannot shard an empty matrix");
         let (rows, cols) = (csr.rows, csr.cols);
+        let faults = cfg.faults.clone().or_else(faults::global);
+        let shard_capacity = cfg.queue.capacity();
 
         let ranges =
             balanced_row_ranges(&csr.rowptr, cfg.shards, SHARD_ROW_ALIGN);
         let mut shards = Vec::with_capacity(ranges.len());
         let mut row_bounds = Vec::with_capacity(ranges.len() + 1);
         row_bounds.push(0usize);
-        for &(r0, r1) in &ranges {
+        for (i, &(r0, r1)) in ranges.iter().enumerate() {
             let sub = csr.row_slice(r0, r1);
             let mut builder = SpmvEngine::builder(sub)
                 .threads(cfg.threads_per_shard)
@@ -215,14 +314,30 @@ impl<T: Scalar> ShardedService<T> {
                 builder = builder.kernel(kernel);
             }
             let engine = builder.build()?;
+            // Retained for restart-from-plan: the sub-matrix and the
+            // inspected plan reproduce this engine bit-for-bit.
+            let sub = engine.csr().clone();
+            let plan = engine.plan().clone();
             // Block at the gate's capacity: the gate admits at most
             // `capacity` cluster-wide, so these queues never fill and
             // a fan-out submit can never block or reject.
-            shards.push(SpmvService::start_with_policy(
+            let service = SpmvService::start_shard(
                 engine,
                 cfg.max_batch,
-                QueuePolicy::Block { capacity: cfg.queue.capacity() },
-            ));
+                QueuePolicy::Block { capacity: shard_capacity },
+                i,
+                0,
+                faults.clone(),
+            );
+            shards.push(RwLock::new(ShardSlot {
+                service: Arc::new(service),
+                sub,
+                plan,
+                health: ShardHealth::Up,
+                restarts: 0,
+                generation: 0,
+                last_fault: None,
+            }));
             row_bounds.push(r1);
         }
         let n = shards.len();
@@ -232,8 +347,21 @@ impl<T: Scalar> ShardedService<T> {
             gate: AdmissionGate::new(cfg.queue),
             rows,
             cols,
+            max_batch: cfg.max_batch,
+            shard_capacity,
+            faults,
+            budget: cfg.budget,
             fan_out: Mutex::new(()),
-            partial: Mutex::new(PartialFanIn { parts: (0..n).map(|_| None).collect() }),
+            fan_in: Mutex::new(FanInState {
+                parts: (0..n).map(|_| None).collect(),
+                failed: VecDeque::new(),
+            }),
+            pending: Mutex::new(VecDeque::new()),
+            generation: AtomicU64::new(0),
+            restart_times: Mutex::new(VecDeque::new()),
+            restarts: AtomicUsize::new(0),
+            poisoned: AtomicBool::new(false),
+            poison_cause: Mutex::new(None),
             assembled: AtomicUsize::new(0),
             rejected: AtomicUsize::new(0),
         })
@@ -275,9 +403,63 @@ impl<T: Scalar> ShardedService<T> {
         self.rejected.load(Ordering::Relaxed)
     }
 
+    /// The current serving generation (bumped on every recovery).
+    pub fn generation(&self) -> u64 {
+        self.generation.load(Ordering::Acquire)
+    }
+
+    /// Supervised restarts performed so far.
+    pub fn restarts(&self) -> usize {
+        self.restarts.load(Ordering::Relaxed)
+    }
+
+    /// True once the restart budget was exhausted (or a restart
+    /// itself failed) and the service shut down for good.
+    pub fn poisoned(&self) -> bool {
+        self.poisoned.load(Ordering::Acquire)
+    }
+
+    /// Health snapshot of every shard, in row order.
+    pub fn health(&self) -> Vec<HealthReport> {
+        self.shards
+            .iter()
+            .enumerate()
+            .map(|(i, slot)| {
+                let s = slot.read().unwrap_or_else(|e| e.into_inner());
+                HealthReport {
+                    shard: i,
+                    health: s.health,
+                    generation: s.generation,
+                    restarts: s.restarts,
+                    last_fault: s.last_fault.clone(),
+                }
+            })
+            .collect()
+    }
+
+    fn slot_service(&self, i: usize) -> Arc<SpmvService<T>> {
+        Arc::clone(
+            &self.shards[i]
+                .read()
+                .unwrap_or_else(|e| e.into_inner())
+                .service,
+        )
+    }
+
+    /// The error submits/receives report once poisoned.
+    fn poison_error(&self) -> (usize, u64) {
+        self.poison_cause
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .unwrap_or((0, self.generation()))
+    }
+
     /// Admits the request at the front-end gate, then fans it out to
     /// every shard. Exactly one admission decision per request: by the
-    /// time the gate says yes, no shard queue can be full.
+    /// time the gate says yes, no shard queue can be full. A shard
+    /// failure mid-fan-out triggers recovery (see module docs); this
+    /// request is aborted with [`ServiceError::ShardFailed`] and the
+    /// restarted shard serves subsequent submissions.
     pub fn submit(&self, req: Request<T>) -> Result<(), ServiceError> {
         if req.x.len() != self.cols {
             return Err(ServiceError::ShapeMismatch {
@@ -293,7 +475,16 @@ impl<T: Scalar> ShardedService<T> {
                     capacity: self.gate.capacity(),
                 });
             }
-            Err(PushError::Closed) => return Err(ServiceError::Stopped),
+            Err(PushError::Closed) => {
+                if self.poisoned() {
+                    let (shard, generation) = self.poison_error();
+                    return Err(ServiceError::ShardFailed {
+                        shard,
+                        generation,
+                    });
+                }
+                return Err(ServiceError::Stopped);
+            }
         }
         let Request { id, mut x } = req;
         let n = self.shards.len();
@@ -303,24 +494,49 @@ impl<T: Scalar> ShardedService<T> {
         // in-flight to that capacity, so no shard submit can block.
         let serialized =
             self.fan_out.lock().unwrap_or_else(|e| e.into_inner());
-        for (i, shard) in self.shards.iter().enumerate() {
+        let generation = self.generation.load(Ordering::Acquire);
+        // Record the pending entry *before* fanning out, so a receiver
+        // can never see a shard response whose request it does not
+        // know about. Note: the pending queue, not the fan-in state —
+        // a receiver blocked in a shard `recv` holds the fan-in lock,
+        // and a submit must never wait on it.
+        {
+            let mut pending =
+                self.pending.lock().unwrap_or_else(|e| e.into_inner());
+            pending.push_back((id, generation));
+        }
+        for i in 0..n {
+            let shard = self.slot_service(i);
             // The last shard takes ownership; earlier ones clone.
             let part =
                 if i + 1 == n { std::mem::take(&mut x) } else { x.clone() };
             if let Err(e) = shard.submit(Request { id, x: part }) {
-                // A shard dispatcher died (kernel panic) mid-fan-out:
-                // earlier shards hold this request while later ones
-                // never saw it, so the per-shard response streams can
-                // never agree again. Poison the whole service — close
-                // the gate and every shard — so subsequent submits
-                // and receives report `Stopped` instead of assembling
-                // responses that belong to different requests.
-                self.gate.close();
-                for s in &self.shards {
-                    s.close();
+                if !shard.failed() && !self.poisoned() {
+                    // Clean shutdown raced this submit: withdraw the
+                    // pending entry (ours is the newest — fan-out is
+                    // serialized) and report the stop.
+                    let mut pending = self
+                        .pending
+                        .lock()
+                        .unwrap_or_else(|e| e.into_inner());
+                    let popped = pending.pop_back();
+                    debug_assert_eq!(popped, Some((id, generation)));
+                    drop(pending);
+                    self.gate.release();
+                    drop(serialized);
+                    return Err(e);
                 }
+                // A shard dispatcher died (kernel panic) mid-fan-out:
+                // shards 0..i hold this request while later ones never
+                // saw it. Recover: fail the fanned-out generation,
+                // drain the live shards' copies (including the `i`
+                // copies of this request), restart the dead shard(s).
+                let cause = self.recover(&serialized, i, true);
                 drop(serialized);
-                return Err(e);
+                return Err(ServiceError::ShardFailed {
+                    shard: cause,
+                    generation,
+                });
             }
         }
         drop(serialized);
@@ -328,8 +544,11 @@ impl<T: Scalar> ShardedService<T> {
     }
 
     /// Blocks for the next fully assembled response.
-    pub fn recv(&self) -> Option<Response<T>> {
-        self.recv_deadline(None).ok()
+    /// [`RecvError::Stopped`] means clean shutdown;
+    /// [`RecvError::Failed`] reports one aborted request of a failed
+    /// generation (or, after poisoning, the terminal failure).
+    pub fn recv(&self) -> Result<Response<T>, RecvError> {
+        self.recv_deadline(None)
     }
 
     /// Waits up to `wait` for the next fully assembled response. On
@@ -338,47 +557,112 @@ impl<T: Scalar> ShardedService<T> {
     pub fn recv_timeout(
         &self,
         wait: Duration,
-    ) -> Result<Response<T>, RecvTimeoutError> {
+    ) -> Result<Response<T>, RecvError> {
         self.recv_deadline(Instant::now().checked_add(wait))
     }
 
     /// Fan-in: one response per shard, in shard order, assembled into
     /// the full-length `y`. Per-shard dispatchers answer in submission
     /// order, so the next response of every shard belongs to the
-    /// oldest unassembled request.
+    /// oldest unassembled request. A dead shard discovered here
+    /// triggers recovery, after which the loop delivers the failure
+    /// tokens recovery queued.
     fn recv_deadline(
         &self,
         deadline: Option<Instant>,
-    ) -> Result<Response<T>, RecvTimeoutError> {
-        let mut partial =
-            self.partial.lock().unwrap_or_else(|e| e.into_inner());
-        for (i, shard) in self.shards.iter().enumerate() {
-            if partial.parts[i].is_some() {
+    ) -> Result<Response<T>, RecvError> {
+        loop {
+            let mut dead_seen = false;
+            {
+                let mut fi =
+                    self.fan_in.lock().unwrap_or_else(|e| e.into_inner());
+                // Failure tokens first: they are older than anything
+                // still assembling.
+                if let Some((shard, generation)) = fi.failed.pop_front() {
+                    return Err(RecvError::Failed { shard, generation });
+                }
+                let n = self.shards.len();
+                let mut i = 0;
+                while i < n {
+                    if fi.parts[i].is_some() {
+                        i += 1;
+                        continue;
+                    }
+                    let shard = self.slot_service(i);
+                    let got = match deadline {
+                        None => shard.recv(),
+                        Some(dl) => {
+                            // A zero budget degrades to a try-recv;
+                            // collected parts stay in `fi` when this
+                            // errs out.
+                            let left =
+                                dl.saturating_duration_since(Instant::now());
+                            shard.recv_timeout(left)
+                        }
+                    };
+                    match got {
+                        Ok(resp) => {
+                            fi.parts[i] = Some(resp);
+                            i += 1;
+                        }
+                        Err(RecvError::Timeout) => {
+                            return Err(RecvError::Timeout)
+                        }
+                        Err(RecvError::Stopped) => {
+                            if shard.failed() || self.poisoned() {
+                                dead_seen = true;
+                                break;
+                            }
+                            return Err(RecvError::Stopped);
+                        }
+                        Err(RecvError::Failed { .. }) => {
+                            dead_seen = true;
+                            break;
+                        }
+                    }
+                }
+                if !dead_seen {
+                    return Ok(self.assemble(&mut fi));
+                }
+            } // drop fan_in before recovery: lock order is fan_out → fan_in
+            if self.poisoned() {
+                // Recovery already ran and gave up; drain any queued
+                // tokens on the next loop pass, else report the cause.
+                let fi =
+                    self.fan_in.lock().unwrap_or_else(|e| e.into_inner());
+                if fi.failed.is_empty() {
+                    let (shard, generation) = self.poison_error();
+                    return Err(RecvError::Failed { shard, generation });
+                }
                 continue;
             }
-            let resp = match deadline {
-                None => shard.recv().ok_or(RecvTimeoutError::Stopped)?,
-                Some(dl) => {
-                    let left = dl.saturating_duration_since(Instant::now());
-                    // A zero budget degrades to a try-recv; collected
-                    // parts stay in `partial` when this errs out.
-                    shard.recv_timeout(left)?
-                }
-            };
-            partial.parts[i] = Some(resp);
+            let serialized =
+                self.fan_out.lock().unwrap_or_else(|e| e.into_inner());
+            self.recover(&serialized, 0, false);
+            drop(serialized);
+            // Loop: deliver a failure token, resume serving, or
+            // observe the poisoned end state.
         }
-        let parts: Vec<Response<T>> = partial
+    }
+
+    /// Concatenates one collected response per shard into the full
+    /// answer for the oldest pending request.
+    fn assemble(&self, fi: &mut FanInState<T>) -> Response<T> {
+        let parts: Vec<Response<T>> = fi
             .parts
             .iter_mut()
             .map(|p| p.take().expect("all shards answered"))
             .collect();
-        drop(partial);
-
-        let id = parts[0].id;
+        let (id, _gen) = self
+            .pending
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .pop_front()
+            .expect("response implies a pending request");
         // Release-build check, not a debug_assert: a desynchronized
         // fan-in must fail loudly rather than silently hand back a `y`
         // stitched from different requests. Unreachable with the
-        // serialized fan-out and the poison-on-partial-fan-out path.
+        // serialized fan-out and the supervised recovery path.
         assert!(
             parts.iter().all(|p| p.id == id),
             "shard fan-in desynchronized"
@@ -394,7 +678,243 @@ impl<T: Scalar> ShardedService<T> {
         }
         self.gate.release();
         self.assembled.fetch_add(1, Ordering::Relaxed);
-        Ok(Response { id, y, latency_s: queue_s + compute_s, queue_s, compute_s })
+        Response { id, y, latency_s: queue_s + compute_s, queue_s, compute_s }
+    }
+
+    /// Consumes `k` restart slots from the sliding-window budget;
+    /// false = circuit breaker trips.
+    fn consume_budget(&self, k: usize) -> bool {
+        let mut log = self
+            .restart_times
+            .lock()
+            .unwrap_or_else(|e| e.into_inner());
+        let now = Instant::now();
+        while log
+            .front()
+            .map_or(false, |t| now.duration_since(*t) > self.budget.window)
+        {
+            log.pop_front();
+        }
+        if log.len() + k > self.budget.max_restarts {
+            return false;
+        }
+        for _ in 0..k {
+            log.push_back(now);
+        }
+        true
+    }
+
+    /// Supervised recovery. Caller holds the fan-out lock (`_fo`),
+    /// which excludes submitters and other recoverers; this routine
+    /// additionally holds the fan-in lock throughout, so no receiver
+    /// can interleave with the drains.
+    ///
+    /// `current_fanned` / `current_is_pending`: when called from a
+    /// failed submit, the caller's request reached shards
+    /// `0..current_fanned` and sits as the *newest* pending entry; it
+    /// is withdrawn here (no failure token — the submit call itself
+    /// reports the error) but its fanned-out copies are drained like
+    /// any other. From the receive path both are zero/false.
+    ///
+    /// Returns the shard index blamed for the failure.
+    fn recover(
+        &self,
+        _fo: &MutexGuard<'_, ()>,
+        current_fanned: usize,
+        current_is_pending: bool,
+    ) -> usize {
+        let n = self.shards.len();
+        let mut fi = self.fan_in.lock().unwrap_or_else(|e| e.into_inner());
+        // Spurious call — another recoverer got here first (the
+        // receive path races for the fan-out lock). Touch nothing:
+        // the pending requests and collected parts are healthy state
+        // of the *new* generation now.
+        let any_dead = (0..n).any(|j| {
+            let slot =
+                self.shards[j].read().unwrap_or_else(|e| e.into_inner());
+            slot.health != ShardHealth::Poisoned && slot.service.failed()
+        });
+        if !any_dead {
+            return 0;
+        }
+        // Responses already collected count toward the drain targets.
+        let mut drained: Vec<usize> = (0..n)
+            .map(|j| usize::from(fi.parts[j].take().is_some()))
+            .collect();
+        // Frozen while fan-out and fan-in are both held: pushes need
+        // the former, assembly pops need the latter.
+        let full = self
+            .pending
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .len()
+            - usize::from(current_is_pending);
+        let mut cause: Option<usize> = None;
+
+        loop {
+            let dead: Vec<usize> = (0..n)
+                .filter(|&j| {
+                    let slot = self.shards[j]
+                        .read()
+                        .unwrap_or_else(|e| e.into_inner());
+                    slot.health != ShardHealth::Poisoned
+                        && slot.service.failed()
+                })
+                .collect();
+            if dead.is_empty() {
+                break;
+            }
+            cause.get_or_insert(dead[0]);
+            for &j in &dead {
+                let mut slot = self.shards[j]
+                    .write()
+                    .unwrap_or_else(|e| e.into_inner());
+                slot.last_fault = Some(format!(
+                    "dispatcher panic (generation {})",
+                    slot.generation
+                ));
+                slot.health = ShardHealth::Restarting;
+            }
+            // Circuit breaker: repeated failures stop being restarted.
+            if !self.consume_budget(dead.len()) {
+                let c = cause.unwrap_or(dead[0]);
+                self.poison(&mut fi, c, current_is_pending);
+                return c;
+            }
+            // Drain the live shards' responses for the aborted
+            // generation, so the next generation's fan-in starts
+            // aligned. A shard dying mid-drain joins the dead set on
+            // the next pass.
+            let mut drain_hit_failure = false;
+            'live: for j in 0..n {
+                if dead.contains(&j) {
+                    continue;
+                }
+                let target = full + usize::from(j < current_fanned);
+                while drained[j] < target {
+                    let svc = self.slot_service(j);
+                    match svc.recv() {
+                        Ok(_) => drained[j] += 1,
+                        Err(_) => {
+                            drain_hit_failure = true;
+                            continue 'live;
+                        }
+                    }
+                }
+            }
+            // Restart every dead shard at the next generation: replay
+            // the retained plan over the retained sub-matrix — a
+            // bit-identical engine reconstruction.
+            let next_gen =
+                self.generation.fetch_add(1, Ordering::AcqRel) + 1;
+            for &j in &dead {
+                let mut slot = self.shards[j]
+                    .write()
+                    .unwrap_or_else(|e| e.into_inner());
+                let engine =
+                    match SpmvEngine::from_plan(slot.sub.clone(), &slot.plan)
+                    {
+                        Ok(e) => e,
+                        Err(err) => {
+                            slot.last_fault =
+                                Some(format!("restart failed: {err}"));
+                            drop(slot);
+                            let c = cause.unwrap_or(j);
+                            self.poison(&mut fi, c, current_is_pending);
+                            return c;
+                        }
+                    };
+                let fresh = SpmvService::start_shard(
+                    engine,
+                    self.max_batch,
+                    QueuePolicy::Block { capacity: self.shard_capacity },
+                    j,
+                    next_gen,
+                    self.faults.clone(),
+                );
+                let old = std::mem::replace(
+                    &mut slot.service,
+                    Arc::new(fresh),
+                );
+                old.close();
+                slot.generation = next_gen;
+                slot.restarts += 1;
+                slot.health = ShardHealth::Up;
+                self.restarts.fetch_add(1, Ordering::Relaxed);
+                // The fresh shard has nothing to drain: mark its
+                // target met so a later pass does not block on an
+                // empty channel.
+                drained[j] = full + usize::from(j < current_fanned);
+            }
+            if !drain_hit_failure {
+                break;
+            }
+        }
+
+        // Fail the aborted generation: one token per fully fanned-out
+        // request (the submit-path caller's own request is withdrawn
+        // without a token — its error is the return value). Slots are
+        // released for every withdrawn entry.
+        let c = cause.unwrap_or(0);
+        let entries: Vec<(u64, u64)> = self
+            .pending
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .drain(..)
+            .collect();
+        let tokens = entries.len() - usize::from(current_is_pending);
+        for &(_, generation) in &entries[..tokens] {
+            fi.failed.push_back((c, generation));
+        }
+        for _ in 0..entries.len() {
+            self.gate.release();
+        }
+        c
+    }
+
+    /// Terminal failure: close the gate and every shard, mark all
+    /// shards poisoned, convert the outstanding generation into
+    /// failure tokens so nothing hangs. Fault-free shutdown never
+    /// comes here — [`shutdown_ref`](Self::shutdown_ref) stays the
+    /// clean-stop path.
+    fn poison(
+        &self,
+        fi: &mut FanInState<T>,
+        cause_shard: usize,
+        current_is_pending: bool,
+    ) {
+        self.poisoned.store(true, Ordering::Release);
+        {
+            let mut pc = self
+                .poison_cause
+                .lock()
+                .unwrap_or_else(|e| e.into_inner());
+            if pc.is_none() {
+                *pc = Some((cause_shard, self.generation()));
+            }
+        }
+        self.gate.close();
+        for slot in &self.shards {
+            let mut s = slot.write().unwrap_or_else(|e| e.into_inner());
+            s.health = ShardHealth::Poisoned;
+            s.service.close();
+        }
+        for p in fi.parts.iter_mut() {
+            *p = None;
+        }
+        let entries: Vec<(u64, u64)> = self
+            .pending
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .drain(..)
+            .collect();
+        let tokens = entries.len() - usize::from(current_is_pending);
+        for &(_, generation) in &entries[..tokens] {
+            fi.failed.push_back((cause_shard, generation));
+        }
+        for _ in 0..entries.len() {
+            self.gate.release();
+        }
     }
 
     /// Cluster-level snapshot: admission counters plus one
@@ -404,13 +924,16 @@ impl<T: Scalar> ShardedService<T> {
             served: self.served(),
             rejected: self.rejected(),
             in_flight_high_water: self.gate.high_water(),
-            shards: self.shards.iter().map(|s| s.stats()).collect(),
+            restarts: self.restarts(),
+            shards: (0..self.shards.len())
+                .map(|i| self.slot_service(i).stats())
+                .collect(),
         }
     }
 
     /// Graceful shutdown: closes the gate (blocked submitters wake
     /// with [`ServiceError::Stopped`]), drains every shard and returns
-    /// the number of requests every shard completed.
+    /// the number of fully assembled responses delivered to clients.
     pub fn shutdown(self) -> usize {
         self.shutdown_ref()
     }
@@ -419,24 +942,20 @@ impl<T: Scalar> ShardedService<T> {
     /// services shared via `Arc` (the tenant registry). Idempotent.
     pub fn shutdown_ref(&self) -> usize {
         self.gate.close();
-        let mut served = 0usize;
-        for (i, shard) in self.shards.iter().enumerate() {
-            let n = shard.shutdown_ref();
-            // Every fully fanned-out request reached every shard, so
-            // the per-shard counts agree (barring a poisoned partial
-            // fan-out, where shard 0's count is the upper bound);
-            // report shard 0's.
-            if i == 0 {
-                served = n;
-            }
+        for (i, _) in self.shards.iter().enumerate() {
+            self.slot_service(i).shutdown_ref();
         }
-        served
+        // Per-shard counts disagree with the client's view once a
+        // generation aborted (drained copies still count per shard);
+        // the assembled total is the meaningful figure.
+        self.served()
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::faults::{Action, FaultRule, SiteKind};
     use crate::matrix::suite;
 
     fn small_cfg(shards: usize) -> ShardConfig {
@@ -476,9 +995,15 @@ mod tests {
         let stats = service.stats();
         assert_eq!(stats.served, 12);
         assert_eq!(stats.rejected, 0);
+        assert_eq!(stats.restarts, 0);
         assert_eq!(stats.shards.len(), service.n_shards());
         let rollup = stats.rollup();
         assert_eq!(rollup.served, 12);
+        for h in service.health() {
+            assert_eq!(h.health, ShardHealth::Up);
+            assert_eq!(h.generation, 0);
+            assert_eq!(h.restarts, 0);
+        }
         assert_eq!(service.shutdown(), 12);
     }
 
@@ -563,7 +1088,7 @@ mod tests {
         // Nothing outstanding: the deadline elapses empty-handed.
         assert_eq!(
             service.recv_timeout(Duration::from_millis(20)).unwrap_err(),
-            RecvTimeoutError::Timeout
+            RecvError::Timeout
         );
         let x = vec![0.5; csr.cols];
         service.submit(Request { id: 5, x }).unwrap();
@@ -589,6 +1114,112 @@ mod tests {
         // The bad request never claimed a slot.
         let stats = service.stats();
         assert_eq!(stats.in_flight_high_water, 0);
+        assert_eq!(service.shutdown(), 0);
+    }
+
+    #[test]
+    fn shard_panic_restarts_and_resumes_serving() {
+        let csr = suite::fem_blocked(400, 3, 5, 3);
+        // Kill shard 1's dispatcher on its first batch, once.
+        let plan = Arc::new(FaultPlan::new(
+            vec![FaultRule::new(SiteKind::Compute, Action::Panic)
+                .shard(1)
+                .nth(0)],
+            0,
+        ));
+        let cfg = ShardConfig {
+            faults: Some(Arc::clone(&plan)),
+            ..small_cfg(3)
+        };
+        let service = ShardedService::start(csr.clone(), cfg).unwrap();
+        assert!(service.n_shards() >= 2);
+
+        let x0: Vec<f64> = (0..csr.cols).map(|i| (i % 7) as f64).collect();
+        service.submit(Request { id: 0, x: x0 }).unwrap();
+        // The faulted generation fails with the typed error.
+        assert_eq!(
+            service.recv().unwrap_err(),
+            RecvError::Failed { shard: 1, generation: 0 }
+        );
+        assert_eq!(plan.fired(), 1);
+        assert_eq!(service.restarts(), 1);
+        assert!(!service.poisoned());
+        let health = service.health();
+        assert_eq!(health[1].health, ShardHealth::Up);
+        assert_eq!(health[1].restarts, 1);
+        assert_eq!(health[1].generation, 1);
+        assert!(health[1].last_fault.as_deref().unwrap().contains("panic"));
+        assert_eq!(health[0].restarts, 0);
+
+        // Subsequent submissions are served by the restarted shard,
+        // bit-identical to the reference product.
+        for id in 1..6u64 {
+            let x: Vec<f64> = (0..csr.cols)
+                .map(|i| ((i as u64 + 5 * id) % 13) as f64 * 0.5)
+                .collect();
+            service.submit(Request { id, x }).unwrap();
+        }
+        for _ in 1..6 {
+            let resp = service.recv().expect("post-restart response");
+            let x: Vec<f64> = (0..csr.cols)
+                .map(|i| ((i as u64 + 5 * resp.id) % 13) as f64 * 0.5)
+                .collect();
+            let mut want = vec![0.0; csr.rows];
+            csr.spmv_ref(&x, &mut want);
+            assert_eq!(resp.y, want, "restarted shard must be bit-identical");
+        }
+        assert_eq!(service.shutdown(), 5);
+    }
+
+    #[test]
+    fn restart_budget_exhaustion_poisons() {
+        let csr = suite::fem_blocked(200, 3, 5, 3);
+        // Shard 0 panics on every batch: the first failure consumes
+        // the whole budget, the second trips the breaker.
+        let plan = Arc::new(FaultPlan::new(
+            vec![FaultRule::new(SiteKind::Compute, Action::Panic)
+                .shard(0)
+                .every(1)],
+            0,
+        ));
+        let cfg = ShardConfig {
+            faults: Some(plan),
+            budget: RestartBudget {
+                max_restarts: 1,
+                window: Duration::from_secs(3600),
+            },
+            ..small_cfg(2)
+        };
+        let service = ShardedService::start(csr.clone(), cfg).unwrap();
+        let x = vec![1.0; csr.cols];
+
+        service.submit(Request { id: 0, x: x.clone() }).unwrap();
+        assert_eq!(
+            service.recv().unwrap_err(),
+            RecvError::Failed { shard: 0, generation: 0 }
+        );
+        assert_eq!(service.restarts(), 1);
+
+        // The restarted shard dies again; the budget is spent, so the
+        // breaker poisons the whole service — and nothing hangs.
+        service.submit(Request { id: 1, x: x.clone() }).unwrap();
+        assert_eq!(
+            service.recv().unwrap_err(),
+            RecvError::Failed { shard: 0, generation: 1 }
+        );
+        assert!(service.poisoned());
+        for h in service.health() {
+            assert_eq!(h.health, ShardHealth::Poisoned);
+        }
+        // Subsequent submits and receives report the terminal failure.
+        assert!(matches!(
+            service.submit(Request { id: 2, x }),
+            Err(ServiceError::ShardFailed { shard: 0, .. })
+        ));
+        assert!(matches!(
+            service.recv_timeout(Duration::from_secs(5)),
+            Err(RecvError::Failed { shard: 0, .. })
+        ));
         assert_eq!(service.shutdown(), 0);
     }
 }

@@ -263,7 +263,7 @@ impl<T: Scalar> SpmvEngine<T> {
         match &self.reorder {
             None => self.spmv_permuted(x, y),
             Some(st) => {
-                let mut guard = st.scratch.lock().expect("scratch poisoned");
+                let mut guard = st.scratch.lock().unwrap_or_else(|e| e.into_inner());
                 let (xp, yp) = &mut *guard;
                 xp.clear();
                 xp.extend(st.cols.perm.iter().map(|&old| x[old as usize]));
@@ -325,7 +325,7 @@ impl<T: Scalar> SpmvEngine<T> {
         match &self.reorder {
             None => self.spmm_permuted(x, y, k),
             Some(st) => {
-                let mut guard = st.scratch.lock().expect("scratch poisoned");
+                let mut guard = st.scratch.lock().unwrap_or_else(|e| e.into_inner());
                 let (xp, yp) = &mut *guard;
                 xp.clear();
                 xp.resize(x.len(), T::ZERO);

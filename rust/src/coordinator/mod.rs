@@ -20,12 +20,16 @@ pub mod solvers;
 pub mod tenant;
 
 pub use cg::{cg_solve, CgReport};
-pub use cluster::{ClusterStats, ShardConfig, ShardedService, SHARD_ROW_ALIGN};
+pub use cluster::{
+    ClusterStats, RestartBudget, ShardConfig, ShardedService,
+    SHARD_ROW_ALIGN,
+};
 pub use engine::{SpmvEngine, SpmvEngineBuilder};
 pub use plan::{MatrixFingerprint, PlanCache, SpmvPlan};
 pub use service::{
-    LatencyPercentiles, RecvTimeoutError, Request, Response, ServiceError,
-    ServiceStats, SpmvService, LATENCY_WINDOW,
+    HealthReport, LatencyPercentiles, RecvError, RecvTimeoutError, Request,
+    Response, ServiceError, ServiceStats, ShardHealth, SpmvService,
+    LATENCY_WINDOW,
 };
 pub use serving::{
     AdmissionGate, BoundedQueue, PushError, QueuePolicy,

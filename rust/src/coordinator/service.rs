@@ -35,8 +35,9 @@
 
 use super::engine::SpmvEngine;
 use super::serving::{BoundedQueue, PushError, QueuePolicy};
+use crate::faults::{self, FaultPlan, Site};
 use crate::scalar::Scalar;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -60,6 +61,16 @@ pub struct Response<T: Scalar = f64> {
     pub compute_s: f64,
 }
 
+impl<T: Scalar> std::fmt::Debug for Response<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Response")
+            .field("id", &self.id)
+            .field("rows", &self.y.len())
+            .field("latency_s", &self.latency_s)
+            .finish()
+    }
+}
+
 /// Why a [`SpmvService::submit`] was rejected.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum ServiceError {
@@ -76,6 +87,12 @@ pub enum ServiceError {
     /// The addressed tenant is not registered (registry-level routing;
     /// never returned by a single service).
     UnknownTenant,
+    /// A shard's dispatcher died (injected or real kernel panic).
+    /// `generation` is the serving generation the failure aborted —
+    /// every request stamped with it is gone; the supervised sharded
+    /// front-end restarts the shard and serves later generations,
+    /// while a plain service stays down.
+    ShardFailed { shard: usize, generation: u64 },
 }
 
 impl std::fmt::Display for ServiceError {
@@ -95,32 +112,87 @@ impl std::fmt::Display for ServiceError {
             ServiceError::UnknownTenant => {
                 write!(f, "no tenant registered under that fingerprint")
             }
+            ServiceError::ShardFailed { shard, generation } => write!(
+                f,
+                "shard {shard} failed; generation {generation} aborted"
+            ),
         }
     }
 }
 
 impl std::error::Error for ServiceError {}
 
-/// Why a bounded-wait receive returned without a response.
+/// Why a receive returned without a response. Distinguishes clean
+/// shutdown ([`Stopped`](RecvError::Stopped)) from a dead dispatcher
+/// ([`Failed`](RecvError::Failed)) — before PR 8 both surfaced as a
+/// silent `None`/`Stopped`.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum RecvTimeoutError {
+pub enum RecvError {
     /// No response arrived within the deadline; the request (if any)
     /// is still in flight and a later receive can pick it up.
     Timeout,
-    /// The dispatcher is gone and no responses remain.
+    /// Clean shutdown: the dispatcher drained and exited normally.
     Stopped,
+    /// The dispatcher died (panic). For the sharded front-end this
+    /// aborts one serving `generation`: requests stamped with it are
+    /// gone, but the shard restarts and later submissions succeed.
+    Failed { shard: usize, generation: u64 },
 }
 
-impl std::fmt::Display for RecvTimeoutError {
+/// Pre-PR-8 name of [`RecvError`] (same enum; `Failed` is new).
+pub type RecvTimeoutError = RecvError;
+
+impl std::fmt::Display for RecvError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
-            RecvTimeoutError::Timeout => write!(f, "receive timed out"),
-            RecvTimeoutError::Stopped => write!(f, "service stopped"),
+            RecvError::Timeout => write!(f, "receive timed out"),
+            RecvError::Stopped => write!(f, "service stopped"),
+            RecvError::Failed { shard, generation } => write!(
+                f,
+                "shard {shard} failed; generation {generation} aborted"
+            ),
         }
     }
 }
 
-impl std::error::Error for RecvTimeoutError {}
+impl std::error::Error for RecvError {}
+
+/// Liveness of one serving shard (or a whole plain service).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShardHealth {
+    /// Serving normally.
+    Up,
+    /// Dead dispatcher detected; the supervisor is rebuilding the
+    /// engine from the retained plan.
+    Restarting,
+    /// Permanently down: restart budget exhausted (or a plain,
+    /// unsupervised service whose dispatcher died).
+    Poisoned,
+}
+
+impl std::fmt::Display for ShardHealth {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ShardHealth::Up => write!(f, "up"),
+            ShardHealth::Restarting => write!(f, "restarting"),
+            ShardHealth::Poisoned => write!(f, "poisoned"),
+        }
+    }
+}
+
+/// One shard's (or service's) health snapshot, surfaced through
+/// `spc5 serve` and [`super::tenant::TenantStats`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct HealthReport {
+    pub shard: usize,
+    pub health: ShardHealth,
+    /// Serving generation: bumped on every supervised restart.
+    pub generation: u64,
+    /// Restarts performed so far (0 for a plain service).
+    pub restarts: usize,
+    /// Human-readable description of the most recent fault, if any.
+    pub last_fault: Option<String>,
+}
 
 /// One p50/p95/p99 set, in seconds (0.0 before anything is served).
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
@@ -230,6 +302,15 @@ pub struct SpmvService<T: Scalar = f64> {
     served: Arc<AtomicUsize>,
     rejected: AtomicUsize,
     stats: Arc<Mutex<StatsInner>>,
+    /// Set by the dispatcher's drop guard when it dies by panic —
+    /// the bit that lets submit/recv distinguish failure from clean
+    /// shutdown and the sharded supervisor detect a dead shard.
+    failed: Arc<AtomicBool>,
+    faults: Option<Arc<FaultPlan>>,
+    /// Shard index and serving generation this instance serves under
+    /// (0/0 for a plain standalone service).
+    shard: usize,
+    generation: u64,
     cols: usize,
     max_batch: usize,
 }
@@ -246,10 +327,26 @@ impl<T: Scalar> SpmvService<T> {
     }
 
     /// [`start`](Self::start) with an explicit admission policy.
+    /// Fault injection follows the process-global plan
+    /// ([`faults::global`], i.e. `SPC5_FAULTS`).
     pub fn start_with_policy(
         engine: SpmvEngine<T>,
         max_batch: usize,
         policy: QueuePolicy,
+    ) -> SpmvService<T> {
+        Self::start_shard(engine, max_batch, policy, 0, 0, faults::global())
+    }
+
+    /// Full-control constructor used by the sharded supervisor: the
+    /// service serves shard `shard` under serving generation
+    /// `generation`, checking `faults` at its injection sites.
+    pub(crate) fn start_shard(
+        engine: SpmvEngine<T>,
+        max_batch: usize,
+        policy: QueuePolicy,
+        shard: usize,
+        generation: u64,
+        faults: Option<Arc<FaultPlan>>,
     ) -> SpmvService<T> {
         assert!(max_batch > 0);
         let (cols, rows) = (engine.csr().cols, engine.csr().rows);
@@ -262,17 +359,31 @@ impl<T: Scalar> SpmvService<T> {
         let (tx_out, rx_out) = mpsc::channel::<Response<T>>();
         let served = Arc::new(AtomicUsize::new(0));
         let stats = Arc::new(Mutex::new(StatsInner::default()));
+        let failed = Arc::new(AtomicBool::new(false));
 
         let queue_d = Arc::clone(&queue);
         let served_d = Arc::clone(&served);
         let stats_d = Arc::clone(&stats);
+        let failed_d = Arc::clone(&failed);
+        let faults_d = faults.clone();
         let dispatcher = std::thread::Builder::new()
             .name("spc5-dispatch".into())
             .spawn(move || {
+                // The guard keeps a sender clone alive until its own
+                // drop, so when the dispatcher dies by panic the
+                // failure flag is set and admission closed *before*
+                // blocked receivers observe the channel disconnect —
+                // they wake to `Failed`, never a misleading `Stopped`.
+                let guard = FailGuard {
+                    failed: failed_d,
+                    queue: Arc::clone(&queue_d),
+                    _tx: tx_out.clone(),
+                };
                 dispatch_loop(
                     engine, queue_d, tx_out, served_d, stats_d, rows,
-                    max_batch,
-                )
+                    max_batch, shard, faults_d,
+                );
+                drop(guard);
             })
             .expect("spawn dispatcher");
 
@@ -283,6 +394,10 @@ impl<T: Scalar> SpmvService<T> {
             served,
             rejected: AtomicUsize::new(0),
             stats,
+            failed,
+            faults,
+            shard,
+            generation,
             cols,
             max_batch,
         }
@@ -290,7 +405,8 @@ impl<T: Scalar> SpmvService<T> {
 
     /// Submits a request under the admission policy. Fails instead of
     /// panicking when the vector has the wrong length, the service is
-    /// full ([`ServiceError::Overloaded`]) or shut down.
+    /// full ([`ServiceError::Overloaded`]), shut down, or dead after
+    /// a dispatcher panic ([`ServiceError::ShardFailed`]).
     pub fn submit(&self, req: Request<T>) -> Result<(), ServiceError> {
         if req.x.len() != self.cols {
             return Err(ServiceError::ShapeMismatch {
@@ -298,6 +414,10 @@ impl<T: Scalar> SpmvService<T> {
                 got: req.x.len(),
             });
         }
+        faults::fire(
+            &self.faults,
+            Site::Submit { shard: self.shard, request: req.id },
+        );
         match self.queue.push((req, Instant::now())) {
             Ok(()) => Ok(()),
             Err(PushError::Full) => {
@@ -306,20 +426,39 @@ impl<T: Scalar> SpmvService<T> {
                     capacity: self.queue.capacity(),
                 })
             }
-            Err(PushError::Closed) => Err(ServiceError::Stopped),
+            Err(PushError::Closed) => {
+                if self.failed.load(Ordering::Acquire) {
+                    Err(ServiceError::ShardFailed {
+                        shard: self.shard,
+                        generation: self.generation,
+                    })
+                } else {
+                    Err(ServiceError::Stopped)
+                }
+            }
         }
     }
 
     /// Blocks for the next response and frees its admission slot.
-    pub fn recv(&self) -> Option<Response<T>> {
-        let resp = {
+    /// [`RecvError::Stopped`] means clean shutdown;
+    /// [`RecvError::Failed`] means the dispatcher died (the service
+    /// is down and accepted-but-unanswered requests are lost).
+    pub fn recv(&self) -> Result<Response<T>, RecvError> {
+        let got = {
             let rx = self.rx_out.lock().unwrap_or_else(|e| e.into_inner());
-            rx.recv().ok()
+            rx.recv()
         };
-        if resp.is_some() {
-            self.queue.release();
+        match got {
+            Ok(resp) => {
+                faults::fire(
+                    &self.faults,
+                    Site::Recv { shard: self.shard },
+                );
+                self.queue.release();
+                Ok(resp)
+            }
+            Err(mpsc::RecvError) => Err(self.disconnect_error()),
         }
-        resp
     }
 
     /// Waits up to `wait` for the next response. On success the
@@ -329,22 +468,67 @@ impl<T: Scalar> SpmvService<T> {
     pub fn recv_timeout(
         &self,
         wait: Duration,
-    ) -> Result<Response<T>, RecvTimeoutError> {
+    ) -> Result<Response<T>, RecvError> {
         let got = {
             let rx = self.rx_out.lock().unwrap_or_else(|e| e.into_inner());
             rx.recv_timeout(wait)
         };
         match got {
             Ok(resp) => {
+                faults::fire(
+                    &self.faults,
+                    Site::Recv { shard: self.shard },
+                );
                 self.queue.release();
                 Ok(resp)
             }
-            Err(mpsc::RecvTimeoutError::Timeout) => {
-                Err(RecvTimeoutError::Timeout)
-            }
+            Err(mpsc::RecvTimeoutError::Timeout) => Err(RecvError::Timeout),
             Err(mpsc::RecvTimeoutError::Disconnected) => {
-                Err(RecvTimeoutError::Stopped)
+                Err(self.disconnect_error())
             }
+        }
+    }
+
+    /// Classifies a response-channel disconnect: failure if the
+    /// dispatcher died by panic, clean stop otherwise.
+    fn disconnect_error(&self) -> RecvError {
+        if self.failed.load(Ordering::Acquire) {
+            RecvError::Failed {
+                shard: self.shard,
+                generation: self.generation,
+            }
+        } else {
+            RecvError::Stopped
+        }
+    }
+
+    /// True once the dispatcher has died by panic (a clean shutdown
+    /// never sets this). The sharded supervisor polls this to detect
+    /// dead shards.
+    pub fn failed(&self) -> bool {
+        self.failed.load(Ordering::Acquire)
+    }
+
+    /// The serving generation this instance was started under.
+    pub fn generation(&self) -> u64 {
+        self.generation
+    }
+
+    /// Health snapshot of this single service: [`ShardHealth::Up`]
+    /// until the dispatcher dies, [`ShardHealth::Poisoned`] after (a
+    /// plain service has no supervisor to restart it).
+    pub fn health(&self) -> HealthReport {
+        let health = if self.failed() {
+            ShardHealth::Poisoned
+        } else {
+            ShardHealth::Up
+        };
+        HealthReport {
+            shard: self.shard,
+            health,
+            generation: self.generation,
+            restarts: 0,
+            last_fault: None,
         }
     }
 
@@ -449,6 +633,27 @@ impl<T: Scalar> Drop for SpmvService<T> {
     }
 }
 
+/// Dispatcher-thread drop guard: converts a panic into the `failed`
+/// flag plus a closed admission queue, *before* the response channel
+/// disconnects (the guard holds its own sender clone, so receivers
+/// cannot observe the disconnect until this guard is gone).
+struct FailGuard<T: Scalar> {
+    failed: Arc<AtomicBool>,
+    queue: Arc<BoundedQueue<(Request<T>, Instant)>>,
+    _tx: mpsc::Sender<Response<T>>,
+}
+
+impl<T: Scalar> Drop for FailGuard<T> {
+    fn drop(&mut self) {
+        if std::thread::panicking() {
+            self.failed.store(true, Ordering::Release);
+            // Wake blocked submitters: they see Closed, then the
+            // failed flag, and report ShardFailed.
+            self.queue.close();
+        }
+    }
+}
+
 /// The dispatcher: blocking-pop one request, greedily drain whatever
 /// else is already queued (up to `max_batch`), serve the batch through
 /// one engine call, answer every member.
@@ -461,6 +666,8 @@ fn dispatch_loop<T: Scalar>(
     stats: Arc<Mutex<StatsInner>>,
     rows: usize,
     max_batch: usize,
+    shard: usize,
+    faults: Option<Arc<FaultPlan>>,
 ) {
     // Reused across batches: the packed X/Y panels.
     let mut xb: Vec<T> = Vec::new();
@@ -479,6 +686,14 @@ fn dispatch_loop<T: Scalar>(
                 None => break,
             }
         }
+
+        // The `compute` injection site: a panic here kills this
+        // dispatcher exactly where a real kernel panic would, with
+        // the batch popped but unanswered.
+        faults::fire(
+            &faults,
+            Site::Compute { shard, request: batch[0].0.id },
+        );
 
         // Queue time ends for the whole batch at this instant; what
         // follows is compute.
@@ -848,6 +1063,67 @@ mod tests {
         service.submit(Request { id: 2, x: vec![1.0; cols] }).unwrap();
         service.recv().unwrap();
         assert_eq!(service.shutdown(), 2);
+    }
+
+    #[test]
+    fn dispatcher_panic_reports_failed_not_stopped() {
+        use crate::faults::{Action, FaultPlan, FaultRule, SiteKind};
+        let csr = suite::poisson2d(8);
+        let engine = SpmvEngine::builder(csr.clone()).build().unwrap();
+        let plan = Arc::new(FaultPlan::new(
+            vec![FaultRule::new(SiteKind::Compute, Action::Panic).nth(0)],
+            0,
+        ));
+        let service = SpmvService::start_shard(
+            engine,
+            2,
+            QueuePolicy::default(),
+            3,
+            7,
+            Some(plan),
+        );
+        // A client already blocked in recv when the dispatcher dies
+        // must wake with the typed failure, not a silent stop.
+        std::thread::scope(|s| {
+            let blocked = s.spawn(|| service.recv());
+            std::thread::sleep(Duration::from_millis(20));
+            let _ = service
+                .submit(Request { id: 0, x: vec![1.0; csr.cols] });
+            assert_eq!(
+                blocked.join().unwrap().unwrap_err(),
+                RecvError::Failed { shard: 3, generation: 7 }
+            );
+        });
+        assert!(service.failed());
+        assert_eq!(service.health().health, ShardHealth::Poisoned);
+        // Submissions and bounded receives after the death are typed
+        // failures too.
+        assert_eq!(
+            service.submit(Request { id: 1, x: vec![1.0; csr.cols] }),
+            Err(ServiceError::ShardFailed { shard: 3, generation: 7 })
+        );
+        assert_eq!(
+            service.recv_timeout(Duration::from_secs(5)).unwrap_err(),
+            RecvError::Failed { shard: 3, generation: 7 }
+        );
+    }
+
+    #[test]
+    fn clean_shutdown_reports_stopped_to_blocked_receivers() {
+        let csr = suite::poisson2d(6);
+        let engine = SpmvEngine::builder(csr).build().unwrap();
+        let service = SpmvService::start(engine, 2);
+        std::thread::scope(|s| {
+            let blocked = s.spawn(|| service.recv());
+            std::thread::sleep(Duration::from_millis(20));
+            service.shutdown_ref();
+            assert_eq!(
+                blocked.join().unwrap().unwrap_err(),
+                RecvError::Stopped
+            );
+        });
+        assert!(!service.failed());
+        assert_eq!(service.health().health, ShardHealth::Up);
     }
 
     #[test]

@@ -31,8 +31,8 @@ use super::cluster::{ShardConfig, ShardedService};
 use super::engine::SpmvEngine;
 use super::plan::{MatrixFingerprint, PlanCache, SpmvPlan};
 use super::service::{
-    RecvTimeoutError, Request, Response, ServiceError, ServiceStats,
-    SpmvService,
+    HealthReport, RecvError, Request, Response, ServiceError,
+    ServiceStats, ShardHealth, SpmvService,
 };
 use super::serving::QueuePolicy;
 use crate::kernels::KernelKind;
@@ -89,7 +89,7 @@ impl<T: Scalar> Serving<T> {
         }
     }
 
-    fn recv(&self) -> Option<Response<T>> {
+    fn recv(&self) -> Result<Response<T>, RecvError> {
         match self {
             Serving::Single(s) => s.recv(),
             Serving::Sharded(s) => s.recv(),
@@ -99,10 +99,18 @@ impl<T: Scalar> Serving<T> {
     fn recv_timeout(
         &self,
         wait: Duration,
-    ) -> Result<Response<T>, RecvTimeoutError> {
+    ) -> Result<Response<T>, RecvError> {
         match self {
             Serving::Single(s) => s.recv_timeout(wait),
             Serving::Sharded(s) => s.recv_timeout(wait),
+        }
+    }
+
+    /// Per-shard health (one entry for a single service).
+    fn health(&self) -> Vec<HealthReport> {
+        match self {
+            Serving::Single(s) => vec![s.health()],
+            Serving::Sharded(s) => s.health(),
         }
     }
 
@@ -148,6 +156,8 @@ pub struct TenantStats {
     /// Registration wall time in seconds.
     pub cold_start_s: f64,
     pub stats: ServiceStats,
+    /// Per-shard health (one entry for single-service tenants).
+    pub health: Vec<HealthReport>,
 }
 
 /// Registry-wide rollup: every tenant plus summed counters.
@@ -241,6 +251,7 @@ impl<T: Scalar> TenantRegistry<T> {
                 kernel: cfg.kernel,
                 max_batch: cfg.max_batch,
                 queue: cfg.queue,
+                ..ShardConfig::default()
             };
             (Serving::Sharded(ShardedService::start(csr, shard_cfg)?), false)
         } else {
@@ -377,22 +388,70 @@ impl<T: Scalar> TenantRegistry<T> {
         serving.submit(req)
     }
 
-    /// Blocks for the tenant's next response. `None` when the tenant
-    /// is unknown or its service stopped (a blocked receiver wakes
-    /// with `None` when its tenant is deregistered).
-    pub fn recv(&self, fp: &MatrixFingerprint) -> Option<Response<T>> {
-        self.serving(fp)?.recv()
+    /// Blocks for the tenant's next response.
+    /// [`RecvError::Stopped`] when the tenant is unknown or its
+    /// service stopped cleanly (a blocked receiver wakes with it when
+    /// its tenant is deregistered); [`RecvError::Failed`] when a
+    /// shard failure aborted a request.
+    pub fn recv(
+        &self,
+        fp: &MatrixFingerprint,
+    ) -> Result<Response<T>, RecvError> {
+        let serving = self.serving(fp).ok_or(RecvError::Stopped)?;
+        serving.recv()
     }
 
     /// Waits up to `wait` for the tenant's next response. An unknown
-    /// fingerprint reports [`RecvTimeoutError::Stopped`].
+    /// fingerprint reports [`RecvError::Stopped`].
     pub fn recv_timeout(
         &self,
         fp: &MatrixFingerprint,
         wait: Duration,
-    ) -> Result<Response<T>, RecvTimeoutError> {
-        let serving = self.serving(fp).ok_or(RecvTimeoutError::Stopped)?;
+    ) -> Result<Response<T>, RecvError> {
+        let serving = self.serving(fp).ok_or(RecvError::Stopped)?;
         serving.recv_timeout(wait)
+    }
+
+    /// [`submit`](Self::submit) with bounded retries: transient
+    /// refusals — [`ServiceError::Overloaded`] and
+    /// [`ServiceError::ShardFailed`] (a supervised restart in
+    /// progress) — are retried up to `retries` times with linear
+    /// backoff (`attempt × backoff` before attempt `attempt`); other
+    /// errors fail immediately. The tenant handle is re-resolved per
+    /// attempt, so a tenant re-registered mid-retry is picked up.
+    pub fn submit_with_retry(
+        &self,
+        fp: &MatrixFingerprint,
+        req: Request<T>,
+        retries: usize,
+        backoff: Duration,
+    ) -> Result<(), ServiceError> {
+        let Request { id, x } = req;
+        let mut last = ServiceError::UnknownTenant;
+        for attempt in 0..=retries {
+            if attempt > 0 {
+                std::thread::sleep(backoff.saturating_mul(attempt as u32));
+            }
+            let serving =
+                self.serving(fp).ok_or(ServiceError::UnknownTenant)?;
+            match serving.submit(Request { id, x: x.clone() }) {
+                Ok(()) => return Ok(()),
+                Err(
+                    e @ (ServiceError::Overloaded { .. }
+                    | ServiceError::ShardFailed { .. }),
+                ) => last = e,
+                Err(e) => return Err(e),
+            }
+        }
+        Err(last)
+    }
+
+    /// Per-shard health of one tenant, or `None` when unknown.
+    pub fn tenant_health(
+        &self,
+        fp: &MatrixFingerprint,
+    ) -> Option<Vec<HealthReport>> {
+        Some(self.serving(fp)?.health())
     }
 
     /// One tenant's snapshot, or `None` when unknown.
@@ -408,6 +467,7 @@ impl<T: Scalar> TenantRegistry<T> {
             from_cache: t.from_cache,
             cold_start_s: t.cold_start_s,
             stats: t.serving.stats(),
+            health: t.serving.health(),
         })
     }
 
@@ -422,6 +482,7 @@ impl<T: Scalar> TenantRegistry<T> {
                 from_cache: t.from_cache,
                 cold_start_s: t.cold_start_s,
                 stats: t.serving.stats(),
+                health: t.serving.health(),
             })
             .collect();
         per.sort_by(|a, b| a.name.cmp(&b.name));
@@ -526,10 +587,12 @@ mod tests {
             registry.submit(&ghost, Request { id: 0, x: vec![1.0; 16] }),
             Err(ServiceError::UnknownTenant)
         );
-        assert!(registry.recv(&ghost).is_none());
+        assert_eq!(registry.recv(&ghost).unwrap_err(), RecvError::Stopped);
         assert_eq!(
-            registry.recv_timeout(&ghost, Duration::from_millis(1)),
-            Err(RecvTimeoutError::Stopped)
+            registry
+                .recv_timeout(&ghost, Duration::from_millis(1))
+                .unwrap_err(),
+            RecvError::Stopped
         );
         assert!(registry.tenant_stats(&ghost).is_none());
         assert!(!registry.contains(&ghost));
@@ -595,7 +658,10 @@ mod tests {
             assert_eq!(registry.len(), 2);
             assert_eq!(registry.deregister(&fa), Some(0));
             // The stalled receiver observed the shutdown, not a hang.
-            assert_eq!(blocked.join().unwrap().map(|r| r.id), None);
+            assert_eq!(
+                blocked.join().unwrap().unwrap_err(),
+                RecvError::Stopped
+            );
             assert_eq!(registry.deregister(&fb), Some(0));
         });
     }
@@ -647,5 +713,89 @@ mod tests {
         assert!(registry
             .register_plan("mismatch", other, &plan, TenantConfig::default())
             .is_err());
+    }
+
+    #[test]
+    fn submit_with_retry_rides_through_overload() {
+        let registry: TenantRegistry = TenantRegistry::new();
+        let csr = suite::poisson2d(8);
+        let cfg = TenantConfig {
+            queue: QueuePolicy::Reject { capacity: 1 },
+            ..TenantConfig::default()
+        };
+        let fp = registry.register("tight", csr.clone(), cfg).unwrap();
+        let x = vec![1.0; csr.cols];
+        // Fill the single admission slot; a plain submit now sheds.
+        registry.submit(&fp, Request { id: 1, x: x.clone() }).unwrap();
+        assert!(matches!(
+            registry.submit(&fp, Request { id: 2, x: x.clone() }),
+            Err(ServiceError::Overloaded { .. })
+        ));
+        // Bounded retries give up with the transient error intact.
+        assert!(matches!(
+            registry.submit_with_retry(
+                &fp,
+                Request { id: 2, x: x.clone() },
+                2,
+                Duration::from_millis(1),
+            ),
+            Err(ServiceError::Overloaded { .. })
+        ));
+        std::thread::scope(|s| {
+            let retried = s.spawn(|| {
+                registry.submit_with_retry(
+                    &fp,
+                    Request { id: 2, x: x.clone() },
+                    200,
+                    Duration::from_millis(2),
+                )
+            });
+            // Free the slot while the retry loop is backing off.
+            std::thread::sleep(Duration::from_millis(20));
+            assert_eq!(registry.recv(&fp).unwrap().id, 1);
+            retried.join().unwrap().unwrap();
+        });
+        assert_eq!(registry.recv(&fp).unwrap().id, 2);
+        // Non-transient errors fail immediately.
+        let ghost = MatrixFingerprint::of(&suite::poisson2d(4));
+        assert_eq!(
+            registry.submit_with_retry(
+                &ghost,
+                Request { id: 0, x: vec![1.0; 16] },
+                3,
+                Duration::from_millis(1),
+            ),
+            Err(ServiceError::UnknownTenant)
+        );
+        registry.deregister(&fp);
+    }
+
+    #[test]
+    fn tenant_health_reports_per_shard() {
+        let registry: TenantRegistry = TenantRegistry::new();
+        let single = registry
+            .register("single", suite::poisson2d(8), TenantConfig::default())
+            .unwrap();
+        let sharded = registry
+            .register(
+                "sharded",
+                suite::fem_blocked(300, 3, 5, 3),
+                TenantConfig { shards: 2, ..TenantConfig::default() },
+            )
+            .unwrap();
+        let h1 = registry.tenant_health(&single).unwrap();
+        assert_eq!(h1.len(), 1);
+        assert_eq!(h1[0].health, ShardHealth::Up);
+        assert_eq!(h1[0].restarts, 0);
+        let h2 = registry.tenant_health(&sharded).unwrap();
+        assert_eq!(h2.len(), 2);
+        assert!(h2.iter().all(|h| h.health == ShardHealth::Up));
+        // The same reports ride along in the stats snapshot.
+        let snap = registry.tenant_stats(&sharded).unwrap();
+        assert_eq!(snap.health, h2);
+        let ghost = MatrixFingerprint::of(&suite::poisson2d(4));
+        assert!(registry.tenant_health(&ghost).is_none());
+        registry.deregister(&single);
+        registry.deregister(&sharded);
     }
 }

@@ -1,0 +1,705 @@
+//! Deterministic fault injection for the serving tier.
+//!
+//! A [`FaultPlan`] is a seeded schedule of faults to fire at **named
+//! injection sites** threaded through the serving stack. The plan is
+//! immutable after construction; per-rule hit counters make firing
+//! decisions deterministic for a given (plan, call sequence), so a
+//! chaos test that replays the same request schedule sees the same
+//! faults — the substrate the supervision layer is tested against.
+//!
+//! ## Sites
+//!
+//! | site      | where the check runs                                  |
+//! |-----------|-------------------------------------------------------|
+//! | `compute` | shard dispatcher, after a batch is popped, before the |
+//! |           | engine call — a `panic` here kills the dispatcher     |
+//! |           | thread exactly like a kernel panic would              |
+//! | `submit`  | [`super::coordinator::SpmvService::submit`], before   |
+//! |           | the queue push — a `delay` here models a queue stall  |
+//! | `recv`    | the service receive path, after a response arrives —  |
+//! |           | a `delay` here models a slow client-side link         |
+//! | `worker`  | inside [`crate::parallel::WorkerPool`] task execution |
+//! |           | (global plan only) — a `panic` here exercises the     |
+//! |           | pool's catch/propagate/stay-usable contract           |
+//!
+//! Every site check is always compiled (no feature gate); with no
+//! plan installed it is one `Option` test — cheap enough for the
+//! serving hot path (the `SPC5_ABLATION=chaos` bench section measures
+//! exactly this overhead).
+//!
+//! ## `SPC5_FAULTS` grammar
+//!
+//! Clauses separated by `;`, each `ACTION@SITE[:key=value,...]`:
+//!
+//! ```text
+//! panic@compute:shard=1,nth=3
+//! delay@recv:ms=5,every=2
+//! panic@compute:shard=0,every=1,times=4;delay@submit:ms=1,prob=0.25
+//! ```
+//!
+//! - `ACTION` — `panic` or `delay` (`delay` takes `ms=N`, default 1).
+//! - `SITE` — `compute`, `submit`, `recv`, `worker`.
+//! - `shard=N` — only fire on shard `N` (for `worker`: worker index).
+//! - `request=N` — only fire on request id `N` (`compute`/`submit`).
+//! - `nth=N` — fire on the N-th matching hit only (0-based).
+//! - `every=N` — fire on every N-th matching hit (the N-th, 2N-th, …).
+//! - `prob=F` — fire with probability `F`, decided by a seeded hash
+//!   of (plan seed, rule index, hit index): deterministic and
+//!   lock-free.
+//! - `times=N` — cap total fires of this rule at `N`.
+//!
+//! Without `nth`/`every`/`prob`, a rule fires on every matching hit
+//! (subject to `times`). The plan seed comes from `SPC5_FAULTS_SEED`
+//! (default `0x5eed`).
+//!
+//! ## Installation
+//!
+//! The serving constructors take an explicit `Option<Arc<FaultPlan>>`
+//! (test-driven chaos) and fall back to the process-global plan
+//! parsed once from the environment ([`global`]). Tests that need a
+//! global plan (the `worker` site) install one through the
+//! [`InstallGuard`] RAII handle so concurrent tests do not fight over
+//! process state.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock, RwLock};
+use std::time::Duration;
+
+/// A named injection site, with the identity of the call that hit it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Site {
+    /// Shard dispatcher about to run the kernel for a batch whose
+    /// first member is `request`.
+    Compute { shard: usize, request: u64 },
+    /// Service submit path, before the queue push.
+    Submit { shard: usize, request: u64 },
+    /// Service receive path, response in hand.
+    Recv { shard: usize },
+    /// Worker-pool task body on worker `worker`.
+    Worker { worker: usize },
+}
+
+impl Site {
+    fn kind(&self) -> SiteKind {
+        match self {
+            Site::Compute { .. } => SiteKind::Compute,
+            Site::Submit { .. } => SiteKind::Submit,
+            Site::Recv { .. } => SiteKind::Recv,
+            Site::Worker { .. } => SiteKind::Worker,
+        }
+    }
+
+    /// The shard filter key: shard index for service sites, worker
+    /// index for the pool site.
+    fn shard_key(&self) -> usize {
+        match *self {
+            Site::Compute { shard, .. }
+            | Site::Submit { shard, .. }
+            | Site::Recv { shard } => shard,
+            Site::Worker { worker } => worker,
+        }
+    }
+
+    fn request_key(&self) -> Option<u64> {
+        match *self {
+            Site::Compute { request, .. } | Site::Submit { request, .. } => {
+                Some(request)
+            }
+            Site::Recv { .. } | Site::Worker { .. } => None,
+        }
+    }
+}
+
+/// Site class, as named in the `SPC5_FAULTS` grammar.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SiteKind {
+    Compute,
+    Submit,
+    Recv,
+    Worker,
+}
+
+impl SiteKind {
+    fn parse(s: &str) -> Result<SiteKind, String> {
+        match s {
+            "compute" => Ok(SiteKind::Compute),
+            "submit" => Ok(SiteKind::Submit),
+            "recv" => Ok(SiteKind::Recv),
+            "worker" => Ok(SiteKind::Worker),
+            other => Err(format!(
+                "unknown fault site {other:?} (compute|submit|recv|worker)"
+            )),
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        match self {
+            SiteKind::Compute => "compute",
+            SiteKind::Submit => "submit",
+            SiteKind::Recv => "recv",
+            SiteKind::Worker => "worker",
+        }
+    }
+}
+
+/// What a firing rule does at its site.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Action {
+    /// `panic!` — at the `compute` site this kills the dispatcher
+    /// thread, at `worker` it exercises the pool's panic contract.
+    Panic,
+    /// Sleep for the given duration (queue stall / recv delay).
+    Delay(Duration),
+}
+
+/// One clause of a plan: a site matcher plus a trigger and an action.
+#[derive(Debug)]
+pub struct FaultRule {
+    pub site: SiteKind,
+    /// Only fire on this shard (worker index for `worker` sites).
+    pub shard: Option<usize>,
+    /// Only fire on this request id (`compute`/`submit` sites).
+    pub request: Option<u64>,
+    /// Fire on exactly the N-th matching hit (0-based).
+    pub nth: Option<u64>,
+    /// Fire on every N-th matching hit.
+    pub every: Option<u64>,
+    /// Fire with this probability per matching hit (seeded hash).
+    pub prob: Option<f64>,
+    /// Cap on total fires.
+    pub times: Option<u64>,
+    pub action: Action,
+    /// Matching hits seen so far (drives `nth`/`every`/`prob`).
+    hits: AtomicU64,
+    /// Fires so far (drives `times`).
+    fires: AtomicU64,
+}
+
+impl FaultRule {
+    /// A rule that fires `action` at every matching hit of `site`.
+    pub fn new(site: SiteKind, action: Action) -> FaultRule {
+        FaultRule {
+            site,
+            shard: None,
+            request: None,
+            nth: None,
+            every: None,
+            prob: None,
+            times: None,
+            action,
+            hits: AtomicU64::new(0),
+            fires: AtomicU64::new(0),
+        }
+    }
+
+    pub fn shard(mut self, shard: usize) -> FaultRule {
+        self.shard = Some(shard);
+        self
+    }
+
+    pub fn request(mut self, id: u64) -> FaultRule {
+        self.request = Some(id);
+        self
+    }
+
+    pub fn nth(mut self, n: u64) -> FaultRule {
+        self.nth = Some(n);
+        self
+    }
+
+    pub fn every(mut self, k: u64) -> FaultRule {
+        assert!(k >= 1, "every=0 never fires");
+        self.every = Some(k);
+        self
+    }
+
+    pub fn prob(mut self, p: f64) -> FaultRule {
+        assert!((0.0..=1.0).contains(&p), "prob must be in [0, 1]");
+        self.prob = Some(p);
+        self
+    }
+
+    pub fn times(mut self, n: u64) -> FaultRule {
+        self.times = Some(n);
+        self
+    }
+
+    fn matches(&self, site: &Site) -> bool {
+        self.site == site.kind()
+            && self.shard.map_or(true, |s| s == site.shard_key())
+            && self
+                .request
+                .map_or(true, |r| Some(r) == site.request_key())
+    }
+
+    /// Consumes one matching hit and decides whether to fire.
+    fn should_fire(&self, seed: u64, rule_idx: usize) -> bool {
+        let hit = self.hits.fetch_add(1, Ordering::Relaxed);
+        let triggered = if let Some(n) = self.nth {
+            hit == n
+        } else if let Some(k) = self.every {
+            (hit + 1) % k == 0
+        } else if let Some(p) = self.prob {
+            // Stateless per-hit coin: a splitmix-style hash of
+            // (seed, rule, hit) mapped to [0, 1). Deterministic under
+            // concurrency (no shared RNG stream to race on).
+            hash_unit(seed ^ mix(rule_idx as u64) ^ mix(hit)) < p
+        } else {
+            true
+        };
+        if !triggered {
+            return false;
+        }
+        if let Some(cap) = self.times {
+            // Reserve a fire slot; back out if over the cap.
+            let prev = self.fires.fetch_add(1, Ordering::Relaxed);
+            if prev >= cap {
+                return false;
+            }
+            true
+        } else {
+            self.fires.fetch_add(1, Ordering::Relaxed);
+            true
+        }
+    }
+}
+
+fn mix(mut z: u64) -> u64 {
+    // splitmix64 finalizer: full-avalanche 64-bit mix.
+    z = z.wrapping_add(0x9e3779b97f4a7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d049bb133111eb);
+    z ^ (z >> 31)
+}
+
+fn hash_unit(z: u64) -> f64 {
+    (mix(z) >> 11) as f64 / (1u64 << 53) as f64
+}
+
+/// A seeded, immutable schedule of fault rules (see module docs).
+#[derive(Debug)]
+pub struct FaultPlan {
+    rules: Vec<FaultRule>,
+    seed: u64,
+    total_fires: AtomicU64,
+}
+
+/// Default seed when `SPC5_FAULTS_SEED` is absent.
+pub const DEFAULT_SEED: u64 = 0x5eed;
+
+impl FaultPlan {
+    /// A plan from explicit rules (test construction).
+    pub fn new(rules: Vec<FaultRule>, seed: u64) -> FaultPlan {
+        FaultPlan { rules, seed, total_fires: AtomicU64::new(0) }
+    }
+
+    /// Parses the `SPC5_FAULTS` grammar (see module docs).
+    pub fn parse(spec: &str, seed: u64) -> Result<FaultPlan, String> {
+        let mut rules = Vec::new();
+        for clause in spec.split(';') {
+            let clause = clause.trim();
+            if clause.is_empty() {
+                continue;
+            }
+            let (action_s, rest) = clause
+                .split_once('@')
+                .ok_or_else(|| format!("clause {clause:?}: missing '@'"))?;
+            let (site_s, kv) = match rest.split_once(':') {
+                Some((s, kv)) => (s, kv),
+                None => (rest, ""),
+            };
+            let site = SiteKind::parse(site_s.trim())?;
+            let mut rule = match action_s.trim() {
+                "panic" => FaultRule::new(site, Action::Panic),
+                "delay" => FaultRule::new(
+                    site,
+                    Action::Delay(Duration::from_millis(1)),
+                ),
+                other => {
+                    return Err(format!(
+                        "unknown fault action {other:?} (panic|delay)"
+                    ))
+                }
+            };
+            for pair in kv.split(',') {
+                let pair = pair.trim();
+                if pair.is_empty() {
+                    continue;
+                }
+                let (k, v) = pair.split_once('=').ok_or_else(|| {
+                    format!("clause {clause:?}: expected key=value, got {pair:?}")
+                })?;
+                let num = || -> Result<u64, String> {
+                    v.parse::<u64>().map_err(|_| {
+                        format!("clause {clause:?}: {k}={v:?} is not an integer")
+                    })
+                };
+                match k {
+                    "shard" => rule.shard = Some(num()? as usize),
+                    "request" => rule.request = Some(num()?),
+                    "nth" => rule.nth = Some(num()?),
+                    "every" => {
+                        let k = num()?;
+                        if k == 0 {
+                            return Err(format!(
+                                "clause {clause:?}: every=0 never fires"
+                            ));
+                        }
+                        rule.every = Some(k);
+                    }
+                    "prob" => {
+                        let p = v.parse::<f64>().map_err(|_| {
+                            format!("clause {clause:?}: prob={v:?} is not a number")
+                        })?;
+                        if !(0.0..=1.0).contains(&p) {
+                            return Err(format!(
+                                "clause {clause:?}: prob must be in [0, 1]"
+                            ));
+                        }
+                        rule.prob = Some(p);
+                    }
+                    "times" => rule.times = Some(num()?),
+                    "ms" => {
+                        if !matches!(rule.action, Action::Delay(_)) {
+                            return Err(format!(
+                                "clause {clause:?}: ms= only applies to delay"
+                            ));
+                        }
+                        rule.action =
+                            Action::Delay(Duration::from_millis(num()?));
+                    }
+                    other => {
+                        return Err(format!(
+                            "clause {clause:?}: unknown key {other:?}"
+                        ))
+                    }
+                }
+            }
+            rules.push(rule);
+        }
+        if rules.is_empty() {
+            return Err("empty fault spec".into());
+        }
+        Ok(FaultPlan::new(rules, seed))
+    }
+
+    /// The plan from `SPC5_FAULTS` / `SPC5_FAULTS_SEED`, if set.
+    /// Malformed specs panic: a chaos run with a typo'd schedule must
+    /// not silently test nothing.
+    pub fn from_env() -> Option<FaultPlan> {
+        let spec = std::env::var("SPC5_FAULTS").ok()?;
+        if spec.trim().is_empty() {
+            return None;
+        }
+        let seed = std::env::var("SPC5_FAULTS_SEED")
+            .ok()
+            .and_then(|s| s.parse::<u64>().ok())
+            .unwrap_or(DEFAULT_SEED);
+        Some(
+            FaultPlan::parse(&spec, seed)
+                .unwrap_or_else(|e| panic!("SPC5_FAULTS: {e}")),
+        )
+    }
+
+    /// Total fires across all rules so far.
+    pub fn fired(&self) -> u64 {
+        self.total_fires.load(Ordering::Relaxed)
+    }
+
+    /// The plan's seed (drives `prob` decisions).
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// Checks `site` against every rule in order; the first rule that
+    /// fires acts (a `panic` action unwinds from here).
+    pub fn fire(&self, site: Site) {
+        for (idx, rule) in self.rules.iter().enumerate() {
+            if !rule.matches(&site) {
+                continue;
+            }
+            if !rule.should_fire(self.seed, idx) {
+                continue;
+            }
+            self.total_fires.fetch_add(1, Ordering::Relaxed);
+            match rule.action {
+                Action::Panic => panic!(
+                    "spc5 injected fault: panic@{} ({site:?}, rule {idx})",
+                    rule.site.name()
+                ),
+                Action::Delay(d) => std::thread::sleep(d),
+            }
+            return;
+        }
+    }
+}
+
+/// Checks a site against an optional plan — the form every injection
+/// site uses. `None` costs one branch.
+#[inline]
+pub fn fire(plan: &Option<Arc<FaultPlan>>, site: Site) {
+    if let Some(p) = plan {
+        p.fire(site);
+    }
+}
+
+// --- Process-global plan ------------------------------------------------
+
+/// Fast-path flag: true only while a global plan is installed.
+static GLOBAL_ACTIVE: AtomicBool = AtomicBool::new(false);
+static GLOBAL_PLAN: RwLock<Option<Arc<FaultPlan>>> = RwLock::new(None);
+/// Serializes [`install_global`] holders across tests.
+static INSTALL_LOCK: Mutex<()> = Mutex::new(());
+static ENV_INIT: OnceLock<()> = OnceLock::new();
+
+fn ensure_env_plan() {
+    ENV_INIT.get_or_init(|| {
+        if let Some(plan) = FaultPlan::from_env() {
+            *GLOBAL_PLAN.write().unwrap_or_else(|e| e.into_inner()) =
+                Some(Arc::new(plan));
+            GLOBAL_ACTIVE.store(true, Ordering::Release);
+        }
+    });
+}
+
+/// The process-global plan: `SPC5_FAULTS` parsed once, or whatever an
+/// [`InstallGuard`] has installed. `None` in the common (fault-free)
+/// case — the serving constructors call this as their fallback.
+pub fn global() -> Option<Arc<FaultPlan>> {
+    ensure_env_plan();
+    if !GLOBAL_ACTIVE.load(Ordering::Acquire) {
+        return None;
+    }
+    GLOBAL_PLAN.read().unwrap_or_else(|e| e.into_inner()).clone()
+}
+
+/// One-branch check-and-fire against the global plan — the form the
+/// worker pool uses (it has no per-service plan handle).
+#[inline]
+pub fn fire_global(site: Site) {
+    if !GLOBAL_ACTIVE.load(Ordering::Relaxed) {
+        // Sites compiled into the pool hot loop cost exactly this
+        // load before the first env read; `ensure_env_plan` runs from
+        // `global()`, which every service constructor calls.
+        ensure_env_plan();
+        if !GLOBAL_ACTIVE.load(Ordering::Relaxed) {
+            return;
+        }
+    }
+    if let Some(p) =
+        GLOBAL_PLAN.read().unwrap_or_else(|e| e.into_inner()).as_ref()
+    {
+        p.fire(site);
+    }
+}
+
+/// RAII installation of a global plan for the duration of a test.
+/// Holds a process-wide lock so concurrent `install_global` users
+/// serialize; dropping restores the previous global plan (usually the
+/// fault-free state, or the `SPC5_FAULTS` env plan under a chaos job).
+pub struct InstallGuard {
+    previous: Option<Arc<FaultPlan>>,
+    _serial: std::sync::MutexGuard<'static, ()>,
+}
+
+/// Installs `plan` as the process-global plan until the guard drops.
+pub fn install_global(plan: Arc<FaultPlan>) -> InstallGuard {
+    let serial =
+        INSTALL_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    ensure_env_plan();
+    let previous = {
+        let mut slot =
+            GLOBAL_PLAN.write().unwrap_or_else(|e| e.into_inner());
+        std::mem::replace(&mut *slot, Some(plan))
+    };
+    GLOBAL_ACTIVE.store(true, Ordering::Release);
+    InstallGuard { previous, _serial: serial }
+}
+
+impl Drop for InstallGuard {
+    fn drop(&mut self) {
+        let previous = self.previous.take();
+        let active = previous.is_some();
+        *GLOBAL_PLAN.write().unwrap_or_else(|e| e.into_inner()) = previous;
+        GLOBAL_ACTIVE.store(active, Ordering::Release);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_round_trips_the_readme_examples() {
+        let plan =
+            FaultPlan::parse("panic@compute:shard=1,nth=3", 7).unwrap();
+        assert_eq!(plan.rules.len(), 1);
+        let r = &plan.rules[0];
+        assert_eq!(r.site, SiteKind::Compute);
+        assert_eq!(r.shard, Some(1));
+        assert_eq!(r.nth, Some(3));
+        assert_eq!(r.action, Action::Panic);
+
+        let plan = FaultPlan::parse(
+            "delay@recv:ms=5,every=2;panic@worker:shard=0,times=1",
+            7,
+        )
+        .unwrap();
+        assert_eq!(plan.rules.len(), 2);
+        assert_eq!(
+            plan.rules[0].action,
+            Action::Delay(Duration::from_millis(5))
+        );
+        assert_eq!(plan.rules[0].every, Some(2));
+        assert_eq!(plan.rules[1].site, SiteKind::Worker);
+        assert_eq!(plan.rules[1].times, Some(1));
+    }
+
+    #[test]
+    fn parse_rejects_malformed_specs() {
+        for bad in [
+            "",
+            "panic",
+            "panic@elsewhere",
+            "explode@compute",
+            "panic@compute:nth",
+            "panic@compute:prob=2.0",
+            "panic@compute:every=0",
+            "panic@compute:ms=3",
+            "panic@compute:color=red",
+        ] {
+            assert!(FaultPlan::parse(bad, 0).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn nth_fires_exactly_once_at_the_right_hit() {
+        let plan = FaultPlan::new(
+            vec![FaultRule::new(SiteKind::Recv, Action::Delay(
+                Duration::from_millis(0),
+            ))
+            .nth(2)],
+            0,
+        );
+        for i in 0..6 {
+            plan.fire(Site::Recv { shard: 0 });
+            let want = if i >= 2 { 1 } else { 0 };
+            assert_eq!(plan.fired(), want, "after hit {i}");
+        }
+    }
+
+    #[test]
+    fn every_fires_on_multiples() {
+        let plan = FaultPlan::new(
+            vec![FaultRule::new(SiteKind::Submit, Action::Delay(
+                Duration::from_millis(0),
+            ))
+            .every(3)],
+            0,
+        );
+        for _ in 0..9 {
+            plan.fire(Site::Submit { shard: 0, request: 0 });
+        }
+        assert_eq!(plan.fired(), 3);
+    }
+
+    #[test]
+    fn times_caps_total_fires() {
+        let plan = FaultPlan::new(
+            vec![FaultRule::new(SiteKind::Recv, Action::Delay(
+                Duration::from_millis(0),
+            ))
+            .times(2)],
+            0,
+        );
+        for _ in 0..10 {
+            plan.fire(Site::Recv { shard: 3 });
+        }
+        assert_eq!(plan.fired(), 2);
+    }
+
+    #[test]
+    fn filters_restrict_matching() {
+        let plan = FaultPlan::new(
+            vec![FaultRule::new(SiteKind::Compute, Action::Delay(
+                Duration::from_millis(0),
+            ))
+            .shard(1)
+            .request(42)],
+            0,
+        );
+        plan.fire(Site::Compute { shard: 0, request: 42 });
+        plan.fire(Site::Compute { shard: 1, request: 41 });
+        plan.fire(Site::Submit { shard: 1, request: 42 });
+        assert_eq!(plan.fired(), 0);
+        plan.fire(Site::Compute { shard: 1, request: 42 });
+        assert_eq!(plan.fired(), 1);
+    }
+
+    #[test]
+    fn prob_is_deterministic_for_a_seed() {
+        let run = |seed: u64| -> Vec<bool> {
+            let plan = FaultPlan::new(
+                vec![FaultRule::new(SiteKind::Recv, Action::Delay(
+                    Duration::from_millis(0),
+                ))
+                .prob(0.5)],
+                seed,
+            );
+            (0..64)
+                .map(|_| {
+                    let before = plan.fired();
+                    plan.fire(Site::Recv { shard: 0 });
+                    plan.fired() > before
+                })
+                .collect()
+        };
+        let a = run(7);
+        assert_eq!(a, run(7), "same seed, same decisions");
+        assert_ne!(a, run(8), "different seed diverges somewhere");
+        let fires = a.iter().filter(|&&f| f).count();
+        assert!(
+            (16..=48).contains(&fires),
+            "p=0.5 over 64 hits fired {fires} times"
+        );
+    }
+
+    #[test]
+    fn panic_action_unwinds_with_a_labelled_payload() {
+        let plan = Arc::new(FaultPlan::new(
+            vec![FaultRule::new(SiteKind::Compute, Action::Panic).nth(0)],
+            0,
+        ));
+        let p = Arc::clone(&plan);
+        let err = std::panic::catch_unwind(move || {
+            p.fire(Site::Compute { shard: 0, request: 9 });
+        })
+        .unwrap_err();
+        let msg = err
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_default();
+        assert!(msg.contains("spc5 injected fault"), "payload: {msg}");
+        assert_eq!(plan.fired(), 1);
+    }
+
+    #[test]
+    fn install_guard_scopes_the_global_plan() {
+        {
+            let plan = Arc::new(FaultPlan::new(
+                vec![FaultRule::new(SiteKind::Recv, Action::Delay(
+                    Duration::from_millis(0),
+                ))],
+                0,
+            ));
+            let _g = install_global(Arc::clone(&plan));
+            fire_global(Site::Recv { shard: 0 });
+            assert_eq!(plan.fired(), 1);
+        }
+        // Guard dropped: the global site is inert again (unless the
+        // environment carries a plan, in which case it is not ours).
+        if std::env::var("SPC5_FAULTS").is_err() {
+            assert!(global().is_none());
+        }
+    }
+}

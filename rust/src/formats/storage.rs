@@ -681,7 +681,7 @@ fn baseline_spmm<T: Scalar>(
     k: usize,
     mut spmv: impl FnMut(&[T], &mut [T]),
 ) {
-    let mut guard = scratch.lock().expect("spmm scratch poisoned");
+    let mut guard = scratch.lock().unwrap_or_else(|e| e.into_inner());
     let (xj, yj) = &mut *guard;
     xj.clear();
     xj.resize(cols, T::ZERO);

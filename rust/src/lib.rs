@@ -272,6 +272,71 @@
 //! flat kernel in the last bits (exactly bit-identical when one tile
 //! covers all columns); the differential tests pin this down.
 //!
+//! ## Fault tolerance
+//!
+//! The serving tier is supervised: a shard dispatcher that dies (a
+//! kernel task panicking mid-batch) is *restarted*, not silently
+//! lost. The machinery rests on the serializable [`SpmvPlan`] — the
+//! [`ShardedService`] retains each shard's sub-matrix and plan at
+//! start, so recovery is a bit-reproducible
+//! [`SpmvEngine::from_plan`] rebuild, never a re-inspection that
+//! could pick a different kernel.
+//!
+//! ```text
+//!   submit ──▶ gate ──▶ fan-out (generation g stamped)
+//!                          │
+//!               shard k dispatcher panics
+//!                          │
+//!                 recv ◀── FailGuard: failed=true, queue closed
+//!                          │
+//!              supervisor (first receiver to notice):
+//!                1. drain live shards of generation g
+//!                2. charge restart budget  ──exhausted──▶ poison all
+//!                3. rebuild shard k via from_plan (generation g+1)
+//!                4. fail generation g: Err(ShardFailed { shard: k,
+//!                   generation: g }) to its blocked receivers
+//!                          │
+//!              subsequent submits serve normally at g+1
+//! ```
+//!
+//! Failure is **typed** end to end: `submit` refuses with
+//! [`coordinator::ServiceError::ShardFailed`], receivers blocked in
+//! `recv` wake with [`coordinator::RecvError::Failed`] (clean
+//! shutdown stays [`coordinator::RecvError::Stopped`] — the two are
+//! never conflated), and per-shard [`coordinator::HealthReport`]s
+//! (Up / Restarting / Poisoned, restart count, last fault) are
+//! surfaced through `ShardedService::health`, the tenant registry,
+//! and `spc5 serve`. A sliding-window restart budget
+//! ([`coordinator::RestartBudget`], default 8 restarts / 60 s) is the
+//! circuit breaker: recovery that keeps failing escalates to the old
+//! poison-everything behavior instead of thrashing. The tenant layer
+//! adds [`coordinator::TenantRegistry::submit_with_retry`] — bounded
+//! retries with linear backoff that ride through a restart window.
+//!
+//! All of it is tested against **deterministic fault injection**
+//! ([`faults`]): a seeded [`faults::FaultPlan`] of rules fires
+//! panics and delays at named sites. The always-compiled check at
+//! each site is one relaxed atomic load when no plan is installed,
+//! so the fault-free hot path is unaffected (the `chaos` ablation in
+//! `kernel_micro` pins the overhead; `BENCH_8.json`).
+//!
+//! | site      | where it fires                      | actions       |
+//! |-----------|-------------------------------------|---------------|
+//! | `compute` | shard dispatcher, per batch         | panic, delay  |
+//! | `submit`  | service admission, per request      | delay         |
+//! | `recv`    | client receive path, per response   | delay         |
+//! | `worker`  | pool worker, inside `catch_unwind`  | panic, delay  |
+//!
+//! Plans come from the environment (`SPC5_FAULTS`, seed in
+//! `SPC5_FAULTS_SEED`) or [`faults::install_global`]. The grammar is
+//! `ACTION@SITE:key=value,...` joined by `;` — e.g.
+//! `panic@compute:shard=1,nth=3` (kill shard 1's third batch) or
+//! `delay@recv:ms=2,every=7` (2 ms stall on every 7th receive);
+//! selectors `shard=`, `request=`, `nth=`, `every=`, `prob=`,
+//! `times=` compose, and `prob` draws from the plan seed so a
+//! schedule replays identically. `spc5 serve --chaos` runs the demo
+//! loop under a canned plan as a self-healing smoke test.
+//!
 //! ## Modules
 //!
 //! - [`scalar`] — the sealed [`Scalar`] / [`scalar::MaskWord`] traits:
@@ -312,13 +377,17 @@
 //!   baselines, owning one pool for all its parallel paths), the
 //!   Krylov solvers (each iteration reuses the engine's pool), and the
 //!   serving tier: micro-batching `SpmvService<T>`, bounded admission
-//!   queues, the sharded `ShardedService<T>` front-end and the
-//!   multi-tenant `TenantRegistry<T>`.
+//!   queues, the sharded, supervised `ShardedService<T>` front-end
+//!   and the multi-tenant `TenantRegistry<T>`.
+//! - [`faults`] — deterministic fault injection: seeded
+//!   [`faults::FaultPlan`] rules fired at named sites
+//!   (`SPC5_FAULTS`), the substrate of the chaos test suite.
 //! - [`bench`] — the measurement harness used by `cargo bench` targets
 //!   that regenerate every table and figure of the paper.
 
 pub mod bench;
 pub mod coordinator;
+pub mod faults;
 pub mod formats;
 pub mod kernels;
 pub mod matrix;
@@ -335,9 +404,9 @@ pub mod util;
 pub const VEC_SIZE: usize = 8;
 
 pub use coordinator::{
-    MatrixFingerprint, PlanCache, QueuePolicy, ShardConfig, ShardedService,
-    SpmvEngine, SpmvEngineBuilder, SpmvPlan, SpmvService, TenantConfig,
-    TenantRegistry,
+    HealthReport, MatrixFingerprint, PlanCache, QueuePolicy, RecvError,
+    RestartBudget, ShardConfig, ShardHealth, ShardedService, SpmvEngine,
+    SpmvEngineBuilder, SpmvPlan, SpmvService, TenantConfig, TenantRegistry,
 };
 pub use formats::{BlockMatrix, BlockSize, SparseStorage};
 pub use kernels::{default_tune, KernelKind, TuneParams, VARIANT_TABLE};

@@ -14,9 +14,12 @@
 //!   gradient on the 2D Poisson system; `xla` runs the AOT artifact.
 //! - `gen     --class CLASS --out FILE.mtx [--dim D]` — write a
 //!   synthetic matrix in MatrixMarket format.
-//! - `serve   --matrix NAME [--shards N] [--queue block|reject|timeout]`
-//!   — drive synthetic load through the sharded, admission-controlled
-//!   serving tier and report per-shard + rollup statistics.
+//! - `serve   --matrix NAME [--shards N] [--queue block|reject|timeout]
+//!   [--chaos]` — drive synthetic load through the sharded,
+//!   admission-controlled serving tier and report per-shard + rollup
+//!   statistics plus health; `--chaos` injects a deterministic shard
+//!   panic mid-stream (`SPC5_FAULTS` overrides the canned plan) as a
+//!   self-healing smoke test.
 //! - `tune    [--quick] [--out FILE] [--records FILE]` — offline
 //!   machine-level autotuning: sweep every β kernel variant, persist
 //!   the per-kernel winners as a machine-keyed tune profile (consulted
@@ -26,8 +29,9 @@
 
 use spc5::bench;
 use spc5::coordinator::{
-    cg_solve, QueuePolicy, Request, ServiceError, ServiceStats, ShardConfig,
-    ShardedService, SpmvEngine, SpmvPlan, DEFAULT_QUEUE_CAPACITY,
+    cg_solve, QueuePolicy, RecvError, Request, ServiceError, ServiceStats,
+    ShardConfig, ShardedService, SpmvEngine, SpmvPlan,
+    DEFAULT_QUEUE_CAPACITY,
 };
 use spc5::formats::stats::paper_profile;
 use spc5::kernels::KernelKind;
@@ -609,6 +613,21 @@ fn cmd_serve(a: &Args) -> anyhow::Result<()> {
             anyhow::bail!("--queue expects block|reject|timeout, got '{other}'")
         }
     };
+    // --chaos: a canned deterministic shard panic (overridable with
+    // SPC5_FAULTS) exercising the supervised-restart path end to end.
+    let faults = if a.has("chaos") {
+        Some(spc5::faults::global().unwrap_or_else(|| {
+            std::sync::Arc::new(
+                spc5::faults::FaultPlan::parse(
+                    "panic@compute:shard=0,nth=3",
+                    0x5eed,
+                )
+                .expect("canned chaos plan"),
+            )
+        }))
+    } else {
+        None
+    };
     let cfg = ShardConfig {
         shards,
         threads_per_shard: a.get_usize("threads", 1)?,
@@ -616,41 +635,59 @@ fn cmd_serve(a: &Args) -> anyhow::Result<()> {
         kernel: kernel_flag,
         max_batch: a.get_usize("max-batch", 8)?,
         queue,
+        faults: faults.clone(),
+        ..ShardConfig::default()
     };
     let (rows, cols, nnz) = (csr.rows, csr.cols, csr.nnz());
     let service = ShardedService::start(csr, cfg)?;
     println!(
-        "serving {name}: {rows}x{cols} nnz={nnz} shards={} policy={:?}",
+        "serving {name}: {rows}x{cols} nnz={nnz} shards={} policy={:?}{}",
         service.n_shards(),
-        service.policy()
+        service.policy(),
+        if faults.is_some() { " chaos=on" } else { "" }
     );
 
     let window = burst.clamp(1, capacity);
     let t = spc5::util::Timer::start();
     let mut rejected = 0usize;
+    let mut failed = 0usize;
     let mut outstanding = 0usize;
+    // Drains every outstanding request, counting aborted generations
+    // (supervised restart in flight) instead of bailing on them.
+    let drain = |outstanding: &mut usize,
+                 failed: &mut usize|
+     -> anyhow::Result<()> {
+        while *outstanding > 0 {
+            match service.recv() {
+                Ok(_) => {}
+                Err(RecvError::Failed { shard, generation }) => {
+                    *failed += 1;
+                    eprintln!(
+                        "  fault: shard {shard} failed, generation \
+                         {generation} aborted (restarting)"
+                    );
+                }
+                Err(e) => {
+                    anyhow::bail!("service stopped early: {e}")
+                }
+            }
+            *outstanding -= 1;
+        }
+        Ok(())
+    };
     for id in 0..requests as u64 {
         let x = bench::bench_vector(cols, 0xBE7C ^ id);
         match service.submit(Request { id, x }) {
             Ok(()) => outstanding += 1,
             Err(ServiceError::Overloaded { .. }) => rejected += 1,
+            Err(ServiceError::ShardFailed { .. }) => failed += 1,
             Err(e) => return Err(e.into()),
         }
         if outstanding >= window {
-            while outstanding > 0 {
-                service
-                    .recv()
-                    .ok_or_else(|| anyhow::anyhow!("service stopped early"))?;
-                outstanding -= 1;
-            }
+            drain(&mut outstanding, &mut failed)?;
         }
     }
-    while outstanding > 0 {
-        service
-            .recv()
-            .ok_or_else(|| anyhow::anyhow!("service stopped early"))?;
-        outstanding -= 1;
-    }
+    drain(&mut outstanding, &mut failed)?;
     let wall = t.elapsed_s();
 
     let stats = service.stats();
@@ -658,13 +695,33 @@ fn cmd_serve(a: &Args) -> anyhow::Result<()> {
         serve_stats_row(&format!("shard {i}"), s);
     }
     serve_stats_row("rollup", &stats.rollup());
+    for h in service.health() {
+        println!(
+            "  health shard {}: {} generation={} restarts={}{}",
+            h.shard,
+            h.health,
+            h.generation,
+            h.restarts,
+            match &h.last_fault {
+                Some(f) => format!(" last_fault=\"{f}\""),
+                None => String::new(),
+            }
+        );
+    }
     println!(
-        "  offered={requests} served={} rejected={rejected} in-flight hw={} \
-         wall={wall:.3}s throughput={:.3} gflops",
+        "  offered={requests} served={} rejected={rejected} failed={failed} \
+         restarts={} in-flight hw={} wall={wall:.3}s throughput={:.3} gflops",
         stats.served,
+        stats.restarts,
         stats.in_flight_high_water,
         2.0 * nnz as f64 * stats.served as f64 / wall / 1e9
     );
+    if let Some(plan) = &faults {
+        println!("  chaos: {} fault(s) fired", plan.fired());
+        if stats.restarts == 0 && plan.fired() > 0 {
+            anyhow::bail!("chaos fired but no shard restart was recorded");
+        }
+    }
     service.shutdown();
     Ok(())
 }

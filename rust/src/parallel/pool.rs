@@ -265,6 +265,12 @@ fn worker_loop(tid: usize, inner: &Inner) {
             }
         };
         let outcome = catch_unwind(AssertUnwindSafe(|| {
+            // The `worker` injection site (global plan only): a panic
+            // here is caught and re-raised on the caller exactly like
+            // a real kernel panic, leaving the pool usable.
+            crate::faults::fire_global(crate::faults::Site::Worker {
+                worker: tid,
+            });
             (task.0)(WorkerCtx { tid, locals: &mut locals })
         }));
         let mut st = lock(&inner.state);

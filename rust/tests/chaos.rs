@@ -1,0 +1,451 @@
+//! Chaos differential suite: deterministic fault injection driven
+//! over the sharded and tenant serving tiers. The invariants pinned
+//! here are the fault-tolerance contract:
+//!
+//! - every **delivered** `Response.y` is bit-identical to the
+//!   single-engine oracle, faults or not;
+//! - every **accepted** submit terminates in exactly one of
+//!   {`Response`, typed error} — no lost ids, no duplicates, no
+//!   hangs;
+//! - restart-budget exhaustion actually poisons (the circuit breaker
+//!   escalates instead of thrashing);
+//! - the worker pool stays usable after an injected worker panic.
+//!
+//! Fault schedules are seeded [`FaultPlan`]s, so every run replays
+//! the same faults; tests that install a process-global plan
+//! serialize on [`GLOBAL`] so they cannot leak injections into each
+//! other's services.
+
+use spc5::coordinator::{
+    QueuePolicy, RecvError, Request, RestartBudget, ServiceError,
+    ShardConfig, ShardHealth, ShardedService, SpmvService, TenantConfig,
+    TenantRegistry,
+};
+use spc5::faults::{self, Action, FaultPlan, FaultRule, SiteKind};
+use spc5::matrix::suite;
+use spc5::parallel::WorkerPool;
+use spc5::{Csr, KernelKind, Scalar, SpmvEngine};
+use std::collections::BTreeSet;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::Duration;
+
+/// Serializes every test in this binary: two tests share the
+/// process-global fault plan (`install_global`), and a global plan
+/// would otherwise inject into services started by a concurrently
+/// running test.
+static GLOBAL: Mutex<()> = Mutex::new(());
+
+fn serial() -> MutexGuard<'static, ()> {
+    GLOBAL.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Small-integer values: per-row sums stay exact in every summation
+/// order, so "bit-identical" is meaningful across shard splits and
+/// batch compositions (same trick as `tests/serving.rs`).
+fn integerize<T: Scalar>(csr: &mut Csr<T>) {
+    for (i, v) in csr.values.iter_mut().enumerate() {
+        *v = T::from_f64(((i % 7) as f64) - 3.0);
+    }
+}
+
+fn int_x<T: Scalar>(cols: usize, id: u64) -> Vec<T> {
+    (0..cols)
+        .map(|i| T::from_f64((((i as u64 + 3 * id) % 9) as f64) - 4.0))
+        .collect()
+}
+
+fn reference<T: Scalar>(csr: &Csr<T>, id: u64) -> Vec<T> {
+    let x: Vec<T> = int_x(csr.cols, id);
+    let mut want = vec![T::ZERO; csr.rows];
+    csr.spmv_ref(&x, &mut want);
+    want
+}
+
+/// The acceptance scenario: a kernel-task panic is injected into one
+/// shard mid-stream. The faulted generation fails with a typed error
+/// (never a hang, never a silent drop), the shard restarts from its
+/// retained plan, subsequent submits succeed, and everything
+/// delivered — before and after the fault — is bit-identical to the
+/// single-engine oracle.
+#[test]
+fn shard_panic_midstream_recovers_bit_identical() {
+    let _g = serial();
+    let mut csr = suite::fem_blocked(400, 3, 5, 3);
+    integerize(&mut csr);
+    let kernel = KernelKind::Beta(1, 8);
+
+    // One-at-a-time submission ⇒ one batch per request per shard, so
+    // "second matching hit on shard 1" is exactly request id 1.
+    let plan = Arc::new(FaultPlan::new(
+        vec![FaultRule::new(SiteKind::Compute, Action::Panic).shard(1).nth(1)],
+        0xC4A05,
+    ));
+    let sharded = ShardedService::start(
+        csr.clone(),
+        ShardConfig {
+            shards: 3,
+            kernel: Some(kernel),
+            max_batch: 4,
+            queue: QueuePolicy::Block { capacity: 64 },
+            faults: Some(Arc::clone(&plan)),
+            ..ShardConfig::default()
+        },
+    )
+    .unwrap();
+    assert_eq!(sharded.n_shards(), 3);
+    let engine =
+        SpmvEngine::builder(csr.clone()).kernel(kernel).build().unwrap();
+    let oracle = SpmvService::start(engine, 4);
+
+    let mut failed: Vec<(u64, RecvError)> = Vec::new();
+    for id in 0..12u64 {
+        sharded.submit(Request { id, x: int_x(csr.cols, id) }).unwrap();
+        oracle.submit(Request { id, x: int_x(csr.cols, id) }).unwrap();
+        let want = oracle.recv().unwrap();
+        assert_eq!(want.id, id);
+        match sharded.recv() {
+            Ok(got) => {
+                assert_eq!(got.id, id);
+                assert!(
+                    got.y == want.y,
+                    "request {id}: sharded y differs from oracle"
+                );
+                assert!(got.y == reference(&csr, id));
+            }
+            Err(e) => failed.push((id, e)),
+        }
+    }
+
+    // Exactly the faulted request failed, with full attribution.
+    assert_eq!(
+        failed,
+        vec![(1, RecvError::Failed { shard: 1, generation: 0 })]
+    );
+    assert_eq!(plan.fired(), 1);
+    assert_eq!(sharded.restarts(), 1);
+    assert!(!sharded.poisoned());
+    let health = sharded.health();
+    assert!(health.iter().all(|h| h.health == ShardHealth::Up));
+    assert_eq!(health[1].restarts, 1);
+    assert_eq!(health[1].generation, 1);
+    assert!(
+        health[1].last_fault.as_deref().unwrap_or("").contains("panic"),
+        "restarted shard should remember its last fault"
+    );
+    assert_eq!(health[0].restarts, 0);
+    assert_eq!(sharded.shutdown(), 11);
+    oracle.shutdown();
+}
+
+/// Burst traffic under seeded probabilistic panics: every accepted
+/// submit terminates in exactly one of {response, typed error} — the
+/// delivered ids are unique, the failed count covers the rest, and
+/// nothing hangs. Delivered payloads stay bit-identical to the
+/// reference product throughout the restarts.
+#[test]
+fn accepted_submits_terminate_exactly_once() {
+    let _g = serial();
+    let mut csr = suite::fem_blocked(600, 3, 5, 3);
+    integerize(&mut csr);
+    // One guaranteed kill (the 6th batch on shard 2) plus a seeded
+    // probabilistic sprinkle capped at two more — at least one
+    // restart always happens, never more than three.
+    let plan = Arc::new(FaultPlan::new(
+        vec![
+            FaultRule::new(SiteKind::Compute, Action::Panic).shard(2).nth(5),
+            FaultRule::new(SiteKind::Compute, Action::Panic)
+                .prob(0.25)
+                .times(2),
+        ],
+        0xD1CE,
+    ));
+    let sharded = ShardedService::start(
+        csr.clone(),
+        ShardConfig {
+            shards: 3,
+            kernel: Some(KernelKind::Beta(1, 8)),
+            max_batch: 4,
+            queue: QueuePolicy::Block { capacity: 16 },
+            faults: Some(Arc::clone(&plan)),
+            ..ShardConfig::default()
+        },
+    )
+    .unwrap();
+    assert_eq!(sharded.n_shards(), 3);
+
+    let mut accepted = 0usize;
+    let mut refused = 0usize;
+    let mut failures = 0usize;
+    let mut delivered: BTreeSet<u64> = BTreeSet::new();
+    let mut outstanding = 0usize;
+    for id in 0..48u64 {
+        match sharded.submit(Request { id, x: int_x(csr.cols, id) }) {
+            Ok(()) => {
+                accepted += 1;
+                outstanding += 1;
+            }
+            Err(ServiceError::ShardFailed { .. }) => refused += 1,
+            Err(e) => panic!("unexpected submit error: {e}"),
+        }
+        if outstanding >= 8 {
+            while outstanding > 0 {
+                match sharded.recv() {
+                    Ok(r) => {
+                        assert!(
+                            delivered.insert(r.id),
+                            "duplicate response id {}",
+                            r.id
+                        );
+                        assert!(r.y == reference(&csr, r.id));
+                    }
+                    Err(RecvError::Failed { .. }) => failures += 1,
+                    Err(e) => panic!("unexpected recv error: {e}"),
+                }
+                outstanding -= 1;
+            }
+        }
+    }
+    while outstanding > 0 {
+        match sharded.recv() {
+            Ok(r) => {
+                assert!(delivered.insert(r.id));
+                assert!(r.y == reference(&csr, r.id));
+            }
+            Err(RecvError::Failed { .. }) => failures += 1,
+            Err(e) => panic!("unexpected recv error: {e}"),
+        }
+        outstanding -= 1;
+    }
+
+    // Exactly-one-fate accounting: every accepted id is either
+    // delivered once or aborted with a typed error, and ids that were
+    // refused at submit never produce anything.
+    assert_eq!(delivered.len() + failures, accepted);
+    assert_eq!(accepted + refused, 48);
+    assert_eq!(plan.fired() as usize, sharded.restarts());
+    assert!(
+        sharded.restarts() >= 1,
+        "seeded schedule should fire at least once (fired={})",
+        plan.fired()
+    );
+    assert!(!sharded.poisoned(), "budget is generous; no escalation");
+    assert_eq!(sharded.shutdown(), delivered.len());
+}
+
+/// The circuit breaker: a shard that keeps dying exhausts its restart
+/// budget and the service escalates to poison — typed errors on every
+/// path, all shards reported `Poisoned`, no restart thrash.
+#[test]
+fn restart_budget_exhaustion_poisons_everything() {
+    let _g = serial();
+    let mut csr = suite::fem_blocked(300, 3, 5, 3);
+    integerize(&mut csr);
+    let plan = Arc::new(FaultPlan::new(
+        vec![FaultRule::new(SiteKind::Compute, Action::Panic).shard(0)],
+        7,
+    ));
+    let sharded = ShardedService::start(
+        csr.clone(),
+        ShardConfig {
+            shards: 2,
+            kernel: Some(KernelKind::Beta(1, 8)),
+            max_batch: 2,
+            queue: QueuePolicy::Block { capacity: 8 },
+            budget: RestartBudget {
+                max_restarts: 1,
+                window: Duration::from_secs(3600),
+            },
+            faults: Some(Arc::clone(&plan)),
+            ..ShardConfig::default()
+        },
+    )
+    .unwrap();
+
+    // First fault: within budget, restarted, typed abort.
+    sharded.submit(Request { id: 0, x: int_x(csr.cols, 0) }).unwrap();
+    assert_eq!(
+        sharded.recv().unwrap_err(),
+        RecvError::Failed { shard: 0, generation: 0 }
+    );
+    assert_eq!(sharded.restarts(), 1);
+    assert!(!sharded.poisoned());
+
+    // Second fault: budget exhausted ⇒ poison, not another restart.
+    sharded.submit(Request { id: 1, x: int_x(csr.cols, 1) }).unwrap();
+    assert_eq!(
+        sharded.recv().unwrap_err(),
+        RecvError::Failed { shard: 0, generation: 1 }
+    );
+    assert!(sharded.poisoned());
+    assert_eq!(sharded.restarts(), 1);
+    assert!(sharded
+        .health()
+        .iter()
+        .all(|h| h.health == ShardHealth::Poisoned));
+    assert!(matches!(
+        sharded.submit(Request { id: 2, x: int_x(csr.cols, 2) }),
+        Err(ServiceError::ShardFailed { shard: 0, .. })
+    ));
+    assert!(matches!(
+        sharded.recv_timeout(Duration::from_millis(50)),
+        Err(RecvError::Failed { shard: 0, .. })
+    ));
+    assert_eq!(sharded.shutdown(), 0);
+}
+
+/// The `worker` site: an injected panic inside a pool task is caught
+/// and re-raised on the caller exactly like a real kernel panic — and
+/// the pool keeps serving afterwards.
+#[test]
+fn pool_stays_usable_after_injected_worker_panic() {
+    let _g = serial();
+    let plan = Arc::new(FaultPlan::new(
+        vec![FaultRule::new(SiteKind::Worker, Action::Panic).times(1)],
+        11,
+    ));
+    let _guard = faults::install_global(Arc::clone(&plan));
+    let pool = WorkerPool::new(4);
+
+    let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        pool.run(|_ctx| {});
+    }))
+    .expect_err("the injected worker panic must reach the caller");
+    let msg = err
+        .downcast_ref::<String>()
+        .cloned()
+        .unwrap_or_else(|| "<non-string payload>".into());
+    assert!(
+        msg.contains("spc5 injected fault"),
+        "unexpected panic payload: {msg}"
+    );
+    assert_eq!(plan.fired(), 1);
+
+    // The pool survives: all four workers run on subsequent epochs.
+    let hits = AtomicUsize::new(0);
+    for _ in 0..3 {
+        pool.run(|_ctx| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+    }
+    assert_eq!(hits.load(Ordering::Relaxed), 12);
+}
+
+/// Delay faults (queue stalls, recv delays) slow the pipeline down
+/// but corrupt nothing: no restarts, every response bit-identical.
+#[test]
+fn delay_faults_do_not_corrupt_results() {
+    let _g = serial();
+    let mut csr = suite::fem_blocked(300, 3, 5, 3);
+    integerize(&mut csr);
+    let plan = Arc::new(FaultPlan::new(
+        vec![
+            FaultRule::new(
+                SiteKind::Submit,
+                Action::Delay(Duration::from_millis(1)),
+            )
+            .every(3),
+            FaultRule::new(
+                SiteKind::Recv,
+                Action::Delay(Duration::from_millis(1)),
+            )
+            .every(2),
+            FaultRule::new(
+                SiteKind::Compute,
+                Action::Delay(Duration::from_millis(2)),
+            )
+            .every(5),
+        ],
+        21,
+    ));
+    let sharded = ShardedService::start(
+        csr.clone(),
+        ShardConfig {
+            shards: 2,
+            kernel: Some(KernelKind::Beta(1, 8)),
+            max_batch: 4,
+            queue: QueuePolicy::Block { capacity: 16 },
+            faults: Some(Arc::clone(&plan)),
+            ..ShardConfig::default()
+        },
+    )
+    .unwrap();
+    for id in 0..15u64 {
+        sharded.submit(Request { id, x: int_x(csr.cols, id) }).unwrap();
+        let r = sharded.recv().unwrap();
+        assert_eq!(r.id, id);
+        assert!(r.y == reference(&csr, id));
+    }
+    assert!(plan.fired() > 0, "delay schedule should have fired");
+    assert_eq!(sharded.restarts(), 0);
+    assert_eq!(sharded.shutdown(), 15);
+}
+
+/// Tenant-level degradation: a sharded tenant takes a shard panic,
+/// the registry's typed errors surface it, `submit_with_retry` rides
+/// through the restart, and the per-tenant health report shows the
+/// recovery.
+#[test]
+fn tenant_retry_rides_through_shard_restart() {
+    let _g = serial();
+    // Global plan: the tenant registry builds its sharded services
+    // with no per-service plan, so they inherit this one. `nth(0)` on
+    // shard 0 ⇒ the first batch dispatched there dies, once.
+    let plan = Arc::new(FaultPlan::new(
+        vec![FaultRule::new(SiteKind::Compute, Action::Panic)
+            .shard(0)
+            .nth(0)],
+        3,
+    ));
+    let _guard = faults::install_global(Arc::clone(&plan));
+
+    let registry: TenantRegistry = TenantRegistry::new();
+    let mut csr = suite::fem_blocked(400, 3, 5, 3);
+    integerize(&mut csr);
+    let fp = registry
+        .register(
+            "chaotic",
+            csr.clone(),
+            TenantConfig {
+                shards: 2,
+                kernel: Some(KernelKind::Beta(1, 8)),
+                ..TenantConfig::default()
+            },
+        )
+        .unwrap();
+
+    // The first request hits the injected panic: typed abort.
+    registry
+        .submit_with_retry(
+            &fp,
+            Request { id: 0, x: int_x(csr.cols, 0) },
+            3,
+            Duration::from_millis(2),
+        )
+        .unwrap();
+    assert_eq!(
+        registry.recv(&fp).unwrap_err(),
+        RecvError::Failed { shard: 0, generation: 0 }
+    );
+    assert_eq!(plan.fired(), 1);
+
+    // Retry path after the supervised restart: served, bit-identical.
+    registry
+        .submit_with_retry(
+            &fp,
+            Request { id: 1, x: int_x(csr.cols, 1) },
+            3,
+            Duration::from_millis(2),
+        )
+        .unwrap();
+    let r = registry.recv(&fp).unwrap();
+    assert_eq!(r.id, 1);
+    assert!(r.y == reference(&csr, 1));
+
+    let health = registry.tenant_health(&fp).unwrap();
+    assert_eq!(health.len(), 2);
+    assert!(health.iter().all(|h| h.health == ShardHealth::Up));
+    assert_eq!(health[0].restarts, 1);
+    assert_eq!(health[1].restarts, 0);
+    assert_eq!(registry.deregister(&fp), Some(1));
+}
