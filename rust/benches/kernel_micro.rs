@@ -31,6 +31,7 @@ fn main() {
             "serve" => return serve_ablation(),
             "tune" => return tune_ablation(),
             "chaos" => return chaos_ablation(),
+            "durable" => return durable_ablation(),
             other => {
                 eprintln!("unknown SPC5_ABLATION='{other}', running all")
             }
@@ -52,6 +53,7 @@ fn main() {
     serve_ablation();
     tune_ablation();
     chaos_ablation();
+    durable_ablation();
 }
 
 /// GFlop/s vs block fill for every kernel.
@@ -850,6 +852,138 @@ fn chaos_ablation() {
     match runner::write_bench_json(
         std::path::Path::new(&out),
         "kernel_micro/chaos",
+        &all,
+    ) {
+        Ok(()) => eprintln!("  wrote {out}"),
+        Err(e) => eprintln!("warning: {e}"),
+    }
+}
+
+/// Durable-state ablation: what the checksummed envelope + atomic
+/// rename path costs over raw `fs::write`/`fs::read`, and what the
+/// bounded-memory streaming MatrixMarket parser sustains on a
+/// multi-megabyte upload. Per-op latency is persisted to
+/// `BENCH_9.json` (`gflops` is 0 for these rows — the measured
+/// quantity is `seconds` per operation; the op is encoded in the
+/// matrix label suffix), uploaded by CI next to BENCH_3..8.
+fn durable_ablation() {
+    use spc5::matrix::{market, Coo};
+    use spc5::util::durable;
+
+    // A realistic multi-megabyte ASCII corpus: banded 60k matrix,
+    // 8 entries per row, serialized through the crate's own
+    // MatrixMarket writer. The same bytes exercise both the envelope
+    // (as a state payload) and the streaming parser (as an upload).
+    let n = 60_000usize;
+    let mut coo = Coo::<f64>::new(n, n);
+    for r in 0..n {
+        for d in 0..8usize {
+            let c = (r + d * 7) % n;
+            let v = ((r * 31 + d * 17) % 97) as f64 - 48.0;
+            coo.push(r, c, v);
+        }
+    }
+    let mut mtx = Vec::new();
+    market::write_coo(&mut mtx, &coo).expect("serialize corpus");
+    let mb = mtx.len() as f64 / 1e6;
+    let payload = String::from_utf8(mtx).expect("corpus is ASCII");
+
+    let dir = std::env::temp_dir().join("spc5_durable_ablation");
+    std::fs::create_dir_all(&dir).ok();
+    let env_path = dir.join("state.envelope");
+    let raw_path = dir.join("state.raw");
+
+    // Envelope save: wrap + checksum + temp-sibling + fsync + rename.
+    let s_save_env = mean_of_runs(RUNS, || {
+        durable::save_state("bench-ablation", &env_path, &payload)
+            .expect("durable save");
+    });
+    // Raw save: one unchecked fs::write (the pre-hardening path).
+    let s_save_raw = mean_of_runs(RUNS, || {
+        std::fs::write(&raw_path, payload.as_bytes()).expect("raw save");
+    });
+    // Envelope load: read + frame parse + checksum verify.
+    let s_load_env = mean_of_runs(RUNS, || {
+        match durable::read_state("bench-ablation", &env_path)
+            .expect("durable load")
+        {
+            durable::RawState::Payload { text, .. } => {
+                std::hint::black_box(&text);
+            }
+            _ => panic!("envelope file should load as a payload"),
+        }
+    });
+    let s_load_raw = mean_of_runs(RUNS, || {
+        std::hint::black_box(
+            &std::fs::read_to_string(&raw_path).expect("raw load"),
+        );
+    });
+    // Checksum+frame alone, no I/O: the pure CPU cost of the envelope.
+    let s_wrap = mean_of_runs(RUNS, || {
+        std::hint::black_box(&durable::wrap(payload.as_bytes()));
+    });
+    // Streaming parse of the same corpus (line cap, overflow checks,
+    // bounded preallocation all engaged).
+    let s_parse = mean_of_runs(RUNS, || {
+        std::hint::black_box(
+            &market::read_coo::<f64, _>(payload.as_bytes())
+                .expect("corpus parses"),
+        );
+    });
+
+    let mut all: Vec<Measurement> = Vec::new();
+    let mut record = |op: &str, seconds: f64| {
+        all.push(Measurement {
+            matrix: format!("mtx-corpus/{op}"),
+            kernel: KernelKind::Csr,
+            threads: 1,
+            numa: false,
+            tile_cols: 0,
+            tune: Default::default(),
+            gflops: 0.0,
+            seconds,
+        });
+    };
+    record("save-durable", s_save_env);
+    record("save-raw", s_save_raw);
+    record("load-durable", s_load_env);
+    record("load-raw", s_load_raw);
+    record("wrap-only", s_wrap);
+    record("parse-stream", s_parse);
+
+    let mut t = Table::new(
+        &format!(
+            "Ablation O: durable state — envelope + atomic rename vs raw \
+             I/O, streaming .mtx parse ({mb:.1} MB corpus)"
+        ),
+        &["op", "ms", "MB/s", "vs raw"],
+    );
+    for (op, s, base) in [
+        ("save durable (envelope+rename)", s_save_env, Some(s_save_raw)),
+        ("save raw fs::write", s_save_raw, None),
+        ("load durable (verify)", s_load_env, Some(s_load_raw)),
+        ("load raw fs::read", s_load_raw, None),
+        ("wrap+checksum only", s_wrap, None),
+        ("parse .mtx streaming", s_parse, None),
+    ] {
+        t.row(vec![
+            op.to_string(),
+            format!("{:.3}", s * 1e3),
+            format!("{:.1}", mb / s),
+            match base {
+                Some(b) => format!("{:.3}x", s / b),
+                None => "-".to_string(),
+            },
+        ]);
+    }
+    t.emit("ablation_durable");
+    eprintln!("  durable ablation: {mb:.1} MB corpus");
+
+    let out = std::env::var("SPC5_BENCH9_JSON")
+        .unwrap_or_else(|_| "BENCH_9.json".to_string());
+    match runner::write_bench_json(
+        std::path::Path::new(&out),
+        "kernel_micro/durable",
         &all,
     ) {
         Ok(()) => eprintln!("  wrote {out}"),

@@ -100,8 +100,26 @@ pub fn ensure_records(
     thread_counts: &[usize],
 ) -> anyhow::Result<RecordStore> {
     let path = super::records_path();
+    // A corrupt store is quarantined by `load` — degrade to fresh
+    // measurement instead of failing the bench run.
+    let load_or_fresh = || match RecordStore::load(&path) {
+        Ok(store) => store,
+        Err(e) => {
+            if !e.is_missing() {
+                crate::util::durable::record_degrade(
+                    crate::util::durable::DegradeEvent {
+                        artifact: RecordStore::ARTIFACT.into(),
+                        path: path.display().to_string(),
+                        reason: e.to_string(),
+                        fallback: "re-measure fresh store".into(),
+                    },
+                );
+            }
+            RecordStore::new()
+        }
+    };
     if path.exists() {
-        let store = RecordStore::load(&path)?;
+        let store = load_or_fresh();
         let have_all = thread_counts.iter().all(|&t| {
             kernels.iter().any(|&k| !store.for_kernel(k, t).is_empty())
         });
@@ -111,11 +129,7 @@ pub fn ensure_records(
         }
     }
     eprintln!("priming record store (this measures Set-A once)...");
-    let mut store = if path.exists() {
-        RecordStore::load(&path)?
-    } else {
-        RecordStore::new()
-    };
+    let mut store = load_or_fresh();
     // Route through `push` so re-priming replaces stale measurements
     // instead of growing the store without bound.
     let mut merge = |recs: Vec<crate::predictor::PerfRecord>| {
@@ -180,8 +194,38 @@ pub fn write_bench_json(
         ("avx512", Json::Bool(crate::util::avx512_available())),
         ("results", Json::Arr(results)),
     ]);
-    std::fs::write(path, format!("{doc}\n"))
-        .map_err(|e| anyhow::anyhow!("write {}: {e}", path.display()))
+    // Reports go through the same envelope + atomic-rename path as
+    // every other persisted artifact (strip the header/footer lines,
+    // or `read_bench_json`, to get the bare JSON back).
+    crate::util::durable::save_state(
+        "bench-report",
+        path,
+        &format!("{doc}\n"),
+    )?;
+    Ok(())
+}
+
+/// Reads a [`write_bench_json`] report back (envelope-verified; legacy
+/// unwrapped reports load too) and returns the JSON text. A payload
+/// that is not valid JSON — a corrupt legacy file, say — is
+/// quarantined like every other artifact.
+pub fn read_bench_json(path: &std::path::Path) -> anyhow::Result<String> {
+    use crate::util::durable::{self, RawState, StateErrorKind};
+    match durable::read_state("bench-report", path)? {
+        RawState::Payload { text, .. } => {
+            if let Err(e) = crate::util::json::Json::parse(&text) {
+                return Err(durable::quarantined(
+                    "bench-report",
+                    path,
+                    StateErrorKind::Malformed(e.to_string()),
+                )
+                .into());
+            }
+            Ok(text)
+        }
+        RawState::Missing => anyhow::bail!("{}: no such file", path.display()),
+        RawState::Empty => anyhow::bail!("{}: file is empty", path.display()),
+    }
 }
 
 /// Best measurement per matrix among `filter`-selected kernels.

@@ -803,7 +803,25 @@ impl<'r, T: Scalar> SpmvEngineBuilder<'r, T> {
         // build, profile file or not.
         let profile = match (&self.tune, &self.tune_profile) {
             (None, Some(path)) => {
-                Some(crate::tuner::TuneProfile::load(path)?)
+                match crate::tuner::TuneProfile::load(path) {
+                    Ok(p) => Some(p),
+                    // A typo'd path stays a hard error; a corrupt
+                    // profile was quarantined by `load` — degrade to
+                    // the baseline variant with a recorded downgrade.
+                    Err(e) if e.is_missing() => return Err(e.into()),
+                    Err(e) => {
+                        crate::util::durable::record_degrade(
+                            crate::util::durable::DegradeEvent {
+                                artifact: crate::tuner::TuneProfile::ARTIFACT
+                                    .into(),
+                                path: path.display().to_string(),
+                                reason: e.to_string(),
+                                fallback: "baseline variant".into(),
+                            },
+                        );
+                        None
+                    }
+                }
             }
             _ => None,
         };
@@ -961,7 +979,25 @@ impl<'r, T: Scalar> SpmvEngineBuilder<'r, T> {
     pub fn build(mut self) -> anyhow::Result<SpmvEngine<T>> {
         match self.plan_cache.take() {
             Some(path) => {
-                let mut cache = PlanCache::load(&path)?;
+                // A corrupt cache was quarantined by `load`: degrade
+                // to an empty cache, re-plan, and persist the
+                // repaired store below — a poisoned file must not
+                // take cold starts down with it.
+                let mut cache = match PlanCache::load(&path) {
+                    Ok(c) => c,
+                    Err(e) => {
+                        crate::util::durable::record_degrade(
+                            crate::util::durable::DegradeEvent {
+                                artifact: PlanCache::ARTIFACT.into(),
+                                path: path.display().to_string(),
+                                reason: e.to_string(),
+                                fallback: "re-plan and persist repaired cache"
+                                    .into(),
+                            },
+                        );
+                        PlanCache::new()
+                    }
+                };
                 let hit = self.cached_plan(&cache).is_some();
                 let engine = self.build_with_cache(&mut cache)?;
                 if !hit {

@@ -36,6 +36,7 @@ use crate::kernels::{KernelKind, TuneParams};
 use crate::matrix::reorder::ReorderKind;
 use crate::matrix::Csr;
 use crate::scalar::Scalar;
+use crate::util::durable::{self, RawState, StateError, StateErrorKind};
 use crate::util::json::Json;
 use std::path::Path;
 
@@ -376,16 +377,54 @@ impl SpmvPlan {
         })
     }
 
-    /// Saves the plan to a file.
-    pub fn save(&self, path: impl AsRef<Path>) -> anyhow::Result<()> {
-        std::fs::write(path, format!("{}\n", self.to_json()))?;
-        Ok(())
+    /// Saves the plan to a file, envelope-framed and atomically
+    /// (see [`crate::util::durable`]).
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<(), StateError> {
+        durable::save_state(
+            Self::ARTIFACT,
+            path.as_ref(),
+            &format!("{}\n", self.to_json()),
+        )
     }
 
-    /// Loads a plan from a file.
-    pub fn load(path: impl AsRef<Path>) -> anyhow::Result<SpmvPlan> {
-        Self::from_json(&std::fs::read_to_string(path)?)
+    /// Loads a plan from a file. A missing file is an error (a plan
+    /// path is always explicitly named); a corrupt file — bad
+    /// envelope, checksum mismatch, malformed JSON — is quarantined
+    /// to `<name>.corrupt-<n>` and reported as a typed
+    /// [`StateError`]. Legacy (pre-envelope) files load unverified.
+    pub fn load(path: impl AsRef<Path>) -> Result<SpmvPlan, StateError> {
+        let path = path.as_ref();
+        match durable::read_state(Self::ARTIFACT, path)? {
+            RawState::Missing => Err(StateError {
+                artifact: Self::ARTIFACT,
+                path: path.to_path_buf(),
+                kind: StateErrorKind::Io(std::io::Error::new(
+                    std::io::ErrorKind::NotFound,
+                    "no such file",
+                )),
+                quarantined_to: None,
+            }),
+            RawState::Empty => Err(StateError {
+                artifact: Self::ARTIFACT,
+                path: path.to_path_buf(),
+                kind: StateErrorKind::Malformed("file is empty".into()),
+                quarantined_to: None,
+            }),
+            RawState::Payload { text, .. } => Self::from_json(&text)
+                .map_err(|e| {
+                    durable::quarantined(
+                        Self::ARTIFACT,
+                        path,
+                        StateErrorKind::Malformed(e.to_string()),
+                    )
+                }),
+        }
     }
+}
+
+impl SpmvPlan {
+    /// Artifact label used in [`StateError`] and degradation events.
+    pub const ARTIFACT: &'static str = "plan";
 }
 
 /// A persistent `{fingerprint → plan}` store: plan once, instantiate
@@ -478,22 +517,44 @@ impl PlanCache {
         Ok(cache)
     }
 
+    /// Artifact label used in [`StateError`] / degradation events.
+    pub const ARTIFACT: &'static str = "plan-cache";
+
     /// Loads a store from a file; a missing file is an empty cache
-    /// (first run), a malformed file is an error.
-    pub fn load(path: impl AsRef<Path>) -> anyhow::Result<PlanCache> {
-        match std::fs::read_to_string(path) {
-            Ok(text) => Self::from_json(&text),
-            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+    /// (first run), an empty or whitespace-only file is an empty
+    /// cache with a warning (a crashed first save must not poison
+    /// every future cold start), a corrupt file is quarantined and
+    /// reported as a typed [`StateError`]. Legacy (pre-envelope)
+    /// files load unverified.
+    pub fn load(path: impl AsRef<Path>) -> Result<PlanCache, StateError> {
+        let path = path.as_ref();
+        match durable::read_state(Self::ARTIFACT, path)? {
+            RawState::Missing => Ok(PlanCache::new()),
+            RawState::Empty => {
+                eprintln!(
+                    "spc5: plan cache {} is empty; starting fresh",
+                    path.display()
+                );
                 Ok(PlanCache::new())
             }
-            Err(e) => Err(e.into()),
+            RawState::Payload { text, .. } => Self::from_json(&text)
+                .map_err(|e| {
+                    durable::quarantined(
+                        Self::ARTIFACT,
+                        path,
+                        StateErrorKind::Malformed(e.to_string()),
+                    )
+                }),
         }
     }
 
-    /// Saves the store to a file.
-    pub fn save(&self, path: impl AsRef<Path>) -> anyhow::Result<()> {
-        std::fs::write(path, format!("{}\n", self.to_json()))?;
-        Ok(())
+    /// Saves the store to a file, envelope-framed and atomically.
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<(), StateError> {
+        durable::save_state(
+            Self::ARTIFACT,
+            path.as_ref(),
+            &format!("{}\n", self.to_json()),
+        )
     }
 
     pub fn len(&self) -> usize {

@@ -49,6 +49,7 @@ pub struct Request<T: Scalar = f64> {
 }
 
 /// The answer to a [`Request`].
+#[derive(Clone, Debug)]
 pub struct Response<T: Scalar = f64> {
     pub id: u64,
     pub y: Vec<T>,

@@ -169,6 +169,10 @@ pub struct RegistryStats {
     pub served: usize,
     /// Total submissions refused across tenants.
     pub rejected: usize,
+    /// Process-wide durable-state degradations (quarantined caches,
+    /// profiles downgraded to baseline, ...) observed so far — see
+    /// [`TenantRegistry::degrade_events`] for the individual events.
+    pub degraded: usize,
 }
 
 /// The multi-tenant host (see module docs). `Sync`: registration and
@@ -193,12 +197,29 @@ impl<T: Scalar> TenantRegistry<T> {
 
     /// An empty registry whose plan cache is loaded from — and
     /// persisted back to — the JSON store at `path` (a missing file is
-    /// an empty cache).
+    /// an empty cache). A *corrupt* store is not fatal either: `load`
+    /// quarantines it, a degradation event is recorded, and the
+    /// registry starts with an empty cache — the next plan miss
+    /// persists a repaired store to the same path.
     pub fn with_cache(
         path: impl Into<PathBuf>,
     ) -> anyhow::Result<TenantRegistry<T>> {
         let path = path.into();
-        let cache = PlanCache::load(&path)?;
+        let cache = match PlanCache::load(&path) {
+            Ok(cache) => cache,
+            Err(e) => {
+                crate::util::durable::record_degrade(
+                    crate::util::durable::DegradeEvent {
+                        artifact: PlanCache::ARTIFACT.into(),
+                        path: path.display().to_string(),
+                        reason: e.to_string(),
+                        fallback: "re-plan and persist repaired cache"
+                            .into(),
+                    },
+                );
+                PlanCache::new()
+            }
+        };
         Ok(TenantRegistry {
             tenants: RwLock::new(HashMap::new()),
             cache: Mutex::new(cache),
@@ -488,7 +509,23 @@ impl<T: Scalar> TenantRegistry<T> {
         per.sort_by(|a, b| a.name.cmp(&b.name));
         let served = per.iter().map(|t| t.stats.served).sum();
         let rejected = per.iter().map(|t| t.stats.rejected).sum();
-        RegistryStats { tenants: per, served, rejected }
+        RegistryStats {
+            tenants: per,
+            served,
+            rejected,
+            degraded: crate::util::durable::degrade_count(),
+        }
+    }
+
+    /// Durable-state degradations observed by this process: every time
+    /// a persisted artifact (plan cache, tune profile, record store)
+    /// failed verification and a fallback was taken, one event was
+    /// recorded here. Operators watch this to learn that state was
+    /// quarantined and rebuilt — the service stayed up, but cold-start
+    /// or tuning quality may have regressed until the repaired store
+    /// was persisted.
+    pub fn degrade_events(&self) -> Vec<crate::util::DegradeEvent> {
+        crate::util::durable::degrade_events()
     }
 
     /// Shuts the tenant down (draining accepted requests) and removes

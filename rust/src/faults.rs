@@ -21,6 +21,13 @@
 //! | `worker`  | inside [`crate::parallel::WorkerPool`] task execution |
 //! |           | (global plan only) — a `panic` here exercises the     |
 //! |           | pool's catch/propagate/stay-usable contract           |
+//! | `io_write`| [`crate::util::durable::save_state`], before the      |
+//! |           | atomic write — a `torn{at}` here leaves a truncated   |
+//! |           | file at the destination, the crash-consistency        |
+//! |           | substrate                                             |
+//! | `io_read` | [`crate::util::durable::read_state`], before the file |
+//! |           | is opened — `panic`/`delay` model a failing or slow   |
+//! |           | state disk                                            |
 //!
 //! Every site check is always compiled (no feature gate); with no
 //! plan installed it is one `Option` test — cheap enough for the
@@ -35,10 +42,15 @@
 //! panic@compute:shard=1,nth=3
 //! delay@recv:ms=5,every=2
 //! panic@compute:shard=0,every=1,times=4;delay@submit:ms=1,prob=0.25
+//! torn@io_write:at=16,nth=0
 //! ```
 //!
-//! - `ACTION` — `panic` or `delay` (`delay` takes `ms=N`, default 1).
-//! - `SITE` — `compute`, `submit`, `recv`, `worker`.
+//! - `ACTION` — `panic`, `delay` (`delay` takes `ms=N`, default 1), or
+//!   `torn` (`io_write` only; takes `at=N` bytes, default 0 — the save
+//!   is cut after `N` bytes of the framed output, emulating a crash
+//!   mid-write of a non-atomic writer).
+//! - `SITE` — `compute`, `submit`, `recv`, `worker`, `io_write`,
+//!   `io_read`.
 //! - `shard=N` — only fire on shard `N` (for `worker`: worker index).
 //! - `request=N` — only fire on request id `N` (`compute`/`submit`).
 //! - `nth=N` — fire on the N-th matching hit only (0-based).
@@ -77,6 +89,10 @@ pub enum Site {
     Recv { shard: usize },
     /// Worker-pool task body on worker `worker`.
     Worker { worker: usize },
+    /// Durable state save path, before the atomic write.
+    IoWrite,
+    /// Durable state load path, before the file is opened.
+    IoRead,
 }
 
 impl Site {
@@ -86,17 +102,20 @@ impl Site {
             Site::Submit { .. } => SiteKind::Submit,
             Site::Recv { .. } => SiteKind::Recv,
             Site::Worker { .. } => SiteKind::Worker,
+            Site::IoWrite => SiteKind::IoWrite,
+            Site::IoRead => SiteKind::IoRead,
         }
     }
 
     /// The shard filter key: shard index for service sites, worker
-    /// index for the pool site.
+    /// index for the pool site. IO sites carry no shard identity.
     fn shard_key(&self) -> usize {
         match *self {
             Site::Compute { shard, .. }
             | Site::Submit { shard, .. }
             | Site::Recv { shard } => shard,
             Site::Worker { worker } => worker,
+            Site::IoWrite | Site::IoRead => 0,
         }
     }
 
@@ -105,7 +124,10 @@ impl Site {
             Site::Compute { request, .. } | Site::Submit { request, .. } => {
                 Some(request)
             }
-            Site::Recv { .. } | Site::Worker { .. } => None,
+            Site::Recv { .. }
+            | Site::Worker { .. }
+            | Site::IoWrite
+            | Site::IoRead => None,
         }
     }
 }
@@ -117,6 +139,8 @@ pub enum SiteKind {
     Submit,
     Recv,
     Worker,
+    IoWrite,
+    IoRead,
 }
 
 impl SiteKind {
@@ -126,8 +150,11 @@ impl SiteKind {
             "submit" => Ok(SiteKind::Submit),
             "recv" => Ok(SiteKind::Recv),
             "worker" => Ok(SiteKind::Worker),
+            "io_write" => Ok(SiteKind::IoWrite),
+            "io_read" => Ok(SiteKind::IoRead),
             other => Err(format!(
-                "unknown fault site {other:?} (compute|submit|recv|worker)"
+                "unknown fault site {other:?} \
+                 (compute|submit|recv|worker|io_write|io_read)"
             )),
         }
     }
@@ -138,6 +165,8 @@ impl SiteKind {
             SiteKind::Submit => "submit",
             SiteKind::Recv => "recv",
             SiteKind::Worker => "worker",
+            SiteKind::IoWrite => "io_write",
+            SiteKind::IoRead => "io_read",
         }
     }
 }
@@ -150,6 +179,10 @@ pub enum Action {
     Panic,
     /// Sleep for the given duration (queue stall / recv delay).
     Delay(Duration),
+    /// Cut the save after `at` bytes, leaving a truncated destination
+    /// file (only meaningful at `io_write`; the writer cooperates via
+    /// [`FaultPlan::check_io`]).
+    Torn { at: u64 },
 }
 
 /// One clause of a plan: a site matcher plus a trigger and an action.
@@ -315,9 +348,17 @@ impl FaultPlan {
                     site,
                     Action::Delay(Duration::from_millis(1)),
                 ),
+                "torn" => {
+                    if site != SiteKind::IoWrite {
+                        return Err(format!(
+                            "clause {clause:?}: torn only applies to io_write"
+                        ));
+                    }
+                    FaultRule::new(site, Action::Torn { at: 0 })
+                }
                 other => {
                     return Err(format!(
-                        "unknown fault action {other:?} (panic|delay)"
+                        "unknown fault action {other:?} (panic|delay|torn)"
                     ))
                 }
             };
@@ -368,6 +409,14 @@ impl FaultPlan {
                         rule.action =
                             Action::Delay(Duration::from_millis(num()?));
                     }
+                    "at" => {
+                        if !matches!(rule.action, Action::Torn { .. }) {
+                            return Err(format!(
+                                "clause {clause:?}: at= only applies to torn"
+                            ));
+                        }
+                        rule.action = Action::Torn { at: num()? };
+                    }
                     other => {
                         return Err(format!(
                             "clause {clause:?}: unknown key {other:?}"
@@ -411,9 +460,10 @@ impl FaultPlan {
         self.seed
     }
 
-    /// Checks `site` against every rule in order; the first rule that
-    /// fires acts (a `panic` action unwinds from here).
-    pub fn fire(&self, site: Site) {
+    /// Checks `site` against every rule in order and returns the
+    /// first firing rule's `(index, action)` without executing it.
+    /// Hit counters advance exactly as for [`FaultPlan::fire`].
+    pub fn decide(&self, site: Site) -> Option<(usize, Action)> {
         for (idx, rule) in self.rules.iter().enumerate() {
             if !rule.matches(&site) {
                 continue;
@@ -422,14 +472,42 @@ impl FaultPlan {
                 continue;
             }
             self.total_fires.fetch_add(1, Ordering::Relaxed);
-            match rule.action {
-                Action::Panic => panic!(
+            return Some((idx, rule.action));
+        }
+        None
+    }
+
+    /// Checks `site` against every rule in order; the first rule that
+    /// fires acts (a `panic` action unwinds from here). A `torn`
+    /// action outside its writer-cooperating site panics too — the
+    /// parser rejects such plans, so reaching it means a
+    /// hand-constructed rule at the wrong site.
+    pub fn fire(&self, site: Site) {
+        if let Some((idx, action)) = self.decide(site) {
+            match action {
+                Action::Panic | Action::Torn { .. } => panic!(
                     "spc5 injected fault: panic@{} ({site:?}, rule {idx})",
-                    rule.site.name()
+                    self.rules[idx].site.name()
                 ),
                 Action::Delay(d) => std::thread::sleep(d),
             }
-            return;
+        }
+    }
+
+    /// IO-site check: executes `panic`/`delay` inline and hands a
+    /// firing `torn{at}` back to the writer as `Some(at)`.
+    pub fn check_io(&self, site: Site) -> Option<u64> {
+        match self.decide(site) {
+            Some((idx, Action::Panic)) => panic!(
+                "spc5 injected fault: panic@{} ({site:?}, rule {idx})",
+                self.rules[idx].site.name()
+            ),
+            Some((_, Action::Delay(d))) => {
+                std::thread::sleep(d);
+                None
+            }
+            Some((_, Action::Torn { at })) => Some(at),
+            None => None,
         }
     }
 }
@@ -491,6 +569,24 @@ pub fn fire_global(site: Site) {
     {
         p.fire(site);
     }
+}
+
+/// One-branch IO-site check against the global plan — the form the
+/// durable state layer uses. Executes `panic`/`delay` inline; a firing
+/// `torn{at}` comes back as `Some(at)` for the writer to honor.
+#[inline]
+pub fn check_io_global(site: Site) -> Option<u64> {
+    if !GLOBAL_ACTIVE.load(Ordering::Relaxed) {
+        ensure_env_plan();
+        if !GLOBAL_ACTIVE.load(Ordering::Relaxed) {
+            return None;
+        }
+    }
+    GLOBAL_PLAN
+        .read()
+        .unwrap_or_else(|e| e.into_inner())
+        .as_ref()
+        .and_then(|p| p.check_io(site))
 }
 
 /// RAII installation of a global plan for the duration of a test.
@@ -567,9 +663,38 @@ mod tests {
             "panic@compute:every=0",
             "panic@compute:ms=3",
             "panic@compute:color=red",
+            "torn@compute:at=4",
+            "torn@io_read:at=4",
+            "panic@io_write:at=4",
         ] {
             assert!(FaultPlan::parse(bad, 0).is_err(), "accepted {bad:?}");
         }
+    }
+
+    #[test]
+    fn parse_accepts_io_sites_and_torn() {
+        let plan = FaultPlan::parse(
+            "torn@io_write:at=16,nth=0;delay@io_read:ms=2",
+            0,
+        )
+        .unwrap();
+        assert_eq!(plan.rules[0].site, SiteKind::IoWrite);
+        assert_eq!(plan.rules[0].action, Action::Torn { at: 16 });
+        assert_eq!(plan.rules[0].nth, Some(0));
+        assert_eq!(plan.rules[1].site, SiteKind::IoRead);
+    }
+
+    #[test]
+    fn check_io_hands_torn_to_the_writer() {
+        let plan = FaultPlan::parse("torn@io_write:at=7,nth=1", 0).unwrap();
+        // Hit 0: rule matches but nth=1 does not trigger.
+        assert_eq!(plan.check_io(Site::IoWrite), None);
+        // Hit 1: fires, and the action comes back instead of panicking.
+        assert_eq!(plan.check_io(Site::IoWrite), Some(7));
+        assert_eq!(plan.check_io(Site::IoWrite), None);
+        // io_read never matches an io_write rule.
+        assert_eq!(plan.check_io(Site::IoRead), None);
+        assert_eq!(plan.fired(), 1);
     }
 
     #[test]

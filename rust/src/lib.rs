@@ -335,7 +335,62 @@
 //! selectors `shard=`, `request=`, `nth=`, `every=`, `prob=`,
 //! `times=` compose, and `prob` draws from the plan seed so a
 //! schedule replays identically. `spc5 serve --chaos` runs the demo
-//! loop under a canned plan as a self-healing smoke test.
+//! loop under a canned plan as a self-healing smoke test. The
+//! durable-state layer adds the `io_write` / `io_read` sites and the
+//! `torn{at}` action (`torn@io_write:at=24,nth=0` tears the first
+//! state write after 24 bytes) — the substrate of the
+//! crash-consistency suite.
+//!
+//! ## Durability & input hardening
+//!
+//! Every JSON artifact the stack persists — [`PlanCache`],
+//! [`predictor::RecordStore`], [`TuneProfile`], a saved [`SpmvPlan`],
+//! and the `BENCH_*.json` reports — goes through one durable state
+//! layer ([`util::durable`]) instead of bare `fs::write`/`fs::read`:
+//!
+//! - **Atomic writes** — [`util::AtomicFile`] writes a temp sibling,
+//!   fsyncs it, and renames it over the destination (fsyncing the
+//!   parent directory best-effort), so a crash mid-save leaves either
+//!   the old state or the new state, never a torn file.
+//! - **Checksummed envelope** — payloads are framed as
+//!   `SPC5STATEv1 <len>\n` + payload + `\nSPC5SUM <fnv1a-64, 16 hex>\n`.
+//!   Loads verify the version, the declared length, and the checksum;
+//!   a file *without* the magic prefix is accepted as trusted-legacy
+//!   (pre-envelope artifacts keep loading unchanged).
+//! - **Quarantine ladder** — a file that fails verification or JSON
+//!   parsing is renamed to `<name>.corrupt-<n>` (evidence preserved,
+//!   path freed for repair) and surfaces as a typed
+//!   [`util::StateError`] naming the artifact, the path, the failure
+//!   kind ([`util::durable::StateErrorKind`]: I/O, wrong version, bad
+//!   envelope, truncation, checksum mismatch, malformed payload) and
+//!   the quarantine location.
+//! - **Graceful degradation** — corruption is an event, not a crash.
+//!   Each caller maps the error to its safe fallback and records a
+//!   [`util::DegradeEvent`] on the process-wide log (surfaced through
+//!   [`TenantRegistry`] stats and printed by `spc5 serve` / `spc5
+//!   tune`):
+//!
+//! | artifact          | missing            | empty / whitespace  | corrupt                           |
+//! |-------------------|--------------------|---------------------|-----------------------------------|
+//! | plan cache        | fresh cache        | warn + fresh cache  | quarantine, re-plan, persist anew |
+//! | record store      | error (named file) | warn + fresh store  | quarantine, fresh / analytic model|
+//! | tune profile      | error (named file) | quarantine + error  | quarantine, baseline tune params  |
+//! | saved plan        | error              | error               | quarantine + error                |
+//! | bench report      | error              | error               | quarantine + error                |
+//!
+//! Untrusted *input* is hardened separately: the MatrixMarket reader
+//! ([`matrix::market`]) is a bounded-memory streaming parser — one
+//! reusable line buffer capped at [`matrix::market::MAX_LINE`] bytes,
+//! preallocation from header claims capped, overflow-checked index
+//! arithmetic, non-finite value rejection — and every malformed input
+//! fails with a line-numbered `MatrixError::Market` (the CLI exits
+//! nonzero with `<file>: line <n>: <reason>`), never a panic. The
+//! corruption-differential suite (`tests/durability.rs`) flips every
+//! byte of every artifact and proves detection + quarantine + a
+//! bit-identical cold start; the mutation corpus
+//! (`tests/market_mutations.rs`) does the same for the parser. The
+//! `durable` ablation in `kernel_micro` pins the envelope overhead
+//! against raw I/O (`BENCH_9.json`).
 //!
 //! ## Modules
 //!
@@ -413,3 +468,4 @@ pub use kernels::{default_tune, KernelKind, TuneParams, VARIANT_TABLE};
 pub use matrix::{Coo, Csr};
 pub use scalar::Scalar;
 pub use tuner::TuneProfile;
+pub use util::{AtomicFile, DegradeEvent, StateError};

@@ -103,8 +103,14 @@ fn load_matrix(a: &Args) -> anyhow::Result<(String, Csr)> {
             .ok_or_else(|| anyhow::anyhow!("unknown suite matrix '{name}'"))?;
         Ok((sm.name.to_string(), sm.csr))
     } else if let Some(path) = a.get("mtx") {
-        let coo = market::read_file(path)?;
-        Ok((path.to_string(), coo.to_csr()?))
+        // Parse errors carry the file so the one-line CLI error names
+        // exactly what was malformed ("FILE: matrix market parse error
+        // at line N: ...").
+        let coo = market::read_file(path)
+            .map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+        let csr =
+            coo.to_csr().map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+        Ok((path.to_string(), csr))
     } else {
         anyhow::bail!("need --matrix NAME or --mtx FILE (see `spc5 stats --set A` for names)")
     }
@@ -616,15 +622,17 @@ fn cmd_serve(a: &Args) -> anyhow::Result<()> {
     // --chaos: a canned deterministic shard panic (overridable with
     // SPC5_FAULTS) exercising the supervised-restart path end to end.
     let faults = if a.has("chaos") {
-        Some(spc5::faults::global().unwrap_or_else(|| {
-            std::sync::Arc::new(
+        let plan = match spc5::faults::global() {
+            Some(plan) => plan,
+            None => std::sync::Arc::new(
                 spc5::faults::FaultPlan::parse(
                     "panic@compute:shard=0,nth=3",
                     0x5eed,
                 )
-                .expect("canned chaos plan"),
-            )
-        }))
+                .map_err(|e| anyhow::anyhow!("canned chaos plan: {e}"))?,
+            ),
+        };
+        Some(plan)
     } else {
         None
     };
@@ -722,6 +730,12 @@ fn cmd_serve(a: &Args) -> anyhow::Result<()> {
             anyhow::bail!("chaos fired but no shard restart was recorded");
         }
     }
+    // Durable-state degradations (quarantined caches, profiles dropped
+    // to baseline) are part of the serving report: the operator must
+    // see that state was rebuilt even though the service stayed up.
+    for e in spc5::util::durable::degrade_events() {
+        println!("  degraded: {e}");
+    }
     service.shutdown();
     Ok(())
 }
@@ -774,8 +788,25 @@ fn cmd_tune(a: &Args) -> anyhow::Result<()> {
         .map(std::path::PathBuf::from)
         .unwrap_or_else(bench::records_path);
     let n = records.len();
+    // A corrupt store must not lose a finished sweep: `load`
+    // quarantines it, the downgrade is recorded, and the sweep records
+    // seed a fresh store at the same path.
     let mut store = if rec_path.exists() {
-        RecordStore::load(&rec_path)?
+        match RecordStore::load(&rec_path) {
+            Ok(store) => store,
+            Err(e) if e.is_missing() => RecordStore::new(),
+            Err(e) => {
+                spc5::util::durable::record_degrade(
+                    spc5::util::DegradeEvent {
+                        artifact: RecordStore::ARTIFACT.into(),
+                        path: rec_path.display().to_string(),
+                        reason: e.to_string(),
+                        fallback: "re-seed store from this sweep".into(),
+                    },
+                );
+                RecordStore::new()
+            }
+        }
     } else {
         RecordStore::new()
     };
@@ -784,6 +815,9 @@ fn cmd_tune(a: &Args) -> anyhow::Result<()> {
     }
     store.save(&rec_path)?;
     eprintln!("merged {n} sweep records into {}", rec_path.display());
+    for e in spc5::util::durable::degrade_events() {
+        eprintln!("degraded: {e}");
+    }
     Ok(())
 }
 

@@ -3,14 +3,38 @@
 //! Supports the `matrix coordinate (real|integer|pattern)
 //! (general|symmetric|skew-symmetric)` subset — everything the
 //! SuiteSparse collection uses for the paper's benchmark sets — plus
-//! `array real general` for small dense inputs. Parsing is
-//! failure-injection tested (truncated files, bad counts, out-of-range
-//! indices).
+//! `array real general` for small dense inputs.
+//!
+//! The reader is a **bounded-memory streaming parser** hardened
+//! against adversarial input (a tenant upload is untrusted):
+//!
+//! - one reusable line buffer, capped at [`MAX_LINE`] bytes — no
+//!   input can force unbounded buffering;
+//! - up-front allocation from header claims is capped at
+//!   [`PREALLOC_CAP`] entries — a bogus `4000000000 4000000000`
+//!   size line cannot OOM the process;
+//! - every arithmetic step on header-supplied numbers is
+//!   overflow-checked, indices are validated against both the
+//!   declared dimensions and the `u32` storage range of
+//!   [`Coo`], and non-finite values are rejected;
+//! - the entry count is checked against the header *while
+//!   streaming* (excess entries fail at their line, not at EOF);
+//! - symmetric / skew-symmetric files must store the lower
+//!   triangle only (skew excludes the diagonal), so the mirror
+//!   expansion is bounded by construction.
+//!
+//! Every failure is a line-numbered [`MatrixError::Market`]; the
+//! parser never panics, the mutation-corpus tests pin that down.
 
 use super::{Coo, MatrixError, Result};
 use crate::scalar::Scalar;
 use std::io::{BufRead, BufReader, Read, Write};
 use std::path::Path;
+
+/// Longest accepted input line, in bytes.
+pub const MAX_LINE: usize = 1 << 20;
+/// Cap on entries/values reserved up front from header claims.
+pub const PREALLOC_CAP: usize = 1 << 20;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 enum Field {
@@ -30,20 +54,137 @@ fn err(line: usize, msg: impl Into<String>) -> MatrixError {
     MatrixError::Market { line, msg: msg.into() }
 }
 
+/// Streaming line reader over a [`BufRead`]: one reusable buffer,
+/// hard length cap, physical line numbering from 1.
+struct LineStream<R: Read> {
+    inner: BufReader<R>,
+    buf: Vec<u8>,
+    lineno: usize,
+}
+
+impl<R: Read> LineStream<R> {
+    fn new(reader: R) -> LineStream<R> {
+        LineStream {
+            inner: BufReader::new(reader),
+            buf: Vec::new(),
+            lineno: 0,
+        }
+    }
+
+    /// Reads the next physical line into the reusable buffer (without
+    /// the newline). `Ok(false)` at EOF. A line longer than
+    /// [`MAX_LINE`] is a typed error, not unbounded buffering.
+    fn fill_line(&mut self) -> Result<bool> {
+        self.buf.clear();
+        let started = loop {
+            let chunk = self.inner.fill_buf().map_err(MatrixError::Io)?;
+            if chunk.is_empty() {
+                break !self.buf.is_empty();
+            }
+            match chunk.iter().position(|&b| b == b'\n') {
+                Some(pos) => {
+                    if self.buf.len() + pos > MAX_LINE {
+                        self.lineno += 1;
+                        return Err(err(
+                            self.lineno,
+                            format!("line longer than {MAX_LINE} bytes"),
+                        ));
+                    }
+                    self.buf.extend_from_slice(&chunk[..pos]);
+                    self.inner.consume(pos + 1);
+                    break true;
+                }
+                None => {
+                    if self.buf.len() + chunk.len() > MAX_LINE {
+                        self.lineno += 1;
+                        return Err(err(
+                            self.lineno,
+                            format!("line longer than {MAX_LINE} bytes"),
+                        ));
+                    }
+                    self.buf.extend_from_slice(chunk);
+                    let n = chunk.len();
+                    self.inner.consume(n);
+                }
+            }
+        };
+        if started {
+            self.lineno += 1;
+        }
+        Ok(started)
+    }
+
+    /// The current line as trimmed UTF-8 (typed error on bad bytes).
+    fn line(&self) -> Result<&str> {
+        std::str::from_utf8(&self.buf)
+            .map(|s| s.trim())
+            .map_err(|_| err(self.lineno, "line is not valid UTF-8"))
+    }
+
+    /// Advances to the next non-empty, non-comment line; `Ok(false)`
+    /// at EOF. The line is then available through [`Self::line`].
+    fn next_data(&mut self) -> Result<bool> {
+        loop {
+            if !self.fill_line()? {
+                return Ok(false);
+            }
+            let t = self.line()?;
+            if !t.is_empty() && !t.starts_with('%') {
+                return Ok(true);
+            }
+        }
+    }
+}
+
+/// Parses a dimension token: a positive-fitting integer no larger
+/// than `u32::MAX` (the [`Coo`] triplet index range — anything larger
+/// would silently truncate).
+fn parse_dim(tok: &str, line: usize, what: &str) -> Result<usize> {
+    let n: u64 = tok
+        .parse()
+        .map_err(|_| err(line, format!("bad {what} '{tok}'")))?;
+    if n > u32::MAX as u64 {
+        return Err(err(
+            line,
+            format!("{what} {n} exceeds the supported maximum {}", u32::MAX),
+        ));
+    }
+    Ok(n as usize)
+}
+
+/// Parses a value token, rejecting non-finite results (NaN, explicit
+/// infinities, and overflowing literals like `1e999`).
+fn parse_value(tok: &str, line: usize) -> Result<f64> {
+    let v: f64 = tok
+        .parse()
+        .map_err(|_| err(line, format!("bad value '{tok}'")))?;
+    if !v.is_finite() {
+        return Err(err(line, format!("non-finite value '{tok}'")));
+    }
+    Ok(v)
+}
+
 /// Reads a MatrixMarket stream into COO at any precision (values are
-/// parsed as f64 and converted through [`Scalar::from_f64`]).
+/// parsed as f64 and converted through [`Scalar::from_f64`]). See the
+/// module docs for the hardening contract: bounded memory,
+/// line-numbered typed errors, no panics on adversarial input.
 pub fn read_coo<T: Scalar, R: Read>(reader: R) -> Result<Coo<T>> {
-    let mut lines = BufReader::new(reader).lines().enumerate();
+    let mut lines = LineStream::new(reader);
 
     // Header line.
-    let (_, header) = lines
-        .next()
-        .ok_or_else(|| err(1, "empty file"))
-        .and_then(|(i, l)| l.map(|l| (i, l)).map_err(MatrixError::Io))?;
-    let h: Vec<String> =
-        header.split_whitespace().map(|t| t.to_ascii_lowercase()).collect();
+    if !lines.fill_line()? {
+        return Err(err(1, "empty file"));
+    }
+    let h: Vec<String> = lines
+        .line()?
+        .split_whitespace()
+        .map(|t| t.to_ascii_lowercase())
+        .collect();
     if h.len() < 4 || h[0] != "%%matrixmarket" || h[1] != "matrix" {
         return Err(err(1, "not a MatrixMarket matrix header"));
+    }
+    if h.len() > 5 {
+        return Err(err(1, "too many header fields"));
     }
     let coordinate = match h[2].as_str() {
         "coordinate" => true,
@@ -65,71 +206,108 @@ pub fn read_coo<T: Scalar, R: Read>(reader: R) -> Result<Coo<T>> {
     if !coordinate && field == Field::Pattern {
         return Err(err(1, "array+pattern is not a valid combination"));
     }
+    if !coordinate && symmetry != Symmetry::General {
+        return Err(err(1, "array format only supports general symmetry"));
+    }
 
     // Skip comments, find the size line.
-    let mut size_line = None;
-    let mut lineno = 1;
-    for (i, l) in &mut lines {
-        lineno = i + 1;
-        let l = l.map_err(MatrixError::Io)?;
-        let t = l.trim();
-        if t.is_empty() || t.starts_with('%') {
-            continue;
-        }
-        size_line = Some(t.to_string());
-        break;
+    if !lines.next_data()? {
+        return Err(err(lines.lineno.max(1), "missing size line"));
     }
-    let size_line = size_line.ok_or_else(|| err(lineno, "missing size line"))?;
-    let dims: Vec<usize> = size_line
-        .split_whitespace()
-        .map(|t| t.parse::<usize>().map_err(|_| err(lineno, "bad size entry")))
-        .collect::<Result<_>>()?;
+    let lineno = lines.lineno;
+    let dims: Vec<String> =
+        lines.line()?.split_whitespace().map(|t| t.to_string()).collect();
 
     if coordinate {
         if dims.len() != 3 {
             return Err(err(lineno, "coordinate size line needs 3 numbers"));
         }
-        let (rows, cols, nnz) = (dims[0], dims[1], dims[2]);
+        let rows = parse_dim(&dims[0], lineno, "row count")?;
+        let cols = parse_dim(&dims[1], lineno, "column count")?;
+        let nnz: u64 = dims[2]
+            .parse()
+            .map_err(|_| err(lineno, format!("bad entry count '{}'", dims[2])))?;
+        // Sanity-bound the claim before trusting it anywhere: a
+        // general file cannot hold more distinct entries than the
+        // dense size (symmetric files store at most the lower
+        // triangle, which is smaller still).
+        if nnz > rows as u64 * cols as u64 {
+            return Err(err(
+                lineno,
+                format!("entry count {nnz} exceeds rows*cols"),
+            ));
+        }
+        let nnz = nnz as usize;
         let mut coo = Coo::new(rows, cols);
+        // Mirror expansion at most doubles; cap what the header alone
+        // can make us allocate.
+        coo.entries.reserve(nnz.min(PREALLOC_CAP));
         let mut seen = 0usize;
-        for (i, l) in &mut lines {
-            let lno = i + 1;
-            let l = l.map_err(MatrixError::Io)?;
-            let t = l.trim();
-            if t.is_empty() || t.starts_with('%') {
-                continue;
+        while lines.next_data()? {
+            let lno = lines.lineno;
+            if seen == nnz {
+                return Err(err(
+                    lno,
+                    format!("more entries than the declared {nnz}"),
+                ));
             }
-            let toks: Vec<&str> = t.split_whitespace().collect();
+            let t = lines.line()?;
+            let mut toks = t.split_whitespace();
             let need = if field == Field::Pattern { 2 } else { 3 };
-            if toks.len() < need {
-                return Err(err(lno, "too few fields in entry"));
+            let mut take = || {
+                toks.next().ok_or_else(|| {
+                    err(lno, format!("entry needs {need} fields"))
+                })
+            };
+            let r = parse_dim(take()?, lno, "row index")?;
+            let c = parse_dim(take()?, lno, "col index")?;
+            let v = match field {
+                Field::Pattern => 1.0,
+                _ => parse_value(take()?, lno)?,
+            };
+            if toks.next().is_some() {
+                return Err(err(
+                    lno,
+                    format!("entry has more than {need} fields"),
+                ));
             }
-            let r: usize =
-                toks[0].parse().map_err(|_| err(lno, "bad row index"))?;
-            let c: usize =
-                toks[1].parse().map_err(|_| err(lno, "bad col index"))?;
             if r < 1 || r > rows || c < 1 || c > cols {
                 return Err(err(lno, format!("index ({r},{c}) out of range")));
             }
-            let v = match field {
-                Field::Pattern => 1.0,
-                _ => toks[2]
-                    .parse::<f64>()
-                    .map_err(|_| err(lno, "bad value"))?,
-            };
+            match symmetry {
+                Symmetry::Symmetric if r < c => {
+                    return Err(err(
+                        lno,
+                        format!(
+                            "symmetric file must store the lower triangle: \
+                             entry ({r},{c})"
+                        ),
+                    ))
+                }
+                Symmetry::SkewSymmetric if r <= c => {
+                    return Err(err(
+                        lno,
+                        format!(
+                            "skew-symmetric file must store the strict lower \
+                             triangle: entry ({r},{c})"
+                        ),
+                    ))
+                }
+                _ => {}
+            }
             let v = T::from_f64(v);
             coo.push(r - 1, c - 1, v);
             match symmetry {
                 Symmetry::General => {}
                 Symmetry::Symmetric if r != c => coo.push(c - 1, r - 1, v),
-                Symmetry::SkewSymmetric if r != c => coo.push(c - 1, r - 1, -v),
+                Symmetry::SkewSymmetric => coo.push(c - 1, r - 1, -v),
                 _ => {}
             }
             seen += 1;
         }
         if seen != nnz {
             return Err(err(
-                lineno,
+                lines.lineno.max(lineno),
                 format!("entry count mismatch: header says {nnz}, found {seen}"),
             ));
         }
@@ -138,25 +316,28 @@ pub fn read_coo<T: Scalar, R: Read>(reader: R) -> Result<Coo<T>> {
         if dims.len() != 2 {
             return Err(err(lineno, "array size line needs 2 numbers"));
         }
-        let (rows, cols) = (dims[0], dims[1]);
-        let mut vals = Vec::with_capacity(rows * cols);
-        for (i, l) in &mut lines {
-            let lno = i + 1;
-            let l = l.map_err(MatrixError::Io)?;
-            let t = l.trim();
-            if t.is_empty() || t.starts_with('%') {
-                continue;
-            }
-            for tok in t.split_whitespace() {
-                vals.push(
-                    tok.parse::<f64>().map_err(|_| err(lno, "bad value"))?,
-                );
+        let rows = parse_dim(&dims[0], lineno, "row count")?;
+        let cols = parse_dim(&dims[1], lineno, "column count")?;
+        let total = rows.checked_mul(cols).ok_or_else(|| {
+            err(lineno, "rows*cols overflows the addressable size")
+        })?;
+        let mut vals: Vec<f64> = Vec::with_capacity(total.min(PREALLOC_CAP));
+        while lines.next_data()? {
+            let lno = lines.lineno;
+            for tok in lines.line()?.split_whitespace() {
+                if vals.len() == total {
+                    return Err(err(
+                        lno,
+                        format!("more values than the declared {total}"),
+                    ));
+                }
+                vals.push(parse_value(tok, lno)?);
             }
         }
-        if vals.len() != rows * cols {
+        if vals.len() != total {
             return Err(err(
-                lineno,
-                format!("expected {} values, found {}", rows * cols, vals.len()),
+                lines.lineno.max(lineno),
+                format!("expected {total} values, found {}", vals.len()),
             ));
         }
         let mut coo = Coo::new(rows, cols);

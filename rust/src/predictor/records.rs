@@ -6,6 +6,7 @@
 //! invocations.
 
 use crate::kernels::{KernelKind, TuneParams};
+use crate::util::durable::{self, RawState, StateError, StateErrorKind};
 use crate::util::json::Json;
 use std::path::Path;
 
@@ -175,15 +176,49 @@ impl RecordStore {
         Ok(store)
     }
 
-    /// Saves to a file.
-    pub fn save(&self, path: impl AsRef<Path>) -> anyhow::Result<()> {
-        std::fs::write(path, self.to_json())?;
-        Ok(())
+    /// Artifact label used in [`StateError`] and degradation events.
+    pub const ARTIFACT: &'static str = "record-store";
+
+    /// Saves to a file, envelope-framed and atomically (see
+    /// [`crate::util::durable`]).
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<(), StateError> {
+        durable::save_state(Self::ARTIFACT, path.as_ref(), &self.to_json())
     }
 
-    /// Loads from a file.
-    pub fn load(path: impl AsRef<Path>) -> anyhow::Result<Self> {
-        Self::from_json(&std::fs::read_to_string(path)?)
+    /// Loads from a file. A missing file is an error (callers that
+    /// want missing-as-fresh check first); an empty or
+    /// whitespace-only file is a fresh store with a warning; a
+    /// corrupt file is quarantined and reported as a typed
+    /// [`StateError`] — callers degrade to the analytic model.
+    /// Legacy (pre-envelope) files load unverified.
+    pub fn load(path: impl AsRef<Path>) -> Result<Self, StateError> {
+        let path = path.as_ref();
+        match durable::read_state(Self::ARTIFACT, path)? {
+            RawState::Missing => Err(StateError {
+                artifact: Self::ARTIFACT,
+                path: path.to_path_buf(),
+                kind: StateErrorKind::Io(std::io::Error::new(
+                    std::io::ErrorKind::NotFound,
+                    "no such file",
+                )),
+                quarantined_to: None,
+            }),
+            RawState::Empty => {
+                eprintln!(
+                    "spc5: record store {} is empty; starting fresh",
+                    path.display()
+                );
+                Ok(RecordStore::new())
+            }
+            RawState::Payload { text, .. } => Self::from_json(&text)
+                .map_err(|e| {
+                    durable::quarantined(
+                        Self::ARTIFACT,
+                        path,
+                        StateErrorKind::Malformed(e.to_string()),
+                    )
+                }),
+        }
     }
 }
 

@@ -30,6 +30,7 @@ use crate::kernels::{spmv_block, KernelKind, TuneParams, VARIANT_TABLE};
 use crate::matrix::{suite, Csr};
 use crate::parallel::{ParallelSpmv, ParallelStrategy};
 use crate::predictor::PerfRecord;
+use crate::util::durable::{self, RawState, StateError, StateErrorKind};
 use crate::util::json::Json;
 use crate::util::timer::{mean_of_runs, spmv_gflops};
 use std::path::Path;
@@ -197,20 +198,47 @@ impl TuneProfile {
         Ok(TuneProfile { machine, entries })
     }
 
-    /// Saves to a file.
-    pub fn save(&self, path: impl AsRef<Path>) -> anyhow::Result<()> {
-        let path = path.as_ref();
-        std::fs::write(path, self.to_json())
-            .map_err(|e| anyhow::anyhow!("write {}: {e}", path.display()))
+    /// Artifact label used in [`StateError`] and degradation events.
+    pub const ARTIFACT: &'static str = "tune-profile";
+
+    /// Saves to a file, envelope-framed and atomically (see
+    /// [`crate::util::durable`]).
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<(), StateError> {
+        durable::save_state(Self::ARTIFACT, path.as_ref(), &self.to_json())
     }
 
-    /// Loads from a file.
-    pub fn load(path: impl AsRef<Path>) -> anyhow::Result<Self> {
+    /// Loads from a file. A missing file is a hard error (a typo'd
+    /// `--tune-profile` path must not silently run untuned); an empty
+    /// or corrupt file is quarantined and reported as a typed
+    /// [`StateError`] — plan-time callers degrade to the baseline
+    /// variant with a recorded downgrade. Legacy (pre-envelope) files
+    /// load unverified.
+    pub fn load(path: impl AsRef<Path>) -> Result<Self, StateError> {
         let path = path.as_ref();
-        let text = std::fs::read_to_string(path).map_err(|e| {
-            anyhow::anyhow!("read tune profile {}: {e}", path.display())
-        })?;
-        Self::from_json(&text)
+        match durable::read_state(Self::ARTIFACT, path)? {
+            RawState::Missing => Err(StateError {
+                artifact: Self::ARTIFACT,
+                path: path.to_path_buf(),
+                kind: StateErrorKind::Io(std::io::Error::new(
+                    std::io::ErrorKind::NotFound,
+                    "no such file",
+                )),
+                quarantined_to: None,
+            }),
+            RawState::Empty => Err(durable::quarantined(
+                Self::ARTIFACT,
+                path,
+                StateErrorKind::Malformed("file is empty".into()),
+            )),
+            RawState::Payload { text, .. } => Self::from_json(&text)
+                .map_err(|e| {
+                    durable::quarantined(
+                        Self::ARTIFACT,
+                        path,
+                        StateErrorKind::Malformed(e.to_string()),
+                    )
+                }),
+        }
     }
 }
 

@@ -1,0 +1,616 @@
+//! Durable persistence: atomic writes, checksummed envelopes,
+//! quarantine, and the crate-wide degradation log.
+//!
+//! Every JSON artifact the serving stack persists (`PlanCache`,
+//! `RecordStore`, `TuneProfile`, saved `SpmvPlan`s, bench reports)
+//! goes through this module, which provides four guarantees:
+//!
+//! 1. **Atomic writes** — [`AtomicFile`] writes to a temp sibling,
+//!    fsyncs, then renames over the destination, so a crash mid-save
+//!    leaves either the old file or the new file, never a torn mix.
+//! 2. **Checksummed envelope** — payloads are framed by a versioned
+//!    header (`SPC5STATEv1 <len>`) and an FNV-1a footer
+//!    (`SPC5SUM <hex>`), so any single corrupted byte is detected at
+//!    load instead of surfacing as a confusing JSON error (or worse,
+//!    silently wrong state). Files *without* the magic are treated as
+//!    trusted-legacy and parsed as bare payload, so pre-envelope
+//!    artifacts keep loading.
+//! 3. **Quarantine** — a file that fails envelope or payload
+//!    validation is renamed to `<name>.corrupt-<n>` (first free `n`),
+//!    preserving the evidence while guaranteeing the next cold start
+//!    does not trip over the same corpse.
+//! 4. **Observable degradation** — callers that fall back (re-plan,
+//!    baseline tune, analytic model) record a [`DegradeEvent`] in a
+//!    process-global log surfaced through `TenantRegistry` stats and
+//!    the `spc5 serve` / `spc5 tune` CLIs.
+//!
+//! The write path checks the `io_write` fault site and honors the
+//! `torn{at}` action (see [`crate::faults`]): a torn write emulates a
+//! crash mid-write of a *non-atomic* writer by leaving exactly the
+//! first `at` bytes at the destination — the deterministic substrate
+//! the crash-consistency suite replays.
+
+use std::fmt;
+use std::io::{self, Read, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::faults::{self, Site};
+
+/// Envelope magic. The version suffix is parsed separately so a
+/// future `SPC5STATEv2` is rejected as [`StateErrorKind::WrongVersion`]
+/// rather than mistaken for a legacy bare payload.
+pub const MAGIC: &str = "SPC5STATE";
+/// Current envelope format version.
+pub const VERSION: u32 = 1;
+const FOOTER_MAGIC: &str = "SPC5SUM";
+
+/// FNV-1a over `bytes` — the same hash `MatrixFingerprint` uses, so
+/// the crate carries exactly one checksum primitive.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+// --- Typed errors -------------------------------------------------------
+
+/// Why a persisted artifact failed to load or save.
+#[derive(Debug)]
+pub enum StateErrorKind {
+    /// Filesystem error (missing file, permissions, injected torn
+    /// write). `is_missing` distinguishes not-found so callers can
+    /// keep "missing profile" a hard error while degrading on
+    /// corruption.
+    Io(io::Error),
+    /// File starts with the envelope magic but an unsupported version.
+    WrongVersion(String),
+    /// Envelope header present but unparsable (corrupted length field
+    /// or footer framing).
+    BadEnvelope(String),
+    /// Fewer payload/footer bytes than the header promised.
+    Truncated { expected: usize, got: usize },
+    /// Payload bytes do not hash to the recorded checksum.
+    ChecksumMismatch { expected: u64, got: u64 },
+    /// Envelope (or legacy file) verified but the payload failed the
+    /// artifact's own parser (malformed JSON, wrong schema version).
+    Malformed(String),
+}
+
+/// A typed load/save failure for a persisted artifact: which artifact,
+/// which file, what went wrong, and where the corpse was quarantined
+/// (when it was).
+#[derive(Debug)]
+pub struct StateError {
+    /// Artifact class, e.g. `"plan-cache"`, `"tune-profile"`.
+    pub artifact: &'static str,
+    /// The file involved.
+    pub path: PathBuf,
+    pub kind: StateErrorKind,
+    /// Where the corrupt file was moved, when quarantine succeeded.
+    pub quarantined_to: Option<PathBuf>,
+}
+
+impl StateError {
+    fn new(
+        artifact: &'static str,
+        path: &Path,
+        kind: StateErrorKind,
+    ) -> StateError {
+        StateError {
+            artifact,
+            path: path.to_path_buf(),
+            kind,
+            quarantined_to: None,
+        }
+    }
+
+    /// True when the underlying cause is a missing file (callers that
+    /// treat missing-as-fresh branch on this, not on corruption).
+    pub fn is_missing(&self) -> bool {
+        matches!(&self.kind, StateErrorKind::Io(e)
+            if e.kind() == io::ErrorKind::NotFound)
+    }
+}
+
+impl fmt::Display for StateError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{} {}: ", self.artifact, self.path.display())?;
+        match &self.kind {
+            StateErrorKind::Io(e) => write!(f, "{e}")?,
+            StateErrorKind::WrongVersion(v) => {
+                write!(f, "unsupported envelope version {v:?} (have v{VERSION})")?
+            }
+            StateErrorKind::BadEnvelope(msg) => {
+                write!(f, "corrupt envelope: {msg}")?
+            }
+            StateErrorKind::Truncated { expected, got } => write!(
+                f,
+                "truncated: header promises {expected} payload bytes, {got} present"
+            )?,
+            StateErrorKind::ChecksumMismatch { expected, got } => write!(
+                f,
+                "checksum mismatch: recorded {expected:016x}, computed {got:016x}"
+            )?,
+            StateErrorKind::Malformed(msg) => write!(f, "{msg}")?,
+        }
+        if let Some(q) = &self.quarantined_to {
+            write!(f, " (quarantined to {})", q.display())?;
+        }
+        Ok(())
+    }
+}
+
+impl std::error::Error for StateError {}
+
+/// `Result` specialized to [`StateError`] — converts into the crate's
+/// `anyhow::Result` through `?`.
+pub type Result<T> = std::result::Result<T, StateError>;
+
+// --- Envelope -----------------------------------------------------------
+
+/// Frames `payload` in the versioned checksummed envelope:
+///
+/// ```text
+/// SPC5STATEv1 <payload-len>\n
+/// <payload bytes>
+/// SPC5SUM <fnv1a-of-payload, 16 hex digits>\n
+/// ```
+pub fn wrap(payload: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(payload.len() + 64);
+    out.extend_from_slice(
+        format!("{MAGIC}v{VERSION} {}\n", payload.len()).as_bytes(),
+    );
+    out.extend_from_slice(payload);
+    out.extend_from_slice(
+        format!("\n{FOOTER_MAGIC} {:016x}\n", fnv1a(payload)).as_bytes(),
+    );
+    out
+}
+
+/// A verified payload plus whether it came from a legacy (unwrapped)
+/// file.
+pub struct Unwrapped {
+    pub payload: Vec<u8>,
+    pub legacy: bool,
+}
+
+/// Verifies the envelope and returns the payload. Input without the
+/// magic prefix is trusted-legacy: returned whole, unverified.
+pub fn unwrap(bytes: &[u8]) -> std::result::Result<Unwrapped, StateErrorKind> {
+    if !bytes.starts_with(MAGIC.as_bytes()) {
+        return Ok(Unwrapped { payload: bytes.to_vec(), legacy: true });
+    }
+    let nl = bytes.iter().position(|&b| b == b'\n').ok_or_else(|| {
+        StateErrorKind::BadEnvelope("header line missing newline".into())
+    })?;
+    let header = std::str::from_utf8(&bytes[..nl]).map_err(|_| {
+        StateErrorKind::BadEnvelope("header is not UTF-8".into())
+    })?;
+    let (tag, len_s) = header.split_once(' ').ok_or_else(|| {
+        StateErrorKind::BadEnvelope("header missing length field".into())
+    })?;
+    let version = &tag[MAGIC.len()..];
+    if version != format!("v{VERSION}") {
+        return Err(StateErrorKind::WrongVersion(version.to_string()));
+    }
+    let len: usize = len_s.trim().parse().map_err(|_| {
+        StateErrorKind::BadEnvelope(format!(
+            "payload length {len_s:?} is not an integer"
+        ))
+    })?;
+    let rest = &bytes[nl + 1..];
+    if rest.len() < len {
+        return Err(StateErrorKind::Truncated {
+            expected: len,
+            got: rest.len(),
+        });
+    }
+    let payload = &rest[..len];
+    let footer = &rest[len..];
+    // Footer: `\nSPC5SUM <16 hex>\n` (trailing newline optional so a
+    // final-byte truncation still reports *which* check failed).
+    let footer = std::str::from_utf8(footer).map_err(|_| {
+        StateErrorKind::BadEnvelope("footer is not UTF-8".into())
+    })?;
+    let footer = footer.strip_prefix('\n').ok_or_else(|| {
+        StateErrorKind::BadEnvelope("footer missing separator".into())
+    })?;
+    let sum_s = footer
+        .strip_prefix(FOOTER_MAGIC)
+        .and_then(|s| s.strip_prefix(' '))
+        .ok_or_else(|| {
+            StateErrorKind::BadEnvelope("footer magic missing".into())
+        })?;
+    // The final newline is optional (a last-byte truncation still
+    // verifies), but the digits are exactly 16 lowercase hex — any
+    // looser and single-bit flips of the checksum text itself (case
+    // flips, whitespace lookalikes) could slip through verification.
+    let sum_s = sum_s.strip_suffix('\n').unwrap_or(sum_s);
+    if sum_s.len() != 16
+        || !sum_s
+            .bytes()
+            .all(|b| b.is_ascii_digit() || (b'a'..=b'f').contains(&b))
+    {
+        return Err(StateErrorKind::BadEnvelope(format!(
+            "footer checksum {sum_s:?} is not 16 lowercase hex digits"
+        )));
+    }
+    let expected = u64::from_str_radix(sum_s, 16).map_err(|_| {
+        StateErrorKind::BadEnvelope(format!(
+            "footer checksum {sum_s:?} is not hex"
+        ))
+    })?;
+    let got = fnv1a(payload);
+    if got != expected {
+        return Err(StateErrorKind::ChecksumMismatch { expected, got });
+    }
+    Ok(Unwrapped { payload: payload.to_vec(), legacy: false })
+}
+
+// --- Atomic writes ------------------------------------------------------
+
+static TMP_COUNTER: AtomicU64 = AtomicU64::new(0);
+
+/// Crash-safe file replacement: bytes land in a temp sibling, are
+/// fsynced, and the sibling is renamed over the destination. The
+/// parent directory is fsynced best-effort so the rename itself is
+/// durable.
+pub struct AtomicFile {
+    dest: PathBuf,
+}
+
+impl AtomicFile {
+    pub fn new(dest: &Path) -> AtomicFile {
+        AtomicFile { dest: dest.to_path_buf() }
+    }
+
+    /// Writes `bytes` atomically to the destination.
+    pub fn write(&self, bytes: &[u8]) -> io::Result<()> {
+        let name = self
+            .dest
+            .file_name()
+            .and_then(|n| n.to_str())
+            .unwrap_or("state");
+        let tmp = self.dest.with_file_name(format!(
+            ".{name}.tmp-{}-{}",
+            std::process::id(),
+            TMP_COUNTER.fetch_add(1, Ordering::Relaxed),
+        ));
+        let result = (|| {
+            let mut f = std::fs::File::create(&tmp)?;
+            f.write_all(bytes)?;
+            f.sync_all()?;
+            std::fs::rename(&tmp, &self.dest)?;
+            if let Some(dir) = self.dest.parent() {
+                // Directory fsync is advisory: not all filesystems
+                // allow opening a directory for sync.
+                if let Ok(d) = std::fs::File::open(dir) {
+                    let _ = d.sync_all();
+                }
+            }
+            Ok(())
+        })();
+        if result.is_err() {
+            let _ = std::fs::remove_file(&tmp);
+        }
+        result
+    }
+}
+
+// --- Quarantine ---------------------------------------------------------
+
+/// Renames `path` to the first free `<name>.corrupt-<n>` sibling and
+/// returns the destination. The original file is preserved as
+/// evidence; the original path is freed for a rebuilt replacement.
+pub fn quarantine(path: &Path) -> io::Result<PathBuf> {
+    let name = path
+        .file_name()
+        .and_then(|n| n.to_str())
+        .unwrap_or("state")
+        .to_string();
+    for n in 0..10_000u32 {
+        let dest = path.with_file_name(format!("{name}.corrupt-{n}"));
+        if !dest.exists() {
+            std::fs::rename(path, &dest)?;
+            return Ok(dest);
+        }
+    }
+    Err(io::Error::new(
+        io::ErrorKind::AlreadyExists,
+        "10000 quarantine slots already taken",
+    ))
+}
+
+// --- Load / save --------------------------------------------------------
+
+/// What `read_state` found at a path.
+pub enum RawState {
+    /// No file. Callers decide whether that is fresh (caches) or a
+    /// hard error (an explicitly named profile).
+    Missing,
+    /// Zero-length or whitespace-only file — treated as fresh with a
+    /// warning, never a parse error.
+    Empty,
+    /// A verified payload (envelope checked, or trusted-legacy).
+    Payload { text: String, legacy: bool },
+}
+
+/// Reads and envelope-verifies `path`. Envelope failures quarantine
+/// the file and return a typed error; a missing or empty file is a
+/// non-error [`RawState`] variant. Checks the `io_read` fault site.
+pub fn read_state(artifact: &'static str, path: &Path) -> Result<RawState> {
+    faults::check_io_global(Site::IoRead);
+    let mut bytes = Vec::new();
+    match std::fs::File::open(path) {
+        Ok(mut f) => {
+            if let Err(e) = f.read_to_end(&mut bytes) {
+                return Err(StateError::new(
+                    artifact,
+                    path,
+                    StateErrorKind::Io(e),
+                ));
+            }
+        }
+        Err(e) if e.kind() == io::ErrorKind::NotFound => {
+            return Ok(RawState::Missing)
+        }
+        Err(e) => {
+            return Err(StateError::new(artifact, path, StateErrorKind::Io(e)))
+        }
+    }
+    if bytes.iter().all(|b| b.is_ascii_whitespace()) {
+        return Ok(RawState::Empty);
+    }
+    match unwrap(&bytes) {
+        Ok(u) => match String::from_utf8(u.payload) {
+            Ok(text) => Ok(RawState::Payload { text, legacy: u.legacy }),
+            Err(_) => Err(quarantined(
+                artifact,
+                path,
+                StateErrorKind::Malformed("payload is not UTF-8".into()),
+            )),
+        },
+        Err(kind) => Err(quarantined(artifact, path, kind)),
+    }
+}
+
+/// Builds a [`StateError`] for `path` after attempting quarantine.
+/// Use for payload-level failures (malformed JSON after a clean
+/// envelope check) as well as envelope failures.
+pub fn quarantined(
+    artifact: &'static str,
+    path: &Path,
+    kind: StateErrorKind,
+) -> StateError {
+    let mut err = StateError::new(artifact, path, kind);
+    if let Ok(dest) = quarantine(path) {
+        err.quarantined_to = Some(dest);
+    }
+    err
+}
+
+/// Envelope-wraps `payload` and writes it atomically. Checks the
+/// `io_write` fault site: a firing `torn{at}` rule leaves exactly the
+/// first `at` bytes at the destination (the crash a pre-durable
+/// `fs::write` could leave) and returns an error.
+pub fn save_state(
+    artifact: &'static str,
+    path: &Path,
+    payload: &str,
+) -> Result<()> {
+    let bytes = wrap(payload.as_bytes());
+    if let Some(at) = faults::check_io_global(Site::IoWrite) {
+        let n = (at as usize).min(bytes.len());
+        let _ = std::fs::write(path, &bytes[..n]);
+        return Err(StateError::new(
+            artifact,
+            path,
+            StateErrorKind::Io(io::Error::new(
+                io::ErrorKind::Interrupted,
+                format!("injected torn write after {n} bytes"),
+            )),
+        ));
+    }
+    AtomicFile::new(path)
+        .write(&bytes)
+        .map_err(|e| StateError::new(artifact, path, StateErrorKind::Io(e)))
+}
+
+// --- Degradation log ----------------------------------------------------
+
+/// One recorded fallback: which artifact degraded, why, and what the
+/// caller fell back to.
+#[derive(Clone, Debug)]
+pub struct DegradeEvent {
+    /// Artifact class (`"plan-cache"`, `"tune-profile"`, …).
+    pub artifact: String,
+    /// The file involved.
+    pub path: String,
+    /// What failed (typed-error text).
+    pub reason: String,
+    /// What the caller did instead (`"re-plan"`, `"baseline tune"`, …).
+    pub fallback: String,
+}
+
+impl fmt::Display for DegradeEvent {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "degraded {} ({}): {} -> {}",
+            self.artifact, self.path, self.reason, self.fallback
+        )
+    }
+}
+
+static DEGRADE_LOG: Mutex<Vec<DegradeEvent>> = Mutex::new(Vec::new());
+
+/// Records a degradation in the process-global log (and mirrors it to
+/// stderr so non-serving paths surface it too).
+pub fn record_degrade(event: DegradeEvent) {
+    eprintln!("spc5: {event}");
+    DEGRADE_LOG.lock().unwrap_or_else(|e| e.into_inner()).push(event);
+}
+
+/// Snapshot of every degradation recorded so far, oldest first.
+pub fn degrade_events() -> Vec<DegradeEvent> {
+    DEGRADE_LOG.lock().unwrap_or_else(|e| e.into_inner()).clone()
+}
+
+/// Number of degradations recorded so far.
+pub fn degrade_count() -> usize {
+    DEGRADE_LOG.lock().unwrap_or_else(|e| e.into_inner()).len()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wrap_unwrap_round_trips() {
+        let payload = br#"{"k": [1, 2, 3]}"#;
+        let framed = wrap(payload);
+        let u = unwrap(&framed).unwrap();
+        assert!(!u.legacy);
+        assert_eq!(u.payload, payload);
+    }
+
+    #[test]
+    fn bare_payload_is_legacy() {
+        let u = unwrap(b"{\"plans\": []}\n").unwrap();
+        assert!(u.legacy);
+        assert_eq!(u.payload, b"{\"plans\": []}\n");
+    }
+
+    #[test]
+    fn every_single_byte_corruption_is_detected() {
+        let framed = wrap(br#"{"answer": 42}"#);
+        for i in 0..framed.len() {
+            for bit in 0..8 {
+                let mut bad = framed.clone();
+                bad[i] ^= 1 << bit;
+                match unwrap(&bad) {
+                    // A flipped magic byte demotes the file to legacy;
+                    // the payload then carries framing bytes that no
+                    // artifact parser accepts — still a typed failure,
+                    // exercised by the durability integration suite.
+                    Ok(u) => assert!(
+                        u.legacy && i < MAGIC.len(),
+                        "corruption at byte {i} bit {bit} verified"
+                    ),
+                    Err(_) => {}
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn truncation_is_typed() {
+        let framed = wrap(b"0123456789");
+        for cut in 0..framed.len() {
+            let r = unwrap(&framed[..cut]);
+            if cut < MAGIC.len() {
+                // Shorter than the magic (including empty): cannot be
+                // distinguished from a legacy bare payload. Artifact
+                // parsers reject the fragment downstream.
+                assert!(r.unwrap().legacy);
+            } else if cut == framed.len() - 1 {
+                // Only the final newline lost: the checksum is whole
+                // and still verifies.
+                assert!(!r.unwrap().legacy);
+            } else {
+                assert!(r.is_err(), "cut at {cut} accepted");
+            }
+        }
+    }
+
+    #[test]
+    fn future_version_is_rejected_not_legacy() {
+        let mut framed = wrap(b"x");
+        let hdr = String::from_utf8(framed.clone()).unwrap();
+        let hdr = hdr.replacen("SPC5STATEv1", "SPC5STATEv9", 1);
+        framed = hdr.into_bytes();
+        assert!(matches!(
+            unwrap(&framed),
+            Err(StateErrorKind::WrongVersion(v)) if v == "v9"
+        ));
+    }
+
+    #[test]
+    fn atomic_write_then_read_state() {
+        let dir = std::env::temp_dir().join("spc5_durable_unit");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("roundtrip.json");
+        save_state("unit", &path, "{\"v\": 1}").unwrap();
+        match read_state("unit", &path).unwrap() {
+            RawState::Payload { text, legacy } => {
+                assert_eq!(text, "{\"v\": 1}");
+                assert!(!legacy);
+            }
+            _ => panic!("expected payload"),
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn missing_and_empty_are_not_errors() {
+        let dir = std::env::temp_dir().join("spc5_durable_unit");
+        std::fs::create_dir_all(&dir).unwrap();
+        assert!(matches!(
+            read_state("unit", &dir.join("nope.json")).unwrap(),
+            RawState::Missing
+        ));
+        let empty = dir.join("empty.json");
+        std::fs::write(&empty, "  \n\t\n").unwrap();
+        assert!(matches!(
+            read_state("unit", &empty).unwrap(),
+            RawState::Empty
+        ));
+        std::fs::remove_file(&empty).ok();
+    }
+
+    #[test]
+    fn corrupt_file_is_quarantined_with_typed_error() {
+        let dir = std::env::temp_dir().join("spc5_durable_quarantine");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("store.json");
+        let mut framed = wrap(b"{\"records\": []}");
+        let mid = framed.len() / 2;
+        framed[mid] ^= 0x40;
+        std::fs::write(&path, &framed).unwrap();
+        let err = match read_state("record-store", &path) {
+            Err(e) => e,
+            Ok(_) => panic!("corruption accepted"),
+        };
+        assert_eq!(err.artifact, "record-store");
+        let q = err.quarantined_to.clone().expect("quarantined");
+        assert!(q.exists());
+        assert!(!path.exists(), "original path freed");
+        assert!(err.to_string().contains("record-store"));
+        std::fs::remove_file(&q).ok();
+    }
+
+    #[test]
+    fn quarantine_picks_the_first_free_slot() {
+        let dir = std::env::temp_dir().join("spc5_durable_slots");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("a.json");
+        std::fs::write(&path, "x").unwrap();
+        std::fs::write(dir.join("a.json.corrupt-0"), "old").unwrap();
+        let dest = quarantine(&path).unwrap();
+        assert!(dest.to_string_lossy().ends_with("a.json.corrupt-1"));
+        std::fs::remove_file(dir.join("a.json.corrupt-0")).ok();
+        std::fs::remove_file(dest).ok();
+    }
+
+    #[test]
+    fn fnv1a_matches_reference_vectors() {
+        // Offset-basis for empty input, and the classic "a" vector.
+        assert_eq!(fnv1a(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a(b"a"), 0xaf63_dc4c_8601_ec8c);
+    }
+}

@@ -6,10 +6,12 @@
 //! and a minimal JSON reader/writer sufficient for the predictor's record
 //! store. Both are fully tested below.
 
+pub mod durable;
 pub mod json;
 pub mod rng;
 pub mod timer;
 
+pub use durable::{AtomicFile, DegradeEvent, StateError};
 pub use rng::Rng;
 pub use timer::Timer;
 

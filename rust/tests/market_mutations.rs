@@ -1,0 +1,284 @@
+//! Mutation corpus for the hardened MatrixMarket streaming parser.
+//!
+//! The contract: `market::read_coo` never panics and never allocates
+//! unboundedly, whatever the input — truncations at every offset,
+//! byte substitutions at every position, huge / negative / overflowing
+//! indices, bogus headers, out-of-range and excess entries, pattern /
+//! symmetric edge cases. Every rejection is a line-numbered
+//! [`MatrixError::Market`] pointing at the offending line.
+
+use spc5::matrix::{market, MatrixError};
+
+type Coo = spc5::matrix::Coo<f64>;
+
+fn parse(src: &[u8]) -> Result<Coo, MatrixError> {
+    market::read_coo::<f64, _>(src)
+}
+
+/// Asserts the input fails with `Market { line }` at `want_line` and a
+/// message containing `needle`.
+fn assert_line(src: &str, want_line: usize, needle: &str) {
+    match parse(src.as_bytes()) {
+        Err(MatrixError::Market { line, msg }) => {
+            assert_eq!(
+                line, want_line,
+                "wrong line for {src:?} (msg: {msg})"
+            );
+            assert!(
+                msg.contains(needle),
+                "message {msg:?} should contain {needle:?}"
+            );
+        }
+        Err(other) => panic!("{src:?}: wrong error type {other}"),
+        Ok(_) => panic!("{src:?}: accepted"),
+    }
+}
+
+const BASES: &[&str] = &[
+    "%%MatrixMarket matrix coordinate real general\n\
+     % comment line\n\
+     3 4 3\n1 1 2.5\n2 3 -1\n3 4 7e-2\n",
+    "%%MatrixMarket matrix coordinate real symmetric\n\
+     3 3 2\n1 1 4\n3 1 5\n",
+    "%%MatrixMarket matrix coordinate real skew-symmetric\n\
+     2 2 1\n2 1 3\n",
+    "%%MatrixMarket matrix coordinate pattern general\n\
+     2 2 2\n1 2\n2 1\n",
+    "%%MatrixMarket matrix coordinate integer general\n\
+     2 2 1\n2 2 7\n",
+    "%%MatrixMarket matrix array real general\n\
+     2 2\n1\n0\n0\n4\n",
+];
+
+/// Every prefix of every base parses without panicking; a prefix that
+/// parses cleanly must describe a complete entry set.
+#[test]
+fn truncation_at_every_offset_never_panics() {
+    for base in BASES {
+        let full = parse(base.as_bytes())
+            .unwrap_or_else(|e| panic!("base {base:?} must parse: {e}"));
+        for cut in 0..base.len() {
+            match parse(&base.as_bytes()[..cut]) {
+                Err(MatrixError::Market { line, .. }) => {
+                    let lines = base[..cut].lines().count().max(1);
+                    assert!(
+                        line <= lines,
+                        "cut {cut}: line {line} past input ({lines})"
+                    );
+                }
+                Err(_) => {}
+                Ok(coo) => {
+                    // Only a cut that still contains every declared
+                    // entry (e.g. dropping a trailing newline or a
+                    // final zero of a value literal) may succeed.
+                    assert_eq!(
+                        (coo.rows, coo.cols),
+                        (full.rows, full.cols),
+                        "cut {cut} of {base:?} parsed to different dims"
+                    );
+                    assert_eq!(
+                        coo.entries.len(),
+                        full.entries.len(),
+                        "cut {cut} of {base:?} lost entries silently"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Substituting hostile bytes at every position never panics, and
+/// failures stay typed.
+#[test]
+fn byte_substitution_corpus_never_panics() {
+    const MUTANTS: &[u8] =
+        &[b'0', b'9', b'-', b' ', b'\n', b'%', b'e', b'.', 0xFF, 0x00];
+    for base in BASES {
+        for pos in 0..base.len() {
+            for &m in MUTANTS {
+                let mut bytes = base.as_bytes().to_vec();
+                if bytes[pos] == m {
+                    continue;
+                }
+                bytes[pos] = m;
+                match parse(&bytes) {
+                    Ok(coo) => {
+                        // Mutants may legitimately parse (a digit
+                        // substituted inside a value); the result must
+                        // still be structurally sound.
+                        assert!(coo
+                            .entries
+                            .iter()
+                            .all(|&(r, c, _)| (r as usize) < coo.rows
+                                && (c as usize) < coo.cols));
+                    }
+                    Err(MatrixError::Market { line, .. }) => {
+                        assert!(line >= 1, "line numbers are 1-based");
+                    }
+                    Err(_) => {}
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn errors_carry_the_offending_line_number() {
+    // Bad header: line 1.
+    assert_line("garbage\n1 1 0\n", 1, "not a MatrixMarket");
+    assert_line(
+        "%%MatrixMarket matrix teapot real general\n1 1 0\n",
+        1,
+        "unsupported format",
+    );
+    assert_line(
+        "%%MatrixMarket matrix coordinate real general extra\n",
+        1,
+        "too many header fields",
+    );
+    assert_line(
+        "%%MatrixMarket matrix array pattern general\n2 2\n",
+        1,
+        "array+pattern",
+    );
+    assert_line(
+        "%%MatrixMarket matrix array real symmetric\n2 2\n",
+        1,
+        "general symmetry",
+    );
+    // Size-line problems point at the size line.
+    let h = "%%MatrixMarket matrix coordinate real general\n";
+    assert_line(&format!("{h}2 2\n"), 2, "needs 3 numbers");
+    assert_line(&format!("{h}% pad\n% pad\n2 2 9\n"), 4, "exceeds rows*cols");
+    assert_line(
+        &format!("{h}5000000000 1 1\n1 1 1\n"),
+        2,
+        "exceeds the supported maximum",
+    );
+    assert_line(&format!("{h}-2 2 1\n1 1 1\n"), 2, "bad row count");
+    assert_line(
+        &format!("{h}2 2 99999999999999999999\n"),
+        2,
+        "bad entry count",
+    );
+    // Entry problems point at the entry's own physical line.
+    assert_line(&format!("{h}2 2 1\n% pad\n3 1 1\n"), 4, "out of range");
+    assert_line(&format!("{h}2 2 1\n0 1 1\n"), 3, "out of range");
+    assert_line(&format!("{h}2 2 1\n-1 1 1\n"), 3, "bad row index");
+    assert_line(&format!("{h}2 2 1\n1 1\n"), 3, "entry needs 3 fields");
+    assert_line(&format!("{h}2 2 1\n1 1 1 1\n"), 3, "more than 3 fields");
+    assert_line(&format!("{h}2 2 1\n1 1 nan\n"), 3, "non-finite");
+    assert_line(&format!("{h}2 2 1\n1 1 1e999\n"), 3, "non-finite");
+    assert_line(&format!("{h}2 2 1\n1 1 bogus\n"), 3, "bad value");
+    assert_line(
+        &format!("{h}2 2 1\n1 1 1\n2 2 1\n"),
+        4,
+        "more entries than the declared 1",
+    );
+    assert_line(&format!("{h}2 2 2\n1 1 1\n"), 3, "entry count mismatch");
+    // Pattern entries take exactly 2 fields.
+    let p = "%%MatrixMarket matrix coordinate pattern general\n";
+    assert_line(&format!("{p}2 2 1\n1 2 1\n"), 3, "more than 2 fields");
+    // Symmetric storage must be lower-triangular.
+    let s = "%%MatrixMarket matrix coordinate real symmetric\n";
+    assert_line(&format!("{s}3 3 1\n1 3 5\n"), 3, "lower triangle");
+    let k = "%%MatrixMarket matrix coordinate real skew-symmetric\n";
+    assert_line(&format!("{k}2 2 1\n1 1 3\n"), 3, "strict lower");
+    // Non-UTF-8 bytes are a typed error at their line.
+    let mut evil = format!("{h}2 2 1\n1 1 ").into_bytes();
+    evil.extend_from_slice(&[0xFF, 0xFE, b'\n']);
+    match parse(&evil) {
+        Err(MatrixError::Market { line, msg }) => {
+            assert_eq!(line, 3);
+            assert!(msg.contains("UTF-8"));
+        }
+        other => panic!("non-UTF-8 accepted: {other:?}"),
+    }
+}
+
+/// Header claims alone cannot force large allocations: a matrix
+/// declaring two-billion-square dimensions with five entries parses in
+/// bounded memory.
+#[test]
+fn huge_declared_dimensions_do_not_preallocate() {
+    let src = "%%MatrixMarket matrix coordinate real general\n\
+               2000000000 2000000000 5\n\
+               1 1 1\n\
+               2000000000 2000000000 2\n\
+               1 2000000000 3\n\
+               2000000000 1 4\n\
+               1000000000 1000000000 5\n";
+    let coo = parse(src.as_bytes()).unwrap();
+    assert_eq!((coo.rows, coo.cols), (2_000_000_000, 2_000_000_000));
+    assert_eq!(coo.entries.len(), 5);
+    // The capacity reflects the real entry count, not the dense size
+    // the header implies.
+    assert!(coo.entries.capacity() < 1 << 21);
+
+    // Same for the array format: the claim is bounded before any
+    // value arrives, and the (empty) body fails the count check
+    // rather than allocating rows*cols slots.
+    let dense = "%%MatrixMarket matrix array real general\n\
+                 4294967295 4294967295\n";
+    match parse(dense.as_bytes()) {
+        Err(MatrixError::Market { msg, .. }) => {
+            assert!(msg.contains("values"), "unexpected: {msg}")
+        }
+        other => panic!("dense bomb accepted: {other:?}"),
+    }
+
+    // An index outside the u32 storage range is rejected even when
+    // the declared dimensions are legal.
+    let src = "%%MatrixMarket matrix coordinate real general\n\
+               4294967295 4294967295 1\n\
+               18446744073709551615 1 1\n";
+    match parse(src.as_bytes()) {
+        Err(MatrixError::Market { line, msg }) => {
+            assert_eq!(line, 3);
+            assert!(msg.contains("exceeds the supported maximum"));
+        }
+        other => panic!("overflowing index accepted: {other:?}"),
+    }
+}
+
+/// A single over-long line is rejected at the cap, not buffered whole.
+#[test]
+fn line_length_is_capped() {
+    let mut src = String::from(
+        "%%MatrixMarket matrix coordinate real general\n%",
+    );
+    src.push_str(&"x".repeat(market::MAX_LINE + 16));
+    src.push_str("\n2 2 1\n1 1 1\n");
+    match parse(src.as_bytes()) {
+        Err(MatrixError::Market { line, msg }) => {
+            assert_eq!(line, 2);
+            assert!(msg.contains("longer than"));
+        }
+        other => panic!("oversized line accepted: {other:?}"),
+    }
+}
+
+/// Duplicate coordinates are legal MatrixMarket (summed downstream by
+/// `to_csr`); the parser keeps both.
+#[test]
+fn duplicate_entries_are_kept_for_downstream_summing() {
+    let src = "%%MatrixMarket matrix coordinate real general\n\
+               2 2 2\n1 1 1.5\n1 1 2.5\n";
+    let coo = parse(src.as_bytes()).unwrap();
+    assert_eq!(coo.entries.len(), 2);
+    let csr = coo.to_csr().unwrap();
+    assert_eq!(csr.to_dense().get(0, 0), 4.0);
+}
+
+/// Whitespace-tolerant forms still parse: blank lines between
+/// entries, CR-free tabs, and a missing final newline.
+#[test]
+fn benign_formatting_variants_parse() {
+    let src = "%%MatrixMarket matrix coordinate real general\n\
+               \n% note\n\n2 2 2\n\n1 1 1\n\n2 2 2";
+    let coo = parse(src.as_bytes()).unwrap();
+    assert_eq!(coo.entries.len(), 2);
+    let src = "%%MatrixMarket matrix coordinate real general\n\
+               2\t2\t1\n1\t1\t1\n";
+    assert_eq!(parse(src.as_bytes()).unwrap().entries.len(), 1);
+}
