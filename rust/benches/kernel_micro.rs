@@ -32,6 +32,7 @@ fn main() {
             "tune" => return tune_ablation(),
             "chaos" => return chaos_ablation(),
             "durable" => return durable_ablation(),
+            "solve" => return solve_ablation(),
             other => {
                 eprintln!("unknown SPC5_ABLATION='{other}', running all")
             }
@@ -54,6 +55,7 @@ fn main() {
     tune_ablation();
     chaos_ablation();
     durable_ablation();
+    solve_ablation();
 }
 
 /// GFlop/s vs block fill for every kernel.
@@ -984,6 +986,193 @@ fn durable_ablation() {
     match runner::write_bench_json(
         std::path::Path::new(&out),
         "kernel_micro/durable",
+        &all,
+    ) {
+        Ok(()) => eprintln!("  wrote {out}"),
+        Err(e) => eprintln!("warning: {e}"),
+    }
+}
+
+/// Triangular-solve ablation: (a) the SpTRSV execution paths — CSR
+/// reference vs the masked block walk over β storage vs the
+/// level-scheduled run on the pool — plus one SymGS sweep (sequential
+/// vs level-scheduled), timed on the strict lower triangle of
+/// poisson2d(60); (b) the preconditioner sweep — PCG with
+/// none/jacobi/symgs/ilu0 on the ill-conditioned scaled-Poisson
+/// system, the iteration count and convergence encoded in the matrix
+/// label (`gflops` is the substitution throughput for the SpTRSV/SymGS
+/// rows and 0 for the solver rows, whose measured quantity is
+/// `seconds` to converge). Persisted to `BENCH_10.json` (CI artifact
+/// next to BENCH_3..9; set `SPC5_BENCH10_JSON` to override the path).
+fn solve_ablation() {
+    use spc5::coordinator::{cg_solve, pcg_with, PrecondKind};
+    use spc5::kernels::sptrsv::{
+        sptrsv_lower_block, sptrsv_lower_levels, sptrsv_lower_ref,
+    };
+    use spc5::kernels::symgs::{symgs, symgs_levels};
+    use spc5::matrix::Coo;
+    use spc5::parallel::{lower_levels, upper_levels};
+
+    let mut all: Vec<Measurement> = Vec::new();
+
+    // (a) SpTRSV / SymGS paths on the poisson2d(60) split.
+    let csr = suite::poisson2d(60);
+    let split = csr.triangular_split().expect("square split");
+    let n = split.n();
+    // 2 flops per strict-lower entry + the diagonal division per row.
+    let work = split.lower.nnz() + n;
+    let b = bench_vector(n, 0x7125);
+    let mut x = vec![0.0f64; n];
+    let pool = WorkerPool::new(4);
+    let fwd = lower_levels(&split.lower);
+    let bwd = upper_levels(&split.upper);
+    let bm = csr_to_block(&split.lower, BlockSize::new(2, 4)).unwrap();
+
+    let mut t = Table::new(
+        "Ablation Q: SpTRSV paths + SymGS sweep on poisson2d(60) \
+         (lower triangle, 4 pool workers for the level paths)",
+        &["path", "ms", "GF/s"],
+    );
+    {
+        let mut rec = |label: &str,
+                       kernel: KernelKind,
+                       threads: usize,
+                       seconds: f64,
+                       gflops: f64| {
+            all.push(Measurement {
+                matrix: format!("poisson2d-60/{label}"),
+                kernel,
+                threads,
+                numa: false,
+                tile_cols: 0,
+                tune: Default::default(),
+                gflops,
+                seconds,
+            });
+            t.row(vec![
+                label.to_string(),
+                format!("{:.3}", seconds * 1e3),
+                format!("{gflops:.2}"),
+            ]);
+        };
+        let s = mean_of_runs(RUNS, || {
+            sptrsv_lower_ref(&split.lower, &split.diag, &b, &mut x);
+            std::hint::black_box(&x);
+        });
+        rec("sptrsv-csr-ref", KernelKind::Csr, 1, s, spmv_gflops(work, s));
+        let s = mean_of_runs(RUNS, || {
+            sptrsv_lower_block(&bm, &split.diag, &b, &mut x);
+            std::hint::black_box(&x);
+        });
+        rec(
+            "sptrsv-block",
+            KernelKind::Beta(2, 4),
+            1,
+            s,
+            spmv_gflops(work, s),
+        );
+        let s = mean_of_runs(RUNS, || {
+            sptrsv_lower_levels(
+                &split.lower,
+                &split.diag,
+                &fwd,
+                &pool,
+                &b,
+                &mut x,
+            );
+            std::hint::black_box(&x);
+        });
+        rec("sptrsv-levels", KernelKind::Csr, 4, s, spmv_gflops(work, s));
+        // One symmetric sweep touches both triangles + two divisions.
+        let gs_work = 2 * (split.lower.nnz() + split.upper.nnz() + n);
+        let s = mean_of_runs(RUNS, || {
+            symgs(&split, &b, &mut x, 1);
+            std::hint::black_box(&x);
+        });
+        rec("symgs-seq", KernelKind::Csr, 1, s, spmv_gflops(gs_work, s));
+        let s = mean_of_runs(RUNS, || {
+            symgs_levels(&split, &fwd, &bwd, &pool, &b, &mut x, 1);
+            std::hint::black_box(&x);
+        });
+        rec("symgs-levels", KernelKind::Csr, 4, s, spmv_gflops(gs_work, s));
+    }
+    t.emit("ablation_solve_paths");
+    eprintln!("  solve ablation: SpTRSV/SymGS paths measured");
+
+    // (b) Preconditioner sweep on the ill-conditioned scaled Poisson
+    // system (symmetric diagonal scaling, condition ~1e6).
+    let a = suite::poisson2d(24);
+    let dim = a.rows;
+    let scale: Vec<f64> =
+        (0..dim).map(|i| 10f64.powi(((i % 7) / 2) as i32)).collect();
+    let mut coo = Coo::new(dim, dim);
+    for r in 0..dim {
+        for k in a.row_range(r) {
+            let c = a.colidx[k] as usize;
+            coo.push(r, c, scale[r] * a.values[k] * scale[c]);
+        }
+    }
+    let ill = coo.to_csr().expect("scaled poisson");
+    let engine = SpmvEngine::builder(ill)
+        .kernel(KernelKind::Beta(2, 4))
+        .build()
+        .expect("solve engine builds");
+    let rhs = bench_vector(dim, 0x7126);
+    let max_iters = 30_000;
+    let tol2 = 1e-12;
+
+    let mut t = Table::new(
+        "Ablation R: PCG preconditioner sweep on scaled poisson2d(24) \
+         (b(2,4) engine, tol² 1e-12)",
+        &["precond", "iterations", "converged", "ms"],
+    );
+    for kind in [
+        PrecondKind::None,
+        PrecondKind::Jacobi,
+        PrecondKind::SymGs { sweeps: 1 },
+        PrecondKind::Ilu0,
+    ] {
+        let m =
+            kind.build(engine.csr(), engine.pool()).expect("precond builds");
+        let mut x = vec![0.0; dim];
+        let timer = spc5::util::Timer::start();
+        let rep = if kind == PrecondKind::None {
+            cg_solve(&engine, &rhs, &mut x, max_iters, tol2)
+        } else {
+            pcg_with(&engine, m.as_ref(), &rhs, &mut x, max_iters, tol2)
+        };
+        let secs = timer.elapsed_s();
+        all.push(Measurement {
+            matrix: format!(
+                "scaled-poisson-24/precond={kind}/iters={}/converged={}",
+                rep.iterations, rep.converged
+            ),
+            kernel: KernelKind::Beta(2, 4),
+            threads: 1,
+            numa: false,
+            tile_cols: 0,
+            tune: Default::default(),
+            gflops: 0.0,
+            seconds: secs,
+        });
+        t.row(vec![
+            kind.to_string(),
+            format!("{}", rep.iterations),
+            format!("{}", rep.converged),
+            format!("{:.3}", secs * 1e3),
+        ]);
+        eprintln!(
+            "  solve ablation: precond={kind} iters={} converged={}",
+            rep.iterations, rep.converged
+        );
+    }
+    t.emit("ablation_solve_precond");
+
+    let out = std::env::var("SPC5_BENCH10_JSON")
+        .unwrap_or_else(|_| "BENCH_10.json".to_string());
+    match runner::write_bench_json(
+        std::path::Path::new(&out),
+        "kernel_micro/solve",
         &all,
     ) {
         Ok(()) => eprintln!("  wrote {out}"),

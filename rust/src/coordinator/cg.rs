@@ -28,6 +28,10 @@ pub struct CgReport {
     pub converged: bool,
     /// Total SpMV count (1 initial + 1 per iteration).
     pub spmv_count: usize,
+    /// The iteration stopped on a numerical breakdown (zero
+    /// denominator / ρ / ω) with the residual still above tolerance —
+    /// distinguishable from simply running out of iterations.
+    pub breakdown: bool,
 }
 
 /// f64-accumulated dot product of two `T` vectors.
@@ -62,11 +66,13 @@ pub fn cg_solve<T: Scalar>(
     let mut ap = vec![T::ZERO; n];
 
     let mut iterations = 0usize;
+    let mut broke = false;
     while iterations < max_iters && rs > tol2 {
         engine.spmv_into(&p, &mut ap);
         spmv_count += 1;
         let denom: f64 = dot_f64(&p, &ap);
         if denom == 0.0 {
+            broke = true;
             break;
         }
         let alpha = rs / denom;
@@ -89,6 +95,7 @@ pub fn cg_solve<T: Scalar>(
         residual_norm2: rs,
         converged: rs <= tol2,
         spmv_count,
+        breakdown: broke && rs > tol2,
     }
 }
 
@@ -187,6 +194,7 @@ mod tests {
         let report = cg_solve(&engine, &b, &mut x, 100, 1e-20);
         assert_eq!(report.iterations, 0);
         assert!(report.converged);
+        assert!(!report.breakdown);
     }
 
     #[test]
@@ -198,5 +206,7 @@ mod tests {
         let report = cg_solve(&engine, &b, &mut x, 3, 1e-30);
         assert_eq!(report.iterations, 3);
         assert!(!report.converged);
+        // Ran out of iterations — not a numerical breakdown.
+        assert!(!report.breakdown);
     }
 }

@@ -2,7 +2,9 @@
 //! instantiate → execute, built through the fluent
 //! [`SpmvEngine::builder`] and serving every [`crate::KernelKind`]),
 //! the serializable [`SpmvPlan`] / [`PlanCache`] inspector–executor
-//! artifacts, the native Krylov solvers, and the serving tier: the
+//! artifacts, the native Krylov solvers with their plan-aware
+//! preconditioners ([`Preconditioner`] in [`precond`], persisted as
+//! [`SolvePlan`]s), and the serving tier: the
 //! micro-batching [`SpmvService`], the admission-control primitives
 //! ([`QueuePolicy`] and friends in [`serving`]), the row-sharded
 //! [`ShardedService`] front-end, and the fingerprint-keyed
@@ -14,8 +16,10 @@ pub mod cg;
 pub mod cluster;
 pub mod engine;
 pub mod plan;
+pub mod precond;
 pub mod service;
 pub mod serving;
+pub mod solve_plan;
 pub mod solvers;
 pub mod tenant;
 
@@ -35,5 +39,12 @@ pub use serving::{
     AdmissionGate, BoundedQueue, PushError, QueuePolicy,
     DEFAULT_QUEUE_CAPACITY,
 };
-pub use solvers::{bicgstab, pcg_jacobi};
+pub use precond::{
+    IdentityPrecond, Ilu0, Jacobi, PrecondError, PrecondKind, Preconditioner,
+    SymGs,
+};
+pub use solve_plan::{
+    solve_from_plan, SolvePlan, SolverKind, SOLVE_PLAN_VERSION,
+};
+pub use solvers::{bicgstab, pcg_jacobi, pcg_with};
 pub use tenant::{RegistryStats, TenantConfig, TenantRegistry, TenantStats};

@@ -267,7 +267,7 @@ impl SpmvPlan {
         Self::from_json_value(&v)
     }
 
-    fn from_json_value(v: &Json) -> anyhow::Result<SpmvPlan> {
+    pub(crate) fn from_json_value(v: &Json) -> anyhow::Result<SpmvPlan> {
         let num = |k: &str| -> anyhow::Result<f64> {
             v.get(k)
                 .and_then(|n| n.as_f64())

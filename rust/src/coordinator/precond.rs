@@ -1,0 +1,708 @@
+//! Plan-aware preconditioners for the Krylov solvers: `z = M⁻¹·r`
+//! behind one object-safe trait, built from a matrix (analysis path)
+//! or from a persisted [`super::SolvePlan`] decision (planned path,
+//! which skips the level analysis a repeat solve already paid for).
+//!
+//! Three concrete `M`:
+//! - [`Jacobi`] — diagonal scaling; **errors** on a zero or missing
+//!   diagonal instead of silently substituting the identity (the old
+//!   [`super::pcg_jacobi`] leniency, kept only in that shim).
+//! - [`SymGs`] — `sweeps` symmetric Gauss–Seidel sweeps over the
+//!   [`TriangularSplit`], level-scheduled on the engine's worker pool
+//!   when the dependency levels are wide enough to pay for the epochs.
+//! - [`Ilu0`] — ILU(0): an incomplete LU factorization on the matrix's
+//!   own sparsity pattern, applied with the masked block-based
+//!   triangular solves of [`crate::kernels::sptrsv`] (the factors are
+//!   stored in the same β format the SpMV kernels run on), or with the
+//!   level-scheduled CSR solves when parallel is worthwhile. Both
+//!   paths are bit-identical, so the choice is pure scheduling.
+
+use std::sync::Arc;
+
+use crate::formats::{csr_to_block, BlockMatrix, BlockSize};
+use crate::kernels::sptrsv::{
+    sptrsv_lower_block, sptrsv_lower_levels, sptrsv_upper_block,
+    sptrsv_upper_levels,
+};
+use crate::kernels::symgs::{symgs, symgs_levels};
+use crate::matrix::{Csr, TriangularSplit};
+use crate::parallel::{
+    lower_levels, upper_levels, LevelSchedule, LevelSummary, WorkerPool,
+};
+use crate::scalar::Scalar;
+
+/// β size the ILU(0) factors are stored at for the sequential block
+/// solves — valid at every supported precision (`c = 4 ≤` mask bits).
+const ILU_BLOCK: BlockSize = BlockSize { r: 2, c: 4 };
+
+/// Errors from preconditioner construction/factorization.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum PrecondError {
+    /// The matrix is not square.
+    NotSquare { rows: usize, cols: usize },
+    /// A diagonal entry is zero or structurally missing (Jacobi,
+    /// SymGS).
+    ZeroDiagonal { row: usize },
+    /// ILU(0) hit a zero (or structurally missing) pivot.
+    ZeroPivot { row: usize },
+}
+
+impl std::fmt::Display for PrecondError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match *self {
+            PrecondError::NotSquare { rows, cols } => {
+                write!(f, "preconditioner needs a square matrix, got {rows}x{cols}")
+            }
+            PrecondError::ZeroDiagonal { row } => {
+                write!(f, "zero or missing diagonal at row {row}")
+            }
+            PrecondError::ZeroPivot { row } => {
+                write!(f, "ilu(0) pivot is zero at row {row}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for PrecondError {}
+
+/// `z = M⁻¹·r`. Implementations are `Send + Sync` so a built
+/// preconditioner can ride along with the engine across threads.
+pub trait Preconditioner<T: Scalar>: Send + Sync {
+    /// Applies the preconditioner: writes `z = M⁻¹·r` (overwrites `z`).
+    fn apply(&self, r: &[T], z: &mut [T]);
+    /// Stable name for reports and plans (`jacobi`, `symgs(2)`, ...).
+    fn name(&self) -> String;
+    /// The level-schedule decision this preconditioner runs under, if
+    /// it has triangular solves to schedule.
+    fn level_summary(&self) -> Option<LevelSummary> {
+        None
+    }
+}
+
+/// The identity "preconditioner" (`z = r`) — plain CG through the
+/// preconditioned driver.
+pub struct IdentityPrecond;
+
+impl<T: Scalar> Preconditioner<T> for IdentityPrecond {
+    fn apply(&self, r: &[T], z: &mut [T]) {
+        z.copy_from_slice(r);
+    }
+    fn name(&self) -> String {
+        "none".into()
+    }
+}
+
+/// Diagonal (Jacobi) preconditioner: `z = D⁻¹·r`.
+pub struct Jacobi<T: Scalar = f64> {
+    dinv: Vec<T>,
+}
+
+impl<T: Scalar> Jacobi<T> {
+    /// Extracts and inverts the diagonal. Unlike the historical
+    /// [`super::pcg_jacobi`] behavior, a zero **or structurally
+    /// missing** diagonal entry is an error — silently substituting
+    /// `1` turned a broken preconditioner into slow, hard-to-diagnose
+    /// convergence.
+    pub fn new(csr: &Csr<T>) -> Result<Self, PrecondError> {
+        if csr.rows != csr.cols {
+            return Err(PrecondError::NotSquare {
+                rows: csr.rows,
+                cols: csr.cols,
+            });
+        }
+        let mut dinv = vec![T::ZERO; csr.rows];
+        for r in 0..csr.rows {
+            let mut d = T::ZERO;
+            for k in csr.row_range(r) {
+                if csr.colidx[k] as usize == r {
+                    d = csr.values[k];
+                }
+            }
+            if d == T::ZERO {
+                return Err(PrecondError::ZeroDiagonal { row: r });
+            }
+            dinv[r] = T::ONE / d;
+        }
+        Ok(Jacobi { dinv })
+    }
+}
+
+impl<T: Scalar> Preconditioner<T> for Jacobi<T> {
+    fn apply(&self, r: &[T], z: &mut [T]) {
+        for i in 0..z.len() {
+            z[i] = r[i] * self.dinv[i];
+        }
+    }
+    fn name(&self) -> String {
+        "jacobi".into()
+    }
+}
+
+/// Forward+backward level schedules plus the pool to run them on.
+struct SolveLevels {
+    fwd: LevelSchedule,
+    bwd: LevelSchedule,
+    pool: Arc<WorkerPool>,
+}
+
+/// Symmetric Gauss–Seidel preconditioner: `sweeps` forward+backward
+/// sweeps of `(D+L) x = b − U x` / `(D+U) x = b − L x` starting from
+/// `z = 0`.
+pub struct SymGs<T: Scalar = f64> {
+    split: TriangularSplit<T>,
+    sweeps: usize,
+    levels: Option<SolveLevels>,
+    summary: LevelSummary,
+}
+
+impl<T: Scalar> SymGs<T> {
+    /// Builds the split and decides sequential vs level-scheduled
+    /// execution from the lower triangle's dependency levels.
+    pub fn new(
+        csr: &Csr<T>,
+        sweeps: usize,
+        pool: Option<&Arc<WorkerPool>>,
+    ) -> Result<Self, PrecondError> {
+        Self::with_decision(csr, sweeps, pool, None)
+    }
+
+    /// Like [`SymGs::new`], but when `planned` carries a previous
+    /// run's [`LevelSummary`] the sequential-vs-parallel decision is
+    /// reused: a planned-sequential build skips the level analysis
+    /// entirely, a planned-parallel build rebuilds the (cheap,
+    /// `O(nnz)`) level sets but not the decision.
+    pub fn with_decision(
+        csr: &Csr<T>,
+        sweeps: usize,
+        pool: Option<&Arc<WorkerPool>>,
+        planned: Option<LevelSummary>,
+    ) -> Result<Self, PrecondError> {
+        if csr.rows != csr.cols {
+            return Err(PrecondError::NotSquare {
+                rows: csr.rows,
+                cols: csr.cols,
+            });
+        }
+        let split = csr
+            .triangular_split()
+            .map_err(|_| PrecondError::NotSquare {
+                rows: csr.rows,
+                cols: csr.cols,
+            })?;
+        if let Some(&row) = split.missing_diagonals().first() {
+            return Err(PrecondError::ZeroDiagonal { row });
+        }
+        let sweeps = sweeps.max(1);
+        let (summary, levels) = schedule_triangles(
+            &split.lower,
+            &split.upper,
+            pool,
+            planned,
+        );
+        Ok(SymGs { split, sweeps, levels, summary })
+    }
+}
+
+impl<T: Scalar> Preconditioner<T> for SymGs<T> {
+    fn apply(&self, r: &[T], z: &mut [T]) {
+        z.iter_mut().for_each(|v| *v = T::ZERO);
+        match &self.levels {
+            Some(lv) => symgs_levels(
+                &self.split,
+                &lv.fwd,
+                &lv.bwd,
+                &lv.pool,
+                r,
+                z,
+                self.sweeps,
+            ),
+            None => symgs(&self.split, r, z, self.sweeps),
+        }
+    }
+    fn name(&self) -> String {
+        format!("symgs({})", self.sweeps)
+    }
+    fn level_summary(&self) -> Option<LevelSummary> {
+        Some(self.summary)
+    }
+}
+
+/// ILU(0) preconditioner: `M = L·U` on the sparsity pattern of `A`,
+/// applied as a forward solve with unit-diagonal `L` followed by a
+/// backward solve with `U`.
+pub struct Ilu0<T: Scalar = f64> {
+    /// Strict lower triangle of `L` (unit diagonal implied).
+    lower: Csr<T>,
+    lower_block: BlockMatrix<T>,
+    /// Unit diagonal for the forward solve (`x / 1` is exact).
+    ones: Vec<T>,
+    /// Strict upper triangle of `U`.
+    upper: Csr<T>,
+    upper_block: BlockMatrix<T>,
+    udiag: Vec<T>,
+    levels: Option<SolveLevels>,
+    summary: LevelSummary,
+}
+
+impl<T: Scalar> Ilu0<T> {
+    /// Factors `A ≈ L·U` on `A`'s own pattern (IKJ variant with a
+    /// dense column→position scatter) and prepares both execution
+    /// paths. The factors share `A`'s triangle sparsity, so the level
+    /// sets are identical to a SymGS schedule on the same matrix.
+    pub fn new(
+        csr: &Csr<T>,
+        pool: Option<&Arc<WorkerPool>>,
+    ) -> Result<Self, PrecondError> {
+        Self::with_decision(csr, pool, None)
+    }
+
+    /// Planned-decision variant; see [`SymGs::with_decision`].
+    pub fn with_decision(
+        csr: &Csr<T>,
+        pool: Option<&Arc<WorkerPool>>,
+        planned: Option<LevelSummary>,
+    ) -> Result<Self, PrecondError> {
+        let (lower, upper, udiag) = ilu0_factor(csr)?;
+        let n = udiag.len();
+        let lower_block =
+            csr_to_block(&lower, ILU_BLOCK).expect("ILU_BLOCK valid");
+        let upper_block =
+            csr_to_block(&upper, ILU_BLOCK).expect("ILU_BLOCK valid");
+        let (summary, levels) =
+            schedule_triangles(&lower, &upper, pool, planned);
+        Ok(Ilu0 {
+            lower,
+            lower_block,
+            ones: vec![T::ONE; n],
+            upper,
+            upper_block,
+            udiag,
+            levels,
+            summary,
+        })
+    }
+}
+
+impl<T: Scalar> Preconditioner<T> for Ilu0<T> {
+    fn apply(&self, r: &[T], z: &mut [T]) {
+        let mut y = vec![T::ZERO; r.len()];
+        match &self.levels {
+            Some(lv) => {
+                sptrsv_lower_levels(
+                    &self.lower,
+                    &self.ones,
+                    &lv.fwd,
+                    &lv.pool,
+                    r,
+                    &mut y,
+                );
+                sptrsv_upper_levels(
+                    &self.upper,
+                    &self.udiag,
+                    &lv.bwd,
+                    &lv.pool,
+                    &y,
+                    z,
+                );
+            }
+            None => {
+                sptrsv_lower_block(&self.lower_block, &self.ones, r, &mut y);
+                sptrsv_upper_block(&self.upper_block, &self.udiag, &y, z);
+            }
+        }
+    }
+    fn name(&self) -> String {
+        "ilu0".into()
+    }
+    fn level_summary(&self) -> Option<LevelSummary> {
+        Some(self.summary)
+    }
+}
+
+/// Builds (or reuses) the level-scheduling decision for a pair of
+/// triangles. Returns the summary to persist and the schedules when
+/// parallel execution won.
+fn schedule_triangles<T: Scalar>(
+    lower: &Csr<T>,
+    upper: &Csr<T>,
+    pool: Option<&Arc<WorkerPool>>,
+    planned: Option<LevelSummary>,
+) -> (LevelSummary, Option<SolveLevels>) {
+    let threads = pool.map_or(1, |p| p.n_threads());
+    match (planned, pool) {
+        // Planned sequential: trust the decision, skip the analysis.
+        (Some(s), _) if !s.parallel => (s, None),
+        (Some(s), None) => (LevelSummary { parallel: false, ..s }, None),
+        // Planned parallel with a pool: rebuild the (cheap) level
+        // sets, keep the decision.
+        (Some(s), Some(pool)) => {
+            let fwd = lower_levels(lower);
+            let bwd = upper_levels(upper);
+            (
+                s,
+                Some(SolveLevels { fwd, bwd, pool: Arc::clone(pool) }),
+            )
+        }
+        (None, _) => {
+            let fwd = lower_levels(lower);
+            let parallel =
+                pool.is_some() && fwd.parallel_worthwhile(threads);
+            let summary = fwd.summary(parallel);
+            let levels = if parallel {
+                Some(SolveLevels {
+                    fwd,
+                    bwd: upper_levels(upper),
+                    pool: Arc::clone(pool.unwrap()),
+                })
+            } else {
+                None
+            };
+            (summary, levels)
+        }
+    }
+}
+
+/// ILU(0): incomplete LU on `A`'s pattern. Returns the strict lower
+/// triangle of `L` (unit diagonal implied), the strict upper triangle
+/// of `U`, and `U`'s diagonal.
+#[allow(clippy::type_complexity)]
+fn ilu0_factor<T: Scalar>(
+    csr: &Csr<T>,
+) -> Result<(Csr<T>, Csr<T>, Vec<T>), PrecondError> {
+    let n = csr.rows;
+    if csr.rows != csr.cols {
+        return Err(PrecondError::NotSquare {
+            rows: csr.rows,
+            cols: csr.cols,
+        });
+    }
+    // Diagonal positions up front: a structurally missing pivot is an
+    // immediate error.
+    let mut diag_pos = vec![usize::MAX; n];
+    for r in 0..n {
+        for k in csr.row_range(r) {
+            if csr.colidx[k] as usize == r {
+                diag_pos[r] = k;
+            }
+        }
+        if diag_pos[r] == usize::MAX {
+            return Err(PrecondError::ZeroPivot { row: r });
+        }
+    }
+    let mut luval = csr.values.clone();
+    // Dense column → position scatter for the current row (usize::MAX
+    // = column absent from the row's pattern).
+    let mut pos = vec![usize::MAX; n];
+    for i in 0..n {
+        for k in csr.row_range(i) {
+            pos[csr.colidx[k] as usize] = k;
+        }
+        // IKJ: eliminate with every row k < i present in row i's
+        // pattern, in ascending column order (CSR columns are sorted).
+        for kk in csr.row_range(i) {
+            let k = csr.colidx[kk] as usize;
+            if k >= i {
+                break;
+            }
+            let ukk = luval[diag_pos[k]];
+            if ukk == T::ZERO {
+                return Err(PrecondError::ZeroPivot { row: k });
+            }
+            let lik = luval[kk] / ukk;
+            luval[kk] = lik;
+            for jj in diag_pos[k] + 1..csr.rowptr[k + 1] as usize {
+                let p = pos[csr.colidx[jj] as usize];
+                if p != usize::MAX {
+                    luval[p] -= lik * luval[jj];
+                }
+            }
+        }
+        if luval[diag_pos[i]] == T::ZERO {
+            return Err(PrecondError::ZeroPivot { row: i });
+        }
+        for k in csr.row_range(i) {
+            pos[csr.colidx[k] as usize] = usize::MAX;
+        }
+    }
+    // Split the in-place factor into L (strict lower) / U (diag +
+    // strict upper).
+    let mut lo_ptr = Vec::with_capacity(n + 1);
+    let mut lo_ci = Vec::new();
+    let mut lo_v = Vec::new();
+    let mut up_ptr = Vec::with_capacity(n + 1);
+    let mut up_ci = Vec::new();
+    let mut up_v = Vec::new();
+    let mut udiag = vec![T::ZERO; n];
+    lo_ptr.push(0u32);
+    up_ptr.push(0u32);
+    for r in 0..n {
+        for k in csr.row_range(r) {
+            let c = csr.colidx[k] as usize;
+            match c.cmp(&r) {
+                std::cmp::Ordering::Less => {
+                    lo_ci.push(c as u32);
+                    lo_v.push(luval[k]);
+                }
+                std::cmp::Ordering::Equal => udiag[r] = luval[k],
+                std::cmp::Ordering::Greater => {
+                    up_ci.push(c as u32);
+                    up_v.push(luval[k]);
+                }
+            }
+        }
+        lo_ptr.push(lo_ci.len() as u32);
+        up_ptr.push(up_ci.len() as u32);
+    }
+    let lower = Csr {
+        rows: n,
+        cols: n,
+        rowptr: lo_ptr,
+        colidx: lo_ci,
+        values: lo_v,
+    };
+    let upper = Csr {
+        rows: n,
+        cols: n,
+        rowptr: up_ptr,
+        colidx: up_ci,
+        values: up_v,
+    };
+    Ok((lower, upper, udiag))
+}
+
+/// Parsed preconditioner choice — the CLI/plan-level name for a
+/// preconditioner, buildable against any matrix.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PrecondKind {
+    /// No preconditioning (identity `M`).
+    None,
+    /// Diagonal scaling.
+    Jacobi,
+    /// Symmetric Gauss–Seidel with the given sweep count.
+    SymGs {
+        /// Forward+backward sweep pairs per application.
+        sweeps: usize,
+    },
+    /// Incomplete LU on the matrix's own pattern.
+    Ilu0,
+}
+
+impl PrecondKind {
+    /// Parses `none`, `jacobi`, `symgs` (= 1 sweep), `symgs(n)`,
+    /// `ilu0`. Trailing garbage is rejected.
+    pub fn parse(s: &str) -> Option<PrecondKind> {
+        let t = s.trim().to_ascii_lowercase();
+        match t.as_str() {
+            "none" | "identity" => return Some(PrecondKind::None),
+            "jacobi" => return Some(PrecondKind::Jacobi),
+            "symgs" => return Some(PrecondKind::SymGs { sweeps: 1 }),
+            "ilu0" => return Some(PrecondKind::Ilu0),
+            _ => {}
+        }
+        let inner = t.strip_prefix("symgs(")?.strip_suffix(')')?;
+        let sweeps: usize = inner.trim().parse().ok()?;
+        if sweeps == 0 {
+            return None;
+        }
+        Some(PrecondKind::SymGs { sweeps })
+    }
+
+    /// Whether triangular solves (and hence a level schedule) are
+    /// involved.
+    pub fn has_levels(&self) -> bool {
+        matches!(self, PrecondKind::SymGs { .. } | PrecondKind::Ilu0)
+    }
+
+    /// Builds the preconditioner against `csr`, analyzing the level
+    /// structure from scratch.
+    pub fn build<T: Scalar>(
+        &self,
+        csr: &Csr<T>,
+        pool: Option<&Arc<WorkerPool>>,
+    ) -> Result<Box<dyn Preconditioner<T>>, PrecondError> {
+        self.build_planned(csr, pool, None)
+    }
+
+    /// Builds the preconditioner reusing a persisted level-schedule
+    /// decision (from a [`super::SolvePlan`]); `None` falls back to
+    /// fresh analysis.
+    pub fn build_planned<T: Scalar>(
+        &self,
+        csr: &Csr<T>,
+        pool: Option<&Arc<WorkerPool>>,
+        planned: Option<LevelSummary>,
+    ) -> Result<Box<dyn Preconditioner<T>>, PrecondError> {
+        Ok(match *self {
+            PrecondKind::None => Box::new(IdentityPrecond),
+            PrecondKind::Jacobi => Box::new(Jacobi::new(csr)?),
+            PrecondKind::SymGs { sweeps } => {
+                Box::new(SymGs::with_decision(csr, sweeps, pool, planned)?)
+            }
+            PrecondKind::Ilu0 => {
+                Box::new(Ilu0::with_decision(csr, pool, planned)?)
+            }
+        })
+    }
+}
+
+impl std::fmt::Display for PrecondKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match *self {
+            PrecondKind::None => write!(f, "none"),
+            PrecondKind::Jacobi => write!(f, "jacobi"),
+            PrecondKind::SymGs { sweeps } => write!(f, "symgs({sweeps})"),
+            PrecondKind::Ilu0 => write!(f, "ilu0"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::suite;
+
+    #[test]
+    fn parse_and_display_round_trip() {
+        for k in [
+            PrecondKind::None,
+            PrecondKind::Jacobi,
+            PrecondKind::SymGs { sweeps: 1 },
+            PrecondKind::SymGs { sweeps: 3 },
+            PrecondKind::Ilu0,
+        ] {
+            assert_eq!(PrecondKind::parse(&k.to_string()), Some(k));
+        }
+        assert_eq!(
+            PrecondKind::parse("symgs"),
+            Some(PrecondKind::SymGs { sweeps: 1 })
+        );
+        assert_eq!(PrecondKind::parse("symgs(0)"), None);
+        assert_eq!(PrecondKind::parse("symgs(2)x"), None);
+        assert_eq!(PrecondKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn jacobi_rejects_zero_and_missing_diagonal() {
+        // Row 1 has an explicit zero diagonal.
+        let a = Csr::from_raw(
+            2,
+            2,
+            vec![0, 1, 3],
+            vec![0, 0, 1],
+            vec![2.0, 1.0, 0.0],
+        )
+        .unwrap();
+        assert_eq!(
+            Jacobi::new(&a).err(),
+            Some(PrecondError::ZeroDiagonal { row: 1 })
+        );
+        // Row 0 has no diagonal entry at all.
+        let b = Csr::from_raw(2, 2, vec![0, 1, 2], vec![1, 1], vec![1.0, 1.0])
+            .unwrap();
+        assert_eq!(
+            Jacobi::new(&b).err(),
+            Some(PrecondError::ZeroDiagonal { row: 0 })
+        );
+    }
+
+    #[test]
+    fn ilu0_is_exact_for_triangular_pattern_fill() {
+        // On a tridiagonal matrix ILU(0) is a *complete* LU (no fill
+        // outside the pattern exists), so M⁻¹·r solves A·z = r
+        // exactly: check A·z ≈ r.
+        let n = 64usize;
+        let mut rowptr = vec![0u32];
+        let mut colidx = Vec::new();
+        let mut values = Vec::new();
+        for i in 0..n {
+            if i > 0 {
+                colidx.push((i - 1) as u32);
+                values.push(-1.0);
+            }
+            colidx.push(i as u32);
+            values.push(2.0);
+            if i + 1 < n {
+                colidx.push((i + 1) as u32);
+                values.push(-1.0);
+            }
+            rowptr.push(colidx.len() as u32);
+        }
+        let a = Csr::from_raw(n, n, rowptr, colidx, values).unwrap();
+        let m = Ilu0::new(&a, None).unwrap();
+        let n = a.rows;
+        let r: Vec<f64> = (0..n).map(|i| ((i * 3) % 5) as f64 - 2.0).collect();
+        let mut z = vec![0.0; n];
+        m.apply(&r, &mut z);
+        let mut az = vec![0.0; n];
+        a.spmv_ref(&z, &mut az);
+        for i in 0..n {
+            assert!((az[i] - r[i]).abs() < 1e-10, "row {i}");
+        }
+    }
+
+    #[test]
+    fn ilu0_reports_zero_pivot() {
+        // A singular leading 1x1 block: a11 = 0 with no lower
+        // neighbors → pivot 0.
+        let a = Csr::from_raw(
+            2,
+            2,
+            vec![0, 2, 4],
+            vec![0, 1, 0, 1],
+            vec![0.0, 1.0, 1.0, 1.0],
+        )
+        .unwrap();
+        assert_eq!(
+            Ilu0::<f64>::new(&a, None).err(),
+            Some(PrecondError::ZeroPivot { row: 0 })
+        );
+    }
+
+    #[test]
+    fn symgs_apply_matches_direct_sweeps() {
+        let a = suite::poisson2d(10);
+        let split = a.triangular_split().unwrap();
+        let m = SymGs::new(&a, 2, None).unwrap();
+        let n = a.rows;
+        let r: Vec<f64> = (0..n).map(|i| (i % 4) as f64 - 1.5).collect();
+        let mut z = vec![0.0; n];
+        m.apply(&r, &mut z);
+        let mut want = vec![0.0; n];
+        crate::kernels::symgs::symgs(&split, &r, &mut want, 2);
+        assert_eq!(z, want);
+        assert!(m.level_summary().is_some());
+    }
+
+    #[test]
+    fn planned_sequential_build_skips_analysis_but_matches() {
+        let a = suite::poisson2d(12);
+        let kind = PrecondKind::SymGs { sweeps: 1 };
+        let fresh = kind.build(&a, None).unwrap();
+        let summary = fresh.level_summary().unwrap();
+        assert!(!summary.parallel);
+        let planned = kind.build_planned(&a, None, Some(summary)).unwrap();
+        let n = a.rows;
+        let r: Vec<f64> = (0..n).map(|i| (i % 3) as f64).collect();
+        let mut z1 = vec![0.0; n];
+        fresh.apply(&r, &mut z1);
+        let mut z2 = vec![0.0; n];
+        planned.apply(&r, &mut z2);
+        assert_eq!(z1, z2);
+    }
+
+    #[test]
+    fn parallel_and_sequential_ilu0_agree_bitwise() {
+        let a = suite::poisson2d(48);
+        let pool = Arc::new(WorkerPool::new(4));
+        let seq = Ilu0::new(&a, None).unwrap();
+        let par = Ilu0::new(&a, Some(&pool)).unwrap();
+        assert!(par.level_summary().unwrap().parallel);
+        let n = a.rows;
+        let r: Vec<f64> = (0..n).map(|i| ((i * 7) % 11) as f64 - 5.0).collect();
+        let mut z1 = vec![0.0; n];
+        seq.apply(&r, &mut z1);
+        let mut z2 = vec![0.0; n];
+        par.apply(&r, &mut z2);
+        assert_eq!(z1, z2);
+    }
+}

@@ -1,0 +1,361 @@
+//! Serializable solve plans: the inspector–executor split
+//! ([`super::SpmvPlan`]) extended to a whole preconditioned solve.
+//!
+//! A [`SolvePlan`] records the solver, the preconditioner choice and
+//! the level-schedule decision **next to** the inner SpMV plan, so a
+//! repeat solve on the same matrix skips both the SpMV inspection
+//! (kernel selection, tile sizing) and the triangular level analysis:
+//! [`solve_from_plan`] rebuilds the engine with
+//! [`SpmvEngine::from_plan`] and the preconditioner with
+//! [`super::PrecondKind::build_planned`]. The inner plan's
+//! [`super::MatrixFingerprint`] still refuses instantiation against
+//! the wrong matrix, and plans persist through the same
+//! checksummed-envelope files as every other durable artifact
+//! ([`crate::util::durable`]).
+
+use std::path::Path;
+
+use super::engine::SpmvEngine;
+use super::plan::SpmvPlan;
+use super::precond::{PrecondKind, Preconditioner};
+use crate::matrix::Csr;
+use crate::parallel::LevelSummary;
+use crate::scalar::Scalar;
+use crate::util::durable::{self, RawState, StateError, StateErrorKind};
+use crate::util::json::Json;
+
+/// Current solve-plan schema version.
+pub const SOLVE_PLAN_VERSION: u32 = 1;
+
+/// Which Krylov driver a solve plan runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SolverKind {
+    /// Unpreconditioned conjugate gradient ([`super::cg_solve`]).
+    Cg,
+    /// Preconditioned conjugate gradient ([`super::pcg_with`]).
+    Pcg,
+    /// BiCGSTAB for general square systems ([`super::bicgstab`]).
+    BiCgStab,
+}
+
+impl SolverKind {
+    /// Parses `cg`, `pcg`, `bicgstab`.
+    pub fn parse(s: &str) -> Option<SolverKind> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "cg" => Some(SolverKind::Cg),
+            "pcg" => Some(SolverKind::Pcg),
+            "bicgstab" => Some(SolverKind::BiCgStab),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for SolverKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SolverKind::Cg => write!(f, "cg"),
+            SolverKind::Pcg => write!(f, "pcg"),
+            SolverKind::BiCgStab => write!(f, "bicgstab"),
+        }
+    }
+}
+
+/// Every decision of a preconditioned solve, as a plain serializable
+/// record — see the module docs for the lifecycle.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SolvePlan {
+    /// Schema version ([`SOLVE_PLAN_VERSION`]).
+    pub version: u32,
+    /// The Krylov driver.
+    pub solver: SolverKind,
+    /// The preconditioner choice (buildable against the matrix).
+    pub precond: PrecondKind,
+    /// The persisted level-schedule decision for triangular-solve
+    /// preconditioners (`None` for `none`/`jacobi`): a planned build
+    /// reuses the sequential-vs-parallel verdict instead of
+    /// re-analyzing the dependency levels.
+    pub levels: Option<LevelSummary>,
+    /// The inner SpMV plan (kernel, threads, tile width, tuning, and
+    /// the matrix fingerprint that gates instantiation).
+    pub spmv: SpmvPlan,
+}
+
+impl SolvePlan {
+    /// Artifact label used in [`StateError`] and degradation events.
+    pub const ARTIFACT: &'static str = "solve-plan";
+
+    /// The identity of the matrix this plan was inspected on.
+    pub fn fingerprint(&self) -> super::plan::MatrixFingerprint {
+        self.spmv.fingerprint
+    }
+
+    /// Serializes to JSON text.
+    pub fn to_json(&self) -> String {
+        let mut fields = vec![
+            ("version", Json::Num(self.version as f64)),
+            ("solver", Json::Str(self.solver.to_string())),
+            ("precond", Json::Str(self.precond.to_string())),
+        ];
+        if let Some(l) = self.levels {
+            fields.push((
+                "levels",
+                Json::obj(vec![
+                    ("n_levels", Json::Num(l.n_levels as f64)),
+                    ("max_width", Json::Num(l.max_width as f64)),
+                    ("parallel", Json::Bool(l.parallel)),
+                ]),
+            ));
+        }
+        fields.push((
+            "spmv",
+            Json::parse(&self.spmv.to_json()).expect("plan emits valid json"),
+        ));
+        Json::obj(fields).to_string()
+    }
+
+    /// Parses from JSON text, rejecting malformed plans with a
+    /// descriptive error.
+    pub fn from_json(text: &str) -> anyhow::Result<SolvePlan> {
+        let v = Json::parse(text)?;
+        let dim = |k: &str| -> anyhow::Result<usize> {
+            let n = v
+                .get(k)
+                .and_then(|n| n.as_f64())
+                .ok_or_else(|| anyhow::anyhow!("solve plan: missing {k}"))?;
+            anyhow::ensure!(
+                n >= 0.0 && n.fract() == 0.0,
+                "solve plan: {k} must be a non-negative integer, got {n}"
+            );
+            Ok(n as usize)
+        };
+        let version = dim("version")? as u32;
+        anyhow::ensure!(
+            version >= 1 && version <= SOLVE_PLAN_VERSION,
+            "solve plan: unsupported version {version} (this build \
+             understands 1..={SOLVE_PLAN_VERSION})"
+        );
+        let solver_s = v
+            .get("solver")
+            .and_then(|s| s.as_str())
+            .ok_or_else(|| anyhow::anyhow!("solve plan: missing solver"))?;
+        let solver = SolverKind::parse(solver_s).ok_or_else(|| {
+            anyhow::anyhow!("solve plan: unknown solver '{solver_s}'")
+        })?;
+        let precond_s = v
+            .get("precond")
+            .and_then(|s| s.as_str())
+            .ok_or_else(|| anyhow::anyhow!("solve plan: missing precond"))?;
+        let precond = PrecondKind::parse(precond_s).ok_or_else(|| {
+            anyhow::anyhow!("solve plan: unknown preconditioner '{precond_s}'")
+        })?;
+        let levels = match v.get("levels") {
+            None => None,
+            Some(l) => {
+                let num = |k: &str| -> anyhow::Result<usize> {
+                    let n =
+                        l.get(k).and_then(|n| n.as_f64()).ok_or_else(|| {
+                            anyhow::anyhow!("solve plan: levels: missing {k}")
+                        })?;
+                    anyhow::ensure!(
+                        n >= 0.0 && n.fract() == 0.0,
+                        "solve plan: levels: {k} must be a non-negative \
+                         integer"
+                    );
+                    Ok(n as usize)
+                };
+                Some(LevelSummary {
+                    n_levels: num("n_levels")?,
+                    max_width: num("max_width")?,
+                    parallel: matches!(
+                        l.get("parallel"),
+                        Some(Json::Bool(true))
+                    ),
+                })
+            }
+        };
+        let spmv = SpmvPlan::from_json_value(
+            v.get("spmv")
+                .ok_or_else(|| anyhow::anyhow!("solve plan: missing spmv"))?,
+        )?;
+        Ok(SolvePlan { version, solver, precond, levels, spmv })
+    }
+
+    /// Saves the plan to a file, envelope-framed and atomically (see
+    /// [`crate::util::durable`]).
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<(), StateError> {
+        durable::save_state(
+            Self::ARTIFACT,
+            path.as_ref(),
+            &format!("{}\n", self.to_json()),
+        )
+    }
+
+    /// Loads a plan from a file. A missing file is an error (a plan
+    /// path is always explicitly named); a corrupt file is
+    /// quarantined and reported as a typed [`StateError`].
+    pub fn load(path: impl AsRef<Path>) -> Result<SolvePlan, StateError> {
+        let path = path.as_ref();
+        match durable::read_state(Self::ARTIFACT, path)? {
+            RawState::Missing => Err(StateError {
+                artifact: Self::ARTIFACT,
+                path: path.to_path_buf(),
+                kind: StateErrorKind::Io(std::io::Error::new(
+                    std::io::ErrorKind::NotFound,
+                    "no such file",
+                )),
+                quarantined_to: None,
+            }),
+            RawState::Empty => Err(StateError {
+                artifact: Self::ARTIFACT,
+                path: path.to_path_buf(),
+                kind: StateErrorKind::Malformed("file is empty".into()),
+                quarantined_to: None,
+            }),
+            RawState::Payload { text, .. } => {
+                Self::from_json(&text).map_err(|e| {
+                    durable::quarantined(
+                        Self::ARTIFACT,
+                        path,
+                        StateErrorKind::Malformed(e.to_string()),
+                    )
+                })
+            }
+        }
+    }
+}
+
+/// The executor half of a persisted solve: instantiates the engine
+/// from the inner SpMV plan (no kernel selection) and the
+/// preconditioner from the recorded choice (no level re-analysis when
+/// the plan ran sequentially).
+///
+/// Reordered engine plans are refused: under a reordering the
+/// engine's resident matrix is the *permuted* one, while the solve's
+/// right-hand side and the preconditioner's vectors live in original
+/// index space.
+pub fn solve_from_plan<T: Scalar>(
+    csr: Csr<T>,
+    plan: &SolvePlan,
+) -> anyhow::Result<(SpmvEngine<T>, Box<dyn Preconditioner<T>>)> {
+    anyhow::ensure!(
+        plan.spmv.reorder.is_none(),
+        "solve plan: reordered engines are not supported for \
+         preconditioned solves"
+    );
+    let engine = SpmvEngine::from_plan(csr, &plan.spmv)?;
+    let m = plan
+        .precond
+        .build_planned(engine.csr(), engine.pool(), plan.levels)
+        .map_err(|e| anyhow::anyhow!("solve plan: preconditioner: {e}"))?;
+    Ok((engine, m))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::KernelKind;
+    use crate::matrix::suite;
+
+    fn plan_for(csr: &crate::matrix::Csr) -> SolvePlan {
+        let spmv = SpmvEngine::builder(csr.clone())
+            .kernel(KernelKind::Beta(2, 4))
+            .plan()
+            .unwrap();
+        SolvePlan {
+            version: SOLVE_PLAN_VERSION,
+            solver: SolverKind::Pcg,
+            precond: PrecondKind::SymGs { sweeps: 2 },
+            levels: Some(LevelSummary {
+                n_levels: 23,
+                max_width: 12,
+                parallel: false,
+            }),
+            spmv,
+        }
+    }
+
+    #[test]
+    fn solver_kind_round_trips() {
+        for k in [SolverKind::Cg, SolverKind::Pcg, SolverKind::BiCgStab] {
+            assert_eq!(SolverKind::parse(&k.to_string()), Some(k));
+        }
+        assert_eq!(SolverKind::parse("gmres"), None);
+    }
+
+    #[test]
+    fn json_round_trip() {
+        let csr = suite::poisson2d(12);
+        let p = plan_for(&csr);
+        let back = SolvePlan::from_json(&p.to_json()).unwrap();
+        assert_eq!(p, back);
+        // Without a level summary (jacobi).
+        let mut q = plan_for(&csr);
+        q.precond = PrecondKind::Jacobi;
+        q.levels = None;
+        let back = SolvePlan::from_json(&q.to_json()).unwrap();
+        assert_eq!(q, back);
+    }
+
+    #[test]
+    fn json_rejects_malformed() {
+        let csr = suite::poisson2d(10);
+        let good = plan_for(&csr).to_json();
+        let bad = good.replace("\"pcg\"", "\"gmres\"");
+        assert!(SolvePlan::from_json(&bad).is_err());
+        let bad = good.replace("symgs(2)", "turboprecond");
+        assert!(SolvePlan::from_json(&bad).is_err());
+        let bad = good.replace("\"version\":1", "\"version\":99");
+        assert!(SolvePlan::from_json(&bad).is_err());
+        assert!(SolvePlan::from_json("{").is_err());
+    }
+
+    #[test]
+    fn executor_refuses_wrong_matrix_and_reorder() {
+        let csr = suite::poisson2d(12);
+        let p = plan_for(&csr);
+        // Wrong matrix: fingerprint mismatch surfaces from the inner
+        // SpMV plan.
+        let other = suite::poisson2d(13);
+        assert!(solve_from_plan(other, &p).is_err());
+        // Reordered inner plan: refused outright.
+        let mut q = p.clone();
+        q.spmv.reorder = Some(crate::matrix::ReorderKind::Rcm);
+        assert!(solve_from_plan(csr, &q).is_err());
+    }
+
+    #[test]
+    fn executor_rebuilds_engine_and_preconditioner() {
+        let csr = suite::poisson2d(12);
+        let fresh = PrecondKind::SymGs { sweeps: 2 }.build(&csr, None).unwrap();
+        let mut p = plan_for(&csr);
+        p.levels = fresh.level_summary();
+        let (engine, m) = solve_from_plan(csr.clone(), &p).unwrap();
+        assert_eq!(engine.plan().kernel, KernelKind::Beta(2, 4));
+        let n = csr.rows;
+        let r: Vec<f64> = (0..n).map(|i| (i % 5) as f64 - 2.0).collect();
+        let mut z1 = vec![0.0; n];
+        fresh.apply(&r, &mut z1);
+        let mut z2 = vec![0.0; n];
+        m.apply(&r, &mut z2);
+        assert_eq!(z1, z2);
+        assert_eq!(m.level_summary(), p.levels);
+    }
+
+    #[test]
+    fn save_and_load_round_trip() {
+        let dir = std::env::temp_dir().join(format!(
+            "spc5-solve-plan-{}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("plan.json");
+        let csr = suite::poisson2d(10);
+        let p = plan_for(&csr);
+        p.save(&path).unwrap();
+        let back = SolvePlan::load(&path).unwrap();
+        assert_eq!(p, back);
+        // A missing file is a typed error, not a default.
+        assert!(SolvePlan::load(dir.join("absent.json")).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,46 +1,35 @@
 //! Additional Krylov solvers on top of the engine's SpMV — the
 //! workloads the paper's introduction motivates ("iterative solvers
-//! based on Krylov subspaces"): Jacobi-preconditioned CG for SPD
-//! systems and BiCGSTAB for general square systems. Both touch the
-//! matrix exclusively through [`SpmvEngine::spmv_into`], so every
-//! iteration exercises the paper's kernels — at either precision
-//! (vectors in `T`, Krylov scalars accumulated in f64) — and, on a
-//! parallel engine, runs on the engine's persistent worker pool (one
-//! pool for the whole solve, no per-iteration thread spawning).
+//! based on Krylov subspaces"): preconditioned CG for SPD systems
+//! (any [`Preconditioner`] via [`pcg_with`]) and BiCGSTAB for general
+//! square systems. Both touch the matrix exclusively through
+//! [`SpmvEngine::spmv_into`], so every iteration exercises the
+//! paper's kernels — at either precision (vectors in `T`, Krylov
+//! scalars accumulated in f64) — and, on a parallel engine, runs on
+//! the engine's persistent worker pool (one pool for the whole solve,
+//! no per-iteration thread spawning).
 
 use super::cg::{dot_f64, CgReport};
 use super::engine::SpmvEngine;
+use super::precond::Preconditioner;
 use crate::scalar::Scalar;
 
-/// Extracts the diagonal of the engine's matrix (Jacobi preconditioner).
-fn diagonal<T: Scalar>(engine: &SpmvEngine<T>) -> Vec<T> {
-    let csr = engine.csr();
-    let mut d = vec![T::ZERO; csr.rows];
-    for r in 0..csr.rows {
-        for k in csr.row_range(r) {
-            if csr.colidx[k] as usize == r {
-                d[r] = csr.values[k];
-            }
-        }
-    }
-    d
-}
-
-/// Jacobi-preconditioned conjugate gradient for SPD systems.
-/// `x` holds the initial guess on entry and the solution on exit.
-pub fn pcg_jacobi<T: Scalar>(
+/// Preconditioned conjugate gradient for SPD systems: CG on
+/// `M⁻¹A x = M⁻¹b` with `M` supplied as any [`Preconditioner`]
+/// (Jacobi, SymGS, ILU(0), or the identity). `x` holds the initial
+/// guess on entry and the solution on exit. Stops at `max_iters` or
+/// when the squared residual drops below `tol2`; a zero `p·Ap`
+/// denominator stops early with [`CgReport::breakdown`] set.
+pub fn pcg_with<T: Scalar>(
     engine: &SpmvEngine<T>,
+    m: &dyn Preconditioner<T>,
     b: &[T],
     x: &mut [T],
     max_iters: usize,
     tol2: f64,
 ) -> CgReport {
     let n = b.len();
-    let d = diagonal(engine);
-    let dinv: Vec<T> = d
-        .iter()
-        .map(|&v| if v != T::ZERO { T::ONE / v } else { T::ONE })
-        .collect();
+    assert_eq!(x.len(), n);
 
     let mut r = vec![T::ZERO; n];
     engine.spmv_into(x, &mut r);
@@ -48,18 +37,21 @@ pub fn pcg_jacobi<T: Scalar>(
     for i in 0..n {
         r[i] = b[i] - r[i];
     }
-    let mut z: Vec<T> = r.iter().zip(&dinv).map(|(&ri, &di)| ri * di).collect();
+    let mut z = vec![T::ZERO; n];
+    m.apply(&r, &mut z);
     let mut p = z.clone();
     let mut rz = dot_f64(&r, &z);
     let mut ap = vec![T::ZERO; n];
 
     let mut iterations = 0usize;
+    let mut broke = false;
     let mut rs: f64 = dot_f64(&r, &r);
     while iterations < max_iters && rs > tol2 {
         engine.spmv_into(&p, &mut ap);
         spmv_count += 1;
         let denom = dot_f64(&p, &ap);
         if denom == 0.0 {
+            broke = true;
             break;
         }
         let alpha = T::from_f64(rz / denom);
@@ -67,9 +59,7 @@ pub fn pcg_jacobi<T: Scalar>(
             x[i] += alpha * p[i];
             r[i] -= alpha * ap[i];
         }
-        for i in 0..n {
-            z[i] = r[i] * dinv[i];
-        }
+        m.apply(&r, &mut z);
         let rz_new = dot_f64(&r, &z);
         let beta = T::from_f64(rz_new / rz);
         for i in 0..n {
@@ -84,7 +74,55 @@ pub fn pcg_jacobi<T: Scalar>(
         residual_norm2: rs,
         converged: rs <= tol2,
         spmv_count,
+        breakdown: broke && rs > tol2,
     }
+}
+
+/// The historical lenient Jacobi: rows with a zero or missing
+/// diagonal get `1` substituted. Kept only for [`pcg_jacobi`]
+/// compatibility — [`super::Jacobi`] rejects such rows with a typed
+/// error instead.
+struct LenientJacobi<T: Scalar> {
+    dinv: Vec<T>,
+}
+
+impl<T: Scalar> Preconditioner<T> for LenientJacobi<T> {
+    fn apply(&self, r: &[T], z: &mut [T]) {
+        for i in 0..z.len() {
+            z[i] = r[i] * self.dinv[i];
+        }
+    }
+    fn name(&self) -> String {
+        "jacobi(lenient)".into()
+    }
+}
+
+/// Jacobi-preconditioned conjugate gradient for SPD systems.
+/// `x` holds the initial guess on entry and the solution on exit.
+///
+/// Deprecation note: this shim keeps the historical behavior of
+/// silently treating zero/missing diagonal entries as `1` — which can
+/// mask a broken preconditioner behind slow convergence. New code
+/// should build a [`super::Jacobi`] (which returns a typed
+/// [`super::PrecondError::ZeroDiagonal`] error instead) and call
+/// [`pcg_with`].
+pub fn pcg_jacobi<T: Scalar>(
+    engine: &SpmvEngine<T>,
+    b: &[T],
+    x: &mut [T],
+    max_iters: usize,
+    tol2: f64,
+) -> CgReport {
+    let csr = engine.csr();
+    let mut dinv = vec![T::ONE; csr.rows];
+    for r in 0..csr.rows {
+        for k in csr.row_range(r) {
+            if csr.colidx[k] as usize == r && csr.values[k] != T::ZERO {
+                dinv[r] = T::ONE / csr.values[k];
+            }
+        }
+    }
+    pcg_with(engine, &LenientJacobi { dinv }, b, x, max_iters, tol2)
 }
 
 /// BiCGSTAB for general (non-symmetric) square systems.
@@ -112,11 +150,13 @@ pub fn bicgstab<T: Scalar>(
     let mut t = vec![T::ZERO; n];
 
     let mut iterations = 0usize;
+    let mut broke = false;
     let mut rs = dot_f64(&r, &r);
     while iterations < max_iters && rs > tol2 {
         let rho_new = dot_f64(&r0, &r);
         if rho_new == 0.0 {
-            break; // breakdown
+            broke = true; // ρ breakdown
+            break;
         }
         let beta = T::from_f64((rho_new / rho) * (alpha / omega));
         let omega_t = T::from_f64(omega);
@@ -127,6 +167,7 @@ pub fn bicgstab<T: Scalar>(
         spmv_count += 1;
         let r0v = dot_f64(&r0, &v);
         if r0v == 0.0 {
+            broke = true; // r₀·v breakdown
             break;
         }
         alpha = rho_new / r0v;
@@ -147,6 +188,7 @@ pub fn bicgstab<T: Scalar>(
         rs = dot_f64(&r, &r);
         iterations += 1;
         if omega == 0.0 {
+            broke = true; // ω breakdown (stagnated half-step)
             break;
         }
     }
@@ -155,6 +197,7 @@ pub fn bicgstab<T: Scalar>(
         residual_norm2: rs,
         converged: rs <= tol2,
         spmv_count,
+        breakdown: broke && rs > tol2,
     }
 }
 
@@ -278,8 +321,114 @@ mod tests {
         let mut x = vec![0.0; csr.rows];
         let r = pcg_jacobi(&engine, &b, &mut x, 10, 1e-30);
         assert_eq!(r.spmv_count, r.iterations + 1);
+        assert!(!r.breakdown);
         let mut x = vec![0.0; csr.rows];
         let r = bicgstab(&engine, &b, &mut x, 10, 1e-30);
         assert_eq!(r.spmv_count, 2 * r.iterations + 1);
+        // Max-iters exit, not a numerical breakdown.
+        assert!(!r.breakdown);
+    }
+
+    #[test]
+    fn pcg_flags_breakdown_on_indefinite_system() {
+        // diag(1, −1) makes p·Ap vanish on the first iteration for
+        // b = (1, 1): the solver must report breakdown, not just
+        // "didn't converge".
+        let a = Csr::from_raw(
+            2,
+            2,
+            vec![0, 1, 2],
+            vec![0, 1],
+            vec![1.0, -1.0],
+        )
+        .unwrap();
+        let engine = engine_for(a, KernelKind::Csr);
+        let b = vec![1.0, 1.0];
+        let mut x = vec![0.0, 0.0];
+        let r = pcg_jacobi(&engine, &b, &mut x, 50, 1e-20);
+        assert!(r.breakdown, "{r:?}");
+        assert!(!r.converged);
+        let mut x = vec![0.0, 0.0];
+        let r = super::super::cg::cg_solve(&engine, &b, &mut x, 50, 1e-20);
+        assert!(r.breakdown, "{r:?}");
+        assert!(!r.converged);
+    }
+
+    #[test]
+    fn pcg_jacobi_shim_stays_lenient_on_zero_diagonal() {
+        // Historical behavior regression: a zero diagonal entry gets
+        // the identity substituted, so the shim still runs (and CG on
+        // this SPD-after-substitution system converges) where the
+        // typed `Jacobi::new` refuses.
+        let a = Csr::from_raw(
+            2,
+            2,
+            vec![0, 2, 4],
+            vec![0, 1, 0, 1],
+            vec![0.0, 1.0, 1.0, 0.0],
+        )
+        .unwrap();
+        assert!(matches!(
+            crate::coordinator::Jacobi::new(&a).err(),
+            Some(crate::coordinator::PrecondError::ZeroDiagonal { row: 0 })
+        ));
+        let engine = engine_for(a, KernelKind::Csr);
+        let b = vec![1.0, 2.0];
+        let mut x = vec![0.0, 0.0];
+        // A = [[0,1],[1,0]] is a permutation: solution (2, 1).
+        let r = pcg_jacobi(&engine, &b, &mut x, 50, 1e-24);
+        assert!(r.converged, "{r:?}");
+        assert!((x[0] - 2.0).abs() < 1e-9 && (x[1] - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn pcg_with_symgs_and_ilu0_beat_jacobi_and_plain_cg() {
+        // The acceptance fixture: the ill-conditioned scaled Poisson
+        // system. Stronger preconditioners must take strictly fewer
+        // iterations: ilu0 ≤ symgs ≤ jacobi < none.
+        let base = suite::poisson2d(14);
+        let scale = |i: usize| -> f64 { 10f64.powf((i % 7) as f64 / 2.0) };
+        let mut coo = Coo::new(base.rows, base.cols);
+        for r in 0..base.rows {
+            for k in base.row_range(r) {
+                let c = base.colidx[k] as usize;
+                coo.push(r, c, base.values[k] * scale(r) * scale(c));
+            }
+        }
+        let scaled = coo.to_csr().unwrap();
+        let engine = engine_for(scaled.clone(), KernelKind::Beta(2, 4));
+        let mut rng = Rng::new(12);
+        let b: Vec<f64> =
+            (0..scaled.rows).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+
+        let iters_with = |kind: crate::coordinator::PrecondKind| -> usize {
+            let m = kind.build(engine.csr(), None).unwrap();
+            let mut x = vec![0.0; scaled.rows];
+            let r = pcg_with(&engine, m.as_ref(), &b, &mut x, 6000, 1e-16);
+            assert!(r.converged, "{kind}: {r:?}");
+            // Every preconditioned path reaches the same solution.
+            let mut ax = vec![0.0; scaled.rows];
+            scaled.spmv_ref(&x, &mut ax);
+            for i in 0..scaled.rows {
+                assert!((ax[i] - b[i]).abs() < 1e-5, "{kind} row {i}");
+            }
+            r.iterations
+        };
+        let mut x = vec![0.0; scaled.rows];
+        let cg =
+            super::super::cg::cg_solve(&engine, &b, &mut x, 6000, 1e-16);
+        assert!(cg.converged, "{cg:?}");
+        let jacobi = iters_with(crate::coordinator::PrecondKind::Jacobi);
+        let symgs =
+            iters_with(crate::coordinator::PrecondKind::SymGs { sweeps: 1 });
+        let ilu0 = iters_with(crate::coordinator::PrecondKind::Ilu0);
+        assert!(
+            jacobi < cg.iterations,
+            "jacobi {jacobi} vs cg {}",
+            cg.iterations
+        );
+        assert!(symgs < jacobi, "symgs {symgs} vs jacobi {jacobi}");
+        assert!(ilu0 <= symgs, "ilu0 {ilu0} vs symgs {symgs}");
+        assert!(ilu0 < cg.iterations && symgs < cg.iterations);
     }
 }

@@ -10,8 +10,14 @@
 //! - [`csr`] — tuned CSR baseline (the "Intel MKL" stand-in).
 //! - [`csr5`] — re-implementation of the CSR5 format and kernel
 //!   (Liu & Vinter 2015), the paper's second comparator.
+//! - [`sptrsv`] — masked triangular solves (forward/backward
+//!   substitution) over the same β block storage, optionally
+//!   level-scheduled on the worker pool.
+//! - [`symgs`] — Gauss–Seidel sweeps (forward/backward/symmetric) over
+//!   a [`crate::matrix::TriangularSplit`], the SymGS preconditioner
+//!   workhorse.
 //!
-//! All kernels compute `y += A·x` (accumulating, like the paper's
+//! All SpMV kernels compute `y += A·x` (accumulating, like the paper's
 //! `vaddsd` into `y`), so callers zero `y` when they need `y = A·x`.
 
 pub mod avx512;
@@ -19,6 +25,8 @@ pub mod csr;
 pub mod csr5;
 pub mod scalar;
 pub mod spmm;
+pub mod sptrsv;
+pub mod symgs;
 
 pub use avx512::{default_tune, TuneParams, VARIANT_TABLE};
 

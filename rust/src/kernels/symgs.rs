@@ -1,0 +1,224 @@
+//! Gauss–Seidel sweeps (SymGS) over a [`TriangularSplit`] — the
+//! smoother/preconditioner companion of the triangular solves in
+//! [`super::sptrsv`].
+//!
+//! A forward sweep updates rows ascending with
+//! `x[r] ← (b[r] − L·x_new − U·x_old) / d[r]`; a backward sweep
+//! mirrors it descending; a symmetric sweep is one of each. Per row,
+//! the off-diagonal sum accumulates the strict-lower entries then the
+//! strict-upper entries — exactly the ascending-column order a full
+//! CSR row walk would use (every lower column < r < every upper
+//! column), so the split-based sweep is **bit-identical** to classic
+//! in-place CSR Gauss–Seidel.
+//!
+//! The level-scheduled variants ([`gs_forward_levels`] /
+//! [`gs_backward_levels`]) read the *previous* iterate from a
+//! snapshot for the not-yet-swept side: a sequential forward sweep at
+//! row `r` reads `x_old` for columns `> r`, and the snapshot is
+//! exactly `x_old` — while the swept side's columns live in strictly
+//! earlier levels and are final. The parallel sweep is therefore
+//! bit-identical to the sequential one (at the cost of one vector
+//! copy per half-sweep), not merely tolerance-close — important for
+//! the chaotic-relaxation trap where same-level rows of a
+//! structurally non-symmetric pattern would otherwise race.
+
+use crate::matrix::TriangularSplit;
+use crate::parallel::levels::LevelSchedule;
+use crate::parallel::{run_levels, WorkerPool};
+use crate::scalar::Scalar;
+
+/// One forward Gauss–Seidel sweep, in place:
+/// `x ← (D + L)⁻¹ (b − U x)` computed row-by-row ascending.
+pub fn gs_forward<T: Scalar>(split: &TriangularSplit<T>, b: &[T], x: &mut [T]) {
+    let n = split.n();
+    assert!(b.len() == n && x.len() == n);
+    for r in 0..n {
+        let mut s = T::ZERO;
+        for k in split.lower.row_range(r) {
+            s += split.lower.values[k] * x[split.lower.colidx[k] as usize];
+        }
+        for k in split.upper.row_range(r) {
+            s += split.upper.values[k] * x[split.upper.colidx[k] as usize];
+        }
+        x[r] = (b[r] - s) / split.diag[r];
+    }
+}
+
+/// One backward Gauss–Seidel sweep, in place:
+/// `x ← (D + U)⁻¹ (b − L x)` computed row-by-row descending.
+pub fn gs_backward<T: Scalar>(
+    split: &TriangularSplit<T>,
+    b: &[T],
+    x: &mut [T],
+) {
+    let n = split.n();
+    assert!(b.len() == n && x.len() == n);
+    for r in (0..n).rev() {
+        let mut s = T::ZERO;
+        for k in split.lower.row_range(r) {
+            s += split.lower.values[k] * x[split.lower.colidx[k] as usize];
+        }
+        for k in split.upper.row_range(r) {
+            s += split.upper.values[k] * x[split.upper.colidx[k] as usize];
+        }
+        x[r] = (b[r] - s) / split.diag[r];
+    }
+}
+
+/// `sweeps` symmetric Gauss–Seidel sweeps (forward + backward each),
+/// in place.
+pub fn symgs<T: Scalar>(
+    split: &TriangularSplit<T>,
+    b: &[T],
+    x: &mut [T],
+    sweeps: usize,
+) {
+    for _ in 0..sweeps {
+        gs_forward(split, b, x);
+        gs_backward(split, b, x);
+    }
+}
+
+/// Level-scheduled forward sweep: bit-identical to [`gs_forward`] (see
+/// the module docs for the snapshot argument). `sched` must be the
+/// lower-triangle levels ([`crate::parallel::lower_levels`]).
+pub fn gs_forward_levels<T: Scalar>(
+    split: &TriangularSplit<T>,
+    sched: &LevelSchedule,
+    pool: &WorkerPool,
+    b: &[T],
+    x: &mut [T],
+) {
+    let n = split.n();
+    assert!(b.len() == n && x.len() == n);
+    let snap = x.to_vec();
+    run_levels(pool, sched, x, |row, rd| {
+        let mut s = T::ZERO;
+        for k in split.lower.row_range(row) {
+            // Swept side: columns < row live in earlier levels — final.
+            s += split.lower.values[k] * rd.get(split.lower.colidx[k] as usize);
+        }
+        for k in split.upper.row_range(row) {
+            // Unswept side: the previous iterate, from the snapshot.
+            s += split.upper.values[k] * snap[split.upper.colidx[k] as usize];
+        }
+        (b[row] - s) / split.diag[row]
+    });
+}
+
+/// Level-scheduled backward sweep: bit-identical to [`gs_backward`].
+/// `sched` must be the upper-triangle levels
+/// ([`crate::parallel::upper_levels`]).
+pub fn gs_backward_levels<T: Scalar>(
+    split: &TriangularSplit<T>,
+    sched: &LevelSchedule,
+    pool: &WorkerPool,
+    b: &[T],
+    x: &mut [T],
+) {
+    let n = split.n();
+    assert!(b.len() == n && x.len() == n);
+    let snap = x.to_vec();
+    run_levels(pool, sched, x, |row, rd| {
+        let mut s = T::ZERO;
+        for k in split.lower.row_range(row) {
+            s += split.lower.values[k] * snap[split.lower.colidx[k] as usize];
+        }
+        for k in split.upper.row_range(row) {
+            s += split.upper.values[k] * rd.get(split.upper.colidx[k] as usize);
+        }
+        (b[row] - s) / split.diag[row]
+    });
+}
+
+/// `sweeps` level-scheduled symmetric sweeps — bit-identical to
+/// [`symgs`].
+pub fn symgs_levels<T: Scalar>(
+    split: &TriangularSplit<T>,
+    fwd: &LevelSchedule,
+    bwd: &LevelSchedule,
+    pool: &WorkerPool,
+    b: &[T],
+    x: &mut [T],
+    sweeps: usize,
+) {
+    for _ in 0..sweeps {
+        gs_forward_levels(split, fwd, pool, b, x);
+        gs_backward_levels(split, bwd, pool, b, x);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::suite;
+    use crate::parallel::{lower_levels, upper_levels};
+
+    /// In-place Gauss–Seidel straight off the full CSR matrix — the
+    /// classic formulation the split-based sweep must reproduce
+    /// bit-for-bit.
+    fn gs_forward_csr(csr: &crate::matrix::Csr, b: &[f64], x: &mut [f64]) {
+        for r in 0..csr.rows {
+            let mut s = 0.0;
+            let mut d = 0.0;
+            for k in csr.row_range(r) {
+                let c = csr.colidx[k] as usize;
+                if c == r {
+                    d = csr.values[k];
+                } else {
+                    s += csr.values[k] * x[c];
+                }
+            }
+            x[r] = (b[r] - s) / d;
+        }
+    }
+
+    #[test]
+    fn forward_sweep_bit_identical_to_csr_walk() {
+        let csr = suite::poisson2d(14);
+        let split = csr.triangular_split().unwrap();
+        let n = csr.rows;
+        let b: Vec<f64> = (0..n).map(|i| ((i * 5) % 9) as f64 - 4.0).collect();
+        let mut want = vec![0.25; n];
+        gs_forward_csr(&csr, &b, &mut want);
+        let mut got = vec![0.25; n];
+        gs_forward(&split, &b, &mut got);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn sweeps_reduce_residual_monotonically_on_poisson() {
+        let csr = suite::poisson2d(12);
+        let split = csr.triangular_split().unwrap();
+        let n = csr.rows;
+        let b = vec![1.0; n];
+        let residual = |x: &[f64]| -> f64 {
+            let mut ax = vec![0.0; n];
+            csr.spmv_ref(x, &mut ax);
+            (0..n).map(|i| (b[i] - ax[i]).powi(2)).sum::<f64>()
+        };
+        let mut x = vec![0.0; n];
+        let mut last = residual(&x);
+        for sweep in 0..5 {
+            symgs(&split, &b, &mut x, 1);
+            let now = residual(&x);
+            assert!(now < last, "sweep {sweep}: {now} !< {last}");
+            last = now;
+        }
+    }
+
+    #[test]
+    fn level_scheduled_sweeps_bit_identical() {
+        let split = suite::poisson2d(18).triangular_split().unwrap();
+        let n = split.n();
+        let b: Vec<f64> = (0..n).map(|i| ((i * 11) % 7) as f64 - 3.0).collect();
+        let fwd = lower_levels(&split.lower);
+        let bwd = upper_levels(&split.upper);
+        let pool = WorkerPool::new(4);
+        let mut want = vec![0.5; n];
+        symgs(&split, &b, &mut want, 3);
+        let mut got = vec![0.5; n];
+        symgs_levels(&split, &fwd, &bwd, &pool, &b, &mut got, 3);
+        assert_eq!(got, want);
+    }
+}

@@ -80,6 +80,60 @@
 //! one `Box<dyn SparseStorage<T>>` and dispatches products without
 //! matching on the kernel kind.
 //!
+//! ## Solver stack (triangular solves & preconditioners)
+//!
+//! The Krylov drivers are preconditioned through one object-safe
+//! trait, with the preconditioner's triangular kernels running on the
+//! **same blocked storage and worker pool** as the SpMV they
+//! accelerate:
+//!
+//! ```text
+//!   Csr ──► triangular_split() ──► TriangularSplit { L, D, U }
+//!             │                        │
+//!             │          ┌─────────────┼──────────────┐
+//!             │          ▼             ▼              ▼
+//!             │     kernels::sptrsv  kernels::symgs  ILU(0) factor
+//!             │     (CSR ref, masked (fwd/bwd/sym    (A's own
+//!             │      β-block walk,    GS sweeps)      pattern)
+//!             │      level-scheduled)
+//!             │          └─────────────┬──────────────┘
+//!             ▼                        ▼
+//!   parallel::lower_levels /   Preconditioner<T>: z = M⁻¹·r
+//!   upper_levels ──► levels    (IdentityPrecond | Jacobi | SymGs
+//!   run per-level on the        | Ilu0, chosen via PrecondKind)
+//!   engine's WorkerPool                │
+//!                                      ▼
+//!          cg_solve / pcg_with(engine, &M) / bicgstab
+//!                                      │ persisted
+//!                                      ▼
+//!   SolvePlan { solver, precond, levels, SpmvPlan } ──► JSON
+//!          solve_from_plan(): no inspection, no level re-analysis
+//! ```
+//!
+//! - [`matrix::TriangularSplit`] partitions a square CSR matrix into
+//!   strict-lower / diagonal / strict-upper once; SpTRSV, Gauss–Seidel
+//!   and the ILU(0) factorization all run over the split.
+//! - [`kernels::sptrsv`] solves `(D+L) x = b` / `(D+U) x = b` three
+//!   ways — CSR reference, masked **β-block** substitution reusing the
+//!   paper's interleaved header stream, and level-scheduled on the
+//!   pool — all three **bit-identical** (each row accumulates in
+//!   ascending column order in every execution).
+//! - [`parallel::lower_levels`] / [`parallel::upper_levels`] build the
+//!   dependency level sets; [`parallel::LevelSchedule`] decides
+//!   sequential vs parallel (`parallel_worthwhile`) and its
+//!   [`parallel::LevelSummary`] verdict is **persisted** in the
+//!   [`coordinator::SolvePlan`], so a repeat solve skips the analysis.
+//! - [`coordinator::Preconditioner`] implementations: `none`,
+//!   `jacobi` (typed [`coordinator::PrecondError::ZeroDiagonal`]
+//!   instead of the old silent identity substitution — only the
+//!   deprecated [`coordinator::pcg_jacobi`] shim keeps the lenient
+//!   behavior), `symgs(n)`, `ilu0`. [`coordinator::pcg_with`] runs
+//!   PCG with any of them; [`coordinator::CgReport::breakdown`]
+//!   distinguishes numerical breakdowns from max-iteration exits.
+//! - CLI: `spc5 solve --matrix poisson2d-large --precond symgs
+//!   --solver pcg --save-plan solve.json`, then `--plan solve.json`
+//!   to replay the executor half.
+//!
 //! ## Runtime architecture
 //!
 //! Every parallel path runs on **one persistent
@@ -430,7 +484,9 @@
 //!   [`SpmvEngine::builder`]: stats → predict → convert → dispatch,
 //!   serving **every** [`KernelKind`] including the CSR/CSR5
 //!   baselines, owning one pool for all its parallel paths), the
-//!   Krylov solvers (each iteration reuses the engine's pool), and the
+//!   Krylov solvers with their plan-aware preconditioners (each
+//!   iteration reuses the engine's pool; `SolvePlan` persists the
+//!   whole solve configuration), and the
 //!   serving tier: micro-batching `SpmvService<T>`, bounded admission
 //!   queues, the sharded, supervised `ShardedService<T>` front-end
 //!   and the multi-tenant `TenantRegistry<T>`.
@@ -459,13 +515,16 @@ pub mod util;
 pub const VEC_SIZE: usize = 8;
 
 pub use coordinator::{
-    HealthReport, MatrixFingerprint, PlanCache, QueuePolicy, RecvError,
-    RestartBudget, ShardConfig, ShardHealth, ShardedService, SpmvEngine,
-    SpmvEngineBuilder, SpmvPlan, SpmvService, TenantConfig, TenantRegistry,
+    solve_from_plan, CgReport, HealthReport, Ilu0, Jacobi, MatrixFingerprint,
+    PlanCache, PrecondError, PrecondKind, Preconditioner, QueuePolicy,
+    RecvError, RestartBudget, ShardConfig, ShardHealth, ShardedService,
+    SolvePlan, SolverKind, SpmvEngine, SpmvEngineBuilder, SpmvPlan,
+    SpmvService, SymGs, TenantConfig, TenantRegistry,
 };
 pub use formats::{BlockMatrix, BlockSize, SparseStorage};
 pub use kernels::{default_tune, KernelKind, TuneParams, VARIANT_TABLE};
-pub use matrix::{Coo, Csr};
+pub use matrix::{Coo, Csr, TriangularSplit};
+pub use parallel::{LevelSchedule, LevelSummary};
 pub use scalar::Scalar;
 pub use tuner::TuneProfile;
 pub use util::{AtomicFile, DegradeEvent, StateError};

@@ -16,6 +16,42 @@ pub struct Csr<T: Scalar = f64> {
     pub values: Vec<T>,
 }
 
+/// The strict-lower / diagonal / strict-upper decomposition of a square
+/// matrix (`A = L + D + U`), produced by [`Csr::triangular_split`].
+/// The triangular-solve kernels ([`crate::kernels::sptrsv`]), the
+/// Gauss–Seidel sweeps ([`crate::kernels::symgs`]) and the ILU(0)
+/// factorization all operate on this split.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TriangularSplit<T: Scalar = f64> {
+    /// Strict lower triangle (entries with `col < row`), CSR.
+    pub lower: Csr<T>,
+    /// Diagonal entries; `T::ZERO` where the diagonal is structurally
+    /// missing (callers that divide must check — see
+    /// [`TriangularSplit::missing_diagonals`]).
+    pub diag: Vec<T>,
+    /// Strict upper triangle (entries with `col > row`), CSR.
+    pub upper: Csr<T>,
+}
+
+impl<T: Scalar> TriangularSplit<T> {
+    /// Matrix dimension (the split is square by construction).
+    pub fn n(&self) -> usize {
+        self.diag.len()
+    }
+
+    /// Rows whose diagonal entry is structurally missing or stored as
+    /// exactly zero — the rows a triangular solve would divide by zero
+    /// on.
+    pub fn missing_diagonals(&self) -> Vec<usize> {
+        self.diag
+            .iter()
+            .enumerate()
+            .filter(|(_, &d)| d == T::ZERO)
+            .map(|(r, _)| r)
+            .collect()
+    }
+}
+
 impl<T: Scalar> Csr<T> {
     /// Builds from raw arrays after validating the CSR invariants:
     /// monotone rowptr, in-bounds strictly-ascending columns per row.
@@ -154,6 +190,64 @@ impl<T: Scalar> Csr<T> {
             colidx: self.colidx[a..b].to_vec(),
             values: self.values[a..b].to_vec(),
         }
+    }
+
+    /// Splits a square matrix into its strict-lower / diagonal /
+    /// strict-upper parts (`A = L + D + U`) in one pass. Columns stay
+    /// strictly ascending within each part, so both triangles are valid
+    /// CSR by construction. Rejects non-square matrices.
+    pub fn triangular_split(&self) -> Result<TriangularSplit<T>> {
+        if self.rows != self.cols {
+            return Err(MatrixError::Invalid(format!(
+                "triangular split needs a square matrix, got {}x{}",
+                self.rows, self.cols
+            )));
+        }
+        let n = self.rows;
+        let mut lo_rowptr = Vec::with_capacity(n + 1);
+        let mut lo_colidx = Vec::new();
+        let mut lo_values = Vec::new();
+        let mut up_rowptr = Vec::with_capacity(n + 1);
+        let mut up_colidx = Vec::new();
+        let mut up_values = Vec::new();
+        let mut diag = vec![T::ZERO; n];
+        lo_rowptr.push(0);
+        up_rowptr.push(0);
+        for r in 0..n {
+            for k in self.row_range(r) {
+                let c = self.colidx[k] as usize;
+                match c.cmp(&r) {
+                    std::cmp::Ordering::Less => {
+                        lo_colidx.push(c as u32);
+                        lo_values.push(self.values[k]);
+                    }
+                    std::cmp::Ordering::Equal => diag[r] = self.values[k],
+                    std::cmp::Ordering::Greater => {
+                        up_colidx.push(c as u32);
+                        up_values.push(self.values[k]);
+                    }
+                }
+            }
+            lo_rowptr.push(lo_colidx.len() as u32);
+            up_rowptr.push(up_colidx.len() as u32);
+        }
+        Ok(TriangularSplit {
+            lower: Csr {
+                rows: n,
+                cols: n,
+                rowptr: lo_rowptr,
+                colidx: lo_colidx,
+                values: lo_values,
+            },
+            diag,
+            upper: Csr {
+                rows: n,
+                cols: n,
+                rowptr: up_rowptr,
+                colidx: up_colidx,
+                values: up_values,
+            },
+        })
     }
 
     /// Transposes the matrix (CSR → CSR of the transpose). Used by
@@ -295,6 +389,45 @@ mod tests {
         for i in 0..3 {
             assert!((y_full[2 + i] - y_slice[i]).abs() < 1e-12);
         }
+    }
+
+    #[test]
+    fn triangular_split_partitions_every_entry() {
+        let m = paper_fig1();
+        let s = m.triangular_split().unwrap();
+        // Every nonzero lands in exactly one part.
+        let diag_nnz = s.diag.iter().filter(|&&d| d != 0.0).count();
+        assert_eq!(s.lower.nnz() + diag_nnz + s.upper.nnz(), m.nnz());
+        // L + D + U reassembles A exactly.
+        let d = m.to_dense();
+        let (dl, du) = (s.lower.to_dense(), s.upper.to_dense());
+        for r in 0..8 {
+            for c in 0..8 {
+                let mut v = dl.get(r, c) + du.get(r, c);
+                if r == c {
+                    v += s.diag[r];
+                }
+                assert_eq!(v, d.get(r, c), "({r},{c})");
+            }
+        }
+        // Strictness: no diagonal entries in either triangle.
+        for r in 0..8 {
+            for k in s.lower.row_range(r) {
+                assert!((s.lower.colidx[k] as usize) < r);
+            }
+            for k in s.upper.row_range(r) {
+                assert!((s.upper.colidx[k] as usize) > r);
+            }
+        }
+        // Fig. 1 rows 4, 6 and the empty row 5 have no diagonal entry.
+        assert_eq!(s.missing_diagonals(), vec![4, 5, 6]);
+    }
+
+    #[test]
+    fn triangular_split_rejects_rectangular() {
+        let m = Csr::<f64>::from_raw(1, 2, vec![0, 1], vec![1], vec![2.0])
+            .unwrap();
+        assert!(m.triangular_split().is_err());
     }
 
     #[test]

@@ -11,7 +11,7 @@ pub mod reorder;
 pub mod suite;
 
 pub use coo::Coo;
-pub use csr::Csr;
+pub use csr::{Csr, TriangularSplit};
 pub use dense::Dense;
 pub use reorder::ReorderKind;
 

@@ -1,0 +1,365 @@
+//! Level scheduling for sparse triangular structure.
+//!
+//! A triangular solve looks inherently sequential — row `r` needs the
+//! solution of every row its off-diagonal entries reference — but the
+//! dependency DAG is usually shallow and wide: rows with no mutual
+//! dependency can solve concurrently. [`lower_levels`] /
+//! [`upper_levels`] compute the classic *level sets* (row `r`'s level
+//! is one past the deepest level it depends on), and [`run_levels`]
+//! executes them level-by-level on the existing
+//! [`WorkerPool`](crate::parallel::WorkerPool): levels run in sequence,
+//! the rows of one level split across the workers.
+//!
+//! Execution preserves bit-identity with the sequential kernels: each
+//! row's value is computed by the same per-row closure reading only
+//! rows from strictly earlier levels (plus read-only inputs), so the
+//! floating-point accumulation per row is unchanged — only the order
+//! *across* independent rows differs, and no row reads another row of
+//! its own level.
+//!
+//! Whether per-level parallelism is worth the epoch handoffs is a
+//! property of the schedule, not the matrix class:
+//! [`LevelSchedule::parallel_worthwhile`] applies a width heuristic,
+//! and the decision is recorded in a [`LevelSummary`] so a
+//! [`crate::coordinator::SolvePlan`] can replay it on a repeat solve
+//! without re-running the analysis.
+
+use crate::matrix::Csr;
+use crate::parallel::WorkerPool;
+use crate::scalar::Scalar;
+use crate::util::ceil_div;
+
+/// Dependency level sets of a triangular matrix: rows grouped by level,
+/// ascending row order within each level.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct LevelSchedule {
+    /// `level_ptr[l]..level_ptr[l+1]` indexes [`LevelSchedule::rows`];
+    /// length `n_levels + 1`.
+    pub level_ptr: Vec<u32>,
+    /// Row indices grouped by level (a permutation of `0..n`).
+    pub rows: Vec<u32>,
+}
+
+impl LevelSchedule {
+    /// Number of levels (sequential phases).
+    pub fn n_levels(&self) -> usize {
+        self.level_ptr.len() - 1
+    }
+
+    /// The rows of level `l`, ascending.
+    pub fn level(&self, l: usize) -> &[u32] {
+        &self.rows[self.level_ptr[l] as usize..self.level_ptr[l + 1] as usize]
+    }
+
+    /// Widest level (peak available parallelism).
+    pub fn max_width(&self) -> usize {
+        (0..self.n_levels()).map(|l| self.level(l).len()).max().unwrap_or(0)
+    }
+
+    /// Mean rows per level.
+    pub fn avg_width(&self) -> f64 {
+        if self.n_levels() == 0 {
+            0.0
+        } else {
+            self.rows.len() as f64 / self.n_levels() as f64
+        }
+    }
+
+    /// Whether level-parallel execution is expected to beat the
+    /// sequential solve at `threads` workers: each level must carry
+    /// enough rows on average to amortize one pool epoch handoff.
+    /// Deliberately conservative — a wrong "no" costs a little
+    /// parallelism, a wrong "yes" pays `n_levels` epoch handoffs for
+    /// nothing.
+    pub fn parallel_worthwhile(&self, threads: usize) -> bool {
+        threads > 1
+            && self.n_levels() > 1
+            && self.avg_width() >= (4 * threads) as f64
+    }
+
+    /// Condenses the analysis into the serializable form a
+    /// [`crate::coordinator::SolvePlan`] records.
+    pub fn summary(&self, parallel: bool) -> LevelSummary {
+        LevelSummary {
+            n_levels: self.n_levels(),
+            max_width: self.max_width(),
+            parallel,
+        }
+    }
+}
+
+/// What a repeat solve needs to know about a level analysis without
+/// redoing it: the schedule shape and the sequential-vs-parallel
+/// decision taken. Serialized inside
+/// [`crate::coordinator::SolvePlan`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LevelSummary {
+    pub n_levels: usize,
+    pub max_width: usize,
+    /// Whether level-parallel execution was chosen.
+    pub parallel: bool,
+}
+
+/// Builds the level sets of a **strict lower** triangular matrix:
+/// `level[r] = 1 + max(level[c])` over row `r`'s columns (all `< r`),
+/// `0` when the row has none — the forward-substitution dependency
+/// order.
+pub fn lower_levels<T: Scalar>(lower: &Csr<T>) -> LevelSchedule {
+    let n = lower.rows;
+    let mut level = vec![0u32; n];
+    let mut n_levels = 0u32;
+    for r in 0..n {
+        let mut lvl = 0u32;
+        for k in lower.row_range(r) {
+            debug_assert!((lower.colidx[k] as usize) < r, "not strict lower");
+            lvl = lvl.max(level[lower.colidx[k] as usize] + 1);
+        }
+        level[r] = lvl;
+        n_levels = n_levels.max(lvl + 1);
+    }
+    bucket_by_level(&level, n_levels)
+}
+
+/// Builds the level sets of a **strict upper** triangular matrix:
+/// dependencies are columns `> r`, computed rows-descending — the
+/// backward-substitution dependency order.
+pub fn upper_levels<T: Scalar>(upper: &Csr<T>) -> LevelSchedule {
+    let n = upper.rows;
+    let mut level = vec![0u32; n];
+    let mut n_levels = if n == 0 { 0 } else { 1 };
+    for r in (0..n).rev() {
+        let mut lvl = 0u32;
+        for k in upper.row_range(r) {
+            debug_assert!((upper.colidx[k] as usize) > r, "not strict upper");
+            lvl = lvl.max(level[upper.colidx[k] as usize] + 1);
+        }
+        level[r] = lvl;
+        n_levels = n_levels.max(lvl + 1);
+    }
+    bucket_by_level(&level, n_levels)
+}
+
+/// Counting-sorts rows into their levels, ascending row order within
+/// each level.
+fn bucket_by_level(level: &[u32], n_levels: u32) -> LevelSchedule {
+    let nl = n_levels as usize;
+    let mut level_ptr = vec![0u32; nl + 1];
+    for &l in level {
+        level_ptr[l as usize + 1] += 1;
+    }
+    for l in 0..nl {
+        let prev = level_ptr[l];
+        level_ptr[l + 1] += prev;
+    }
+    let mut rows = vec![0u32; level.len()];
+    let mut next = level_ptr.clone();
+    for (r, &l) in level.iter().enumerate() {
+        rows[next[l as usize] as usize] = r as u32;
+        next[l as usize] += 1;
+    }
+    LevelSchedule { level_ptr, rows }
+}
+
+/// Read-only view of the solution vector handed to per-row closures in
+/// [`run_levels`]. Reads must target rows of strictly earlier levels
+/// (which the level construction guarantees for triangular
+/// dependencies) or data no level writes.
+pub struct RowReader<'a, T> {
+    ptr: *const T,
+    len: usize,
+    _marker: std::marker::PhantomData<&'a T>,
+}
+
+impl<T: Copy> RowReader<'_, T> {
+    /// The current value of `x[i]`.
+    #[inline]
+    pub fn get(&self, i: usize) -> T {
+        debug_assert!(i < self.len);
+        // SAFETY: `i` is in bounds and, per the level-set invariant,
+        // no concurrently-running row writes index `i` (writers only
+        // touch their own level's rows; dependencies live in earlier,
+        // already-completed levels).
+        unsafe { *self.ptr.add(i) }
+    }
+}
+
+/// Shared mutable handle for the level executor (one disjoint row per
+/// in-flight closure call).
+struct SharedX<T>(*mut T, usize);
+// SAFETY: every write targets a distinct row of the current level and
+// reads target completed levels; the caller blocks until each epoch
+// finishes, holding the original borrow alive.
+unsafe impl<T: Send> Send for SharedX<T> {}
+unsafe impl<T: Send> Sync for SharedX<T> {}
+
+/// Executes one level-scheduled sweep: for each level in order, runs
+/// `row_value(row, reader)` for every row of the level across the
+/// pool's workers and stores the result into `x[row]`. The closure
+/// must read `x` only through the [`RowReader`] and only at rows of
+/// strictly earlier levels.
+pub fn run_levels<T: Scalar>(
+    pool: &WorkerPool,
+    sched: &LevelSchedule,
+    x: &mut [T],
+    row_value: impl Fn(usize, &RowReader<'_, T>) -> T + Sync,
+) {
+    let shared = SharedX(x.as_mut_ptr(), x.len());
+    let nt = pool.n_threads();
+    for l in 0..sched.n_levels() {
+        let rows = sched.level(l);
+        if rows.is_empty() {
+            continue;
+        }
+        // Shallow levels run on the calling thread: an epoch handoff
+        // per handful of rows costs more than it buys.
+        if rows.len() < 2 * nt {
+            let reader = RowReader {
+                ptr: shared.0 as *const T,
+                len: shared.1,
+                _marker: std::marker::PhantomData,
+            };
+            for &r in rows {
+                let v = row_value(r as usize, &reader);
+                // SAFETY: single-threaded here; `r` is in bounds.
+                unsafe { *shared.0.add(r as usize) = v };
+            }
+            continue;
+        }
+        pool.run(|ctx| {
+            let chunk = ceil_div(rows.len(), nt);
+            let a = (ctx.tid * chunk).min(rows.len());
+            let b = (a + chunk).min(rows.len());
+            let reader = RowReader {
+                ptr: shared.0 as *const T,
+                len: shared.1,
+                _marker: std::marker::PhantomData,
+            };
+            for &r in &rows[a..b] {
+                let v = row_value(r as usize, &reader);
+                // SAFETY: rows within a level are distinct, so each
+                // write is exclusive; reads go through the reader to
+                // earlier levels only.
+                unsafe { *shared.0.add(r as usize) = v };
+            }
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::suite;
+
+    #[test]
+    fn poisson_levels_are_antidiagonals() {
+        // 2-D Poisson's strict lower part links (i,j) to (i-1,j) and
+        // (i,j-1): the level of grid point (i,j) is i+j, so an n×n
+        // grid has 2n-1 levels with max width n.
+        let n = 10;
+        let split = suite::poisson2d(n).triangular_split().unwrap();
+        let sched = lower_levels(&split.lower);
+        assert_eq!(sched.n_levels(), 2 * n - 1);
+        assert_eq!(sched.max_width(), n);
+        assert_eq!(sched.rows.len(), n * n);
+        // Upper part mirrors it.
+        let up = upper_levels(&split.upper);
+        assert_eq!(up.n_levels(), 2 * n - 1);
+        assert_eq!(up.max_width(), n);
+    }
+
+    #[test]
+    fn diagonal_matrix_is_one_level() {
+        // No off-diagonal entries → every row at level 0.
+        let split = suite::poisson2d(6).triangular_split().unwrap();
+        let empty = crate::matrix::Csr::<f64> {
+            rows: split.lower.rows,
+            cols: split.lower.cols,
+            rowptr: vec![0; split.lower.rows + 1],
+            colidx: vec![],
+            values: vec![],
+        };
+        let sched = lower_levels(&empty);
+        assert_eq!(sched.n_levels(), 1);
+        assert_eq!(sched.max_width(), empty.rows);
+        assert!(!sched.parallel_worthwhile(4), "single level, no deps");
+    }
+
+    #[test]
+    fn levels_respect_dependencies() {
+        for sm in suite::test_subset() {
+            if sm.csr.rows != sm.csr.cols {
+                continue;
+            }
+            let split = sm.csr.triangular_split().unwrap();
+            let sched = lower_levels(&split.lower);
+            let mut level_of = vec![u32::MAX; split.n()];
+            for l in 0..sched.n_levels() {
+                for &r in sched.level(l) {
+                    assert_eq!(
+                        level_of[r as usize],
+                        u32::MAX,
+                        "row {r} in two levels ({})",
+                        sm.name
+                    );
+                    level_of[r as usize] = l as u32;
+                }
+            }
+            assert!(
+                level_of.iter().all(|&l| l != u32::MAX),
+                "{}: uncovered rows",
+                sm.name
+            );
+            for r in 0..split.n() {
+                for k in split.lower.row_range(r) {
+                    let c = split.lower.colidx[k] as usize;
+                    assert!(
+                        level_of[c] < level_of[r],
+                        "{}: dep {c}→{r} not in earlier level",
+                        sm.name
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn run_levels_matches_sequential_recurrence() {
+        // x[r] = b[r] + sum of x over the strict-lower pattern — the
+        // executor must reproduce the sequential recurrence exactly.
+        let split = suite::poisson2d(12).triangular_split().unwrap();
+        let n = split.n();
+        let b: Vec<f64> = (0..n).map(|i| ((i * 13) % 7) as f64 - 3.0).collect();
+        let mut want = vec![0.0f64; n];
+        for r in 0..n {
+            let mut s = b[r];
+            for k in split.lower.row_range(r) {
+                s += want[split.lower.colidx[k] as usize];
+            }
+            want[r] = s;
+        }
+        let sched = lower_levels(&split.lower);
+        let pool = WorkerPool::new(4);
+        let mut got = vec![0.0f64; n];
+        run_levels(&pool, &sched, &mut got, |r, rd| {
+            let mut s = b[r];
+            for k in split.lower.row_range(r) {
+                s += rd.get(split.lower.colidx[k] as usize);
+            }
+            s
+        });
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn summary_records_shape_and_decision() {
+        let split = suite::poisson2d(16).triangular_split().unwrap();
+        let sched = lower_levels(&split.lower);
+        let s = sched.summary(sched.parallel_worthwhile(4));
+        assert_eq!(s.n_levels, 31);
+        assert_eq!(s.max_width, 16);
+        assert!(!s.parallel, "avg width 256/31 < 16");
+        let wide = suite::poisson2d(64).triangular_split().unwrap();
+        let wide_sched = lower_levels(&wide.lower);
+        assert!(wide_sched.parallel_worthwhile(4), "avg width ≈ 32");
+    }
+}

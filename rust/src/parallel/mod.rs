@@ -14,16 +14,24 @@
 //!   disjoint), an optional NUMA-style mode where every thread copies
 //!   its sub-matrix arrays **on its own thread** (first-touch
 //!   placement), and a multi-RHS [`exec::ParallelSpmv::spmm`] path.
+//! - [`levels`] — level scheduling for the triangular-solve kernels:
+//!   dependency level sets built from strict-triangular structure,
+//!   executed level-by-level on the same pool (with a sequential
+//!   fallback when the levels are too shallow to pay for the epochs).
 //!
 //! No per-call thread spawning anywhere: `ParallelSpmv::new` spawns the
 //! workers once (or attaches to an existing pool via `with_pool`), and
 //! every subsequent product is a wake → compute → syncless-merge epoch.
 
 pub mod exec;
+pub mod levels;
 pub mod partition;
 pub mod pool;
 
 pub use exec::{ParallelSpmv, ParallelStrategy};
+pub use levels::{
+    lower_levels, run_levels, upper_levels, LevelSchedule, LevelSummary,
+};
 pub use partition::{
     balanced_prefix_split, balanced_row_ranges, partition_intervals,
     ThreadSpan,

@@ -1,0 +1,448 @@
+//! Triangular-solve subsystem integration tests: SpTRSV and SymGS
+//! dense-oracle differentials (f64/f32 × sequential/level-scheduled ×
+//! matrix/unit diagonal), level-schedule coverage properties, the
+//! preconditioner iteration-count ordering on an ill-conditioned
+//! system, and SolvePlan persistence → `solve_from_plan` replay — all
+//! through the public API only.
+
+use spc5::coordinator::{
+    cg_solve, pcg_with, solve_from_plan, PrecondKind, Preconditioner,
+    SolvePlan, SolverKind, SOLVE_PLAN_VERSION,
+};
+use spc5::formats::csr_to_block;
+use spc5::kernels::sptrsv::{
+    sptrsv_lower_block, sptrsv_lower_levels, sptrsv_lower_ref,
+    sptrsv_upper_block, sptrsv_upper_levels, sptrsv_upper_ref,
+};
+use spc5::kernels::symgs::{symgs, symgs_levels};
+use spc5::kernels::KernelKind;
+use spc5::matrix::{suite, Coo, Csr};
+use spc5::parallel::{lower_levels, upper_levels, WorkerPool};
+use spc5::util::Rng;
+use spc5::{BlockSize, Scalar, SpmvEngine};
+
+/// Rebuilds `a` with a strictly dominant, strictly positive diagonal
+/// (`d_r = |a_rr| + Σ|row| + 1` in effect), so every triangular solve
+/// and Gauss–Seidel sweep on it is well conditioned.
+fn diag_dominant(a: &Csr) -> Csr {
+    let n = a.rows;
+    let mut rowptr = vec![0u32];
+    let mut colidx: Vec<u32> = Vec::new();
+    let mut values: Vec<f64> = Vec::new();
+    for r in 0..n {
+        let mut boost = 1.0;
+        for k in a.row_range(r) {
+            boost += a.values[k].abs();
+        }
+        let mut wrote = false;
+        for k in a.row_range(r) {
+            let c = a.colidx[k] as usize;
+            if !wrote && c >= r {
+                let orig = if c == r { a.values[k] } else { 0.0 };
+                colidx.push(r as u32);
+                values.push(boost + orig);
+                wrote = true;
+                if c == r {
+                    continue;
+                }
+            }
+            colidx.push(a.colidx[k]);
+            values.push(a.values[k]);
+        }
+        if !wrote {
+            colidx.push(r as u32);
+            values.push(boost);
+        }
+        rowptr.push(colidx.len() as u32);
+    }
+    Csr::from_raw(n, n, rowptr, colidx, values).unwrap()
+}
+
+/// Structurally diverse square fixtures, every diagonal present and
+/// dominant.
+fn fixtures() -> Vec<(&'static str, Csr)> {
+    vec![
+        ("poisson2d", suite::poisson2d(18)),
+        ("stencil3d", suite::stencil3d(6, 6, 6)),
+        ("banded", diag_dominant(&suite::banded(240, 9, 0.35, 7))),
+        ("fem", diag_dominant(&suite::fem_blocked(60, 3, 6, 11))),
+        ("circuit", diag_dominant(&suite::circuit(220, 4, 6, 5))),
+    ]
+}
+
+/// Scales a strict triangle so every row sums to at most `rho` in
+/// magnitude: a unit-diagonal substitution on the result is
+/// contractive, so the dense oracle stays meaningful at f32.
+fn damp<T: Scalar>(tri: &Csr<T>, rho: f64) -> Csr<T> {
+    let mut t = tri.clone();
+    let mut maxrow = 0.0f64;
+    for r in 0..t.rows {
+        let s: f64 =
+            t.row_range(r).map(|k| t.values[k].to_f64().abs()).sum();
+        maxrow = maxrow.max(s);
+    }
+    if maxrow > 0.0 {
+        for v in &mut t.values {
+            *v = T::from_f64(v.to_f64() * rho / maxrow);
+        }
+    }
+    t
+}
+
+/// Dense forward substitution accumulating in **descending** column
+/// order — an independent summation order from every kernel under
+/// test, so agreement is a genuine differential, not an echo.
+fn dense_lower_oracle<T: Scalar>(lower: &Csr<T>, diag: &[T], b: &[T]) -> Vec<T> {
+    let n = lower.rows;
+    let mut dense = vec![T::ZERO; n * n];
+    for r in 0..n {
+        for k in lower.row_range(r) {
+            dense[r * n + lower.colidx[k] as usize] = lower.values[k];
+        }
+    }
+    let mut x = vec![T::ZERO; n];
+    for r in 0..n {
+        let mut s = T::ZERO;
+        for c in (0..r).rev() {
+            s += dense[r * n + c] * x[c];
+        }
+        x[r] = (b[r] - s) / diag[r];
+    }
+    x
+}
+
+/// Dense backward substitution, also in reversed (here: ascending)
+/// accumulation order relative to the kernels.
+fn dense_upper_oracle<T: Scalar>(upper: &Csr<T>, diag: &[T], b: &[T]) -> Vec<T> {
+    let n = upper.rows;
+    let mut dense = vec![T::ZERO; n * n];
+    for r in 0..n {
+        for k in upper.row_range(r) {
+            dense[r * n + upper.colidx[k] as usize] = upper.values[k];
+        }
+    }
+    let mut x = vec![T::ZERO; n];
+    for r in (0..n).rev() {
+        let mut s = T::ZERO;
+        for c in (r + 1..n).rev() {
+            s += dense[r * n + c] * x[c];
+        }
+        x[r] = (b[r] - s) / diag[r];
+    }
+    x
+}
+
+fn assert_rel_close<T: Scalar>(got: &[T], want: &[T], rel: f64, label: &str) {
+    assert_eq!(got.len(), want.len(), "{label}: length");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        let (g, w) = (g.to_f64(), w.to_f64());
+        assert!(
+            (g - w).abs() <= rel * w.abs().max(1.0),
+            "{label} row {i}: {g} vs {w}"
+        );
+    }
+}
+
+/// Oracle + bit-identity sweep for one lower triangle: CSR reference
+/// against the dense oracle, then the block and level-scheduled paths
+/// bit-identical to the reference.
+fn check_lower_paths<T: Scalar>(
+    lower: &Csr<T>,
+    diag: &[T],
+    b: &[T],
+    pool: &WorkerPool,
+    sizes: &[BlockSize],
+    rel: f64,
+    label: &str,
+) {
+    let n = lower.rows;
+    let oracle = dense_lower_oracle(lower, diag, b);
+    let mut xref = vec![T::ZERO; n];
+    sptrsv_lower_ref(lower, diag, b, &mut xref);
+    assert_rel_close(&xref, &oracle, rel, &format!("{label}/lower-ref"));
+    for &bs in sizes {
+        let bm = csr_to_block(lower, bs).unwrap();
+        let mut x = vec![T::ZERO; n];
+        sptrsv_lower_block(&bm, diag, b, &mut x);
+        assert_eq!(x, xref, "{label}/lower-block {bs}");
+    }
+    let sched = lower_levels(lower);
+    let mut x = vec![T::ZERO; n];
+    sptrsv_lower_levels(lower, diag, &sched, pool, b, &mut x);
+    assert_eq!(x, xref, "{label}/lower-levels");
+}
+
+fn check_upper_paths<T: Scalar>(
+    upper: &Csr<T>,
+    diag: &[T],
+    b: &[T],
+    pool: &WorkerPool,
+    sizes: &[BlockSize],
+    rel: f64,
+    label: &str,
+) {
+    let n = upper.rows;
+    let oracle = dense_upper_oracle(upper, diag, b);
+    let mut xref = vec![T::ZERO; n];
+    sptrsv_upper_ref(upper, diag, b, &mut xref);
+    assert_rel_close(&xref, &oracle, rel, &format!("{label}/upper-ref"));
+    for &bs in sizes {
+        let bm = csr_to_block(upper, bs).unwrap();
+        let mut x = vec![T::ZERO; n];
+        sptrsv_upper_block(&bm, diag, b, &mut x);
+        assert_eq!(x, xref, "{label}/upper-block {bs}");
+    }
+    let sched = upper_levels(upper);
+    let mut x = vec![T::ZERO; n];
+    sptrsv_upper_levels(upper, diag, &sched, pool, b, &mut x);
+    assert_eq!(x, xref, "{label}/upper-levels");
+}
+
+#[test]
+fn sptrsv_matches_dense_oracle_f64() {
+    let pool = WorkerPool::new(4);
+    let sizes = [
+        BlockSize { r: 1, c: 8 },
+        BlockSize { r: 2, c: 4 },
+        BlockSize { r: 4, c: 4 },
+    ];
+    for (name, csr) in fixtures() {
+        let split = csr.triangular_split().unwrap();
+        assert!(split.missing_diagonals().is_empty(), "{name}: diag gap");
+        let n = split.n();
+        let b: Vec<f64> =
+            (0..n).map(|i| ((i * 7) % 11) as f64 * 0.5 - 2.5).collect();
+        // Non-unit diagonal: the split's own triangles + diagonal.
+        let lbl = format!("{name}/split");
+        check_lower_paths(
+            &split.lower, &split.diag, &b, &pool, &sizes, 1e-10, &lbl,
+        );
+        check_upper_paths(
+            &split.upper, &split.diag, &b, &pool, &sizes, 1e-10, &lbl,
+        );
+        // Unit diagonal (the ILU-L shape), on contractive triangles so
+        // the substitution stays well conditioned.
+        let ones = vec![1.0; n];
+        let lo = damp(&split.lower, 0.5);
+        let up = damp(&split.upper, 0.5);
+        let lbl = format!("{name}/unit-diag");
+        check_lower_paths(&lo, &ones, &b, &pool, &sizes, 1e-10, &lbl);
+        check_upper_paths(&up, &ones, &b, &pool, &sizes, 1e-10, &lbl);
+    }
+}
+
+#[test]
+fn sptrsv_matches_dense_oracle_f32() {
+    let pool = WorkerPool::new(4);
+    let sizes = [BlockSize { r: 2, c: 8 }, BlockSize { r: 4, c: 16 }];
+    for (name, csr64) in fixtures() {
+        let csr = csr64.to_precision::<f32>();
+        let split = csr.triangular_split().unwrap();
+        let n = split.n();
+        let b: Vec<f32> =
+            (0..n).map(|i| ((i * 5) % 9) as f32 * 0.5 - 2.0).collect();
+        let lbl = format!("{name}/f32/split");
+        check_lower_paths(
+            &split.lower, &split.diag, &b, &pool, &sizes, 2e-3, &lbl,
+        );
+        check_upper_paths(
+            &split.upper, &split.diag, &b, &pool, &sizes, 2e-3, &lbl,
+        );
+        let ones = vec![1.0f32; n];
+        let lo = damp(&split.lower, 0.5);
+        let up = damp(&split.upper, 0.5);
+        let lbl = format!("{name}/f32/unit-diag");
+        check_lower_paths(&lo, &ones, &b, &pool, &sizes, 2e-3, &lbl);
+        check_upper_paths(&up, &ones, &b, &pool, &sizes, 2e-3, &lbl);
+    }
+}
+
+#[test]
+fn symgs_level_sweeps_bit_identical_and_reduce_residual() {
+    let pool = WorkerPool::new(4);
+    for (name, csr) in fixtures() {
+        let split = csr.triangular_split().unwrap();
+        let n = split.n();
+        let b: Vec<f64> = (0..n).map(|i| ((i * 13) % 17) as f64 - 8.0).collect();
+        let mut seq = vec![0.0; n];
+        symgs(&split, &b, &mut seq, 3);
+        let fwd = lower_levels(&split.lower);
+        let bwd = upper_levels(&split.upper);
+        let mut par = vec![0.0; n];
+        symgs_levels(&split, &fwd, &bwd, &pool, &b, &mut par, 3);
+        assert_eq!(par, seq, "{name}: level sweeps diverge from sequential");
+
+        // The sweeps actually smooth: residual after 3 symmetric
+        // sweeps is below the initial one (x0 = 0 → r0 = b).
+        let mut ax = vec![0.0; n];
+        csr.spmv_ref(&seq, &mut ax);
+        let r2: f64 =
+            ax.iter().zip(&b).map(|(a, bb)| (a - bb) * (a - bb)).sum();
+        let b2: f64 = b.iter().map(|v| v * v).sum();
+        assert!(r2 < b2, "{name}: residual did not shrink ({r2} vs {b2})");
+
+        // f32 mirror of the bit-identity claim.
+        let split32 = csr.to_precision::<f32>().triangular_split().unwrap();
+        let b32: Vec<f32> = b.iter().map(|&v| v as f32).collect();
+        let mut seq32 = vec![0.0f32; n];
+        symgs(&split32, &b32, &mut seq32, 2);
+        let fwd32 = lower_levels(&split32.lower);
+        let bwd32 = upper_levels(&split32.upper);
+        let mut par32 = vec![0.0f32; n];
+        symgs_levels(&split32, &fwd32, &bwd32, &pool, &b32, &mut par32, 2);
+        assert_eq!(par32, seq32, "{name}: f32 level sweeps diverge");
+    }
+}
+
+#[test]
+fn level_schedules_cover_rows_and_respect_dependencies() {
+    for (name, csr) in fixtures() {
+        let split = csr.triangular_split().unwrap();
+        let n = split.n();
+        let cases = [
+            ("lower", &split.lower, lower_levels(&split.lower)),
+            ("upper", &split.upper, upper_levels(&split.upper)),
+        ];
+        for (which, tri, sched) in &cases {
+            assert_eq!(sched.rows.len(), n, "{name}/{which}: row count");
+            assert_eq!(
+                *sched.level_ptr.last().unwrap() as usize,
+                n,
+                "{name}/{which}: level_ptr end"
+            );
+            let mut level_of = vec![usize::MAX; n];
+            for l in 0..sched.level_ptr.len() - 1 {
+                for k in
+                    sched.level_ptr[l] as usize..sched.level_ptr[l + 1] as usize
+                {
+                    let r = sched.rows[k] as usize;
+                    assert_eq!(
+                        level_of[r],
+                        usize::MAX,
+                        "{name}/{which}: row {r} scheduled twice"
+                    );
+                    level_of[r] = l;
+                }
+            }
+            assert!(
+                level_of.iter().all(|&l| l != usize::MAX),
+                "{name}/{which}: unscheduled rows"
+            );
+            // Every dependency (a strict-triangle entry) must be
+            // finalized in a strictly earlier level.
+            for r in 0..n {
+                for k in tri.row_range(r) {
+                    let c = tri.colidx[k] as usize;
+                    assert!(
+                        level_of[c] < level_of[r],
+                        "{name}/{which}: row {r} depends on {c} at the \
+                         same or later level"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Symmetrically scaled 2D Poisson: condition number inflated by
+/// ~1e6, the fixture the preconditioner ordering is specified on.
+fn scaled_poisson(n: usize) -> Csr {
+    let a = suite::poisson2d(n);
+    let dim = a.rows;
+    let s: Vec<f64> =
+        (0..dim).map(|i| 10f64.powi(((i % 7) / 2) as i32)).collect();
+    let mut coo = Coo::new(dim, dim);
+    for r in 0..dim {
+        for k in a.row_range(r) {
+            let c = a.colidx[k] as usize;
+            coo.push(r, c, s[r] * a.values[k] * s[c]);
+        }
+    }
+    coo.to_csr().unwrap()
+}
+
+#[test]
+fn preconditioners_cut_iterations_on_illconditioned_poisson() {
+    let csr = scaled_poisson(12);
+    let dim = csr.rows;
+    let engine = SpmvEngine::builder(csr)
+        .kernel(KernelKind::Beta(2, 4))
+        .build()
+        .unwrap();
+    let mut rng = Rng::new(0x5EED);
+    let b: Vec<f64> = (0..dim).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+    let max_iters = 10_000;
+    let tol2 = 1e-16;
+
+    let mut x = vec![0.0; dim];
+    let cg = cg_solve(&engine, &b, &mut x, max_iters, tol2);
+    assert!(cg.converged && !cg.breakdown, "plain cg");
+
+    let run = |kind: PrecondKind| {
+        let m = kind.build(engine.csr(), engine.pool()).unwrap();
+        let mut x = vec![0.0; dim];
+        let rep = pcg_with(&engine, m.as_ref(), &b, &mut x, max_iters, tol2);
+        assert!(rep.converged && !rep.breakdown, "{kind}");
+        rep.iterations
+    };
+    let jacobi_it = run(PrecondKind::Jacobi);
+    let symgs_it = run(PrecondKind::SymGs { sweeps: 1 });
+    let ilu_it = run(PrecondKind::Ilu0);
+    assert!(
+        jacobi_it < cg.iterations,
+        "jacobi {jacobi_it} vs cg {}",
+        cg.iterations
+    );
+    assert!(symgs_it < jacobi_it, "symgs {symgs_it} vs jacobi {jacobi_it}");
+    assert!(ilu_it <= symgs_it, "ilu0 {ilu_it} vs symgs {symgs_it}");
+}
+
+#[test]
+fn solve_plan_persists_and_replays() {
+    let csr = suite::poisson2d(16);
+    let dim = csr.rows;
+    let engine = SpmvEngine::builder(csr.clone())
+        .kernel(KernelKind::Beta(1, 8))
+        .build()
+        .unwrap();
+    let kind = PrecondKind::SymGs { sweeps: 2 };
+    let m = kind.build(engine.csr(), engine.pool()).unwrap();
+    let plan = SolvePlan {
+        version: SOLVE_PLAN_VERSION,
+        solver: SolverKind::Pcg,
+        precond: kind,
+        levels: m.level_summary(),
+        spmv: engine.plan().clone(),
+    };
+
+    let dir = std::env::temp_dir()
+        .join(format!("spc5_solve_it_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("solve-plan.json");
+    plan.save(&path).unwrap();
+    let loaded = SolvePlan::load(&path).unwrap();
+    assert_eq!(loaded, plan);
+
+    // Replay: same engine shape, and the rebuilt preconditioner
+    // applies bitwise identically to the original.
+    let (engine2, m2) = solve_from_plan(csr.clone(), &loaded).unwrap();
+    assert_eq!(engine2.kernel(), engine.kernel());
+    let r: Vec<f64> = (0..dim).map(|i| ((i * 5) % 9) as f64 - 4.0).collect();
+    let mut z1 = vec![0.0; dim];
+    m.apply(&r, &mut z1);
+    let mut z2 = vec![0.0; dim];
+    m2.apply(&r, &mut z2);
+    assert_eq!(z1, z2, "replayed preconditioner diverges");
+
+    // The replayed pair solves.
+    let b = vec![1.0; dim];
+    let mut x = vec![0.0; dim];
+    let rep = pcg_with(&engine2, m2.as_ref(), &b, &mut x, 500, 1e-20);
+    assert!(rep.converged && !rep.breakdown);
+
+    // A different matrix is refused by fingerprint.
+    let err = solve_from_plan(suite::poisson2d(17), &loaded);
+    assert!(err.is_err(), "fingerprint mismatch must be refused");
+
+    std::fs::remove_dir_all(&dir).ok();
+}
